@@ -1,0 +1,126 @@
+"""AOT: lower the L2 graphs to HLO **text** + a manifest for the Rust side.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits ``<kind>_<variant>.hlo.txt`` per entry in ``VARIANTS`` plus
+``manifest.json`` describing every artifact's operand shapes, which
+``rust/src/runtime/artifacts.rs`` deserialises.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# variant -> (B, D, K, L). B is the tile size the Rust hot path pads to.
+VARIANTS = {
+    # tiny shapes for the Rust test-suite / quickstart
+    "demo": dict(b=8, d=16, k=4, l=6),
+    # gisette-like: small-n / large-d (scaled: see DESIGN.md substitutions)
+    "gisette": dict(b=256, d=512, k=50, l=20),
+    # osm-like: raw 2-d coords, no projection (paper §4.1.5: K not applied)
+    "osm": dict(b=1024, d=2, k=2, l=20),
+    # spamurl-like: sparse projection happens natively in Rust (D=200k is
+    # not dense-matmul work); binning of the K=100 sketches runs here.
+    "spamurl": dict(b=256, d=100, k=100, l=20),
+}
+
+# which artifact kinds each variant needs
+KINDS = {
+    "demo": ("project", "chain_bins", "project_bins"),
+    "gisette": ("project", "chain_bins", "project_bins"),
+    "osm": ("chain_bins",),
+    "spamurl": ("chain_bins",),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs(variant: dict, kind: str):
+    b, d, k, l = variant["b"], variant["d"], variant["k"], variant["l"]
+    f32, i32 = jnp.float32, jnp.int32
+    x = jax.ShapeDtypeStruct((b, d), f32)
+    r = jax.ShapeDtypeStruct((d, k), f32)
+    s = jax.ShapeDtypeStruct((b, k), f32)
+    vk = jax.ShapeDtypeStruct((k,), f32)
+    fs = jax.ShapeDtypeStruct((l,), i32)
+    if kind == "project":
+        return model.sketch_project, (x, r)
+    if kind == "chain_bins":
+        return model.sketch_chain_bins, (s, vk, vk, fs)
+    if kind == "project_bins":
+        return model.sketch_project_bins, (x, r, vk, vk, fs)
+    raise ValueError(kind)
+
+
+def lower_one(name: str, variant: dict, kind: str, out_dir: str) -> dict:
+    fn, args = specs(variant, kind)
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{kind}_{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return {
+        "name": name,
+        "kind": kind,
+        "file": fname,
+        "b": variant["b"],
+        "d": variant["d"],
+        "k": variant["k"],
+        "l": variant["l"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file target (ignored path, kept for Makefile compat)")
+    ap.add_argument(
+        "--variants", default=None, help="comma-separated subset of variants"
+    )
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    wanted = args.variants.split(",") if args.variants else list(VARIANTS)
+    entries = []
+    for name in wanted:
+        variant = VARIANTS[name]
+        for kind in KINDS[name]:
+            entry = lower_one(name, variant, kind, out_dir)
+            entries.append(entry)
+            print(f"wrote {entry['file']}  (b={entry['b']} d={entry['d']} k={entry['k']} l={entry['l']})")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": entries}, f, indent=2)
+    # Makefile stamp: the legacy --out path, if requested
+    if args.out is not None:
+        with open(args.out, "w") as f:
+            f.write("\n".join(e["file"] for e in entries) + "\n")
+    print(f"manifest: {len(entries)} artifacts in {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

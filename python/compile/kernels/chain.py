@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: L-level incremental half-space binning (paper Eq. 4).
+
+Given sketches ``s[B,K]``, initial bin widths ``delta[K]``, random shifts
+``shift[K]`` and the chain's sampled feature per level ``fs[L]``, emit the
+full K-dimensional integer bin id of every point at every level:
+``bins[B,L,K]``.
+
+The recurrence (cmuxstream ``Chain.fit``):
+
+    first time f_l is sampled: prebin[:, f_l] = (s[:, f_l] + shift[f_l]) / delta[f_l]
+    re-sampled:                prebin[:, f_l] = 2 * prebin[:, f_l] - shift[f_l] / delta[f_l]
+    bins[:, l, :] = floor(prebin)
+
+Vectorisation strategy: the data-dependent column update is turned into two
+disjoint [L, K] masks precomputed from ``fs`` with pure jnp *inside the same
+jit* (they are O(LK) scalar work, not worth a kernel):
+
+    m_first[l] = onehot(fs[l]) if level l is the first occurrence of fs[l]
+    m_rep[l]   = onehot(fs[l]) otherwise
+
+so each level is ``prebin += m_first*(a - prebin) + m_rep*(b - prebin)``
+with ``a = (s+shift)/delta`` (hoisted out of the loop — it never changes)
+and ``b = 2*prebin - shift/delta``. The [TB, K] prebin state lives in VMEM
+across all L levels; L is static (≤ 32) so the loop is unrolled at trace
+time and Mosaic would software-pipeline the stores.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def level_masks(fs: jnp.ndarray, k: int):
+    """[L,K] first-occurrence / repeat one-hot masks from ``fs`` [L] int32."""
+    l = fs.shape[0]
+    onehot = (fs[:, None] == jnp.arange(k, dtype=fs.dtype)[None, :]).astype(
+        jnp.float32
+    )
+    eq = fs[:, None] == fs[None, :]  # [L, L]
+    # first occurrence of fs[l] is at argmax(eq[l]) (first True)
+    first = (jnp.argmax(eq, axis=1) == jnp.arange(l)).astype(jnp.float32)
+    m_first = onehot * first[:, None]
+    m_rep = onehot * (1.0 - first[:, None])
+    return m_first, m_rep
+
+
+def _bins_kernel(s_ref, delta_ref, shift_ref, mf_ref, mr_ref, o_ref, *, levels):
+    s = s_ref[...]
+    delta = delta_ref[...]          # [1, K]
+    shift = shift_ref[...]          # [1, K]
+    a = (s + shift) / delta         # invariant across levels
+    c = shift / delta               # invariant across levels
+    prebin = jnp.zeros_like(s)
+    for lvl in range(levels):       # static unroll; L ≤ 32
+        mf = mf_ref[lvl, :][None, :]
+        mr = mr_ref[lvl, :][None, :]
+        b = 2.0 * prebin - c
+        prebin = prebin + mf * (a - prebin) + mr * (b - prebin)
+        o_ref[:, lvl, :] = jnp.floor(prebin).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def chain_bins(
+    s: jnp.ndarray,
+    delta: jnp.ndarray,
+    shift: jnp.ndarray,
+    fs: jnp.ndarray,
+    *,
+    tb: int = 256,
+):
+    """Pallas L-level binning: returns ``bins[B, L, K]`` int32."""
+    b, k = s.shape
+    l = fs.shape[0]
+    while b % tb != 0:
+        tb -= 1
+    m_first, m_rep = level_masks(fs, k)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        functools.partial(_bins_kernel, levels=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, l, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, k), jnp.int32),
+        interpret=True,
+    )(
+        s.astype(jnp.float32),
+        delta.astype(jnp.float32)[None, :],
+        shift.astype(jnp.float32)[None, :],
+        m_first,
+        m_rep,
+    )

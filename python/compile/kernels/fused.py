@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: fused projection + binning in a single VMEM pass.
+
+For moderate ``D`` (Gisette-scale, a few thousand) the sketch tile
+``s = x_tile @ R`` never needs to round-trip to HBM between Step 1 and
+Step 2 of Sparx: this kernel computes the [TB, K] sketch tile on the MXU
+and immediately runs the L-level binning recurrence on it while it is
+still VMEM-resident, writing only the int32 bin ids back out.
+
+This is the §Perf "fusion" candidate measured against the two-kernel
+pipeline in EXPERIMENTS.md; the unfused pair remains the default because
+it also serves the no-projection (OSM) and sparse-native (SpamURL) paths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .chain import level_masks
+
+
+def _fused_kernel(x_ref, r_ref, delta_ref, shift_ref, mf_ref, mr_ref, o_ref, *, levels):
+    s = jnp.dot(x_ref[...], r_ref[...], preferred_element_type=jnp.float32)
+    delta = delta_ref[...]
+    shift = shift_ref[...]
+    a = (s + shift) / delta
+    c = shift / delta
+    prebin = jnp.zeros_like(s)
+    for lvl in range(levels):
+        mf = mf_ref[lvl, :][None, :]
+        mr = mr_ref[lvl, :][None, :]
+        b = 2.0 * prebin - c
+        prebin = prebin + mf * (a - prebin) + mr * (b - prebin)
+        o_ref[:, lvl, :] = jnp.floor(prebin).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tb",))
+def project_bins(
+    x: jnp.ndarray,
+    r: jnp.ndarray,
+    delta: jnp.ndarray,
+    shift: jnp.ndarray,
+    fs: jnp.ndarray,
+    *,
+    tb: int = 128,
+):
+    """Fused ``bins = floor-binning(x @ r)`` → [B, L, K] int32.
+
+    Keeps the full contraction dimension in one block (suitable for
+    D ≤ a few thousand; larger D should use the two-kernel pipeline).
+    """
+    b, d = x.shape
+    _, k = r.shape
+    l = fs.shape[0]
+    while b % tb != 0:
+        tb -= 1
+    m_first, m_rep = level_masks(fs, k)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, levels=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, l, k), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, k), jnp.int32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        r.astype(jnp.float32),
+        delta.astype(jnp.float32)[None, :],
+        shift.astype(jnp.float32)[None, :],
+        m_first,
+        m_rep,
+    )

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: tiled sketch-projection matmul  s = x @ R.
+
+The projection (paper Eq. 1/2) is the dense numeric half of Sparx Step 1.
+The hash-generated sign matrix ``R`` ([D, K], entries in {-1, 0, +1}) is
+materialised outside the graph (Rust / numpy) and fed as an operand, so the
+same compiled artifact serves any seed set.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the output tile
+``[TB, K]`` stays resident in VMEM while the contraction dimension ``D`` is
+streamed through in ``TD`` blocks — the BlockSpec index maps express the
+HBM→VMEM schedule that a CUDA implementation would express with
+threadblocks + shared memory. ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so the kernel lowers to plain
+HLO and the real-TPU story is argued analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, r_ref, o_ref):
+    """One (TB, K) output tile; grid dim 1 walks the D blocks."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], r_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_tile(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ≤ target (keeps grids exact)."""
+    t = min(n, target)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "td"))
+def project(x: jnp.ndarray, r: jnp.ndarray, *, tb: int = 128, td: int = 512):
+    """Pallas-tiled ``x[B,D] @ r[D,K] -> s[B,K]`` (float32).
+
+    ``K`` is small (≤ 128 in every paper config) so a full-K tile is kept
+    in VMEM; ``B`` and ``D`` are tiled to ``tb``/``td`` (rounded down to
+    divisors, so callers may pass any shape).
+    """
+    b, d = x.shape
+    d2, k = r.shape
+    assert d == d2, f"contraction mismatch {d} vs {d2}"
+    tb = _pick_tile(b, tb)
+    td = _pick_tile(d, td)
+    grid = (b // tb, d // td)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, td), lambda i, j: (i, j)),
+            pl.BlockSpec((td, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), r.astype(jnp.float32))

@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for the Sparx numeric hot path.
+
+These reference implementations define the semantics the Pallas kernels
+(and the Rust native backend) must match bit-for-bit (up to float
+associativity):
+
+  * ``project_ref``      — sketch projection  s = x @ R           (Eq. 1/2)
+  * ``chain_bins_ref``   — L-level incremental half-space binning (Eq. 4)
+  * ``project_bins_ref`` — the fused composition.
+
+Binning semantics (xStream ``Chain.fit``): per level ``l`` with sampled
+feature ``f_l``::
+
+    if first occurrence of f_l:  prebin[:, f_l] = (s[:, f_l] + shift[f_l]) / delta[f_l]
+    else:                        prebin[:, f_l] = 2 * prebin[:, f_l] - shift[f_l] / delta[f_l]
+    bins[l] = floor(prebin)                       # full K-dim bin id
+
+``shift[k] ~ U(0, delta[k])`` is the per-projected-feature random shift;
+the recurrence keeps the shifted origin consistent while halving the bin
+width of the re-sampled feature, exactly as in the cmuxstream reference
+code and Eq. (4) of the paper.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def project_ref(x: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """Dense sketch projection: ``s[b,k] = sum_d x[b,d] * r[d,k]``.
+
+    ``r`` holds the hashed sparse-sign entries (−1/0/+1 scaled); hashing
+    itself happens outside the compiled graph (Rust / numpy), because it
+    is string work, not MXU work.
+    """
+    return jnp.dot(x.astype(jnp.float32), r.astype(jnp.float32))
+
+
+def chain_bins_ref(
+    s: jnp.ndarray,       # [B, K] float32 sketches
+    delta: jnp.ndarray,   # [K]    float32 initial bin widths (> 0)
+    shift: jnp.ndarray,   # [K]    float32 random shifts in (0, delta)
+    fs: jnp.ndarray,      # [L]    int32   sampled feature per level
+) -> jnp.ndarray:
+    """Reference L-level incremental binning. Returns [B, L, K] int32."""
+    b, k = s.shape
+    l = fs.shape[0]
+    prebin = jnp.zeros((b, k), dtype=jnp.float32)
+    seen = jnp.zeros((k,), dtype=jnp.bool_)
+    outs = []
+    for lvl in range(l):
+        f = fs[lvl]
+        first = ~seen[f]
+        new_col = jnp.where(
+            first,
+            (s[:, f] + shift[f]) / delta[f],
+            2.0 * prebin[:, f] - shift[f] / delta[f],
+        )
+        prebin = prebin.at[:, f].set(new_col)
+        seen = seen.at[f].set(True)
+        outs.append(jnp.floor(prebin).astype(jnp.int32))
+    return jnp.stack(outs, axis=1)
+
+
+def project_bins_ref(x, r, delta, shift, fs):
+    """Fused projection + binning reference."""
+    return chain_bins_ref(project_ref(x, r), delta, shift, fs)
+
+
+def score_support_ref(
+    s: jnp.ndarray,
+    delta: jnp.ndarray,
+    shift: jnp.ndarray,
+    fs: jnp.ndarray,
+) -> jnp.ndarray:
+    """Scoring uses the identical bin ids as fitting (Sec. 3.3)."""
+    return chain_bins_ref(s, delta, shift, fs)

@@ -1,0 +1,34 @@
+"""L2: the Sparx per-worker compute graph, composed from the L1 kernels.
+
+Each function here is the body of one AOT artifact. The Rust coordinator
+(L3) streams fixed-shape tiles of its partition through these compiled
+modules on the PJRT CPU client; everything hash-table-shaped (CMS insert /
+query, score aggregation across chains) stays in Rust.
+
+Shapes are static per artifact (XLA requirement); ``aot.py`` emits one
+variant per (B, D, K, L) the experiments need plus a tiny ``demo`` variant
+that the Rust test-suite uses.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.chain import chain_bins
+from .kernels.fused import project_bins
+from .kernels.projection import project
+
+
+def sketch_project(x: jnp.ndarray, r: jnp.ndarray):
+    """Step 1 (Eq. 2): dense sketch projection. Returns a 1-tuple."""
+    return (project(x, r),)
+
+
+def sketch_chain_bins(s, delta, shift, fs):
+    """Step 2 (Eq. 4): per-level K-dim bin ids. Returns a 1-tuple."""
+    return (chain_bins(s, delta, shift, fs),)
+
+
+def sketch_project_bins(x, r, delta, shift, fs):
+    """Fused Step 1+2 — the §Perf candidate. Returns a 1-tuple."""
+    return (project_bins(x, r, delta, shift, fs),)

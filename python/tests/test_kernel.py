@@ -1,0 +1,206 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Covers fixed shapes for every AOT variant plus hypothesis-driven shape /
+value sweeps. All kernels run under ``interpret=True`` (CPU), so the
+comparison is exact up to float-op ordering; we use tight tolerances and
+additionally require *identical* integer bin ids away from bin boundaries
+(floor is discontinuous, so boundary-adjacent disagreements at 1e-7 scale
+are filtered, not tolerated silently).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.chain import chain_bins, level_masks
+from compile.kernels.fused import project_bins
+from compile.kernels.projection import project
+from compile.kernels.ref import chain_bins_ref, project_bins_ref, project_ref
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def sign_matrix(d, k, rng, density=1 / 3):
+    """Sparse ±1 sign matrix like the Eq.(2) hash family produces."""
+    m = rng.choice([-1.0, 0.0, 1.0], size=(d, k), p=[density / 2, 1 - density, density / 2])
+    return m.astype(np.float32)
+
+
+def chain_params(k, l, rng):
+    delta = (rng.uniform(0.5, 3.0, size=k)).astype(np.float32)
+    shift = (rng.uniform(0.0, 1.0, size=k) * delta).astype(np.float32)
+    fs = rng.integers(0, k, size=l).astype(np.int32)
+    return delta, shift, fs
+
+
+def assert_bins_match(got, want, s, delta):
+    """Bin ids must match exactly except within eps of a bin boundary."""
+    got = np.asarray(got)
+    want = np.asarray(want)
+    if np.array_equal(got, want):
+        return
+    # Tolerate off-by-one only where the prebin is ~on a boundary.
+    diff = got != want
+    frac_dist = np.abs(got - want)
+    assert frac_dist[diff].max() <= 1, "bin ids differ by more than one"
+    assert diff.mean() < 1e-3, f"too many boundary mismatches: {diff.mean():.2%}"
+
+
+# ---------------------------------------------------------------- projection
+
+VARIANT_SHAPES = [
+    (8, 16, 4, 6),      # demo
+    (256, 512, 50, 20), # gisette
+    (1024, 2, 2, 20),   # osm (projection unused but shape-checked via K=D)
+    (256, 100, 100, 20),# spamurl sketch-space
+]
+
+
+@pytest.mark.parametrize("b,d,k,l", VARIANT_SHAPES)
+def test_project_matches_ref_variant_shapes(b, d, k, l):
+    x = RNG.standard_normal((b, d)).astype(np.float32)
+    r = sign_matrix(d, k, RNG)
+    got = project(jnp.asarray(x), jnp.asarray(r))
+    want = project_ref(jnp.asarray(x), jnp.asarray(r))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_project_non_divisible_tiles():
+    x = RNG.standard_normal((37, 53)).astype(np.float32)
+    r = sign_matrix(53, 7, RNG)
+    got = project(jnp.asarray(x), jnp.asarray(r), tb=16, td=32)
+    want = project_ref(jnp.asarray(x), jnp.asarray(r))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_project_zero_matrix():
+    x = RNG.standard_normal((16, 8)).astype(np.float32)
+    r = np.zeros((8, 4), dtype=np.float32)
+    got = np.asarray(project(jnp.asarray(x), jnp.asarray(r)))
+    assert (got == 0).all()
+
+
+def test_project_identity_passthrough():
+    x = RNG.standard_normal((8, 8)).astype(np.float32)
+    r = np.eye(8, dtype=np.float32)
+    got = np.asarray(project(jnp.asarray(x), jnp.asarray(r)))
+    np.testing.assert_allclose(got, x, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    d=st.integers(1, 96),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_project_hypothesis_shapes(b, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, d)).astype(np.float32)
+    r = sign_matrix(d, k, rng)
+    got = project(jnp.asarray(x), jnp.asarray(r))
+    want = project_ref(jnp.asarray(x), jnp.asarray(r))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------- binning
+
+def test_level_masks_partition():
+    """m_first + m_rep must equal the one-hot of fs, disjointly."""
+    rng = np.random.default_rng(7)
+    k, l = 13, 29
+    fs = jnp.asarray(rng.integers(0, k, size=l).astype(np.int32))
+    mf, mr = level_masks(fs, k)
+    mf, mr = np.asarray(mf), np.asarray(mr)
+    onehot = np.eye(k, dtype=np.float32)[np.asarray(fs)]
+    np.testing.assert_array_equal(mf + mr, onehot)
+    assert (mf * mr == 0).all()
+    # each feature's first occurrence is marked exactly once
+    for f in np.unique(np.asarray(fs)):
+        lv = np.where(np.asarray(fs) == f)[0]
+        assert mf[lv[0], f] == 1.0
+        assert mf[lv[1:], f].sum() == 0.0
+
+
+@pytest.mark.parametrize("b,d,k,l", VARIANT_SHAPES)
+def test_chain_bins_matches_ref_variant_shapes(b, d, k, l):
+    s = (RNG.standard_normal((b, k)) * 4).astype(np.float32)
+    delta, shift, fs = chain_params(k, l, RNG)
+    got = chain_bins(jnp.asarray(s), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs))
+    want = chain_bins_ref(jnp.asarray(s), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs))
+    assert_bins_match(got, want, s, delta)
+
+
+def test_chain_bins_repeated_feature_halves_bins():
+    """Re-sampling a feature doubles prebin ⇒ bin widths halve each level."""
+    s = np.array([[0.9], [1.9], [3.9]], dtype=np.float32)
+    delta = np.array([2.0], dtype=np.float32)
+    shift = np.array([0.0], dtype=np.float32)
+    fs = np.array([0, 0, 0], dtype=np.int32)
+    got = np.asarray(
+        chain_bins(jnp.asarray(s), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs))
+    )[:, :, 0]
+    # level widths: 2.0, 1.0, 0.5
+    np.testing.assert_array_equal(got[:, 0], [0, 0, 1])
+    np.testing.assert_array_equal(got[:, 1], [0, 1, 3])
+    np.testing.assert_array_equal(got[:, 2], [1, 3, 7])
+
+
+def test_chain_bins_untouched_features_stay_zero():
+    k, l = 6, 4
+    s = (RNG.standard_normal((10, k)) * 3).astype(np.float32)
+    delta, shift, _ = chain_params(k, l, RNG)
+    fs = np.zeros(l, dtype=np.int32)  # only feature 0 ever sampled
+    got = np.asarray(
+        chain_bins(jnp.asarray(s), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs))
+    )
+    assert (got[:, :, 1:] == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    k=st.integers(1, 24),
+    l=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chain_bins_hypothesis(b, k, l, seed):
+    rng = np.random.default_rng(seed)
+    s = (rng.standard_normal((b, k)) * 5).astype(np.float32)
+    delta, shift, fs = chain_params(k, l, rng)
+    got = chain_bins(jnp.asarray(s), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs))
+    want = chain_bins_ref(jnp.asarray(s), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs))
+    assert_bins_match(got, want, s, delta)
+
+
+# --------------------------------------------------------------------- fused
+
+@pytest.mark.parametrize("b,d,k,l", [(8, 16, 4, 6), (64, 128, 25, 10)])
+def test_fused_matches_ref(b, d, k, l):
+    x = RNG.standard_normal((b, d)).astype(np.float32)
+    r = sign_matrix(d, k, RNG)
+    delta, shift, fs = chain_params(k, l, RNG)
+    got = project_bins(
+        jnp.asarray(x), jnp.asarray(r), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs)
+    )
+    want = project_bins_ref(
+        jnp.asarray(x), jnp.asarray(r), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs)
+    )
+    assert_bins_match(got, want, None, delta)
+
+
+def test_fused_equals_two_stage_pipeline():
+    b, d, k, l = 32, 64, 10, 8
+    x = RNG.standard_normal((b, d)).astype(np.float32)
+    r = sign_matrix(d, k, RNG)
+    delta, shift, fs = chain_params(k, l, RNG)
+    s = project(jnp.asarray(x), jnp.asarray(r))
+    two = chain_bins(s, jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs))
+    one = project_bins(
+        jnp.asarray(x), jnp.asarray(r), jnp.asarray(delta), jnp.asarray(shift), jnp.asarray(fs)
+    )
+    assert_bins_match(one, two, None, delta)

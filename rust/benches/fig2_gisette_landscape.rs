@@ -1,0 +1,22 @@
+//! Bench: regenerates the paper's fig2 (see DESIGN.md experiment index).
+//! Runs the experiment at bench scale (override with SPARX_SCALE) and
+//! prints the result table; harness = false (criterion unavailable in the
+//! offline dependency set — see Cargo.toml).
+
+fn main() {
+    let scale = sparx::experiments::scale::from_env(0.12);
+    let t0 = std::time::Instant::now();
+    for result in sparx::experiments::run("fig2", scale) {
+        println!("{}", result.to_markdown());
+        let failed: Vec<&str> = result
+            .checks
+            .iter()
+            .filter(|(_, ok)| !ok)
+            .map(|(what, _)| what.as_str())
+            .collect();
+        if !failed.is_empty() {
+            println!("WARNING: shape checks failed: {failed:?}");
+        }
+    }
+    println!("bench fig2_gisette_landscape: total {:.1}s at scale {scale}", t0.elapsed().as_secs_f64());
+}

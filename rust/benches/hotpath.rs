@@ -1,0 +1,161 @@
+//! Micro-benchmarks of the hot paths (harness = false; criterion is not
+//! in the offline dependency set, so this uses a small in-file timer with
+//! warmup + repetitions + ns/op reporting).
+//!
+//! Covers the §Perf targets of EXPERIMENTS.md:
+//!   * native chain binning (L3 request path, per-point cost)
+//!   * CMS insert / query
+//!   * hash projection (dense memoised R and sparse on-the-fly)
+//!   * PJRT tile execution (chain_bins + fused project_bins artifacts)
+//!   * streaming δ-update + rescore
+
+use sparx::data::Row;
+use sparx::hash::SignHasher;
+use sparx::sparx::{ChainParams, CountMinSketch, NativeBinner, Projector};
+use sparx::sparx::chain::Binner;
+use sparx::util::Rng;
+
+fn bench<F: FnMut() -> u64>(name: &str, items_per_iter: u64, mut f: F) {
+    // warmup
+    let mut sink = 0u64;
+    for _ in 0..3 {
+        sink = sink.wrapping_add(f());
+    }
+    let mut iters = 0u64;
+    let t0 = std::time::Instant::now();
+    while t0.elapsed().as_secs_f64() < 1.0 {
+        sink = sink.wrapping_add(f());
+        iters += 1;
+    }
+    let total = t0.elapsed().as_secs_f64();
+    let per_item = total / (iters as f64 * items_per_iter as f64);
+    println!(
+        "{name:<44} {:>10.1} ns/item  ({:>8.2} Mitems/s)  [sink {sink}]",
+        per_item * 1e9,
+        1e-6 / per_item
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    println!("== sparx hot-path microbenches ==");
+
+    // --- chain binning (K=50, L=20, tile of 256) — the scoring hot loop
+    let k = 50;
+    let l = 20;
+    let n = 256;
+    let delta: Vec<f32> = (0..k).map(|_| rng.range_f64(0.5, 2.0) as f32).collect();
+    let chain = ChainParams::sample(&delta, l, &mut rng);
+    let s: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+    bench("native tile_bins K=50 L=20 (per point)", n as u64, || {
+        NativeBinner.tile_bins(&chain, &s, n)[0] as u64
+    });
+
+    // --- CMS insert + query
+    let mut cms = CountMinSketch::new(10, 100);
+    let bins: Vec<Vec<i32>> = (0..64).map(|i| vec![i as i32; k]).collect();
+    bench("CMS insert r=10 w=100 (per insert)", bins.len() as u64, || {
+        for b in &bins {
+            cms.insert(b);
+        }
+        cms.total()
+    });
+    bench("CMS query r=10 w=100 (per query)", bins.len() as u64, || {
+        bins.iter().map(|b| cms.query(b) as u64).sum()
+    });
+
+    // --- dense projection with memoised R (Gisette shape)
+    let d = 512;
+    let names: Vec<String> = (0..d).map(|j| format!("f{j}")).collect();
+    let proj = Projector::new(k, 1.0 / 3.0).with_dense_schema(&names);
+    let rows: Vec<Row> = (0..32)
+        .map(|i| Row::dense(i, (0..d).map(|_| rng.normal() as f32).collect()))
+        .collect();
+    bench("dense project d=512 K=50 (per row)", rows.len() as u64, || {
+        rows.iter().map(|r| proj.project(r, None).s[0].abs() as u64).sum()
+    });
+
+    // --- sparse projection, memoised hash rows (SpamURL shape)
+    let sparse_rows: Vec<Row> = (0..32)
+        .map(|i| {
+            let mut idx: Vec<u32> =
+                (0..120).map(|_| rng.below(100_000) as u32).collect();
+            idx.sort();
+            idx.dedup();
+            let val = vec![1.0f32; idx.len()];
+            Row::sparse(i, idx, val)
+        })
+        .collect();
+    let sproj = Projector::new(100, 1.0 / 3.0);
+    bench("sparse project nnz≈120 K=100 (per row, memo)", sparse_rows.len() as u64, || {
+        let mut memo = std::collections::HashMap::new();
+        sparse_rows.iter().map(|r| sproj.project(r, Some(&mut memo)).s[0].abs() as u64).sum()
+    });
+
+    // --- sign hash itself
+    let h = SignHasher::new(3, 1.0 / 3.0);
+    bench("sign hash h_k(name) (per hash)", 64, || {
+        (0..64).map(|i| h.feature(&format!("f{i}")) as i64 as u64).sum()
+    });
+
+    // --- PJRT artifacts, if built
+    match sparx::runtime::PjrtEngine::start_default() {
+        Ok(engine) => {
+            let gk = 50;
+            let gl = 20;
+            let gd = 512;
+            let gb = 256;
+            let delta: Vec<f32> = (0..gk).map(|_| rng.range_f64(0.5, 2.0) as f32).collect();
+            let gchain = ChainParams::sample(&delta, gl, &mut rng);
+            let gs: Vec<f32> = (0..gb * gk).map(|_| rng.normal() as f32).collect();
+            bench("PJRT chain_bins gisette B=256 (per point)", gb as u64, || {
+                engine.chain_bins("gisette", &gs, gb, &gchain).unwrap()[0] as u64
+            });
+            let gx: Vec<f32> = (0..gb * gd).map(|_| rng.normal() as f32).collect();
+            let gr: Vec<f32> = (0..gd * gk)
+                .map(|_| [(-1.0f32), 0.0, 1.0][rng.below(3) as usize])
+                .collect();
+            let mut xr = gx.clone();
+            xr.extend_from_slice(&gr);
+            bench("PJRT project gisette B=256 d=512 (per point)", gb as u64, || {
+                engine.project("gisette", &xr, gb).unwrap()[0].abs() as u64
+            });
+            bench("PJRT fused project_bins gisette (per point)", gb as u64, || {
+                engine.project_bins("gisette", &xr, gb, &gchain).unwrap()[0] as u64
+            });
+        }
+        Err(e) => println!("(PJRT benches skipped: {e})"),
+    }
+
+    // --- streaming update+rescore
+    {
+        use sparx::cluster::ClusterConfig;
+        use sparx::data::generators::GisetteGen;
+        use sparx::data::UpdateTriple;
+        use sparx::sparx::{SparxModel, SparxParams, StreamScorer};
+        let ctx = ClusterConfig { num_partitions: 4, ..Default::default() }.build();
+        let ld = GisetteGen { n: 1000, d: 64, ..Default::default() }.generate(&ctx).unwrap();
+        let model = SparxModel::fit(
+            &ctx,
+            &ld.dataset,
+            &SparxParams { k: 25, num_chains: 25, depth: 10, ..Default::default() },
+        )
+        .unwrap();
+        let mut scorer = StreamScorer::new(&model, 512).unwrap();
+        let mut i = 0u64;
+        bench("stream δ-update + rescore M=25 L=10 (per upd)", 16, || {
+            let mut acc = 0u64;
+            for _ in 0..16 {
+                i += 1;
+                let s = scorer.update(&UpdateTriple::Num {
+                    id: i % 300,
+                    feature: "f3".into(),
+                    delta: 0.1,
+                });
+                acc = acc.wrapping_add(s.outlierness.abs() as u64);
+            }
+            acc
+        });
+    }
+    println!("done");
+}

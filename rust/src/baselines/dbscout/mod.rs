@@ -1,0 +1,34 @@
+//! DBSCOUT (Corain, Garza & Asudeh, ICDE 2021): density-based scalable
+//! outlier detection via a cellular grid (§4.1.2 baseline 1).
+//!
+//! Definition (inherited from DBSCAN): a point is an **outlier** iff its
+//! eps-neighbourhood holds fewer than `minPts` points. DBSCOUT
+//! parallelises this with a grid of cells of side `eps/√d` so that any two
+//! points in one cell are within eps:
+//!
+//! 1. map/reduce: count points per cell (data-parallel);
+//! 2. cells with ≥ minPts points are *dense* — all their points are
+//!    inliers immediately;
+//! 3. every other ("query") cell must examine its geometric
+//!    neighbourhood: all cells within Chebyshev radius R = ⌈√d⌉, i.e.
+//!    **(2·⌈√d⌉+1)^d cells — exponential in d**. This is the cost that
+//!    makes DBSCOUT unusable beyond d≈10 (Table 2) and it is why all of
+//!    the original paper's experiments stop at 3 dimensions.
+//!
+//! Outputs are **binary** (outlier / inlier) — no ranking (§5) — so only
+//! F1 is comparable.
+//!
+//! ## Scale substitution (DESIGN.md)
+//!
+//! At d ≤ `LITERAL_DIM_MAX` the neighbourhood enumeration runs literally.
+//! Beyond that, a laptop cannot execute what a 512-core cluster needed
+//! hours for, so the *decision* is computed by the equivalent
+//! occupied-cell intersection (same Chebyshev-ball counts ⇒ same output)
+//! while the *cost* of the geometric enumeration is charged to the job
+//! clock and the worker memory meters through a calibrated model
+//! ([`CostModel`]). Table 2's runtime/memory explosion and d=11 timeout
+//! reproduce through that model.
+
+pub mod grid;
+
+pub use grid::{CostModel, Dbscout, DbscoutParams, DbscoutVerdict};

@@ -1,0 +1,20 @@
+//! The paper's comparators, each re-implemented on the same shared-nothing
+//! substrate so that resource accounting is apples-to-apples:
+//!
+//! * [`spif`] — Spark-based Isolation Forest (Tao et al.), with its
+//!   *model-parallel but not data-parallel* topology: every tree's
+//!   subsample is shuffled to a single worker (the design flaw Table 4
+//!   exposes).
+//! * [`dbscout`] — cell-grid distance-based OD (Corain et al.): fast and
+//!   accurate at d ≤ 3, exponentially doomed in d (Table 2), binary
+//!   output only.
+//! * [`xstream`] — the single-machine xStream reference, used as the
+//!   speed-up denominator in Fig. 5.
+
+pub mod dbscout;
+pub mod spif;
+pub mod xstream;
+
+pub use dbscout::{Dbscout, DbscoutParams};
+pub use spif::{Spif, SpifParams};
+pub use xstream::{XStream, XStreamParams};

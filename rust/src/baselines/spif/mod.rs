@@ -1,0 +1,17 @@
+//! SPIF (Tao et al. 2018): Spark-based Isolation Forest with the
+//! public implementation's topology (§4.1.2 baseline 2).
+//!
+//! The crucial property reproduced here is **model-parallelism without
+//! data-parallelism**: during fitting, `<tree-ID, point>` pairs are
+//! generated in a map phase and a `reduceByKey` shuffles *all points of a
+//! tree's subsample to one worker* (the paper's "(!)"), which builds the
+//! tree locally. "Code goes to data" is violated — data goes to code —
+//! so network bytes and single-worker memory scale with `n · rate`,
+//! which is exactly what detonates in Table 4 (MEM ERR → TIMEOUT).
+//!
+//! Scoring *is* data-parallel (forest broadcast, local map), as in SPIF.
+
+pub mod forest;
+pub mod tree;
+
+pub use forest::{Spif, SpifParams};

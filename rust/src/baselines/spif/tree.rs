@@ -1,0 +1,205 @@
+//! Isolation tree (Liu, Ting & Zhou 2008): extremely randomized binary
+//! partitioning. Anomalies isolate in few splits ⇒ short path length.
+
+use crate::util::{Rng, SizeOf};
+
+/// Flat node-array isolation tree over dense f32 rows.
+#[derive(Debug, Clone)]
+pub struct ITree {
+    nodes: Vec<Node>,
+    /// Training subsample size (for the c(n) normalisation).
+    pub sample_size: usize,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    /// (feature, threshold, left child idx, right child idx)
+    Split(u32, f32, u32, u32),
+    /// Leaf holding `size` training points at depth `depth`.
+    Leaf { size: u32 },
+}
+
+impl SizeOf for Node {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Node>()
+    }
+}
+
+impl SizeOf for ITree {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Self>() + self.nodes.len() * std::mem::size_of::<Node>()
+    }
+}
+
+/// Average unsuccessful-search path length in a BST of n nodes — the
+/// standard iForest normaliser c(n).
+pub fn c_factor(n: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let n = n as f64;
+    2.0 * ((n - 1.0).ln() + 0.5772156649) - 2.0 * (n - 1.0) / n
+}
+
+impl ITree {
+    /// Build on a subsample (rows indexed into `data`, each `dim` wide).
+    pub fn fit(data: &[Vec<f32>], max_depth: usize, rng: &mut Rng) -> ITree {
+        let n = data.len();
+        let mut nodes = Vec::new();
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        Self::build(data, &mut idx, 0, n, 0, max_depth, rng, &mut nodes);
+        ITree { nodes, sample_size: n }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        data: &[Vec<f32>],
+        idx: &mut [u32],
+        lo: usize,
+        hi: usize,
+        depth: usize,
+        max_depth: usize,
+        rng: &mut Rng,
+        nodes: &mut Vec<Node>,
+    ) -> u32 {
+        let me = nodes.len() as u32;
+        let count = hi - lo;
+        if count <= 1 || depth >= max_depth {
+            nodes.push(Node::Leaf { size: count as u32 });
+            return me;
+        }
+        let dim = data[idx[lo] as usize].len();
+        // pick a feature with spread (up to a few retries, as in iForest impls)
+        let mut feat = 0usize;
+        let mut fmin = 0f32;
+        let mut fmax = 0f32;
+        let mut found = false;
+        for _ in 0..8 {
+            feat = rng.below(dim as u64) as usize;
+            fmin = f32::INFINITY;
+            fmax = f32::NEG_INFINITY;
+            for &i in &idx[lo..hi] {
+                let v = data[i as usize][feat];
+                fmin = fmin.min(v);
+                fmax = fmax.max(v);
+            }
+            if fmax > fmin {
+                found = true;
+                break;
+            }
+        }
+        if !found {
+            nodes.push(Node::Leaf { size: count as u32 });
+            return me;
+        }
+        let thr = fmin + rng.f32() * (fmax - fmin);
+        // partition in place
+        let mut mid = lo;
+        for i in lo..hi {
+            if data[idx[i] as usize][feat] < thr {
+                idx.swap(i, mid);
+                mid += 1;
+            }
+        }
+        if mid == lo || mid == hi {
+            // degenerate split (can happen when thr == fmax)
+            nodes.push(Node::Leaf { size: count as u32 });
+            return me;
+        }
+        nodes.push(Node::Split(feat as u32, thr, 0, 0)); // children patched below
+        let left = Self::build(data, idx, lo, mid, depth + 1, max_depth, rng, nodes);
+        let right = Self::build(data, idx, mid, hi, depth + 1, max_depth, rng, nodes);
+        if let Node::Split(_, _, l, r) = &mut nodes[me as usize] {
+            *l = left;
+            *r = right;
+        }
+        me
+    }
+
+    /// Path length of a query point, with the leaf-size c(n) adjustment.
+    pub fn path_length(&self, x: &[f32]) -> f64 {
+        let mut node = 0u32;
+        let mut depth = 0usize;
+        loop {
+            match &self.nodes[node as usize] {
+                Node::Split(f, thr, l, r) => {
+                    node = if x[*f as usize] < *thr { *l } else { *r };
+                    depth += 1;
+                }
+                Node::Leaf { size } => {
+                    return depth as f64 + c_factor(*size as usize);
+                }
+            }
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(rng: &mut Rng, n: usize, d: usize, center: f32) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|_| (0..d).map(|_| center + rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn c_factor_monotone() {
+        assert_eq!(c_factor(1), 0.0);
+        assert!(c_factor(10) < c_factor(100));
+        // c(256) ≈ 10.2 (well-known iForest constant)
+        assert!((c_factor(256) - 10.2).abs() < 0.3, "{}", c_factor(256));
+    }
+
+    #[test]
+    fn isolates_far_point_quickly() {
+        let mut rng = Rng::new(1);
+        let mut data = blob(&mut rng, 500, 4, 0.0);
+        data.push(vec![50.0; 4]); // far outlier
+        let mut inlier_depth = 0.0;
+        let mut outlier_depth = 0.0;
+        for seed in 0..20 {
+            let mut r = Rng::new(seed);
+            let t = ITree::fit(&data, 12, &mut r);
+            outlier_depth += t.path_length(&vec![50.0; 4]);
+            inlier_depth += t.path_length(&data[0]);
+        }
+        assert!(
+            outlier_depth < inlier_depth * 0.7,
+            "outlier {outlier_depth} vs inlier {inlier_depth}"
+        );
+    }
+
+    #[test]
+    fn handles_constant_data() {
+        let data = vec![vec![1.0, 1.0]; 50];
+        let mut rng = Rng::new(2);
+        let t = ITree::fit(&data, 8, &mut rng);
+        // no split possible → single leaf
+        assert_eq!(t.num_nodes(), 1);
+        assert!(t.path_length(&[1.0, 1.0]) > 0.0);
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let mut rng = Rng::new(3);
+        let data = blob(&mut rng, 1000, 2, 0.0);
+        let t = ITree::fit(&data, 3, &mut rng);
+        // path length ≤ max_depth + c(leaf size)
+        let p = t.path_length(&data[0]);
+        assert!(p <= 3.0 + c_factor(1000), "{p}");
+    }
+
+    #[test]
+    fn single_point() {
+        let data = vec![vec![0.5]];
+        let mut rng = Rng::new(4);
+        let t = ITree::fit(&data, 8, &mut rng);
+        assert_eq!(t.path_length(&[0.5]), 0.0);
+    }
+}

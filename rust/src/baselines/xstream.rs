@@ -1,0 +1,197 @@
+//! Single-machine xStream (Manzoor, Lamba & Akoglu, KDD 2018) — the
+//! sequential reference Sparx distributes. Used as the denominator of the
+//! Fig. 5 speed-up curve and as a numeric cross-check: on identical
+//! chain parameters, Sparx and xStream must produce identical counts.
+//!
+//! Everything runs on one thread over plain `Vec`s: projection (Eq. 2),
+//! chain fitting with point-wise CMS inserts, scoring (Eq. 5).
+
+use crate::data::Row;
+use crate::sparx::{ChainParams, CountMinSketch, Projector, ScoreMode, SparxModel, TrainedChain};
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct XStreamParams {
+    pub k: usize,
+    pub num_chains: usize,
+    pub depth: usize,
+    pub cms_rows: usize,
+    pub cms_cols: usize,
+    pub density: f64,
+    pub score_mode: ScoreMode,
+    pub seed: u64,
+}
+
+impl Default for XStreamParams {
+    fn default() -> Self {
+        XStreamParams {
+            k: 50,
+            num_chains: 50,
+            depth: 10,
+            cms_rows: 10,
+            cms_cols: 100,
+            density: 1.0 / 3.0,
+            score_mode: ScoreMode::Log2,
+            seed: 0x5AB4,
+        }
+    }
+}
+
+/// A fitted single-machine model.
+pub struct XStream {
+    pub params: XStreamParams,
+    pub projector: Projector,
+    pub deltamax: Vec<f32>,
+    pub chains: Vec<TrainedChain>,
+}
+
+impl XStream {
+    /// Fit sequentially on a local slice of rows.
+    pub fn fit(rows: &[Row], feature_names: &[String], params: &XStreamParams) -> XStream {
+        let projector = if params.k == 0 {
+            Projector::identity(feature_names.len())
+        } else {
+            Projector::new(params.k, params.density).with_dense_schema(feature_names)
+        };
+        let sketches: Vec<Vec<f32>> = rows.iter().map(|r| projector.project(r, None).s).collect();
+        let kdim = if params.k == 0 { feature_names.len() } else { params.k };
+        // deltamax = half range per projected dim
+        let mut lo = vec![f32::INFINITY; kdim];
+        let mut hi = vec![f32::NEG_INFINITY; kdim];
+        for s in &sketches {
+            for j in 0..kdim {
+                lo[j] = lo[j].min(s[j]);
+                hi[j] = hi[j].max(s[j]);
+            }
+        }
+        let deltamax: Vec<f32> = lo
+            .iter()
+            .zip(&hi)
+            .map(|(&l, &h)| {
+                let d = (h - l) / 2.0;
+                if d.is_finite() && d > 1e-12 {
+                    d
+                } else {
+                    0.5
+                }
+            })
+            .collect();
+        // sequential chain fitting (the for-loop the paper contrasts with
+        // Sparx's thread pool, §3.2.2)
+        let mut chains = Vec::with_capacity(params.num_chains);
+        for m in 0..params.num_chains {
+            let mut rng = Rng::new(params.seed.wrapping_add(m as u64 * 0x9E37_79B9));
+            let cp = ChainParams::sample(&deltamax, params.depth, &mut rng);
+            let mut cms: Vec<CountMinSketch> = (0..params.depth)
+                .map(|_| CountMinSketch::new(params.cms_rows, params.cms_cols))
+                .collect();
+            let mut scratch = vec![0f32; kdim];
+            let mut bins = vec![0i32; params.depth * kdim];
+            for s in &sketches {
+                cp.bins_into(s, &mut scratch, &mut bins);
+                for (lvl, c) in cms.iter_mut().enumerate() {
+                    c.insert(&bins[lvl * kdim..(lvl + 1) * kdim]);
+                }
+            }
+            chains.push(TrainedChain { params: cp, cms });
+        }
+        XStream { params: params.clone(), projector, deltamax, chains }
+    }
+
+    /// Score rows sequentially; returns outlierness (higher = more outlying).
+    pub fn score(&self, rows: &[Row]) -> Vec<(u64, f64)> {
+        let kdim = self.deltamax.len();
+        let mut scratch = vec![0f32; kdim];
+        let mut bins = vec![0i32; self.params.depth * kdim];
+        rows.iter()
+            .map(|r| {
+                let s = self.projector.project(r, None).s;
+                let mut total = 0.0;
+                for chain in &self.chains {
+                    total += SparxModel::score_sketch_against(
+                        chain,
+                        self.params.score_mode,
+                        &s,
+                        &mut scratch,
+                        &mut bins,
+                    );
+                }
+                (r.id, -(total / self.chains.len() as f64))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::data::generators::GisetteGen;
+    use crate::sparx::SparxParams;
+
+    #[test]
+    fn detects_planted_outliers() {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let ld = GisetteGen { n: 1000, d: 32, ..Default::default() }.generate(&ctx).unwrap();
+        let rows = ld.dataset.rows.collect(&ctx).unwrap();
+        let model = XStream::fit(
+            &rows,
+            &ld.dataset.schema.names,
+            &XStreamParams { k: 16, num_chains: 20, depth: 8, ..Default::default() },
+        );
+        let scored = model.score(&rows);
+        let mut s = vec![0.0; 1000];
+        for (id, sc) in scored {
+            s[id as usize] = sc;
+        }
+        let auc = crate::metrics::auroc(&s, &ld.labels);
+        assert!(auc > 0.58, "xStream above chance: {auc}");
+    }
+
+    #[test]
+    fn matches_sparx_scores_exactly_at_full_rate() {
+        // same seeds + full sampling ⇒ the distributed and single-machine
+        // implementations must agree to the last bit
+        let ctx = ClusterConfig { num_partitions: 4, num_workers: 2, ..Default::default() }.build();
+        let ld = GisetteGen { n: 400, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+        let rows = ld.dataset.rows.collect(&ctx).unwrap();
+
+        let sp = SparxParams {
+            k: 8,
+            num_chains: 6,
+            depth: 5,
+            sample_rate: 1.0,
+            ..Default::default()
+        };
+        let xp = XStreamParams {
+            k: 8,
+            num_chains: 6,
+            depth: 5,
+            cms_rows: sp.cms_rows,
+            cms_cols: sp.cms_cols,
+            density: sp.density,
+            score_mode: sp.score_mode,
+            seed: sp.seed,
+        };
+        let dist = SparxModel::fit(&ctx, &ld.dataset, &sp).unwrap();
+        let local = XStream::fit(&rows, &ld.dataset.schema.names, &xp);
+
+        // identical chain parameters...
+        for (a, b) in dist.chains.iter().zip(&local.chains) {
+            assert_eq!(a.params, b.params);
+        }
+        // ...identical CMS contents...
+        for (a, b) in dist.chains.iter().zip(&local.chains) {
+            assert_eq!(a.cms, b.cms, "distributed counting diverged from sequential");
+        }
+        // ...identical scores
+        let mut ds = dist.score_dataset(&ctx, &ld.dataset).unwrap();
+        let mut ls = local.score(&rows);
+        ds.sort_by_key(|(id, _)| *id);
+        ls.sort_by_key(|(id, _)| *id);
+        for ((i1, s1), (i2, s2)) in ds.iter().zip(&ls) {
+            assert_eq!(i1, i2);
+            assert!((s1 - s2).abs() < 1e-12, "id {i1}: {s1} vs {s2}");
+        }
+    }
+}

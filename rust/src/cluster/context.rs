@@ -1,0 +1,252 @@
+//! Cluster configuration and the job context threaded through every
+//! distributed operation.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{ClusterError, MemoryMeter, Result, ShuffleLedger};
+
+/// Mirror of the paper's Table 5 system configuration knobs, plus the
+/// simulator's failure-semantics knobs (bandwidth, deadline).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of DataFrame partitions.
+    pub num_partitions: usize,
+    /// Number of executor (worker) threads — `#execs × #exec-cores`.
+    pub num_workers: usize,
+    /// Driver-side model-parallel thread-pool size (#threads in Table 5).
+    pub num_threads: usize,
+    /// Per-executor memory budget in bytes (`exec-memory`).
+    pub worker_mem_bytes: usize,
+    /// Driver memory budget in bytes (`driver-memory`).
+    pub driver_mem_bytes: usize,
+    /// Modelled network bandwidth for shuffled bytes (bytes/sec); shuffles
+    /// convert to virtual time at this rate. `f64::INFINITY` disables.
+    pub network_bytes_per_sec: f64,
+    /// Per-record network overhead in seconds (serialization + framing);
+    /// this is what makes many-small-records shuffles slow, as on Spark.
+    pub network_secs_per_record: f64,
+    /// Job deadline in (wall + virtual network) seconds; None = unlimited.
+    /// The paper's runs had an 8-hour supercomputing budget.
+    pub deadline_secs: Option<f64>,
+    /// Base seed for all stochastic components.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            num_partitions: 16,
+            num_workers: std::thread::available_parallelism().map_or(4, |p| p.get().min(8)),
+            num_threads: 4,
+            worker_mem_bytes: usize::MAX,
+            driver_mem_bytes: usize::MAX,
+            network_bytes_per_sec: 1e9,
+            network_secs_per_record: 25e-9,
+            deadline_secs: None,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn build(self) -> ClusterContext {
+        ClusterContext::new(self)
+    }
+}
+
+/// Shared state of a running "cluster": meters, ledger, clock.
+#[derive(Clone)]
+pub struct ClusterContext {
+    pub cfg: ClusterConfig,
+    pub worker_mem: Arc<Vec<MemoryMeter>>,
+    pub driver_mem: Arc<MemoryMeter>,
+    pub ledger: Arc<ShuffleLedger>,
+    /// Per-worker busy nanoseconds. The host may have fewer cores than
+    /// `num_workers` (this environment has one), so the *parallel* job
+    /// time is modelled from the critical path:
+    /// `wall − Σ busy + max_w busy_w` — serial sections run at wall speed,
+    /// parallelised partition work collapses to the busiest worker.
+    busy: Arc<Vec<std::sync::atomic::AtomicU64>>,
+    start: Instant,
+}
+
+impl ClusterContext {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        assert!(cfg.num_partitions >= 1 && cfg.num_workers >= 1);
+        let worker_mem = (0..cfg.num_workers)
+            .map(|_| MemoryMeter::new(cfg.worker_mem_bytes))
+            .collect();
+        ClusterContext {
+            worker_mem: Arc::new(worker_mem),
+            driver_mem: Arc::new(MemoryMeter::new(cfg.driver_mem_bytes)),
+            ledger: Arc::new(ShuffleLedger::new()),
+            busy: Arc::new(
+                (0..cfg.num_workers).map(|_| std::sync::atomic::AtomicU64::new(0)).collect(),
+            ),
+            start: Instant::now(),
+            cfg,
+        }
+    }
+
+    /// Record `nanos` of compute done by `worker` (partition tasks).
+    pub fn record_busy(&self, worker: usize, nanos: u64) {
+        self.busy[worker].fetch_add(nanos, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn busy_stats(&self) -> (f64, f64) {
+        let mut total = 0u64;
+        let mut max = 0u64;
+        for b in self.busy.iter() {
+            let v = b.load(std::sync::atomic::Ordering::Relaxed);
+            total += v;
+            max = max.max(v);
+        }
+        (total as f64 / 1e9, max as f64 / 1e9)
+    }
+
+    /// Worker that owns partition `p`.
+    #[inline]
+    pub fn owner(&self, p: usize) -> usize {
+        p % self.cfg.num_workers
+    }
+
+    /// Wall-clock seconds since the context was created / reset.
+    pub fn wall_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Modelled (non-wall) seconds: network transfer + any cost-model
+    /// virtual compute time.
+    pub fn network_secs(&self) -> f64 {
+        let (bytes, records, _) = self.ledger.snapshot();
+        bytes as f64 / self.cfg.network_bytes_per_sec
+            + records as f64 * self.cfg.network_secs_per_record
+            + self.ledger.virtual_secs()
+    }
+
+    /// The clock experiments report: modelled parallel compute time
+    /// (critical path over workers) + virtual network time. Falls back to
+    /// plain wall when nothing was recorded as parallel work.
+    pub fn job_secs(&self) -> f64 {
+        let (total, max) = self.busy_stats();
+        let serial = (self.wall_secs() - total).max(0.0);
+        serial + max + self.network_secs()
+    }
+
+    /// Raw single-host wall clock (everything ran on this machine).
+    pub fn host_wall_secs(&self) -> f64 {
+        self.wall_secs()
+    }
+
+    /// Fail if past the deadline (checked between partition tasks).
+    pub fn check_deadline(&self) -> Result<()> {
+        if let Some(budget) = self.cfg.deadline_secs {
+            let elapsed = self.job_secs();
+            if elapsed > budget {
+                return Err(ClusterError::DeadlineExceeded {
+                    elapsed_secs: elapsed,
+                    budget_secs: budget,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Charge a worker meter, mapping overflow to `MemExceeded`.
+    pub fn charge_worker(&self, worker: usize, bytes: usize) -> Result<()> {
+        self.worker_mem[worker].charge(bytes).map_err(|wanted| ClusterError::MemExceeded {
+            worker,
+            wanted,
+            budget: self.cfg.worker_mem_bytes,
+        })
+    }
+
+    /// Charge the driver meter.
+    pub fn charge_driver(&self, bytes: usize) -> Result<()> {
+        self.driver_mem.charge(bytes).map_err(|wanted| ClusterError::DriverMemExceeded {
+            wanted,
+            budget: self.cfg.driver_mem_bytes,
+        })
+    }
+
+    /// Peak memory across workers (the paper's "executor peak").
+    pub fn peak_worker_bytes(&self) -> usize {
+        self.worker_mem.iter().map(|m| m.peak()).max().unwrap_or(0)
+    }
+
+    /// Total peak memory (sum of worker peaks + driver peak), the paper's
+    /// "total memory (GB)" columns.
+    pub fn total_peak_bytes(&self) -> usize {
+        self.worker_mem.iter().map(|m| m.peak()).sum::<usize>() + self.driver_mem.peak()
+    }
+
+    /// Reset clocks, ledger and peaks between experiment runs.
+    pub fn reset(&mut self) {
+        self.ledger.reset();
+        for m in self.worker_mem.iter() {
+            m.reset_peak();
+        }
+        for b in self.busy.iter() {
+            b.store(0, std::sync::atomic::Ordering::Relaxed);
+        }
+        self.driver_mem.reset_peak();
+        self.start = Instant::now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_round_robin() {
+        let ctx = ClusterConfig { num_workers: 4, ..Default::default() }.build();
+        assert_eq!(ctx.owner(0), 0);
+        assert_eq!(ctx.owner(5), 1);
+    }
+
+    #[test]
+    fn network_time_model() {
+        let ctx = ClusterConfig {
+            network_bytes_per_sec: 1000.0,
+            network_secs_per_record: 0.001,
+            ..Default::default()
+        }
+        .build();
+        ctx.ledger.add(2000, 10);
+        assert!((ctx.network_secs() - (2.0 + 0.01)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_triggers() {
+        let ctx = ClusterConfig {
+            deadline_secs: Some(0.5),
+            network_bytes_per_sec: 1.0,
+            network_secs_per_record: 0.0,
+            ..Default::default()
+        }
+        .build();
+        assert!(ctx.check_deadline().is_ok());
+        ctx.ledger.add(100, 0); // 100 virtual seconds
+        assert!(matches!(
+            ctx.check_deadline(),
+            Err(ClusterError::DeadlineExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn charge_worker_maps_error() {
+        let ctx = ClusterConfig {
+            num_workers: 2,
+            worker_mem_bytes: 100,
+            ..Default::default()
+        }
+        .build();
+        ctx.charge_worker(0, 90).unwrap();
+        let e = ctx.charge_worker(0, 20).unwrap_err();
+        assert!(matches!(e, ClusterError::MemExceeded { worker: 0, .. }));
+        // other worker unaffected
+        ctx.charge_worker(1, 90).unwrap();
+    }
+}

@@ -1,0 +1,581 @@
+//! `DistVec<T>` — the partitioned, shared-nothing dataset (Spark
+//! DataFrame/RDD analogue) plus the MapReduce operator set Sparx needs:
+//! `map`, `map_partitions`, `flat_map`, `filter`, `sample`,
+//! `reduce_by_key`, `collect`, `collect_as_map`, `broadcast`, aggregates.
+//!
+//! Semantics enforced by construction:
+//! * an operator closure sees one element / one partition — never another
+//!   partition (shared-nothing);
+//! * partition `p` is owned by worker `p % W`; new partitions are charged
+//!   to their owner's [`MemoryMeter`] and released when the `DistVec`
+//!   drops;
+//! * `reduce_by_key` performs a map-side combine, then hash-partitions
+//!   keys across reducers; bytes crossing worker boundaries are added to
+//!   the [`ShuffleLedger`] (one ledger round per shuffle);
+//! * `collect*` gathers to the driver, charging driver memory + network.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+use super::{pool, ClusterContext, MemoryMeter, Result};
+use crate::util::{Rng, SizeOf};
+
+/// A partitioned distributed vector. Created and transformed only through
+/// a [`ClusterContext`], which owns the accounting.
+pub struct DistVec<T> {
+    parts: Vec<Vec<T>>,
+    charges: Vec<(usize, usize)>, // (worker, bytes) released on drop
+    meters: Option<Arc<Vec<MemoryMeter>>>,
+}
+
+impl<T> Drop for DistVec<T> {
+    fn drop(&mut self) {
+        if let Some(meters) = &self.meters {
+            for &(w, b) in &self.charges {
+                meters[w].release(b);
+            }
+        }
+    }
+}
+
+fn charge_parts<T: SizeOf>(
+    ctx: &ClusterContext,
+    parts: &[Vec<T>],
+) -> Result<Vec<(usize, usize)>> {
+    let mut charges = Vec::with_capacity(parts.len());
+    for (p, part) in parts.iter().enumerate() {
+        let w = ctx.owner(p);
+        let bytes = part.size_of();
+        ctx.charge_worker(w, bytes)?;
+        charges.push((w, bytes));
+    }
+    Ok(charges)
+}
+
+/// Run `f` over all partitions with worker-level parallelism: worker `w`
+/// sequentially processes the partitions it owns; workers run in parallel.
+fn par_over_parts<T, U, F>(ctx: &ClusterContext, parts: &[Vec<T>], f: F) -> Result<Vec<Vec<U>>>
+where
+    T: Send + Sync,
+    U: Send,
+    F: Fn(usize, &[T]) -> Result<Vec<U>> + Sync,
+{
+    let w = ctx.cfg.num_workers;
+    let results = pool::try_run_indexed(w.min(parts.len()).max(1), parts.len(), |p| {
+        ctx.check_deadline()?;
+        let t0 = pool::thread_cpu_nanos();
+        let out = f(p, &parts[p]);
+        // partition work belongs to its owner worker's busy clock (the
+        // modelled-parallel-time input; see ClusterContext::job_secs).
+        // CPU time, not elapsed: the host may have fewer cores than
+        // simulated workers.
+        ctx.record_busy(ctx.owner(p), pool::thread_cpu_nanos() - t0);
+        out
+    })?;
+    Ok(results)
+}
+
+impl<T: Send + Sync> DistVec<T> {
+    /// Partition a driver-side vector into `ctx.cfg.num_partitions` chunks.
+    pub fn from_vec(ctx: &ClusterContext, data: Vec<T>) -> Result<Self>
+    where
+        T: SizeOf,
+    {
+        let p = ctx.cfg.num_partitions;
+        let n = data.len();
+        let base = n / p;
+        let extra = n % p;
+        let mut parts: Vec<Vec<T>> = Vec::with_capacity(p);
+        let mut it = data.into_iter();
+        for i in 0..p {
+            let take = base + usize::from(i < extra);
+            parts.push(it.by_ref().take(take).collect());
+        }
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+
+    /// Build partitions directly (generators use this to create data
+    /// "in place" on workers without a driver round-trip).
+    pub fn from_parts(ctx: &ClusterContext, parts: Vec<Vec<T>>) -> Result<Self>
+    where
+        T: SizeOf,
+    {
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.parts.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read-only view of a partition (tests / local tooling only).
+    pub fn part(&self, p: usize) -> &[T] {
+        &self.parts[p]
+    }
+
+    /// Element-wise map (Spark `map`).
+    pub fn map<U, F>(&self, ctx: &ClusterContext, f: F) -> Result<DistVec<U>>
+    where
+        U: SizeOf + Send + Sync,
+        F: Fn(&T) -> U + Sync,
+    {
+        let parts = par_over_parts(ctx, &self.parts, |_, part| {
+            Ok(part.iter().map(&f).collect())
+        })?;
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+
+    /// Whole-partition map (Spark `mapPartitionsWithIndex`) — the hot-path
+    /// variant the PJRT tile runner uses.
+    pub fn map_partitions<U, F>(&self, ctx: &ClusterContext, f: F) -> Result<DistVec<U>>
+    where
+        U: SizeOf + Send + Sync,
+        F: Fn(usize, &[T]) -> Result<Vec<U>> + Sync,
+    {
+        let parts = par_over_parts(ctx, &self.parts, |p, part| f(p, part))?;
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+
+    /// Element-to-many map (Spark `flatMap`).
+    pub fn flat_map<U, F, I>(&self, ctx: &ClusterContext, f: F) -> Result<DistVec<U>>
+    where
+        U: SizeOf + Send + Sync,
+        I: IntoIterator<Item = U>,
+        F: Fn(&T) -> I + Sync,
+    {
+        let parts = par_over_parts(ctx, &self.parts, |_, part| {
+            Ok(part.iter().flat_map(&f).collect())
+        })?;
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+
+    /// Keep elements satisfying `pred` (clones survivors).
+    pub fn filter<F>(&self, ctx: &ClusterContext, pred: F) -> Result<DistVec<T>>
+    where
+        T: Clone + SizeOf,
+        F: Fn(&T) -> bool + Sync,
+    {
+        let parts = par_over_parts(ctx, &self.parts, |_, part| {
+            Ok(part.iter().filter(|x| pred(x)).cloned().collect())
+        })?;
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+
+    /// Bernoulli subsample at `rate` (Spark `sample(withReplacement=false)`),
+    /// deterministic per (seed, partition).
+    pub fn sample(&self, ctx: &ClusterContext, rate: f64, seed: u64) -> Result<DistVec<T>>
+    where
+        T: Clone + SizeOf,
+    {
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(super::ClusterError::Invalid(format!("sample rate {rate}")));
+        }
+        let parts = par_over_parts(ctx, &self.parts, |p, part| {
+            if rate >= 1.0 {
+                return Ok(part.to_vec());
+            }
+            let mut rng = Rng::new(seed ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            Ok(part.iter().filter(|_| rng.bool(rate)).cloned().collect())
+        })?;
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+
+    /// Tree-aggregate: per-partition fold, then driver-side combine of the
+    /// (constant-size) partials — how the distributed min/max of Step 2 is
+    /// obtained.
+    pub fn aggregate<A, F, G>(&self, ctx: &ClusterContext, init: A, seq: F, comb: G) -> Result<A>
+    where
+        A: Clone + Send + Sync + SizeOf,
+        F: Fn(A, &T) -> A + Sync,
+        G: Fn(A, A) -> A + Sync,
+    {
+        let partials = par_over_parts(ctx, &self.parts, |_, part| {
+            let mut acc = init.clone();
+            for x in part {
+                acc = seq(acc, x);
+            }
+            Ok(vec![acc])
+        })?;
+        // partials cross the network to the driver, which must hold them
+        // while combining (transient driver allocation, budget-checked)
+        let bytes: usize = partials.iter().flat_map(|v| v.iter().map(SizeOf::size_of)).sum();
+        ctx.ledger.add(bytes, partials.len());
+        ctx.ledger.add_round();
+        ctx.charge_driver(bytes)?;
+        let mut acc = init;
+        for v in partials {
+            for a in v {
+                acc = comb(acc, a);
+            }
+        }
+        ctx.driver_mem.release(bytes);
+        Ok(acc)
+    }
+
+    /// Gather everything to the driver (Spark `collect`). Charges driver
+    /// memory; the returned Vec is in partition order.
+    pub fn collect(&self, ctx: &ClusterContext) -> Result<Vec<T>>
+    where
+        T: Clone + SizeOf,
+    {
+        let bytes: usize = self.parts.iter().map(SizeOf::size_of).sum();
+        ctx.ledger.add(bytes, self.len());
+        ctx.ledger.add_round();
+        ctx.charge_driver(bytes)?;
+        let mut out = Vec::with_capacity(self.len());
+        for part in &self.parts {
+            out.extend(part.iter().cloned());
+        }
+        // driver copy is transient for callers; keep it charged only while
+        // building, then release (callers own the Vec outside accounting).
+        ctx.driver_mem.release(bytes);
+        Ok(out)
+    }
+
+    /// Zip two identically-partitioned DistVecs element-wise — used to sum
+    /// per-chain score vectors without a driver round-trip (Alg. 3 line 6).
+    pub fn zip_map<U, V, F>(
+        &self,
+        ctx: &ClusterContext,
+        other: &DistVec<U>,
+        f: F,
+    ) -> Result<DistVec<V>>
+    where
+        U: Send + Sync,
+        V: SizeOf + Send + Sync,
+        F: Fn(&T, &U) -> V + Sync,
+    {
+        if self.parts.len() != other.parts.len()
+            || self
+                .parts
+                .iter()
+                .zip(&other.parts)
+                .any(|(a, b)| a.len() != b.len())
+        {
+            return Err(super::ClusterError::Invalid("zip_map: partitioning mismatch".into()));
+        }
+        let parts = pool::try_run_indexed(
+            ctx.cfg.num_workers.min(self.parts.len()).max(1),
+            self.parts.len(),
+            |p| {
+                ctx.check_deadline()?;
+                let t0 = pool::thread_cpu_nanos();
+                let out = self.parts[p]
+                    .iter()
+                    .zip(&other.parts[p])
+                    .map(|(a, b)| f(a, b))
+                    .collect::<Vec<V>>();
+                ctx.record_busy(ctx.owner(p), pool::thread_cpu_nanos() - t0);
+                Ok(out)
+            },
+        )?;
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+}
+
+fn key_hash<K: Hash>(k: &K) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    k.hash(&mut h);
+    h.finish()
+}
+
+impl<K, V> DistVec<(K, V)>
+where
+    K: Hash + Eq + Clone + Send + Sync + SizeOf,
+    V: Clone + Send + Sync + SizeOf,
+{
+    /// Spark `reduceByKey`: map-side combine, hash shuffle, reduce-side
+    /// merge. Cross-worker bytes/records are accounted to the ledger.
+    pub fn reduce_by_key<F>(&self, ctx: &ClusterContext, combine: F) -> Result<DistVec<(K, V)>>
+    where
+        F: Fn(V, V) -> V + Sync,
+    {
+        let p = self.parts.len();
+        // 1) map-side combine + bucket by target reducer
+        let bucketed: Vec<Vec<HashMap<K, V>>> = par_over_parts(ctx, &self.parts, |_, part| {
+            let mut local: HashMap<K, V> = HashMap::new();
+            for (k, v) in part {
+                match local.remove(k) {
+                    Some(prev) => {
+                        let merged = combine(prev, v.clone());
+                        local.insert(k.clone(), merged);
+                    }
+                    None => {
+                        local.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+            let mut buckets: Vec<HashMap<K, V>> = (0..p).map(|_| HashMap::new()).collect();
+            for (k, v) in local {
+                let tgt = (key_hash(&k) % p as u64) as usize;
+                buckets[tgt].insert(k, v);
+            }
+            Ok(vec![buckets])
+        })?
+        .into_iter()
+        .map(|mut v| v.pop().expect("one bucket set per partition"))
+        .collect();
+
+        // 2) shuffle accounting: entries moving to a different worker
+        let mut moved_bytes = 0usize;
+        let mut moved_records = 0usize;
+        for (src, buckets) in bucketed.iter().enumerate() {
+            let src_w = ctx.owner(src);
+            for (tgt, bucket) in buckets.iter().enumerate() {
+                if ctx.owner(tgt) != src_w {
+                    moved_bytes += bucket
+                        .iter()
+                        .map(|(k, v)| k.size_of() + v.size_of())
+                        .sum::<usize>();
+                    moved_records += bucket.len();
+                }
+            }
+        }
+        ctx.ledger.add(moved_bytes, moved_records);
+        ctx.ledger.add_round();
+        ctx.check_deadline()?;
+
+        // 3) reduce-side merge, one output partition per reducer
+        let mut merged: Vec<HashMap<K, V>> = (0..p).map(|_| HashMap::new()).collect();
+        for buckets in bucketed {
+            for (tgt, bucket) in buckets.into_iter().enumerate() {
+                let m = &mut merged[tgt];
+                for (k, v) in bucket {
+                    match m.remove(&k) {
+                        Some(prev) => {
+                            let c = combine(prev, v);
+                            m.insert(k, c);
+                        }
+                        None => {
+                            m.insert(k, v);
+                        }
+                    }
+                }
+            }
+        }
+        let parts: Vec<Vec<(K, V)>> =
+            merged.into_iter().map(|m| m.into_iter().collect()).collect();
+        let charges = charge_parts(ctx, &parts)?;
+        Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
+    }
+
+    /// Spark `collectAsMap`: gather (K,V) pairs into a driver-side map.
+    pub fn collect_as_map(&self, ctx: &ClusterContext) -> Result<HashMap<K, V>> {
+        let bytes: usize = self
+            .parts
+            .iter()
+            .flat_map(|p| p.iter().map(|(k, v)| k.size_of() + v.size_of()))
+            .sum();
+        ctx.ledger.add(bytes, self.len());
+        ctx.ledger.add_round();
+        ctx.charge_driver(bytes)?;
+        let mut out = HashMap::with_capacity(self.len());
+        for part in &self.parts {
+            for (k, v) in part {
+                out.insert(k.clone(), v.clone());
+            }
+        }
+        ctx.driver_mem.release(bytes);
+        Ok(out)
+    }
+}
+
+/// A driver-to-all-workers broadcast variable (Spark `sc.broadcast`).
+/// Charged once per worker (sent once, cached), released on drop.
+pub struct Broadcast<B> {
+    value: Arc<B>,
+    bytes: usize,
+    meters: Arc<Vec<MemoryMeter>>,
+}
+
+impl<B: SizeOf> Broadcast<B> {
+    pub fn new(ctx: &ClusterContext, value: B) -> Result<Self> {
+        let bytes = value.size_of();
+        for w in 0..ctx.cfg.num_workers {
+            ctx.charge_worker(w, bytes)?;
+        }
+        ctx.ledger.add(bytes * ctx.cfg.num_workers, ctx.cfg.num_workers);
+        ctx.ledger.add_round();
+        Ok(Broadcast { value: Arc::new(value), bytes, meters: ctx.worker_mem.clone() })
+    }
+}
+
+impl<B> Broadcast<B> {
+    pub fn value(&self) -> &B {
+        &self.value
+    }
+}
+
+impl<B> Drop for Broadcast<B> {
+    fn drop(&mut self) {
+        for m in self.meters.iter() {
+            m.release(self.bytes);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn ctx() -> ClusterContext {
+        ClusterConfig { num_partitions: 4, num_workers: 2, ..Default::default() }.build()
+    }
+
+    #[test]
+    fn from_vec_partitions_evenly() {
+        let c = ctx();
+        let dv = DistVec::from_vec(&c, (0..10u32).collect()).unwrap();
+        assert_eq!(dv.num_parts(), 4);
+        assert_eq!(dv.len(), 10);
+        let sizes: Vec<usize> = (0..4).map(|p| dv.part(p).len()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn map_preserves_order_within_partitions() {
+        let c = ctx();
+        let dv = DistVec::from_vec(&c, (0..100u32).collect()).unwrap();
+        let doubled = dv.map(&c, |x| x * 2).unwrap();
+        assert_eq!(doubled.collect(&c).unwrap(), (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn flat_map_and_filter() {
+        let c = ctx();
+        let dv = DistVec::from_vec(&c, vec![1u32, 2, 3]).unwrap();
+        let fm = dv.flat_map(&c, |&x| vec![x; x as usize]).unwrap();
+        assert_eq!(fm.len(), 6);
+        let f = fm.filter(&c, |&x| x > 1).unwrap();
+        assert_eq!(f.len(), 5);
+    }
+
+    #[test]
+    fn sample_rate_roughly_holds() {
+        let c = ctx();
+        let dv = DistVec::from_vec(&c, (0..10_000u32).collect()).unwrap();
+        let s = dv.sample(&c, 0.1, 7).unwrap();
+        assert!((800..1200).contains(&s.len()), "{}", s.len());
+        // deterministic
+        let s2 = dv.sample(&c, 0.1, 7).unwrap();
+        assert_eq!(s.collect(&c).unwrap(), s2.collect(&c).unwrap());
+    }
+
+    #[test]
+    fn reduce_by_key_sums() {
+        let c = ctx();
+        let pairs: Vec<(u32, u64)> = (0..1000).map(|i| (i % 7, 1u64)).collect();
+        let dv = DistVec::from_vec(&c, pairs).unwrap();
+        let red = dv.reduce_by_key(&c, |a, b| a + b).unwrap();
+        let m = red.collect_as_map(&c).unwrap();
+        assert_eq!(m.len(), 7);
+        let total: u64 = m.values().sum();
+        assert_eq!(total, 1000);
+        for (k, v) in m {
+            assert_eq!(v, if k < 1000 % 7 { 143 } else { 142 }, "key {k}");
+        }
+    }
+
+    #[test]
+    fn reduce_by_key_counts_shuffle() {
+        let c = ctx();
+        let pairs: Vec<(u32, u64)> = (0..1000).map(|i| (i, 1u64)).collect();
+        let dv = DistVec::from_vec(&c, pairs).unwrap();
+        let before = c.ledger.bytes();
+        let _ = dv.reduce_by_key(&c, |a, b| a + b).unwrap();
+        assert!(c.ledger.bytes() > before, "shuffle not accounted");
+        assert!(c.ledger.rounds() >= 1);
+    }
+
+    #[test]
+    fn aggregate_min_max() {
+        let c = ctx();
+        let dv = DistVec::from_vec(&c, vec![5.0f64, -2.0, 9.0, 3.5]).unwrap();
+        let (lo, hi) = dv
+            .aggregate(
+                &c,
+                (f64::INFINITY, f64::NEG_INFINITY),
+                |(lo, hi), &x| (lo.min(x), hi.max(x)),
+                |(a, b), (c2, d)| (a.min(c2), b.max(d)),
+            )
+            .unwrap();
+        assert_eq!((lo, hi), (-2.0, 9.0));
+    }
+
+    #[test]
+    fn memory_charged_and_released() {
+        let c = ctx();
+        let before: usize = c.worker_mem.iter().map(|m| m.current()).sum();
+        {
+            let dv = DistVec::from_vec(&c, vec![0u64; 1000]).unwrap();
+            let during: usize = c.worker_mem.iter().map(|m| m.current()).sum();
+            assert!(during >= before + 8000);
+            drop(dv);
+        }
+        let after: usize = c.worker_mem.iter().map(|m| m.current()).sum();
+        assert_eq!(after, before);
+    }
+
+    #[test]
+    fn worker_budget_enforced() {
+        let c = ClusterConfig {
+            num_partitions: 2,
+            num_workers: 2,
+            worker_mem_bytes: 1000,
+            ..Default::default()
+        }
+        .build();
+        let r = DistVec::from_vec(&c, vec![0u64; 10_000]);
+        assert!(matches!(r, Err(crate::cluster::ClusterError::MemExceeded { .. })));
+    }
+
+    #[test]
+    fn zip_map_adds() {
+        let c = ctx();
+        let a = DistVec::from_vec(&c, vec![1.0f64; 10]).unwrap();
+        let b = DistVec::from_vec(&c, vec![2.0f64; 10]).unwrap();
+        let s = a.zip_map(&c, &b, |x, y| x + y).unwrap();
+        assert_eq!(s.collect(&c).unwrap(), vec![3.0; 10]);
+    }
+
+    #[test]
+    fn broadcast_charges_every_worker() {
+        let c = ctx();
+        let cur0: Vec<usize> = c.worker_mem.iter().map(|m| m.current()).collect();
+        let b = Broadcast::new(&c, vec![0u8; 500]).unwrap();
+        for (w, m) in c.worker_mem.iter().enumerate() {
+            assert!(m.current() >= cur0[w] + 500, "worker {w} not charged");
+        }
+        drop(b);
+        let cur1: Vec<usize> = c.worker_mem.iter().map(|m| m.current()).collect();
+        assert_eq!(cur0, cur1);
+    }
+
+    #[test]
+    fn map_partitions_sees_only_own_partition() {
+        let c = ctx();
+        let dv = DistVec::from_vec(&c, (0..20u32).collect()).unwrap();
+        let sums = dv
+            .map_partitions(&c, |_, part| Ok(vec![part.iter().sum::<u32>()]))
+            .unwrap();
+        assert_eq!(sums.len(), 4);
+        assert_eq!(sums.collect(&c).unwrap().iter().sum::<u32>(), (0..20).sum());
+    }
+}

@@ -1,0 +1,116 @@
+//! Per-worker / driver memory accounting with budgets.
+//!
+//! Charges are estimated deep sizes ([`crate::util::SizeOf`]). The meter
+//! tracks a high-water mark (the paper's "peak memory" columns) and fails
+//! a charge that would exceed the budget, reproducing executor OOMs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Thread-safe current/peak memory meter with an optional budget.
+#[derive(Debug)]
+pub struct MemoryMeter {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+    budget: usize, // usize::MAX = unlimited
+}
+
+impl MemoryMeter {
+    pub fn new(budget: usize) -> Self {
+        MemoryMeter { current: AtomicUsize::new(0), peak: AtomicUsize::new(0), budget }
+    }
+
+    pub fn unlimited() -> Self {
+        Self::new(usize::MAX)
+    }
+
+    /// Charge `bytes`; returns the would-be total on budget overflow.
+    pub fn charge(&self, bytes: usize) -> Result<(), usize> {
+        let prev = self.current.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        if now > self.budget {
+            // roll back so later (smaller) stages can still run
+            self.current.fetch_sub(bytes, Ordering::Relaxed);
+            // peak still records the attempt: the job *needed* this much
+            self.peak.fetch_max(now, Ordering::Relaxed);
+            return Err(now);
+        }
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Release a previous charge.
+    pub fn release(&self, bytes: usize) {
+        let prev = self.current.fetch_sub(bytes, Ordering::Relaxed);
+        debug_assert!(prev >= bytes, "release underflow: {prev} - {bytes}");
+    }
+
+    pub fn current(&self) -> usize {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Reset peak tracking (between experiment runs).
+    pub fn reset_peak(&self) {
+        self.peak.store(self.current(), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_release_peak() {
+        let m = MemoryMeter::new(1000);
+        m.charge(400).unwrap();
+        m.charge(500).unwrap();
+        assert_eq!(m.current(), 900);
+        assert_eq!(m.peak(), 900);
+        m.release(500);
+        assert_eq!(m.current(), 400);
+        assert_eq!(m.peak(), 900);
+    }
+
+    #[test]
+    fn budget_enforced_and_rolled_back() {
+        let m = MemoryMeter::new(100);
+        m.charge(80).unwrap();
+        let e = m.charge(50).unwrap_err();
+        assert_eq!(e, 130);
+        // rolled back: a smaller charge still fits
+        m.charge(20).unwrap();
+        assert_eq!(m.current(), 100);
+        // peak remembers the failed attempt — that's what the job needed
+        assert_eq!(m.peak(), 130);
+    }
+
+    #[test]
+    fn unlimited_never_fails() {
+        let m = MemoryMeter::unlimited();
+        m.charge(usize::MAX / 4).unwrap();
+    }
+
+    #[test]
+    fn concurrent_charges() {
+        let m = std::sync::Arc::new(MemoryMeter::unlimited());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.charge(3).unwrap();
+                        m.release(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.current(), 8 * 1000 * 2);
+    }
+}

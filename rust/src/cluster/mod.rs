@@ -1,0 +1,64 @@
+//! Shared-nothing cluster substrate.
+//!
+//! The paper's system claims are about *coordination structure*: number of
+//! map/reduce passes, size of intermediates crossing the network, data- vs
+//! model-parallelism, and per-executor memory behaviour. This module
+//! provides an in-process substrate that preserves exactly those semantics
+//! while running on worker threads:
+//!
+//! * data lives in disjoint [`dist::DistVec`] partitions; an operation sees
+//!   only its own partition (no shared-memory shortcuts);
+//! * every byte that crosses partition boundaries (shuffles, collects,
+//!   broadcasts) is accounted in a [`shuffle::ShuffleLedger`] and converted
+//!   to virtual network time at a configurable bandwidth;
+//! * every worker and the driver have a [`memory::MemoryMeter`] with a
+//!   budget — exceeding it fails the job with `MemExceeded`, which is how
+//!   the paper's "MEM ERR" rows (Table 4) reproduce;
+//! * jobs carry a deadline — the paper's 8-hour "TIMEOUT" rows reproduce
+//!   as `DeadlineExceeded` against the accounted virtual+wall clock.
+
+pub mod context;
+pub mod dist;
+pub mod memory;
+pub mod pool;
+pub mod shuffle;
+
+pub use context::{ClusterConfig, ClusterContext};
+pub use dist::DistVec;
+pub use memory::MemoryMeter;
+pub use shuffle::ShuffleLedger;
+
+/// Errors surfaced by the cluster substrate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterError {
+    /// A worker exceeded its executor memory budget (paper: "MEM ERR").
+    MemExceeded { worker: usize, wanted: usize, budget: usize },
+    /// The driver exceeded its memory budget.
+    DriverMemExceeded { wanted: usize, budget: usize },
+    /// The job ran past its wall+virtual deadline (paper: "TIMEOUT").
+    DeadlineExceeded { elapsed_secs: f64, budget_secs: f64 },
+    /// Invalid configuration or usage.
+    Invalid(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::MemExceeded { worker, wanted, budget } => write!(
+                f,
+                "MEM ERR: worker {worker} needed {wanted}B over budget {budget}B"
+            ),
+            ClusterError::DriverMemExceeded { wanted, budget } => {
+                write!(f, "MEM ERR: driver needed {wanted}B over budget {budget}B")
+            }
+            ClusterError::DeadlineExceeded { elapsed_secs, budget_secs } => {
+                write!(f, "TIMEOUT after {elapsed_secs:.1}s (budget {budget_secs:.1}s)")
+            }
+            ClusterError::Invalid(m) => write!(f, "invalid: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+pub type Result<T> = std::result::Result<T, ClusterError>;

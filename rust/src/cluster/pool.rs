@@ -1,0 +1,152 @@
+//! Bounded scoped parallelism.
+//!
+//! Two uses in the paper's system: (1) worker-level data parallelism —
+//! each logical worker processes its partitions; (2) the driver-side
+//! *model-parallel* thread pool that trains/scoresthe M chains
+//! concurrently (Algorithm 2, lines 9–11; Algorithm 3, lines 4–6).
+//!
+//! `run_indexed` executes `n` jobs over at most `threads` OS threads with
+//! a shared atomic work queue, preserving result order. Scoped, so jobs
+//! may borrow from the caller.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// CPU time consumed by the calling thread, in nanoseconds. Immune to
+/// time-slicing: on a host with fewer cores than simulated workers
+/// (this environment has one), wall-clock elapsed would count the time a
+/// task spent descheduled while sibling workers ran — CPU time does not.
+pub fn thread_cpu_nanos() -> u64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: plain syscall writing into the local timespec
+    unsafe {
+        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+    }
+    ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// Run `n` jobs `f(0..n)` on at most `threads` threads; returns results in
+/// index order. Panics in jobs propagate.
+pub fn run_indexed<R, F>(threads: usize, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job did not run"))
+        .collect()
+}
+
+/// Fallible variant: stops scheduling new jobs after the first error and
+/// returns it (jobs already running complete).
+pub fn try_run_indexed<R, E, F>(threads: usize, n: usize, f: F) -> Result<Vec<R>, E>
+where
+    R: Send,
+    E: Send,
+    F: Fn(usize) -> Result<R, E> + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let next = AtomicUsize::new(0);
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let error: Mutex<Option<E>> = Mutex::new(None);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                if failed.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                match f(i) {
+                    Ok(r) => *results[i].lock().unwrap() = Some(r),
+                    Err(e) => {
+                        failed.store(true, Ordering::Relaxed);
+                        let mut slot = error.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e);
+                        }
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = error.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job did not run"))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = run_indexed(4, 100, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = run_indexed(1, 5, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn zero_jobs() {
+        let out: Vec<usize> = run_indexed(4, 0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn borrows_from_caller() {
+        let data = vec![10, 20, 30];
+        let out = run_indexed(2, 3, |i| data[i] + 1);
+        assert_eq!(out, vec![11, 21, 31]);
+    }
+
+    #[test]
+    fn try_run_propagates_error() {
+        let r: Result<Vec<usize>, String> =
+            try_run_indexed(4, 100, |i| if i == 37 { Err("boom".into()) } else { Ok(i) });
+        assert_eq!(r.unwrap_err(), "boom");
+    }
+
+    #[test]
+    fn try_run_ok() {
+        let r: Result<Vec<usize>, ()> = try_run_indexed(3, 10, Ok);
+        assert_eq!(r.unwrap(), (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,87 @@
+//! Network accounting: every byte that crosses a partition boundary goes
+//! through this ledger. Virtual network time = bytes / bandwidth, which the
+//! experiment harness adds to wall time so that shuffle-heavy algorithms
+//! (SPIF's per-tree subsample gather) pay the cost the paper observed on a
+//! real cluster.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct ShuffleLedger {
+    bytes: AtomicU64,
+    records: AtomicU64,
+    /// Number of shuffle (communication) rounds — the paper's "two-pass"
+    /// claim for Sparx is asserted against this counter in tests.
+    rounds: AtomicU64,
+    /// Extra modelled compute nanoseconds, used by cost models for work
+    /// that cannot be executed literally at laptop scale (e.g. DBSCOUT's
+    /// exponential cell-neighbourhood enumeration — see
+    /// `baselines::dbscout`). Included in the job clock like network time.
+    virtual_nanos: AtomicU64,
+}
+
+impl ShuffleLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, bytes: usize, records: usize) {
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.records.fetch_add(records as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_round(&self) {
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Relaxed)
+    }
+
+    /// Add modelled compute time (see `virtual_nanos` docs).
+    pub fn add_virtual_secs(&self, secs: f64) {
+        self.virtual_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn virtual_secs(&self) -> f64 {
+        self.virtual_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn reset(&self) {
+        self.bytes.store(0, Ordering::Relaxed);
+        self.records.store(0, Ordering::Relaxed);
+        self.rounds.store(0, Ordering::Relaxed);
+        self.virtual_nanos.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot (bytes, records, rounds).
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (self.bytes(), self.records(), self.rounds())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let l = ShuffleLedger::new();
+        l.add(100, 10);
+        l.add(50, 5);
+        l.add_round();
+        assert_eq!(l.bytes(), 150);
+        assert_eq!(l.records(), 15);
+        assert_eq!(l.rounds(), 1);
+        l.reset();
+        assert_eq!(l.snapshot(), (0, 0, 0));
+    }
+}

@@ -1,0 +1,142 @@
+//! Configuration: cluster presets mirroring the paper's Table 5 and a
+//! JSON config-file format for the CLI (in-tree JSON; the offline build
+//! has no serde).
+
+pub mod presets;
+
+use crate::cluster::ClusterConfig;
+use crate::util::Json;
+
+/// File-format mirror of [`ClusterConfig`]. All fields optional; defaults
+/// come from [`ClusterConfig::default`]. Memory fields are in MB (0 =
+/// unlimited), bandwidth in MB/s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfigFile {
+    pub num_partitions: usize,
+    pub num_workers: usize,
+    pub num_threads: usize,
+    pub worker_mem_mb: usize,
+    pub driver_mem_mb: usize,
+    pub network_mbps: f64,
+    pub deadline_secs: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfigFile {
+    fn default() -> Self {
+        let c = ClusterConfig::default();
+        ClusterConfigFile {
+            num_partitions: c.num_partitions,
+            num_workers: c.num_workers,
+            num_threads: c.num_threads,
+            worker_mem_mb: 0,
+            driver_mem_mb: 0,
+            network_mbps: c.network_bytes_per_sec / 1e6,
+            deadline_secs: c.deadline_secs,
+            seed: c.seed,
+        }
+    }
+}
+
+impl ClusterConfigFile {
+    pub fn into_config(self) -> ClusterConfig {
+        ClusterConfig {
+            num_partitions: self.num_partitions,
+            num_workers: self.num_workers,
+            num_threads: self.num_threads,
+            worker_mem_bytes: if self.worker_mem_mb == 0 {
+                usize::MAX
+            } else {
+                self.worker_mem_mb * 1024 * 1024
+            },
+            driver_mem_bytes: if self.driver_mem_mb == 0 {
+                usize::MAX
+            } else {
+                self.driver_mem_mb * 1024 * 1024
+            },
+            network_bytes_per_sec: self.network_mbps * 1e6,
+            network_secs_per_record: 25e-9,
+            deadline_secs: self.deadline_secs,
+            seed: self.seed,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Self {
+        let mut f = ClusterConfigFile::default();
+        if let Some(v) = j.get("num_partitions").and_then(Json::as_usize) {
+            f.num_partitions = v;
+        }
+        if let Some(v) = j.get("num_workers").and_then(Json::as_usize) {
+            f.num_workers = v;
+        }
+        if let Some(v) = j.get("num_threads").and_then(Json::as_usize) {
+            f.num_threads = v;
+        }
+        if let Some(v) = j.get("worker_mem_mb").and_then(Json::as_usize) {
+            f.worker_mem_mb = v;
+        }
+        if let Some(v) = j.get("driver_mem_mb").and_then(Json::as_usize) {
+            f.driver_mem_mb = v;
+        }
+        if let Some(v) = j.get("network_mbps").and_then(Json::as_f64) {
+            f.network_mbps = v;
+        }
+        if let Some(v) = j.get("deadline_secs").and_then(Json::as_f64) {
+            f.deadline_secs = Some(v);
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            f.seed = v as u64;
+        }
+        f
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("num_partitions", Json::Num(self.num_partitions as f64)),
+            ("num_workers", Json::Num(self.num_workers as f64)),
+            ("num_threads", Json::Num(self.num_threads as f64)),
+            ("worker_mem_mb", Json::Num(self.worker_mem_mb as f64)),
+            ("driver_mem_mb", Json::Num(self.driver_mem_mb as f64)),
+            ("network_mbps", Json::Num(self.network_mbps)),
+            (
+                "deadline_secs",
+                self.deadline_secs.map_or(Json::Null, Json::Num),
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        Ok(Self::from_json(&j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_json() {
+        let f = ClusterConfigFile { num_partitions: 32, ..Default::default() };
+        let j = f.to_json();
+        let g = ClusterConfigFile::from_json(&j);
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn zero_mem_means_unlimited() {
+        let c = ClusterConfigFile::default().into_config();
+        assert_eq!(c.worker_mem_bytes, usize::MAX);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"num_workers": 2}"#).unwrap();
+        let f = ClusterConfigFile::from_json(&j);
+        assert_eq!(f.num_workers, 2);
+        assert_eq!(f.num_partitions, ClusterConfigFile::default().num_partitions);
+    }
+}

@@ -1,0 +1,119 @@
+//! Partitioned datasets with schemas, plus the labeled variant used by
+//! the evaluation harness (ground truth never enters the pipeline; it
+//! lives driver-side for metric computation only).
+
+use crate::cluster::{ClusterContext, DistVec, Result};
+use crate::util::SizeOf;
+
+use super::row::Row;
+
+/// Column schema for dense/sparse encodings. Feature *names* are what the
+/// Eq. (2) hash family consumes; for positional encodings the name of
+/// column `j` is `"f{j}"` (memoised here so the hot path never formats).
+#[derive(Debug, Clone)]
+pub struct Schema {
+    pub names: Vec<String>,
+}
+
+impl Schema {
+    pub fn positional(d: usize) -> Self {
+        Schema { names: (0..d).map(|j| format!("f{j}")).collect() }
+    }
+
+    pub fn named(names: Vec<String>) -> Self {
+        Schema { names }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.names.len()
+    }
+}
+
+impl SizeOf for Schema {
+    fn size_of(&self) -> usize {
+        self.names.size_of()
+    }
+}
+
+/// A distributed point cloud: schema + partitioned rows.
+pub struct Dataset {
+    pub schema: Schema,
+    pub rows: DistVec<Row>,
+}
+
+impl Dataset {
+    pub fn new(schema: Schema, rows: DistVec<Row>) -> Self {
+        Dataset { schema, rows }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.schema.dim()
+    }
+
+    /// Project the dataset onto a subset of (dense) columns — used by the
+    /// Table 2 dimensionality sweep and the DBSCOUT d=2/7 reductions.
+    pub fn select_columns(&self, ctx: &ClusterContext, cols: &[usize]) -> Result<Dataset> {
+        let cols = cols.to_vec();
+        let rows = self.rows.map(ctx, |r| {
+            let dense = r.features.as_dense();
+            Row::dense(r.id, cols.iter().map(|&c| dense[c]).collect())
+        })?;
+        let schema =
+            Schema::named(cols.iter().map(|&c| self.schema.names[c].clone()).collect());
+        Ok(Dataset { schema, rows })
+    }
+}
+
+/// Dataset + driver-side ground truth, keyed by row id.
+pub struct LabeledDataset {
+    pub dataset: Dataset,
+    /// `labels[id] == true` ⇔ point `id` is an outlier.
+    pub labels: Vec<bool>,
+}
+
+impl LabeledDataset {
+    pub fn outlier_count(&self) -> usize {
+        self.labels.iter().filter(|&&b| b).count()
+    }
+
+    pub fn outlier_rate(&self) -> f64 {
+        self.outlier_count() as f64 / self.labels.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    #[test]
+    fn positional_schema_names() {
+        let s = Schema::positional(3);
+        assert_eq!(s.names, vec!["f0", "f1", "f2"]);
+        assert_eq!(s.dim(), 3);
+    }
+
+    #[test]
+    fn select_columns() {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let rows = DistVec::from_vec(
+            &ctx,
+            vec![Row::dense(0, vec![1., 2., 3.]), Row::dense(1, vec![4., 5., 6.])],
+        )
+        .unwrap();
+        let ds = Dataset::new(Schema::positional(3), rows);
+        let sub = ds.select_columns(&ctx, &[2, 0]).unwrap();
+        assert_eq!(sub.dim(), 2);
+        let collected = sub.rows.collect(&ctx).unwrap();
+        assert_eq!(collected[0].features.as_dense(), &[3., 1.]);
+        assert_eq!(sub.schema.names, vec!["f2", "f0"]);
+    }
+}

@@ -1,0 +1,18 @@
+//! Synthetic stand-ins for the paper's three datasets (see DESIGN.md
+//! §Substitutions). Each generator creates data *partition-local* (born
+//! distributed, like cloud-resident data) and returns driver-side labels
+//! for evaluation only.
+//!
+//! | paper | generator | regime |
+//! |---|---|---|
+//! | Gisette (GMM-resampled) | [`gisette::GisetteGen`] | small-n / large-d, 10% outliers |
+//! | OSM GPS points | [`osm::OsmGen`] | large-n / 2-d, ~0.04% injected outliers |
+//! | SpamURL | [`spamurl::SpamUrlGen`] | large-n / sparse large-d, 33% outliers |
+
+pub mod gisette;
+pub mod osm;
+pub mod spamurl;
+
+pub use gisette::GisetteGen;
+pub use osm::OsmGen;
+pub use spamurl::SpamUrlGen;

@@ -1,0 +1,236 @@
+//! File loaders so users can run Sparx on their own data: dense CSV
+//! (numeric, optional label column) and LibSVM/SVMlight sparse format
+//! (the distribution format of the real SpamURL dataset).
+
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use crate::cluster::{ClusterContext, DistVec, Result};
+use crate::util::SizeOf;
+
+use super::dataset::{Dataset, LabeledDataset, Schema};
+use super::row::Row;
+
+fn invalid(msg: String) -> crate::cluster::ClusterError {
+    crate::cluster::ClusterError::Invalid(msg)
+}
+
+/// Load a dense numeric CSV. If `label_col` is given, that column becomes
+/// the ground-truth label (non-zero ⇒ outlier) and is removed from the
+/// features. First row may be a header (detected by non-numeric cells).
+pub fn load_csv(
+    ctx: &ClusterContext,
+    path: impl AsRef<Path>,
+    label_col: Option<usize>,
+) -> Result<LabeledDataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .map_err(|e| invalid(format!("open {:?}: {e}", path.as_ref())))?;
+    let mut lines = BufReader::new(f).lines();
+
+    let first = match lines.next() {
+        Some(l) => l.map_err(|e| invalid(format!("read: {e}")))?,
+        None => return Err(invalid("empty csv".into())),
+    };
+    let first_cells: Vec<&str> = first.split(',').map(str::trim).collect();
+    let has_header = first_cells.iter().any(|c| c.parse::<f64>().is_err());
+    let ncols = first_cells.len();
+    let names: Vec<String> = if has_header {
+        first_cells.iter().map(|s| s.to_string()).collect()
+    } else {
+        (0..ncols).map(|j| format!("f{j}")).collect()
+    };
+
+    let mut rows = Vec::new();
+    let mut labels = Vec::new();
+    let mut id = 0u64;
+    let mut push_row = |cells: Vec<f64>| -> Result<()> {
+        let mut feats = Vec::with_capacity(ncols - usize::from(label_col.is_some()));
+        let mut label = false;
+        for (j, v) in cells.into_iter().enumerate() {
+            if Some(j) == label_col {
+                label = v != 0.0;
+            } else {
+                feats.push(v as f32);
+            }
+        }
+        rows.push(Row::dense(id, feats));
+        labels.push(label);
+        id += 1;
+        Ok(())
+    };
+
+    if !has_header {
+        let cells = first_cells
+            .iter()
+            .map(|c| c.parse::<f64>().map_err(|e| invalid(format!("parse {c:?}: {e}"))))
+            .collect::<Result<Vec<f64>>>()?;
+        push_row(cells)?;
+    }
+    for (lineno, line) in lines.enumerate() {
+        let line = line.map_err(|e| invalid(format!("read: {e}")))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cells = line
+            .split(',')
+            .map(|c| {
+                c.trim()
+                    .parse::<f64>()
+                    .map_err(|e| invalid(format!("line {}: parse {c:?}: {e}", lineno + 2)))
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        if cells.len() != ncols {
+            return Err(invalid(format!("line {}: {} cols, want {ncols}", lineno + 2, cells.len())));
+        }
+        push_row(cells)?;
+    }
+
+    let schema = Schema::named(
+        names
+            .into_iter()
+            .enumerate()
+            .filter(|(j, _)| Some(*j) != label_col)
+            .map(|(_, n)| n)
+            .collect(),
+    );
+    let rows = DistVec::from_vec(ctx, rows)?;
+    Ok(LabeledDataset { dataset: Dataset::new(schema, rows), labels })
+}
+
+/// Load LibSVM format: `label idx:val idx:val ...` with 1-based indices.
+/// Labels > 0 are treated as outliers (SpamURL convention: +1 malicious).
+pub fn load_libsvm(
+    ctx: &ClusterContext,
+    path: impl AsRef<Path>,
+    dim: Option<usize>,
+) -> Result<LabeledDataset> {
+    let f = std::fs::File::open(path.as_ref())
+        .map_err(|e| invalid(format!("open {:?}: {e}", path.as_ref())))?;
+    let mut rows = Vec::new();
+    let mut labels = Vec::new();
+    let mut max_idx = 0u32;
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line.map_err(|e| invalid(format!("read: {e}")))?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let label: f64 = it
+            .next()
+            .ok_or_else(|| invalid(format!("line {}: empty", lineno + 1)))?
+            .parse()
+            .map_err(|e| invalid(format!("line {}: label: {e}", lineno + 1)))?;
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for tok in it {
+            let (i, v) = tok
+                .split_once(':')
+                .ok_or_else(|| invalid(format!("line {}: token {tok:?}", lineno + 1)))?;
+            let i: u32 = i
+                .parse::<u32>()
+                .map_err(|e| invalid(format!("line {}: idx: {e}", lineno + 1)))?
+                .checked_sub(1)
+                .ok_or_else(|| invalid(format!("line {}: zero index", lineno + 1)))?;
+            let v: f32 =
+                v.parse().map_err(|e| invalid(format!("line {}: val: {e}", lineno + 1)))?;
+            idx.push(i);
+            val.push(v);
+            max_idx = max_idx.max(i);
+        }
+        // libsvm lines are usually sorted; enforce it
+        let mut order: Vec<usize> = (0..idx.len()).collect();
+        order.sort_by_key(|&i| idx[i]);
+        let idx: Vec<u32> = order.iter().map(|&i| idx[i]).collect();
+        let val: Vec<f32> = order.iter().map(|&i| val[i]).collect();
+        rows.push(Row::sparse(rows.len() as u64, idx, val));
+        labels.push(label > 0.0);
+    }
+    let d = dim.unwrap_or(max_idx as usize + 1);
+    let rows = DistVec::from_vec(ctx, rows)?;
+    Ok(LabeledDataset { dataset: Dataset::new(Schema::positional(d), rows), labels })
+}
+
+/// Write scores (id, score, label) to CSV for external analysis.
+pub fn write_scores_csv(
+    path: impl AsRef<Path>,
+    scores: &[(u64, f64)],
+    labels: &[bool],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "id,score,label")?;
+    for &(id, s) in scores {
+        writeln!(f, "{id},{s},{}", u8::from(labels[id as usize]))?;
+    }
+    Ok(())
+}
+
+/// Estimated on-disk/in-memory footprint of a dataset (report plumbing).
+pub fn dataset_bytes(ds: &Dataset) -> usize {
+    (0..ds.rows.num_parts())
+        .map(|p| ds.rows.part(p).iter().map(SizeOf::size_of).sum::<usize>())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn ctx() -> ClusterContext {
+        ClusterConfig { num_partitions: 2, ..Default::default() }.build()
+    }
+
+    #[test]
+    fn csv_roundtrip_with_header_and_label() {
+        let dir = std::env::temp_dir().join("sparx_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        std::fs::write(&p, "a,b,y\n1.0,2.0,0\n3.0,4.0,1\n").unwrap();
+        let ld = load_csv(&ctx(), &p, Some(2)).unwrap();
+        assert_eq!(ld.dataset.len(), 2);
+        assert_eq!(ld.dataset.dim(), 2);
+        assert_eq!(ld.labels, vec![false, true]);
+        assert_eq!(ld.dataset.schema.names, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn csv_headerless() {
+        let dir = std::env::temp_dir().join("sparx_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t2.csv");
+        std::fs::write(&p, "1.0,2.0\n3.0,4.0\n").unwrap();
+        let ld = load_csv(&ctx(), &p, None).unwrap();
+        assert_eq!(ld.dataset.len(), 2);
+        assert_eq!(ld.dataset.dim(), 2);
+    }
+
+    #[test]
+    fn csv_ragged_fails() {
+        let dir = std::env::temp_dir().join("sparx_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t3.csv");
+        std::fs::write(&p, "1.0,2.0\n3.0\n").unwrap();
+        assert!(load_csv(&ctx(), &p, None).is_err());
+    }
+
+    #[test]
+    fn libsvm_parse() {
+        let dir = std::env::temp_dir().join("sparx_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.svm");
+        std::fs::write(&p, "+1 3:1.5 1:2.0\n-1 2:0.5\n").unwrap();
+        let ld = load_libsvm(&ctx(), &p, None).unwrap();
+        assert_eq!(ld.dataset.len(), 2);
+        assert_eq!(ld.labels, vec![true, false]);
+        let rows = ld.dataset.rows.collect(&ctx()).unwrap();
+        match &rows[0].features {
+            crate::data::row::Features::Sparse { idx, val } => {
+                assert_eq!(idx, &vec![0, 2]); // sorted, 0-based
+                assert_eq!(val, &vec![2.0, 1.5]);
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Data substrate: mixed-type point-cloud rows, schemas, partitioned
+//! datasets, loaders, the three paper-dataset generators and the
+//! evolving-stream update triples of §2/§3.5.
+
+pub mod dataset;
+pub mod generators;
+pub mod loader;
+pub mod row;
+pub mod stream;
+
+pub use dataset::{Dataset, LabeledDataset, Schema};
+pub use row::{Features, Row, Value};
+pub use stream::StreamGen;
+pub use stream::UpdateTriple;

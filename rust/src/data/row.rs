@@ -1,0 +1,144 @@
+//! Point representation: mixed-type (numeric + categorical) feature
+//! vectors in dense, sparse or name-keyed ("mixed") encodings.
+
+use crate::util::SizeOf;
+
+/// A single feature value — Sparx admits mixed-type data (§1 property v).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Num(f64),
+    Cat(String),
+}
+
+impl SizeOf for Value {
+    fn size_of(&self) -> usize {
+        match self {
+            Value::Num(_) => std::mem::size_of::<Value>(),
+            Value::Cat(s) => std::mem::size_of::<Value>() + s.len(),
+        }
+    }
+}
+
+/// Feature-vector encodings.
+///
+/// * `Dense` — positional f32s over a fixed schema (Gisette/OSM-style).
+/// * `Sparse` — (index, value) pairs over a huge fixed schema
+///   (SpamURL-style; indices strictly increasing).
+/// * `Mixed` — explicit (name, value) pairs incl. categoricals; the
+///   evolving-stream encoding where the feature set is open-ended.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Features {
+    Dense(Vec<f32>),
+    Sparse { idx: Vec<u32>, val: Vec<f32> },
+    Mixed(Vec<(String, Value)>),
+}
+
+impl Features {
+    /// Number of stored (non-zero / present) entries.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Features::Dense(v) => v.len(),
+            Features::Sparse { idx, .. } => idx.len(),
+            Features::Mixed(m) => m.len(),
+        }
+    }
+
+    /// Dense accessor (panics on other encodings — callers know their schema).
+    pub fn as_dense(&self) -> &[f32] {
+        match self {
+            Features::Dense(v) => v,
+            _ => panic!("expected dense features"),
+        }
+    }
+
+    /// L2 norm over numeric content (used by tests/sanity checks).
+    pub fn norm(&self) -> f64 {
+        match self {
+            Features::Dense(v) => v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt(),
+            Features::Sparse { val, .. } => {
+                val.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+            }
+            Features::Mixed(m) => m
+                .iter()
+                .map(|(_, v)| match v {
+                    Value::Num(x) => x * x,
+                    Value::Cat(_) => 1.0,
+                })
+                .sum::<f64>()
+                .sqrt(),
+        }
+    }
+}
+
+impl SizeOf for Features {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Features>()
+            + match self {
+                Features::Dense(v) => v.len() * 4,
+                Features::Sparse { idx, val } => idx.len() * 4 + val.len() * 4,
+                Features::Mixed(m) => m
+                    .iter()
+                    .map(|(n, v)| n.len() + std::mem::size_of::<String>() + v.size_of())
+                    .sum(),
+            }
+    }
+}
+
+/// One point with a stable identifier (update triples address it by ID).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub id: u64,
+    pub features: Features,
+}
+
+impl Row {
+    pub fn dense(id: u64, values: Vec<f32>) -> Self {
+        Row { id, features: Features::Dense(values) }
+    }
+
+    pub fn sparse(id: u64, idx: Vec<u32>, val: Vec<f32>) -> Self {
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "sparse indices must increase");
+        debug_assert_eq!(idx.len(), val.len());
+        Row { id, features: Features::Sparse { idx, val } }
+    }
+
+    pub fn mixed(id: u64, pairs: Vec<(String, Value)>) -> Self {
+        Row { id, features: Features::Mixed(pairs) }
+    }
+}
+
+impl SizeOf for Row {
+    fn size_of(&self) -> usize {
+        8 + self.features.size_of()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nnz_per_encoding() {
+        assert_eq!(Row::dense(0, vec![1.0, 2.0]).features.nnz(), 2);
+        assert_eq!(Row::sparse(0, vec![3, 9], vec![1.0, 2.0]).features.nnz(), 2);
+        assert_eq!(
+            Row::mixed(0, vec![("a".into(), Value::Num(1.0))]).features.nnz(),
+            1
+        );
+    }
+
+    #[test]
+    fn sizeof_scales_with_payload() {
+        let small = Row::dense(0, vec![0.0; 4]).size_of();
+        let big = Row::dense(0, vec![0.0; 400]).size_of();
+        assert!(big > small + 1000);
+    }
+
+    #[test]
+    fn norm_dense_sparse_agree() {
+        let d = Row::dense(0, vec![3.0, 0.0, 4.0]);
+        let s = Row::sparse(0, vec![0, 2], vec![3.0, 4.0]);
+        assert!((d.features.norm() - 5.0).abs() < 1e-9);
+        assert!((s.features.norm() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,145 @@
+//! Evolving-stream update triples ⟨ID, F, δ⟩ (§2, Problem 2).
+//!
+//! * numeric feature: δ ∈ ℝ is a value *increment*;
+//! * categorical feature: δ = old_val → new_val is a value substitution
+//!   (old_val = None for a newly-arising feature).
+
+use crate::util::{Rng, SizeOf};
+
+/// One update triple over the evolving stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UpdateTriple {
+    /// ⟨ID, F, δ⟩ for real-valued F.
+    Num { id: u64, feature: String, delta: f64 },
+    /// ⟨ID, F, old:new⟩ for categorical F (old = None if newly arising).
+    Cat { id: u64, feature: String, old: Option<String>, new: String },
+}
+
+impl UpdateTriple {
+    pub fn id(&self) -> u64 {
+        match self {
+            UpdateTriple::Num { id, .. } | UpdateTriple::Cat { id, .. } => *id,
+        }
+    }
+
+    pub fn feature(&self) -> &str {
+        match self {
+            UpdateTriple::Num { feature, .. } | UpdateTriple::Cat { feature, .. } => feature,
+        }
+    }
+}
+
+impl SizeOf for UpdateTriple {
+    fn size_of(&self) -> usize {
+        match self {
+            UpdateTriple::Num { feature, .. } => 8 + feature.len() + 8,
+            UpdateTriple::Cat { feature, old, new, .. } => {
+                8 + feature.len() + old.as_ref().map_or(0, String::len) + new.len()
+            }
+        }
+    }
+}
+
+/// Synthetic evolving stream for the §3.5 deployment demo: mostly numeric
+/// increments on known features, occasional categorical moves, and a
+/// trickle of *brand-new* features (the paper's motivating case — e.g. a
+/// new attack indicator starts being tracked).
+pub struct StreamGen {
+    pub num_ids: u64,
+    pub base_features: Vec<String>,
+    pub new_feature_rate: f64,
+    pub categorical_rate: f64,
+    rng: Rng,
+    next_new_feature: u64,
+    /// current categorical assignment per (id, feature) — needed to emit
+    /// consistent old:new substitutions
+    cats: std::collections::HashMap<(u64, String), String>,
+}
+
+const CITIES: [&str; 6] = ["NYC", "Austin", "SF", "Chicago", "Boston", "Seattle"];
+
+impl StreamGen {
+    pub fn new(num_ids: u64, base_features: Vec<String>, seed: u64) -> Self {
+        StreamGen {
+            num_ids,
+            base_features,
+            new_feature_rate: 0.01,
+            categorical_rate: 0.1,
+            rng: Rng::new(seed),
+            next_new_feature: 0,
+            cats: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Draw the next update triple.
+    pub fn next_update(&mut self) -> UpdateTriple {
+        let id = self.rng.below(self.num_ids);
+        if self.rng.bool(self.categorical_rate) {
+            let feature = "loc".to_string();
+            let new = CITIES[self.rng.below(CITIES.len() as u64) as usize].to_string();
+            let old = self.cats.insert((id, feature.clone()), new.clone());
+            UpdateTriple::Cat { id, feature, old, new }
+        } else if self.rng.bool(self.new_feature_rate) {
+            // newly-arising numeric feature
+            self.next_new_feature += 1;
+            UpdateTriple::Num {
+                id,
+                feature: format!("new_indicator_{}", self.next_new_feature),
+                delta: self.rng.normal(),
+            }
+        } else {
+            let f = &self.base_features
+                [self.rng.below(self.base_features.len() as u64) as usize];
+            UpdateTriple::Num { id, feature: f.clone(), delta: self.rng.normal() }
+        }
+    }
+}
+
+impl Iterator for StreamGen {
+    type Item = UpdateTriple;
+    fn next(&mut self) -> Option<UpdateTriple> {
+        Some(self.next_update())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_all_kinds() {
+        let mut g = StreamGen::new(100, vec!["a".into(), "b".into()], 1);
+        g.new_feature_rate = 0.2;
+        let updates: Vec<UpdateTriple> = (&mut g).take(500).collect();
+        let nums = updates.iter().filter(|u| matches!(u, UpdateTriple::Num { .. })).count();
+        let cats = updates.iter().filter(|u| matches!(u, UpdateTriple::Cat { .. })).count();
+        assert!(nums > 100);
+        assert!(cats > 10);
+        let new_feats = updates
+            .iter()
+            .filter(|u| u.feature().starts_with("new_indicator"))
+            .count();
+        assert!(new_feats > 0, "no evolving features generated");
+    }
+
+    #[test]
+    fn categorical_substitutions_consistent() {
+        let mut g = StreamGen::new(3, vec!["a".into()], 2);
+        g.categorical_rate = 1.0;
+        let mut current: std::collections::HashMap<u64, String> = Default::default();
+        for u in (&mut g).take(200) {
+            if let UpdateTriple::Cat { id, old, new, .. } = u {
+                assert_eq!(current.get(&id).cloned(), old, "old value must match state");
+                current.insert(id, new);
+            }
+        }
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let g = StreamGen::new(10, vec!["a".into()], 3);
+        for u in g.take(100) {
+            assert!(u.id() < 10);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Fig. 3 (+ appendix tables 6–10): all three methods on the large-n /
+//! 2-d OSM-like workload — F1 versus time and total memory across HP
+//! configurations.
+//!
+//! Paper shape: SPIF can only fit a ~1e-4 sliver and lands at F1 < 0.2;
+//! DBSCOUT is fastest and can reach the best F1 but oscillates wildly
+//! with its HPs; Sparx is stable, slower, and uses the least memory.
+
+use crate::baselines::dbscout::{Dbscout, DbscoutParams};
+use crate::baselines::{Spif, SpifParams};
+use crate::config::presets;
+use crate::metrics::{f1_binary, RankMetrics, ResourceReport};
+use crate::sparx::{SparxModel, SparxParams};
+
+use super::{align_scores, scale, ExpResult, ExpRow};
+
+pub fn run(workload_scale: f64) -> ExpResult {
+    let gen = scale::osm(workload_scale);
+    let mut rows = Vec::new();
+    let mut sparx_f1 = Vec::new();
+    let mut dbscout_f1 = Vec::new();
+    let mut spif_f1: Vec<f64> = Vec::new();
+
+    // --- Sparx: raw 2-d (no projection, paper §4.1.5), paper's OSM grid
+    for &(m, l) in &[(10usize, 5usize), (10, 10), (20, 10), (10, 20)] {
+        let mut ctx = presets::config_gen().build();
+        let ld = gen.generate(&ctx).expect("generate");
+        ctx.reset();
+        let p = SparxParams {
+            k: 0,
+            num_chains: m,
+            depth: l,
+            sample_rate: 0.01,
+            ..Default::default()
+        };
+        let cfg = format!("M={m} L={l} rate=0.01");
+        match SparxModel::fit(&ctx, &ld.dataset, &p)
+            .and_then(|mo| mo.score_dataset(&ctx, &ld.dataset))
+        {
+            Ok(scores) => {
+                let res = ResourceReport::from_ctx(&ctx);
+                let met =
+                    RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+                sparx_f1.push(met.f1);
+                rows.push(ExpRow::ok("Sparx", cfg, Some(met), res));
+            }
+            Err(e) => rows.push(ExpRow::failed("Sparx", cfg, &e.to_string())),
+        }
+    }
+
+    // --- SPIF: tiny fit fractions (it cannot handle more — Table 4)
+    for &(t, l, rate) in &[(50usize, 10usize, 1e-4), (50, 20, 5e-4), (100, 10, 1e-4)] {
+        let mut ctx = presets::config_gen().build();
+        let ld = gen.generate(&ctx).expect("generate");
+        ctx.reset();
+        let p = SpifParams { num_trees: t, max_depth: l, sample_rate: rate, ..Default::default() };
+        let cfg = format!("#comp={t} depth={l} sampl={rate}");
+        match Spif::fit(&ctx, &ld.dataset, &p).and_then(|mo| mo.score_dataset(&ctx, &ld.dataset)) {
+            Ok(scores) => {
+                let res = ResourceReport::from_ctx(&ctx);
+                let met =
+                    RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+                spif_f1.push(met.f1);
+                rows.push(ExpRow::ok("SPIF", cfg, Some(met), res));
+            }
+            Err(e) => rows.push(ExpRow::failed("SPIF", cfg, &e.to_string())),
+        }
+    }
+
+    // --- DBSCOUT: binary output, minPts × eps grid (paper Tables 8–9)
+    for &min_pts in &[16usize, 32] {
+        for &eps in &[0.02f64, 0.05, 0.1, 0.2] {
+            let mut ctx = presets::config_gen().build();
+            let ld = gen.generate(&ctx).expect("generate");
+            ctx.reset();
+            let params = DbscoutParams { eps, min_pts, ..Default::default() };
+            let cfg = format!("minPts={min_pts} eps={eps}");
+            match Dbscout::run(&ctx, &ld.dataset, &params) {
+                Ok(v) => {
+                    let res = ResourceReport::from_ctx(&ctx);
+                    let mut pred = vec![false; ld.labels.len()];
+                    for (id, o) in v.pred {
+                        pred[id as usize] = o;
+                    }
+                    let f1 = f1_binary(&pred, &ld.labels);
+                    dbscout_f1.push(f1);
+                    rows.push(ExpRow {
+                        method: "DBSCOUT".into(),
+                        config: cfg,
+                        auroc: None,
+                        auprc: None,
+                        f1: Some(f1),
+                        status: "ok".into(),
+                        resources: Some(res),
+                    });
+                }
+                Err(e) => rows.push(ExpRow::failed("DBSCOUT", cfg, &e.to_string())),
+            }
+        }
+    }
+
+    let spread = |v: &[f64]| {
+        v.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - v.iter().cloned().fold(f64::INFINITY, f64::min)
+    };
+    let sparx_stable = !sparx_f1.is_empty()
+        && !dbscout_f1.is_empty()
+        && spread(&sparx_f1) < spread(&dbscout_f1);
+    let spif_poor = spif_f1.iter().all(|&f| f < 0.5);
+    let dbscout_competitive = dbscout_f1.iter().cloned().fold(0.0, f64::max)
+        >= sparx_f1.iter().cloned().fold(0.0, f64::max) * 0.7;
+    ExpResult {
+        id: "fig3".into(),
+        title: "OSM-like landscape: F1 vs resources, all methods (config-gen)".into(),
+        rows,
+        checks: vec![
+            ("Sparx F1 more stable across HPs than DBSCOUT (paper: oscillates)".into(), sparx_stable),
+            ("SPIF F1 poor (tiny feasible fit fraction)".into(), spif_poor),
+            ("DBSCOUT competitive at this low d".into(), dbscout_competitive),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig3_smoke() {
+        let r = super::run(0.05);
+        assert!(r.rows.len() >= 10);
+        assert!(r.rows.iter().any(|x| x.method == "DBSCOUT"));
+    }
+}

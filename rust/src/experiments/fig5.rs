@@ -1,0 +1,112 @@
+//! Fig. 5: data-parallel speed-up. Running time of Sparx on Gisette as
+//! the number of DataFrame partitions grows 8 → 256, and speed-up
+//! relative to single-machine xStream (paper: 4–20×, with a U-shaped
+//! runtime curve — over-partitioning re-introduces coordination cost).
+//!
+//! Model HPs per the paper's footnote 12: M=10 chains, depth 5, rate 1.
+
+use crate::baselines::{XStream, XStreamParams};
+use crate::cluster::ClusterConfig;
+use crate::metrics::ResourceReport;
+use crate::sparx::{SparxModel, SparxParams};
+
+use super::{scale, ExpResult, ExpRow};
+
+pub const PARTITIONS: [usize; 6] = [8, 16, 32, 64, 128, 256];
+
+pub fn run(workload_scale: f64) -> ExpResult {
+    let gen = scale::gisette(workload_scale);
+    let sp = SparxParams { k: 50, num_chains: 10, depth: 5, sample_rate: 1.0, ..Default::default() };
+
+    // single-machine xStream baseline (same HPs, same seeds)
+    let base_ctx = ClusterConfig { num_partitions: 1, ..Default::default() }.build();
+    let ld = gen.generate(&base_ctx).expect("generate");
+    let local_rows = ld.dataset.rows.collect(&base_ctx).expect("collect");
+    let xp = XStreamParams {
+        k: sp.k,
+        num_chains: sp.num_chains,
+        depth: sp.depth,
+        cms_rows: sp.cms_rows,
+        cms_cols: sp.cms_cols,
+        density: sp.density,
+        score_mode: sp.score_mode,
+        seed: sp.seed,
+    };
+    let t0 = std::time::Instant::now();
+    let xs = XStream::fit(&local_rows, &ld.dataset.schema.names, &xp);
+    let _ = xs.score(&local_rows);
+    let xstream_secs = t0.elapsed().as_secs_f64();
+
+    let mut rows = vec![ExpRow {
+        method: "xStream (1 machine)".into(),
+        config: "M=10 L=5 rate=1".into(),
+        auroc: None,
+        auprc: None,
+        f1: None,
+        status: "ok".into(),
+        resources: Some(ResourceReport {
+            wall_secs: xstream_secs,
+            network_secs: 0.0,
+            job_secs: xstream_secs,
+            peak_worker_bytes: 0,
+            total_peak_bytes: 0,
+            peak_driver_bytes: 0,
+            shuffle_bytes: 0,
+            shuffle_records: 0,
+            shuffle_rounds: 0,
+        }),
+    }];
+
+    let mut times = Vec::new();
+    for &p in &PARTITIONS {
+        let mut ctx = ClusterConfig {
+            num_partitions: p,
+            num_workers: 8,
+            num_threads: 8,
+            ..Default::default()
+        }
+        .build();
+        let ld = gen.generate(&ctx).expect("generate");
+        ctx.reset();
+        let model = SparxModel::fit(&ctx, &ld.dataset, &sp).expect("fit");
+        let _ = model.score_dataset(&ctx, &ld.dataset).expect("score");
+        let res = ResourceReport::from_ctx(&ctx);
+        times.push(res.job_secs);
+        let speedup = xstream_secs / res.job_secs;
+        rows.push(ExpRow {
+            method: "Sparx".into(),
+            config: format!("partitions={p} (speed-up {speedup:.1}x)"),
+            auroc: None,
+            auprc: None,
+            f1: None,
+            status: "ok".into(),
+            resources: Some(res),
+        });
+    }
+
+    let best = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let best_speedup = xstream_secs / best;
+    let first = times[0];
+    let decreasing_then_flat = times.iter().skip(1).take(3).any(|&t| t < first);
+    ExpResult {
+        id: "fig5".into(),
+        title: "Runtime vs #partitions + speed-up over single-machine xStream".into(),
+        rows,
+        checks: vec![
+            (
+                format!("parallel speed-up over xStream (best {best_speedup:.1}x; paper 4–20x)"),
+                best_speedup > 1.5,
+            ),
+            ("runtime improves beyond 8 partitions before flattening".into(), decreasing_then_flat),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig5_smoke() {
+        let r = super::run(0.03);
+        assert_eq!(r.rows.len(), 1 + super::PARTITIONS.len());
+    }
+}

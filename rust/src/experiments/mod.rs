@@ -1,0 +1,213 @@
+//! Experiment harness: one module per table/figure of the paper's §4.
+//!
+//! Every experiment builds its workload from the generators, runs the
+//! method(s) under the scaled cluster presets (Table 5), and returns
+//! [`ExpRow`]s that render as a markdown table shaped like the paper's.
+//! The CLI (`sparx experiment <id>`) and the bench binaries
+//! (`cargo bench`) both call these entry points.
+//!
+//! | id | paper result | module |
+//! |----|--------------|--------|
+//! | table2 | DBSCOUT vs dimensionality | [`table2`] |
+//! | table3 | Sparx vs SPIF head-to-head (Gisette) | [`table3`] |
+//! | table4 | SPIF vs input size n (OSM) | [`table4`] |
+//! | fig2 | Gisette accuracy-resources landscape (+Fig 7) | [`fig2`] |
+//! | fig3 | OSM landscape, all methods (+T6–T10) | [`fig3`] |
+//! | fig4 | SpamURL landscape, all methods (+T11–T14) | [`fig4`] |
+//! | fig5 | partitions sweep + speed-up vs xStream | [`fig5`] |
+//! | fig6 | linear scaling in n | [`fig6`] |
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod scale;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use crate::metrics::{RankMetrics, ResourceReport};
+
+/// One row of an experiment's result table.
+#[derive(Debug, Clone)]
+pub struct ExpRow {
+    /// Method name ("Sparx", "SPIF", "DBSCOUT", …).
+    pub method: String,
+    /// Hyperparameter / workload description for the row.
+    pub config: String,
+    /// Ranking metrics if the method produced them (DBSCOUT: F1 only).
+    pub auroc: Option<f64>,
+    pub auprc: Option<f64>,
+    pub f1: Option<f64>,
+    /// Outcome: "ok", "MEM ERR", "TIMEOUT".
+    pub status: String,
+    pub resources: Option<ResourceReport>,
+}
+
+impl ExpRow {
+    pub fn ok(
+        method: &str,
+        config: String,
+        metrics: Option<RankMetrics>,
+        resources: ResourceReport,
+    ) -> ExpRow {
+        ExpRow {
+            method: method.into(),
+            config,
+            auroc: metrics.map(|m| m.auroc),
+            auprc: metrics.map(|m| m.auprc),
+            f1: metrics.map(|m| m.f1),
+            status: "ok".into(),
+            resources: Some(resources),
+        }
+    }
+
+    pub fn failed(method: &str, config: String, status: &str) -> ExpRow {
+        ExpRow {
+            method: method.into(),
+            config,
+            auroc: None,
+            auprc: None,
+            f1: None,
+            status: status.into(),
+            resources: None,
+        }
+    }
+}
+
+/// A completed experiment: id, headline, and rows.
+#[derive(Debug, Clone)]
+pub struct ExpResult {
+    pub id: String,
+    pub title: String,
+    pub rows: Vec<ExpRow>,
+    /// Shape notes: invariants checked against the paper's qualitative
+    /// claims ("who wins"), each with a pass flag.
+    pub checks: Vec<(String, bool)>,
+}
+
+fn fmt_opt(x: Option<f64>) -> String {
+    x.map_or("-".into(), |v| format!("{v:.3}"))
+}
+
+impl ExpResult {
+    /// Render as a markdown table (EXPERIMENTS.md format).
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {} — {}\n\n", self.id, self.title);
+        s.push_str("| method | config | AUROC | AUPRC | F1 | time(s) | net(s) | peak-exec(MB) | total-mem(MB) | driver(MB) | shuffled(MB) | status |\n");
+        s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+        for r in &self.rows {
+            let (t, net, pw, tot, dm, sh) = r.resources.map_or(
+                ("-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+                |res| {
+                    (
+                        format!("{:.2}", res.job_secs),
+                        format!("{:.2}", res.network_secs),
+                        format!("{:.1}", res.peak_worker_bytes as f64 / 1048576.0),
+                        format!("{:.1}", res.total_peak_bytes as f64 / 1048576.0),
+                        format!("{:.1}", res.peak_driver_bytes as f64 / 1048576.0),
+                        format!("{:.1}", res.shuffle_bytes as f64 / 1048576.0),
+                    )
+                },
+            );
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                r.method,
+                r.config,
+                fmt_opt(r.auroc),
+                fmt_opt(r.auprc),
+                fmt_opt(r.f1),
+                t,
+                net,
+                pw,
+                tot,
+                dm,
+                sh,
+                r.status
+            ));
+        }
+        if !self.checks.is_empty() {
+            s.push_str("\nShape checks vs the paper:\n\n");
+            for (what, pass) in &self.checks {
+                s.push_str(&format!("- [{}] {}\n", if *pass { "x" } else { " " }, what));
+            }
+        }
+        s
+    }
+}
+
+/// Helper: ids+scores → dense score vector aligned with labels.
+pub fn align_scores(scores: &[(u64, f64)], n: usize) -> Vec<f64> {
+    let mut out = vec![f64::NEG_INFINITY; n];
+    for &(id, s) in scores {
+        out[id as usize] = s;
+    }
+    out
+}
+
+/// Run an experiment by id ("all" runs everything).
+pub fn run(id: &str, scale: f64) -> Vec<ExpResult> {
+    match id {
+        "table2" => vec![table2::run(scale)],
+        "table3" => vec![table3::run(scale)],
+        "table4" => vec![table4::run(scale)],
+        "fig2" => vec![fig2::run(scale, true), fig2::run(scale, false)],
+        "fig3" => vec![fig3::run(scale)],
+        "fig4" => vec![fig4::run(scale)],
+        "fig5" => vec![fig5::run(scale)],
+        "fig6" => vec![fig6::run(scale)],
+        "all" => {
+            let mut all = Vec::new();
+            for e in ["table2", "table3", "table4", "fig2", "fig3", "fig4", "fig5", "fig6"] {
+                all.extend(run(e, scale));
+            }
+            all
+        }
+        other => panic!("unknown experiment {other:?} (see DESIGN.md for ids)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_renders_failures_and_metrics() {
+        let res = ExpResult {
+            id: "tX".into(),
+            title: "demo".into(),
+            rows: vec![
+                ExpRow::ok(
+                    "Sparx",
+                    "M=10".into(),
+                    Some(crate::metrics::RankMetrics { auroc: 0.9, auprc: 0.5, f1: 0.4 }),
+                    crate::metrics::ResourceReport {
+                        wall_secs: 1.0,
+                        network_secs: 0.5,
+                        job_secs: 1.5,
+                        peak_worker_bytes: 1048576,
+                        total_peak_bytes: 2097152,
+                        peak_driver_bytes: 1048576,
+                        shuffle_bytes: 1048576,
+                        shuffle_records: 10,
+                        shuffle_rounds: 2,
+                    },
+                ),
+                ExpRow::failed("SPIF", "rate=1".into(), "MEM ERR"),
+            ],
+            checks: vec![("sparx wins".into(), true)],
+        };
+        let md = res.to_markdown();
+        assert!(md.contains("| Sparx | M=10 | 0.900 | 0.500 | 0.400 | 1.50 |"));
+        assert!(md.contains("| SPIF | rate=1 | - | - | - | - | - | - | - | - | - | MEM ERR |"));
+        assert!(md.contains("- [x] sparx wins"));
+    }
+
+    #[test]
+    fn align_scores_places_by_id() {
+        let s = align_scores(&[(2, 0.5), (0, 1.5)], 3);
+        assert_eq!(s[0], 1.5);
+        assert_eq!(s[2], 0.5);
+    }
+}

@@ -1,0 +1,52 @@
+//! Workload scaling shared by all experiments.
+//!
+//! `scale = 1.0` is the repository's default laptop-scale substitution of
+//! the paper's datasets (DESIGN.md §Substitutions). Bench binaries run at
+//! a smaller scale so `cargo bench` completes in minutes; the CLI default
+//! is 1.0. All counts scale linearly, dimensions stay fixed (they change
+//! the *problem*, not just its size).
+
+use crate::data::generators::{GisetteGen, OsmGen, SpamUrlGen};
+
+pub fn gisette(scale: f64) -> GisetteGen {
+    GisetteGen {
+        n: ((8_000.0 * scale) as usize).max(400),
+        d: 512,
+        ..Default::default()
+    }
+}
+
+pub fn osm(scale: f64) -> OsmGen {
+    OsmGen {
+        n_inliers: ((400_000.0 * scale) as usize).max(20_000),
+        n_outliers: ((400.0 * scale) as usize).max(40),
+        roads: 120,
+        cities: 30,
+        ..Default::default()
+    }
+}
+
+pub fn spamurl(scale: f64) -> SpamUrlGen {
+    SpamUrlGen {
+        n: ((20_000.0 * scale) as usize).max(1_000),
+        d: 100_000,
+        mean_nnz: 120,
+        ..Default::default()
+    }
+}
+
+/// Scale read from `SPARX_SCALE` (benches honour it), default `dflt`.
+pub fn from_env(dflt: f64) -> f64 {
+    std::env::var("SPARX_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(dflt)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn scaling_monotone() {
+        assert!(super::gisette(2.0).n > super::gisette(1.0).n);
+        assert!(super::osm(0.5).n_inliers < super::osm(1.0).n_inliers);
+        // floors protect tiny scales from degenerate workloads
+        assert!(super::spamurl(0.0001).n >= 1000);
+    }
+}

@@ -1,0 +1,95 @@
+//! Hashing substrate: Murmur3-x86-32, the {+1, −1, 0} sparse sign-hash
+//! family of Eq. (2), and the count-min-sketch row hashes.
+
+pub mod murmur;
+pub mod sign;
+
+pub use murmur::{murmur3_32, murmur3_bytes};
+pub use sign::SignHasher;
+
+/// Hash a K-dimensional integer bin id (paper's \bar z_l ∈ Z^K) to a
+/// 64-bit key, order-sensitively, without allocating. Used both for the
+/// CMS bucket hashing and for the exact-dictionary reference counter.
+#[inline]
+pub fn bin_id_hash(bin: &[i32], seed: u32) -> u64 {
+    // two murmur passes with decorrelated seeds → 64-bit key, which makes
+    // accidental full-key collisions negligible for the exact counter.
+    let lo = murmur::murmur3_i32_slice(bin, seed);
+    let hi = murmur::murmur3_i32_slice(bin, seed ^ 0x9E37_79B9);
+    ((hi as u64) << 32) | lo as u64
+}
+
+/// The CMS row hashes use Kirsch–Mitzenmacher double hashing: one murmur
+/// pair per bin id, then `bucket_i = (h1 + i·h2) mod w`. Equivalent
+/// independence guarantees for count-min at a tenth of the hashing cost —
+/// this is the §Perf optimization that removed r-fold rehashing from both
+/// the counting and the scoring hot loops (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BinHash {
+    pub h1: u64,
+    pub h2: u64,
+}
+
+/// Hash a bin id once; rows derive their buckets from this pair.
+#[inline]
+pub fn bin_hash(bin: &[i32]) -> BinHash {
+    let h1 = murmur::murmur3_i32_slice(bin, 0xCAFE_0001) as u64;
+    // force h2 odd so consecutive rows never collapse onto one bucket
+    let h2 = (murmur::murmur3_i32_slice(bin, 0x5EED_5EED) as u64) | 1;
+    BinHash { h1, h2 }
+}
+
+/// CMS bucket index for hash-table row `row` of width `w`.
+#[inline]
+pub fn cms_bucket_from(h: BinHash, row: u32, w: usize) -> usize {
+    (h.h1.wrapping_add((row as u64).wrapping_mul(h.h2)) % w as u64) as usize
+}
+
+/// One-shot convenience (hashes `bin` then derives the bucket).
+#[inline]
+pub fn cms_bucket(bin: &[i32], row: u32, w: usize) -> usize {
+    cms_bucket_from(bin_hash(bin), row, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_id_hash_order_sensitive() {
+        let a = bin_id_hash(&[1, 2, 3], 0);
+        let b = bin_id_hash(&[3, 2, 1], 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn bin_id_hash_seed_sensitive() {
+        let a = bin_id_hash(&[1, 2, 3], 0);
+        let b = bin_id_hash(&[1, 2, 3], 1);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn cms_bucket_in_range() {
+        for row in 0..10 {
+            for v in 0..100 {
+                let b = cms_bucket(&[v, -v, v * 7], row, 97);
+                assert!(b < 97);
+            }
+        }
+    }
+
+    #[test]
+    fn cms_rows_decorrelated() {
+        // same bin must not hash to the same bucket in every row
+        let mut same = 0;
+        for v in 0..200 {
+            let b0 = cms_bucket(&[v, v + 1], 0, 100);
+            let b1 = cms_bucket(&[v, v + 1], 1, 100);
+            if b0 == b1 {
+                same += 1;
+            }
+        }
+        assert!(same < 20, "rows correlated: {same}/200 equal");
+    }
+}

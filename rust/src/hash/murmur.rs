@@ -1,0 +1,114 @@
+//! Murmur3 x86 32-bit — the workhorse hash. Hand-rolled (no deps) and
+//! verified against the reference vectors of the original C++
+//! implementation (Austin Appleby, public domain).
+
+#[inline(always)]
+fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    h
+}
+
+/// Murmur3-x86-32 over raw bytes.
+pub fn murmur3_bytes(data: &[u8], seed: u32) -> u32 {
+    const C1: u32 = 0xCC9E_2D51;
+    const C2: u32 = 0x1B87_3593;
+    let mut h1 = seed;
+    let chunks = data.chunks_exact(4);
+    let tail = chunks.remainder();
+    for chunk in chunks {
+        let mut k1 = u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1.rotate_left(13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xE654_6B64);
+    }
+    let mut k1: u32 = 0;
+    if !tail.is_empty() {
+        for (i, &b) in tail.iter().enumerate() {
+            k1 ^= (b as u32) << (8 * i);
+        }
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+    }
+    h1 ^= data.len() as u32;
+    fmix32(h1)
+}
+
+/// Murmur3-x86-32 over a UTF-8 string.
+#[inline]
+pub fn murmur3_32(s: &str, seed: u32) -> u32 {
+    murmur3_bytes(s.as_bytes(), seed)
+}
+
+/// Murmur3 over an i32 slice without copying (block-wise LE words).
+#[inline]
+pub fn murmur3_i32_slice(xs: &[i32], seed: u32) -> u32 {
+    const C1: u32 = 0xCC9E_2D51;
+    const C2: u32 = 0x1B87_3593;
+    let mut h1 = seed;
+    for &x in xs {
+        let mut k1 = x as u32;
+        k1 = k1.wrapping_mul(C1);
+        k1 = k1.rotate_left(15);
+        k1 = k1.wrapping_mul(C2);
+        h1 ^= k1;
+        h1 = h1.rotate_left(13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xE654_6B64);
+    }
+    h1 ^= (xs.len() * 4) as u32;
+    fmix32(h1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference vectors from the canonical MurmurHash3 C++ implementation.
+    #[test]
+    fn reference_vectors() {
+        assert_eq!(murmur3_bytes(b"", 0), 0);
+        assert_eq!(murmur3_bytes(b"", 1), 0x514E_28B7);
+        assert_eq!(murmur3_bytes(b"", 0xFFFF_FFFF), 0x81F1_6F39);
+        assert_eq!(murmur3_bytes(b"\xFF\xFF\xFF\xFF", 0), 0x7629_3B50);
+        assert_eq!(murmur3_bytes(b"!Ce\x87", 0), 0xF55B_516B);
+        assert_eq!(murmur3_bytes(b"!Ce", 0), 0x7E4A_8634);
+        assert_eq!(murmur3_bytes(b"!C", 0), 0xA0F7_B07A);
+        assert_eq!(murmur3_bytes(b"!", 0), 0x72661CF4);
+        assert_eq!(murmur3_bytes(b"\0\0\0\0", 0), 0x2362_F9DE);
+        assert_eq!(murmur3_32("Hello, world!", 1234), 0xFAF6_CDB3);
+        assert_eq!(murmur3_32("Hello, world!", 4321), 0xBF50_5788);
+    }
+
+    #[test]
+    fn i32_slice_matches_bytes() {
+        let xs = [1i32, -2, 300000, i32::MIN, i32::MAX];
+        let mut bytes = Vec::new();
+        for x in xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        for seed in [0u32, 1, 0xDEAD_BEEF] {
+            assert_eq!(murmur3_i32_slice(&xs, seed), murmur3_bytes(&bytes, seed));
+        }
+    }
+
+    #[test]
+    fn avalanche_rough_check() {
+        // flipping one input bit should flip ~half the output bits on average
+        let base = murmur3_bytes(&42u64.to_le_bytes(), 0);
+        let mut total = 0u32;
+        for bit in 0..64 {
+            let v = 42u64 ^ (1 << bit);
+            total += (murmur3_bytes(&v.to_le_bytes(), 0) ^ base).count_ones();
+        }
+        let avg = total as f64 / 64.0;
+        assert!((10.0..22.0).contains(&avg), "weak avalanche: {avg}");
+    }
+}

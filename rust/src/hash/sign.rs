@@ -1,0 +1,175 @@
+//! The sparse sign-hash family of Eq. (2) / Achlioptas projections.
+//!
+//! Each of the K hash functions h_k maps a string (feature name, or
+//! name⊕value for categoricals) to {+1, −1, 0} with probabilities
+//! {1/6, 1/6, 2/3} (density 1/3). The *same* seeds are shared by every
+//! worker so all points land in one embedding space (Algorithm 1, Line 1),
+//! and entries of the implicit random matrix R are recomputed on the fly —
+//! "not to cash, but to hash" — which is what lets evolving streams add
+//! features without coordination.
+
+
+/// One sign-hash function h_k; density is the probability of a non-zero.
+#[derive(Debug, Clone, Copy)]
+pub struct SignHasher {
+    seed: u32,
+    /// Non-zero probability (paper: 1/3).
+    density: f64,
+}
+
+impl SignHasher {
+    pub fn new(seed: u32, density: f64) -> Self {
+        assert!((0.0..=1.0).contains(&density));
+        SignHasher { seed, density }
+    }
+
+    /// The family {h_1 .. h_K} with seeds 0..K (Algorithm 1, Line 1).
+    pub fn family(k: usize, density: f64) -> Vec<SignHasher> {
+        (0..k as u32).map(|s| SignHasher::new(s, density)).collect()
+    }
+
+    /// h_k(str) ∈ {+1, −1, 0}: uses the top 53 bits of a 64-bit mix of two
+    /// murmur passes as a uniform u ∈ [0,1); u < density/2 → +1,
+    /// u < density → −1, else 0.
+    #[inline]
+    pub fn hash_str(&self, s: &str) -> f32 {
+        self.hash_bytes(s.as_bytes())
+    }
+
+    #[inline]
+    pub fn hash_bytes(&self, b: &[u8]) -> f32 {
+        let lo = super::murmur::murmur3_bytes(b, self.seed.wrapping_mul(2654435761).wrapping_add(1)) as u64;
+        let hi = super::murmur::murmur3_bytes(b, self.seed ^ 0xA5A5_5A5A) as u64;
+        let u = (((hi << 32) | lo) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u < self.density / 2.0 {
+            1.0
+        } else if u < self.density {
+            -1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Convenience: h_k over a feature name only (numeric features).
+    #[inline]
+    pub fn feature(&self, name: &str) -> f32 {
+        self.hash_str(name)
+    }
+
+    /// h_k over name ⊕ value (categorical features / OHE columns).
+    /// Avoids building the concatenated String: hashes a streaming
+    /// concatenation through a small stack buffer when possible.
+    #[inline]
+    pub fn feature_value(&self, name: &str, value: &str) -> f32 {
+        let need = name.len() + 1 + value.len();
+        let mut stack = [0u8; 96];
+        if need <= stack.len() {
+            stack[..name.len()].copy_from_slice(name.as_bytes());
+            stack[name.len()] = 0x1F; // unit separator avoids "ab"+"c" == "a"+"bc"
+            stack[name.len() + 1..need].copy_from_slice(value.as_bytes());
+            self.hash_bytes(&stack[..need])
+        } else {
+            let mut buf = Vec::with_capacity(need);
+            buf.extend_from_slice(name.as_bytes());
+            buf.push(0x1F);
+            buf.extend_from_slice(value.as_bytes());
+            self.hash_bytes(&buf)
+        }
+    }
+
+    pub fn seed(&self) -> u32 {
+        self.seed
+    }
+}
+
+/// Materialise the implicit projection matrix R[D,K] for a *fixed* dense
+/// schema (feature names = column identifiers). Used to feed the AOT
+/// projection artifact, whose matmul then matches the hash-based Eq. (2)
+/// path exactly (tested in `sparx::projector`).
+pub fn materialize_r(feature_names: &[String], hashers: &[SignHasher]) -> Vec<f32> {
+    let d = feature_names.len();
+    let k = hashers.len();
+    let mut r = vec![0f32; d * k];
+    for (fi, name) in feature_names.iter().enumerate() {
+        for (ki, h) in hashers.iter().enumerate() {
+            r[fi * k + ki] = h.feature(name);
+        }
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let h = SignHasher::new(3, 1.0 / 3.0);
+        assert_eq!(h.hash_str("featX"), h.hash_str("featX"));
+    }
+
+    #[test]
+    fn distribution_matches_density() {
+        let h = SignHasher::new(0, 1.0 / 3.0);
+        let n = 60_000;
+        let mut pos = 0;
+        let mut neg = 0;
+        let mut zero = 0;
+        for i in 0..n {
+            match h.hash_str(&format!("f{i}")) as i32 {
+                1 => pos += 1,
+                -1 => neg += 1,
+                0 => zero += 1,
+                _ => unreachable!(),
+            }
+        }
+        let nf = n as f64;
+        assert!((pos as f64 / nf - 1.0 / 6.0).abs() < 0.01, "pos {pos}");
+        assert!((neg as f64 / nf - 1.0 / 6.0).abs() < 0.01, "neg {neg}");
+        assert!((zero as f64 / nf - 2.0 / 3.0).abs() < 0.01, "zero {zero}");
+    }
+
+    #[test]
+    fn family_members_independent() {
+        let fam = SignHasher::family(8, 1.0 / 3.0);
+        // same input must not produce identical sign across all k
+        let signs: Vec<f32> = fam.iter().map(|h| h.hash_str("some-feature")).collect();
+        let all_same = signs.windows(2).all(|w| w[0] == w[1]);
+        assert!(!all_same, "{signs:?}");
+    }
+
+    #[test]
+    fn concat_separator_prevents_aliasing() {
+        let h = SignHasher::new(1, 1.0);
+        // density 1 → every hash is ±1; aliased inputs would often collide
+        let mut diff = 0;
+        for i in 0..200 {
+            let a = h.feature_value(&format!("ab{i}"), "c");
+            let b = h.feature_value(&format!("a{i}"), "bc");
+            if a != b {
+                diff += 1;
+            }
+        }
+        assert!(diff > 50, "aliasing suspected: only {diff}/200 differ");
+    }
+
+    #[test]
+    fn feature_value_long_strings() {
+        let h = SignHasher::new(2, 1.0 / 3.0);
+        let long = "x".repeat(300);
+        // must not panic, and must be deterministic
+        assert_eq!(h.feature_value(&long, &long), h.feature_value(&long, &long));
+    }
+
+    #[test]
+    fn materialize_matches_hash() {
+        let names: Vec<String> = (0..10).map(|i| format!("c{i}")).collect();
+        let fam = SignHasher::family(4, 1.0 / 3.0);
+        let r = materialize_r(&names, &fam);
+        for (fi, name) in names.iter().enumerate() {
+            for (ki, h) in fam.iter().enumerate() {
+                assert_eq!(r[fi * 4 + ki], h.feature(name));
+            }
+        }
+    }
+}

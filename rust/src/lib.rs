@@ -1,0 +1,47 @@
+//! # Sparx — Distributed Outlier Detection at Scale (KDD '22), reproduced
+//!
+//! A three-layer reproduction of *Sparx: Distributed Outlier Detection at
+//! Scale* (Zhang, Ursekar & Akoglu, KDD 2022):
+//!
+//! * **L3 (this crate)** — the paper's system contribution: a shared-nothing
+//!   cluster runtime ([`cluster`]) with accounted shuffles and per-worker
+//!   memory budgets, the two-pass data-parallel Sparx algorithm ([`sparx`]),
+//!   the SPIF / DBSCOUT / single-machine-xStream comparators ([`baselines`]),
+//!   dataset substrates ([`data`]), evaluation metrics ([`metrics`]) and the
+//!   paper's full experiment suite ([`experiments`]).
+//! * **L2/L1 (python/, build-time only)** — the per-tile numeric hot path
+//!   (sketch projection and half-space-chain binning) written in JAX +
+//!   Pallas, AOT-lowered to HLO text and executed from the worker hot path
+//!   through the PJRT CPU client ([`runtime`]). Python never runs at
+//!   request time.
+//!
+//! See `DESIGN.md` for the system inventory and the paper→repo experiment
+//! index, and `EXPERIMENTS.md` for measured results.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use sparx::config::presets;
+//! use sparx::data::generators::gisette::GisetteGen;
+//! use sparx::sparx::{SparxParams, SparxModel};
+//!
+//! let cluster = presets::config_mod().build();
+//! let data = GisetteGen::default().generate(&cluster).unwrap();
+//! let model = SparxModel::fit(&cluster, &data.dataset, &SparxParams::default()).unwrap();
+//! let scores = model.score_dataset(&cluster, &data.dataset).unwrap();
+//! ```
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod hash;
+pub mod metrics;
+pub mod runtime;
+pub mod sparx;
+pub mod util;
+
+pub use cluster::{ClusterConfig, ClusterContext, ClusterError};
+pub use sparx::{SparxModel, SparxParams};
+

@@ -1,0 +1,282 @@
+//! `sparx` — CLI launcher for the Sparx reproduction.
+//!
+//! Subcommands (hand-rolled parser — the offline build has no clap):
+//!
+//! ```text
+//! sparx detect --dataset gisette|osm|spamurl [--config gen|mod|local]
+//!              [--chains M] [--depth L] [--rate R] [--k K] [--scale S]
+//!              [--backend native|pjrt] [--out scores.csv]
+//! sparx experiment <table2|table3|table4|fig2|fig3|fig4|fig5|fig6|all>
+//!              [--scale S] [--out EXPERIMENTS_RESULTS.md]
+//! sparx stream   [--updates N] [--cache N]       # §3.5 evolving-stream demo
+//! sparx generate --dataset osm --out points.csv  # dump a synthetic dataset
+//! sparx info                                     # artifacts + presets
+//! ```
+
+use std::collections::HashMap;
+
+use sparx::config::presets;
+use sparx::data::generators::{GisetteGen, OsmGen, SpamUrlGen};
+use sparx::data::{LabeledDataset, StreamGen};
+use sparx::experiments;
+use sparx::metrics::{RankMetrics, ResourceReport};
+use sparx::runtime::{ArtifactManifest, PjrtBinner, PjrtEngine};
+use sparx::sparx::{NativeBinner, SparxModel, SparxParams, StreamScorer};
+use sparx::ClusterContext;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".into());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn flag_f64(flags: &HashMap<String, String>, k: &str, d: f64) -> f64 {
+    flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn flag_usize(flags: &HashMap<String, String>, k: &str, d: usize) -> usize {
+    flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn make_dataset(name: &str, scale: f64, ctx: &ClusterContext) -> LabeledDataset {
+    match name {
+        "gisette" => GisetteGen {
+            n: (8000.0 * scale) as usize,
+            d: 512,
+            ..Default::default()
+        }
+        .generate(ctx)
+        .expect("generate"),
+        "osm" => OsmGen {
+            n_inliers: (400_000.0 * scale) as usize,
+            n_outliers: (400.0 * scale).max(20.0) as usize,
+            ..Default::default()
+        }
+        .generate(ctx)
+        .expect("generate"),
+        "spamurl" => SpamUrlGen {
+            n: (20_000.0 * scale) as usize,
+            ..Default::default()
+        }
+        .generate(ctx)
+        .expect("generate"),
+        other => {
+            eprintln!("unknown dataset {other:?} (gisette|osm|spamurl)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_detect(flags: &HashMap<String, String>) {
+    let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "gisette".into());
+    let scale = flag_f64(flags, "scale", 0.5);
+    let cfg_name = flags.get("config").cloned().unwrap_or_else(|| "local".into());
+    let mut ctx = presets::by_name(&cfg_name)
+        .unwrap_or_else(|| {
+            eprintln!("unknown config {cfg_name:?}");
+            std::process::exit(2);
+        })
+        .build();
+    let ld = make_dataset(&dataset, scale, &ctx);
+    println!(
+        "dataset={dataset} n={} d={} outliers={} ({:.3}%)",
+        ld.dataset.len(),
+        ld.dataset.dim(),
+        ld.outlier_count(),
+        100.0 * ld.outlier_rate()
+    );
+    ctx.reset();
+    let default_k = if dataset == "osm" {
+        0
+    } else if dataset == "spamurl" {
+        100
+    } else {
+        50
+    };
+    let params = SparxParams {
+        k: flag_usize(flags, "k", default_k),
+        num_chains: flag_usize(flags, "chains", 50),
+        depth: flag_usize(flags, "depth", 10),
+        sample_rate: flag_f64(flags, "rate", 0.1),
+        ..Default::default()
+    };
+    let backend = flags.get("backend").map(String::as_str).unwrap_or("native");
+    let engine;
+    let pjrt_binner;
+    let binner: &dyn sparx::sparx::Binner = if backend == "pjrt" {
+        engine = PjrtEngine::start_default().unwrap_or_else(|e| {
+            eprintln!("PJRT engine: {e}");
+            std::process::exit(1);
+        });
+        let variant = match dataset.as_str() {
+            "osm" => "osm",
+            "spamurl" => "spamurl",
+            _ => "gisette",
+        };
+        pjrt_binner = PjrtBinner { engine: &engine, variant: variant.into() };
+        &pjrt_binner
+    } else {
+        &NativeBinner
+    };
+    let model = SparxModel::fit_with(&ctx, &ld.dataset, &params, binner).expect("fit");
+    let proj =
+        sparx::sparx::project_dataset(&ctx, &ld.dataset, &model.projector).expect("project");
+    let scores = model.score_sketches_with(&ctx, &proj, binner).expect("score");
+    let res = ResourceReport::from_ctx(&ctx);
+    let aligned = experiments::align_scores(&scores, ld.labels.len());
+    let met = RankMetrics::compute(&aligned, &ld.labels);
+    println!(
+        "Sparx[{backend}] M={} L={} rate={} K={}: AUROC={:.3} AUPRC={:.3} F1={:.3}",
+        params.num_chains, params.depth, params.sample_rate, params.k, met.auroc, met.auprc, met.f1
+    );
+    println!("{}", res.summary());
+    if let Some(out) = flags.get("out") {
+        sparx::data::loader::write_scores_csv(out, &scores, &ld.labels).expect("write");
+        println!("scores written to {out}");
+    }
+}
+
+fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) {
+    let id = pos.first().map(String::as_str).unwrap_or("all");
+    let scale = flag_f64(flags, "scale", 1.0);
+    let results = experiments::run(id, scale);
+    let mut md = String::new();
+    for r in &results {
+        let table = r.to_markdown();
+        println!("{table}");
+        md.push_str(&table);
+        md.push('\n');
+    }
+    if let Some(out) = flags.get("out") {
+        std::fs::write(out, md).expect("write results");
+        println!("results written to {out}");
+    }
+}
+
+fn cmd_stream(flags: &HashMap<String, String>) {
+    let updates = flag_usize(flags, "updates", 10_000);
+    let cache = flag_usize(flags, "cache", 1024);
+    let ctx = presets::config_local().build();
+    let ld = make_dataset("gisette", 0.2, &ctx);
+    let params = SparxParams { k: 25, num_chains: 20, depth: 8, ..Default::default() };
+    let model = SparxModel::fit(&ctx, &ld.dataset, &params).expect("fit");
+    let mut scorer = StreamScorer::new(&model, cache).expect("stream scorer");
+    let names = ld.dataset.schema.names.clone();
+    let mut gen = StreamGen::new(5000, names, 42);
+    let t0 = std::time::Instant::now();
+    let mut worst: Option<sparx::sparx::StreamScore> = None;
+    for _ in 0..updates {
+        let u = gen.next_update();
+        let s = scorer.update(&u);
+        if worst.as_ref().map_or(true, |w| s.outlierness > w.outlierness) {
+            worst = Some(s);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "processed {updates} δ-updates in {dt:.3}s ({:.0}/s), cache={}/{} evictions={}",
+        updates as f64 / dt,
+        scorer.cached_ids(),
+        cache,
+        scorer.evictions()
+    );
+    if let Some(w) = worst {
+        println!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness);
+    }
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) {
+    let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "osm".into());
+    let scale = flag_f64(flags, "scale", 0.1);
+    let out = flags.get("out").cloned().unwrap_or_else(|| format!("{dataset}.csv"));
+    let ctx = presets::config_local().build();
+    let ld = make_dataset(&dataset, scale, &ctx);
+    let rows = ld.dataset.rows.collect(&ctx).expect("collect");
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&out).expect("create"));
+    let names = ld.dataset.schema.names.join(",");
+    writeln!(f, "{names},label").unwrap();
+    for r in rows {
+        match &r.features {
+            sparx::data::Features::Dense(v) => {
+                let cells: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+                writeln!(f, "{},{}", cells.join(","), u8::from(ld.labels[r.id as usize]))
+                    .unwrap();
+            }
+            _ => {
+                eprintln!("generate: only dense datasets can be dumped to csv");
+                std::process::exit(2);
+            }
+        }
+    }
+    println!("wrote {} rows to {out}", ld.dataset.len());
+}
+
+fn cmd_info() {
+    println!("sparx — distributed outlier detection (KDD'22 reproduction)");
+    println!("\ncluster presets (Table 5, scaled):");
+    for name in ["config-mod", "config-gen", "local"] {
+        let c = presets::by_name(name).unwrap();
+        println!(
+            "  {name}: partitions={} workers={} threads={} exec-mem={}MB deadline={:?}s",
+            c.num_partitions,
+            c.num_workers,
+            c.num_threads,
+            if c.worker_mem_bytes == usize::MAX { 0 } else { c.worker_mem_bytes / 1048576 },
+            c.deadline_secs
+        );
+    }
+    print!("\nAOT artifacts: ");
+    match ArtifactManifest::load(&sparx::runtime::default_artifact_dir()) {
+        Ok(m) => {
+            println!("{} compiled modules", m.entries.len());
+            for e in &m.entries {
+                println!("  {}/{} b={} d={} k={} l={}", e.kind, e.name, e.b, e.d, e.k, e.l);
+            }
+            match PjrtEngine::start(&m) {
+                Ok(_) => println!("PJRT CPU engine: OK"),
+                Err(e) => println!("PJRT CPU engine: FAILED ({e})"),
+            }
+        }
+        Err(e) => println!("not built ({e})"),
+    }
+    println!("\nDBSCOUT neighbourhood sizes (2⌈√d⌉+1)^d:");
+    for d in [2usize, 6, 10, 11] {
+        println!(
+            "  d={d}: {:.2e} cells",
+            sparx::baselines::dbscout::CostModel::neighbourhood_cells(d)
+        );
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    match pos.first().map(String::as_str) {
+        Some("detect") => cmd_detect(&flags),
+        Some("experiment") => cmd_experiment(&pos[1..], &flags),
+        Some("stream") => cmd_stream(&flags),
+        Some("generate") => cmd_generate(&flags),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: sparx <detect|experiment|stream|generate|info> [flags]");
+            eprintln!("see `sparx info` and the module docs in rust/src/main.rs");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation metrics (§4.1.3): AUROC, AUPRC, F1, plus the resource
+//! report that pairs them with time / memory / network for the
+//! accuracy-vs-resources landscapes (Figs. 2–4).
+
+pub mod ranking;
+pub mod report;
+
+pub use ranking::{auprc, auroc, f1_at_rate, f1_binary, RankMetrics};
+pub use report::ResourceReport;

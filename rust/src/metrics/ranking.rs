@@ -1,0 +1,215 @@
+//! Ranking-quality metrics. Scores follow the convention *higher = more
+//! outlying*. Ties are handled properly (mid-rank for AUROC, grouped
+//! thresholds for AUPRC/F1), which matters because CMS counts are integers
+//! and produce heavily tied score distributions.
+
+/// Area under the ROC curve via the Mann–Whitney U statistic with
+/// mid-ranks for ties. O(n log n).
+pub fn auroc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return f64::NAN;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // mid-rank sum of positives
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let mid_rank = (i + j) as f64 / 2.0 + 1.0; // 1-based
+        for &idx in &order[i..=j] {
+            if labels[idx] {
+                rank_sum_pos += mid_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Area under the precision-recall curve (step-wise interpolation, the
+/// `sklearn.metrics.average_precision_score` definition).
+pub fn auprc(scores: &[f64], labels: &[bool]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&l| l).count();
+    if n_pos == 0 {
+        return f64::NAN;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut ap = 0.0f64;
+    let mut tp = 0usize;
+    let mut seen = 0usize;
+    let mut i = 0;
+    // process tied groups together: precision measured at group boundary
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let group_pos = order[i..=j].iter().filter(|&&idx| labels[idx]).count();
+        let prev_tp = tp;
+        tp += group_pos;
+        seen = j + 1;
+        if group_pos > 0 {
+            let precision = tp as f64 / seen as f64;
+            ap += precision * (tp - prev_tp) as f64 / n_pos as f64;
+        }
+        i = j + 1;
+    }
+    debug_assert_eq!(seen, order.len());
+    ap
+}
+
+/// F1 for an already-binary prediction (DBSCOUT outputs binary labels).
+pub fn f1_binary(pred: &[bool], labels: &[bool]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut fne = 0usize;
+    for (&p, &l) in pred.iter().zip(labels) {
+        match (p, l) {
+            (true, true) => tp += 1,
+            (true, false) => fp += 1,
+            (false, true) => fne += 1,
+            _ => {}
+        }
+    }
+    if tp == 0 {
+        return 0.0;
+    }
+    let prec = tp as f64 / (tp + fp) as f64;
+    let rec = tp as f64 / (tp + fne) as f64;
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// F1 after thresholding scores at the contamination rate: the top
+/// `rate·n` scored points are predicted outliers (standard protocol for
+/// score-ranking detectors when a single F1 number is needed, ties broken
+/// by index like numpy argsort).
+pub fn f1_at_rate(scores: &[f64], labels: &[bool], rate: f64) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let k = ((scores.len() as f64 * rate).round() as usize).clamp(1, scores.len());
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut pred = vec![false; scores.len()];
+    for &i in &order[..k] {
+        pred[i] = true;
+    }
+    f1_binary(&pred, labels)
+}
+
+/// Bundle of all three metrics for the result tables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankMetrics {
+    pub auroc: f64,
+    pub auprc: f64,
+    pub f1: f64,
+}
+
+impl RankMetrics {
+    /// Compute at the dataset's true contamination rate (the paper's
+    /// protocol: detectors are compared on ranking + top-rate F1).
+    pub fn compute(scores: &[f64], labels: &[bool]) -> RankMetrics {
+        let rate = labels.iter().filter(|&&l| l).count() as f64 / labels.len().max(1) as f64;
+        RankMetrics {
+            auroc: auroc(scores, labels),
+            auprc: auprc(scores, labels),
+            f1: f1_at_rate(scores, labels, rate.max(1e-9)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auroc_perfect_and_inverted() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [false, false, true, true];
+        assert_eq!(auroc(&scores, &labels), 1.0);
+        let inv = [false, false, true, true];
+        let scores_inv = [0.9, 0.8, 0.2, 0.1];
+        assert_eq!(auroc(&scores_inv, &inv), 0.0);
+    }
+
+    #[test]
+    fn auroc_random_is_half() {
+        // all scores equal → AUROC 0.5 by mid-rank convention
+        let scores = [0.5; 100];
+        let labels: Vec<bool> = (0..100).map(|i| i % 2 == 0).collect();
+        assert!((auroc(&scores, &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auroc_known_value() {
+        // hand-computed: pos scores {3,1}, neg {2,0} → pairs won 3/4
+        let scores = [3.0, 1.0, 2.0, 0.0];
+        let labels = [true, true, false, false];
+        assert!((auroc(&scores, &labels) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auprc_perfect() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [false, false, true, true];
+        assert!((auprc(&scores, &labels) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auprc_baseline_is_prevalence() {
+        // constant scores → AP equals prevalence
+        let scores = [1.0; 1000];
+        let labels: Vec<bool> = (0..1000).map(|i| i < 100).collect();
+        assert!((auprc(&scores, &labels) - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auprc_known_value() {
+        // ranking: pos, neg, pos, neg → AP = (1/1 + 2/3)/2
+        let scores = [4.0, 3.0, 2.0, 1.0];
+        let labels = [true, false, true, false];
+        assert!((auprc(&scores, &labels) - (1.0 + 2.0 / 3.0) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_binary_cases() {
+        assert_eq!(f1_binary(&[true, true], &[true, true]), 1.0);
+        assert_eq!(f1_binary(&[false, false], &[true, true]), 0.0);
+        // tp=1 fp=1 fn=1 → p=0.5 r=0.5 → f1=0.5
+        assert!((f1_binary(&[true, true, false], &[true, false, true]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_at_rate_selects_top_k() {
+        let scores = [9.0, 8.0, 1.0, 0.5];
+        let labels = [true, true, false, false];
+        assert_eq!(f1_at_rate(&scores, &labels, 0.5), 1.0);
+    }
+
+    #[test]
+    fn metrics_bundle() {
+        let scores = [0.9, 0.8, 0.1, 0.2];
+        let labels = [true, true, false, false];
+        let m = RankMetrics::compute(&scores, &labels);
+        assert_eq!(m.auroc, 1.0);
+        assert_eq!(m.auprc, 1.0);
+        assert_eq!(m.f1, 1.0);
+    }
+
+    #[test]
+    fn degenerate_all_one_class() {
+        assert!(auroc(&[1.0, 2.0], &[true, true]).is_nan());
+        assert!(auprc(&[1.0, 2.0], &[false, false]).is_nan());
+    }
+}

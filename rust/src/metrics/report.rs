@@ -1,0 +1,80 @@
+//! Resource reports: the time / memory / network numbers that pair with
+//! ranking metrics in every paper table. Extracted from a
+//! [`ClusterContext`] after a run.
+
+use crate::cluster::ClusterContext;
+use crate::util::sizeof::human_bytes;
+
+/// One run's resource footprint under the simulator's accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResourceReport {
+    /// Wall-clock seconds of actual compute.
+    pub wall_secs: f64,
+    /// Modelled network seconds (bytes/bandwidth + per-record overhead).
+    pub network_secs: f64,
+    /// wall + network — the column reported as "Time(s)".
+    pub job_secs: f64,
+    /// Peak single-executor memory (paper's per-executor peak).
+    pub peak_worker_bytes: usize,
+    /// Sum of worker peaks + driver peak (paper's "total memory").
+    pub total_peak_bytes: usize,
+    /// Peak driver memory (Fig. 2's x-axis).
+    pub peak_driver_bytes: usize,
+    /// Bytes shuffled across workers.
+    pub shuffle_bytes: u64,
+    /// Records shuffled.
+    pub shuffle_records: u64,
+    /// Communication rounds (Sparx's two-pass claim is visible here).
+    pub shuffle_rounds: u64,
+}
+
+impl ResourceReport {
+    /// Snapshot the context's accounting.
+    pub fn from_ctx(ctx: &ClusterContext) -> Self {
+        let (bytes, records, rounds) = ctx.ledger.snapshot();
+        ResourceReport {
+            wall_secs: ctx.wall_secs(),
+            network_secs: ctx.network_secs(),
+            job_secs: ctx.job_secs(),
+            peak_worker_bytes: ctx.peak_worker_bytes(),
+            total_peak_bytes: ctx.total_peak_bytes(),
+            peak_driver_bytes: ctx.driver_mem.peak(),
+            shuffle_bytes: bytes,
+            shuffle_records: records,
+            shuffle_rounds: rounds,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "time={:.2}s (wall {:.2}s + net {:.2}s) peak-exec={} total-mem={} driver={} shuffled={} ({} recs, {} rounds)",
+            self.job_secs,
+            self.wall_secs,
+            self.network_secs,
+            human_bytes(self.peak_worker_bytes),
+            human_bytes(self.total_peak_bytes),
+            human_bytes(self.peak_driver_bytes),
+            human_bytes(self.shuffle_bytes as usize),
+            self.shuffle_records,
+            self.shuffle_rounds,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    #[test]
+    fn snapshot_reflects_ledger() {
+        let ctx = ClusterConfig { network_bytes_per_sec: 1e6, ..Default::default() }.build();
+        ctx.ledger.add(1_000_000, 5);
+        ctx.ledger.add_round();
+        let r = ResourceReport::from_ctx(&ctx);
+        assert_eq!(r.shuffle_bytes, 1_000_000);
+        assert_eq!(r.shuffle_rounds, 1);
+        assert!(r.network_secs >= 1.0);
+        assert!(r.summary().contains("rounds"));
+    }
+}

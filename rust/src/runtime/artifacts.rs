@@ -1,0 +1,97 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted, with the
+//! static operand shapes each HLO module was lowered for.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// One AOT-compiled module.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// Variant name ("demo", "gisette", …).
+    pub name: String,
+    /// Kind: "project" (x[B,D]·R[D,K]→s[B,K]), "chain_bins"
+    /// (s[B,K],Δ[K],shift[K],fs[L]→bins[B,L,K]) or "project_bins" (fused).
+    pub kind: String,
+    /// HLO text file, relative to the manifest.
+    pub file: PathBuf,
+    pub b: usize,
+    pub d: usize,
+    pub k: usize,
+    pub l: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub entries: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {path:?}: {e} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| format!("parse {path:?}: {e}"))?;
+        let mut entries = Vec::new();
+        for a in j.get("artifacts").map(Json::items).unwrap_or(&[]) {
+            let field = |k: &str| -> Result<usize, String> {
+                a.get(k).and_then(Json::as_usize).ok_or_else(|| format!("manifest missing {k}"))
+            };
+            entries.push(ArtifactEntry {
+                name: a
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or("manifest missing name")?
+                    .to_string(),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or("manifest missing kind")?
+                    .to_string(),
+                file: dir.join(a.get("file").and_then(Json::as_str).ok_or("manifest missing file")?),
+                b: field("b")?,
+                d: field("d")?,
+                k: field("k")?,
+                l: field("l")?,
+            });
+        }
+        Ok(ArtifactManifest { entries, dir: dir.to_path_buf() })
+    }
+
+    pub fn find(&self, kind: &str, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind == kind && e.name == name)
+    }
+
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_when_present() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(m.find("chain_bins", "demo").is_some());
+        let e = m.find("project", "demo").unwrap();
+        assert_eq!((e.b, e.d, e.k, e.l), (8, 16, 4, 6));
+        assert!(e.file.exists());
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let e = ArtifactManifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(e.contains("make artifacts"));
+    }
+}

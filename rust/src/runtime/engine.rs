@@ -1,0 +1,451 @@
+//! The PJRT execution engine: a service thread owning the CPU client and
+//! all compiled executables; callers submit fixed-shape tiles through a
+//! channel and block on the reply.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use crate::sparx::chain::{Binner, ChainParams};
+
+use super::artifacts::ArtifactManifest;
+
+enum Request {
+    /// x (n×d, row-major) → s (n×k)
+    Project { variant: String, x: Vec<f32>, n: usize },
+    /// s (n×k) + chain params → bins (n×l×k)
+    ChainBins { variant: String, s: Vec<f32>, n: usize, delta: Vec<f32>, shift: Vec<f32>, fs: Vec<i32> },
+    /// fused x (n×d) + chain params → bins (n×l×k)
+    ProjectBins { variant: String, x: Vec<f32>, n: usize, delta: Vec<f32>, shift: Vec<f32>, fs: Vec<i32> },
+    Shutdown,
+}
+
+enum Reply {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+struct Job {
+    req: Request,
+    reply: Sender<Result<Reply, String>>,
+}
+
+/// Handle to the engine service thread. Cheap to share (`&PjrtEngine` is
+/// Sync); drop shuts the thread down.
+pub struct PjrtEngine {
+    tx: Mutex<Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// (kind, variant) → static shapes, mirrored from the manifest for
+    /// request validation without a round-trip.
+    shapes: HashMap<(String, String), (usize, usize, usize, usize)>,
+}
+
+impl PjrtEngine {
+    /// Start the engine: loads the manifest, compiles every artifact on
+    /// the PJRT CPU client (once), then serves requests.
+    pub fn start(manifest: &ArtifactManifest) -> Result<PjrtEngine, String> {
+        let (tx, rx) = channel::<Job>();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let entries = manifest.entries.clone();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                // --- startup: client + compile all artifacts ---
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("PjRtClient::cpu: {e}")));
+                        return;
+                    }
+                };
+                let mut execs: HashMap<(String, String), (xla::PjRtLoadedExecutable, usize, usize, usize, usize)> =
+                    HashMap::new();
+                for e in &entries {
+                    let proto = match xla::HloModuleProto::from_text_file(
+                        e.file.to_str().unwrap_or_default(),
+                    ) {
+                        Ok(p) => p,
+                        Err(err) => {
+                            let _ = ready_tx.send(Err(format!("load {:?}: {err}", e.file)));
+                            return;
+                        }
+                    };
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    match client.compile(&comp) {
+                        Ok(exe) => {
+                            execs.insert(
+                                (e.kind.clone(), e.name.clone()),
+                                (exe, e.b, e.d, e.k, e.l),
+                            );
+                        }
+                        Err(err) => {
+                            let _ = ready_tx.send(Err(format!("compile {:?}: {err}", e.file)));
+                            return;
+                        }
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+                // --- serve ---
+                while let Ok(job) = rx.recv() {
+                    match job.req {
+                        Request::Shutdown => break,
+                        req => {
+                            let r = serve(&execs, req);
+                            let _ = job.reply.send(r);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn: {e}"))?;
+        ready_rx.recv().map_err(|_| "engine died during startup".to_string())??;
+        let shapes = manifest
+            .entries
+            .iter()
+            .map(|e| ((e.kind.clone(), e.name.clone()), (e.b, e.d, e.k, e.l)))
+            .collect();
+        Ok(PjrtEngine { tx: Mutex::new(tx), handle: Some(handle), shapes })
+    }
+
+    /// Start from the default artifacts directory.
+    pub fn start_default() -> Result<PjrtEngine, String> {
+        let manifest = ArtifactManifest::load(&super::default_artifact_dir())?;
+        Self::start(&manifest)
+    }
+
+    pub fn shape(&self, kind: &str, variant: &str) -> Option<(usize, usize, usize, usize)> {
+        self.shapes.get(&(kind.to_string(), variant.to_string())).copied()
+    }
+
+    fn call(&self, req: Request) -> Result<Reply, String> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job { req, reply: reply_tx })
+            .map_err(|_| "engine thread gone".to_string())?;
+        reply_rx.recv().map_err(|_| "engine thread gone".to_string())?
+    }
+
+    /// Execute the projection artifact over `n` rows of width `d` (any n:
+    /// tiles are padded to the compiled batch). R is the materialised
+    /// sign matrix (row-major [d][k]).
+    pub fn project(&self, variant: &str, x: &[f32], n: usize) -> Result<Vec<f32>, String> {
+        match self.call(Request::Project { variant: variant.into(), x: x.to_vec(), n })? {
+            Reply::F32(v) => Ok(v),
+            _ => Err("bad reply".into()),
+        }
+    }
+
+    /// Execute the binning artifact over `n` sketches.
+    pub fn chain_bins(
+        &self,
+        variant: &str,
+        s: &[f32],
+        n: usize,
+        chain: &ChainParams,
+    ) -> Result<Vec<i32>, String> {
+        let fs: Vec<i32> = chain.fs.iter().map(|&f| f as i32).collect();
+        match self.call(Request::ChainBins {
+            variant: variant.into(),
+            s: s.to_vec(),
+            n,
+            delta: chain.deltamax.clone(),
+            shift: chain.shift.clone(),
+            fs,
+        })? {
+            Reply::I32(v) => Ok(v),
+            _ => Err("bad reply".into()),
+        }
+    }
+
+    /// Execute the fused project+bin artifact over `n` rows.
+    pub fn project_bins(
+        &self,
+        variant: &str,
+        x: &[f32],
+        n: usize,
+        chain: &ChainParams,
+    ) -> Result<Vec<i32>, String> {
+        let fs: Vec<i32> = chain.fs.iter().map(|&f| f as i32).collect();
+        match self.call(Request::ProjectBins {
+            variant: variant.into(),
+            x: x.to_vec(),
+            n,
+            delta: chain.deltamax.clone(),
+            shift: chain.shift.clone(),
+            fs,
+        })? {
+            Reply::I32(v) => Ok(v),
+            _ => Err("bad reply".into()),
+        }
+    }
+}
+
+impl Drop for PjrtEngine {
+    fn drop(&mut self) {
+        let (reply_tx, _reply_rx) = channel();
+        let _ = self.tx.lock().unwrap().send(Job { req: Request::Shutdown, reply: reply_tx });
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+type Execs = HashMap<(String, String), (xla::PjRtLoadedExecutable, usize, usize, usize, usize)>;
+
+fn get_exec<'a>(
+    execs: &'a Execs,
+    kind: &str,
+    variant: &str,
+) -> Result<&'a (xla::PjRtLoadedExecutable, usize, usize, usize, usize), String> {
+    execs
+        .get(&(kind.to_string(), variant.to_string()))
+        .ok_or_else(|| format!("no artifact {kind}/{variant} (rebuild with `make artifacts`)"))
+}
+
+/// Stored per variant the first time it's used: the R operand literal.
+/// (The R matrix is part of the *request* in `project`; we rebuild the
+/// literal per call — cheap relative to execution at these sizes.)
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, String> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| format!("reshape{dims:?}: {e}"))
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal, String> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| format!("reshape{dims:?}: {e}"))
+}
+
+fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal, String> {
+    let out = exe.execute::<xla::Literal>(args).map_err(|e| format!("execute: {e}"))?;
+    let lit = out[0][0].to_literal_sync().map_err(|e| format!("to_literal: {e}"))?;
+    lit.to_tuple1().map_err(|e| format!("tuple1: {e}"))
+}
+
+fn serve(execs: &Execs, req: Request) -> Result<Reply, String> {
+    match req {
+        Request::Project { variant, x, n } => {
+            let (exe, b, d, k, _l) = get_exec(execs, "project", &variant)?;
+            let (b, d, k) = (*b, *d, *k);
+            if x.len() != n * d + (d * k) {
+                return Err(format!(
+                    "project {variant}: want n*d + d*k = {} floats (x ++ R), got {}",
+                    n * d + d * k,
+                    x.len()
+                ));
+            }
+            let (xs, r) = x.split_at(n * d);
+            let r_lit = lit_f32(r, &[d as i64, k as i64])?;
+            let mut out = Vec::with_capacity(n * k);
+            let mut tile = vec![0f32; b * d];
+            let mut i = 0;
+            while i < n {
+                let take = (n - i).min(b);
+                tile[..take * d].copy_from_slice(&xs[i * d..(i + take) * d]);
+                tile[take * d..].fill(0.0);
+                let x_lit = lit_f32(&tile, &[b as i64, d as i64])?;
+                let res = run1(exe, &[x_lit, r_lit.clone()])?;
+                let v = res.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))?;
+                out.extend_from_slice(&v[..take * k]);
+                i += take;
+            }
+            Ok(Reply::F32(out))
+        }
+        Request::ChainBins { variant, s, n, delta, shift, fs } => {
+            let (exe, b, _d, k, l) = get_exec(execs, "chain_bins", &variant)?;
+            let (b, k, l) = (*b, *k, *l);
+            let want_l = fs.len();
+            if delta.len() != k || want_l > l || s.len() != n * k {
+                return Err(format!(
+                    "chain_bins {variant}: shape mismatch (k={k} l={l} vs delta={} fs={} s={}/n={n})",
+                    delta.len(),
+                    fs.len(),
+                    s.len()
+                ));
+            }
+            // the artifact is compiled for a fixed L; shallower chains pad
+            // the feature schedule (extra levels only refine — sliced off)
+            let mut fs_pad = fs.clone();
+            fs_pad.resize(l, *fs.last().unwrap_or(&0));
+            let d_lit = lit_f32(&delta, &[k as i64])?;
+            let sh_lit = lit_f32(&shift, &[k as i64])?;
+            let fs_lit = lit_i32(&fs_pad, &[l as i64])?;
+            let mut out = Vec::with_capacity(n * want_l * k);
+            let mut tile = vec![0f32; b * k];
+            let mut i = 0;
+            while i < n {
+                let take = (n - i).min(b);
+                tile[..take * k].copy_from_slice(&s[i * k..(i + take) * k]);
+                tile[take * k..].fill(0.0);
+                let s_lit = lit_f32(&tile, &[b as i64, k as i64])?;
+                let res = run1(exe, &[s_lit, d_lit.clone(), sh_lit.clone(), fs_lit.clone()])?;
+                let v = res.to_vec::<i32>().map_err(|e| format!("to_vec: {e}"))?;
+                for p in 0..take {
+                    out.extend_from_slice(&v[p * l * k..p * l * k + want_l * k]);
+                }
+                i += take;
+            }
+            Ok(Reply::I32(out))
+        }
+        Request::ProjectBins { variant, x, n, delta, shift, fs } => {
+            let (exe, b, d, k, l) = get_exec(execs, "project_bins", &variant)?;
+            let (b, d, k, l) = (*b, *d, *k, *l);
+            if x.len() != n * d + d * k || delta.len() != k || fs.len() != l {
+                return Err(format!("project_bins {variant}: shape mismatch"));
+            }
+            let (xs, r) = x.split_at(n * d);
+            let r_lit = lit_f32(r, &[d as i64, k as i64])?;
+            let d_lit = lit_f32(&delta, &[k as i64])?;
+            let sh_lit = lit_f32(&shift, &[k as i64])?;
+            let fs_lit = lit_i32(&fs, &[l as i64])?;
+            let mut out = Vec::with_capacity(n * l * k);
+            let mut tile = vec![0f32; b * d];
+            let mut i = 0;
+            while i < n {
+                let take = (n - i).min(b);
+                tile[..take * d].copy_from_slice(&xs[i * d..(i + take) * d]);
+                tile[take * d..].fill(0.0);
+                let x_lit = lit_f32(&tile, &[b as i64, d as i64])?;
+                let res = run1(
+                    exe,
+                    &[x_lit, r_lit.clone(), d_lit.clone(), sh_lit.clone(), fs_lit.clone()],
+                )?;
+                let v = res.to_vec::<i32>().map_err(|e| format!("to_vec: {e}"))?;
+                out.extend_from_slice(&v[..take * l * k]);
+                i += take;
+            }
+            Ok(Reply::I32(out))
+        }
+        Request::Shutdown => unreachable!("handled by caller"),
+    }
+}
+
+/// [`Binner`] backed by the AOT `chain_bins` artifact — drop-in for the
+/// native backend in `SparxModel::fit_with` / `score_sketches_with`.
+pub struct PjrtBinner<'e> {
+    pub engine: &'e PjrtEngine,
+    pub variant: String,
+}
+
+impl Binner for PjrtBinner<'_> {
+    fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32> {
+        self.engine
+            .chain_bins(&self.variant, s, n, chain)
+            .unwrap_or_else(|e| panic!("PJRT binning failed ({}): {e}", self.variant))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests run only when `make artifacts` has produced the AOT
+    //! bundle (skipped otherwise so `cargo test` works pre-build).
+    use super::*;
+    use crate::sparx::chain::NativeBinner;
+    use crate::util::Rng;
+
+    fn engine() -> Option<PjrtEngine> {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(PjrtEngine::start(&ArtifactManifest::load(&dir).unwrap()).unwrap())
+    }
+
+    fn demo_chain(rng: &mut Rng) -> ChainParams {
+        let delta: Vec<f32> = (0..4).map(|_| rng.range_f64(0.5, 2.0) as f32).collect();
+        ChainParams::sample(&delta, 6, rng)
+    }
+
+    #[test]
+    fn project_matches_native_matmul() {
+        let Some(e) = engine() else { return };
+        let mut rng = Rng::new(1);
+        let (n, d, k) = (13, 16, 4); // n > B=8 forces padding + multi-tile
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let r: Vec<f32> = (0..d * k)
+            .map(|_| [(-1.0f32), 0.0, 1.0][rng.below(3) as usize])
+            .collect();
+        let mut xr = x.clone();
+        xr.extend_from_slice(&r);
+        let got = e.project("demo", &xr, n).unwrap();
+        assert_eq!(got.len(), n * k);
+        for i in 0..n {
+            for j in 0..k {
+                let want: f32 = (0..d).map(|q| x[i * d + q] * r[q * k + j]).sum();
+                assert!(
+                    (got[i * k + j] - want).abs() < 1e-4,
+                    "({i},{j}): {} vs {want}",
+                    got[i * k + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_binner_matches_native_binner() {
+        let Some(e) = engine() else { return };
+        let mut rng = Rng::new(2);
+        let chain = demo_chain(&mut rng);
+        let n = 29; // forces 4 tiles with padding on B=8
+        let s: Vec<f32> = (0..n * 4).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let native = NativeBinner.tile_bins(&chain, &s, n);
+        let pjrt = PjrtBinner { engine: &e, variant: "demo".into() }.tile_bins(&chain, &s, n);
+        assert_eq!(native.len(), pjrt.len());
+        let diff = native.iter().zip(&pjrt).filter(|(a, b)| a != b).count();
+        // identical semantics; float-order may flip a floor at an exact
+        // boundary in rare cases
+        assert!(
+            diff as f64 / native.len() as f64 <= 1e-3,
+            "PJRT and native binning diverge: {diff}/{} differ",
+            native.len()
+        );
+    }
+
+    #[test]
+    fn fused_matches_two_stage() {
+        let Some(e) = engine() else { return };
+        let mut rng = Rng::new(3);
+        let (n, d, k) = (10, 16, 4);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let r: Vec<f32> = (0..d * k)
+            .map(|_| [(-1.0f32), 0.0, 1.0][rng.below(3) as usize])
+            .collect();
+        let chain = demo_chain(&mut rng);
+        let mut xr = x.clone();
+        xr.extend_from_slice(&r);
+        let s = e.project("demo", &xr, n).unwrap();
+        let two = e.chain_bins("demo", &s, n, &chain).unwrap();
+        let one = e.project_bins("demo", &xr, n, &chain).unwrap();
+        let diff = two.iter().zip(&one).filter(|(a, b)| a != b).count();
+        assert!(diff as f64 / two.len() as f64 <= 1e-3, "{diff}/{} differ", two.len());
+    }
+
+    #[test]
+    fn engine_serves_concurrent_callers() {
+        let Some(e) = engine() else { return };
+        let mut rng = Rng::new(4);
+        let chain = demo_chain(&mut rng);
+        let s: Vec<f32> = (0..8 * 4).map(|_| rng.normal() as f32).collect();
+        let want = e.chain_bins("demo", &s, 8, &chain).unwrap();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for _ in 0..5 {
+                        let got = e.chain_bins("demo", &s, 8, &chain).unwrap();
+                        assert_eq!(got, want);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let Some(e) = engine() else { return };
+        let err = e.project("nope", &[0.0; 4], 1).unwrap_err();
+        assert!(err.contains("no artifact"));
+    }
+}

@@ -1,0 +1,25 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — see /opt/xla-example/README.md for why not serialized
+//! protos) and executes them from the worker hot path.
+//!
+//! Python runs once at build time (`make artifacts`); this module makes
+//! the compiled L2/L1 compute callable from Rust with zero Python at
+//! request time.
+//!
+//! The PJRT client and compiled executables live on a dedicated service
+//! thread ([`engine::PjrtEngine`]); workers submit fixed-shape tiles over
+//! a channel. That models the real deployment (one accelerator shared by
+//! executor threads) and sidesteps the C++ handle thread-affinity.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactEntry, ArtifactManifest};
+pub use engine::{PjrtBinner, PjrtEngine};
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("SPARX_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

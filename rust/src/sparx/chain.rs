@@ -1,0 +1,209 @@
+//! Half-space chains (§2.2.2, Eq. 4): multi-granular subspace histograms.
+//!
+//! A chain of length L halves the (projected) space along a randomly
+//! re-sampled feature per level. The K-dimensional integer bin id of a
+//! point at level l is computed incrementally; all points sharing a bin id
+//! at level l sit in the same histogram cell of width Δ/2^(o(f,l)-1) along
+//! each sampled feature.
+//!
+//! The numeric recurrence here is *the* contract shared by three
+//! implementations which are cross-checked in tests:
+//! * this native Rust path (request path),
+//! * the Pallas kernel behind the AOT artifacts (`python/compile/kernels/
+//!   chain.py`, loaded via [`crate::runtime`]),
+//! * the pure-jnp oracle (`ref.py`).
+
+use crate::util::{Rng, SizeOf};
+
+/// Per-chain sampled parameters (shared by every worker — Algorithm 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainParams {
+    /// Sampled split feature per level, `fs[l] ∈ [0, K)`.
+    pub fs: Vec<usize>,
+    /// Random shift per projected feature, `shift[k] ∈ [0, Δ[k])`.
+    pub shift: Vec<f32>,
+    /// Initial bin widths Δ (half the projected range per feature).
+    pub deltamax: Vec<f32>,
+    /// `first[l]` ⇔ level `l` is the first occurrence of `fs[l]`
+    /// (precomputed so the per-point hot loop allocates nothing — §Perf).
+    first: Vec<bool>,
+}
+
+fn first_occurrences(fs: &[usize]) -> Vec<bool> {
+    let mut seen = std::collections::HashSet::new();
+    fs.iter().map(|&f| seen.insert(f)).collect()
+}
+
+impl ChainParams {
+    /// Sample a chain: features uniformly with replacement, shifts
+    /// uniform in [0, Δ).
+    pub fn sample(deltamax: &[f32], depth: usize, rng: &mut Rng) -> Self {
+        let k = deltamax.len();
+        let fs: Vec<usize> = (0..depth).map(|_| rng.below(k as u64) as usize).collect();
+        let shift = deltamax.iter().map(|&d| rng.f32() * d).collect();
+        let first = first_occurrences(&fs);
+        ChainParams { fs, shift, deltamax: deltamax.to_vec(), first }
+    }
+
+    /// Build from explicit parts (tests / deserialization).
+    pub fn new(fs: Vec<usize>, shift: Vec<f32>, deltamax: Vec<f32>) -> Self {
+        let first = first_occurrences(&fs);
+        ChainParams { fs, shift, deltamax, first }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.fs.len()
+    }
+
+    pub fn k(&self) -> usize {
+        self.deltamax.len()
+    }
+
+    /// Incremental bin ids of one sketch at every level: returns a
+    /// row-major `[L][K]` i32 buffer. `scratch` must be `K` floats
+    /// (avoids a per-point allocation on the hot path).
+    pub fn bins_into(&self, s: &[f32], scratch: &mut [f32], out: &mut [i32]) {
+        let k = self.k();
+        let l = self.depth();
+        debug_assert_eq!(s.len(), k);
+        debug_assert_eq!(scratch.len(), k);
+        debug_assert_eq!(out.len(), l * k);
+        // prebin state starts at 0 (untouched features bin to 0)
+        scratch.fill(0.0);
+        for (lvl, &f) in self.fs.iter().enumerate() {
+            let new = if self.first[lvl] {
+                (s[f] + self.shift[f]) / self.deltamax[f]
+            } else {
+                2.0 * scratch[f] - self.shift[f] / self.deltamax[f]
+            };
+            scratch[f] = new;
+            let row = &mut out[lvl * k..(lvl + 1) * k];
+            for (j, v) in scratch.iter().enumerate() {
+                row[j] = v.floor() as i32;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Self::bins_into`].
+    pub fn bins(&self, s: &[f32]) -> Vec<i32> {
+        let mut scratch = vec![0f32; self.k()];
+        let mut out = vec![0i32; self.depth() * self.k()];
+        self.bins_into(s, &mut scratch, &mut out);
+        out
+    }
+}
+
+impl SizeOf for ChainParams {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Self>() + self.fs.len() * 8 + self.shift.len() * 4 + self.deltamax.len() * 4
+    }
+}
+
+/// Tile-level binning backend: maps a tile of `n` K-dim sketches to
+/// `n × L × K` bin ids. The native implementation loops in Rust; the PJRT
+/// implementation ([`crate::runtime::PjrtBinner`]) executes the AOT
+/// Pallas artifact. Both must agree bit-for-bit (integration-tested).
+pub trait Binner: Sync {
+    fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32>;
+}
+
+/// Pure-Rust binning.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBinner;
+
+impl Binner for NativeBinner {
+    fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32> {
+        let k = chain.k();
+        let l = chain.depth();
+        debug_assert_eq!(s.len(), n * k);
+        let mut out = vec![0i32; n * l * k];
+        let mut scratch = vec![0f32; k];
+        for i in 0..n {
+            chain.bins_into(&s[i * k..(i + 1) * k], &mut scratch, &mut out[i * l * k..(i + 1) * l * k]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_chain() -> ChainParams {
+        ChainParams::new(vec![0, 0, 0], vec![0.0], vec![2.0])
+    }
+
+    #[test]
+    fn halving_matches_hand_computation() {
+        // widths per level: 2, 1, 0.5 (same case as the python kernel test)
+        let c = simple_chain();
+        assert_eq!(c.bins(&[0.9]), vec![0, 0, 1]);
+        assert_eq!(c.bins(&[1.9]), vec![0, 1, 3]);
+        assert_eq!(c.bins(&[3.9]), vec![1, 3, 7]);
+    }
+
+    #[test]
+    fn shift_moves_boundaries() {
+        let mut c = simple_chain();
+        c.shift = vec![0.5];
+        // (1.9 + 0.5)/2 = 1.2 → bin 1 at level 0 (without shift it was 0)
+        assert_eq!(c.bins(&[1.9])[0], 1);
+    }
+
+    #[test]
+    fn untouched_features_bin_zero() {
+        let c = ChainParams::new(vec![1, 1], vec![0.3, 0.0], vec![1.0, 1.0]);
+        let b = c.bins(&[5.0, 0.6]);
+        // feature 0 never sampled → always floor(0) = 0
+        assert_eq!(b[0], 0);
+        assert_eq!(b[2], 0);
+    }
+
+    #[test]
+    fn first_vs_repeat_occurrence() {
+        // f=0 at levels 0 and 2, f=1 at level 1
+        let c = ChainParams::new(vec![0, 1, 0], vec![0.0, 0.0], vec![4.0, 2.0]);
+        let b = c.bins(&[6.0, 3.0]);
+        // level 0: s0/4 = 1.5 → 1 ; level 1: s1/2 = 1.5 → 1
+        assert_eq!(&b[0..2], &[1, 0]);
+        assert_eq!(&b[2..4], &[1, 1]);
+        // level 2: 2*1.5 = 3.0 → 3 (width now 2)
+        assert_eq!(&b[4..6], &[3, 1]);
+    }
+
+    #[test]
+    fn nearby_points_share_coarse_bins() {
+        let mut rng = Rng::new(5);
+        let c = ChainParams::sample(&[1.0, 1.0, 1.0], 12, &mut rng);
+        let a = c.bins(&[0.50, 0.50, 0.50]);
+        let b = c.bins(&[0.5005, 0.4995, 0.5002]);
+        // identical at the first few levels (coarse granularity)
+        let k = 3;
+        assert_eq!(&a[..2 * k], &b[..2 * k]);
+    }
+
+    #[test]
+    fn native_binner_matches_pointwise() {
+        let mut rng = Rng::new(9);
+        let c = ChainParams::sample(&[2.0, 3.0], 8, &mut rng);
+        let pts: Vec<f32> = (0..20).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let tiled = NativeBinner.tile_bins(&c, &pts, 10);
+        for i in 0..10 {
+            let single = c.bins(&pts[i * 2..(i + 1) * 2]);
+            assert_eq!(&tiled[i * 16..(i + 1) * 16], single.as_slice(), "point {i}");
+        }
+    }
+
+    #[test]
+    fn sample_respects_ranges() {
+        let mut rng = Rng::new(11);
+        let delta = vec![0.5, 2.0, 10.0];
+        for _ in 0..20 {
+            let c = ChainParams::sample(&delta, 6, &mut rng);
+            assert!(c.fs.iter().all(|&f| f < 3));
+            for (sh, d) in c.shift.iter().zip(&delta) {
+                assert!(*sh >= 0.0 && sh < d, "shift {sh} vs delta {d}");
+            }
+        }
+    }
+}

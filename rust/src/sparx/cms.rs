@@ -1,0 +1,203 @@
+//! Count-min sketch (Cormode & Muthukrishnan) — the constant-size
+//! approximate counting structure behind each chain level (§2.2.2).
+//!
+//! `r` hash tables ("rows") × `w` buckets ("cols"). Inserting a bin id
+//! increments one bucket per row; querying takes the **minimum** across
+//! rows (the least over-estimate — hence count-*min*). In the distributed
+//! fit, buckets are filled from the `reduceByKey` output rather than by
+//! point-wise insertion, which is numerically identical.
+
+use crate::hash::{bin_hash, cms_bucket_from, BinHash};
+use crate::util::SizeOf;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CountMinSketch {
+    r: usize,
+    w: usize,
+    /// row-major [r][w]
+    counts: Vec<u32>,
+}
+
+impl CountMinSketch {
+    pub fn new(r: usize, w: usize) -> Self {
+        assert!(r >= 1 && w >= 1);
+        CountMinSketch { r, w, counts: vec![0; r * w] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.r
+    }
+
+    pub fn cols(&self) -> usize {
+        self.w
+    }
+
+    /// Point-wise insert (single-machine xStream / streaming front-end).
+    #[inline]
+    pub fn insert(&mut self, bin: &[i32]) {
+        self.insert_hashed(bin_hash(bin));
+    }
+
+    /// Insert by precomputed bin hash (hot paths hash once per level).
+    #[inline]
+    pub fn insert_hashed(&mut self, h: BinHash) {
+        for row in 0..self.r {
+            let b = cms_bucket_from(h, row as u32, self.w);
+            self.counts[row * self.w + b] += 1;
+        }
+    }
+
+    /// The (row, col) bucket coordinates a bin id hashes to — the paper's
+    /// `allCols` (Eq. 6): one `((row, col), 1)` pair per hash table.
+    #[inline]
+    pub fn all_cols<'a>(&'a self, bin: &'a [i32]) -> impl Iterator<Item = (u32, u32)> + 'a {
+        let h = bin_hash(bin);
+        (0..self.r as u32).map(move |row| (row, cms_bucket_from(h, row, self.w) as u32))
+    }
+
+    /// Estimated count = min over rows.
+    #[inline]
+    pub fn query(&self, bin: &[i32]) -> u32 {
+        self.query_hashed(bin_hash(bin))
+    }
+
+    /// Query by precomputed bin hash.
+    #[inline]
+    pub fn query_hashed(&self, h: BinHash) -> u32 {
+        let mut m = u32::MAX;
+        for row in 0..self.r {
+            let b = cms_bucket_from(h, row as u32, self.w);
+            m = m.min(self.counts[row * self.w + b]);
+        }
+        m
+    }
+
+    /// Fill a bucket from the reduce output (total count for (row,col)).
+    #[inline]
+    pub fn set_bucket(&mut self, row: u32, col: u32, count: u32) {
+        self.counts[row as usize * self.w + col as usize] = count;
+    }
+
+    /// Build from a reduced dense count block (row-major [r][w]) — the
+    /// collectAsMap-equivalent when the map-side combine is dense.
+    pub fn from_counts(r: usize, w: usize, counts: &[u32]) -> Self {
+        assert_eq!(counts.len(), r * w);
+        CountMinSketch { r, w, counts: counts.to_vec() }
+    }
+
+    /// Raw bucket counts (row-major [r][w]).
+    pub fn counts(&self) -> &[u32] {
+        &self.counts
+    }
+
+    /// Add into a bucket (merging partial counts).
+    #[inline]
+    pub fn add_bucket(&mut self, row: u32, col: u32, count: u32) {
+        self.counts[row as usize * self.w + col as usize] += count;
+    }
+
+    /// Merge another CMS of identical shape (distributed partial merge).
+    pub fn merge(&mut self, other: &CountMinSketch) {
+        assert_eq!((self.r, self.w), (other.r, other.w));
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// Total insertions (any row sums to it).
+    pub fn total(&self) -> u64 {
+        self.counts[..self.w].iter().map(|&c| c as u64).sum()
+    }
+}
+
+impl SizeOf for CountMinSketch {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Self>() + self.counts.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn never_underestimates() {
+        let mut cms = CountMinSketch::new(4, 64);
+        let mut rng = Rng::new(1);
+        let mut truth = std::collections::HashMap::new();
+        for _ in 0..2000 {
+            let bin = vec![rng.below(30) as i32, rng.below(5) as i32];
+            *truth.entry(bin.clone()).or_insert(0u32) += 1;
+            cms.insert(&bin);
+        }
+        for (bin, &c) in &truth {
+            assert!(cms.query(bin) >= c, "underestimate for {bin:?}");
+        }
+    }
+
+    #[test]
+    fn exact_when_sparse() {
+        // few distinct keys, wide table → min count is exact w.h.p.
+        let mut cms = CountMinSketch::new(10, 1000);
+        for i in 0..20 {
+            for _ in 0..=i {
+                cms.insert(&[i as i32]);
+            }
+        }
+        for i in 0..20i32 {
+            assert_eq!(cms.query(&[i]), i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn unseen_bins_query_zero_when_sparse() {
+        let mut cms = CountMinSketch::new(10, 1024);
+        for i in 0..10i32 {
+            cms.insert(&[i]);
+        }
+        // with 10 keys in 1024 buckets × 10 rows, an unseen key collides in
+        // all 10 rows with probability ≈ (10/1024)^10 ≈ 0
+        assert_eq!(cms.query(&[999]), 0);
+    }
+
+    #[test]
+    fn distributed_fill_equals_pointwise() {
+        // simulate the flatMap/reduceByKey path and compare to inserts
+        let mut direct = CountMinSketch::new(5, 50);
+        let mut via_reduce = CountMinSketch::new(5, 50);
+        let mut rng = Rng::new(3);
+        let mut pairs: std::collections::HashMap<(u32, u32), u32> = Default::default();
+        for _ in 0..500 {
+            let bin = vec![rng.below(40) as i32, rng.below(40) as i32];
+            direct.insert(&bin);
+            for rc in via_reduce.all_cols(&bin).collect::<Vec<_>>() {
+                *pairs.entry(rc).or_insert(0) += 1;
+            }
+        }
+        for ((row, col), c) in pairs {
+            via_reduce.set_bucket(row, col, c);
+        }
+        assert_eq!(direct, via_reduce);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = CountMinSketch::new(2, 8);
+        let mut b = CountMinSketch::new(2, 8);
+        a.insert(&[1]);
+        b.insert(&[1]);
+        b.insert(&[2]);
+        a.merge(&b);
+        assert_eq!(a.query(&[1]), 2);
+        assert_eq!(a.total(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_shape_mismatch_panics() {
+        let mut a = CountMinSketch::new(2, 8);
+        let b = CountMinSketch::new(2, 9);
+        a.merge(&b);
+    }
+}

@@ -1,0 +1,466 @@
+//! The Sparx model: an ensemble of M half-space chains fit and scored
+//! with the paper's three distributed steps (Algorithms 1–3).
+//!
+//! * **Fit** (two passes): Step 1 projects every point locally (map
+//!   only); Step 2 per chain bins a subsample, emits `((level,row,col),1)`
+//!   pairs (`allCols`, Eq. 6), `reduceByKey`-sums them and
+//!   `collectAsMap`s the constant-size bucket totals into the driver's
+//!   CMS structures. Chains train concurrently on the driver thread pool
+//!   (model parallelism on top of data parallelism).
+//! * **Score** (one pass): the CMS ensemble is broadcast once; each
+//!   worker scores its partition locally (Eq. 5); per-chain score vectors
+//!   are summed distributedly and averaged.
+
+
+
+use crate::cluster::dist::Broadcast;
+use crate::cluster::{pool, ClusterContext, ClusterError, DistVec, Result};
+use crate::data::Dataset;
+use crate::util::{Rng, SizeOf};
+
+use super::chain::{Binner, ChainParams, NativeBinner};
+use super::cms::CountMinSketch;
+use super::projector::{compute_deltamax, project_dataset, Projector, Sketch};
+
+/// Scoring variants: the paper's Eq. (5) linear extrapolation, and the
+/// xStream reference code's log2 form (same argmin per chain, smoother
+/// ensemble average). Both are exposed; experiments use `Log2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreMode {
+    /// min_l 2^l · c_l (Eq. 5).
+    Extrapolated,
+    /// min_l log2(1 + c_l) + l (cmuxstream reference).
+    Log2,
+}
+
+/// Hyperparameters (§4.1.5 names in comments).
+#[derive(Debug, Clone)]
+pub struct SparxParams {
+    /// Projection count K (0 ⇒ no projection; the paper leaves OSM raw).
+    pub k: usize,
+    /// Ensemble size M (#components).
+    pub num_chains: usize,
+    /// Chain length / depth L.
+    pub depth: usize,
+    /// Subsampling rate for fitting.
+    pub sample_rate: f64,
+    /// CMS hash tables r (paper: 10).
+    pub cms_rows: usize,
+    /// CMS buckets per table w (paper: 100).
+    pub cms_cols: usize,
+    /// Non-zero density of the sign hashes (paper: 1/3).
+    pub density: f64,
+    pub score_mode: ScoreMode,
+    pub seed: u64,
+}
+
+impl Default for SparxParams {
+    fn default() -> Self {
+        SparxParams {
+            k: 50,
+            num_chains: 50,
+            depth: 10,
+            sample_rate: 1.0,
+            cms_rows: 10,
+            cms_cols: 100,
+            density: 1.0 / 3.0,
+            score_mode: ScoreMode::Log2,
+            seed: 0x5AB4,
+        }
+    }
+}
+
+/// One trained chain: sampled parameters + per-level CMS counts.
+#[derive(Debug, Clone)]
+pub struct TrainedChain {
+    pub params: ChainParams,
+    pub cms: Vec<CountMinSketch>,
+}
+
+impl SizeOf for TrainedChain {
+    fn size_of(&self) -> usize {
+        self.params.size_of() + self.cms.iter().map(SizeOf::size_of).sum::<usize>()
+    }
+}
+
+/// A fitted Sparx model (driver-resident until broadcast for scoring).
+pub struct SparxModel {
+    pub params: SparxParams,
+    pub projector: Projector,
+    pub deltamax: Vec<f32>,
+    pub chains: Vec<TrainedChain>,
+}
+
+impl SparxModel {
+    /// Fit with the native Rust binning backend.
+    pub fn fit(ctx: &ClusterContext, data: &Dataset, params: &SparxParams) -> Result<SparxModel> {
+        Self::fit_with(ctx, data, params, &NativeBinner)
+    }
+
+    /// Fit with an explicit binning backend (native or PJRT).
+    pub fn fit_with(
+        ctx: &ClusterContext,
+        data: &Dataset,
+        params: &SparxParams,
+        binner: &dyn Binner,
+    ) -> Result<SparxModel> {
+        let projector = Self::make_projector(data, params);
+        let proj = project_dataset(ctx, data, &projector)?;
+        let deltamax = compute_deltamax(ctx, &proj)?;
+        let chains = Self::fit_chains(ctx, &proj, &deltamax, params, binner)?;
+        Ok(SparxModel { params: params.clone(), projector, deltamax, chains })
+    }
+
+    pub(crate) fn make_projector(data: &Dataset, params: &SparxParams) -> Projector {
+        if params.k == 0 {
+            Projector::identity(data.dim())
+        } else {
+            let p = Projector::new(params.k, params.density);
+            // dense schemas get the memoised R (and PJRT operand)
+            if !data.schema.names.is_empty() {
+                p.with_dense_schema(&data.schema.names)
+            } else {
+                p
+            }
+        }
+    }
+
+    /// Step 2 over an already-projected DF (reused by `fit_with` and the
+    /// experiment harness which wants to time steps separately).
+    pub fn fit_chains(
+        ctx: &ClusterContext,
+        proj: &DistVec<Sketch>,
+        deltamax: &[f32],
+        params: &SparxParams,
+        binner: &dyn Binner,
+    ) -> Result<Vec<TrainedChain>> {
+        if params.cms_rows >= 128 || params.cms_cols >= (1 << 20) {
+            return Err(ClusterError::Invalid("CMS too large for shuffle key packing".into()));
+        }
+        let k = deltamax.len();
+        let (l, r, w) = (params.depth, params.cms_rows, params.cms_cols);
+        pool::try_run_indexed(ctx.cfg.num_threads, params.num_chains, |m| {
+            let mut rng = Rng::new(params.seed.wrapping_add(m as u64 * 0x9E37_79B9));
+            let chain = ChainParams::sample(deltamax, params.depth, &mut rng);
+            // rate ≥ 1 ⇒ no subsample copy (§Perf: the per-chain clone of
+            // the whole projected DF dominated fit time at rate=1)
+            let sampled_owned;
+            let sampled = if params.sample_rate >= 1.0 {
+                proj
+            } else {
+                sampled_owned = proj.sample(ctx, params.sample_rate, params.seed ^ (m as u64))?;
+                &sampled_owned
+            };
+            // map + map-side combine: each partition bins its points
+            // (Alg. 2's flatMap of ((row,col),1) pairs) and combines them
+            // into one dense [L][r][w] count block — the constant-size
+            // intermediate of §3.4, numerically identical to
+            // reduceByKey-then-collectAsMap over the raw pairs.
+            let partials = sampled.map_partitions(ctx, |_, part| {
+                let n = part.len();
+                let mut flat = Vec::with_capacity(n * k);
+                for sk in part {
+                    flat.extend_from_slice(&sk.s);
+                }
+                let bins = binner.tile_bins(&chain, &flat, n);
+                let mut counts = vec![0u32; l * r * w];
+                for i in 0..n {
+                    for lvl in 0..l {
+                        let bin = &bins[(i * l + lvl) * k..(i * l + lvl + 1) * k];
+                        let h = crate::hash::bin_hash(bin);
+                        let block = &mut counts[lvl * r * w..(lvl + 1) * r * w];
+                        for row in 0..r as u32 {
+                            block[row as usize * w + crate::hash::cms_bucket_from(h, row, w)] += 1;
+                        }
+                    }
+                }
+                Ok(vec![counts])
+            })?;
+            // reduce: sum the constant-size blocks at the driver
+            // (collectAsMap analogue; network charged by `aggregate`)
+            let total = partials.aggregate(
+                ctx,
+                vec![0u32; l * r * w],
+                |mut acc, c| {
+                    for (a, b) in acc.iter_mut().zip(c.iter()) {
+                        *a += b;
+                    }
+                    acc
+                },
+                |mut a, b| {
+                    for (x, y) in a.iter_mut().zip(&b) {
+                        *x += y;
+                    }
+                    a
+                },
+            )?;
+            let cms: Vec<CountMinSketch> = (0..l)
+                .map(|lvl| {
+                    CountMinSketch::from_counts(r, w, &total[lvl * r * w..(lvl + 1) * r * w])
+                })
+                .collect();
+            Ok(TrainedChain { params: chain, cms })
+        })
+    }
+
+    /// Score one sketch against one trained chain (Eq. 5 / log2 variant).
+    /// Shared by the distributed scorer and the streaming front-end.
+    pub fn score_sketch_against(
+        chain: &TrainedChain,
+        mode: ScoreMode,
+        s: &[f32],
+        scratch: &mut [f32],
+        bins: &mut [i32],
+    ) -> f64 {
+        chain.params.bins_into(s, scratch, bins);
+        let k = chain.params.k();
+        let mut best = f64::INFINITY;
+        for (lvl, cms) in chain.cms.iter().enumerate() {
+            let c = cms.query(&bins[lvl * k..(lvl + 1) * k]) as f64;
+            let v = match mode {
+                ScoreMode::Extrapolated => (1u64 << (lvl + 1)) as f64 * c,
+                ScoreMode::Log2 => (1.0 + c).log2() + (lvl + 1) as f64,
+            };
+            if v < best {
+                best = v;
+            }
+        }
+        best
+    }
+
+    /// Step 3: distributed scoring of a dataset. Returns `(id, outlierness)`
+    /// pairs where **higher = more outlying** (the Eq. 5 average negated).
+    pub fn score_dataset(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Vec<(u64, f64)>> {
+        let proj = project_dataset(ctx, data, &self.projector)?;
+        self.score_sketches(ctx, &proj)
+    }
+
+    /// Score an already-projected DF with the native backend.
+    pub fn score_sketches(
+        &self,
+        ctx: &ClusterContext,
+        proj: &DistVec<Sketch>,
+    ) -> Result<Vec<(u64, f64)>> {
+        self.score_sketches_with(ctx, proj, &NativeBinner)
+    }
+
+    /// Score with an explicit binning backend (native or PJRT). The CMS
+    /// ensemble is broadcast once (Alg. 3 line 3); chains run on the
+    /// driver thread pool; per-chain vectors are summed distributedly.
+    pub fn score_sketches_with(
+        &self,
+        ctx: &ClusterContext,
+        proj: &DistVec<Sketch>,
+        binner: &dyn Binner,
+    ) -> Result<Vec<(u64, f64)>> {
+        let bcast: Broadcast<Vec<TrainedChain>> = Broadcast::new(ctx, self.chains.clone())?;
+        let mode = self.params.score_mode;
+        let k = self.deltamax.len();
+        // Chains run on the thread pool in batches; per-batch results are
+        // folded in chain order so the float summation is deterministic
+        // while only `num_threads` score vectors are alive at once.
+        let mut acc: Option<DistVec<f64>> = None;
+        let batch = ctx.cfg.num_threads.max(1);
+        let mut start = 0;
+        while start < self.chains.len() {
+            let count = batch.min(self.chains.len() - start);
+            let batch_scores = pool::try_run_indexed(ctx.cfg.num_threads, count, |i| {
+                let m = start + i;
+                self.score_one_chain(ctx, proj, binner, &bcast, m, mode, k)
+            })?;
+            for scores in batch_scores {
+                acc = Some(match acc.take() {
+                    None => scores,
+                    Some(prev) => prev.zip_map(ctx, &scores, |a, b| a + b)?,
+                });
+            }
+            start += count;
+        }
+        let summed = acc.ok_or_else(|| ClusterError::Invalid("no chains".into()))?;
+        let m = self.chains.len() as f64;
+        // average and negate: higher = more outlying
+        let avg = proj.zip_map(ctx, &summed, move |sk, &total| (sk.id, -(total / m)))?;
+        avg.collect(ctx)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn score_one_chain(
+        &self,
+        ctx: &ClusterContext,
+        proj: &DistVec<Sketch>,
+        binner: &dyn Binner,
+        bcast: &Broadcast<Vec<TrainedChain>>,
+        m: usize,
+        mode: ScoreMode,
+        k: usize,
+    ) -> Result<DistVec<f64>> {
+        {
+            let chains = bcast.value();
+            let chain = &chains[m];
+            let l = chain.params.depth();
+            let scores = proj.map_partitions(ctx, |_, part| {
+                let n = part.len();
+                let mut flat = Vec::with_capacity(n * k);
+                for sk in part {
+                    flat.extend_from_slice(&sk.s);
+                }
+                let bins = binner.tile_bins(&chain.params, &flat, n);
+                let mut out = Vec::with_capacity(n);
+                for i in 0..n {
+                    let pb = &bins[i * l * k..(i + 1) * l * k];
+                    let mut best = f64::INFINITY;
+                    for (lvl, cms) in chain.cms.iter().enumerate() {
+                        let c = cms.query(&pb[lvl * k..(lvl + 1) * k]) as f64;
+                        let v = match mode {
+                            ScoreMode::Extrapolated => (1u64 << (lvl + 1)) as f64 * c,
+                            ScoreMode::Log2 => (1.0 + c).log2() + (lvl + 1) as f64,
+                        };
+                        if v < best {
+                            best = v;
+                        }
+                    }
+                    out.push(best);
+                }
+                Ok(out)
+            })?;
+            Ok(scores)
+        }
+    }
+
+    /// Model footprint (what the driver holds / what scoring broadcasts):
+    /// O(M · L · r · w) — constant in n and d, the paper's §3.4 claim.
+    pub fn model_bytes(&self) -> usize {
+        self.chains.iter().map(SizeOf::size_of).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::data::generators::GisetteGen;
+
+    fn ctx() -> ClusterContext {
+        ClusterConfig { num_partitions: 4, num_workers: 2, num_threads: 2, ..Default::default() }
+            .build()
+    }
+
+    fn tiny_params() -> SparxParams {
+        SparxParams {
+            k: 8,
+            num_chains: 10,
+            depth: 6,
+            sample_rate: 1.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fit_and_score_separates_planted_outliers() {
+        let c = ctx();
+        let gen = GisetteGen { n: 1200, d: 48, ..Default::default() };
+        let ld = gen.generate(&c).unwrap();
+        let model = SparxModel::fit(&c, &ld.dataset, &tiny_params()).unwrap();
+        let scores = model.score_dataset(&c, &ld.dataset).unwrap();
+        assert_eq!(scores.len(), 1200);
+        let s: Vec<f64> = {
+            let mut v = vec![0.0; 1200];
+            for (id, sc) in &scores {
+                v[*id as usize] = *sc;
+            }
+            v
+        };
+        let auc = crate::metrics::auroc(&s, &ld.labels);
+        // tiny config (k=8, M=10, L=6) on a hard benchmark: well above
+        // chance is what we assert; the full-scale band is checked by the
+        // fig2 experiment (see EXPERIMENTS.md).
+        assert!(auc > 0.58, "Sparx should beat chance clearly: AUROC={auc}");
+    }
+
+    #[test]
+    fn scoring_is_deterministic() {
+        let c = ctx();
+        let gen = GisetteGen { n: 300, d: 16, ..Default::default() };
+        let ld = gen.generate(&c).unwrap();
+        let model = SparxModel::fit(&c, &ld.dataset, &tiny_params()).unwrap();
+        let a = model.score_dataset(&c, &ld.dataset).unwrap();
+        let b = model.score_dataset(&c, &ld.dataset).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn model_size_constant_in_n() {
+        let c = ctx();
+        let p = tiny_params();
+        let small = GisetteGen { n: 200, d: 16, ..Default::default() }.generate(&c).unwrap();
+        let large = GisetteGen { n: 2000, d: 16, ..Default::default() }.generate(&c).unwrap();
+        let ms = SparxModel::fit(&c, &small.dataset, &p).unwrap();
+        let ml = SparxModel::fit(&c, &large.dataset, &p).unwrap();
+        assert_eq!(ms.model_bytes(), ml.model_bytes(), "model must be O(MLrw), not O(n)");
+    }
+
+    #[test]
+    fn subsampled_fit_still_scores_everyone() {
+        let c = ctx();
+        let gen = GisetteGen { n: 800, d: 24, ..Default::default() };
+        let ld = gen.generate(&c).unwrap();
+        let p = SparxParams { sample_rate: 0.2, ..tiny_params() };
+        let model = SparxModel::fit(&c, &ld.dataset, &p).unwrap();
+        let scores = model.score_dataset(&c, &ld.dataset).unwrap();
+        assert_eq!(scores.len(), 800, "all points scored even with subsampled fit");
+    }
+
+    #[test]
+    fn extrapolated_and_log2_agree_on_ranking_direction() {
+        let c = ctx();
+        let gen = GisetteGen { n: 600, d: 24, ..Default::default() };
+        let ld = gen.generate(&c).unwrap();
+        let p1 = SparxParams { score_mode: ScoreMode::Log2, ..tiny_params() };
+        let p2 = SparxParams { score_mode: ScoreMode::Extrapolated, ..tiny_params() };
+        let m1 = SparxModel::fit(&c, &ld.dataset, &p1).unwrap();
+        let m2 = SparxModel::fit(&c, &ld.dataset, &p2).unwrap();
+        let unpack = |v: Vec<(u64, f64)>| {
+            let mut s = vec![0.0; 600];
+            for (id, sc) in v {
+                s[id as usize] = sc;
+            }
+            s
+        };
+        let s1 = unpack(m1.score_dataset(&c, &ld.dataset).unwrap());
+        let s2 = unpack(m2.score_dataset(&c, &ld.dataset).unwrap());
+        let a1 = crate::metrics::auroc(&s1, &ld.labels);
+        let a2 = crate::metrics::auroc(&s2, &ld.labels);
+        assert!((a1 - a2).abs() < 0.15, "modes disagree wildly: {a1} vs {a2}");
+    }
+
+    #[test]
+    fn shuffle_rounds_scale_with_chains_not_points() {
+        let p = tiny_params();
+        let c1 = ctx();
+        let small = GisetteGen { n: 200, d: 16, ..Default::default() }.generate(&c1).unwrap();
+        let _ = SparxModel::fit(&c1, &small.dataset, &p).unwrap();
+        let rounds_small = c1.ledger.rounds();
+        let c2 = ctx();
+        let large = GisetteGen { n: 1600, d: 16, ..Default::default() }.generate(&c2).unwrap();
+        let _ = SparxModel::fit(&c2, &large.dataset, &p).unwrap();
+        assert_eq!(rounds_small, c2.ledger.rounds(), "pass structure must not depend on n");
+    }
+
+    #[test]
+    fn identity_mode_for_low_dim() {
+        let c = ctx();
+        let rows = crate::cluster::DistVec::from_vec(
+            &c,
+            (0..100)
+                .map(|i| crate::data::Row::dense(i, vec![(i % 10) as f32, (i / 10) as f32]))
+                .collect(),
+        )
+        .unwrap();
+        let ds = Dataset::new(crate::data::Schema::positional(2), rows);
+        let p = SparxParams { k: 0, num_chains: 4, depth: 4, ..Default::default() };
+        let model = SparxModel::fit(&c, &ds, &p).unwrap();
+        assert_eq!(model.deltamax.len(), 2);
+        let scores = model.score_dataset(&c, &ds).unwrap();
+        assert_eq!(scores.len(), 100);
+    }
+}

@@ -1,0 +1,20 @@
+//! The Sparx algorithm (the paper's contribution): distributed,
+//! data-parallel xStream on the shared-nothing substrate.
+//!
+//! * [`projector`] — Step 1: hash-based sparse random projections (Eq. 2)
+//! * [`chain`] — half-space chains and the binning recurrence (Eq. 4)
+//! * [`cms`] — count-min sketches (per chain level)
+//! * [`ensemble`] — Steps 2–3: distributed fit and scoring (Algs. 2–3, Eq. 5)
+//! * [`stream`] — §3.5 deployment front-end for evolving streams
+
+pub mod chain;
+pub mod cms;
+pub mod ensemble;
+pub mod projector;
+pub mod stream;
+
+pub use chain::{Binner, ChainParams, NativeBinner};
+pub use cms::CountMinSketch;
+pub use ensemble::{ScoreMode, SparxModel, SparxParams, TrainedChain};
+pub use projector::{compute_deltamax, project_dataset, Projector, Sketch};
+pub use stream::{StreamScore, StreamScorer};

@@ -1,0 +1,262 @@
+//! Streaming front-end (§3.5, Problem 2): a single deployment node that
+//! receives ⟨ID, F, δ⟩ update triples over an *evolving* stream and
+//! returns the updated outlier score in constant time.
+//!
+//! * sketches of the N most recently touched IDs live in an LRU cache —
+//!   O(N·K) space;
+//! * a δ-update adjusts K sketch entries via Eq. (3) — O(K) time — and
+//!   works for **never-before-seen features** because the projection
+//!   entries are hashed on the fly, not cached;
+//! * re-scoring reads r buckets per level per chain — O(K + rLM) time;
+//! * the model (all CMSes) is O(rwLM) — constant in n and d.
+
+use crate::util::LruCache;
+
+use super::ensemble::{ScoreMode, SparxModel, TrainedChain};
+use crate::data::UpdateTriple;
+
+/// Outcome of one streamed update.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamScore {
+    pub id: u64,
+    /// Higher = more outlying (same convention as batch scoring).
+    pub outlierness: f64,
+    /// Whether the point was newly admitted to the cache by this update.
+    pub fresh: bool,
+}
+
+/// The deployment-node scorer.
+pub struct StreamScorer {
+    chains: Vec<TrainedChain>,
+    projector: crate::sparx::Projector,
+    mode: ScoreMode,
+    k: usize,
+    cache: LruCache<u64, Vec<f32>>,
+    // scratch buffers reused across updates (no allocation per update)
+    scratch: Vec<f32>,
+    bins: Vec<i32>,
+    evicted: u64,
+    processed: u64,
+}
+
+impl StreamScorer {
+    /// Build from a fitted model with an LRU capacity of `cache_size` IDs.
+    /// Requires a hashing projector (k > 0): evolving features need the
+    /// hash-not-cash trick of Eq. (2)/(3).
+    pub fn new(model: &SparxModel, cache_size: usize) -> Result<Self, String> {
+        if model.projector.is_identity() {
+            return Err("streaming requires a hashing projector (params.k > 0)".into());
+        }
+        let k = model.projector.k();
+        let depth = model.params.depth;
+        Ok(StreamScorer {
+            chains: model.chains.clone(),
+            projector: model.projector.clone(),
+            mode: model.params.score_mode,
+            k,
+            cache: LruCache::new(cache_size),
+            scratch: vec![0.0; k],
+            bins: vec![0; depth * k],
+            evicted: 0,
+            processed: 0,
+        })
+    }
+
+    /// Apply one ⟨ID, F, δ⟩ update (Eq. 3) and return the updated score.
+    pub fn update(&mut self, u: &UpdateTriple) -> StreamScore {
+        self.processed += 1;
+        let id = u.id();
+        let fresh = !self.cache.contains(&id);
+        if fresh {
+            if self.cache.put(id, vec![0.0f32; self.k]).is_some() {
+                self.evicted += 1;
+            }
+        }
+        {
+            let s = self.cache.get_mut(&id).expect("just inserted");
+            match u {
+                UpdateTriple::Num { feature, delta, .. } => {
+                    // s[k] += h_k(F) · δ — works for brand-new features too
+                    for (sk, h) in s.iter_mut().zip(&self.projector.hashers) {
+                        *sk += h.feature(feature) * *delta as f32;
+                    }
+                }
+                UpdateTriple::Cat { feature, old, new, .. } => {
+                    // s[k] += h_k(F⊕new) − h_k(F⊕old); old = null ⇒ 0
+                    for (sk, h) in s.iter_mut().zip(&self.projector.hashers) {
+                        *sk += h.feature_value(feature, new);
+                        if let Some(o) = old {
+                            *sk -= h.feature_value(feature, o);
+                        }
+                    }
+                }
+            }
+        }
+        let outlierness = self.score_id(id).expect("cached");
+        StreamScore { id, outlierness, fresh }
+    }
+
+    /// Score a cached ID against the ensemble: O(rLM) CMS reads, zero
+    /// allocations (scratch buffers are reused across updates).
+    pub fn score_id(&mut self, id: u64) -> Option<f64> {
+        let s = self.cache.get(&id)?; // disjoint field borrows below
+        let mut total = 0.0;
+        for chain in &self.chains {
+            total += SparxModel::score_sketch_against(
+                chain,
+                self.mode,
+                s,
+                &mut self.scratch,
+                &mut self.bins,
+            );
+        }
+        Some(-(total / self.chains.len() as f64))
+    }
+
+    /// Absorb the point's current sketch into the density counts (the
+    /// xStream streaming behaviour: new points update the histograms).
+    pub fn absorb(&mut self, id: u64) -> bool {
+        let Some(s) = self.cache.get(&id).cloned() else { return false };
+        let k = self.k;
+        for chain in &mut self.chains {
+            chain.params.bins_into(&s, &mut self.scratch, &mut self.bins);
+            for (lvl, cms) in chain.cms.iter_mut().enumerate() {
+                cms.insert(&self.bins[lvl * k..(lvl + 1) * k]);
+            }
+        }
+        true
+    }
+
+    pub fn cached_ids(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evicted
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::data::generators::GisetteGen;
+    use crate::sparx::SparxParams;
+
+    fn fitted() -> SparxModel {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let ld = GisetteGen { n: 400, d: 24, ..Default::default() }.generate(&ctx).unwrap();
+        SparxModel::fit(
+            &ctx,
+            &ld.dataset,
+            &SparxParams { k: 8, num_chains: 8, depth: 5, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn updates_accumulate() {
+        let model = fitted();
+        let mut s = StreamScorer::new(&model, 16).unwrap();
+        let a = s.update(&UpdateTriple::Num { id: 1, feature: "f0".into(), delta: 1.0 });
+        assert!(a.fresh);
+        let b = s.update(&UpdateTriple::Num { id: 1, feature: "f0".into(), delta: 1.0 });
+        assert!(!b.fresh);
+        // two +1 updates must equal one +2 update on a fresh id
+        let c2 = s.update(&UpdateTriple::Num { id: 2, feature: "f0".into(), delta: 2.0 });
+        assert!((b.outlierness - c2.outlierness).abs() < 1e-9);
+    }
+
+    #[test]
+    fn categorical_substitution_cancels() {
+        let model = fitted();
+        let mut s = StreamScorer::new(&model, 16).unwrap();
+        let base = s.update(&UpdateTriple::Num { id: 5, feature: "f1".into(), delta: 0.7 });
+        // NYC then NYC→Austin then Austin→NYC must return to the NYC state
+        let _ = s.update(&UpdateTriple::Cat {
+            id: 5,
+            feature: "loc".into(),
+            old: None,
+            new: "NYC".into(),
+        });
+        let nyc1 = s.score_id(5).unwrap();
+        let _ = s.update(&UpdateTriple::Cat {
+            id: 5,
+            feature: "loc".into(),
+            old: Some("NYC".into()),
+            new: "Austin".into(),
+        });
+        let _ = s.update(&UpdateTriple::Cat {
+            id: 5,
+            feature: "loc".into(),
+            old: Some("Austin".into()),
+            new: "NYC".into(),
+        });
+        let nyc2 = s.score_id(5).unwrap();
+        assert!((nyc1 - nyc2).abs() < 1e-6, "{nyc1} vs {nyc2}");
+        let _ = base;
+    }
+
+    #[test]
+    fn brand_new_feature_accepted() {
+        let model = fitted();
+        let mut s = StreamScorer::new(&model, 16).unwrap();
+        let r = s.update(&UpdateTriple::Num {
+            id: 9,
+            feature: "never_seen_indicator_42".into(),
+            delta: 3.0,
+        });
+        assert!(r.outlierness.is_finite());
+    }
+
+    #[test]
+    fn lru_bounds_memory() {
+        let model = fitted();
+        let mut s = StreamScorer::new(&model, 8).unwrap();
+        for id in 0..100 {
+            s.update(&UpdateTriple::Num { id, feature: "f0".into(), delta: 1.0 });
+        }
+        assert_eq!(s.cached_ids(), 8);
+        assert_eq!(s.evictions(), 92);
+        assert_eq!(s.processed(), 100);
+    }
+
+    #[test]
+    fn absorb_increases_density_at_point() {
+        let model = fitted();
+        let mut s = StreamScorer::new(&model, 16).unwrap();
+        let before = s.update(&UpdateTriple::Num { id: 3, feature: "f2".into(), delta: 5.0 });
+        // absorbing the point several times makes its region denser ⇒ its
+        // outlierness must strictly drop
+        for _ in 0..5 {
+            assert!(s.absorb(3));
+        }
+        let after = s.score_id(3).unwrap();
+        assert!(after < before.outlierness, "{after} !< {}", before.outlierness);
+    }
+
+    #[test]
+    fn identity_model_rejected() {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let ld = crate::data::generators::OsmGen {
+            n_inliers: 500,
+            n_outliers: 5,
+            roads: 5,
+            cities: 3,
+            ..Default::default()
+        }
+        .generate(&ctx)
+        .unwrap();
+        let model = SparxModel::fit(
+            &ctx,
+            &ld.dataset,
+            &SparxParams { k: 0, num_chains: 4, depth: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert!(StreamScorer::new(&model, 8).is_err());
+    }
+}

@@ -1,0 +1,205 @@
+//! Size-bounded LRU cache used by the streaming front-end (§3.5): the
+//! deployment node keeps the sketches of the N most recently updated point
+//! IDs so that δ-updates are O(K) and scoring O(KrLM) — constant time.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Doubly-linked-list LRU over a slab, O(1) get/put/evict.
+#[derive(Debug)]
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    capacity: usize,
+    map: HashMap<K, usize>,
+    slab: Vec<Entry<K, V>>,
+    head: usize, // most recent
+    tail: usize, // least recent
+    free: Vec<usize>,
+}
+
+#[derive(Debug)]
+struct Entry<K, V> {
+    key: K,
+    value: V,
+    prev: usize,
+    next: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// `capacity` must be ≥ 1.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "LRU capacity must be >= 1");
+        LruCache {
+            capacity,
+            map: HashMap::with_capacity(capacity),
+            slab: Vec::with_capacity(capacity),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn detach(&mut self, idx: usize) {
+        let (prev, next) = (self.slab[idx].prev, self.slab[idx].next);
+        if prev != NIL {
+            self.slab[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slab[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.slab[idx].prev = NIL;
+        self.slab[idx].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Get and mark as most-recently used.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let idx = *self.map.get(key)?;
+        self.detach(idx);
+        self.push_front(idx);
+        Some(&self.slab[idx].value)
+    }
+
+    /// Mutable access, marks as most-recently used.
+    pub fn get_mut(&mut self, key: &K) -> Option<&mut V> {
+        let idx = *self.map.get(key)?;
+        self.detach(idx);
+        self.push_front(idx);
+        Some(&mut self.slab[idx].value)
+    }
+
+    /// Peek without touching recency.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|&i| &self.slab[i].value)
+    }
+
+    /// Insert, evicting the least-recently-used entry if at capacity.
+    /// Returns the evicted (key, value) if any.
+    pub fn put(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if let Some(&idx) = self.map.get(&key) {
+            self.slab[idx].value = value;
+            self.detach(idx);
+            self.push_front(idx);
+            return None;
+        }
+        let mut evicted = None;
+        if self.map.len() >= self.capacity {
+            let lru = self.tail;
+            debug_assert_ne!(lru, NIL);
+            self.detach(lru);
+            let old_key = self.slab[lru].key.clone();
+            self.map.remove(&old_key);
+            self.free.push(lru);
+            // take the value out by swapping in the new one below
+            evicted = Some((old_key, lru));
+        }
+        let idx = if let Some(i) = self.free.pop() {
+            let old = std::mem::replace(
+                &mut self.slab[i],
+                Entry { key: key.clone(), value, prev: NIL, next: NIL },
+            );
+            if let Some((k, j)) = evicted.take() {
+                debug_assert_eq!(i, j);
+                self.map.insert(key, i);
+                self.push_front(i);
+                return Some((k, old.value));
+            }
+            i
+        } else {
+            self.slab.push(Entry { key: key.clone(), value, prev: NIL, next: NIL });
+            self.slab.len() - 1
+        };
+        self.map.insert(key, idx);
+        self.push_front(idx);
+        None
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_put_get() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        assert_eq!(c.get(&"a"), Some(&1));
+        assert_eq!(c.get(&"b"), Some(&2));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn evicts_least_recent() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        c.get(&"a"); // a is now most recent
+        let ev = c.put("c", 3);
+        assert_eq!(ev, Some(("b", 2)));
+        assert!(c.contains(&"a"));
+        assert!(!c.contains(&"b"));
+        assert!(c.contains(&"c"));
+    }
+
+    #[test]
+    fn update_existing_does_not_evict() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        assert!(c.put("a", 10).is_none());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&"a"), Some(&10));
+    }
+
+    #[test]
+    fn heavy_churn_capacity_respected() {
+        let mut c = LruCache::new(16);
+        for i in 0..10_000u64 {
+            c.put(i % 64, i);
+            assert!(c.len() <= 16);
+        }
+        // the 16 most recent distinct keys (mod 64) must be present
+        for i in (10_000 - 16)..10_000u64 {
+            assert!(c.contains(&(i % 64)), "missing {}", i % 64);
+        }
+    }
+
+    #[test]
+    fn get_mut_updates_value() {
+        let mut c = LruCache::new(2);
+        c.put(1, vec![1.0f32]);
+        c.get_mut(&1).unwrap().push(2.0);
+        assert_eq!(c.peek(&1).unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities: deterministic RNG, LRU cache, size
+//! estimation for the cluster simulator's memory/shuffle accounting.
+
+pub mod json;
+pub mod lru;
+pub mod rng;
+pub mod sizeof;
+
+pub use json::Json;
+pub use lru::LruCache;
+pub use rng::Rng;
+pub use sizeof::SizeOf;

@@ -1,0 +1,120 @@
+//! Byte-size estimation for the cluster simulator's accounting.
+//!
+//! The paper reports peak executor / driver memory and we reproduce the
+//! *relative* behaviour (who blows up, by what factor) by charging every
+//! partition, shuffle buffer and broadcast variable with an estimated
+//! deep size. Estimates are deliberately simple (payload bytes + small
+//! constant per heap object), which is enough to preserve orderings.
+
+/// Estimated deep size in bytes (heap payload + inline size).
+pub trait SizeOf {
+    fn size_of(&self) -> usize;
+}
+
+macro_rules! prim_size {
+    ($($t:ty),*) => {
+        $(impl SizeOf for $t {
+            fn size_of(&self) -> usize { std::mem::size_of::<$t>() }
+        })*
+    };
+}
+
+prim_size!(u8, u16, u32, u64, usize, i8, i16, i32, i64, isize, f32, f64, bool, char);
+
+impl SizeOf for String {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<String>() + self.len()
+    }
+}
+
+impl<T: SizeOf> SizeOf for Vec<T> {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Vec<T>>() + self.iter().map(|x| x.size_of()).sum::<usize>()
+    }
+}
+
+impl<T: SizeOf> SizeOf for Option<T> {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Option<T>>() + self.as_ref().map_or(0, |x| x.size_of())
+    }
+}
+
+impl<T: SizeOf> SizeOf for Box<T> {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Box<T>>() + (**self).size_of()
+    }
+}
+
+impl<A: SizeOf, B: SizeOf> SizeOf for (A, B) {
+    fn size_of(&self) -> usize {
+        self.0.size_of() + self.1.size_of()
+    }
+}
+
+impl<A: SizeOf, B: SizeOf, C: SizeOf> SizeOf for (A, B, C) {
+    fn size_of(&self) -> usize {
+        self.0.size_of() + self.1.size_of() + self.2.size_of()
+    }
+}
+
+impl<K: SizeOf, V: SizeOf> SizeOf for std::collections::HashMap<K, V> {
+    fn size_of(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self
+                .iter()
+                .map(|(k, v)| k.size_of() + v.size_of() + 16) // bucket overhead
+                .sum::<usize>()
+    }
+}
+
+impl<T: SizeOf, const N: usize> SizeOf for [T; N] {
+    fn size_of(&self) -> usize {
+        self.iter().map(|x| x.size_of()).sum()
+    }
+}
+
+/// Human-readable bytes (for reports).
+pub fn human_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_of_f32() {
+        let v = vec![0f32; 100];
+        assert_eq!(v.size_of(), std::mem::size_of::<Vec<f32>>() + 400);
+    }
+
+    #[test]
+    fn nested_vec() {
+        let v = vec![vec![0u8; 10]; 3];
+        assert!(v.size_of() >= 30);
+    }
+
+    #[test]
+    fn string_size_counts_bytes() {
+        let s = String::from("hello");
+        assert_eq!(s.size_of(), std::mem::size_of::<String>() + 5);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(2048), "2.00KB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00MB");
+    }
+}

@@ -1,0 +1,260 @@
+//! End-to-end integration tests: the full pipeline over every dataset
+//! regime, backend equality through the AOT artifacts, and failure
+//! injection against the cluster budgets.
+
+use sparx::baselines::dbscout::{Dbscout, DbscoutParams};
+use sparx::baselines::{Spif, SpifParams, XStream, XStreamParams};
+use sparx::cluster::{ClusterConfig, ClusterError, DistVec};
+use sparx::config::presets;
+use sparx::data::generators::{GisetteGen, OsmGen, SpamUrlGen};
+use sparx::experiments::align_scores;
+use sparx::metrics::{auroc, f1_binary, RankMetrics};
+use sparx::sparx::{project_dataset, SparxModel, SparxParams};
+
+fn local(parts: usize) -> sparx::ClusterContext {
+    ClusterConfig { num_partitions: parts, num_workers: 4, num_threads: 4, ..Default::default() }
+        .build()
+}
+
+#[test]
+fn gisette_regime_end_to_end() {
+    let ctx = local(8);
+    let ld = GisetteGen { n: 2000, d: 128, ..Default::default() }.generate(&ctx).unwrap();
+    let p = SparxParams { k: 25, num_chains: 25, depth: 10, sample_rate: 0.5, ..Default::default() };
+    let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+    let scores = model.score_dataset(&ctx, &ld.dataset).unwrap();
+    let m = RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+    assert!(m.auroc > 0.6, "gisette AUROC {}", m.auroc);
+    assert!(m.auprc > ld.outlier_rate(), "AUPRC below prevalence");
+}
+
+#[test]
+fn osm_regime_end_to_end_no_projection() {
+    let ctx = local(8);
+    let ld = OsmGen {
+        n_inliers: 30_000,
+        n_outliers: 60,
+        roads: 40,
+        cities: 10,
+        ..Default::default()
+    }
+    .generate(&ctx)
+    .unwrap();
+    let p = SparxParams { k: 0, num_chains: 10, depth: 10, sample_rate: 0.1, ..Default::default() };
+    let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+    let scores = model.score_dataset(&ctx, &ld.dataset).unwrap();
+    let m = RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+    // isolated injected outliers in empty cells are easy for density OD
+    assert!(m.auroc > 0.9, "osm AUROC {}", m.auroc);
+}
+
+#[test]
+fn spamurl_regime_end_to_end_sparse() {
+    let ctx = local(8);
+    let ld = SpamUrlGen { n: 3000, d: 50_000, mean_nnz: 60, ..Default::default() }
+        .generate(&ctx)
+        .unwrap();
+    let p = SparxParams { k: 50, num_chains: 20, depth: 10, sample_rate: 0.5, ..Default::default() };
+    let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+    let scores = model.score_dataset(&ctx, &ld.dataset).unwrap();
+    let m = RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+    assert!(m.auroc > 0.55, "spamurl AUROC {}", m.auroc);
+}
+
+#[test]
+fn scores_invariant_to_partitioning_at_full_rate() {
+    // at sample_rate=1 the distributed result must not depend on how the
+    // data is partitioned (data-parallel correctness)
+    let p = SparxParams { k: 12, num_chains: 8, depth: 6, sample_rate: 1.0, ..Default::default() };
+    // one fixed dataset, repartitioned three ways (the generators are
+    // partition-local, so the raw rows must be shared explicitly)
+    let base = local(4);
+    let ld = GisetteGen { n: 600, d: 32, ..Default::default() }.generate(&base).unwrap();
+    let rows = ld.dataset.rows.collect(&base).unwrap();
+    let mut all = Vec::new();
+    for parts in [2usize, 7, 16] {
+        let ctx = local(parts);
+        let dv = DistVec::from_vec(&ctx, rows.clone()).unwrap();
+        let ds = sparx::data::Dataset::new(
+            sparx::data::Schema::positional(32),
+            dv,
+        );
+        let model = SparxModel::fit(&ctx, &ds, &p).unwrap();
+        let mut scores = model.score_dataset(&ctx, &ds).unwrap();
+        scores.sort_by_key(|(id, _)| *id);
+        all.push(scores);
+    }
+    assert_eq!(all[0], all[1], "2 vs 7 partitions diverge");
+    assert_eq!(all[1], all[2], "7 vs 16 partitions diverge");
+}
+
+#[test]
+fn pjrt_backend_end_to_end_equals_native() {
+    let dir = sparx::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = sparx::runtime::PjrtEngine::start_default().unwrap();
+    let ctx = local(4);
+    // gisette artifact is compiled for K=50 L=20
+    let ld = GisetteGen { n: 1000, d: 512, ..Default::default() }.generate(&ctx).unwrap();
+    let p = SparxParams { k: 50, num_chains: 6, depth: 20, sample_rate: 1.0, ..Default::default() };
+    let native_model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+    let binner = sparx::runtime::PjrtBinner { engine: &engine, variant: "gisette".into() };
+    let pjrt_model = SparxModel::fit_with(&ctx, &ld.dataset, &p, &binner).unwrap();
+    // identical CMS counts → identical fitted state
+    for (a, b) in native_model.chains.iter().zip(&pjrt_model.chains) {
+        assert_eq!(a.params, b.params);
+        let mismatched = a.cms.iter().zip(&b.cms).filter(|(x, y)| x != y).count();
+        assert!(mismatched <= 1, "fitted CMS diverge in {mismatched} levels");
+    }
+    // scores agree through either scoring backend
+    let proj = project_dataset(&ctx, &ld.dataset, &native_model.projector).unwrap();
+    let ns = native_model.score_sketches(&ctx, &proj).unwrap();
+    let ps = native_model.score_sketches_with(&ctx, &proj, &binner).unwrap();
+    let max_dev = ns
+        .iter()
+        .zip(&ps)
+        .map(|((_, a), (_, b))| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(max_dev < 1e-9, "score deviation {max_dev}");
+}
+
+#[test]
+fn sparx_and_xstream_agree_and_spif_detects() {
+    let ctx = local(4);
+    let ld = GisetteGen { n: 800, d: 64, ..Default::default() }.generate(&ctx).unwrap();
+    let rows = ld.dataset.rows.collect(&ctx).unwrap();
+    // xStream (single machine)
+    let xs = XStream::fit(
+        &rows,
+        &ld.dataset.schema.names,
+        &XStreamParams { k: 16, num_chains: 10, depth: 8, ..Default::default() },
+    );
+    let xscores: Vec<f64> = {
+        let mut v = vec![0.0; rows.len()];
+        for (id, s) in xs.score(&rows) {
+            v[id as usize] = s;
+        }
+        v
+    };
+    assert!(auroc(&xscores, &ld.labels) > 0.55);
+    // SPIF
+    let spif = Spif::fit(
+        &ctx,
+        &ld.dataset,
+        &SpifParams { num_trees: 25, max_depth: 10, sample_rate: 0.5, ..Default::default() },
+    )
+    .unwrap();
+    let sscores = align_scores(&spif.score_dataset(&ctx, &ld.dataset).unwrap(), rows.len());
+    assert!(auroc(&sscores, &ld.labels) > 0.5);
+}
+
+#[test]
+fn dbscout_f1_reasonable_on_osm_like() {
+    let ctx = local(8);
+    let ld = OsmGen {
+        n_inliers: 20_000,
+        n_outliers: 40,
+        roads: 30,
+        cities: 8,
+        ..Default::default()
+    }
+    .generate(&ctx)
+    .unwrap();
+    // eps via the paper's elbow heuristic — a fixed eps is meaningless
+    // across densities
+    let eps = Dbscout::choose_eps(&ctx, &ld.dataset, 8, 400).unwrap();
+    let v = Dbscout::run(
+        &ctx,
+        &ld.dataset,
+        &DbscoutParams { eps, min_pts: 8, ..Default::default() },
+    )
+    .unwrap();
+    let mut pred = vec![false; ld.labels.len()];
+    for (id, o) in v.pred {
+        pred[id as usize] = o;
+    }
+    let f1 = f1_binary(&pred, &ld.labels);
+    assert!(f1 > 0.3, "DBSCOUT F1 on its home turf: {f1}");
+}
+
+#[test]
+fn deadline_failure_injection_mid_job() {
+    let ctx = ClusterConfig {
+        num_partitions: 8,
+        num_workers: 2,
+        num_threads: 2,
+        deadline_secs: Some(0.0), // everything is too late
+        ..Default::default()
+    }
+    .build();
+    // generation uses pool paths that don't check the deadline, but fit must die
+    let ld = GisetteGen { n: 500, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+    let r = SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 8, num_chains: 4, depth: 4, ..Default::default() },
+    );
+    assert!(matches!(r, Err(ClusterError::DeadlineExceeded { .. })));
+}
+
+#[test]
+fn driver_budget_failure_injection() {
+    let ctx = ClusterConfig {
+        num_partitions: 4,
+        num_workers: 2,
+        num_threads: 2,
+        driver_mem_bytes: 1024, // driver can't hold the collected CMS maps
+        ..Default::default()
+    }
+    .build();
+    let ld = GisetteGen { n: 500, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+    let r = SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 8, num_chains: 4, depth: 4, ..Default::default() },
+    );
+    assert!(matches!(
+        r,
+        Err(ClusterError::DriverMemExceeded { .. }) | Err(ClusterError::MemExceeded { .. })
+    ));
+}
+
+#[test]
+fn presets_run_the_pipeline() {
+    for preset in [presets::config_mod(), presets::config_gen()] {
+        let ctx = preset.build();
+        let ld = GisetteGen { n: 400, d: 32, ..Default::default() }.generate(&ctx).unwrap();
+        let p = SparxParams { k: 8, num_chains: 4, depth: 4, ..Default::default() };
+        let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+        assert_eq!(model.score_dataset(&ctx, &ld.dataset).unwrap().len(), 400);
+    }
+}
+
+#[test]
+fn csv_roundtrip_through_detection() {
+    let dir = std::env::temp_dir().join("sparx_it_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("data.csv");
+    // write a small labeled dataset, reload it, detect on it
+    let ctx = local(4);
+    let ld = GisetteGen { n: 300, d: 8, ..Default::default() }.generate(&ctx).unwrap();
+    let rows = ld.dataset.rows.collect(&ctx).unwrap();
+    use std::io::Write;
+    let mut f = std::fs::File::create(&path).unwrap();
+    writeln!(f, "{},label", ld.dataset.schema.names.join(",")).unwrap();
+    for r in &rows {
+        let cells: Vec<String> =
+            r.features.as_dense().iter().map(|x| x.to_string()).collect();
+        writeln!(f, "{},{}", cells.join(","), u8::from(ld.labels[r.id as usize])).unwrap();
+    }
+    drop(f);
+    let reloaded = sparx::data::loader::load_csv(&ctx, &path, Some(8)).unwrap();
+    assert_eq!(reloaded.dataset.len(), 300);
+    assert_eq!(reloaded.labels, ld.labels);
+    let p = SparxParams { k: 8, num_chains: 6, depth: 5, ..Default::default() };
+    let model = SparxModel::fit(&ctx, &reloaded.dataset, &p).unwrap();
+    assert_eq!(model.score_dataset(&ctx, &reloaded.dataset).unwrap().len(), 300);
+}

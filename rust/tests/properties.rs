@@ -1,0 +1,262 @@
+//! Property-based tests over randomized inputs (in-tree generator-driven
+//! properties — the offline build has no proptest crate, so cases are
+//! driven by the library's own deterministic PCG with fixed seeds and
+//! wide case counts; failures print the violating seed for replay).
+
+use std::collections::HashMap;
+
+use sparx::cluster::{ClusterConfig, DistVec};
+use sparx::hash::SignHasher;
+use sparx::metrics::{auprc, auroc};
+use sparx::sparx::chain::{Binner, NativeBinner};
+use sparx::sparx::{ChainParams, CountMinSketch};
+use sparx::util::{LruCache, Rng};
+
+fn ctx(parts: usize, workers: usize) -> sparx::ClusterContext {
+    ClusterConfig { num_partitions: parts, num_workers: workers, ..Default::default() }.build()
+}
+
+/// reduce_by_key must equal a sequential group-by for arbitrary inputs,
+/// partition counts and worker counts.
+#[test]
+fn prop_reduce_by_key_equals_sequential_groupby() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(2000) as usize;
+        let keys = 1 + rng.below(50) as u32;
+        let parts = 1 + rng.below(12) as usize;
+        let workers = 1 + rng.below(5) as usize;
+        let pairs: Vec<(u32, u64)> =
+            (0..n).map(|_| (rng.below(keys as u64) as u32, rng.below(100))).collect();
+        let mut want: HashMap<u32, u64> = HashMap::new();
+        for &(k, v) in &pairs {
+            *want.entry(k).or_insert(0) += v;
+        }
+        let c = ctx(parts, workers);
+        let dv = DistVec::from_vec(&c, pairs).unwrap();
+        let got = dv.reduce_by_key(&c, |a, b| a + b).unwrap().collect_as_map(&c).unwrap();
+        assert_eq!(got, want, "seed {seed} (n={n} keys={keys} parts={parts})");
+    }
+}
+
+/// map/flat_map/filter/sample must preserve or bound counts and keep
+/// deterministic results across worker counts.
+#[test]
+fn prop_ops_count_invariants() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0xA11CE);
+        let n = rng.below(3000) as usize;
+        let parts = 1 + rng.below(9) as usize;
+        let data: Vec<u32> = (0..n).map(|_| rng.next_u32() % 1000).collect();
+        let c = ctx(parts, 4);
+        let dv = DistVec::from_vec(&c, data.clone()).unwrap();
+        assert_eq!(dv.map(&c, |x| x + 1).unwrap().len(), n);
+        let fm = dv.flat_map(&c, |&x| vec![x; (x % 3) as usize]).unwrap();
+        let expect: usize = data.iter().map(|&x| (x % 3) as usize).sum();
+        assert_eq!(fm.len(), expect, "seed {seed}");
+        let filt = dv.filter(&c, |&x| x % 2 == 0).unwrap();
+        assert_eq!(filt.len(), data.iter().filter(|&&x| x % 2 == 0).count());
+        let rate = rng.f64();
+        let s1 = dv.sample(&c, rate, 99).unwrap();
+        let s2 = dv.sample(&c, rate, 99).unwrap();
+        assert_eq!(s1.collect(&c).unwrap(), s2.collect(&c).unwrap(), "sampling must be deterministic");
+        assert!(s1.len() <= n);
+    }
+}
+
+/// Results must not depend on the number of workers (only on data and
+/// partitioning) — the shared-nothing substrate cannot leak scheduling.
+#[test]
+fn prop_worker_count_invariance() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x30B);
+        let n = 1 + rng.below(1500) as usize;
+        let data: Vec<u64> = (0..n).map(|_| rng.below(10_000)).collect();
+        let mut outs = Vec::new();
+        for workers in [1usize, 3, 8] {
+            let c = ctx(6, workers);
+            let dv = DistVec::from_vec(&c, data.clone()).unwrap();
+            let mapped = dv.map(&c, |x| x * 3 + 1).unwrap();
+            outs.push(mapped.collect(&c).unwrap());
+        }
+        assert_eq!(outs[0], outs[1], "seed {seed}");
+        assert_eq!(outs[1], outs[2], "seed {seed}");
+    }
+}
+
+/// CMS can only over-estimate, never under-estimate; and merging partial
+/// sketches equals inserting the union.
+#[test]
+fn prop_cms_overestimates_and_merges() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0xC35);
+        let r = 1 + rng.below(8) as usize;
+        let w = 8 + rng.below(256) as usize;
+        let mut a = CountMinSketch::new(r, w);
+        let mut b = CountMinSketch::new(r, w);
+        let mut whole = CountMinSketch::new(r, w);
+        let mut truth: HashMap<Vec<i32>, u32> = HashMap::new();
+        for i in 0..1500 {
+            let bin: Vec<i32> =
+                (0..3).map(|_| rng.below(40) as i32 - 20).collect();
+            *truth.entry(bin.clone()).or_insert(0) += 1;
+            if i % 2 == 0 {
+                a.insert(&bin);
+            } else {
+                b.insert(&bin);
+            }
+            whole.insert(&bin);
+        }
+        a.merge(&b);
+        for (bin, &count) in &truth {
+            assert!(a.query(bin) >= count, "seed {seed}: underestimate");
+            assert_eq!(a.query(bin), whole.query(bin), "merge != union insert");
+        }
+    }
+}
+
+/// Binning invariants: equal sketches get equal bins; bins shift by
+/// exactly ±1 at level 0 when a point moves by exactly Δ along the first
+/// sampled feature; tile binning equals per-point binning.
+#[test]
+fn prop_binning_invariants() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0xB1A5);
+        let k = 1 + rng.below(12) as usize;
+        let l = 1 + rng.below(16) as usize;
+        let delta: Vec<f32> = (0..k).map(|_| rng.range_f64(0.25, 4.0) as f32).collect();
+        let chain = ChainParams::sample(&delta, l, &mut rng);
+        let s: Vec<f32> = (0..k).map(|_| (rng.normal() * 3.0) as f32).collect();
+        assert_eq!(chain.bins(&s), chain.bins(&s), "determinism");
+        // translation by Δ along the first-sampled feature moves the
+        // level-0 bin of that feature by exactly 1
+        let f0 = chain.fs[0];
+        let mut s2 = s.clone();
+        s2[f0] += chain.deltamax[f0];
+        let b1 = chain.bins(&s);
+        let b2 = chain.bins(&s2);
+        assert_eq!(b2[f0] - b1[f0], 1, "seed {seed}: level-0 shift along f0");
+        // tile == per-point
+        let n = 1 + rng.below(40) as usize;
+        let flat: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        let tiled = NativeBinner.tile_bins(&chain, &flat, n);
+        for i in 0..n {
+            assert_eq!(
+                &tiled[i * l * k..(i + 1) * l * k],
+                chain.bins(&flat[i * k..(i + 1) * k]).as_slice()
+            );
+        }
+    }
+}
+
+/// AUROC is invariant under strictly monotone score transforms and
+/// anti-symmetric under negation; AUPRC of constant scores equals
+/// prevalence.
+#[test]
+fn prop_metric_invariants() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed ^ 0x4E7);
+        let n = 20 + rng.below(500) as usize;
+        let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let labels: Vec<bool> = (0..n).map(|_| rng.bool(0.3)).collect();
+        if labels.iter().all(|&b| b) || labels.iter().all(|&b| !b) {
+            continue;
+        }
+        let a = auroc(&scores, &labels);
+        let transformed: Vec<f64> = scores.iter().map(|s| (s * 2.0).exp()).collect();
+        assert!((auroc(&transformed, &labels) - a).abs() < 1e-12, "monotone invariance");
+        let negated: Vec<f64> = scores.iter().map(|s| -s).collect();
+        assert!((auroc(&negated, &labels) - (1.0 - a)).abs() < 1e-9, "negation");
+        let prevalence = labels.iter().filter(|&&b| b).count() as f64 / n as f64;
+        let flat = vec![1.0; n];
+        assert!((auprc(&flat, &labels) - prevalence).abs() < 1e-9, "AP of constant");
+    }
+}
+
+/// LRU behaves exactly like a reference implementation under random
+/// put/get streams.
+#[test]
+fn prop_lru_matches_reference_model() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed ^ 0x14B);
+        let cap = 1 + rng.below(16) as usize;
+        let mut lru = LruCache::new(cap);
+        // reference: Vec<(key,value)> ordered most-recent-first
+        let mut model: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..2000 {
+            let key = rng.below(24);
+            if rng.bool(0.5) {
+                let val = rng.below(1000);
+                lru.put(key, val);
+                if let Some(pos) = model.iter().position(|(k, _)| *k == key) {
+                    model.remove(pos);
+                }
+                model.insert(0, (key, val));
+                model.truncate(cap);
+            } else {
+                let got = lru.get(&key).copied();
+                let want = model.iter().position(|(k, _)| *k == key).map(|pos| {
+                    let (k, v) = model.remove(pos);
+                    model.insert(0, (k, v));
+                    v
+                });
+                assert_eq!(got, want, "seed {seed} key {key}");
+            }
+            assert_eq!(lru.len(), model.len(), "seed {seed}");
+        }
+    }
+}
+
+/// The sign-hash family is deterministic across threads and matches the
+/// advertised {1/6, 1/6, 2/3} distribution for every member.
+#[test]
+fn prop_sign_hash_family_thread_deterministic() {
+    let fam = SignHasher::family(16, 1.0 / 3.0);
+    let inputs: Vec<String> = (0..200).map(|i| format!("feature_{i}")).collect();
+    let baseline: Vec<Vec<f32>> = fam
+        .iter()
+        .map(|h| inputs.iter().map(|s| h.hash_str(s)).collect())
+        .collect();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                for (hi, h) in fam.iter().enumerate() {
+                    for (si, input) in inputs.iter().enumerate() {
+                        assert_eq!(h.hash_str(input), baseline[hi][si]);
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Projection is linear: sketch(a + b) == sketch(a) + sketch(b) for
+/// dense numeric rows (a direct consequence of Eq. 2 that the streaming
+/// δ-updates rely on).
+#[test]
+fn prop_projection_linearity() {
+    use sparx::data::Row;
+    use sparx::sparx::Projector;
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed ^ 0x11EA4);
+        let d = 1 + rng.below(64) as usize;
+        let k = 1 + rng.below(24) as usize;
+        let names: Vec<String> = (0..d).map(|j| format!("f{j}")).collect();
+        let p = Projector::new(k, 1.0 / 3.0).with_dense_schema(&names);
+        let a: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        let sa = p.project(&Row::dense(0, a), None).s;
+        let sb = p.project(&Row::dense(1, b), None).s;
+        let ss = p.project(&Row::dense(2, sum), None).s;
+        for j in 0..k {
+            assert!(
+                (sa[j] + sb[j] - ss[j]).abs() < 1e-3,
+                "seed {seed} dim {j}: {} + {} != {}",
+                sa[j],
+                sb[j],
+                ss[j]
+            );
+        }
+    }
+}
