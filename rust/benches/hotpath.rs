@@ -4,9 +4,11 @@
 //!
 //! Covers the §Perf targets of EXPERIMENTS.md:
 //!   * native chain binning (L3 request path, per-point cost)
+//!   * multi-chain tiling (the fused executors' binning entry point)
 //!   * CMS insert / query
 //!   * hash projection (dense memoised R and sparse on-the-fly)
 //!   * PJRT tile execution (chain_bins + fused project_bins artifacts)
+//!   * distributed fit+score, fused vs per-chain execution plans
 //!   * streaming δ-update + rescore
 
 use sparx::data::Row;
@@ -49,6 +51,14 @@ fn main() {
     let s: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
     bench("native tile_bins K=50 L=20 (per point)", n as u64, || {
         NativeBinner.tile_bins(&chain, &s, n)[0] as u64
+    });
+
+    // --- multi-chain tiling: M=10 chains over one resident tile
+    let chains: Vec<ChainParams> =
+        (0..10).map(|_| ChainParams::sample(&delta, l, &mut rng)).collect();
+    let chain_refs: Vec<&ChainParams> = chains.iter().collect();
+    bench("native tile_bins_multi M=10 (per point·chain)", (n * 10) as u64, || {
+        NativeBinner.tile_bins_multi(&chain_refs, &s, n)[0] as u64
     });
 
     // --- CMS insert + query
@@ -125,6 +135,40 @@ fn main() {
             });
         }
         Err(e) => println!("(PJRT benches skipped: {e})"),
+    }
+
+    // --- distributed fit+score on a fixed Gisette workload: the fused
+    //     single-pass executors vs the legacy one-round-per-chain plan
+    //     (BENCH_*.json tracks the gap between these two lines)
+    {
+        use sparx::cluster::ClusterConfig;
+        use sparx::data::generators::GisetteGen;
+        use sparx::sparx::{ExecMode, SparxModel, SparxParams};
+        let ctx = ClusterConfig {
+            num_partitions: 8,
+            num_workers: 4,
+            num_threads: 4,
+            ..Default::default()
+        }
+        .build();
+        let fit_n = 1200;
+        let ld = GisetteGen { n: fit_n, d: 128, ..Default::default() }.generate(&ctx).unwrap();
+        for mode in ExecMode::ALL {
+            let tag = mode.tag();
+            let p = SparxParams {
+                k: 25,
+                num_chains: 25,
+                depth: 10,
+                sample_rate: 1.0,
+                exec_mode: mode,
+                ..Default::default()
+            };
+            bench(&format!("dist fit+score gisette M=25 [{tag}] (per point)"), fit_n as u64, || {
+                let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+                let scores = model.score_dataset(&ctx, &ld.dataset).unwrap();
+                scores.len() as u64
+            });
+        }
     }
 
     // --- streaming update+rescore

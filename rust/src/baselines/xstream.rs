@@ -8,7 +8,7 @@
 
 use crate::data::Row;
 use crate::sparx::{ChainParams, CountMinSketch, Projector, ScoreMode, SparxModel, TrainedChain};
-use crate::util::Rng;
+use crate::sparx::plan::chain_rng;
 
 #[derive(Debug, Clone)]
 pub struct XStreamParams {
@@ -80,7 +80,7 @@ impl XStream {
         // Sparx's thread pool, §3.2.2)
         let mut chains = Vec::with_capacity(params.num_chains);
         for m in 0..params.num_chains {
-            let mut rng = Rng::new(params.seed.wrapping_add(m as u64 * 0x9E37_79B9));
+            let mut rng = chain_rng(params.seed, m);
             let cp = ChainParams::sample(&deltamax, params.depth, &mut rng);
             let mut cms: Vec<CountMinSketch> = (0..params.depth)
                 .map(|_| CountMinSketch::new(params.cms_rows, params.cms_cols))

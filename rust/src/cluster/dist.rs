@@ -188,7 +188,7 @@ impl<T: Send + Sync> DistVec<T> {
             if rate >= 1.0 {
                 return Ok(part.to_vec());
             }
-            let mut rng = Rng::new(seed ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut rng = partition_rng(seed, p);
             Ok(part.iter().filter(|_| rng.bool(rate)).cloned().collect())
         })?;
         let charges = charge_parts(ctx, &parts)?;
@@ -222,6 +222,74 @@ impl<T: Send + Sync> DistVec<T> {
             for a in v {
                 acc = comb(acc, a);
             }
+        }
+        ctx.driver_mem.release(bytes);
+        Ok(acc)
+    }
+
+    /// Partition-level tree-aggregate: `f` maps each partition to a
+    /// constant-size partial in a single partition visit; partials owned
+    /// by the same worker are combined **worker-side** (a map-side /
+    /// tree combine — those merges never cross the network), and only one
+    /// partial per worker ships to the driver, in one shuffle round.
+    ///
+    /// This is the reduction the fused multi-chain executors use: the
+    /// `[M][L][r][w]` count block crosses the network `num_workers` times
+    /// total, charged once — versus one `aggregate` round *per chain*
+    /// (M rounds, `num_partitions` blocks each) on the per-chain path.
+    pub fn tree_aggregate<A, F, G>(&self, ctx: &ClusterContext, init: A, f: F, comb: G) -> Result<A>
+    where
+        A: Send + Sync + SizeOf,
+        F: Fn(usize, &[T]) -> Result<A> + Sync,
+        G: Fn(A, A) -> A + Sync,
+    {
+        // 1) one partition visit → one constant-size partial per partition
+        let partials = par_over_parts(ctx, &self.parts, |p, part| Ok(vec![f(p, part)?]))?;
+        // partials live on their owner workers until combined+shipped:
+        // charge them like any other operator output (budget-checked, so
+        // the simulated worker OOM can trip on oversized fused blocks)
+        let mut charges: Vec<(usize, usize)> = Vec::with_capacity(partials.len());
+        let mut charge_err = None;
+        for (p, v) in partials.iter().enumerate() {
+            let worker = ctx.owner(p);
+            let bytes = v[0].size_of();
+            match ctx.charge_worker(worker, bytes) {
+                Ok(()) => charges.push((worker, bytes)),
+                Err(e) => {
+                    charge_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if let Some(e) = charge_err {
+            for &(worker, bytes) in &charges {
+                ctx.worker_mem[worker].release(bytes);
+            }
+            return Err(e);
+        }
+        // 2) worker-side combine: merge each worker's own partials locally
+        let mut by_worker: Vec<Option<A>> = (0..ctx.cfg.num_workers).map(|_| None).collect();
+        for (p, mut v) in partials.into_iter().enumerate() {
+            let a = v.pop().expect("one partial per partition");
+            let slot = &mut by_worker[ctx.owner(p)];
+            *slot = Some(match slot.take() {
+                None => a,
+                Some(prev) => comb(prev, a),
+            });
+        }
+        // 3) one round: ≤ num_workers partials cross to the driver
+        let worker_partials: Vec<A> = by_worker.into_iter().flatten().collect();
+        let bytes: usize = worker_partials.iter().map(SizeOf::size_of).sum();
+        ctx.ledger.add(bytes, worker_partials.len());
+        ctx.ledger.add_round();
+        let driver_charge = ctx.charge_driver(bytes);
+        for &(worker, b) in &charges {
+            ctx.worker_mem[worker].release(b);
+        }
+        driver_charge?;
+        let mut acc = init;
+        for a in worker_partials {
+            acc = comb(acc, a);
         }
         ctx.driver_mem.release(bytes);
         Ok(acc)
@@ -287,6 +355,14 @@ impl<T: Send + Sync> DistVec<T> {
         let charges = charge_parts(ctx, &parts)?;
         Ok(DistVec { parts, charges, meters: Some(ctx.worker_mem.clone()) })
     }
+}
+
+/// The per-(seed, partition) RNG stream [`DistVec::sample`] draws from.
+/// Shared with the fused fit executor (`sparx::plan`), which replays the
+/// same Bernoulli masks inside a single partition visit — both callers
+/// must derive identical streams for fused/per-chain model parity.
+pub(crate) fn partition_rng(seed: u64, p: usize) -> Rng {
+    Rng::new(seed ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15))
 }
 
 fn key_hash<K: Hash>(k: &K) -> u64 {
@@ -517,6 +593,75 @@ mod tests {
             )
             .unwrap();
         assert_eq!((lo, hi), (-2.0, 9.0));
+    }
+
+    #[test]
+    fn tree_aggregate_sums_in_one_round_per_worker_partials() {
+        let c = ctx(); // 4 partitions, 2 workers
+        let dv = DistVec::from_vec(&c, (0..100u64).collect()).unwrap();
+        let (b0, r0, rounds0) = c.ledger.snapshot();
+        let mem0: Vec<usize> = c.worker_mem.iter().map(|m| m.current()).collect();
+        let sum = dv
+            .tree_aggregate(
+                &c,
+                0u64,
+                |_, part| Ok(part.iter().sum::<u64>()),
+                |a, b| a + b,
+            )
+            .unwrap();
+        assert_eq!(sum, 4950);
+        let (b1, r1, rounds1) = c.ledger.snapshot();
+        assert_eq!(rounds1 - rounds0, 1, "exactly one shuffle round");
+        assert_eq!(r1 - r0, 2, "one partial per worker, not per partition");
+        assert_eq!(b1 - b0, 16, "two u64 partials cross the network");
+        let mem1: Vec<usize> = c.worker_mem.iter().map(|m| m.current()).collect();
+        assert_eq!(mem0, mem1, "transient partial charges must be released");
+        // the partials were charged while alive: each worker's peak covers
+        // its two 8-byte partition partials on top of its data
+        for (w, m) in c.worker_mem.iter().enumerate() {
+            assert!(m.peak() >= mem0[w] + 16, "worker {w} partials not metered");
+        }
+    }
+
+    #[test]
+    fn tree_aggregate_partials_respect_worker_budget() {
+        let c = ClusterConfig {
+            num_partitions: 4,
+            num_workers: 2,
+            worker_mem_bytes: 2000,
+            ..Default::default()
+        }
+        .build();
+        let dv = DistVec::from_vec(&c, vec![0u8; 100]).unwrap();
+        let before: Vec<usize> = c.worker_mem.iter().map(|m| m.current()).collect();
+        // each partition emits a partial far over the worker budget
+        let r = dv.tree_aggregate(
+            &c,
+            vec![0u64; 0],
+            |_, _| Ok(vec![0u64; 1000]),
+            |a, _| a,
+        );
+        assert!(matches!(r, Err(crate::cluster::ClusterError::MemExceeded { .. })));
+        let after: Vec<usize> = c.worker_mem.iter().map(|m| m.current()).collect();
+        assert_eq!(before, after, "failed partial charges must roll back");
+    }
+
+    #[test]
+    fn tree_aggregate_matches_aggregate() {
+        let c = ctx();
+        let dv = DistVec::from_vec(&c, (1..=37u64).collect()).unwrap();
+        let a = dv
+            .aggregate(&c, 0u64, |acc, &x| acc.max(x), |a, b| a.max(b))
+            .unwrap();
+        let t = dv
+            .tree_aggregate(
+                &c,
+                0u64,
+                |_, part| Ok(part.iter().copied().max().unwrap_or(0)),
+                |a, b| a.max(b),
+            )
+            .unwrap();
+        assert_eq!(a, t);
     }
 
     #[test]

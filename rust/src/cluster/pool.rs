@@ -16,13 +16,49 @@ use std::sync::Mutex;
 /// time-slicing: on a host with fewer cores than simulated workers
 /// (this environment has one), wall-clock elapsed would count the time a
 /// task spent descheduled while sibling workers ran — CPU time does not.
+///
+/// Calls `clock_gettime(CLOCK_THREAD_CPUTIME_ID)` through the C runtime
+/// directly (the offline build has no `libc` crate). Restricted to
+/// 64-bit targets where `struct timespec` is two 64-bit `long`s — on
+/// 32-bit ABIs the layout differs, so those use the fallback below.
+#[cfg(all(
+    any(target_os = "linux", target_os = "android", target_os = "macos"),
+    target_pointer_width = "64"
+))]
 pub fn thread_cpu_nanos() -> u64 {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    #[cfg(target_os = "macos")]
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 16;
+    extern "C" {
+        fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
     // SAFETY: plain syscall writing into the local timespec
     unsafe {
-        libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts);
+        clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts);
     }
     ts.tv_sec as u64 * 1_000_000_000 + ts.tv_nsec as u64
+}
+
+/// Fallback for targets without a (64-bit-timespec) thread-CPU clock:
+/// wall time since the thread first asked (over-counts under
+/// contention, but keeps the busy-clock accounting monotone and
+/// well-defined).
+#[cfg(not(all(
+    any(target_os = "linux", target_os = "android", target_os = "macos"),
+    target_pointer_width = "64"
+)))]
+pub fn thread_cpu_nanos() -> u64 {
+    thread_local! {
+        static T0: std::time::Instant = std::time::Instant::now();
+    }
+    T0.with(|t| t.elapsed().as_nanos() as u64)
 }
 
 /// Run `n` jobs `f(0..n)` on at most `threads` threads; returns results in

@@ -5,7 +5,7 @@
 
 use crate::config::presets;
 use crate::metrics::ResourceReport;
-use crate::sparx::{SparxModel, SparxParams};
+use crate::sparx::{ExecMode, SparxModel, SparxParams};
 
 use super::{scale, ExpResult, ExpRow};
 
@@ -20,28 +20,37 @@ pub fn run(workload_scale: f64) -> ExpResult {
         let mut ctx = presets::config_gen().build();
         let ld = gen.generate(&ctx).expect("generate");
         let n = ld.dataset.len();
-        ctx.reset();
-        let p = SparxParams {
-            k: 0,
-            num_chains: 10,
-            depth: 10,
-            sample_rate: 0.01,
-            ..Default::default()
-        };
-        let model = SparxModel::fit(&ctx, &ld.dataset, &p).expect("fit");
-        let _ = model.score_dataset(&ctx, &ld.dataset).expect("score");
-        let res = ResourceReport::from_ctx(&ctx);
-        ns.push(n as f64);
-        times.push(res.job_secs);
-        rows.push(ExpRow {
-            method: "Sparx".into(),
-            config: format!("n={n}"),
-            auroc: None,
-            auprc: None,
-            f1: None,
-            status: "ok".into(),
-            resources: Some(res),
-        });
+        for mode in ExecMode::ALL {
+            let tag = mode.tag();
+            // same dataset for both plans; reset isolates each run
+            ctx.reset();
+            let p = SparxParams {
+                k: 0,
+                num_chains: 10,
+                depth: 10,
+                sample_rate: 0.01,
+                exec_mode: mode,
+                ..Default::default()
+            };
+            let model = SparxModel::fit(&ctx, &ld.dataset, &p).expect("fit");
+            let _ = model.score_dataset(&ctx, &ld.dataset).expect("score");
+            let res = ResourceReport::from_ctx(&ctx);
+            // the linearity check tracks the fused (default) plan; the
+            // per-chain rows ride along for the pass-structure A/B
+            if mode == ExecMode::Fused {
+                ns.push(n as f64);
+                times.push(res.job_secs);
+            }
+            rows.push(ExpRow {
+                method: "Sparx".into(),
+                config: format!("n={n} exec={tag}"),
+                auroc: None,
+                auprc: None,
+                f1: None,
+                status: "ok".into(),
+                resources: Some(res),
+            });
+        }
     }
     // linearity: fit t = a·n + b, check R² and that the largest/smallest
     // time ratio tracks the n ratio
@@ -64,7 +73,8 @@ mod tests {
     #[test]
     fn fig6_smoke() {
         let r = super::run(0.05);
-        assert_eq!(r.rows.len(), super::N_MULTIPLIERS.len());
+        // one fused and one per-chain row per input size
+        assert_eq!(r.rows.len(), 2 * super::N_MULTIPLIERS.len());
         assert!(r.rows.iter().all(|x| x.status == "ok"));
     }
 }

@@ -5,7 +5,8 @@
 //! ```text
 //! sparx detect --dataset gisette|osm|spamurl [--config gen|mod|local]
 //!              [--chains M] [--depth L] [--rate R] [--k K] [--scale S]
-//!              [--backend native|pjrt] [--out scores.csv]
+//!              [--backend native|pjrt] [--exec fused|per-chain]
+//!              [--out scores.csv]
 //! sparx experiment <table2|table3|table4|fig2|fig3|fig4|fig5|fig6|all>
 //!              [--scale S] [--out EXPERIMENTS_RESULTS.md]
 //! sparx stream   [--updates N] [--cache N]       # §3.5 evolving-stream demo
@@ -21,7 +22,7 @@ use sparx::data::{LabeledDataset, StreamGen};
 use sparx::experiments;
 use sparx::metrics::{RankMetrics, ResourceReport};
 use sparx::runtime::{ArtifactManifest, PjrtBinner, PjrtEngine};
-use sparx::sparx::{NativeBinner, SparxModel, SparxParams, StreamScorer};
+use sparx::sparx::{ExecMode, NativeBinner, SparxModel, SparxParams, StreamScorer};
 use sparx::ClusterContext;
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -108,11 +109,20 @@ fn cmd_detect(flags: &HashMap<String, String>) {
     } else {
         50
     };
+    let exec_mode = match flags.get("exec").map(String::as_str) {
+        Some("per-chain" | "perchain") => ExecMode::PerChain,
+        Some("fused") | None => ExecMode::Fused,
+        Some(other) => {
+            eprintln!("unknown exec mode {other:?} (fused|per-chain)");
+            std::process::exit(2);
+        }
+    };
     let params = SparxParams {
         k: flag_usize(flags, "k", default_k),
         num_chains: flag_usize(flags, "chains", 50),
         depth: flag_usize(flags, "depth", 10),
         sample_rate: flag_f64(flags, "rate", 0.1),
+        exec_mode,
         ..Default::default()
     };
     let backend = flags.get("backend").map(String::as_str).unwrap_or("native");
@@ -140,8 +150,9 @@ fn cmd_detect(flags: &HashMap<String, String>) {
     let res = ResourceReport::from_ctx(&ctx);
     let aligned = experiments::align_scores(&scores, ld.labels.len());
     let met = RankMetrics::compute(&aligned, &ld.labels);
+    let exec_tag = exec_mode.tag();
     println!(
-        "Sparx[{backend}] M={} L={} rate={} K={}: AUROC={:.3} AUPRC={:.3} F1={:.3}",
+        "Sparx[{backend},{exec_tag}] M={} L={} rate={} K={}: AUROC={:.3} AUPRC={:.3} F1={:.3}",
         params.num_chains, params.depth, params.sample_rate, params.k, met.auroc, met.auprc, met.f1
     );
     println!("{}", res.summary());

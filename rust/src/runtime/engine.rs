@@ -329,6 +329,12 @@ pub struct PjrtBinner<'e> {
     pub variant: String,
 }
 
+/// Multi-chain tiling (`Binner::tile_bins_multi`) uses the trait
+/// default: one fixed-shape engine dispatch per chain over the same
+/// resident tile, which the caller flattened once per partition. Only
+/// the per-chain operand literals (Δ, shift, fs — O(K+L) each) change
+/// per dispatch, keeping the PJRT path at parity with the native fused
+/// executors.
 impl Binner for PjrtBinner<'_> {
     fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32> {
         self.engine

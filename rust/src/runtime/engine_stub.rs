@@ -1,0 +1,68 @@
+//! Stub PJRT engine, compiled when the `pjrt` feature is off (the
+//! offline build has no `xla` crate). Same public surface as the real
+//! [`engine`](super::engine) module; the constructors return an error so
+//! all callers fall back to / skip onto the native path.
+
+use crate::sparx::chain::{Binner, ChainParams};
+
+use super::artifacts::ArtifactManifest;
+
+const STUB_MSG: &str =
+    "PJRT engine unavailable: built without the `pjrt` feature (vendored `xla` crate required)";
+
+/// Stub handle — cannot be constructed (both `start*` always error), so
+/// the instance methods are unreachable but keep the call sites compiling.
+pub struct PjrtEngine {
+    _priv: (),
+}
+
+impl PjrtEngine {
+    pub fn start(_manifest: &ArtifactManifest) -> Result<PjrtEngine, String> {
+        Err(STUB_MSG.into())
+    }
+
+    pub fn start_default() -> Result<PjrtEngine, String> {
+        Err(STUB_MSG.into())
+    }
+
+    pub fn shape(&self, _kind: &str, _variant: &str) -> Option<(usize, usize, usize, usize)> {
+        None
+    }
+
+    pub fn project(&self, _variant: &str, _x: &[f32], _n: usize) -> Result<Vec<f32>, String> {
+        Err(STUB_MSG.into())
+    }
+
+    pub fn chain_bins(
+        &self,
+        _variant: &str,
+        _s: &[f32],
+        _n: usize,
+        _chain: &ChainParams,
+    ) -> Result<Vec<i32>, String> {
+        Err(STUB_MSG.into())
+    }
+
+    pub fn project_bins(
+        &self,
+        _variant: &str,
+        _x: &[f32],
+        _n: usize,
+        _chain: &ChainParams,
+    ) -> Result<Vec<i32>, String> {
+        Err(STUB_MSG.into())
+    }
+}
+
+/// Stub [`Binner`] — mirrors the real `PjrtBinner` so backend-selection
+/// code type-checks without the feature.
+pub struct PjrtBinner<'e> {
+    pub engine: &'e PjrtEngine,
+    pub variant: String,
+}
+
+impl Binner for PjrtBinner<'_> {
+    fn tile_bins(&self, _chain: &ChainParams, _s: &[f32], _n: usize) -> Vec<i32> {
+        unreachable!("stub PjrtEngine cannot be constructed")
+    }
+}

@@ -12,6 +12,19 @@
 //! executor threads) and sidesteps the C++ handle thread-affinity.
 
 pub mod artifacts;
+
+/// The real engine needs the vendored `xla` crate (PJRT C API bindings),
+/// which the offline build does not carry; without `--features pjrt` a
+/// stub with the same public surface is compiled whose `start*`
+/// constructors return an error — every caller already handles the
+/// artifacts-missing path, so the native backend remains fully usable.
+/// Enabling `pjrt` additionally requires uncommenting the vendored
+/// `xla` dependency in Cargo.toml (the feature alone does not build).
+#[cfg(feature = "pjrt")]
+#[path = "engine.rs"]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 pub mod engine;
 
 pub use artifacts::{ArtifactEntry, ArtifactManifest};

@@ -105,6 +105,19 @@ impl SizeOf for ChainParams {
 /// Pallas artifact. Both must agree bit-for-bit (integration-tested).
 pub trait Binner: Sync {
     fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32>;
+
+    /// Multi-chain tiling: bin the *same* resident tile of `n` sketches
+    /// against every chain in `chains`, returning a chain-major
+    /// `[M][n][L][K]` buffer. The fused partition executors
+    /// ([`crate::sparx::plan`]) use this so the sketch block is flattened
+    /// once per partition visit instead of once per chain.
+    fn tile_bins_multi(&self, chains: &[&ChainParams], s: &[f32], n: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(chains.iter().map(|c| n * c.depth() * c.k()).sum());
+        for chain in chains {
+            out.extend(self.tile_bins(chain, s, n));
+        }
+        out
+    }
 }
 
 /// Pure-Rust binning.
@@ -120,6 +133,29 @@ impl Binner for NativeBinner {
         let mut scratch = vec![0f32; k];
         for i in 0..n {
             chain.bins_into(&s[i * k..(i + 1) * k], &mut scratch, &mut out[i * l * k..(i + 1) * l * k]);
+        }
+        out
+    }
+
+    /// Single allocation + shared scratch across all chains of the tile.
+    fn tile_bins_multi(&self, chains: &[&ChainParams], s: &[f32], n: usize) -> Vec<i32> {
+        let total: usize = chains.iter().map(|c| n * c.depth() * c.k()).sum();
+        let mut out = vec![0i32; total];
+        let kmax = chains.iter().map(|c| c.k()).max().unwrap_or(0);
+        let mut scratch = vec![0f32; kmax];
+        let mut off = 0;
+        for chain in chains {
+            let k = chain.k();
+            let l = chain.depth();
+            debug_assert_eq!(s.len(), n * k);
+            for i in 0..n {
+                chain.bins_into(
+                    &s[i * k..(i + 1) * k],
+                    &mut scratch[..k],
+                    &mut out[off + i * l * k..off + (i + 1) * l * k],
+                );
+            }
+            off += n * l * k;
         }
         out
     }
@@ -192,6 +228,23 @@ mod tests {
             let single = c.bins(&pts[i * 2..(i + 1) * 2]);
             assert_eq!(&tiled[i * 16..(i + 1) * 16], single.as_slice(), "point {i}");
         }
+    }
+
+    #[test]
+    fn tile_bins_multi_matches_per_chain_concat() {
+        let mut rng = Rng::new(21);
+        let delta = vec![1.5f32, 0.75, 3.0];
+        let chains: Vec<ChainParams> =
+            (0..5).map(|_| ChainParams::sample(&delta, 7, &mut rng)).collect();
+        let refs: Vec<&ChainParams> = chains.iter().collect();
+        let n = 11;
+        let s: Vec<f32> = (0..n * 3).map(|_| rng.normal() as f32 * 2.0).collect();
+        let multi = NativeBinner.tile_bins_multi(&refs, &s, n);
+        let mut concat = Vec::new();
+        for c in &chains {
+            concat.extend(NativeBinner.tile_bins(c, &s, n));
+        }
+        assert_eq!(multi, concat);
     }
 
     #[test]

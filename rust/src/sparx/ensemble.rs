@@ -1,25 +1,38 @@
 //! The Sparx model: an ensemble of M half-space chains fit and scored
 //! with the paper's three distributed steps (Algorithms 1–3).
 //!
-//! * **Fit** (two passes): Step 1 projects every point locally (map
-//!   only); Step 2 per chain bins a subsample, emits `((level,row,col),1)`
-//!   pairs (`allCols`, Eq. 6), `reduceByKey`-sums them and
-//!   `collectAsMap`s the constant-size bucket totals into the driver's
-//!   CMS structures. Chains train concurrently on the driver thread pool
-//!   (model parallelism on top of data parallelism).
-//! * **Score** (one pass): the CMS ensemble is broadcast once; each
-//!   worker scores its partition locally (Eq. 5); per-chain score vectors
-//!   are summed distributedly and averaged.
-
-
+//! Pass structure (the §3.4 claim — **two** data passes to fit, **one**
+//! to score, constant-size intermediates), as executed by the default
+//! [`ExecMode::Fused`] plan ([`super::plan`]):
+//!
+//! * **Fit, pass 1**: Step 1 projects every point locally (map only, no
+//!   shuffle) and Δmax is reduced from constant-size per-partition
+//!   min/max partials (one `aggregate` round).
+//! * **Fit, pass 2**: one partition visit flattens the sketch block once
+//!   and bins *all M chains* against it ([`Binner::tile_bins_multi`]);
+//!   each partition emits one concatenated `[M][L][r][w]` count block
+//!   (the map-side combine of Alg. 2's `((level,row,col),1)` pairs,
+//!   numerically identical to reduceByKey + collectAsMap); blocks merge
+//!   worker-side and cross the network once per worker in a single
+//!   tree-aggregate round — M·L·r·w bytes charged once, independent of M.
+//! * **Score, one pass**: the CMS ensemble is broadcast once (Alg. 3);
+//!   one partition visit bins all chains against the once-flattened
+//!   block and folds Eq. (5) per point — min over levels, sum over
+//!   chains — emitting `(id, outlierness)` directly.
+//!
+//! The legacy [`ExecMode::PerChain`] path (one `map_partitions` +
+//! `aggregate` round *per chain* on the driver thread pool, per-chain
+//! score vectors `zip_map`-summed) is kept for A/B comparison; both
+//! paths produce bit-identical models and scores.
 
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{pool, ClusterContext, ClusterError, DistVec, Result};
 use crate::data::Dataset;
-use crate::util::{Rng, SizeOf};
+use crate::util::SizeOf;
 
 use super::chain::{Binner, ChainParams, NativeBinner};
 use super::cms::CountMinSketch;
+use super::plan::{self, ChainSet, ExecMode};
 use super::projector::{compute_deltamax, project_dataset, Projector, Sketch};
 
 /// Scoring variants: the paper's Eq. (5) linear extrapolation, and the
@@ -51,6 +64,9 @@ pub struct SparxParams {
     /// Non-zero density of the sign hashes (paper: 1/3).
     pub density: f64,
     pub score_mode: ScoreMode,
+    /// Execution plan: fused single-pass (default, paper-faithful) or
+    /// the legacy one-round-per-chain path (kept for A/B comparison).
+    pub exec_mode: ExecMode,
     pub seed: u64,
 }
 
@@ -65,9 +81,33 @@ impl Default for SparxParams {
             cms_cols: 100,
             density: 1.0 / 3.0,
             score_mode: ScoreMode::Log2,
+            exec_mode: ExecMode::Fused,
             seed: 0x5AB4,
         }
     }
+}
+
+/// The Eq. (5) / log2 scoring kernel: given a point's precomputed
+/// `[L][K]` bin-id block for `chain`, return the min-over-levels
+/// outlierness contribution. The single shared implementation behind the
+/// per-chain distributed scorer, the fused executor
+/// ([`plan::score_fused`]), and the streaming front-end.
+#[inline]
+pub fn score_bins(chain: &TrainedChain, mode: ScoreMode, bins: &[i32]) -> f64 {
+    let k = chain.params.k();
+    debug_assert_eq!(bins.len(), chain.params.depth() * k);
+    let mut best = f64::INFINITY;
+    for (lvl, cms) in chain.cms.iter().enumerate() {
+        let c = cms.query(&bins[lvl * k..(lvl + 1) * k]) as f64;
+        let v = match mode {
+            ScoreMode::Extrapolated => (1u64 << (lvl + 1)) as f64 * c,
+            ScoreMode::Log2 => (1.0 + c).log2() + (lvl + 1) as f64,
+        };
+        if v < best {
+            best = v;
+        }
+    }
+    best
 }
 
 /// One trained chain: sampled parameters + per-level CMS counts.
@@ -107,7 +147,10 @@ impl SparxModel {
         let projector = Self::make_projector(data, params);
         let proj = project_dataset(ctx, data, &projector)?;
         let deltamax = compute_deltamax(ctx, &proj)?;
-        let chains = Self::fit_chains(ctx, &proj, &deltamax, params, binner)?;
+        let chains = match params.exec_mode {
+            ExecMode::Fused => ChainSet::sample(&deltamax, params).fit(ctx, &proj, binner)?,
+            ExecMode::PerChain => Self::fit_chains(ctx, &proj, &deltamax, params, binner)?,
+        };
         Ok(SparxModel { params: params.clone(), projector, deltamax, chains })
     }
 
@@ -125,8 +168,9 @@ impl SparxModel {
         }
     }
 
-    /// Step 2 over an already-projected DF (reused by `fit_with` and the
-    /// experiment harness which wants to time steps separately).
+    /// Step 2 over an already-projected DF, one distributed round per
+    /// chain (the [`ExecMode::PerChain`] executor; the fused equivalent
+    /// is [`ChainSet::fit`]).
     pub fn fit_chains(
         ctx: &ClusterContext,
         proj: &DistVec<Sketch>,
@@ -134,13 +178,11 @@ impl SparxModel {
         params: &SparxParams,
         binner: &dyn Binner,
     ) -> Result<Vec<TrainedChain>> {
-        if params.cms_rows >= 128 || params.cms_cols >= (1 << 20) {
-            return Err(ClusterError::Invalid("CMS too large for shuffle key packing".into()));
-        }
+        plan::check_cms_shape(params.cms_rows, params.cms_cols)?;
         let k = deltamax.len();
         let (l, r, w) = (params.depth, params.cms_rows, params.cms_cols);
         pool::try_run_indexed(ctx.cfg.num_threads, params.num_chains, |m| {
-            let mut rng = Rng::new(params.seed.wrapping_add(m as u64 * 0x9E37_79B9));
+            let mut rng = plan::chain_rng(params.seed, m);
             let chain = ChainParams::sample(deltamax, params.depth, &mut rng);
             // rate ≥ 1 ⇒ no subsample copy (§Perf: the per-chain clone of
             // the whole projected DF dominated fit time at rate=1)
@@ -164,16 +206,7 @@ impl SparxModel {
                 }
                 let bins = binner.tile_bins(&chain, &flat, n);
                 let mut counts = vec![0u32; l * r * w];
-                for i in 0..n {
-                    for lvl in 0..l {
-                        let bin = &bins[(i * l + lvl) * k..(i * l + lvl + 1) * k];
-                        let h = crate::hash::bin_hash(bin);
-                        let block = &mut counts[lvl * r * w..(lvl + 1) * r * w];
-                        for row in 0..r as u32 {
-                            block[row as usize * w + crate::hash::cms_bucket_from(h, row, w)] += 1;
-                        }
-                    }
-                }
+                plan::accumulate_counts(&bins, n, l, k, r, w, &mut counts);
                 Ok(vec![counts])
             })?;
             // reduce: sum the constant-size blocks at the driver
@@ -203,8 +236,9 @@ impl SparxModel {
         })
     }
 
-    /// Score one sketch against one trained chain (Eq. 5 / log2 variant).
-    /// Shared by the distributed scorer and the streaming front-end.
+    /// Score one sketch against one trained chain (Eq. 5 / log2 variant):
+    /// bins the sketch, then delegates to the shared [`score_bins`]
+    /// kernel. Used by the single-machine xStream baseline.
     pub fn score_sketch_against(
         chain: &TrainedChain,
         mode: ScoreMode,
@@ -213,19 +247,7 @@ impl SparxModel {
         bins: &mut [i32],
     ) -> f64 {
         chain.params.bins_into(s, scratch, bins);
-        let k = chain.params.k();
-        let mut best = f64::INFINITY;
-        for (lvl, cms) in chain.cms.iter().enumerate() {
-            let c = cms.query(&bins[lvl * k..(lvl + 1) * k]) as f64;
-            let v = match mode {
-                ScoreMode::Extrapolated => (1u64 << (lvl + 1)) as f64 * c,
-                ScoreMode::Log2 => (1.0 + c).log2() + (lvl + 1) as f64,
-            };
-            if v < best {
-                best = v;
-            }
-        }
-        best
+        score_bins(chain, mode, bins)
     }
 
     /// Step 3: distributed scoring of a dataset. Returns `(id, outlierness)`
@@ -244,10 +266,26 @@ impl SparxModel {
         self.score_sketches_with(ctx, proj, &NativeBinner)
     }
 
-    /// Score with an explicit binning backend (native or PJRT). The CMS
-    /// ensemble is broadcast once (Alg. 3 line 3); chains run on the
-    /// driver thread pool; per-chain vectors are summed distributedly.
+    /// Score with an explicit binning backend (native or PJRT),
+    /// dispatching on the fitted [`ExecMode`]. Either way the CMS
+    /// ensemble is broadcast once (Alg. 3 line 3); the fused plan folds
+    /// every chain inside one partition visit, the per-chain plan runs
+    /// chains on the driver thread pool and sums their score vectors
+    /// distributedly. Results are bit-identical.
     pub fn score_sketches_with(
+        &self,
+        ctx: &ClusterContext,
+        proj: &DistVec<Sketch>,
+        binner: &dyn Binner,
+    ) -> Result<Vec<(u64, f64)>> {
+        match self.params.exec_mode {
+            ExecMode::Fused => plan::score_fused(self, ctx, proj, binner),
+            ExecMode::PerChain => self.score_per_chain(ctx, proj, binner),
+        }
+    }
+
+    /// The legacy per-chain scorer (one distributed pass per chain).
+    fn score_per_chain(
         &self,
         ctx: &ClusterContext,
         proj: &DistVec<Sketch>,
@@ -294,37 +332,20 @@ impl SparxModel {
         mode: ScoreMode,
         k: usize,
     ) -> Result<DistVec<f64>> {
-        {
-            let chains = bcast.value();
-            let chain = &chains[m];
-            let l = chain.params.depth();
-            let scores = proj.map_partitions(ctx, |_, part| {
-                let n = part.len();
-                let mut flat = Vec::with_capacity(n * k);
-                for sk in part {
-                    flat.extend_from_slice(&sk.s);
-                }
-                let bins = binner.tile_bins(&chain.params, &flat, n);
-                let mut out = Vec::with_capacity(n);
-                for i in 0..n {
-                    let pb = &bins[i * l * k..(i + 1) * l * k];
-                    let mut best = f64::INFINITY;
-                    for (lvl, cms) in chain.cms.iter().enumerate() {
-                        let c = cms.query(&pb[lvl * k..(lvl + 1) * k]) as f64;
-                        let v = match mode {
-                            ScoreMode::Extrapolated => (1u64 << (lvl + 1)) as f64 * c,
-                            ScoreMode::Log2 => (1.0 + c).log2() + (lvl + 1) as f64,
-                        };
-                        if v < best {
-                            best = v;
-                        }
-                    }
-                    out.push(best);
-                }
-                Ok(out)
-            })?;
-            Ok(scores)
-        }
+        let chains = bcast.value();
+        let chain = &chains[m];
+        let l = chain.params.depth();
+        proj.map_partitions(ctx, |_, part| {
+            let n = part.len();
+            let mut flat = Vec::with_capacity(n * k);
+            for sk in part {
+                flat.extend_from_slice(&sk.s);
+            }
+            let bins = binner.tile_bins(&chain.params, &flat, n);
+            Ok((0..n)
+                .map(|i| score_bins(chain, mode, &bins[i * l * k..(i + 1) * l * k]))
+                .collect())
+        })
     }
 
     /// Model footprint (what the driver holds / what scoring broadcasts):
@@ -444,6 +465,70 @@ mod tests {
         let large = GisetteGen { n: 1600, d: 16, ..Default::default() }.generate(&c2).unwrap();
         let _ = SparxModel::fit(&c2, &large.dataset, &p).unwrap();
         assert_eq!(rounds_small, c2.ledger.rounds(), "pass structure must not depend on n");
+    }
+
+    /// With the fused plan, fit is one `map_partitions` + one aggregate
+    /// round no matter how many chains the ensemble has — the ledger's
+    /// round counter after fit must be independent of M (and strictly
+    /// smaller than the per-chain path's, which pays one round per chain).
+    #[test]
+    fn fused_fit_rounds_independent_of_num_chains() {
+        let fit_rounds = |m: usize, mode: ExecMode| {
+            let c = ctx();
+            let ld = GisetteGen { n: 400, d: 16, ..Default::default() }.generate(&c).unwrap();
+            let p = SparxParams { num_chains: m, exec_mode: mode, ..tiny_params() };
+            let _ = SparxModel::fit(&c, &ld.dataset, &p).unwrap();
+            c.ledger.rounds()
+        };
+        let fused10 = fit_rounds(10, ExecMode::Fused);
+        let fused40 = fit_rounds(40, ExecMode::Fused);
+        assert_eq!(fused10, fused40, "fused fit rounds must not depend on num_chains");
+        let per10 = fit_rounds(10, ExecMode::PerChain);
+        let per40 = fit_rounds(40, ExecMode::PerChain);
+        assert_eq!(per40 - per10, 30, "per-chain path pays one aggregate round per chain");
+        assert!(fused40 < per40, "fused must shuffle in fewer rounds than per-chain");
+    }
+
+    /// Fused score is a single partition visit on top of the one-time
+    /// ensemble broadcast: scoring adds exactly two ledger rounds
+    /// (broadcast + collect) regardless of M.
+    #[test]
+    fn fused_score_rounds_independent_of_num_chains() {
+        let score_rounds = |m: usize| {
+            let c = ctx();
+            let ld = GisetteGen { n: 400, d: 16, ..Default::default() }.generate(&c).unwrap();
+            let p = SparxParams { num_chains: m, ..tiny_params() };
+            let model = SparxModel::fit(&c, &ld.dataset, &p).unwrap();
+            let before = c.ledger.rounds();
+            let _ = model.score_dataset(&c, &ld.dataset).unwrap();
+            c.ledger.rounds() - before
+        };
+        assert_eq!(score_rounds(10), score_rounds(40), "fused score rounds depend on M");
+        assert_eq!(score_rounds(10), 2, "broadcast + collect only");
+    }
+
+    /// The fused and per-chain executors must agree **bit for bit** on
+    /// both the fitted model and the scores (same chain-order float
+    /// fold), at full rate and under subsampling.
+    #[test]
+    fn fused_matches_per_chain_bit_for_bit() {
+        for rate in [1.0, 0.3] {
+            let c = ctx();
+            let ld = GisetteGen { n: 600, d: 24, ..Default::default() }.generate(&c).unwrap();
+            let fused_p =
+                SparxParams { sample_rate: rate, exec_mode: ExecMode::Fused, ..tiny_params() };
+            let per_p =
+                SparxParams { sample_rate: rate, exec_mode: ExecMode::PerChain, ..tiny_params() };
+            let mf = SparxModel::fit(&c, &ld.dataset, &fused_p).unwrap();
+            let mp = SparxModel::fit(&c, &ld.dataset, &per_p).unwrap();
+            for (a, b) in mf.chains.iter().zip(&mp.chains) {
+                assert_eq!(a.params, b.params, "chain params diverge at rate {rate}");
+                assert_eq!(a.cms, b.cms, "CMS counts diverge at rate {rate}");
+            }
+            let sf = mf.score_dataset(&c, &ld.dataset).unwrap();
+            let sp = mp.score_dataset(&c, &ld.dataset).unwrap();
+            assert_eq!(sf, sp, "scores diverge at rate {rate}");
+        }
     }
 
     #[test]

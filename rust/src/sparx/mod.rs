@@ -5,16 +5,19 @@
 //! * [`chain`] — half-space chains and the binning recurrence (Eq. 4)
 //! * [`cms`] — count-min sketches (per chain level)
 //! * [`ensemble`] — Steps 2–3: distributed fit and scoring (Algs. 2–3, Eq. 5)
+//! * [`plan`] — fused single-pass multi-chain executors ([`ExecMode`])
 //! * [`stream`] — §3.5 deployment front-end for evolving streams
 
 pub mod chain;
 pub mod cms;
 pub mod ensemble;
+pub mod plan;
 pub mod projector;
 pub mod stream;
 
 pub use chain::{Binner, ChainParams, NativeBinner};
 pub use cms::CountMinSketch;
-pub use ensemble::{ScoreMode, SparxModel, SparxParams, TrainedChain};
+pub use ensemble::{score_bins, ScoreMode, SparxModel, SparxParams, TrainedChain};
+pub use plan::{ChainSet, ExecMode};
 pub use projector::{compute_deltamax, project_dataset, Projector, Sketch};
 pub use stream::{StreamScore, StreamScorer};

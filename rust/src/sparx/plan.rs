@@ -1,0 +1,378 @@
+//! Fused multi-chain partition executors — the single-pass execution
+//! plan restoring the paper's §3.4 O(1)-passes-in-M structure.
+//!
+//! The per-chain path (kept behind [`ExecMode::PerChain`]) runs a full
+//! `map_partitions` + `aggregate` round per chain during fit and a full
+//! pass per chain during scoring — M rounds and M re-flattenings of the
+//! sketch block for an M-chain ensemble. The fused plan here drives **one
+//! partition visit** that flattens the sketch block once, bins every
+//! chain against it through [`Binner::tile_bins_multi`], and
+//!
+//! * **fit** — emits one concatenated `[M][L][r][w]` count block per
+//!   partition, reduced by a single worker-side-combining
+//!   [`DistVec::tree_aggregate`] round (M·L·r·w bytes cross the network
+//!   once per worker, one ledger round total);
+//! * **score** — folds min-over-levels per chain and sum-over-chains into
+//!   a per-point accumulator inside the same visit (no per-chain
+//!   `DistVec`s, no `zip_map` chain), emitting `(id, outlierness)`
+//!   directly.
+//!
+//! Both executors are numerically identical to the per-chain path: counts
+//! are order-independent `u32` sums, and the score accumulator adds
+//! chains in ascending order — the same left-fold the per-chain path
+//! performs — so scores match bit for bit (asserted in `ensemble` tests).
+
+use crate::cluster::dist::Broadcast;
+use crate::cluster::{ClusterContext, ClusterError, DistVec, Result};
+use crate::util::Rng;
+
+use super::chain::{Binner, ChainParams};
+use super::cms::CountMinSketch;
+use super::ensemble::{score_bins, SparxModel, SparxParams, TrainedChain};
+use super::projector::Sketch;
+
+/// Execution strategy for distributed fit/score.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One `map_partitions` + `aggregate` round *per chain* (the original
+    /// path, kept for A/B comparison in fig5/fig6 and the benches).
+    PerChain,
+    /// All M chains in one fit pass and one score pass (paper-faithful).
+    Fused,
+}
+
+impl ExecMode {
+    /// Both plans in A/B order (fused first) — what fig5/fig6 and the
+    /// hotpath bench iterate over.
+    pub const ALL: [ExecMode; 2] = [ExecMode::Fused, ExecMode::PerChain];
+
+    /// Short label for CLI output, experiment rows and bench names.
+    pub fn tag(self) -> &'static str {
+        match self {
+            ExecMode::PerChain => "per-chain",
+            ExecMode::Fused => "fused",
+        }
+    }
+}
+
+/// All sampled chain parameters of an ensemble plus the CMS shape — the
+/// driver-resident plan a fused pass executes against.
+pub struct ChainSet {
+    pub chains: Vec<ChainParams>,
+    /// Chain length L.
+    pub l: usize,
+    /// CMS hash tables r.
+    pub r: usize,
+    /// CMS buckets per table w.
+    pub w: usize,
+    /// Projected dimensionality K.
+    pub k: usize,
+    sample_rate: f64,
+    seed: u64,
+}
+
+/// Shared CMS-shape guard for both fit executors: bucket coordinates
+/// must stay packable into shuffle keys. One implementation so the two
+/// [`ExecMode`]s can never diverge in which parameter sets they accept.
+pub(crate) fn check_cms_shape(r: usize, w: usize) -> Result<()> {
+    if r >= 128 || w >= (1 << 20) {
+        return Err(ClusterError::Invalid("CMS too large for shuffle key packing".into()));
+    }
+    Ok(())
+}
+
+/// Bound the transient `[chunk][n][L][K]` bins buffer a fused executor
+/// asks the binner for (chains are processed in ascending chunks; one
+/// chain minimum so progress is always possible).
+fn chains_per_chunk(n: usize, l: usize, k: usize) -> usize {
+    const BINS_BUDGET_BYTES: usize = 32 << 20;
+    let per_chain = n.max(1) * l.max(1) * k.max(1) * std::mem::size_of::<i32>();
+    (BINS_BUDGET_BYTES / per_chain).max(1)
+}
+
+/// Scatter one chain's `[n][L][K]` bin ids into its `[L][r][w]` count
+/// block (the map-side combine of Alg. 2's `((level,row,col),1)` pairs —
+/// numerically identical to reduceByKey over the raw pairs). Shared by
+/// the fused and per-chain fit executors.
+pub(crate) fn accumulate_counts(
+    bins: &[i32],
+    n: usize,
+    l: usize,
+    k: usize,
+    r: usize,
+    w: usize,
+    counts: &mut [u32],
+) {
+    debug_assert_eq!(bins.len(), n * l * k);
+    debug_assert_eq!(counts.len(), l * r * w);
+    for i in 0..n {
+        for lvl in 0..l {
+            let bin = &bins[(i * l + lvl) * k..(i * l + lvl + 1) * k];
+            let h = crate::hash::bin_hash(bin);
+            let block = &mut counts[lvl * r * w..(lvl + 1) * r * w];
+            for row in 0..r as u32 {
+                block[row as usize * w + crate::hash::cms_bucket_from(h, row, w)] += 1;
+            }
+        }
+    }
+}
+
+/// The parameter-sampling RNG stream of chain `m` — the single seed
+/// schedule shared by the fused plan, the per-chain executor
+/// (`SparxModel::fit_chains`) and single-machine xStream, so all three
+/// fit identical chain parameters from one `SparxParams::seed`.
+pub(crate) fn chain_rng(seed: u64, m: usize) -> Rng {
+    Rng::new(seed.wrapping_add(m as u64 * 0x9E37_79B9))
+}
+
+impl ChainSet {
+    /// Sample all M chains with the same per-chain seed schedule the
+    /// per-chain path (and single-machine xStream) uses, so fitted
+    /// parameters are identical across execution modes.
+    pub fn sample(deltamax: &[f32], params: &SparxParams) -> ChainSet {
+        let chains = (0..params.num_chains)
+            .map(|m| {
+                let mut rng = chain_rng(params.seed, m);
+                ChainParams::sample(deltamax, params.depth, &mut rng)
+            })
+            .collect();
+        ChainSet {
+            chains,
+            l: params.depth,
+            r: params.cms_rows,
+            w: params.cms_cols,
+            k: deltamax.len(),
+            sample_rate: params.sample_rate,
+            seed: params.seed,
+        }
+    }
+
+    pub fn num_chains(&self) -> usize {
+        self.chains.len()
+    }
+
+    /// Length of the fused `[M][L][r][w]` count block in u32s — the
+    /// constant-size intermediate a fused fit ships per worker.
+    pub fn block_len(&self) -> usize {
+        self.chains.len() * self.l * self.r * self.w
+    }
+
+    /// Fused fit: one partition visit bins every chain against the
+    /// once-flattened sketch block; one tree-aggregate round reduces the
+    /// concatenated count blocks. At `sample_rate < 1` the per-chain
+    /// Bernoulli masks replicate `DistVec::sample`'s per-(seed, partition)
+    /// stream exactly, so counts match the per-chain path bit for bit.
+    pub fn fit(
+        &self,
+        ctx: &ClusterContext,
+        proj: &DistVec<Sketch>,
+        binner: &dyn Binner,
+    ) -> Result<Vec<TrainedChain>> {
+        check_cms_shape(self.r, self.w)?;
+        let (m, l, r, w, k) = (self.chains.len(), self.l, self.r, self.w, self.k);
+        let per_chain = l * r * w;
+        let block = self.block_len();
+        let rate = self.sample_rate;
+        let seed = self.seed;
+        let total = proj.tree_aggregate(
+            ctx,
+            vec![0u32; block],
+            |p, part| {
+                let n = part.len();
+                // flatten the sketch block ONCE per partition (the
+                // per-chain path repeats this M times)
+                let mut flat = Vec::with_capacity(n * k);
+                for sk in part {
+                    flat.extend_from_slice(&sk.s);
+                }
+                let mut counts = vec![0u32; block];
+                if rate >= 1.0 {
+                    // every chain bins the same tile: multi-chain entry
+                    // point, chunked to bound the bins buffer
+                    let refs: Vec<&ChainParams> = self.chains.iter().collect();
+                    let chunk = chains_per_chunk(n, l, k);
+                    let mut m0 = 0;
+                    while m0 < m {
+                        let mc = chunk.min(m - m0);
+                        let bins = binner.tile_bins_multi(&refs[m0..m0 + mc], &flat, n);
+                        for j in 0..mc {
+                            accumulate_counts(
+                                &bins[j * n * l * k..(j + 1) * n * l * k],
+                                n,
+                                l,
+                                k,
+                                r,
+                                w,
+                                &mut counts[(m0 + j) * per_chain..(m0 + j + 1) * per_chain],
+                            );
+                        }
+                        m0 += mc;
+                    }
+                } else {
+                    // per-chain subsample inside the single visit: one
+                    // Bernoulli draw per point in partition order from
+                    // the same (seed ^ m, p) stream DistVec::sample uses
+                    // on the per-chain path
+                    let mut sub: Vec<f32> = Vec::new();
+                    for (mi, chain) in self.chains.iter().enumerate() {
+                        let mut rng = crate::cluster::dist::partition_rng(seed ^ mi as u64, p);
+                        sub.clear();
+                        let mut ns = 0usize;
+                        for i in 0..n {
+                            if rng.bool(rate) {
+                                sub.extend_from_slice(&flat[i * k..(i + 1) * k]);
+                                ns += 1;
+                            }
+                        }
+                        let bins = binner.tile_bins(chain, &sub, ns);
+                        accumulate_counts(
+                            &bins,
+                            ns,
+                            l,
+                            k,
+                            r,
+                            w,
+                            &mut counts[mi * per_chain..(mi + 1) * per_chain],
+                        );
+                    }
+                }
+                Ok(counts)
+            },
+            |mut a, b| {
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += y;
+                }
+                a
+            },
+        )?;
+        Ok(self
+            .chains
+            .iter()
+            .enumerate()
+            .map(|(mi, cp)| {
+                let base = mi * per_chain;
+                let cms = (0..l)
+                    .map(|lvl| {
+                        CountMinSketch::from_counts(
+                            r,
+                            w,
+                            &total[base + lvl * r * w..base + (lvl + 1) * r * w],
+                        )
+                    })
+                    .collect();
+                TrainedChain { params: cp.clone(), cms }
+            })
+            .collect())
+    }
+}
+
+/// Fused score: broadcast the ensemble once, then a single partition
+/// visit flattens the sketch block once, bins chains in ascending chunks,
+/// and folds Eq. (5) per point — min over levels (via [`score_bins`]),
+/// sum over chains in chain order (the per-chain path's exact fold
+/// order), emitting `(id, -avg)` directly.
+pub(crate) fn score_fused(
+    model: &SparxModel,
+    ctx: &ClusterContext,
+    proj: &DistVec<Sketch>,
+    binner: &dyn Binner,
+) -> Result<Vec<(u64, f64)>> {
+    if model.chains.is_empty() {
+        return Err(ClusterError::Invalid("no chains".into()));
+    }
+    let bcast: Broadcast<Vec<TrainedChain>> = Broadcast::new(ctx, model.chains.clone())?;
+    let mode = model.params.score_mode;
+    let k = model.deltamax.len();
+    let l = model.params.depth;
+    let m = model.chains.len();
+    let scored = proj.map_partitions(ctx, |_, part| {
+        let chains = bcast.value();
+        let n = part.len();
+        let mut flat = Vec::with_capacity(n * k);
+        for sk in part {
+            flat.extend_from_slice(&sk.s);
+        }
+        let mut totals = vec![0f64; n];
+        let chunk = chains_per_chunk(n, l, k);
+        let mut m0 = 0;
+        while m0 < m {
+            let mc = chunk.min(m - m0);
+            let refs: Vec<&ChainParams> = chains[m0..m0 + mc].iter().map(|c| &c.params).collect();
+            let bins = binner.tile_bins_multi(&refs, &flat, n);
+            for j in 0..mc {
+                let chain = &chains[m0 + j];
+                for (i, t) in totals.iter_mut().enumerate() {
+                    let point = &bins[(j * n + i) * l * k..(j * n + i + 1) * l * k];
+                    *t += score_bins(chain, mode, point);
+                }
+            }
+            m0 += mc;
+        }
+        Ok(part
+            .iter()
+            .zip(&totals)
+            .map(|(sk, &t)| (sk.id, -(t / m as f64)))
+            .collect())
+    })?;
+    scored.collect(ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::data::generators::GisetteGen;
+    use crate::sparx::chain::NativeBinner;
+    use crate::sparx::projector::{compute_deltamax, project_dataset};
+
+    fn ctx() -> ClusterContext {
+        ClusterConfig { num_partitions: 4, num_workers: 2, num_threads: 2, ..Default::default() }
+            .build()
+    }
+
+    #[test]
+    fn chain_set_samples_the_per_chain_schedule() {
+        let delta = vec![1.0f32, 2.0, 0.5];
+        let params = SparxParams { num_chains: 6, depth: 5, ..Default::default() };
+        let set = ChainSet::sample(&delta, &params);
+        assert_eq!(set.num_chains(), 6);
+        for (m, chain) in set.chains.iter().enumerate() {
+            let mut rng = Rng::new(params.seed.wrapping_add(m as u64 * 0x9E37_79B9));
+            let want = ChainParams::sample(&delta, params.depth, &mut rng);
+            assert_eq!(*chain, want, "chain {m} diverges from the per-chain seed schedule");
+        }
+    }
+
+    #[test]
+    fn fused_fit_counts_equal_per_chain_fit_at_subsample() {
+        // exercises the Bernoulli-mask replication (rate < 1)
+        let c = ctx();
+        let ld = GisetteGen { n: 500, d: 24, ..Default::default() }.generate(&c).unwrap();
+        let params = SparxParams {
+            k: 8,
+            num_chains: 5,
+            depth: 4,
+            sample_rate: 0.4,
+            ..Default::default()
+        };
+        let projector = SparxModel::make_projector(&ld.dataset, &params);
+        let proj = project_dataset(&c, &ld.dataset, &projector).unwrap();
+        let deltamax = compute_deltamax(&c, &proj).unwrap();
+        let fused = ChainSet::sample(&deltamax, &params).fit(&c, &proj, &NativeBinner).unwrap();
+        let per_chain =
+            SparxModel::fit_chains(&c, &proj, &deltamax, &params, &NativeBinner).unwrap();
+        assert_eq!(fused.len(), per_chain.len());
+        for (a, b) in fused.iter().zip(&per_chain) {
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.cms, b.cms, "subsampled counts diverge between executors");
+        }
+    }
+
+    #[test]
+    fn chunking_bounds_hold() {
+        assert_eq!(chains_per_chunk(0, 0, 0), (32 << 20) / 4);
+        assert!(chains_per_chunk(1_000_000, 20, 100) >= 1);
+        // a tiny tile fits many chains per chunk
+        assert!(chains_per_chunk(10, 5, 8) > 50);
+    }
+}

@@ -12,7 +12,7 @@
 
 use crate::util::LruCache;
 
-use super::ensemble::{ScoreMode, SparxModel, TrainedChain};
+use super::ensemble::{score_bins, ScoreMode, SparxModel, TrainedChain};
 use crate::data::UpdateTriple;
 
 /// Outcome of one streamed update.
@@ -97,18 +97,14 @@ impl StreamScorer {
     }
 
     /// Score a cached ID against the ensemble: O(rLM) CMS reads, zero
-    /// allocations (scratch buffers are reused across updates).
+    /// allocations (scratch buffers are reused across updates). Uses the
+    /// same [`score_bins`] kernel as the distributed and fused scorers.
     pub fn score_id(&mut self, id: u64) -> Option<f64> {
         let s = self.cache.get(&id)?; // disjoint field borrows below
         let mut total = 0.0;
         for chain in &self.chains {
-            total += SparxModel::score_sketch_against(
-                chain,
-                self.mode,
-                s,
-                &mut self.scratch,
-                &mut self.bins,
-            );
+            chain.params.bins_into(s, &mut self.scratch, &mut self.bins);
+            total += score_bins(chain, self.mode, &self.bins);
         }
         Some(-(total / self.chains.len() as f64))
     }
