@@ -6,7 +6,11 @@
 fn main() {
     let scale = sparx::experiments::scale::from_env(0.12);
     let t0 = std::time::Instant::now();
-    for result in sparx::experiments::run("fig2", scale) {
+    let results = sparx::experiments::run("fig2", scale, None).unwrap_or_else(|e| {
+        eprintln!("fig2: {e}");
+        std::process::exit(e.exit_code());
+    });
+    for result in results {
         println!("{}", result.to_markdown());
         let failed: Vec<&str> = result
             .checks
@@ -18,5 +22,8 @@ fn main() {
             println!("WARNING: shape checks failed: {failed:?}");
         }
     }
-    println!("bench fig2_gisette_landscape: total {:.1}s at scale {scale}", t0.elapsed().as_secs_f64());
+    println!(
+        "bench fig2_gisette_landscape: total {:.1}s at scale {scale}",
+        t0.elapsed().as_secs_f64()
+    );
 }

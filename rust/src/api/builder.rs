@@ -1,0 +1,298 @@
+//! Typed construction of the Sparx detector: a fluent [`SparxBuilder`]
+//! with a [`Backend`] enum that resolves the binning engine internally —
+//! no more engine/binner borrow-juggling at call sites — plus parameter
+//! validation up front.
+
+use std::sync::Arc;
+
+use crate::cluster::ClusterContext;
+use crate::data::Dataset;
+use crate::runtime::{PjrtBinner, PjrtEngine};
+use crate::sparx::chain::{Binner, NativeBinner};
+use crate::sparx::{project_dataset, ExecMode, ScoreMode, SparxModel, SparxParams, StreamScorer};
+
+use super::error::{Result, SparxError};
+use super::{Detector, FittedModel};
+
+/// Which binning backend executes the per-tile numeric hot path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust binning (always available).
+    Native,
+    /// The AOT Pallas kernels through the PJRT CPU client. Requires the
+    /// compiled artifacts (`make artifacts`) and the `pjrt` feature;
+    /// otherwise [`SparxBuilder::build`] returns
+    /// [`SparxError::MissingArtifact`].
+    Pjrt,
+}
+
+impl Backend {
+    /// CLI/report tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Resolved backend state owned by the detector (and shared with every
+/// model it fits). The engine handle lives behind an `Arc` so fitted
+/// models stay usable after the detector is dropped.
+#[derive(Clone)]
+enum BackendRuntime {
+    Native,
+    Pjrt { engine: Arc<PjrtEngine>, variant: String },
+}
+
+impl BackendRuntime {
+    /// Run `f` with the backend's binner. The PJRT binner borrows the
+    /// engine, so it is materialised only for the duration of the call —
+    /// this is the borrow-juggling the old call sites repeated by hand.
+    fn with_binner<T>(&self, f: impl FnOnce(&dyn Binner) -> T) -> T {
+        match self {
+            BackendRuntime::Native => f(&NativeBinner),
+            BackendRuntime::Pjrt { engine, variant } => {
+                f(&PjrtBinner { engine: engine.as_ref(), variant: variant.clone() })
+            }
+        }
+    }
+
+    fn tag(&self) -> &'static str {
+        match self {
+            BackendRuntime::Native => "native",
+            BackendRuntime::Pjrt { .. } => "pjrt",
+        }
+    }
+}
+
+/// Fluent, validating constructor for [`SparxDetector`].
+///
+/// ```no_run
+/// use sparx::api::{Backend, SparxBuilder};
+/// let det = SparxBuilder::new()
+///     .k(50)
+///     .chains(100)
+///     .depth(15)
+///     .sample_rate(0.1)
+///     .backend(Backend::Native)
+///     .build()
+///     .expect("valid params");
+/// ```
+#[derive(Debug, Clone)]
+pub struct SparxBuilder {
+    params: SparxParams,
+    backend: Backend,
+    pjrt_variant: String,
+}
+
+impl Default for SparxBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SparxBuilder {
+    pub fn new() -> Self {
+        SparxBuilder {
+            params: SparxParams::default(),
+            backend: Backend::Native,
+            pjrt_variant: "gisette".into(),
+        }
+    }
+
+    /// Replace the full parameter block (flags already folded in).
+    pub fn params(mut self, params: SparxParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Projection size K (0 ⇒ identity, no projection).
+    pub fn k(mut self, k: usize) -> Self {
+        self.params.k = k;
+        self
+    }
+
+    /// Ensemble size M.
+    pub fn chains(mut self, m: usize) -> Self {
+        self.params.num_chains = m;
+        self
+    }
+
+    /// Chain length / depth L.
+    pub fn depth(mut self, l: usize) -> Self {
+        self.params.depth = l;
+        self
+    }
+
+    /// Fit subsampling rate in (0, 1].
+    pub fn sample_rate(mut self, rate: f64) -> Self {
+        self.params.sample_rate = rate;
+        self
+    }
+
+    /// CMS shape (r hash tables × w buckets).
+    pub fn cms(mut self, rows: usize, cols: usize) -> Self {
+        self.params.cms_rows = rows;
+        self.params.cms_cols = cols;
+        self
+    }
+
+    /// Non-zero density of the sign hashes.
+    pub fn density(mut self, density: f64) -> Self {
+        self.params.density = density;
+        self
+    }
+
+    pub fn score_mode(mut self, mode: ScoreMode) -> Self {
+        self.params.score_mode = mode;
+        self
+    }
+
+    /// Execution plan (fused single-pass vs legacy per-chain).
+    pub fn exec_mode(mut self, mode: ExecMode) -> Self {
+        self.params.exec_mode = mode;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.params.seed = seed;
+        self
+    }
+
+    /// Binning backend; [`Backend::Pjrt`] starts the engine at `build`.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// AOT artifact variant for the PJRT backend ("gisette" | "osm" |
+    /// "spamurl" — fixed tile shapes are compiled per workload).
+    pub fn pjrt_variant(mut self, variant: &str) -> Self {
+        self.pjrt_variant = variant.into();
+        self
+    }
+
+    /// Validate the parameters and resolve the backend.
+    pub fn build(self) -> Result<SparxDetector> {
+        self.params.validate().map_err(SparxError::InvalidParams)?;
+        let backend = match self.backend {
+            Backend::Native => BackendRuntime::Native,
+            Backend::Pjrt => BackendRuntime::Pjrt {
+                engine: Arc::new(
+                    PjrtEngine::start_default().map_err(SparxError::MissingArtifact)?,
+                ),
+                variant: self.pjrt_variant,
+            },
+        };
+        Ok(SparxDetector { params: self.params, backend })
+    }
+}
+
+/// Sparx behind the unified [`Detector`] contract. Build via
+/// [`SparxBuilder`]; scores are bit-identical to the direct
+/// [`SparxModel::fit`] + `score_dataset` path (regression-tested).
+pub struct SparxDetector {
+    params: SparxParams,
+    backend: BackendRuntime,
+}
+
+impl SparxDetector {
+    pub fn params(&self) -> &SparxParams {
+        &self.params
+    }
+
+    /// Backend tag for reports ("native" | "pjrt").
+    pub fn backend_tag(&self) -> &'static str {
+        self.backend.tag()
+    }
+}
+
+impl Detector for SparxDetector {
+    fn name(&self) -> &'static str {
+        "sparx"
+    }
+
+    fn fit(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Box<dyn FittedModel>> {
+        // params were validated at build(); fit_with re-checks for direct
+        // (non-builder) callers of the model API
+        let model = self
+            .backend
+            .with_binner(|binner| SparxModel::fit_with(ctx, data, &self.params, binner))?;
+        Ok(Box::new(FittedSparx { model, backend: self.backend.clone() }))
+    }
+}
+
+/// A fitted Sparx model plus the backend it was fitted with (scoring
+/// reuses the same engine).
+pub struct FittedSparx {
+    model: SparxModel,
+    backend: BackendRuntime,
+}
+
+impl FittedSparx {
+    /// The underlying model, for callers that need the fitted state
+    /// (chains, projector, Δmax) beyond the trait surface.
+    pub fn model(&self) -> &SparxModel {
+        &self.model
+    }
+}
+
+impl FittedModel for FittedSparx {
+    fn name(&self) -> &'static str {
+        "sparx"
+    }
+
+    fn score(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Vec<(u64, f64)>> {
+        let proj = project_dataset(ctx, data, &self.model.projector)?;
+        let scores = self
+            .backend
+            .with_binner(|binner| self.model.score_sketches_with(ctx, &proj, binner))?;
+        Ok(scores)
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.model.model_bytes()
+    }
+
+    fn stream_scorer(&self, cache_size: usize) -> Result<StreamScorer> {
+        StreamScorer::new(&self.model, cache_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_rejects_invalid_params() {
+        for (what, b) in [
+            ("depth=0", SparxBuilder::new().depth(0)),
+            ("chains=0", SparxBuilder::new().chains(0)),
+            ("cms rows=0", SparxBuilder::new().cms(0, 100)),
+            ("cms cols=0", SparxBuilder::new().cms(10, 0)),
+            ("rate>1", SparxBuilder::new().sample_rate(1.5)),
+            ("rate=0", SparxBuilder::new().sample_rate(0.0)),
+            ("density=0", SparxBuilder::new().density(0.0)),
+        ] {
+            let r = b.build();
+            assert!(
+                matches!(r, Err(SparxError::InvalidParams(_))),
+                "{what} must be rejected, got {:?}",
+                r.err()
+            );
+        }
+    }
+
+    #[test]
+    fn builder_accepts_defaults() {
+        assert!(SparxBuilder::new().build().is_ok());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_reports_missing_artifacts() {
+        let r = SparxBuilder::new().backend(Backend::Pjrt).build();
+        assert!(matches!(r, Err(SparxError::MissingArtifact(_))), "got {:?}", r.err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Crate-wide error taxonomy for the unified detector API.
+//!
+//! Every public entry point of [`crate::api`] returns
+//! [`Result<T>`](Result) with [`SparxError`]; lower layers keep their own
+//! error types (the substrate's [`ClusterError`], `std::io::Error`) and
+//! convert on the way out via `From`, so `?` works across layers.
+
+use crate::cluster::ClusterError;
+
+/// The library-level error for the detect / score / experiment paths.
+///
+/// | variant | meaning | CLI exit code |
+/// |---|---|---|
+/// | `Cluster` | substrate failure: MEM ERR, TIMEOUT, invalid usage | 1 |
+/// | `InvalidParams` | hyperparameter / flag validation failure | 2 |
+/// | `UnknownDetector` | registry lookup miss | 2 |
+/// | `Unsupported` | capability the selected detector lacks | 2 |
+/// | `MissingArtifact` | AOT module / PJRT engine unavailable | 1 |
+/// | `Io` | filesystem failure | 1 |
+#[derive(Debug, Clone, PartialEq)]
+pub enum SparxError {
+    /// A failure surfaced by the cluster substrate (the paper's "MEM ERR"
+    /// and "TIMEOUT" rows arrive here).
+    Cluster(ClusterError),
+    /// Hyperparameter validation failed (e.g. `depth=0`, `cms_rows=0`,
+    /// `sample_rate > 1`).
+    InvalidParams(String),
+    /// The detector name is not in [`crate::api::registry`].
+    UnknownDetector(String),
+    /// The selected detector cannot serve this request (e.g. SPIF on
+    /// sparse rows, streaming from a non-hashing projector).
+    Unsupported(String),
+    /// A required runtime artifact (AOT module, PJRT engine) is missing.
+    MissingArtifact(String),
+    /// Filesystem I/O failed.
+    Io(String),
+}
+
+impl SparxError {
+    /// Process exit code the CLI maps this error to: `2` for usage /
+    /// validation problems (the caller can fix the invocation), `1` for
+    /// runtime failures.
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            SparxError::InvalidParams(_)
+            | SparxError::UnknownDetector(_)
+            | SparxError::Unsupported(_) => 2,
+            SparxError::Cluster(_) | SparxError::MissingArtifact(_) | SparxError::Io(_) => 1,
+        }
+    }
+
+    /// Short status label for experiment tables ("MEM ERR", "TIMEOUT",
+    /// otherwise the display form).
+    pub fn status_label(&self) -> String {
+        match self {
+            SparxError::Cluster(
+                ClusterError::MemExceeded { .. } | ClusterError::DriverMemExceeded { .. },
+            ) => "MEM ERR".into(),
+            SparxError::Cluster(ClusterError::DeadlineExceeded { .. }) => "TIMEOUT".into(),
+            other => other.to_string(),
+        }
+    }
+}
+
+impl std::fmt::Display for SparxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SparxError::Cluster(e) => write!(f, "{e}"),
+            SparxError::InvalidParams(m) => write!(f, "invalid parameters: {m}"),
+            SparxError::UnknownDetector(m) => write!(f, "unknown detector: {m}"),
+            SparxError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            SparxError::MissingArtifact(m) => write!(f, "missing artifact: {m}"),
+            SparxError::Io(m) => write!(f, "i/o error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SparxError {}
+
+impl From<ClusterError> for SparxError {
+    fn from(e: ClusterError) -> Self {
+        SparxError::Cluster(e)
+    }
+}
+
+impl From<std::io::Error> for SparxError {
+    fn from(e: std::io::Error) -> Self {
+        SparxError::Io(e.to_string())
+    }
+}
+
+/// Library-level result alias (distinct from the substrate's
+/// [`crate::cluster::Result`]).
+pub type Result<T> = std::result::Result<T, SparxError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_errors_convert_and_label() {
+        let e: SparxError =
+            ClusterError::MemExceeded { worker: 1, wanted: 10, budget: 5 }.into();
+        assert_eq!(e.status_label(), "MEM ERR");
+        assert_eq!(e.exit_code(), 1);
+        let t: SparxError =
+            ClusterError::DeadlineExceeded { elapsed_secs: 9.0, budget_secs: 1.0 }.into();
+        assert_eq!(t.status_label(), "TIMEOUT");
+    }
+
+    #[test]
+    fn usage_errors_exit_2() {
+        assert_eq!(SparxError::InvalidParams("depth".into()).exit_code(), 2);
+        assert_eq!(SparxError::UnknownDetector("sparks".into()).exit_code(), 2);
+        assert_eq!(SparxError::Unsupported("sparse".into()).exit_code(), 2);
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: SparxError = io.into();
+        assert!(matches!(e, SparxError::Io(_)));
+        assert_eq!(e.exit_code(), 1);
+    }
+}

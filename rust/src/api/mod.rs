@@ -1,0 +1,111 @@
+//! The unified detector API: **one fit/score contract for every method**.
+//!
+//! Before this module, each detector exposed its own pipeline: Sparx
+//! needed a three-call dance (`fit_with` → `project_dataset` →
+//! `score_sketches_with`), while xStream, SPIF and DBSCOUT each had
+//! incompatible fit/score signatures, so the CLI, the stream demo and all
+//! experiment harnesses hand-wired their own plumbing. Following the
+//! PyOD/SUOD lesson — a single `fit`/`decision_function` spine is what
+//! makes an OD toolbox extensible — everything now flows through two
+//! traits:
+//!
+//! * [`Detector`] — an unfitted, configured method: `fit(&ctx, &data)`
+//!   returns a boxed [`FittedModel`];
+//! * [`FittedModel`] — `score(&ctx, &data)` yields `(id, outlierness)`
+//!   pairs (higher = more outlying) for *every* point, `model_bytes()`
+//!   reports the deployable footprint, and `stream_scorer()` (optional;
+//!   Sparx only) opens the §3.5 evolving-stream front-end.
+//!
+//! Construction is either **typed** — [`SparxBuilder`] with a
+//! [`Backend`] that resolves the binner/engine internally — or
+//! **string-driven** through [`registry`] (`"sparx" | "xstream" | "spif"
+//! | "dbscout"`), which is what `sparx detect --method …` uses.
+//!
+//! All entry points return [`Result`] with the crate-wide [`SparxError`]
+//! taxonomy (see [`error`]); invalid hyperparameters are rejected with
+//! `SparxError::InvalidParams` instead of panicking deep in the pipeline.
+//!
+//! ```no_run
+//! use sparx::api::{Detector, FittedModel, SparxBuilder};
+//! use sparx::config::presets;
+//! use sparx::data::generators::GisetteGen;
+//!
+//! fn main() -> sparx::api::Result<()> {
+//!     let cluster = presets::config_local().build();
+//!     let data = GisetteGen::default().generate(&cluster)?;
+//!     let detector = SparxBuilder::new().chains(50).depth(10).sample_rate(0.1).build()?;
+//!     let model = detector.fit(&cluster, &data.dataset)?;
+//!     let scores = model.score(&cluster, &data.dataset)?;
+//!     println!("scored {} points, model {}B", scores.len(), model.model_bytes());
+//!     Ok(())
+//! }
+//! ```
+
+pub mod builder;
+pub mod error;
+pub mod registry;
+
+pub use builder::{Backend, FittedSparx, SparxBuilder, SparxDetector};
+pub use error::{Result, SparxError};
+pub use registry::DetectorSpec;
+
+use crate::cluster::ClusterContext;
+use crate::data::{Dataset, Features};
+use crate::sparx::StreamScorer;
+
+/// A configured-but-unfitted outlier detector. The one contract every
+/// method implements; the CLI, the experiment harnesses and the examples
+/// all drive detectors exclusively through it.
+pub trait Detector {
+    /// Registry name of the method ("sparx", "xstream", …).
+    fn name(&self) -> &'static str;
+
+    /// Fit on a (distributed) dataset, consuming cluster resources
+    /// through `ctx`'s ledger and memory meters.
+    fn fit(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Box<dyn FittedModel>>;
+}
+
+/// A fitted model: scores datasets, reports its deployable footprint,
+/// and (for methods that support §3.5) opens a streaming front-end.
+pub trait FittedModel {
+    /// Name of the method that produced this model.
+    fn name(&self) -> &'static str;
+
+    /// Score every point: `(id, outlierness)`, higher = more outlying.
+    /// Methods with binary verdicts (DBSCOUT) emit 1.0 / 0.0.
+    fn score(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Vec<(u64, f64)>>;
+
+    /// Driver-resident model footprint in bytes (what scoring broadcasts).
+    fn model_bytes(&self) -> usize;
+
+    /// Open the evolving-stream front-end (§3.5) with an LRU sketch cache
+    /// of `cache_size` IDs. Default: unsupported.
+    fn stream_scorer(&self, cache_size: usize) -> Result<StreamScorer> {
+        let _ = cache_size;
+        Err(SparxError::Unsupported(format!(
+            "{} has no evolving-stream front-end (only sparx does)",
+            self.name()
+        )))
+    }
+}
+
+/// Guard shared by the dense-only baselines (SPIF, DBSCOUT): the public
+/// SPIF implementation cannot ingest sparse RDDs (§4.2.5) and DBSCOUT's
+/// grid needs coordinates, so sparse/mixed data must be projected to a
+/// dense representation first — exactly as the paper had to.
+/// Checks the first row of *every* partition (O(partitions), no data
+/// movement) — generators and loaders build homogeneous partitions, so
+/// this catches mixed datasets without a full scan.
+pub(crate) fn ensure_dense(data: &Dataset, method: &str) -> Result<()> {
+    for p in 0..data.rows.num_parts() {
+        if let Some(row) = data.rows.part(p).first() {
+            if !matches!(&row.features, Features::Dense(_)) {
+                return Err(SparxError::Unsupported(format!(
+                    "{method} requires dense rows — project the data first \
+                     (e.g. Sparx's Eq. 2 hash projection), as the paper did"
+                )));
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! String → factory registry of detectors: the single lookup behind
+//! `sparx detect --method …` and any other name-driven entry point.
+//!
+//! Each factory consumes a [`DetectorSpec`] — the flag-level description
+//! of a run — applies its method's defaults for unset fields, validates,
+//! and returns the boxed [`Detector`].
+
+use crate::baselines::dbscout::DbscoutDetector;
+use crate::baselines::spif::SpifDetector;
+use crate::baselines::xstream::XStreamDetector;
+use crate::baselines::{DbscoutParams, SpifParams, XStreamParams};
+use crate::sparx::ExecMode;
+
+use super::builder::{Backend, SparxBuilder};
+use super::error::{Result, SparxError};
+use super::Detector;
+
+/// Flag-level description of a detector run. `None` fields fall back to
+/// the method's own defaults, so one spec can configure any detector.
+/// Fields a method has no use for are ignored by its factory (a spec is
+/// a superset description); the CLI rejects explicitly-passed
+/// inapplicable flags *before* building the spec, so users never hit
+/// the silent-ignore path.
+#[derive(Debug, Clone)]
+pub struct DetectorSpec {
+    /// Projection size K (sparx / xstream; 0 ⇒ identity).
+    pub k: Option<usize>,
+    /// Ensemble size: chains (sparx / xstream) or trees (spif).
+    pub components: Option<usize>,
+    /// Chain length / tree depth.
+    pub depth: Option<usize>,
+    /// Fit subsampling rate in (0, 1].
+    pub sample_rate: Option<f64>,
+    /// Base seed for parameter sampling (None ⇒ library default).
+    pub seed: Option<u64>,
+    /// Sparx execution plan.
+    pub exec_mode: ExecMode,
+    /// Sparx binning backend.
+    pub backend: Backend,
+    /// AOT artifact variant for the PJRT backend.
+    pub pjrt_variant: Option<String>,
+    /// DBSCOUT eps (None ⇒ chosen at fit time via the elbow heuristic).
+    pub eps: Option<f64>,
+    /// DBSCOUT minPts.
+    pub min_pts: Option<usize>,
+}
+
+impl Default for DetectorSpec {
+    fn default() -> Self {
+        DetectorSpec {
+            k: None,
+            components: None,
+            depth: None,
+            sample_rate: None,
+            seed: None,
+            exec_mode: ExecMode::Fused,
+            backend: Backend::Native,
+            pjrt_variant: None,
+            eps: None,
+            min_pts: None,
+        }
+    }
+}
+
+type Factory = fn(&DetectorSpec) -> Result<Box<dyn Detector>>;
+
+/// The registered methods, in CLI listing order.
+const REGISTRY: &[(&str, Factory)] = &[
+    ("sparx", make_sparx),
+    ("xstream", make_xstream),
+    ("spif", make_spif),
+    ("dbscout", make_dbscout),
+];
+
+/// Names of every registered detector.
+pub fn detector_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|(name, _)| *name).collect()
+}
+
+/// Build a detector by name. Unknown names return
+/// [`SparxError::UnknownDetector`] with the valid options (and a
+/// suggestion when the name looks like a typo).
+pub fn build(name: &str, spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
+    match REGISTRY.iter().find(|(n, _)| *n == name) {
+        Some((_, factory)) => factory(spec),
+        None => {
+            let names = detector_names().join("|");
+            let hint = crate::util::closest_match(name, &detector_names())
+                .map(|s| format!(" — did you mean {s:?}?"))
+                .unwrap_or_default();
+            Err(SparxError::UnknownDetector(format!("{name:?} (expected {names}){hint}")))
+        }
+    }
+}
+
+fn make_sparx(spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
+    let mut b = SparxBuilder::new().exec_mode(spec.exec_mode).backend(spec.backend);
+    if let Some(k) = spec.k {
+        b = b.k(k);
+    }
+    if let Some(m) = spec.components {
+        b = b.chains(m);
+    }
+    if let Some(l) = spec.depth {
+        b = b.depth(l);
+    }
+    if let Some(rate) = spec.sample_rate {
+        b = b.sample_rate(rate);
+    }
+    if let Some(seed) = spec.seed {
+        b = b.seed(seed);
+    }
+    if let Some(variant) = &spec.pjrt_variant {
+        b = b.pjrt_variant(variant);
+    }
+    Ok(Box::new(b.build()?))
+}
+
+fn make_xstream(spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
+    let mut p = XStreamParams::default();
+    if let Some(k) = spec.k {
+        p.k = k;
+    }
+    if let Some(m) = spec.components {
+        p.num_chains = m;
+    }
+    if let Some(l) = spec.depth {
+        p.depth = l;
+    }
+    if let Some(seed) = spec.seed {
+        p.seed = seed;
+    }
+    Ok(Box::new(XStreamDetector::new(p)?))
+}
+
+fn make_spif(spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
+    let mut p = SpifParams::default();
+    if let Some(t) = spec.components {
+        p.num_trees = t;
+    }
+    if let Some(l) = spec.depth {
+        p.max_depth = l;
+    }
+    if let Some(rate) = spec.sample_rate {
+        p.sample_rate = rate;
+    }
+    if let Some(seed) = spec.seed {
+        p.seed = seed;
+    }
+    Ok(Box::new(SpifDetector::new(p)?))
+}
+
+fn make_dbscout(spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
+    let mut p = DbscoutParams::default();
+    if let Some(eps) = spec.eps {
+        p.eps = eps;
+    }
+    if let Some(min_pts) = spec.min_pts {
+        p.min_pts = min_pts;
+    }
+    Ok(Box::new(DbscoutDetector::new(p, spec.eps.is_none())?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_resolve() {
+        for name in detector_names() {
+            let det = build(name, &DetectorSpec::default()).unwrap();
+            assert_eq!(det.name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_a_typed_error_with_hint() {
+        let e = build("sparks", &DetectorSpec::default()).unwrap_err();
+        match e {
+            SparxError::UnknownDetector(msg) => {
+                assert!(msg.contains("sparx"), "no suggestion in {msg:?}");
+            }
+            other => panic!("expected UnknownDetector, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_spec_fields_surface_as_invalid_params() {
+        let spec = DetectorSpec { depth: Some(0), ..Default::default() };
+        for name in ["sparx", "xstream", "spif"] {
+            let r = build(name, &spec);
+            assert!(
+                matches!(r, Err(SparxError::InvalidParams(_))),
+                "{name} depth=0 must be rejected, got {:?}",
+                r.err()
+            );
+        }
+        let spec = DetectorSpec { eps: Some(-1.0), ..Default::default() };
+        assert!(matches!(build("dbscout", &spec), Err(SparxError::InvalidParams(_))));
+    }
+}

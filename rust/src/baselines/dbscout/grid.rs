@@ -3,6 +3,7 @@
 
 use std::collections::HashMap;
 
+use crate::api::{self, Detector, FittedModel, SparxError};
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{ClusterContext, Result};
 use crate::data::Dataset;
@@ -21,6 +22,19 @@ pub struct DbscoutParams {
 impl Default for DbscoutParams {
     fn default() -> Self {
         DbscoutParams { eps: 0.5, min_pts: 8, cost: CostModel::default() }
+    }
+}
+
+impl DbscoutParams {
+    /// Hyperparameter sanity rules, mirrored on the other detectors.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if !(self.eps > 0.0 && self.eps.is_finite()) {
+            return Err(format!("eps must be a positive finite number: got {}", self.eps));
+        }
+        if self.min_pts == 0 {
+            return Err("min_pts must be ≥ 1".into());
+        }
+        Ok(())
     }
 }
 
@@ -74,7 +88,11 @@ type Cell = Vec<i32>;
 
 impl Dbscout {
     /// Run DBSCOUT on dense data. Returns binary outlier verdicts.
-    pub fn run(ctx: &ClusterContext, data: &Dataset, params: &DbscoutParams) -> Result<DbscoutVerdict> {
+    pub fn run(
+        ctx: &ClusterContext,
+        data: &Dataset,
+        params: &DbscoutParams,
+    ) -> Result<DbscoutVerdict> {
         let d = data.dim();
         if d == 0 {
             return Err(crate::cluster::ClusterError::Invalid("empty schema".into()));
@@ -235,6 +253,81 @@ impl Dbscout {
         }
         knn.sort_by(|x, y| x.partial_cmp(y).unwrap());
         Ok(knn[(knn.len() as f64 * 0.9) as usize])
+    }
+}
+
+/// [`Detector`] adapter. DBSCOUT is transductive — there is no trained
+/// state — so `fit` only resolves eps (via the paper's elbow heuristic
+/// when `auto_eps`) and `score` runs the grid algorithm, emitting 1.0
+/// (outlier) / 0.0 (inlier): the binary verdict as a degenerate ranking.
+pub struct DbscoutDetector {
+    params: DbscoutParams,
+    auto_eps: bool,
+}
+
+impl DbscoutDetector {
+    /// `auto_eps = true` ⇒ eps is chosen from the data at fit time
+    /// (§4.1.5's sorted-kNN-distance elbow) and `params.eps` is ignored.
+    pub fn new(params: DbscoutParams, auto_eps: bool) -> api::Result<Self> {
+        if !auto_eps {
+            params.validate().map_err(SparxError::InvalidParams)?;
+        } else if params.min_pts == 0 {
+            return Err(SparxError::InvalidParams("min_pts must be ≥ 1".into()));
+        }
+        Ok(DbscoutDetector { params, auto_eps })
+    }
+
+    pub fn params(&self) -> &DbscoutParams {
+        &self.params
+    }
+}
+
+impl Detector for DbscoutDetector {
+    fn name(&self) -> &'static str {
+        "dbscout"
+    }
+
+    fn fit(&self, ctx: &ClusterContext, data: &Dataset) -> api::Result<Box<dyn FittedModel>> {
+        api::ensure_dense(data, "DBSCOUT")?;
+        let mut params = self.params.clone();
+        if self.auto_eps {
+            params.eps = Dbscout::choose_eps(ctx, data, params.min_pts, 400)?;
+        }
+        params.validate().map_err(SparxError::InvalidParams)?;
+        Ok(Box::new(FittedDbscout { params }))
+    }
+}
+
+/// The resolved DBSCOUT configuration (eps fixed at fit time).
+pub struct FittedDbscout {
+    params: DbscoutParams,
+}
+
+impl FittedDbscout {
+    /// The eps the grid runs with (chosen at fit time under `auto_eps`).
+    pub fn eps(&self) -> f64 {
+        self.params.eps
+    }
+}
+
+impl FittedModel for FittedDbscout {
+    fn name(&self) -> &'static str {
+        "dbscout"
+    }
+
+    fn score(&self, ctx: &ClusterContext, data: &Dataset) -> api::Result<Vec<(u64, f64)>> {
+        api::ensure_dense(data, "DBSCOUT")?;
+        let verdict = Dbscout::run(ctx, data, &self.params)?;
+        Ok(verdict
+            .pred
+            .into_iter()
+            .map(|(id, outlier)| (id, if outlier { 1.0 } else { 0.0 }))
+            .collect())
+    }
+
+    /// No trained state: the grid is rebuilt per scoring pass.
+    fn model_bytes(&self) -> usize {
+        0
     }
 }
 
@@ -412,7 +505,8 @@ mod tests {
         )
         .unwrap();
         let ds = Dataset::new(Schema::positional(d), rows);
-        let r = Dbscout::run(&c, &ds, &DbscoutParams { eps: 2.0, min_pts: 8, ..Default::default() });
+        let r =
+            Dbscout::run(&c, &ds, &DbscoutParams { eps: 2.0, min_pts: 8, ..Default::default() });
         assert!(
             matches!(r, Err(ClusterError::DeadlineExceeded { .. })),
             "expected TIMEOUT at d=11"

@@ -31,4 +31,6 @@
 
 pub mod grid;
 
-pub use grid::{CostModel, Dbscout, DbscoutParams, DbscoutVerdict};
+pub use grid::{
+    CostModel, Dbscout, DbscoutDetector, DbscoutParams, DbscoutVerdict, FittedDbscout,
+};

@@ -10,11 +10,16 @@
 //!   output only.
 //! * [`xstream`] — the single-machine xStream reference, used as the
 //!   speed-up denominator in Fig. 5.
+//!
+//! Each baseline also implements the unified [`crate::api::Detector`]
+//! contract (`XStreamDetector`, `SpifDetector`, `DbscoutDetector`), so
+//! the CLI and the experiment harnesses drive all methods — Sparx
+//! included — through one fit/score codepath.
 
 pub mod dbscout;
 pub mod spif;
 pub mod xstream;
 
-pub use dbscout::{Dbscout, DbscoutParams};
-pub use spif::{Spif, SpifParams};
-pub use xstream::{XStream, XStreamParams};
+pub use dbscout::{Dbscout, DbscoutDetector, DbscoutParams};
+pub use spif::{Spif, SpifDetector, SpifParams};
+pub use xstream::{XStream, XStreamDetector, XStreamParams};

@@ -1,6 +1,7 @@
 //! SPIF forest: model-parallel fit with the per-tree subsample shuffle,
 //! data-parallel scoring with a broadcast forest.
 
+use crate::api::{self, Detector, FittedModel, SparxError};
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{pool, ClusterContext, DistVec, Result};
 use crate::data::{Dataset, Row};
@@ -22,6 +23,22 @@ pub struct SpifParams {
 impl Default for SpifParams {
     fn default() -> Self {
         SpifParams { num_trees: 50, max_depth: 10, sample_rate: 0.01, seed: 0x5F1F }
+    }
+}
+
+impl SpifParams {
+    /// Hyperparameter sanity rules, mirrored on the other detectors.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.num_trees == 0 {
+            return Err("num_trees (#components) must be ≥ 1".into());
+        }
+        if self.max_depth == 0 {
+            return Err("max_depth must be ≥ 1".into());
+        }
+        if !(self.sample_rate > 0.0 && self.sample_rate <= 1.0) {
+            return Err(format!("sample_rate must be in (0, 1]: got {}", self.sample_rate));
+        }
+        Ok(())
     }
 }
 
@@ -102,6 +119,51 @@ impl Spif {
 
     pub fn model_bytes(&self) -> usize {
         self.trees.iter().map(SizeOf::size_of).sum()
+    }
+}
+
+/// [`Detector`] adapter. Fitting keeps SPIF's own (flawed) topology — the
+/// per-tree subsample shuffle — under the unified contract; the adapter
+/// only adds the dense-input guard the public implementation enforces by
+/// crashing (§4.2.5).
+pub struct SpifDetector {
+    params: SpifParams,
+}
+
+impl SpifDetector {
+    pub fn new(params: SpifParams) -> api::Result<Self> {
+        params.validate().map_err(SparxError::InvalidParams)?;
+        Ok(SpifDetector { params })
+    }
+
+    pub fn params(&self) -> &SpifParams {
+        &self.params
+    }
+}
+
+impl Detector for SpifDetector {
+    fn name(&self) -> &'static str {
+        "spif"
+    }
+
+    fn fit(&self, ctx: &ClusterContext, data: &Dataset) -> api::Result<Box<dyn FittedModel>> {
+        api::ensure_dense(data, "SPIF")?;
+        Ok(Box::new(Spif::fit(ctx, data, &self.params)?))
+    }
+}
+
+impl FittedModel for Spif {
+    fn name(&self) -> &'static str {
+        "spif"
+    }
+
+    fn score(&self, ctx: &ClusterContext, data: &Dataset) -> api::Result<Vec<(u64, f64)>> {
+        api::ensure_dense(data, "SPIF")?;
+        Ok(self.score_dataset(ctx, data)?)
+    }
+
+    fn model_bytes(&self) -> usize {
+        Spif::model_bytes(self)
     }
 }
 

@@ -14,4 +14,4 @@
 pub mod forest;
 pub mod tree;
 
-pub use forest::{Spif, SpifParams};
+pub use forest::{Spif, SpifDetector, SpifParams};

@@ -6,9 +6,12 @@
 //! Everything runs on one thread over plain `Vec`s: projection (Eq. 2),
 //! chain fitting with point-wise CMS inserts, scoring (Eq. 5).
 
-use crate::data::Row;
-use crate::sparx::{ChainParams, CountMinSketch, Projector, ScoreMode, SparxModel, TrainedChain};
+use crate::api::{self, Detector, FittedModel, SparxError};
+use crate::cluster::ClusterContext;
+use crate::data::{Dataset, Row};
 use crate::sparx::plan::chain_rng;
+use crate::sparx::{ChainParams, CountMinSketch, Projector, ScoreMode, SparxModel, TrainedChain};
+use crate::util::SizeOf;
 
 #[derive(Debug, Clone)]
 pub struct XStreamParams {
@@ -34,6 +37,30 @@ impl Default for XStreamParams {
             score_mode: ScoreMode::Log2,
             seed: 0x5AB4,
         }
+    }
+}
+
+impl XStreamParams {
+    /// Same hyperparameter sanity rules as [`crate::sparx::SparxParams`]
+    /// — the two implementations must accept identical settings for the
+    /// cross-check tests to be meaningful.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.num_chains == 0 {
+            return Err("num_chains (M) must be ≥ 1".into());
+        }
+        if self.depth == 0 {
+            return Err("depth (L) must be ≥ 1".into());
+        }
+        if self.cms_rows == 0 || self.cms_cols == 0 {
+            return Err(format!(
+                "CMS shape must be non-degenerate: got r={} w={}",
+                self.cms_rows, self.cms_cols
+            ));
+        }
+        if !(self.density > 0.0 && self.density <= 1.0) {
+            return Err(format!("density must be in (0, 1]: got {}", self.density));
+        }
+        Ok(())
     }
 }
 
@@ -119,6 +146,56 @@ impl XStream {
                 (r.id, -(total / self.chains.len() as f64))
             })
             .collect()
+    }
+
+    /// Driver-resident model footprint (chains + CMS counts).
+    pub fn model_bytes(&self) -> usize {
+        self.chains.iter().map(SizeOf::size_of).sum()
+    }
+}
+
+/// [`Detector`] adapter for the single-machine reference: `fit` collects
+/// the dataset to the driver (paying the collect through the ledger and
+/// the driver memory meter — this *is* the single-machine story Fig. 5
+/// divides by) and runs the sequential implementation.
+pub struct XStreamDetector {
+    params: XStreamParams,
+}
+
+impl XStreamDetector {
+    pub fn new(params: XStreamParams) -> api::Result<Self> {
+        params.validate().map_err(SparxError::InvalidParams)?;
+        Ok(XStreamDetector { params })
+    }
+
+    pub fn params(&self) -> &XStreamParams {
+        &self.params
+    }
+}
+
+impl Detector for XStreamDetector {
+    fn name(&self) -> &'static str {
+        "xstream"
+    }
+
+    fn fit(&self, ctx: &ClusterContext, data: &Dataset) -> api::Result<Box<dyn FittedModel>> {
+        let rows = data.rows.collect(ctx)?;
+        Ok(Box::new(XStream::fit(&rows, &data.schema.names, &self.params)))
+    }
+}
+
+impl FittedModel for XStream {
+    fn name(&self) -> &'static str {
+        "xstream"
+    }
+
+    fn score(&self, ctx: &ClusterContext, data: &Dataset) -> api::Result<Vec<(u64, f64)>> {
+        let rows = data.rows.collect(ctx)?;
+        Ok(XStream::score(self, &rows))
+    }
+
+    fn model_bytes(&self) -> usize {
+        XStream::model_bytes(self)
     }
 }
 

@@ -24,9 +24,12 @@ impl MemoryMeter {
     }
 
     /// Charge `bytes`; returns the would-be total on budget overflow.
+    /// Saturating: cost models can ask for `usize::MAX` (DBSCOUT's
+    /// super-literal buffers at high d), which must trip the budget, not
+    /// overflow the arithmetic.
     pub fn charge(&self, bytes: usize) -> Result<(), usize> {
         let prev = self.current.fetch_add(bytes, Ordering::Relaxed);
-        let now = prev + bytes;
+        let now = prev.saturating_add(bytes);
         if now > self.budget {
             // roll back so later (smaller) stages can still run
             self.current.fetch_sub(bytes, Ordering::Relaxed);

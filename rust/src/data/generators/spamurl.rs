@@ -54,7 +54,12 @@ impl SpamUrlGen {
         (r as usize).min(head - 1) as u32
     }
 
-    fn draw_row(&self, rng: &mut Rng, outlier: bool, campaign_starts: &[u32]) -> (Vec<u32>, Vec<f32>) {
+    fn draw_row(
+        &self,
+        rng: &mut Rng,
+        outlier: bool,
+        campaign_starts: &[u32],
+    ) -> (Vec<u32>, Vec<f32>) {
         let head = self.d / 10; // common head of the vocabulary
         // token count: geometric-ish around the mean; malicious URLs are
         // slightly longer on average (more querystring junk)

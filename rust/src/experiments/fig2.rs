@@ -7,19 +7,23 @@
 //! 0.72–0.80, 1–2 min); Sparx reaches higher accuracy (0.80–0.87) at
 //! 10–20× the time and 2–3× the memory. DBSCOUT cannot run at this d.
 
-use crate::baselines::{Spif, SpifParams};
+use crate::api::{self, SparxBuilder};
+use crate::baselines::{SpifDetector, SpifParams};
 use crate::config::presets;
-use crate::metrics::{RankMetrics, ResourceReport};
-use crate::sparx::{SparxModel, SparxParams};
+use crate::metrics::RankMetrics;
+use crate::sparx::SparxParams;
 
-use super::{align_scores, scale, ExpResult, ExpRow};
+use super::{run_detector, scale, ExpResult, ExpRow};
 
 pub const M_GRID: [usize; 2] = [50, 100];
 pub const L_GRID: [usize; 2] = [10, 20];
 pub const RATE_GRID: [f64; 3] = [0.01, 0.1, 1.0];
 
-pub fn run(workload_scale: f64, generous: bool) -> ExpResult {
-    let gen = scale::gisette(workload_scale);
+pub fn run(workload_scale: f64, generous: bool, seed: Option<u64>) -> api::Result<ExpResult> {
+    let mut gen = scale::gisette(workload_scale);
+    if let Some(s) = seed {
+        gen.seed = s;
+    }
     let preset = if generous { presets::config_gen } else { presets::config_mod };
     let mut rows = Vec::new();
     let mut sparx_best: f64 = 0.0;
@@ -32,55 +36,53 @@ pub fn run(workload_scale: f64, generous: bool) -> ExpResult {
                 // Sparx
                 {
                     let mut ctx = preset().build();
-                    let ld = gen.generate(&ctx).expect("generate");
+                    let ld = gen.generate(&ctx)?;
                     ctx.reset();
-                    let p = SparxParams {
+                    let mut p = SparxParams {
                         k: 50,
                         num_chains: m,
                         depth: l,
                         sample_rate: rate,
                         ..Default::default()
                     };
-                    match SparxModel::fit(&ctx, &ld.dataset, &p)
-                        .and_then(|mo| mo.score_dataset(&ctx, &ld.dataset))
-                    {
-                        Ok(scores) => {
-                            let res = ResourceReport::from_ctx(&ctx);
-                            let met = RankMetrics::compute(
-                                &align_scores(&scores, ld.labels.len()),
-                                &ld.labels,
-                            );
+                    if let Some(s) = seed {
+                        p.seed = s;
+                    }
+                    let det = SparxBuilder::new().params(p).build()?;
+                    match run_detector(&det, &ctx, &ld) {
+                        Ok((aligned, res)) => {
+                            let met = RankMetrics::compute(&aligned, &ld.labels);
                             sparx_best = sparx_best.max(met.auroc);
                             sparx_worst = sparx_worst.min(met.auroc);
                             rows.push(ExpRow::ok("Sparx", cfg.clone(), Some(met), res));
                         }
-                        Err(e) => rows.push(ExpRow::failed("Sparx", cfg.clone(), &e.to_string())),
+                        Err(e) => {
+                            rows.push(ExpRow::failed("Sparx", cfg.clone(), &e.status_label()))
+                        }
                     }
                 }
                 // SPIF
                 {
                     let mut ctx = preset().build();
-                    let ld = gen.generate(&ctx).expect("generate");
+                    let ld = gen.generate(&ctx)?;
                     ctx.reset();
-                    let p = SpifParams {
+                    let mut p = SpifParams {
                         num_trees: m,
                         max_depth: l,
                         sample_rate: rate,
                         ..Default::default()
                     };
-                    match Spif::fit(&ctx, &ld.dataset, &p)
-                        .and_then(|mo| mo.score_dataset(&ctx, &ld.dataset))
-                    {
-                        Ok(scores) => {
-                            let res = ResourceReport::from_ctx(&ctx);
-                            let met = RankMetrics::compute(
-                                &align_scores(&scores, ld.labels.len()),
-                                &ld.labels,
-                            );
+                    if let Some(s) = seed {
+                        p.seed = s;
+                    }
+                    let det = SpifDetector::new(p)?;
+                    match run_detector(&det, &ctx, &ld) {
+                        Ok((aligned, res)) => {
+                            let met = RankMetrics::compute(&aligned, &ld.labels);
                             spif_best = spif_best.max(met.auroc);
                             rows.push(ExpRow::ok("SPIF", cfg, Some(met), res));
                         }
-                        Err(e) => rows.push(ExpRow::failed("SPIF", cfg, &e.to_string())),
+                        Err(e) => rows.push(ExpRow::failed("SPIF", cfg, &e.status_label())),
                     }
                 }
             }
@@ -88,28 +90,36 @@ pub fn run(workload_scale: f64, generous: bool) -> ExpResult {
     }
     let id = if generous { "fig2" } else { "fig7" };
     let cfg_name = if generous { "config-gen" } else { "config-mod" };
-    ExpResult {
+    Ok(ExpResult {
         id: id.into(),
         title: format!("Gisette accuracy-vs-resources landscape ({cfg_name})"),
         rows,
         checks: vec![
             (
-                format!("Sparx peak beats SPIF peak (sparx {sparx_best:.3} vs spif {spif_best:.3})"),
+                format!(
+                    "Sparx peak beats SPIF peak (sparx {sparx_best:.3} vs spif {spif_best:.3})"
+                ),
                 sparx_best > spif_best,
             ),
-            (
-                "DBSCOUT absent by design (cannot run at this d — Table 2)".into(),
-                true,
-            ),
+            ("DBSCOUT absent by design (cannot run at this d — Table 2)".into(), true),
         ],
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
     fn fig2_tiny_scale_produces_grid() {
-        let r = super::run(0.05, true);
+        let r = super::run(0.05, true, None).unwrap();
         assert_eq!(r.rows.len(), 2 * 2 * 3 * 2);
+    }
+
+    #[test]
+    fn fig2_seed_override_is_deterministic() {
+        let a = super::run(0.05, true, Some(77)).unwrap();
+        let b = super::run(0.05, true, Some(77)).unwrap();
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.auroc, y.auroc, "{}/{} diverges under a fixed seed", x.method, x.config);
+        }
     }
 }

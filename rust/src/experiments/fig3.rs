@@ -6,16 +6,19 @@
 //! DBSCOUT is fastest and can reach the best F1 but oscillates wildly
 //! with its HPs; Sparx is stable, slower, and uses the least memory.
 
-use crate::baselines::dbscout::{Dbscout, DbscoutParams};
-use crate::baselines::{Spif, SpifParams};
+use crate::api::{self, SparxBuilder};
+use crate::baselines::{DbscoutDetector, DbscoutParams, SpifDetector, SpifParams};
 use crate::config::presets;
-use crate::metrics::{f1_binary, RankMetrics, ResourceReport};
-use crate::sparx::{SparxModel, SparxParams};
+use crate::metrics::{f1_binary, RankMetrics};
+use crate::sparx::SparxParams;
 
-use super::{align_scores, scale, ExpResult, ExpRow};
+use super::{binary_preds, run_detector, scale, ExpResult, ExpRow};
 
-pub fn run(workload_scale: f64) -> ExpResult {
-    let gen = scale::osm(workload_scale);
+pub fn run(workload_scale: f64, seed: Option<u64>) -> api::Result<ExpResult> {
+    let mut gen = scale::osm(workload_scale);
+    if let Some(s) = seed {
+        gen.seed = s;
+    }
     let mut rows = Vec::new();
     let mut sparx_f1 = Vec::new();
     let mut dbscout_f1 = Vec::new();
@@ -24,46 +27,49 @@ pub fn run(workload_scale: f64) -> ExpResult {
     // --- Sparx: raw 2-d (no projection, paper §4.1.5), paper's OSM grid
     for &(m, l) in &[(10usize, 5usize), (10, 10), (20, 10), (10, 20)] {
         let mut ctx = presets::config_gen().build();
-        let ld = gen.generate(&ctx).expect("generate");
+        let ld = gen.generate(&ctx)?;
         ctx.reset();
-        let p = SparxParams {
+        let mut p = SparxParams {
             k: 0,
             num_chains: m,
             depth: l,
             sample_rate: 0.01,
             ..Default::default()
         };
+        if let Some(s) = seed {
+            p.seed = s;
+        }
+        let det = SparxBuilder::new().params(p).build()?;
         let cfg = format!("M={m} L={l} rate=0.01");
-        match SparxModel::fit(&ctx, &ld.dataset, &p)
-            .and_then(|mo| mo.score_dataset(&ctx, &ld.dataset))
-        {
-            Ok(scores) => {
-                let res = ResourceReport::from_ctx(&ctx);
-                let met =
-                    RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+        match run_detector(&det, &ctx, &ld) {
+            Ok((aligned, res)) => {
+                let met = RankMetrics::compute(&aligned, &ld.labels);
                 sparx_f1.push(met.f1);
                 rows.push(ExpRow::ok("Sparx", cfg, Some(met), res));
             }
-            Err(e) => rows.push(ExpRow::failed("Sparx", cfg, &e.to_string())),
+            Err(e) => rows.push(ExpRow::failed("Sparx", cfg, &e.status_label())),
         }
     }
 
     // --- SPIF: tiny fit fractions (it cannot handle more — Table 4)
     for &(t, l, rate) in &[(50usize, 10usize, 1e-4), (50, 20, 5e-4), (100, 10, 1e-4)] {
         let mut ctx = presets::config_gen().build();
-        let ld = gen.generate(&ctx).expect("generate");
+        let ld = gen.generate(&ctx)?;
         ctx.reset();
-        let p = SpifParams { num_trees: t, max_depth: l, sample_rate: rate, ..Default::default() };
+        let mut p =
+            SpifParams { num_trees: t, max_depth: l, sample_rate: rate, ..Default::default() };
+        if let Some(s) = seed {
+            p.seed = s;
+        }
+        let det = SpifDetector::new(p)?;
         let cfg = format!("#comp={t} depth={l} sampl={rate}");
-        match Spif::fit(&ctx, &ld.dataset, &p).and_then(|mo| mo.score_dataset(&ctx, &ld.dataset)) {
-            Ok(scores) => {
-                let res = ResourceReport::from_ctx(&ctx);
-                let met =
-                    RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+        match run_detector(&det, &ctx, &ld) {
+            Ok((aligned, res)) => {
+                let met = RankMetrics::compute(&aligned, &ld.labels);
                 spif_f1.push(met.f1);
                 rows.push(ExpRow::ok("SPIF", cfg, Some(met), res));
             }
-            Err(e) => rows.push(ExpRow::failed("SPIF", cfg, &e.to_string())),
+            Err(e) => rows.push(ExpRow::failed("SPIF", cfg, &e.status_label())),
         }
     }
 
@@ -71,18 +77,14 @@ pub fn run(workload_scale: f64) -> ExpResult {
     for &min_pts in &[16usize, 32] {
         for &eps in &[0.02f64, 0.05, 0.1, 0.2] {
             let mut ctx = presets::config_gen().build();
-            let ld = gen.generate(&ctx).expect("generate");
+            let ld = gen.generate(&ctx)?;
             ctx.reset();
-            let params = DbscoutParams { eps, min_pts, ..Default::default() };
+            let det =
+                DbscoutDetector::new(DbscoutParams { eps, min_pts, ..Default::default() }, false)?;
             let cfg = format!("minPts={min_pts} eps={eps}");
-            match Dbscout::run(&ctx, &ld.dataset, &params) {
-                Ok(v) => {
-                    let res = ResourceReport::from_ctx(&ctx);
-                    let mut pred = vec![false; ld.labels.len()];
-                    for (id, o) in v.pred {
-                        pred[id as usize] = o;
-                    }
-                    let f1 = f1_binary(&pred, &ld.labels);
+            match run_detector(&det, &ctx, &ld) {
+                Ok((aligned, res)) => {
+                    let f1 = f1_binary(&binary_preds(&aligned), &ld.labels);
                     dbscout_f1.push(f1);
                     rows.push(ExpRow {
                         method: "DBSCOUT".into(),
@@ -94,7 +96,7 @@ pub fn run(workload_scale: f64) -> ExpResult {
                         resources: Some(res),
                     });
                 }
-                Err(e) => rows.push(ExpRow::failed("DBSCOUT", cfg, &e.to_string())),
+                Err(e) => rows.push(ExpRow::failed("DBSCOUT", cfg, &e.status_label())),
             }
         }
     }
@@ -109,23 +111,26 @@ pub fn run(workload_scale: f64) -> ExpResult {
     let spif_poor = spif_f1.iter().all(|&f| f < 0.5);
     let dbscout_competitive = dbscout_f1.iter().cloned().fold(0.0, f64::max)
         >= sparx_f1.iter().cloned().fold(0.0, f64::max) * 0.7;
-    ExpResult {
+    Ok(ExpResult {
         id: "fig3".into(),
         title: "OSM-like landscape: F1 vs resources, all methods (config-gen)".into(),
         rows,
         checks: vec![
-            ("Sparx F1 more stable across HPs than DBSCOUT (paper: oscillates)".into(), sparx_stable),
+            (
+                "Sparx F1 more stable across HPs than DBSCOUT (paper: oscillates)".into(),
+                sparx_stable,
+            ),
             ("SPIF F1 poor (tiny feasible fit fraction)".into(), spif_poor),
             ("DBSCOUT competitive at this low d".into(), dbscout_competitive),
         ],
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
     fn fig3_smoke() {
-        let r = super::run(0.05);
+        let r = super::run(0.05, None).unwrap();
         assert!(r.rows.len() >= 10);
         assert!(r.rows.iter().any(|x| x.method == "DBSCOUT"));
     }

@@ -5,23 +5,35 @@
 //!
 //! Model HPs per the paper's footnote 12: M=10 chains, depth 5, rate 1.
 
-use crate::baselines::{XStream, XStreamParams};
+use crate::api::{self, Detector, FittedModel as _, SparxBuilder};
+use crate::baselines::{XStream, XStreamDetector, XStreamParams};
 use crate::cluster::ClusterConfig;
 use crate::metrics::ResourceReport;
-use crate::sparx::{ExecMode, SparxModel, SparxParams};
+use crate::sparx::{ExecMode, SparxParams};
 
 use super::{scale, ExpResult, ExpRow};
 
 pub const PARTITIONS: [usize; 6] = [8, 16, 32, 64, 128, 256];
 
-pub fn run(workload_scale: f64) -> ExpResult {
-    let gen = scale::gisette(workload_scale);
-    let sp = SparxParams { k: 50, num_chains: 10, depth: 5, sample_rate: 1.0, ..Default::default() };
+pub fn run(workload_scale: f64, seed: Option<u64>) -> api::Result<ExpResult> {
+    let mut gen = scale::gisette(workload_scale);
+    if let Some(s) = seed {
+        gen.seed = s;
+    }
+    let mut sp =
+        SparxParams { k: 50, num_chains: 10, depth: 5, sample_rate: 1.0, ..Default::default() };
+    if let Some(s) = seed {
+        sp.seed = s;
+    }
 
-    // single-machine xStream baseline (same HPs, same seeds)
+    // single-machine xStream baseline (same HPs, same seeds). The rows
+    // are collected *before* the clock starts so the speed-up denominator
+    // measures the sequential algorithm, not the driver collect — the
+    // adapter path (XStreamDetector, equal bit for bit, tests/api.rs)
+    // would pay the collect twice inside the window.
     let base_ctx = ClusterConfig { num_partitions: 1, ..Default::default() }.build();
-    let ld = gen.generate(&base_ctx).expect("generate");
-    let local_rows = ld.dataset.rows.collect(&base_ctx).expect("collect");
+    let ld = gen.generate(&base_ctx)?;
+    let local_rows = ld.dataset.rows.collect(&base_ctx)?;
     let xp = XStreamParams {
         k: sp.k,
         num_chains: sp.num_chains,
@@ -32,8 +44,9 @@ pub fn run(workload_scale: f64) -> ExpResult {
         score_mode: sp.score_mode,
         seed: sp.seed,
     };
+    let xdet = XStreamDetector::new(xp)?; // validates the params up front
     let t0 = std::time::Instant::now();
-    let xs = XStream::fit(&local_rows, &ld.dataset.schema.names, &xp);
+    let xs = XStream::fit(&local_rows, &ld.dataset.schema.names, xdet.params());
     let _ = xs.score(&local_rows);
     let xstream_secs = t0.elapsed().as_secs_f64();
 
@@ -69,15 +82,17 @@ pub fn run(workload_scale: f64) -> ExpResult {
             ..Default::default()
         }
         .build();
-        let ld = gen.generate(&ctx).expect("generate");
+        let ld = gen.generate(&ctx)?;
         for mode in ExecMode::ALL {
             let tag = mode.tag();
             // same dataset for both plans; reset isolates each run's
             // clocks, ledger and peaks
             ctx.reset();
-            let run_p = SparxParams { exec_mode: mode, ..sp.clone() };
-            let model = SparxModel::fit(&ctx, &ld.dataset, &run_p).expect("fit");
-            let _ = model.score_dataset(&ctx, &ld.dataset).expect("score");
+            let det = SparxBuilder::new()
+                .params(SparxParams { exec_mode: mode, ..sp.clone() })
+                .build()?;
+            let model = det.fit(&ctx, &ld.dataset)?;
+            let _ = model.score(&ctx, &ld.dataset)?;
             let res = ResourceReport::from_ctx(&ctx);
             if mode == ExecMode::Fused {
                 times.push(res.job_secs);
@@ -99,7 +114,7 @@ pub fn run(workload_scale: f64) -> ExpResult {
     let best_speedup = xstream_secs / best;
     let first = times[0];
     let decreasing_then_flat = times.iter().skip(1).take(3).any(|&t| t < first);
-    ExpResult {
+    Ok(ExpResult {
         id: "fig5".into(),
         title: "Runtime vs #partitions + speed-up over single-machine xStream".into(),
         rows,
@@ -108,16 +123,19 @@ pub fn run(workload_scale: f64) -> ExpResult {
                 format!("parallel speed-up over xStream (best {best_speedup:.1}x; paper 4–20x)"),
                 best_speedup > 1.5,
             ),
-            ("runtime improves beyond 8 partitions before flattening".into(), decreasing_then_flat),
+            (
+                "runtime improves beyond 8 partitions before flattening".into(),
+                decreasing_then_flat,
+            ),
         ],
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
     fn fig5_smoke() {
-        let r = super::run(0.03);
+        let r = super::run(0.03, None).unwrap();
         // xStream baseline + one fused and one per-chain row per
         // partition count
         assert_eq!(r.rows.len(), 1 + 2 * super::PARTITIONS.len());

@@ -3,28 +3,32 @@
 //! Doubling the OSM-like input size must double job time (within noise) —
 //! the empirical confirmation of the §3.4 O(n) analysis.
 
+use crate::api::{self, Detector, FittedModel as _, SparxBuilder};
 use crate::config::presets;
 use crate::metrics::ResourceReport;
-use crate::sparx::{ExecMode, SparxModel, SparxParams};
+use crate::sparx::{ExecMode, SparxParams};
 
 use super::{scale, ExpResult, ExpRow};
 
 pub const N_MULTIPLIERS: [f64; 4] = [0.25, 0.5, 1.0, 2.0];
 
-pub fn run(workload_scale: f64) -> ExpResult {
+pub fn run(workload_scale: f64, seed: Option<u64>) -> api::Result<ExpResult> {
     let mut rows = Vec::new();
     let mut ns = Vec::new();
     let mut times = Vec::new();
     for &mult in &N_MULTIPLIERS {
-        let gen = scale::osm(workload_scale * mult);
+        let mut gen = scale::osm(workload_scale * mult);
+        if let Some(s) = seed {
+            gen.seed = s;
+        }
         let mut ctx = presets::config_gen().build();
-        let ld = gen.generate(&ctx).expect("generate");
+        let ld = gen.generate(&ctx)?;
         let n = ld.dataset.len();
         for mode in ExecMode::ALL {
             let tag = mode.tag();
             // same dataset for both plans; reset isolates each run
             ctx.reset();
-            let p = SparxParams {
+            let mut p = SparxParams {
                 k: 0,
                 num_chains: 10,
                 depth: 10,
@@ -32,8 +36,12 @@ pub fn run(workload_scale: f64) -> ExpResult {
                 exec_mode: mode,
                 ..Default::default()
             };
-            let model = SparxModel::fit(&ctx, &ld.dataset, &p).expect("fit");
-            let _ = model.score_dataset(&ctx, &ld.dataset).expect("score");
+            if let Some(s) = seed {
+                p.seed = s;
+            }
+            let det = SparxBuilder::new().params(p).build()?;
+            let model = det.fit(&ctx, &ld.dataset)?;
+            let _ = model.score(&ctx, &ld.dataset)?;
             let res = ResourceReport::from_ctx(&ctx);
             // the linearity check tracks the fused (default) plan; the
             // per-chain rows ride along for the pass-structure A/B
@@ -52,12 +60,11 @@ pub fn run(workload_scale: f64) -> ExpResult {
             });
         }
     }
-    // linearity: fit t = a·n + b, check R² and that the largest/smallest
-    // time ratio tracks the n ratio
+    // linearity: the largest/smallest time ratio must track the n ratio
     let ratio_n = ns.last().unwrap() / ns[0];
     let ratio_t = times.last().unwrap() / times[0];
     let near_linear = ratio_t > ratio_n * 0.4 && ratio_t < ratio_n * 2.5;
-    ExpResult {
+    Ok(ExpResult {
         id: "fig6".into(),
         title: "Sparx runtime vs input size n (OSM-like, config-gen)".into(),
         rows,
@@ -65,14 +72,14 @@ pub fn run(workload_scale: f64) -> ExpResult {
             format!("runtime scales ~linearly (n x{ratio_n:.1} → t x{ratio_t:.1})"),
             near_linear,
         )],
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
     fn fig6_smoke() {
-        let r = super::run(0.05);
+        let r = super::run(0.05, None).unwrap();
         // one fused and one per-chain row per input size
         assert_eq!(r.rows.len(), 2 * super::N_MULTIPLIERS.len());
         assert!(r.rows.iter().all(|x| x.status == "ok"));

@@ -27,6 +27,9 @@ pub mod table2;
 pub mod table3;
 pub mod table4;
 
+use crate::api::{self, Detector, FittedModel as _, SparxError};
+use crate::cluster::ClusterContext;
+use crate::data::LabeledDataset;
 use crate::metrics::{RankMetrics, ResourceReport};
 
 /// One row of an experiment's result table.
@@ -95,7 +98,10 @@ impl ExpResult {
     /// Render as a markdown table (EXPERIMENTS.md format).
     pub fn to_markdown(&self) -> String {
         let mut s = format!("### {} — {}\n\n", self.id, self.title);
-        s.push_str("| method | config | AUROC | AUPRC | F1 | time(s) | net(s) | peak-exec(MB) | total-mem(MB) | driver(MB) | shuffled(MB) | status |\n");
+        s.push_str(
+            "| method | config | AUROC | AUPRC | F1 | time(s) | net(s) | peak-exec(MB) \
+             | total-mem(MB) | driver(MB) | shuffled(MB) | status |\n",
+        );
         s.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|\n");
         for r in &self.rows {
             let (t, net, pw, tot, dm, sh) = r.resources.map_or(
@@ -146,26 +152,56 @@ pub fn align_scores(scores: &[(u64, f64)], n: usize) -> Vec<f64> {
     out
 }
 
-/// Run an experiment by id ("all" runs everything).
-pub fn run(id: &str, scale: f64) -> Vec<ExpResult> {
-    match id {
-        "table2" => vec![table2::run(scale)],
-        "table3" => vec![table3::run(scale)],
-        "table4" => vec![table4::run(scale)],
-        "fig2" => vec![fig2::run(scale, true), fig2::run(scale, false)],
-        "fig3" => vec![fig3::run(scale)],
-        "fig4" => vec![fig4::run(scale)],
-        "fig5" => vec![fig5::run(scale)],
-        "fig6" => vec![fig6::run(scale)],
+/// The one fit/score pipeline every harness drives (replacing the
+/// hand-wired per-method plumbing each experiment used to carry): fit the
+/// detector through the unified [`Detector`] contract, score the same
+/// dataset, and return label-aligned scores plus the run's resource
+/// snapshot.
+pub fn run_detector(
+    det: &dyn Detector,
+    ctx: &ClusterContext,
+    ld: &LabeledDataset,
+) -> api::Result<(Vec<f64>, ResourceReport)> {
+    let model = det.fit(ctx, &ld.dataset)?;
+    let scores = model.score(ctx, &ld.dataset)?;
+    Ok((align_scores(&scores, ld.labels.len()), ResourceReport::from_ctx(ctx)))
+}
+
+/// Binary predictions from aligned scores (DBSCOUT emits 1.0 / 0.0).
+pub fn binary_preds(aligned: &[f64]) -> Vec<bool> {
+    aligned.iter().map(|&s| s > 0.5).collect()
+}
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENT_IDS: [&str; 8] =
+    ["table2", "table3", "table4", "fig2", "fig3", "fig4", "fig5", "fig6"];
+
+/// Run an experiment by id ("all" runs everything). `seed` overrides the
+/// dataset generators' and detectors' base seeds for reproducible runs.
+pub fn run(id: &str, scale: f64, seed: Option<u64>) -> api::Result<Vec<ExpResult>> {
+    Ok(match id {
+        "table2" => vec![table2::run(scale, seed)?],
+        "table3" => vec![table3::run(scale, seed)?],
+        "table4" => vec![table4::run(scale, seed)?],
+        "fig2" => vec![fig2::run(scale, true, seed)?, fig2::run(scale, false, seed)?],
+        "fig3" => vec![fig3::run(scale, seed)?],
+        "fig4" => vec![fig4::run(scale, seed)?],
+        "fig5" => vec![fig5::run(scale, seed)?],
+        "fig6" => vec![fig6::run(scale, seed)?],
         "all" => {
             let mut all = Vec::new();
-            for e in ["table2", "table3", "table4", "fig2", "fig3", "fig4", "fig5", "fig6"] {
-                all.extend(run(e, scale));
+            for e in EXPERIMENT_IDS {
+                all.extend(run(e, scale, seed)?);
             }
             all
         }
-        other => panic!("unknown experiment {other:?} (see DESIGN.md for ids)"),
-    }
+        other => {
+            let ids = EXPERIMENT_IDS.join("|");
+            return Err(SparxError::InvalidParams(format!(
+                "unknown experiment {other:?} (expected {ids}|all)"
+            )));
+        }
+    })
 }
 
 #[cfg(test)]
@@ -209,5 +245,16 @@ mod tests {
         let s = align_scores(&[(2, 0.5), (0, 1.5)], 3);
         assert_eq!(s[0], 1.5);
         assert_eq!(s[2], 0.5);
+    }
+
+    #[test]
+    fn unknown_experiment_is_a_typed_error() {
+        let e = run("fig99", 0.05, None).unwrap_err();
+        assert!(matches!(e, SparxError::InvalidParams(_)), "got {e:?}");
+    }
+
+    #[test]
+    fn binary_preds_threshold() {
+        assert_eq!(binary_preds(&[0.0, 1.0, 0.4, 0.6]), vec![false, true, false, true]);
     }
 }

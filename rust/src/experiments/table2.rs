@@ -5,33 +5,37 @@
 //! from 1.6GB to 350GB; at d = 11 it times out (8h). Expected shape here:
 //! superlinear runtime growth in d and a TIMEOUT by d = 11.
 
-use crate::baselines::dbscout::{Dbscout, DbscoutParams};
+use crate::api::{self, SparxError};
+use crate::baselines::dbscout::{Dbscout, DbscoutDetector, DbscoutParams};
 use crate::cluster::ClusterError;
 use crate::config::presets;
-use crate::metrics::ResourceReport;
 use crate::util::Rng;
 
-use super::{scale, ExpResult, ExpRow};
+use super::{run_detector, scale, ExpResult, ExpRow};
 
 pub const DIMS: [usize; 6] = [2, 4, 6, 8, 10, 11];
 
-pub fn run(workload_scale: f64) -> ExpResult {
+pub fn run(workload_scale: f64, seed: Option<u64>) -> api::Result<ExpResult> {
     let mut rows = Vec::new();
     let mut times: Vec<Option<f64>> = Vec::new();
-    let gen = scale::gisette(workload_scale);
+    let mut gen = scale::gisette(workload_scale);
+    if let Some(s) = seed {
+        gen.seed = s;
+    }
     for &d in &DIMS {
         let mut ctx = presets::config_gen().build();
-        let ld = gen.generate(&ctx).expect("generate");
+        let ld = gen.generate(&ctx)?;
         // d randomly sampled features (paper protocol)
         let cols = Rng::new(0xD1A5 + d as u64).sample_indices(gen.d, d);
-        let sub = ld.dataset.select_columns(&ctx, &cols).expect("select");
+        let sub = ld.dataset.select_columns(&ctx, &cols)?;
+        let sub_ld = crate::data::LabeledDataset { dataset: sub, labels: ld.labels.clone() };
         let min_pts = (2 * d).max(4);
-        let eps = Dbscout::choose_eps(&ctx, &sub, min_pts, 300).expect("eps");
+        let eps = Dbscout::choose_eps(&ctx, &sub_ld.dataset, min_pts, 300)?;
         ctx.reset(); // time the detection, not the data prep
-        let params = DbscoutParams { eps, min_pts, ..Default::default() };
-        match Dbscout::run(&ctx, &sub, &params) {
-            Ok(_verdict) => {
-                let res = ResourceReport::from_ctx(&ctx);
+        let det =
+            DbscoutDetector::new(DbscoutParams { eps, min_pts, ..Default::default() }, false)?;
+        match run_detector(&det, &ctx, &sub_ld) {
+            Ok((_aligned, res)) => {
                 times.push(Some(res.job_secs));
                 rows.push(ExpRow::ok(
                     "DBSCOUT",
@@ -40,24 +44,26 @@ pub fn run(workload_scale: f64) -> ExpResult {
                     res,
                 ));
             }
-            Err(ClusterError::DeadlineExceeded { .. }) => {
+            Err(
+                e @ SparxError::Cluster(
+                    ClusterError::DeadlineExceeded { .. }
+                    | ClusterError::MemExceeded { .. }
+                    | ClusterError::DriverMemExceeded { .. },
+                ),
+            ) => {
                 times.push(None);
-                rows.push(ExpRow::failed("DBSCOUT", format!("d={d}"), "TIMEOUT"));
+                rows.push(ExpRow::failed("DBSCOUT", format!("d={d}"), &e.status_label()));
             }
-            Err(ClusterError::MemExceeded { .. } | ClusterError::DriverMemExceeded { .. }) => {
-                times.push(None);
-                rows.push(ExpRow::failed("DBSCOUT", format!("d={d}"), "MEM ERR"));
-            }
-            Err(e) => panic!("unexpected: {e}"),
+            Err(e) => return Err(e),
         }
     }
     // shape checks
     let ok_times: Vec<f64> = times.iter().flatten().copied().collect();
     let monotone_tail = ok_times.windows(2).skip(1).all(|w| w[1] >= w[0] * 0.8);
-    let explosive = ok_times.len() >= 3
-        && ok_times.last().unwrap() > &(ok_times[1].max(0.005) * 10.0);
+    let explosive =
+        ok_times.len() >= 3 && ok_times.last().unwrap() > &(ok_times[1].max(0.005) * 10.0);
     let fails_at_11 = matches!(rows.last(), Some(r) if r.status != "ok");
-    ExpResult {
+    Ok(ExpResult {
         id: "table2".into(),
         title: "DBSCOUT runtime/memory vs dimensionality (Gisette-like, config-gen)".into(),
         rows,
@@ -66,7 +72,7 @@ pub fn run(workload_scale: f64) -> ExpResult {
             ("runtime explodes ≥10× from low-d to d=10".into(), explosive),
             ("d=11 fails the resource budget (paper: 8h TIMEOUT)".into(), fails_at_11),
         ],
-    }
+    })
 }
 
 #[cfg(test)]
@@ -74,7 +80,7 @@ mod tests {
     /// Smoke-run at tiny scale (the full run is exercised by the bench).
     #[test]
     fn table2_small_scale_has_all_rows() {
-        let r = super::run(0.05);
+        let r = super::run(0.05, None).unwrap();
         assert_eq!(r.rows.len(), super::DIMS.len());
         assert_eq!(r.checks.len(), 3);
         // the final dimension must fail its resource budget (at tiny test

@@ -5,19 +5,23 @@
 //! ensemble size helps Sparx (not SPIF), raising the sampling rate helps
 //! SPIF (not Sparx); Sparx pays ~10–20× more time and ~2–3× more memory.
 
-use crate::baselines::{Spif, SpifParams};
+use crate::api::{self, SparxBuilder};
+use crate::baselines::{SpifDetector, SpifParams};
 use crate::config::presets;
-use crate::metrics::{RankMetrics, ResourceReport};
-use crate::sparx::{SparxModel, SparxParams};
+use crate::metrics::RankMetrics;
+use crate::sparx::SparxParams;
 
-use super::{align_scores, scale, ExpResult, ExpRow};
+use super::{run_detector, scale, ExpResult, ExpRow};
 
 /// (#components, sampling rate, depth) — the paper's five rows.
 pub const CONFIGS: [(usize, f64, usize); 5] =
     [(50, 0.01, 10), (100, 0.01, 10), (100, 0.1, 10), (100, 0.1, 20), (100, 1.0, 20)];
 
-pub fn run(workload_scale: f64) -> ExpResult {
-    let gen = scale::gisette(workload_scale);
+pub fn run(workload_scale: f64, seed: Option<u64>) -> api::Result<ExpResult> {
+    let mut gen = scale::gisette(workload_scale);
+    if let Some(s) = seed {
+        gen.seed = s;
+    }
     let mut rows = Vec::new();
     let mut sparx_auroc = Vec::new();
     let mut spif_auroc = Vec::new();
@@ -28,19 +32,21 @@ pub fn run(workload_scale: f64) -> ExpResult {
         // Sparx
         {
             let mut ctx = presets::config_gen().build();
-            let ld = gen.generate(&ctx).expect("generate");
+            let ld = gen.generate(&ctx)?;
             ctx.reset();
-            let p = SparxParams {
+            let mut p = SparxParams {
                 k: 50,
                 num_chains: m,
                 depth,
                 sample_rate: rate,
                 ..Default::default()
             };
-            let model = SparxModel::fit(&ctx, &ld.dataset, &p).expect("fit");
-            let scores = model.score_dataset(&ctx, &ld.dataset).expect("score");
-            let res = ResourceReport::from_ctx(&ctx);
-            let met = RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+            if let Some(s) = seed {
+                p.seed = s;
+            }
+            let det = SparxBuilder::new().params(p).build()?;
+            let (aligned, res) = run_detector(&det, &ctx, &ld)?;
+            let met = RankMetrics::compute(&aligned, &ld.labels);
             sparx_auroc.push(met.auroc);
             sparx_time.push(res.job_secs);
             rows.push(ExpRow::ok("Sparx", cfg.clone(), Some(met), res));
@@ -48,30 +54,29 @@ pub fn run(workload_scale: f64) -> ExpResult {
         // SPIF
         {
             let mut ctx = presets::config_gen().build();
-            let ld = gen.generate(&ctx).expect("generate");
+            let ld = gen.generate(&ctx)?;
             ctx.reset();
-            let p = SpifParams { num_trees: m, max_depth: depth, sample_rate: rate, ..Default::default() };
-            let model = Spif::fit(&ctx, &ld.dataset, &p).expect("fit");
-            let scores = model.score_dataset(&ctx, &ld.dataset).expect("score");
-            let res = ResourceReport::from_ctx(&ctx);
-            let met = RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
+            let mut p = SpifParams {
+                num_trees: m,
+                max_depth: depth,
+                sample_rate: rate,
+                ..Default::default()
+            };
+            if let Some(s) = seed {
+                p.seed = s;
+            }
+            let det = SpifDetector::new(p)?;
+            let (aligned, res) = run_detector(&det, &ctx, &ld)?;
+            let met = RankMetrics::compute(&aligned, &ld.labels);
             spif_auroc.push(met.auroc);
             spif_time.push(res.job_secs);
             rows.push(ExpRow::ok("SPIF", cfg, Some(met), res));
         }
     }
-    let sparx_wins = sparx_auroc
-        .iter()
-        .zip(&spif_auroc)
-        .filter(|(a, b)| a > b)
-        .count();
+    let sparx_wins = sparx_auroc.iter().zip(&spif_auroc).filter(|(a, b)| a > b).count();
     let doubling_helps_sparx = sparx_auroc[1] >= sparx_auroc[0] - 0.01;
-    let sparx_slower = sparx_time
-        .iter()
-        .zip(&spif_time)
-        .filter(|(a, b)| a > b)
-        .count();
-    ExpResult {
+    let sparx_slower = sparx_time.iter().zip(&spif_time).filter(|(a, b)| a > b).count();
+    Ok(ExpResult {
         id: "table3".into(),
         title: "Sparx vs SPIF head-to-head on Gisette-like (config-gen)".into(),
         rows,
@@ -80,20 +85,25 @@ pub fn run(workload_scale: f64) -> ExpResult {
                 format!("Sparx beats SPIF on AUROC in ≥4/5 configs (got {sparx_wins}/5)"),
                 sparx_wins >= 4,
             ),
-            ("doubling #components does not hurt Sparx (paper: improves)".into(), doubling_helps_sparx),
             (
-                format!("Sparx pays more time than SPIF (paper 10–20×; slower in {sparx_slower}/5)"),
+                "doubling #components does not hurt Sparx (paper: improves)".into(),
+                doubling_helps_sparx,
+            ),
+            (
+                format!(
+                    "Sparx pays more time than SPIF (paper 10–20×; slower in {sparx_slower}/5)"
+                ),
                 sparx_slower >= 4,
             ),
         ],
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
     #[test]
     fn table3_tiny_scale_runs_all_configs() {
-        let r = super::run(0.05);
+        let r = super::run(0.05, None).unwrap();
         assert_eq!(r.rows.len(), 10);
         assert!(r.rows.iter().all(|row| row.status == "ok"));
     }

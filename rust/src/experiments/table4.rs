@@ -15,11 +15,12 @@
 //! either way the headline — SPIF cannot fit beyond a small absolute
 //! subsample — is reproduced.
 
-use crate::baselines::{Spif, SpifParams};
+use crate::api::{self, SparxError};
+use crate::baselines::{SpifDetector, SpifParams};
 use crate::cluster::{ClusterConfig, ClusterError};
-use crate::metrics::{RankMetrics, ResourceReport};
+use crate::metrics::RankMetrics;
 
-use super::{align_scores, scale, ExpResult, ExpRow};
+use super::{run_detector, scale, ExpResult, ExpRow};
 
 pub const FRACTIONS: [f64; 6] = [0.02, 0.04, 0.08, 0.16, 0.32, 0.64];
 
@@ -42,43 +43,50 @@ fn scaled_cluster() -> ClusterConfig {
     }
 }
 
-pub fn run(workload_scale: f64) -> ExpResult {
-    let gen = scale::osm(workload_scale);
+pub fn run(workload_scale: f64, seed: Option<u64>) -> api::Result<ExpResult> {
+    let mut gen = scale::osm(workload_scale);
+    if let Some(s) = seed {
+        gen.seed = s;
+    }
     let mut rows = Vec::new();
     let mut ok_times = Vec::new();
     let mut failures = 0;
     for &frac in &FRACTIONS {
         let mut ctx = scaled_cluster().build();
-        let ld = gen.generate(&ctx).expect("generate");
+        let ld = gen.generate(&ctx)?;
         let n = ld.dataset.len();
         let pts_per_tree = (n as f64 * frac) as usize;
         ctx.reset();
-        let p = SpifParams { num_trees: 50, max_depth: 25, sample_rate: frac, ..Default::default() };
+        let mut p =
+            SpifParams { num_trees: 50, max_depth: 25, sample_rate: frac, ..Default::default() };
+        if let Some(s) = seed {
+            p.seed = s;
+        }
+        let det = SpifDetector::new(p)?;
         let cfg = format!("frac={frac} #pts/tree≈{pts_per_tree}");
-        match Spif::fit(&ctx, &ld.dataset, &p) {
-            Ok(model) => match model.score_dataset(&ctx, &ld.dataset) {
-                Ok(scores) => {
-                    let res = ResourceReport::from_ctx(&ctx);
-                    let met =
-                        RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
-                    ok_times.push(res.job_secs);
-                    rows.push(ExpRow::ok("SPIF", cfg, Some(met), res));
-                }
-                Err(e) => {
-                    failures += 1;
-                    rows.push(ExpRow::failed("SPIF", cfg, status_of(&e)));
-                }
-            },
-            Err(e) => {
-                failures += 1;
-                rows.push(ExpRow::failed("SPIF", cfg, status_of(&e)));
+        match run_detector(&det, &ctx, &ld) {
+            Ok((aligned, res)) => {
+                let met = RankMetrics::compute(&aligned, &ld.labels);
+                ok_times.push(res.job_secs);
+                rows.push(ExpRow::ok("SPIF", cfg, Some(met), res));
             }
+            Err(
+                e @ SparxError::Cluster(
+                    ClusterError::DeadlineExceeded { .. }
+                    | ClusterError::MemExceeded { .. }
+                    | ClusterError::DriverMemExceeded { .. },
+                ),
+            ) => {
+                failures += 1;
+                rows.push(ExpRow::failed("SPIF", cfg, &e.status_label()));
+            }
+            Err(e) => return Err(e),
         }
     }
     let time_grows = ok_times.windows(2).all(|w| w[1] >= w[0] * 0.9);
     let fails_eventually = failures >= 2;
     let some_succeed = !ok_times.is_empty();
-    ExpResult {
+    Ok(ExpResult {
         id: "table4".into(),
         title: "SPIF vs input size n (OSM-like, scaled config-gen)".into(),
         rows,
@@ -90,15 +98,7 @@ pub fn run(workload_scale: f64) -> ExpResult {
                 fails_eventually,
             ),
         ],
-    }
-}
-
-fn status_of(e: &ClusterError) -> &'static str {
-    match e {
-        ClusterError::MemExceeded { .. } | ClusterError::DriverMemExceeded { .. } => "MEM ERR",
-        ClusterError::DeadlineExceeded { .. } => "TIMEOUT",
-        ClusterError::Invalid(_) => "INVALID",
-    }
+    })
 }
 
 #[cfg(test)]
@@ -108,7 +108,7 @@ mod tests {
         // The budget cliffs are calibrated for scale=1.0 (see EXPERIMENTS.md
         // for the full-scale run where the failure rows appear); at smoke
         // scale we assert the sweep structure and the cost growth only.
-        let r = super::run(0.1);
+        let r = super::run(0.1, None).unwrap();
         assert_eq!(r.rows.len(), super::FRACTIONS.len());
         let times: Vec<f64> = r
             .rows

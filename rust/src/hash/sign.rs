@@ -38,7 +38,9 @@ impl SignHasher {
 
     #[inline]
     pub fn hash_bytes(&self, b: &[u8]) -> f32 {
-        let lo = super::murmur::murmur3_bytes(b, self.seed.wrapping_mul(2654435761).wrapping_add(1)) as u64;
+        let lo =
+            super::murmur::murmur3_bytes(b, self.seed.wrapping_mul(2654435761).wrapping_add(1))
+                as u64;
         let hi = super::murmur::murmur3_bytes(b, self.seed ^ 0xA5A5_5A5A) as u64;
         let u = (((hi << 32) | lo) >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
         if u < self.density / 2.0 {

@@ -20,17 +20,50 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use sparx::config::presets;
-//! use sparx::data::generators::gisette::GisetteGen;
-//! use sparx::sparx::{SparxParams, SparxModel};
+//! Every detector — Sparx and the baselines alike — is driven through the
+//! unified [`api`] contract: build a [`api::Detector`] (typed builder or
+//! string registry), `fit` it, and `score` with the returned
+//! [`api::FittedModel`]. All entry points return [`api::Result`] with the
+//! crate-wide [`api::SparxError`] taxonomy.
 //!
-//! let cluster = presets::config_mod().build();
-//! let data = GisetteGen::default().generate(&cluster).unwrap();
-//! let model = SparxModel::fit(&cluster, &data.dataset, &SparxParams::default()).unwrap();
-//! let scores = model.score_dataset(&cluster, &data.dataset).unwrap();
+//! ```no_run
+//! use sparx::api::{Detector, FittedModel, SparxBuilder};
+//! use sparx::config::presets;
+//! use sparx::data::generators::GisetteGen;
+//!
+//! fn main() -> sparx::api::Result<()> {
+//!     let cluster = presets::config_mod().build();
+//!     let data = GisetteGen::default().generate(&cluster)?;
+//!     let detector = SparxBuilder::new().chains(50).depth(10).sample_rate(0.1).build()?;
+//!     let model = detector.fit(&cluster, &data.dataset)?;
+//!     let scores = model.score(&cluster, &data.dataset)?; // (id, outlierness)
+//!     println!("scored {} points with a {}B model", scores.len(), model.model_bytes());
+//!     Ok(())
+//! }
+//! ```
+//!
+//! The same run, name-driven through the registry (what `sparx detect
+//! --method …` does; swap the string for `"xstream"`, `"spif"` or
+//! `"dbscout"` to run a baseline through the identical codepath):
+//!
+//! ```no_run
+//! use sparx::api::{registry, Detector, DetectorSpec, FittedModel};
+//! use sparx::config::presets;
+//! use sparx::data::generators::GisetteGen;
+//!
+//! fn main() -> sparx::api::Result<()> {
+//!     let cluster = presets::config_mod().build();
+//!     let data = GisetteGen::default().generate(&cluster)?;
+//!     let spec = DetectorSpec { components: Some(50), ..Default::default() };
+//!     let scores = registry::build("sparx", &spec)?
+//!         .fit(&cluster, &data.dataset)?
+//!         .score(&cluster, &data.dataset)?;
+//!     println!("{} points scored", scores.len());
+//!     Ok(())
+//! }
 //! ```
 
+pub mod api;
 pub mod baselines;
 pub mod cluster;
 pub mod config;
@@ -42,6 +75,7 @@ pub mod runtime;
 pub mod sparx;
 pub mod util;
 
+pub use api::{Backend, Detector, DetectorSpec, FittedModel, SparxBuilder, SparxError};
 pub use cluster::{ClusterConfig, ClusterContext, ClusterError};
 pub use sparx::{SparxModel, SparxParams};
 

@@ -1,29 +1,50 @@
 //! `sparx` — CLI launcher for the Sparx reproduction.
 //!
+//! Every command drives the library through the unified
+//! [`sparx::api::Detector`] contract; errors are typed
+//! ([`sparx::api::SparxError`]) and map to exit codes: `2` for usage /
+//! validation problems, `1` for runtime failures (MEM ERR, TIMEOUT,
+//! missing artifacts, I/O). Unrecognized flags and misspelled
+//! subcommands are rejected with a suggestion instead of being silently
+//! ignored.
+//!
 //! Subcommands (hand-rolled parser — the offline build has no clap):
 //!
 //! ```text
-//! sparx detect --dataset gisette|osm|spamurl [--config gen|mod|local]
-//!              [--chains M] [--depth L] [--rate R] [--k K] [--scale S]
-//!              [--backend native|pjrt] [--exec fused|per-chain]
-//!              [--out scores.csv]
+//! sparx detect   --method sparx|xstream|spif|dbscout
+//!                [--dataset gisette|osm|spamurl] [--config gen|mod|local]
+//!                [--components M] [--chains M] [--depth L] [--rate R] [--k K]
+//!                [--eps E] [--min-pts P] [--scale S] [--seed N]
+//!                [--backend native|pjrt] [--exec fused|per-chain]
+//!                [--out scores.csv]
 //! sparx experiment <table2|table3|table4|fig2|fig3|fig4|fig5|fig6|all>
-//!              [--scale S] [--out EXPERIMENTS_RESULTS.md]
-//! sparx stream   [--updates N] [--cache N]       # §3.5 evolving-stream demo
-//! sparx generate --dataset osm --out points.csv  # dump a synthetic dataset
-//! sparx info                                     # artifacts + presets
+//!                [--scale S] [--seed N] [--out EXPERIMENTS_RESULTS.md]
+//! sparx stream   [--updates N] [--cache N] [--seed N]   # §3.5 demo
+//! sparx generate --dataset osm --out points.csv [--scale S] [--seed N]
+//! sparx info                                    # artifacts + presets
 //! ```
 
 use std::collections::HashMap;
+use std::str::FromStr;
 
+use sparx::api::{registry, Backend, Detector as _, DetectorSpec, FittedModel as _, SparxError};
 use sparx::config::presets;
 use sparx::data::generators::{GisetteGen, OsmGen, SpamUrlGen};
 use sparx::data::{LabeledDataset, StreamGen};
-use sparx::experiments;
+use sparx::experiments::{self, align_scores};
 use sparx::metrics::{RankMetrics, ResourceReport};
-use sparx::runtime::{ArtifactManifest, PjrtBinner, PjrtEngine};
-use sparx::sparx::{ExecMode, NativeBinner, SparxModel, SparxParams, StreamScorer};
+use sparx::runtime::{ArtifactManifest, PjrtEngine};
+use sparx::sparx::ExecMode;
+use sparx::util::closest_match;
 use sparx::ClusterContext;
+
+type CliResult = Result<(), SparxError>;
+
+fn usage_err(msg: String) -> SparxError {
+    SparxError::InvalidParams(msg)
+}
+
+// ---------------------------------------------------------------- flags
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
@@ -46,54 +67,133 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     (pos, flags)
 }
 
-fn flag_f64(flags: &HashMap<String, String>, k: &str, d: f64) -> f64 {
-    flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+/// Reject any flag the command does not declare — `--chain 40` must be a
+/// hard error pointing at `--chains`, not a silently ignored typo.
+fn check_flags(cmd: &str, flags: &HashMap<String, String>, allowed: &[&str]) -> CliResult {
+    for key in flags.keys() {
+        if !allowed.contains(&key.as_str()) {
+            let hint = closest_match(key, allowed)
+                .map(|s| format!(" (did you mean --{s}?)"))
+                .unwrap_or_default();
+            let valid: Vec<String> = allowed.iter().map(|f| format!("--{f}")).collect();
+            return Err(usage_err(format!(
+                "unrecognized flag --{key} for `sparx {cmd}`{hint}; valid flags: {}",
+                valid.join(" ")
+            )));
+        }
+    }
+    Ok(())
 }
 
-fn flag_usize(flags: &HashMap<String, String>, k: &str, d: usize) -> usize {
-    flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+/// Parse `--key value` with a default; a present-but-unparsable value is
+/// a hard error (the old CLI silently fell back to the default).
+fn flag_or<T: FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+    dflt: T,
+) -> Result<T, SparxError> {
+    Ok(flag_opt(flags, key)?.unwrap_or(dflt))
 }
 
-fn make_dataset(name: &str, scale: f64, ctx: &ClusterContext) -> LabeledDataset {
+fn flag_opt<T: FromStr>(
+    flags: &HashMap<String, String>,
+    key: &str,
+) -> Result<Option<T>, SparxError> {
+    match flags.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|_| usage_err(format!("--{key}: cannot parse value {v:?}"))),
+    }
+}
+
+// ------------------------------------------------------------- datasets
+
+const DATASETS: [&str; 3] = ["gisette", "osm", "spamurl"];
+
+fn make_dataset(
+    name: &str,
+    scale: f64,
+    seed: Option<u64>,
+    ctx: &ClusterContext,
+) -> Result<LabeledDataset, SparxError> {
     match name {
-        "gisette" => GisetteGen {
-            n: (8000.0 * scale) as usize,
-            d: 512,
-            ..Default::default()
+        "gisette" => {
+            let mut g = GisetteGen { n: (8000.0 * scale) as usize, d: 512, ..Default::default() };
+            if let Some(s) = seed {
+                g.seed = s;
+            }
+            Ok(g.generate(ctx)?)
         }
-        .generate(ctx)
-        .expect("generate"),
-        "osm" => OsmGen {
-            n_inliers: (400_000.0 * scale) as usize,
-            n_outliers: (400.0 * scale).max(20.0) as usize,
-            ..Default::default()
+        "osm" => {
+            let mut g = OsmGen {
+                n_inliers: (400_000.0 * scale) as usize,
+                n_outliers: (400.0 * scale).max(20.0) as usize,
+                ..Default::default()
+            };
+            if let Some(s) = seed {
+                g.seed = s;
+            }
+            Ok(g.generate(ctx)?)
         }
-        .generate(ctx)
-        .expect("generate"),
-        "spamurl" => SpamUrlGen {
-            n: (20_000.0 * scale) as usize,
-            ..Default::default()
+        "spamurl" => {
+            let mut g = SpamUrlGen { n: (20_000.0 * scale) as usize, ..Default::default() };
+            if let Some(s) = seed {
+                g.seed = s;
+            }
+            Ok(g.generate(ctx)?)
         }
-        .generate(ctx)
-        .expect("generate"),
         other => {
-            eprintln!("unknown dataset {other:?} (gisette|osm|spamurl)");
-            std::process::exit(2);
+            let hint = closest_match(other, &DATASETS)
+                .map(|s| format!(" (did you mean {s:?}?)"))
+                .unwrap_or_default();
+            Err(usage_err(format!(
+                "unknown dataset {other:?} (expected {}){hint}",
+                DATASETS.join("|")
+            )))
         }
     }
 }
 
-fn cmd_detect(flags: &HashMap<String, String>) {
+// --------------------------------------------------------------- detect
+
+const DETECT_FLAGS: [&str; 15] = [
+    "method", "dataset", "config", "components", "chains", "depth", "rate", "k", "eps",
+    "min-pts", "scale", "seed", "backend", "exec", "out",
+];
+
+fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
+    check_flags("detect", flags, &DETECT_FLAGS)?;
+    let method = flags.get("method").cloned().unwrap_or_else(|| "sparx".into());
+    // explicitly-passed flags the chosen method would ignore are errors,
+    // not silent no-ops (the method-level cousin of check_flags)
+    let method_flags: &[&str] = match method.as_str() {
+        "sparx" => &["chains", "components", "depth", "rate", "k", "exec", "backend"],
+        "xstream" => &["chains", "components", "depth", "k"],
+        "spif" => &["chains", "components", "depth", "rate"],
+        "dbscout" => &["eps", "min-pts"],
+        // unknown method: skip so the registry's UnknownDetector error
+        // (with its typo suggestion) surfaces instead
+        _ => &DETECT_FLAGS,
+    };
+    let common = ["method", "dataset", "config", "scale", "seed", "out"];
+    for key in flags.keys() {
+        if !common.contains(&key.as_str()) && !method_flags.contains(&key.as_str()) {
+            return Err(usage_err(format!(
+                "--{key} does not apply to --method {method} (applicable: {})",
+                method_flags.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
+            )));
+        }
+    }
     let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "gisette".into());
-    let scale = flag_f64(flags, "scale", 0.5);
+    let scale = flag_or(flags, "scale", 0.5)?;
+    let seed: Option<u64> = flag_opt(flags, "seed")?;
     let cfg_name = flags.get("config").cloned().unwrap_or_else(|| "local".into());
     let mut ctx = presets::by_name(&cfg_name)
-        .unwrap_or_else(|| {
-            eprintln!("unknown config {cfg_name:?}");
-            std::process::exit(2);
-        })
+        .ok_or_else(|| usage_err(format!("unknown config {cfg_name:?} (gen|mod|local)")))?
         .build();
-    let ld = make_dataset(&dataset, scale, &ctx);
+    let ld = make_dataset(&dataset, scale, seed, &ctx)?;
     println!(
         "dataset={dataset} n={} d={} outliers={} ({:.3}%)",
         ld.dataset.len(),
@@ -102,70 +202,90 @@ fn cmd_detect(flags: &HashMap<String, String>) {
         100.0 * ld.outlier_rate()
     );
     ctx.reset();
-    let default_k = if dataset == "osm" {
-        0
-    } else if dataset == "spamurl" {
-        100
-    } else {
-        50
+    // the paper's per-dataset projection defaults: OSM stays raw 2-d,
+    // SpamURL hashes to K=100, Gisette to K=50
+    let default_k = match dataset.as_str() {
+        "osm" => 0,
+        "spamurl" => 100,
+        _ => 50,
     };
     let exec_mode = match flags.get("exec").map(String::as_str) {
         Some("per-chain" | "perchain") => ExecMode::PerChain,
         Some("fused") | None => ExecMode::Fused,
         Some(other) => {
-            eprintln!("unknown exec mode {other:?} (fused|per-chain)");
-            std::process::exit(2);
+            return Err(usage_err(format!("unknown exec mode {other:?} (fused|per-chain)")))
         }
     };
-    let params = SparxParams {
-        k: flag_usize(flags, "k", default_k),
-        num_chains: flag_usize(flags, "chains", 50),
-        depth: flag_usize(flags, "depth", 10),
-        sample_rate: flag_f64(flags, "rate", 0.1),
-        exec_mode,
-        ..Default::default()
+    let backend = match flags.get("backend").map(String::as_str) {
+        Some("pjrt") => Backend::Pjrt,
+        Some("native") | None => Backend::Native,
+        Some(other) => return Err(usage_err(format!("unknown backend {other:?} (native|pjrt)"))),
     };
-    let backend = flags.get("backend").map(String::as_str).unwrap_or("native");
-    let engine;
-    let pjrt_binner;
-    let binner: &dyn sparx::sparx::Binner = if backend == "pjrt" {
-        engine = PjrtEngine::start_default().unwrap_or_else(|e| {
-            eprintln!("PJRT engine: {e}");
-            std::process::exit(1);
-        });
-        let variant = match dataset.as_str() {
-            "osm" => "osm",
-            "spamurl" => "spamurl",
-            _ => "gisette",
-        };
-        pjrt_binner = PjrtBinner { engine: &engine, variant: variant.into() };
-        &pjrt_binner
+    if flags.contains_key("components") && flags.contains_key("chains") {
+        return Err(usage_err("--components and --chains are aliases; pass only one".into()));
+    }
+    let components = match flag_opt(flags, "components")? {
+        Some(m) => Some(m),
+        None => flag_opt(flags, "chains")?,
+    };
+    // sparx keeps the CLI's historical defaults (K per dataset, rate 0.1
+    // vs the library's 1.0); other methods fall back to their own library
+    // defaults unless the flag is passed explicitly
+    let (k, sample_rate) = if method == "sparx" {
+        (Some(flag_or(flags, "k", default_k)?), Some(flag_or(flags, "rate", 0.1)?))
     } else {
-        &NativeBinner
+        (flag_opt(flags, "k")?, flag_opt(flags, "rate")?)
     };
-    let model = SparxModel::fit_with(&ctx, &ld.dataset, &params, binner).expect("fit");
-    let proj =
-        sparx::sparx::project_dataset(&ctx, &ld.dataset, &model.projector).expect("project");
-    let scores = model.score_sketches_with(&ctx, &proj, binner).expect("score");
+    let spec = DetectorSpec {
+        k,
+        components,
+        depth: flag_opt(flags, "depth")?,
+        sample_rate,
+        seed,
+        exec_mode,
+        backend,
+        pjrt_variant: Some(dataset.clone()),
+        eps: flag_opt(flags, "eps")?,
+        min_pts: flag_opt(flags, "min-pts")?,
+    };
+    let det = registry::build(&method, &spec)?;
+    let model = det.fit(&ctx, &ld.dataset)?;
+    let scores = model.score(&ctx, &ld.dataset)?;
     let res = ResourceReport::from_ctx(&ctx);
-    let aligned = experiments::align_scores(&scores, ld.labels.len());
+    let aligned = align_scores(&scores, ld.labels.len());
     let met = RankMetrics::compute(&aligned, &ld.labels);
-    let exec_tag = exec_mode.tag();
     println!(
-        "Sparx[{backend},{exec_tag}] M={} L={} rate={} K={}: AUROC={:.3} AUPRC={:.3} F1={:.3}",
-        params.num_chains, params.depth, params.sample_rate, params.k, met.auroc, met.auprc, met.f1
+        "{}[{},{}]: AUROC={:.3} AUPRC={:.3} F1={:.3} (model {}B)",
+        det.name(),
+        backend.tag(),
+        exec_mode.tag(),
+        met.auroc,
+        met.auprc,
+        met.f1,
+        model.model_bytes()
     );
     println!("{}", res.summary());
     if let Some(out) = flags.get("out") {
-        sparx::data::loader::write_scores_csv(out, &scores, &ld.labels).expect("write");
+        sparx::data::loader::write_scores_csv(out, &scores, &ld.labels)?;
         println!("scores written to {out}");
     }
+    Ok(())
 }
 
-fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) {
+// ----------------------------------------------------------- experiment
+
+fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) -> CliResult {
+    check_flags("experiment", flags, &["scale", "seed", "out"])?;
+    if pos.len() > 1 {
+        return Err(usage_err(format!(
+            "experiment takes one id, got {} positional arguments",
+            pos.len()
+        )));
+    }
     let id = pos.first().map(String::as_str).unwrap_or("all");
-    let scale = flag_f64(flags, "scale", 1.0);
-    let results = experiments::run(id, scale);
+    let scale = flag_or(flags, "scale", 1.0)?;
+    let seed = flag_opt(flags, "seed")?;
+    let results = experiments::run(id, scale, seed)?;
     let mut md = String::new();
     for r in &results {
         let table = r.to_markdown();
@@ -174,21 +294,33 @@ fn cmd_experiment(pos: &[String], flags: &HashMap<String, String>) {
         md.push('\n');
     }
     if let Some(out) = flags.get("out") {
-        std::fs::write(out, md).expect("write results");
+        std::fs::write(out, md)?;
         println!("results written to {out}");
     }
+    Ok(())
 }
 
-fn cmd_stream(flags: &HashMap<String, String>) {
-    let updates = flag_usize(flags, "updates", 10_000);
-    let cache = flag_usize(flags, "cache", 1024);
+// --------------------------------------------------------------- stream
+
+fn cmd_stream(flags: &HashMap<String, String>) -> CliResult {
+    check_flags("stream", flags, &["updates", "cache", "seed"])?;
+    let updates = flag_or(flags, "updates", 10_000usize)?;
+    let cache = flag_or(flags, "cache", 1024usize)?;
+    let seed: Option<u64> = flag_opt(flags, "seed")?;
     let ctx = presets::config_local().build();
-    let ld = make_dataset("gisette", 0.2, &ctx);
-    let params = SparxParams { k: 25, num_chains: 20, depth: 8, ..Default::default() };
-    let model = SparxModel::fit(&ctx, &ld.dataset, &params).expect("fit");
-    let mut scorer = StreamScorer::new(&model, cache).expect("stream scorer");
+    let ld = make_dataset("gisette", 0.2, seed, &ctx)?;
+    let spec = DetectorSpec {
+        k: Some(25),
+        components: Some(20),
+        depth: Some(8),
+        seed,
+        ..Default::default()
+    };
+    let det = registry::build("sparx", &spec)?;
+    let model = det.fit(&ctx, &ld.dataset)?;
+    let mut scorer = model.stream_scorer(cache)?;
     let names = ld.dataset.schema.names.clone();
-    let mut gen = StreamGen::new(5000, names, 42);
+    let mut gen = StreamGen::new(5000, names, seed.unwrap_or(42));
     let t0 = std::time::Instant::now();
     let mut worst: Option<sparx::sparx::StreamScore> = None;
     for _ in 0..updates {
@@ -209,40 +341,53 @@ fn cmd_stream(flags: &HashMap<String, String>) {
     if let Some(w) = worst {
         println!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness);
     }
+    Ok(())
 }
 
-fn cmd_generate(flags: &HashMap<String, String>) {
+// ------------------------------------------------------------- generate
+
+fn cmd_generate(flags: &HashMap<String, String>) -> CliResult {
+    check_flags("generate", flags, &["dataset", "scale", "seed", "out"])?;
     let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "osm".into());
-    let scale = flag_f64(flags, "scale", 0.1);
+    let scale = flag_or(flags, "scale", 0.1)?;
+    let seed = flag_opt(flags, "seed")?;
     let out = flags.get("out").cloned().unwrap_or_else(|| format!("{dataset}.csv"));
     let ctx = presets::config_local().build();
-    let ld = make_dataset(&dataset, scale, &ctx);
-    let rows = ld.dataset.rows.collect(&ctx).expect("collect");
+    let ld = make_dataset(&dataset, scale, seed, &ctx)?;
+    let rows = ld.dataset.rows.collect(&ctx)?;
     use std::io::Write;
-    let mut f = std::io::BufWriter::new(std::fs::File::create(&out).expect("create"));
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&out)?);
     let names = ld.dataset.schema.names.join(",");
-    writeln!(f, "{names},label").unwrap();
+    writeln!(f, "{names},label")?;
     for r in rows {
         match &r.features {
             sparx::data::Features::Dense(v) => {
                 let cells: Vec<String> = v.iter().map(|x| x.to_string()).collect();
-                writeln!(f, "{},{}", cells.join(","), u8::from(ld.labels[r.id as usize]))
-                    .unwrap();
+                writeln!(f, "{},{}", cells.join(","), u8::from(ld.labels[r.id as usize]))?;
             }
             _ => {
-                eprintln!("generate: only dense datasets can be dumped to csv");
-                std::process::exit(2);
+                return Err(SparxError::Unsupported(
+                    "generate: only dense datasets can be dumped to csv".into(),
+                ));
             }
         }
     }
     println!("wrote {} rows to {out}", ld.dataset.len());
+    Ok(())
 }
 
-fn cmd_info() {
+// ----------------------------------------------------------------- info
+
+fn cmd_info(flags: &HashMap<String, String>) -> CliResult {
+    check_flags("info", flags, &[])?;
     println!("sparx — distributed outlier detection (KDD'22 reproduction)");
+    println!("\ndetectors (sparx detect --method …):");
+    for name in registry::detector_names() {
+        println!("  {name}");
+    }
     println!("\ncluster presets (Table 5, scaled):");
     for name in ["config-mod", "config-gen", "local"] {
-        let c = presets::by_name(name).unwrap();
+        let c = presets::by_name(name).expect("preset names are static");
         println!(
             "  {name}: partitions={} workers={} threads={} exec-mem={}MB deadline={:?}s",
             c.num_partitions,
@@ -273,21 +418,50 @@ fn cmd_info() {
             sparx::baselines::dbscout::CostModel::neighbourhood_cells(d)
         );
     }
+    Ok(())
 }
+
+// ----------------------------------------------------------------- main
+
+const COMMANDS: [&str; 5] = ["detect", "experiment", "stream", "generate", "info"];
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let (pos, flags) = parse_flags(&args);
-    match pos.first().map(String::as_str) {
-        Some("detect") => cmd_detect(&flags),
-        Some("experiment") => cmd_experiment(&pos[1..], &flags),
-        Some("stream") => cmd_stream(&flags),
-        Some("generate") => cmd_generate(&flags),
-        Some("info") => cmd_info(),
-        _ => {
-            eprintln!("usage: sparx <detect|experiment|stream|generate|info> [flags]");
-            eprintln!("see `sparx info` and the module docs in rust/src/main.rs");
-            std::process::exit(2);
+    // every subcommand except `experiment <id>` is flags-only: stray
+    // positionals are rejected, not silently dropped
+    let no_positionals = |cmd: &str| -> CliResult {
+        if pos.len() > 1 {
+            Err(usage_err(format!(
+                "{cmd} takes no positional arguments, got {:?}",
+                &pos[1..]
+            )))
+        } else {
+            Ok(())
         }
+    };
+    let result: CliResult = match pos.first().map(String::as_str) {
+        Some("detect") => no_positionals("detect").and_then(|()| cmd_detect(&flags)),
+        Some("experiment") => cmd_experiment(&pos[1..], &flags),
+        Some("stream") => no_positionals("stream").and_then(|()| cmd_stream(&flags)),
+        Some("generate") => no_positionals("generate").and_then(|()| cmd_generate(&flags)),
+        Some("info") => no_positionals("info").and_then(|()| cmd_info(&flags)),
+        Some(other) => {
+            let hint = closest_match(other, &COMMANDS)
+                .map(|s| format!(" (did you mean `sparx {s}`?)"))
+                .unwrap_or_default();
+            Err(usage_err(format!(
+                "unknown subcommand {other:?}{hint}; expected one of: {}",
+                COMMANDS.join(", ")
+            )))
+        }
+        None => Err(usage_err(format!(
+            "usage: sparx <{}> [flags] — see the module docs in rust/src/main.rs",
+            COMMANDS.join("|")
+        ))),
+    };
+    if let Err(e) = result {
+        eprintln!("sparx: {e}");
+        std::process::exit(e.exit_code());
     }
 }

@@ -47,7 +47,8 @@ impl ResourceReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "time={:.2}s (wall {:.2}s + net {:.2}s) peak-exec={} total-mem={} driver={} shuffled={} ({} recs, {} rounds)",
+            "time={:.2}s (wall {:.2}s + net {:.2}s) peak-exec={} total-mem={} driver={} \
+             shuffled={} ({} recs, {} rounds)",
             self.job_secs,
             self.wall_secs,
             self.network_secs,

@@ -50,7 +50,8 @@ impl ArtifactManifest {
                     .and_then(Json::as_str)
                     .ok_or("manifest missing kind")?
                     .to_string(),
-                file: dir.join(a.get("file").and_then(Json::as_str).ok_or("manifest missing file")?),
+                file: dir
+                    .join(a.get("file").and_then(Json::as_str).ok_or("manifest missing file")?),
                 b: field("b")?,
                 d: field("d")?,
                 k: field("k")?,

@@ -14,9 +14,23 @@ enum Request {
     /// x (n×d, row-major) → s (n×k)
     Project { variant: String, x: Vec<f32>, n: usize },
     /// s (n×k) + chain params → bins (n×l×k)
-    ChainBins { variant: String, s: Vec<f32>, n: usize, delta: Vec<f32>, shift: Vec<f32>, fs: Vec<i32> },
+    ChainBins {
+        variant: String,
+        s: Vec<f32>,
+        n: usize,
+        delta: Vec<f32>,
+        shift: Vec<f32>,
+        fs: Vec<i32>,
+    },
     /// fused x (n×d) + chain params → bins (n×l×k)
-    ProjectBins { variant: String, x: Vec<f32>, n: usize, delta: Vec<f32>, shift: Vec<f32>, fs: Vec<i32> },
+    ProjectBins {
+        variant: String,
+        x: Vec<f32>,
+        n: usize,
+        delta: Vec<f32>,
+        shift: Vec<f32>,
+        fs: Vec<i32>,
+    },
     Shutdown,
 }
 
@@ -58,8 +72,8 @@ impl PjrtEngine {
                         return;
                     }
                 };
-                let mut execs: HashMap<(String, String), (xla::PjRtLoadedExecutable, usize, usize, usize, usize)> =
-                    HashMap::new();
+                type ExecEntry = (xla::PjRtLoadedExecutable, usize, usize, usize, usize);
+                let mut execs: HashMap<(String, String), ExecEntry> = HashMap::new();
                 for e in &entries {
                     let proto = match xla::HloModuleProto::from_text_file(
                         e.file.to_str().unwrap_or_default(),
@@ -259,7 +273,8 @@ fn serve(execs: &Execs, req: Request) -> Result<Reply, String> {
             let want_l = fs.len();
             if delta.len() != k || want_l > l || s.len() != n * k {
                 return Err(format!(
-                    "chain_bins {variant}: shape mismatch (k={k} l={l} vs delta={} fs={} s={}/n={n})",
+                    "chain_bins {variant}: shape mismatch \
+                     (k={k} l={l} vs delta={} fs={} s={}/n={n})",
                     delta.len(),
                     fs.len(),
                     s.len()

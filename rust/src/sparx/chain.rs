@@ -95,7 +95,10 @@ impl ChainParams {
 
 impl SizeOf for ChainParams {
     fn size_of(&self) -> usize {
-        std::mem::size_of::<Self>() + self.fs.len() * 8 + self.shift.len() * 4 + self.deltamax.len() * 4
+        std::mem::size_of::<Self>()
+            + self.fs.len() * 8
+            + self.shift.len() * 4
+            + self.deltamax.len() * 4
     }
 }
 
@@ -132,7 +135,11 @@ impl Binner for NativeBinner {
         let mut out = vec![0i32; n * l * k];
         let mut scratch = vec![0f32; k];
         for i in 0..n {
-            chain.bins_into(&s[i * k..(i + 1) * k], &mut scratch, &mut out[i * l * k..(i + 1) * l * k]);
+            chain.bins_into(
+                &s[i * k..(i + 1) * k],
+                &mut scratch,
+                &mut out[i * l * k..(i + 1) * l * k],
+            );
         }
         out
     }

@@ -87,6 +87,41 @@ impl Default for SparxParams {
     }
 }
 
+impl SparxParams {
+    /// Validate the hyperparameters, returning a human-readable reason on
+    /// failure. Called by [`SparxModel::fit_with`] (mapped to
+    /// `ClusterError::Invalid`) and by the `api` layer (mapped to
+    /// `SparxError::InvalidParams`), so degenerate settings fail fast with
+    /// a typed error instead of panicking deep in the pipeline.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.num_chains == 0 {
+            return Err("num_chains (M) must be ≥ 1".into());
+        }
+        if self.depth == 0 {
+            return Err("depth (L) must be ≥ 1".into());
+        }
+        if self.cms_rows == 0 || self.cms_cols == 0 {
+            return Err(format!(
+                "CMS shape must be non-degenerate: got r={} w={}",
+                self.cms_rows, self.cms_cols
+            ));
+        }
+        if self.cms_rows >= 128 || self.cms_cols >= (1 << 20) {
+            return Err(format!(
+                "CMS too large for shuffle key packing (r < 128, w < 2^20): got r={} w={}",
+                self.cms_rows, self.cms_cols
+            ));
+        }
+        if !(self.sample_rate > 0.0 && self.sample_rate <= 1.0) {
+            return Err(format!("sample_rate must be in (0, 1]: got {}", self.sample_rate));
+        }
+        if !(self.density > 0.0 && self.density <= 1.0) {
+            return Err(format!("density must be in (0, 1]: got {}", self.density));
+        }
+        Ok(())
+    }
+}
+
 /// The Eq. (5) / log2 scoring kernel: given a point's precomputed
 /// `[L][K]` bin-id block for `chain`, return the min-over-levels
 /// outlierness contribution. The single shared implementation behind the
@@ -144,6 +179,7 @@ impl SparxModel {
         params: &SparxParams,
         binner: &dyn Binner,
     ) -> Result<SparxModel> {
+        params.validate().map_err(ClusterError::Invalid)?;
         let projector = Self::make_projector(data, params);
         let proj = project_dataset(ctx, data, &projector)?;
         let deltamax = compute_deltamax(ctx, &proj)?;

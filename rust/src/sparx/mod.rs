@@ -7,6 +7,12 @@
 //! * [`ensemble`] — Steps 2–3: distributed fit and scoring (Algs. 2–3, Eq. 5)
 //! * [`plan`] — fused single-pass multi-chain executors ([`ExecMode`])
 //! * [`stream`] — §3.5 deployment front-end for evolving streams
+//!
+//! Most callers should not drive these pieces directly: the
+//! [`crate::api`] module wraps them in the unified [`crate::api::Detector`]
+//! contract (typed [`crate::api::SparxBuilder`] construction, crate-wide
+//! error taxonomy). The raw `SparxModel` entry points remain public for
+//! benchmarking and the cross-implementation equivalence tests.
 
 pub mod chain;
 pub mod cms;

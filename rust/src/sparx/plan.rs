@@ -74,6 +74,9 @@ pub struct ChainSet {
 /// Shared CMS-shape guard for both fit executors: bucket coordinates
 /// must stay packable into shuffle keys. One implementation so the two
 /// [`ExecMode`]s can never diverge in which parameter sets they accept.
+/// (The same bound is enforced up front, with the rest of the
+/// hyperparameter rules, by `SparxParams::validate` — this guard stays
+/// for callers that drive the executors directly.)
 pub(crate) fn check_cms_shape(r: usize, w: usize) -> Result<()> {
     if r >= 128 || w >= (1 << 20) {
         return Err(ClusterError::Invalid("CMS too large for shuffle key packing".into()));

@@ -10,6 +10,7 @@
 //! * re-scoring reads r buckets per level per chain — O(K + rLM) time;
 //! * the model (all CMSes) is O(rwLM) — constant in n and d.
 
+use crate::api::{Result, SparxError};
 use crate::util::LruCache;
 
 use super::ensemble::{score_bins, ScoreMode, SparxModel, TrainedChain};
@@ -43,9 +44,11 @@ impl StreamScorer {
     /// Build from a fitted model with an LRU capacity of `cache_size` IDs.
     /// Requires a hashing projector (k > 0): evolving features need the
     /// hash-not-cash trick of Eq. (2)/(3).
-    pub fn new(model: &SparxModel, cache_size: usize) -> Result<Self, String> {
+    pub fn new(model: &SparxModel, cache_size: usize) -> Result<Self> {
         if model.projector.is_identity() {
-            return Err("streaming requires a hashing projector (params.k > 0)".into());
+            return Err(SparxError::Unsupported(
+                "streaming requires a hashing projector (params.k > 0)".into(),
+            ));
         }
         let k = model.projector.k();
         let depth = model.params.depth;

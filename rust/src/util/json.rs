@@ -284,7 +284,10 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.i += 1;
         }
-        while self.peek().map_or(false, |c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-')) {
+        while self
+            .peek()
+            .map_or(false, |c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
             self.i += 1;
         }
         let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;

@@ -5,8 +5,10 @@ pub mod json;
 pub mod lru;
 pub mod rng;
 pub mod sizeof;
+pub mod text;
 
 pub use json::Json;
 pub use lru::LruCache;
 pub use rng::Rng;
 pub use sizeof::SizeOf;
+pub use text::{closest_match, edit_distance};

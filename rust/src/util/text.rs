@@ -1,0 +1,66 @@
+//! Tiny text helpers for CLI/registry diagnostics (the offline build has
+//! no external fuzzy-matching crate).
+
+/// Levenshtein edit distance (iterative two-row DP).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The candidate closest to `input` under edit distance, if any is close
+/// enough to plausibly be a typo (distance ≤ 2, or a strict prefix —
+/// `--chain` for `--chains`).
+pub fn closest_match<'a>(input: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    let mut best: Option<(&str, usize)> = None;
+    for &cand in candidates {
+        if cand.starts_with(input) || input.starts_with(cand) {
+            return Some(cand);
+        }
+        let d = edit_distance(input, cand);
+        if best.map_or(true, |(_, bd)| d < bd) {
+            best = Some((cand, d));
+        }
+    }
+    best.filter(|&(_, d)| d <= 2).map(|(c, _)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("chain", "chains"), 1);
+        assert_eq!(edit_distance("sparks", "sparx"), 2);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn suggestions() {
+        let cands = ["sparx", "xstream", "spif", "dbscout"];
+        assert_eq!(closest_match("sparks", &cands), Some("sparx"));
+        assert_eq!(closest_match("dbscot", &cands), Some("dbscout"));
+        assert_eq!(closest_match("zzzzzz", &cands), None);
+        // prefix rule: truncated flags resolve to the full name
+        assert_eq!(closest_match("chain", &["chains", "depth"]), Some("chains"));
+    }
+}

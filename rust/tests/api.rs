@@ -1,0 +1,236 @@
+//! Integration tests of the unified detector API (the ISSUE 2 acceptance
+//! criteria): the registry-driven Sparx run is bit-identical to the
+//! direct `SparxModel::fit` path, invalid hyperparameters surface as
+//! typed `SparxError::InvalidParams` instead of panicking, and every
+//! registered detector returns exactly one aligned score per point.
+
+use sparx::api::{
+    registry, Detector as _, DetectorSpec, FittedModel as _, SparxBuilder, SparxError,
+};
+use sparx::baselines::dbscout::{Dbscout, DbscoutParams};
+use sparx::baselines::{Spif, SpifParams, XStream, XStreamParams};
+use sparx::cluster::ClusterConfig;
+use sparx::data::generators::{GisetteGen, OsmGen, SpamUrlGen};
+use sparx::sparx::{SparxModel, SparxParams};
+
+fn local(parts: usize) -> sparx::ClusterContext {
+    ClusterConfig { num_partitions: parts, num_workers: 4, num_threads: 4, ..Default::default() }
+        .build()
+}
+
+fn small_osm() -> OsmGen {
+    OsmGen { n_inliers: 1500, n_outliers: 15, roads: 8, cities: 3, ..Default::default() }
+}
+
+#[test]
+fn registry_sparx_is_bit_identical_to_direct_path() {
+    let ctx = local(4);
+    let ld = GisetteGen { n: 600, d: 32, ..Default::default() }.generate(&ctx).unwrap();
+    let p = SparxParams { k: 12, num_chains: 8, depth: 6, sample_rate: 0.5, ..Default::default() };
+    // the pre-redesign path: fit + score on the model directly
+    let direct_model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+    let direct = direct_model.score_dataset(&ctx, &ld.dataset).unwrap();
+    // the registry-driven path the CLI uses
+    let spec = DetectorSpec {
+        k: Some(p.k),
+        components: Some(p.num_chains),
+        depth: Some(p.depth),
+        sample_rate: Some(p.sample_rate),
+        ..Default::default()
+    };
+    let det = registry::build("sparx", &spec).unwrap();
+    let via_registry =
+        det.fit(&ctx, &ld.dataset).unwrap().score(&ctx, &ld.dataset).unwrap();
+    assert_eq!(direct, via_registry, "registry run must be bit-identical to the direct path");
+    // and the typed-builder path
+    let built = SparxBuilder::new().params(p).build().unwrap();
+    let via_builder =
+        built.fit(&ctx, &ld.dataset).unwrap().score(&ctx, &ld.dataset).unwrap();
+    assert_eq!(direct, via_builder, "builder run must be bit-identical to the direct path");
+}
+
+#[test]
+fn baseline_detectors_match_their_direct_paths() {
+    let ctx = local(4);
+    let ld = small_osm().generate(&ctx).unwrap();
+
+    // xstream: direct sequential reference vs the Detector adapter
+    let rows = ld.dataset.rows.collect(&ctx).unwrap();
+    let xp = XStreamParams { k: 8, num_chains: 6, depth: 5, ..Default::default() };
+    let direct = XStream::fit(&rows, &ld.dataset.schema.names, &xp).score(&rows);
+    let spec = DetectorSpec {
+        k: Some(8),
+        components: Some(6),
+        depth: Some(5),
+        ..Default::default()
+    };
+    let api = registry::build("xstream", &spec)
+        .unwrap()
+        .fit(&ctx, &ld.dataset)
+        .unwrap()
+        .score(&ctx, &ld.dataset)
+        .unwrap();
+    assert_eq!(direct, api, "xstream adapter diverges from the direct path");
+
+    // spif
+    let sp = SpifParams { num_trees: 6, max_depth: 6, sample_rate: 0.5, ..Default::default() };
+    let direct =
+        Spif::fit(&ctx, &ld.dataset, &sp).unwrap().score_dataset(&ctx, &ld.dataset).unwrap();
+    let spec = DetectorSpec {
+        components: Some(6),
+        depth: Some(6),
+        sample_rate: Some(0.5),
+        ..Default::default()
+    };
+    let api = registry::build("spif", &spec)
+        .unwrap()
+        .fit(&ctx, &ld.dataset)
+        .unwrap()
+        .score(&ctx, &ld.dataset)
+        .unwrap();
+    assert_eq!(direct, api, "spif adapter diverges from the direct path");
+
+    // dbscout: binary verdicts surface as 1.0 / 0.0
+    let dp = DbscoutParams { eps: 1.0, min_pts: 4, ..Default::default() };
+    let verdict = Dbscout::run(&ctx, &ld.dataset, &dp).unwrap();
+    let direct: Vec<(u64, f64)> = verdict
+        .pred
+        .iter()
+        .map(|&(id, o)| (id, if o { 1.0 } else { 0.0 }))
+        .collect();
+    let spec = DetectorSpec { eps: Some(1.0), min_pts: Some(4), ..Default::default() };
+    let api = registry::build("dbscout", &spec)
+        .unwrap()
+        .fit(&ctx, &ld.dataset)
+        .unwrap()
+        .score(&ctx, &ld.dataset)
+        .unwrap();
+    assert_eq!(direct, api, "dbscout adapter diverges from the direct path");
+}
+
+#[test]
+fn every_registered_detector_scores_every_point() {
+    for name in registry::detector_names() {
+        let ctx = local(4);
+        let ld = small_osm().generate(&ctx).unwrap();
+        let spec = DetectorSpec {
+            k: Some(8),
+            components: Some(8),
+            depth: Some(5),
+            sample_rate: Some(0.5),
+            eps: Some(1.0),
+            min_pts: Some(4),
+            ..Default::default()
+        };
+        let det = registry::build(name, &spec).unwrap();
+        let model = det.fit(&ctx, &ld.dataset).unwrap();
+        assert_eq!(model.name(), name);
+        let scores = model.score(&ctx, &ld.dataset).unwrap();
+        assert_eq!(scores.len(), ld.dataset.len(), "{name} must score every point");
+        let mut seen = vec![false; ld.dataset.len()];
+        for &(id, s) in &scores {
+            assert!(s.is_finite(), "{name}: non-finite score for id {id}");
+            assert!(!seen[id as usize], "{name}: duplicate score for id {id}");
+            seen[id as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "{name}: some ids never scored");
+    }
+}
+
+#[test]
+fn invalid_params_are_typed_errors_not_panics() {
+    // the satellite cases: depth=0, cms_rows=0, sample_rate>1
+    for (what, res) in [
+        ("depth=0", SparxBuilder::new().depth(0).build().map(|_| ())),
+        ("cms_rows=0", SparxBuilder::new().cms(0, 100).build().map(|_| ())),
+        ("sample_rate>1", SparxBuilder::new().sample_rate(1.5).build().map(|_| ())),
+    ] {
+        assert!(
+            matches!(res, Err(SparxError::InvalidParams(_))),
+            "{what} must be InvalidParams, got {:?}",
+            res.err()
+        );
+    }
+    // the raw library entry point also fails typed (no deep panic)
+    let ctx = local(2);
+    let ld = GisetteGen { n: 200, d: 8, ..Default::default() }.generate(&ctx).unwrap();
+    let p = SparxParams { depth: 0, ..Default::default() };
+    assert!(matches!(
+        SparxModel::fit(&ctx, &ld.dataset, &p),
+        Err(sparx::ClusterError::Invalid(_))
+    ));
+}
+
+#[test]
+fn unknown_detector_suggests_the_right_name() {
+    let e = registry::build("sparks", &DetectorSpec::default()).unwrap_err();
+    assert_eq!(e.exit_code(), 2);
+    match e {
+        SparxError::UnknownDetector(msg) => assert!(msg.contains("sparx"), "{msg}"),
+        other => panic!("expected UnknownDetector, got {other:?}"),
+    }
+}
+
+#[test]
+fn stream_scorer_supported_only_by_sparx() {
+    let ctx = local(2);
+    let ld = GisetteGen { n: 300, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+    let spec = DetectorSpec {
+        k: Some(8),
+        components: Some(4),
+        depth: Some(4),
+        sample_rate: Some(0.5),
+        ..Default::default()
+    };
+    let sparx_model =
+        registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    assert!(sparx_model.stream_scorer(64).is_ok());
+    let spif_model = registry::build("spif", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    assert!(matches!(spif_model.stream_scorer(64), Err(SparxError::Unsupported(_))));
+}
+
+#[test]
+fn dense_only_baselines_reject_sparse_input() {
+    let ctx = local(2);
+    let ld = SpamUrlGen { n: 300, d: 5000, mean_nnz: 20, ..Default::default() }
+        .generate(&ctx)
+        .unwrap();
+    let spec = DetectorSpec {
+        components: Some(4),
+        sample_rate: Some(0.5),
+        eps: Some(1.0),
+        min_pts: Some(4),
+        ..Default::default()
+    };
+    for name in ["spif", "dbscout"] {
+        let r = registry::build(name, &spec).unwrap().fit(&ctx, &ld.dataset);
+        assert!(
+            matches!(r, Err(SparxError::Unsupported(_))),
+            "{name} must reject sparse rows with a typed error, got {:?}",
+            r.err().map(|e| e.to_string())
+        );
+    }
+}
+
+#[test]
+fn seeded_runs_reproduce_and_seeds_differentiate() {
+    let ctx = local(4);
+    let ld = GisetteGen { n: 400, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+    let spec = |seed| DetectorSpec {
+        k: Some(8),
+        components: Some(6),
+        depth: Some(5),
+        seed: Some(seed),
+        ..Default::default()
+    };
+    let run = |s: u64| {
+        registry::build("sparx", &spec(s))
+            .unwrap()
+            .fit(&ctx, &ld.dataset)
+            .unwrap()
+            .score(&ctx, &ld.dataset)
+            .unwrap()
+    };
+    assert_eq!(run(7), run(7), "same seed must reproduce bit for bit");
+    assert_ne!(run(7), run(8), "different seeds must sample different ensembles");
+}

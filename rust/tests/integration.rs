@@ -20,7 +20,8 @@ fn local(parts: usize) -> sparx::ClusterContext {
 fn gisette_regime_end_to_end() {
     let ctx = local(8);
     let ld = GisetteGen { n: 2000, d: 128, ..Default::default() }.generate(&ctx).unwrap();
-    let p = SparxParams { k: 25, num_chains: 25, depth: 10, sample_rate: 0.5, ..Default::default() };
+    let p =
+        SparxParams { k: 25, num_chains: 25, depth: 10, sample_rate: 0.5, ..Default::default() };
     let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
     let scores = model.score_dataset(&ctx, &ld.dataset).unwrap();
     let m = RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);
@@ -54,7 +55,8 @@ fn spamurl_regime_end_to_end_sparse() {
     let ld = SpamUrlGen { n: 3000, d: 50_000, mean_nnz: 60, ..Default::default() }
         .generate(&ctx)
         .unwrap();
-    let p = SparxParams { k: 50, num_chains: 20, depth: 10, sample_rate: 0.5, ..Default::default() };
+    let p =
+        SparxParams { k: 50, num_chains: 20, depth: 10, sample_rate: 0.5, ..Default::default() };
     let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
     let scores = model.score_dataset(&ctx, &ld.dataset).unwrap();
     let m = RankMetrics::compute(&align_scores(&scores, ld.labels.len()), &ld.labels);

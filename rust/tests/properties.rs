@@ -59,7 +59,11 @@ fn prop_ops_count_invariants() {
         let rate = rng.f64();
         let s1 = dv.sample(&c, rate, 99).unwrap();
         let s2 = dv.sample(&c, rate, 99).unwrap();
-        assert_eq!(s1.collect(&c).unwrap(), s2.collect(&c).unwrap(), "sampling must be deterministic");
+        assert_eq!(
+            s1.collect(&c).unwrap(),
+            s2.collect(&c).unwrap(),
+            "sampling must be deterministic"
+        );
         assert!(s1.len() <= n);
     }
 }
