@@ -171,6 +171,34 @@ fn main() {
         }
     }
 
+    // --- artifact codec: serialize + rehydrate the deployable model
+    //     (the save/load stage of the fit → save/load → score lifecycle)
+    {
+        use sparx::api::{registry, Detector as _, FittedModel as _, SparxBuilder};
+        use sparx::cluster::ClusterConfig;
+        use sparx::data::generators::GisetteGen;
+        let ctx = ClusterConfig { num_partitions: 4, ..Default::default() }.build();
+        let ld = GisetteGen { n: 600, d: 64, ..Default::default() }.generate(&ctx).unwrap();
+        let det = SparxBuilder::new()
+            .k(25)
+            .chains(25)
+            .depth(10)
+            .sample_rate(0.5)
+            .build()
+            .unwrap();
+        let model = det.fit(&ctx, &ld.dataset).unwrap();
+        let bytes = model.to_artifact().unwrap().to_bytes();
+        println!("(artifact: {} bytes framed, {}B payload)", bytes.len(), model.model_bytes());
+        bench("artifact serialize M=25 L=10 (per call)", 1, || {
+            model.to_artifact().unwrap().to_bytes().len() as u64
+        });
+        bench("artifact load_bytes M=25 L=10 (per call)", 1, || {
+            // name() as the sink: model_bytes() would re-serialize the
+            // payload and double-count the cost being measured
+            registry::load_bytes(&bytes).unwrap().name().len() as u64
+        });
+    }
+
     // --- streaming update+rescore
     {
         use sparx::cluster::ClusterConfig;

@@ -1,0 +1,52 @@
+//! The model lifecycle end to end — **fit → save → load → score →
+//! serve** (§3.5's deployment story): train once on the cluster, ship
+//! the O(rwLM) artifact to a deployment node, score batches and
+//! δ-updates from the loaded model.
+//!
+//! Run: `cargo run --release --example model_lifecycle`
+
+use sparx::api::{registry, Detector as _, DetectorSpec, FittedModel as _};
+use sparx::config::presets;
+use sparx::data::generators::GisetteGen;
+use sparx::data::UpdateTriple;
+
+fn main() -> sparx::api::Result<()> {
+    let cluster = presets::config_local().build();
+    let data = GisetteGen { n: 2000, d: 128, ..Default::default() }.generate(&cluster)?;
+
+    // 1. fit on the cluster
+    let spec = DetectorSpec {
+        k: Some(25),
+        components: Some(25),
+        depth: Some(8),
+        sample_rate: Some(0.2),
+        ..Default::default()
+    };
+    let model = registry::build("sparx", &spec)?.fit(&cluster, &data.dataset)?;
+
+    // 2. save — the versioned artifact is the whole deployment state
+    let path = std::env::temp_dir().join("model_lifecycle_demo.sparx");
+    let path = path.to_str().expect("utf-8 temp dir").to_string();
+    model.to_artifact()?.save(&path)?;
+    println!("saved {}B model payload to {path}", model.model_bytes());
+
+    // 3. load on the "deployment node" and score a batch — bit-identical
+    //    to scoring the in-memory model
+    let loaded = registry::load(&path)?;
+    let scores = loaded.score(&cluster, &data.dataset)?;
+    let reference = model.score(&cluster, &data.dataset)?;
+    assert_eq!(scores, reference, "loaded model must score bit-identically");
+    println!("scored {} points from the loaded model", scores.len());
+
+    // 4. serve the evolving stream (§3.5) from the loaded model —
+    //    including a feature that did not exist at training time
+    let mut scorer = loaded.stream_scorer(1024)?;
+    for (feature, delta) in [("f1", 0.4), ("f7", -1.0), ("brand_new_signal", 3.0)] {
+        let s = scorer.update(&UpdateTriple::Num { id: 9, feature: feature.into(), delta });
+        println!("  <9, {feature}, {delta:+}> -> outlierness {:.3}", s.outlierness);
+    }
+
+    let _ = std::fs::remove_file(&path);
+    println!("lifecycle OK");
+    Ok(())
+}

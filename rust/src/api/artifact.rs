@@ -1,0 +1,484 @@
+//! Versioned, self-describing model artifacts — the **save/load** stage
+//! of the fit → save/load → score/serve lifecycle (§3.5's deployment
+//! story: train once on the cluster, ship the O(rwLM) model to a
+//! deployment node, score updates in constant time).
+//!
+//! ## File format (all little-endian)
+//!
+//! ```text
+//! magic            4 bytes   "SPRX"
+//! format version   u16       bumped on any layout change
+//! detector name    u32-len str   "sparx" | "xstream" | "spif" | "dbscout"
+//! param block      u32-len bytes detector hyperparameters (+ backend)
+//! payload          u32-len bytes the fitted state — the deployable model
+//! checksum         u32       IEEE CRC-32 over everything above
+//! ```
+//!
+//! The *payload* holds exactly the fitted state a deployment node needs
+//! (chains + CMS counts + projector seeds for Sparx; the tree pool for
+//! SPIF; grid parameters + resolved eps for DBSCOUT), and
+//! [`FittedModel::model_bytes`](super::FittedModel::model_bytes) reports
+//! its length — the footprint we report is the footprint we ship
+//! (regression-tested per detector in `rust/tests/api.rs`).
+//!
+//! Corrupt, truncated or version-mismatched files surface as typed
+//! [`SparxError::MissingArtifact`]; a structurally intact file whose
+//! blocks don't decode surfaces as [`SparxError::InvalidParams`]; an
+//! intact file naming a detector this build doesn't know is
+//! [`SparxError::UnknownDetector`](super::SparxError::UnknownDetector).
+//! Nothing on the load path panics.
+//!
+//! Deserialization lives next to each detector
+//! (`FittedSparx::from_artifact`, `XStream::from_artifact`, …) and is
+//! dispatched by name through [`super::registry::load`] /
+//! [`super::registry::load_bytes`].
+
+use crate::sparx::{ChainParams, CountMinSketch, ExecMode, Projector, ScoreMode, TrainedChain};
+use crate::util::codec::{crc32, CodecResult, Decoder, Encoder};
+
+use super::error::{Result, SparxError};
+
+/// File magic: the first four bytes of every model artifact.
+pub const MAGIC: [u8; 4] = *b"SPRX";
+
+/// Current artifact format version. Readers reject any other value with
+/// a typed error rather than guessing at the layout.
+pub const FORMAT_VERSION: u16 = 1;
+
+/// A parsed (or to-be-written) model artifact: the header fields plus
+/// the two opaque blocks each detector encodes/decodes for itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelArtifact {
+    /// Registry name of the detector that produced this model.
+    pub detector: String,
+    /// Format version the blocks were written under.
+    pub version: u16,
+    /// Hyperparameter block (also carries the Sparx backend tag).
+    pub params: Vec<u8>,
+    /// The fitted state — what a deployment node loads.
+    pub payload: Vec<u8>,
+}
+
+impl ModelArtifact {
+    pub fn new(detector: &str, params: Vec<u8>, payload: Vec<u8>) -> Self {
+        ModelArtifact { detector: detector.into(), version: FORMAT_VERSION, params, payload }
+    }
+
+    /// Serialize with framing + checksum.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        enc.put_bytes(&MAGIC);
+        enc.put_u16(self.version);
+        enc.put_str(&self.detector);
+        enc.put_u32(self.params.len() as u32);
+        enc.put_bytes(&self.params);
+        enc.put_u32(self.payload.len() as u32);
+        enc.put_bytes(&self.payload);
+        let sum = crc32(enc.as_slice());
+        enc.put_u32(sum);
+        enc.into_bytes()
+    }
+
+    /// Parse framing + checksum. Typed failures, no panics:
+    /// bad magic / truncation / checksum / version → `MissingArtifact`.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelArtifact> {
+        let corrupt = |what: &str| {
+            SparxError::MissingArtifact(format!("cannot read model artifact: {what}"))
+        };
+        // magic + version + name len + two block lens + checksum
+        if bytes.len() < MAGIC.len() + 2 + 4 + 4 + 4 + 4 {
+            return Err(corrupt("file too short to be a sparx model artifact"));
+        }
+        if bytes[..MAGIC.len()] != MAGIC {
+            return Err(corrupt("bad magic (not a sparx model artifact)"));
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 4);
+        let stored = u32::from_le_bytes(tail.try_into().expect("4-byte tail"));
+        if crc32(body) != stored {
+            return Err(corrupt("checksum mismatch (corrupt or truncated artifact)"));
+        }
+        let mut dec = Decoder::new(body);
+        let parse = |e: String| corrupt(&e);
+        dec.take(MAGIC.len()).map_err(parse)?;
+        let version = dec.u16().map_err(parse)?;
+        if version != FORMAT_VERSION {
+            return Err(SparxError::MissingArtifact(format!(
+                "unsupported artifact format version {version} (this build reads v{FORMAT_VERSION})"
+            )));
+        }
+        let detector = dec.str().map_err(parse)?;
+        let params_len = dec.u32().map_err(parse)? as usize;
+        let params = dec.take(params_len).map_err(parse)?.to_vec();
+        let payload_len = dec.u32().map_err(parse)? as usize;
+        let payload = dec.take(payload_len).map_err(parse)?.to_vec();
+        dec.finish().map_err(parse)?;
+        Ok(ModelArtifact { detector, version, params, payload })
+    }
+
+    /// Write the framed artifact to a file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read and parse an artifact file.
+    pub fn load(path: &str) -> Result<ModelArtifact> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+/// Map a block-decode failure to the typed error the lifecycle promises:
+/// the framing was intact (checksum passed), so a mis-shaped block means
+/// the parameters/payload don't describe a valid model.
+pub(crate) fn block_err(detector: &str, e: String) -> SparxError {
+    SparxError::InvalidParams(format!("{detector} artifact block does not decode: {e}"))
+}
+
+// ------------------------------------------------------------------
+// shared sub-codecs: enums, chains, projector (used by sparx + xstream)
+
+pub(crate) fn encode_score_mode(enc: &mut Encoder, mode: ScoreMode) {
+    enc.put_u8(match mode {
+        ScoreMode::Extrapolated => 0,
+        ScoreMode::Log2 => 1,
+    });
+}
+
+pub(crate) fn decode_score_mode(dec: &mut Decoder) -> CodecResult<ScoreMode> {
+    match dec.u8()? {
+        0 => Ok(ScoreMode::Extrapolated),
+        1 => Ok(ScoreMode::Log2),
+        other => Err(format!("unknown score mode tag {other}")),
+    }
+}
+
+pub(crate) fn encode_exec_mode(enc: &mut Encoder, mode: ExecMode) {
+    enc.put_u8(match mode {
+        ExecMode::Fused => 0,
+        ExecMode::PerChain => 1,
+    });
+}
+
+pub(crate) fn decode_exec_mode(dec: &mut Decoder) -> CodecResult<ExecMode> {
+    match dec.u8()? {
+        0 => Ok(ExecMode::Fused),
+        1 => Ok(ExecMode::PerChain),
+        other => Err(format!("unknown exec mode tag {other}")),
+    }
+}
+
+/// One trained chain: sampled parameters + the per-level CMS blocks.
+pub(crate) fn encode_chain(enc: &mut Encoder, chain: &TrainedChain) {
+    enc.put_usize_slice(&chain.params.fs);
+    enc.put_f32_slice(&chain.params.shift);
+    enc.put_f32_slice(&chain.params.deltamax);
+    enc.put_u32(chain.cms.len() as u32);
+    for cms in &chain.cms {
+        enc.put_u32(cms.rows() as u32);
+        enc.put_u32(cms.cols() as u32);
+        enc.put_u32_slice(cms.counts());
+    }
+}
+
+pub(crate) fn decode_chain(dec: &mut Decoder) -> CodecResult<TrainedChain> {
+    let fs = dec.usize_vec()?;
+    let shift = dec.f32_vec()?;
+    let deltamax = dec.f32_vec()?;
+    let k = deltamax.len();
+    if k == 0 {
+        return Err("chain has an empty deltamax block".into());
+    }
+    if shift.len() != k {
+        return Err(format!("chain shift len {} != deltamax len {k}", shift.len()));
+    }
+    if fs.iter().any(|&f| f >= k) {
+        return Err("chain split feature out of range".into());
+    }
+    let params = ChainParams::new(fs, shift, deltamax);
+    let levels = dec.u32()? as usize;
+    let mut cms = Vec::with_capacity(levels.min(1 << 16));
+    for _ in 0..levels {
+        let r = dec.u32()? as usize;
+        let w = dec.u32()? as usize;
+        let counts = dec.u32_vec()?;
+        if r == 0 || w == 0 || counts.len() != r * w {
+            return Err(format!("CMS block shape mismatch: r={r} w={w} n={}", counts.len()));
+        }
+        cms.push(CountMinSketch::from_counts(r, w, &counts));
+    }
+    if cms.len() != params.depth() {
+        return Err(format!("chain has {} CMS levels for depth {}", cms.len(), params.depth()));
+    }
+    Ok(TrainedChain { params, cms })
+}
+
+/// Encode the chain-ensemble payload shared by Sparx and xStream:
+/// projector + Δmax + chain count + every chain.
+pub(crate) fn encode_chain_ensemble(
+    enc: &mut Encoder,
+    projector: &Projector,
+    deltamax: &[f32],
+    chains: &[TrainedChain],
+) {
+    encode_projector(enc, projector);
+    enc.put_f32_slice(deltamax);
+    enc.put_u32(chains.len() as u32);
+    for chain in chains {
+        encode_chain(enc, chain);
+    }
+}
+
+/// Decode **and fully validate** the chain-ensemble payload against the
+/// param block's declared shape (`k == 0` ⇒ identity projector). One
+/// implementation behind both the Sparx and xStream loaders, so the two
+/// can never diverge in what they accept: a checksum-valid artifact
+/// whose blocks disagree on k / chain count / depth / Δmax width fails
+/// here instead of indexing out of bounds in the binning hot path
+/// (which trusts these invariants with `debug_assert`s only).
+pub(crate) fn decode_chain_ensemble(
+    payload: &[u8],
+    k: usize,
+    num_chains: usize,
+    depth: usize,
+) -> CodecResult<(Projector, Vec<f32>, Vec<TrainedChain>)> {
+    let mut dec = Decoder::new(payload);
+    let projector = decode_projector(&mut dec)?;
+    let deltamax = dec.f32_vec()?;
+    let m = dec.u32()? as usize;
+    if m != num_chains {
+        return Err(format!("payload has {m} chains but params declare {num_chains}"));
+    }
+    let chains = (0..m).map(|_| decode_chain(&mut dec)).collect::<CodecResult<Vec<_>>>()?;
+    dec.finish()?;
+    let consistent = if k == 0 {
+        projector.is_identity()
+    } else {
+        !projector.is_identity() && projector.k() == k
+    };
+    if !consistent {
+        return Err(format!(
+            "params declare k={k} but the payload projector emits {} features",
+            projector.out_dim()
+        ));
+    }
+    check_chain_model(projector.out_dim(), depth, &deltamax, &chains)?;
+    Ok((projector, deltamax, chains))
+}
+
+/// Model-level shape agreement for a decoded ensemble (see
+/// [`decode_chain_ensemble`], its only caller).
+fn check_chain_model(
+    kdim: usize,
+    depth: usize,
+    deltamax: &[f32],
+    chains: &[TrainedChain],
+) -> CodecResult<()> {
+    if deltamax.len() != kdim {
+        return Err(format!(
+            "deltamax has {} entries for a {kdim}-wide projector",
+            deltamax.len()
+        ));
+    }
+    for (m, chain) in chains.iter().enumerate() {
+        if chain.params.k() != kdim {
+            return Err(format!(
+                "chain {m} is {}-wide but the projector emits {kdim} features",
+                chain.params.k()
+            ));
+        }
+        if chain.params.depth() != depth {
+            return Err(format!(
+                "chain {m} has depth {} but params declare {depth}",
+                chain.params.depth()
+            ));
+        }
+    }
+    Ok(())
+}
+
+// projector wire tags
+const PROJ_IDENTITY: u8 = 0;
+const PROJ_HASHING: u8 = 1;
+const SCHEMA_NONE: u8 = 0;
+const SCHEMA_POSITIONAL: u8 = 1;
+const SCHEMA_NAMED: u8 = 2;
+
+/// Sanity ceiling on decoded projector/schema widths: CRC-32 is
+/// integrity, not authentication, so declared sizes that materialise
+/// allocations "from thin air" (hashers, positional names) are capped —
+/// 16M columns comfortably covers SpamURL's real 3.2M while a hostile
+/// 50-byte file can no longer demand terabytes.
+const MAX_DECODED_DIM: usize = 1 << 24;
+
+/// Ceiling on the rematerialised R\[D,K\] entry count (4GB of f32) —
+/// same thin-air-allocation concern as [`MAX_DECODED_DIM`], applied to
+/// the product of schema width and projection count.
+const MAX_DENSE_R_ENTRIES: usize = 1 << 30;
+
+/// The projector is fully described by its seeds (always `0..k`), the
+/// hash density and — for dense schemas — the feature names; the O(D·K)
+/// sign matrix is *rematerialised* at load time, bit-identically, rather
+/// than shipped. Positional schemas (`f0..f{d-1}`) compress to a single
+/// dimension count.
+pub(crate) fn encode_projector(enc: &mut Encoder, proj: &Projector) {
+    if proj.is_identity() {
+        enc.put_u8(PROJ_IDENTITY);
+        enc.put_usize(proj.out_dim());
+        return;
+    }
+    enc.put_u8(PROJ_HASHING);
+    enc.put_usize(proj.k());
+    enc.put_f64(proj.density().expect("hashing projector has hashers"));
+    match proj.dense_schema() {
+        None => enc.put_u8(SCHEMA_NONE),
+        Some(names) => {
+            let positional =
+                names.iter().enumerate().all(|(j, n)| n.len() <= 24 && *n == format!("f{j}"));
+            if positional {
+                enc.put_u8(SCHEMA_POSITIONAL);
+                enc.put_usize(names.len());
+            } else {
+                enc.put_u8(SCHEMA_NAMED);
+                enc.put_u32(names.len() as u32);
+                for n in names {
+                    enc.put_str(n);
+                }
+            }
+        }
+    }
+}
+
+pub(crate) fn decode_projector(dec: &mut Decoder) -> CodecResult<Projector> {
+    match dec.u8()? {
+        PROJ_IDENTITY => Ok(Projector::identity(dec.usize()?)),
+        PROJ_HASHING => {
+            let k = dec.usize()?;
+            let density = dec.f64()?;
+            if k == 0 || k > MAX_DECODED_DIM || !(density > 0.0 && density <= 1.0) {
+                return Err(format!("invalid projector: k={k} density={density}"));
+            }
+            let proj = Projector::new(k, density);
+            match dec.u8()? {
+                SCHEMA_NONE => Ok(proj),
+                SCHEMA_POSITIONAL => {
+                    let d = dec.usize()?;
+                    if d == 0 || d > MAX_DECODED_DIM {
+                        return Err(format!("positional schema dimension {d} out of range"));
+                    }
+                    if d.saturating_mul(k) > MAX_DENSE_R_ENTRIES {
+                        return Err(format!("dense sign matrix {d}x{k} exceeds the size cap"));
+                    }
+                    let names: Vec<String> = (0..d).map(|j| format!("f{j}")).collect();
+                    Ok(proj.with_dense_schema(&names))
+                }
+                SCHEMA_NAMED => {
+                    let n = dec.u32()? as usize;
+                    let names: Vec<String> =
+                        (0..n).map(|_| dec.str()).collect::<CodecResult<_>>()?;
+                    if names.len().saturating_mul(k) > MAX_DENSE_R_ENTRIES {
+                        return Err(format!(
+                            "dense sign matrix {}x{k} exceeds the size cap",
+                            names.len()
+                        ));
+                    }
+                    Ok(proj.with_dense_schema(&names))
+                }
+                other => Err(format!("unknown schema tag {other}")),
+            }
+        }
+        other => Err(format!("unknown projector tag {other}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn framing_round_trips() {
+        let art = ModelArtifact::new("sparx", vec![1, 2, 3], vec![9; 100]);
+        let bytes = art.to_bytes();
+        let back = ModelArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(art, back);
+    }
+
+    #[test]
+    fn empty_blocks_are_legal() {
+        let art = ModelArtifact::new("dbscout", Vec::new(), Vec::new());
+        let back = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
+        assert_eq!(back.detector, "dbscout");
+        assert!(back.params.is_empty() && back.payload.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_truncation_and_bitflips_are_typed() {
+        let bytes = ModelArtifact::new("sparx", vec![4; 16], vec![7; 64]).to_bytes();
+        // bad magic
+        let mut junk = bytes.clone();
+        junk[0] = b'J';
+        assert!(matches!(
+            ModelArtifact::from_bytes(&junk),
+            Err(SparxError::MissingArtifact(_))
+        ));
+        // truncated at every prefix length — never a panic
+        for cut in 0..bytes.len() {
+            assert!(
+                matches!(
+                    ModelArtifact::from_bytes(&bytes[..cut]),
+                    Err(SparxError::MissingArtifact(_))
+                ),
+                "prefix of {cut} bytes must fail typed"
+            );
+        }
+        // a single flipped bit anywhere must be caught by the checksum
+        for pos in [6, 14, 30, bytes.len() - 1] {
+            let mut c = bytes.clone();
+            c[pos] ^= 0x40;
+            assert!(
+                matches!(ModelArtifact::from_bytes(&c), Err(SparxError::MissingArtifact(_))),
+                "bit flip at {pos} must fail typed"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_version_is_rejected_with_the_version_in_the_message() {
+        let mut art = ModelArtifact::new("sparx", Vec::new(), Vec::new());
+        art.version = 99;
+        match ModelArtifact::from_bytes(&art.to_bytes()) {
+            Err(SparxError::MissingArtifact(msg)) => {
+                assert!(msg.contains("99"), "message must name the version: {msg}");
+            }
+            other => panic!("expected MissingArtifact, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn projector_codec_round_trips() {
+        // identity
+        let mut enc = Encoder::new();
+        encode_projector(&mut enc, &Projector::identity(7));
+        let bytes = enc.into_bytes();
+        let p = decode_projector(&mut Decoder::new(&bytes)).unwrap();
+        assert!(p.is_identity());
+        assert_eq!(p.out_dim(), 7);
+        // hashing + positional schema: R must rematerialise identically
+        let names: Vec<String> = (0..12).map(|j| format!("f{j}")).collect();
+        let orig = Projector::new(5, 1.0 / 3.0).with_dense_schema(&names);
+        let mut enc = Encoder::new();
+        encode_projector(&mut enc, &orig);
+        let bytes = enc.into_bytes();
+        let back = decode_projector(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(orig.dense_r(), back.dense_r());
+        assert_eq!(orig.k(), back.k());
+        // named (non-positional) schema
+        let names = vec!["lon".to_string(), "lat".to_string()];
+        let orig = Projector::new(3, 0.5).with_dense_schema(&names);
+        let mut enc = Encoder::new();
+        encode_projector(&mut enc, &orig);
+        let bytes = enc.into_bytes();
+        let back = decode_projector(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(orig.dense_r(), back.dense_r());
+        assert_eq!(back.dense_schema(), Some(&names[..]));
+    }
+}

@@ -10,9 +10,11 @@ use crate::data::Dataset;
 use crate::runtime::{PjrtBinner, PjrtEngine};
 use crate::sparx::chain::{Binner, NativeBinner};
 use crate::sparx::{project_dataset, ExecMode, ScoreMode, SparxModel, SparxParams, StreamScorer};
+use crate::util::codec::{CodecResult, Decoder, Encoder};
 
+use super::artifact::{self, ModelArtifact};
 use super::error::{Result, SparxError};
-use super::{Detector, FittedModel};
+use super::{check_projector_input, Detector, FittedModel};
 
 /// Which binning backend executes the per-tile numeric hot path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -230,11 +232,95 @@ pub struct FittedSparx {
     backend: BackendRuntime,
 }
 
+// backend wire tags (artifact param block)
+const BACKEND_NATIVE: u8 = 0;
+const BACKEND_PJRT: u8 = 1;
+
+fn encode_sparx_params(enc: &mut Encoder, p: &SparxParams) {
+    enc.put_usize(p.k);
+    enc.put_usize(p.num_chains);
+    enc.put_usize(p.depth);
+    enc.put_f64(p.sample_rate);
+    enc.put_usize(p.cms_rows);
+    enc.put_usize(p.cms_cols);
+    enc.put_f64(p.density);
+    artifact::encode_score_mode(enc, p.score_mode);
+    artifact::encode_exec_mode(enc, p.exec_mode);
+    enc.put_u64(p.seed);
+}
+
+fn decode_sparx_params(dec: &mut Decoder) -> CodecResult<SparxParams> {
+    Ok(SparxParams {
+        k: dec.usize()?,
+        num_chains: dec.usize()?,
+        depth: dec.usize()?,
+        sample_rate: dec.f64()?,
+        cms_rows: dec.usize()?,
+        cms_cols: dec.usize()?,
+        density: dec.f64()?,
+        score_mode: artifact::decode_score_mode(dec)?,
+        exec_mode: artifact::decode_exec_mode(dec)?,
+        seed: dec.u64()?,
+    })
+}
+
 impl FittedSparx {
     /// The underlying model, for callers that need the fitted state
     /// (chains, projector, Δmax) beyond the trait surface.
     pub fn model(&self) -> &SparxModel {
         &self.model
+    }
+
+    /// The fitted state the artifact payload carries: projector seeds +
+    /// Δmax + every chain's sampled parameters and CMS blocks. The
+    /// O(D·K) dense sign matrix is *not* shipped — it rematerialises
+    /// bit-identically from the stored schema at load time.
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        artifact::encode_chain_ensemble(
+            &mut enc,
+            &self.model.projector,
+            &self.model.deltamax,
+            &self.model.chains,
+        );
+        enc.into_bytes()
+    }
+
+    /// Rehydrate from an artifact: the param block restores the
+    /// hyperparameters and resolves the binning backend through the same
+    /// [`Backend`] path `build()` uses (a PJRT-fitted model needs the
+    /// compiled artifacts again — [`SparxError::MissingArtifact`]
+    /// otherwise); the payload restores projector, Δmax and chains.
+    pub fn from_artifact(art: &ModelArtifact) -> Result<FittedSparx> {
+        let blk = |e| artifact::block_err("sparx", e);
+        let mut dec = Decoder::new(&art.params);
+        let params = decode_sparx_params(&mut dec).map_err(blk)?;
+        params.validate().map_err(SparxError::InvalidParams)?;
+        let backend_tag = dec.u8().map_err(blk)?;
+        let variant = dec.str().map_err(blk)?;
+        dec.finish().map_err(blk)?;
+        let backend = match backend_tag {
+            BACKEND_NATIVE => BackendRuntime::Native,
+            BACKEND_PJRT => BackendRuntime::Pjrt {
+                engine: Arc::new(
+                    PjrtEngine::start_default().map_err(SparxError::MissingArtifact)?,
+                ),
+                variant,
+            },
+            other => return Err(blk(format!("unknown backend tag {other}"))),
+        };
+
+        let (projector, deltamax, chains) = artifact::decode_chain_ensemble(
+            &art.payload,
+            params.k,
+            params.num_chains,
+            params.depth,
+        )
+        .map_err(blk)?;
+        Ok(FittedSparx {
+            model: SparxModel { params, projector, deltamax, chains },
+            backend,
+        })
     }
 }
 
@@ -244,6 +330,7 @@ impl FittedModel for FittedSparx {
     }
 
     fn score(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Vec<(u64, f64)>> {
+        check_projector_input(&self.model.projector, data)?;
         let proj = project_dataset(ctx, data, &self.model.projector)?;
         let scores = self
             .backend
@@ -251,8 +338,24 @@ impl FittedModel for FittedSparx {
         Ok(scores)
     }
 
+    fn to_artifact(&self) -> Result<ModelArtifact> {
+        let mut params = Encoder::new();
+        encode_sparx_params(&mut params, &self.model.params);
+        match &self.backend {
+            BackendRuntime::Native => {
+                params.put_u8(BACKEND_NATIVE);
+                params.put_str("");
+            }
+            BackendRuntime::Pjrt { variant, .. } => {
+                params.put_u8(BACKEND_PJRT);
+                params.put_str(variant);
+            }
+        }
+        Ok(ModelArtifact::new("sparx", params.into_bytes(), self.encode_payload()))
+    }
+
     fn model_bytes(&self) -> usize {
-        self.model.model_bytes()
+        self.encode_payload().len()
     }
 
     fn stream_scorer(&self, cache_size: usize) -> Result<StreamScorer> {

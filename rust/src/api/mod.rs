@@ -12,14 +12,20 @@
 //! * [`Detector`] — an unfitted, configured method: `fit(&ctx, &data)`
 //!   returns a boxed [`FittedModel`];
 //! * [`FittedModel`] — `score(&ctx, &data)` yields `(id, outlierness)`
-//!   pairs (higher = more outlying) for *every* point, `model_bytes()`
-//!   reports the deployable footprint, and `stream_scorer()` (optional;
-//!   Sparx only) opens the §3.5 evolving-stream front-end.
+//!   pairs (higher = more outlying) for *every* point, `to_artifact()`
+//!   serializes the fitted state to a versioned [`ModelArtifact`] (the
+//!   **save/load** stage of the lifecycle — see [`artifact`]),
+//!   `model_bytes()` reports the shipped payload footprint, and
+//!   `stream_scorer()` (optional; Sparx only) opens the §3.5
+//!   evolving-stream front-end.
 //!
 //! Construction is either **typed** — [`SparxBuilder`] with a
 //! [`Backend`] that resolves the binner/engine internally — or
 //! **string-driven** through [`registry`] (`"sparx" | "xstream" | "spif"
-//! | "dbscout"`), which is what `sparx detect --method …` uses.
+//! | "dbscout"`), which is what `sparx fit --method …` uses; saved
+//! models come back through [`registry::load`] / [`registry::load_bytes`],
+//! which read the artifact header and dispatch to the right
+//! deserializer.
 //!
 //! All entry points return [`Result`] with the crate-wide [`SparxError`]
 //! taxonomy (see [`error`]); invalid hyperparameters are rejected with
@@ -41,17 +47,19 @@
 //! }
 //! ```
 
+pub mod artifact;
 pub mod builder;
 pub mod error;
 pub mod registry;
 
+pub use artifact::ModelArtifact;
 pub use builder::{Backend, FittedSparx, SparxBuilder, SparxDetector};
 pub use error::{Result, SparxError};
 pub use registry::DetectorSpec;
 
 use crate::cluster::ClusterContext;
-use crate::data::{Dataset, Features};
-use crate::sparx::StreamScorer;
+use crate::data::Dataset;
+use crate::sparx::{Projector, StreamScorer};
 
 /// A configured-but-unfitted outlier detector. The one contract every
 /// method implements; the CLI, the experiment harnesses and the examples
@@ -65,8 +73,9 @@ pub trait Detector {
     fn fit(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Box<dyn FittedModel>>;
 }
 
-/// A fitted model: scores datasets, reports its deployable footprint,
-/// and (for methods that support §3.5) opens a streaming front-end.
+/// A fitted model: scores datasets, serializes to a deployable
+/// [`ModelArtifact`], reports its shipped footprint, and (for methods
+/// that support §3.5) opens a streaming front-end.
 pub trait FittedModel {
     /// Name of the method that produced this model.
     fn name(&self) -> &'static str;
@@ -75,7 +84,16 @@ pub trait FittedModel {
     /// Methods with binary verdicts (DBSCOUT) emit 1.0 / 0.0.
     fn score(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Vec<(u64, f64)>>;
 
-    /// Driver-resident model footprint in bytes (what scoring broadcasts).
+    /// Serialize the fitted state to a versioned artifact — what
+    /// `sparx fit --model-out` writes and [`registry::load`] reads back.
+    /// Round trips are bit-identical: a loaded model scores exactly like
+    /// the in-memory one (regression-tested per detector).
+    fn to_artifact(&self) -> Result<ModelArtifact>;
+
+    /// Deployable model footprint in bytes: the length of the artifact
+    /// *payload* — the fitted state `save` ships to a deployment node
+    /// (O(M·L·r·w) for Sparx, the §3.4 claim). Agrees with
+    /// `to_artifact()?.payload.len()` by contract (regression-tested).
     fn model_bytes(&self) -> usize;
 
     /// Open the evolving-stream front-end (§3.5) with an LRU sketch cache
@@ -93,19 +111,93 @@ pub trait FittedModel {
 /// SPIF implementation cannot ingest sparse RDDs (§4.2.5) and DBSCOUT's
 /// grid needs coordinates, so sparse/mixed data must be projected to a
 /// dense representation first — exactly as the paper had to.
-/// Checks the first row of *every* partition (O(partitions), no data
-/// movement) — generators and loaders build homogeneous partitions, so
-/// this catches mixed datasets without a full scan.
+/// Checks the density flag [`Dataset`] caches at construction (every row
+/// of every partition was inspected exactly once, when the dataset was
+/// built), so a mixed partition whose *first* row happens to be dense —
+/// the hole the old first-row-per-partition probe fell through — is
+/// caught too, at O(1) here.
 pub(crate) fn ensure_dense(data: &Dataset, method: &str) -> Result<()> {
-    for p in 0..data.rows.num_parts() {
-        if let Some(row) = data.rows.part(p).first() {
-            if !matches!(&row.features, Features::Dense(_)) {
-                return Err(SparxError::Unsupported(format!(
-                    "{method} requires dense rows — project the data first \
-                     (e.g. Sparx's Eq. 2 hash projection), as the paper did"
+    if data.is_all_dense() {
+        Ok(())
+    } else {
+        Err(SparxError::Unsupported(format!(
+            "{method} requires dense rows — project the data first \
+             (e.g. Sparx's Eq. 2 hash projection), as the paper did"
+        )))
+    }
+}
+
+/// Guard shared by the Sparx / xStream scoring paths: with the fit/score
+/// split (and especially save/load), the scored dataset can differ from
+/// the fitted one, so mismatches the fit-and-score-in-one flow could
+/// never produce must fail typed instead of panicking deep in the
+/// projection. Dense rows must match the width the model was fit on
+/// (identity passes features straight to the chains; a materialised
+/// R[D,K] indexes by position); name-hashing projectors accept any
+/// sparse/mixed width — that is Sparx's evolving-feature property.
+pub(crate) fn check_projector_input(projector: &Projector, data: &Dataset) -> Result<()> {
+    if projector.is_identity() && !data.is_all_dense() {
+        return Err(SparxError::Unsupported(
+            "this model was fit without projection (k=0) and scores dense rows only".into(),
+        ));
+    }
+    if data.is_all_dense() {
+        match projector.expected_dense_dim() {
+            Some(d) if data.dim() != d => {
+                return Err(SparxError::InvalidParams(format!(
+                    "model expects {d}-dimensional dense input, dataset has {} columns",
+                    data.dim()
                 )));
             }
+            // a hashing projector that never materialised a dense schema
+            // (fit on sparse/mixed rows with a name-less schema) cannot
+            // consume positional dense rows — project() would panic on
+            // the missing R matrix
+            None if !projector.is_identity() => {
+                return Err(SparxError::Unsupported(
+                    "this model hashes feature names on the fly and has no dense schema \
+                     — encode rows as sparse or mixed to score them"
+                        .into(),
+                ));
+            }
+            _ => {}
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterConfig, DistVec};
+    use crate::data::{Row, Schema};
+
+    /// Regression for the hardened dense guard: a partition whose first
+    /// row is dense but that hides a sparse straggler used to slip past
+    /// the old first-row-per-partition probe.
+    #[test]
+    fn ensure_dense_catches_a_mixed_partition() {
+        let ctx = ClusterConfig { num_partitions: 1, ..Default::default() }.build();
+        let rows = DistVec::from_parts(
+            &ctx,
+            vec![vec![
+                Row::dense(0, vec![1.0, 2.0]),
+                Row::sparse(1, vec![0], vec![1.0]),
+                Row::dense(2, vec![3.0, 4.0]),
+            ]],
+        )
+        .unwrap();
+        let mixed = Dataset::new(Schema::positional(2), rows);
+        assert!(!mixed.is_all_dense());
+        assert!(matches!(ensure_dense(&mixed, "SPIF"), Err(SparxError::Unsupported(_))));
+
+        let rows = DistVec::from_parts(
+            &ctx,
+            vec![vec![Row::dense(0, vec![1.0, 2.0]), Row::dense(1, vec![3.0, 4.0])]],
+        )
+        .unwrap();
+        let dense = Dataset::new(Schema::positional(2), rows);
+        assert!(dense.is_all_dense());
+        assert!(ensure_dense(&dense, "SPIF").is_ok());
+    }
 }

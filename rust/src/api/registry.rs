@@ -1,19 +1,24 @@
 //! String → factory registry of detectors: the single lookup behind
-//! `sparx detect --method …` and any other name-driven entry point.
+//! `sparx detect --method …` and any other name-driven entry point —
+//! plus the artifact side of the lifecycle: [`load`] / [`load_bytes`]
+//! read a serialized [`ModelArtifact`] header and dispatch to the right
+//! detector's deserializer, returning a ready-to-score
+//! [`FittedModel`](super::FittedModel).
 //!
 //! Each factory consumes a [`DetectorSpec`] — the flag-level description
 //! of a run — applies its method's defaults for unset fields, validates,
 //! and returns the boxed [`Detector`].
 
-use crate::baselines::dbscout::DbscoutDetector;
+use crate::baselines::dbscout::{DbscoutDetector, FittedDbscout};
 use crate::baselines::spif::SpifDetector;
 use crate::baselines::xstream::XStreamDetector;
-use crate::baselines::{DbscoutParams, SpifParams, XStreamParams};
+use crate::baselines::{DbscoutParams, Spif, SpifParams, XStream, XStreamParams};
 use crate::sparx::ExecMode;
 
-use super::builder::{Backend, SparxBuilder};
+use super::artifact::ModelArtifact;
+use super::builder::{Backend, FittedSparx, SparxBuilder};
 use super::error::{Result, SparxError};
-use super::Detector;
+use super::{Detector, FittedModel};
 
 /// Flag-level description of a detector run. `None` fields fall back to
 /// the method's own defaults, so one spec can configure any detector.
@@ -89,6 +94,38 @@ pub fn build(name: &str, spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
                 .map(|s| format!(" — did you mean {s:?}?"))
                 .unwrap_or_default();
             Err(SparxError::UnknownDetector(format!("{name:?} (expected {names}){hint}")))
+        }
+    }
+}
+
+/// Load a fitted model from an artifact file — the read half of the
+/// fit → save/load → score/serve lifecycle. Typed failures: missing /
+/// unreadable file → `Io`, corrupt / truncated / wrong-version content →
+/// `MissingArtifact`, a well-framed artifact naming an unregistered
+/// detector → `UnknownDetector`, blocks that don't decode →
+/// `InvalidParams`. Never panics.
+pub fn load(path: &str) -> Result<Box<dyn FittedModel>> {
+    from_artifact(&ModelArtifact::load(path)?)
+}
+
+/// [`load`] from in-memory bytes.
+pub fn load_bytes(bytes: &[u8]) -> Result<Box<dyn FittedModel>> {
+    from_artifact(&ModelArtifact::from_bytes(bytes)?)
+}
+
+/// Dispatch a parsed artifact to its detector's deserializer.
+pub fn from_artifact(art: &ModelArtifact) -> Result<Box<dyn FittedModel>> {
+    match art.detector.as_str() {
+        "sparx" => Ok(Box::new(FittedSparx::from_artifact(art)?)),
+        "xstream" => Ok(Box::new(XStream::from_artifact(art)?)),
+        "spif" => Ok(Box::new(Spif::from_artifact(art)?)),
+        "dbscout" => Ok(Box::new(FittedDbscout::from_artifact(art)?)),
+        other => {
+            let names = detector_names().join("|");
+            Err(SparxError::UnknownDetector(format!(
+                "artifact was written by {other:?}, which this build does not register \
+                 (known: {names})"
+            )))
         }
     }
 }

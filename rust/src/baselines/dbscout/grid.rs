@@ -3,10 +3,12 @@
 
 use std::collections::HashMap;
 
+use crate::api::artifact::{self, ModelArtifact};
 use crate::api::{self, Detector, FittedModel, SparxError};
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{ClusterContext, Result};
 use crate::data::Dataset;
+use crate::util::codec::{Decoder, Encoder};
 use crate::util::SizeOf;
 
 #[derive(Debug, Clone)]
@@ -110,10 +112,10 @@ impl Dbscout {
         let occupied_cells = counts.len();
 
         // Pass 2 (driver + workers): classify cells.
-        let dense: Vec<bool>;
         let mut outlier_cells: HashMap<Cell, bool> = HashMap::with_capacity(counts.len());
         let cells: Vec<(&Cell, u32)> = counts.iter().map(|(c, &n)| (c, n)).collect();
-        dense = cells.iter().map(|&(_, n)| n as usize >= params.min_pts).collect();
+        let dense: Vec<bool> =
+            cells.iter().map(|&(_, n)| n as usize >= params.min_pts).collect();
         let dense_cells = dense.iter().filter(|&&b| b).count();
         let query_cells = occupied_cells - dense_cells;
         ctx.check_deadline()?;
@@ -308,6 +310,42 @@ impl FittedDbscout {
     pub fn eps(&self) -> f64 {
         self.params.eps
     }
+
+    fn encode_params(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        enc.put_usize(self.params.min_pts);
+        enc.put_usize(self.params.cost.literal_dim_max);
+        enc.put_f64(self.params.cost.secs_per_unit);
+        enc.put_f64(self.params.cost.bytes_per_unit);
+        enc.into_bytes()
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        enc.put_f64(self.params.eps);
+        enc.into_bytes()
+    }
+
+    /// Rehydrate from an artifact. DBSCOUT is transductive, so the whole
+    /// fitted state is the resolved eps (the grid rebuilds per scoring
+    /// pass) plus the grid parameters.
+    pub fn from_artifact(art: &ModelArtifact) -> api::Result<FittedDbscout> {
+        let blk = |e| artifact::block_err("dbscout", e);
+        let mut dec = Decoder::new(&art.params);
+        let min_pts = dec.usize().map_err(blk)?;
+        let cost = CostModel {
+            literal_dim_max: dec.usize().map_err(blk)?,
+            secs_per_unit: dec.f64().map_err(blk)?,
+            bytes_per_unit: dec.f64().map_err(blk)?,
+        };
+        dec.finish().map_err(blk)?;
+        let mut dec = Decoder::new(&art.payload);
+        let eps = dec.f64().map_err(blk)?;
+        dec.finish().map_err(blk)?;
+        let params = DbscoutParams { eps, min_pts, cost };
+        params.validate().map_err(SparxError::InvalidParams)?;
+        Ok(FittedDbscout { params })
+    }
 }
 
 impl FittedModel for FittedDbscout {
@@ -325,9 +363,14 @@ impl FittedModel for FittedDbscout {
             .collect())
     }
 
-    /// No trained state: the grid is rebuilt per scoring pass.
+    fn to_artifact(&self) -> api::Result<ModelArtifact> {
+        Ok(ModelArtifact::new("dbscout", self.encode_params(), self.encode_payload()))
+    }
+
+    /// The whole fitted state is the resolved eps — 8 payload bytes; the
+    /// grid itself is rebuilt per scoring pass.
     fn model_bytes(&self) -> usize {
-        0
+        self.encode_payload().len()
     }
 }
 

@@ -1,10 +1,12 @@
 //! SPIF forest: model-parallel fit with the per-tree subsample shuffle,
 //! data-parallel scoring with a broadcast forest.
 
+use crate::api::artifact::{self, ModelArtifact};
 use crate::api::{self, Detector, FittedModel, SparxError};
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{pool, ClusterContext, DistVec, Result};
 use crate::data::{Dataset, Row};
+use crate::util::codec::{CodecResult, Decoder, Encoder};
 use crate::util::{Rng, SizeOf};
 
 use super::tree::{c_factor, ITree};
@@ -117,8 +119,56 @@ impl Spif {
         scored.collect(ctx)
     }
 
+    /// Deployable model footprint: the serialized artifact payload (the
+    /// tree pool).
     pub fn model_bytes(&self) -> usize {
-        self.trees.iter().map(SizeOf::size_of).sum()
+        self.encode_payload().len()
+    }
+
+    fn encode_params(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        enc.put_usize(self.params.num_trees);
+        enc.put_usize(self.params.max_depth);
+        enc.put_f64(self.params.sample_rate);
+        enc.put_u64(self.params.seed);
+        enc.into_bytes()
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        enc.put_u32(self.trees.len() as u32);
+        for tree in &self.trees {
+            tree.encode(&mut enc);
+        }
+        enc.into_bytes()
+    }
+
+    /// Rehydrate a fitted forest from an artifact's blocks.
+    pub fn from_artifact(art: &ModelArtifact) -> api::Result<Spif> {
+        let blk = |e| artifact::block_err("spif", e);
+        let mut dec = Decoder::new(&art.params);
+        let params = SpifParams {
+            num_trees: dec.usize().map_err(blk)?,
+            max_depth: dec.usize().map_err(blk)?,
+            sample_rate: dec.f64().map_err(blk)?,
+            seed: dec.u64().map_err(blk)?,
+        };
+        dec.finish().map_err(blk)?;
+        params.validate().map_err(SparxError::InvalidParams)?;
+        let mut dec = Decoder::new(&art.payload);
+        let t = dec.u32().map_err(blk)? as usize;
+        if t != params.num_trees {
+            return Err(blk(format!(
+                "payload has {t} trees, params declare {}",
+                params.num_trees
+            )));
+        }
+        let trees = (0..t)
+            .map(|_| ITree::decode(&mut dec))
+            .collect::<CodecResult<Vec<_>>>()
+            .map_err(blk)?;
+        dec.finish().map_err(blk)?;
+        Ok(Spif { params, trees })
     }
 }
 
@@ -159,7 +209,22 @@ impl FittedModel for Spif {
 
     fn score(&self, ctx: &ClusterContext, data: &Dataset) -> api::Result<Vec<(u64, f64)>> {
         api::ensure_dense(data, "SPIF")?;
+        // with the fit/score split the scored dataset can be narrower
+        // than the fitted one — fail typed before path_length indexes
+        // past a row's end
+        if let Some(f) = self.trees.iter().filter_map(ITree::max_feature).max() {
+            if data.dim() <= f as usize {
+                return Err(SparxError::InvalidParams(format!(
+                    "model splits on feature {f} but the dataset has only {} columns",
+                    data.dim()
+                )));
+            }
+        }
         Ok(self.score_dataset(ctx, data)?)
+    }
+
+    fn to_artifact(&self) -> api::Result<ModelArtifact> {
+        Ok(ModelArtifact::new("spif", self.encode_params(), self.encode_payload()))
     }
 
     fn model_bytes(&self) -> usize {

@@ -1,6 +1,7 @@
 //! Isolation tree (Liu, Ting & Zhou 2008): extremely randomized binary
 //! partitioning. Anomalies isolate in few splits ⇒ short path length.
 
+use crate::util::codec::{CodecResult, Decoder, Encoder};
 use crate::util::{Rng, SizeOf};
 
 /// Flat node-array isolation tree over dense f32 rows.
@@ -136,6 +137,70 @@ impl ITree {
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
     }
+
+    /// Serialize the flat node array (model-artifact payload).
+    pub fn encode(&self, enc: &mut Encoder) {
+        enc.put_usize(self.sample_size);
+        enc.put_u32(self.nodes.len() as u32);
+        for node in &self.nodes {
+            match node {
+                Node::Split(f, thr, l, r) => {
+                    enc.put_u8(0);
+                    enc.put_u32(*f);
+                    enc.put_f32(*thr);
+                    enc.put_u32(*l);
+                    enc.put_u32(*r);
+                }
+                Node::Leaf { size } => {
+                    enc.put_u8(1);
+                    enc.put_u32(*size);
+                }
+            }
+        }
+    }
+
+    /// Deserialize a tree, validating child indices so a malformed
+    /// artifact can never send `path_length` out of bounds — children
+    /// must point strictly *forward* (as `fit` builds them), which also
+    /// rules out cycles that would hang traversal.
+    pub fn decode(dec: &mut Decoder) -> CodecResult<ITree> {
+        let sample_size = dec.usize()?;
+        let n = dec.u32()? as usize;
+        if n == 0 {
+            return Err("tree has no nodes".into());
+        }
+        let mut nodes = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            nodes.push(match dec.u8()? {
+                0 => Node::Split(dec.u32()?, dec.f32()?, dec.u32()?, dec.u32()?),
+                1 => Node::Leaf { size: dec.u32()? },
+                other => return Err(format!("unknown tree node tag {other}")),
+            });
+        }
+        for (i, node) in nodes.iter().enumerate() {
+            if let Node::Split(_, _, l, r) = node {
+                let (l, r) = (*l as usize, *r as usize);
+                if l >= n || r >= n || l <= i || r <= i {
+                    return Err(format!(
+                        "tree child indices must point forward: node {i} -> {l}/{r} of {n}"
+                    ));
+                }
+            }
+        }
+        Ok(ITree { nodes, sample_size })
+    }
+
+    /// Largest feature index any split consults (None for a single-leaf
+    /// tree). Scoring guards input dimensionality with this.
+    pub fn max_feature(&self) -> Option<u32> {
+        self.nodes
+            .iter()
+            .filter_map(|node| match node {
+                Node::Split(f, _, _, _) => Some(*f),
+                Node::Leaf { .. } => None,
+            })
+            .max()
+    }
 }
 
 #[cfg(test)]
@@ -201,5 +266,40 @@ mod tests {
         let mut rng = Rng::new(4);
         let t = ITree::fit(&data, 8, &mut rng);
         assert_eq!(t.path_length(&[0.5]), 0.0);
+    }
+
+    #[test]
+    fn codec_round_trips_path_lengths_exactly() {
+        let mut rng = Rng::new(9);
+        let data = blob(&mut rng, 300, 3, 0.0);
+        let t = ITree::fit(&data, 10, &mut rng);
+        let mut enc = Encoder::new();
+        t.encode(&mut enc);
+        let bytes = enc.into_bytes();
+        let back = ITree::decode(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(back.num_nodes(), t.num_nodes());
+        assert_eq!(back.sample_size, t.sample_size);
+        for p in &data[..10] {
+            assert_eq!(t.path_length(p), back.path_length(p));
+        }
+        // truncated input is an error, not a panic
+        assert!(ITree::decode(&mut Decoder::new(&bytes[..bytes.len() / 2])).is_err());
+    }
+
+    /// A split whose children point at itself (a cycle) must be rejected
+    /// at decode — otherwise `path_length` would hang on a crafted
+    /// artifact that passes the file checksum.
+    #[test]
+    fn decode_rejects_non_forward_children() {
+        let mut enc = Encoder::new();
+        enc.put_usize(10); // sample_size
+        enc.put_u32(1); // node count
+        enc.put_u8(0); // Split
+        enc.put_u32(0); // feature
+        enc.put_f32(0.5); // threshold
+        enc.put_u32(0); // left -> itself
+        enc.put_u32(0); // right -> itself
+        let bytes = enc.into_bytes();
+        assert!(ITree::decode(&mut Decoder::new(&bytes)).is_err());
     }
 }

@@ -6,12 +6,13 @@
 //! Everything runs on one thread over plain `Vec`s: projection (Eq. 2),
 //! chain fitting with point-wise CMS inserts, scoring (Eq. 5).
 
+use crate::api::artifact::{self, ModelArtifact};
 use crate::api::{self, Detector, FittedModel, SparxError};
 use crate::cluster::ClusterContext;
 use crate::data::{Dataset, Row};
 use crate::sparx::plan::chain_rng;
 use crate::sparx::{ChainParams, CountMinSketch, Projector, ScoreMode, SparxModel, TrainedChain};
-use crate::util::SizeOf;
+use crate::util::codec::{Decoder, Encoder};
 
 #[derive(Debug, Clone)]
 pub struct XStreamParams {
@@ -148,9 +149,56 @@ impl XStream {
             .collect()
     }
 
-    /// Driver-resident model footprint (chains + CMS counts).
+    /// Deployable model footprint: the serialized artifact payload
+    /// (projector + Δmax + chains with their CMS counts).
     pub fn model_bytes(&self) -> usize {
-        self.chains.iter().map(SizeOf::size_of).sum()
+        self.encode_payload().len()
+    }
+
+    fn encode_params(&self) -> Vec<u8> {
+        let p = &self.params;
+        let mut enc = Encoder::new();
+        enc.put_usize(p.k);
+        enc.put_usize(p.num_chains);
+        enc.put_usize(p.depth);
+        enc.put_usize(p.cms_rows);
+        enc.put_usize(p.cms_cols);
+        enc.put_f64(p.density);
+        artifact::encode_score_mode(&mut enc, p.score_mode);
+        enc.put_u64(p.seed);
+        enc.into_bytes()
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut enc = Encoder::new();
+        artifact::encode_chain_ensemble(&mut enc, &self.projector, &self.deltamax, &self.chains);
+        enc.into_bytes()
+    }
+
+    /// Rehydrate a fitted xStream from an artifact's blocks.
+    pub fn from_artifact(art: &ModelArtifact) -> api::Result<XStream> {
+        let blk = |e| artifact::block_err("xstream", e);
+        let mut dec = Decoder::new(&art.params);
+        let params = XStreamParams {
+            k: dec.usize().map_err(blk)?,
+            num_chains: dec.usize().map_err(blk)?,
+            depth: dec.usize().map_err(blk)?,
+            cms_rows: dec.usize().map_err(blk)?,
+            cms_cols: dec.usize().map_err(blk)?,
+            density: dec.f64().map_err(blk)?,
+            score_mode: artifact::decode_score_mode(&mut dec).map_err(blk)?,
+            seed: dec.u64().map_err(blk)?,
+        };
+        dec.finish().map_err(blk)?;
+        params.validate().map_err(SparxError::InvalidParams)?;
+        let (projector, deltamax, chains) = artifact::decode_chain_ensemble(
+            &art.payload,
+            params.k,
+            params.num_chains,
+            params.depth,
+        )
+        .map_err(blk)?;
+        Ok(XStream { params, projector, deltamax, chains })
     }
 }
 
@@ -190,8 +238,13 @@ impl FittedModel for XStream {
     }
 
     fn score(&self, ctx: &ClusterContext, data: &Dataset) -> api::Result<Vec<(u64, f64)>> {
+        api::check_projector_input(&self.projector, data)?;
         let rows = data.rows.collect(ctx)?;
         Ok(XStream::score(self, &rows))
+    }
+
+    fn to_artifact(&self) -> api::Result<ModelArtifact> {
+        Ok(ModelArtifact::new("xstream", self.encode_params(), self.encode_payload()))
     }
 
     fn model_bytes(&self) -> usize {

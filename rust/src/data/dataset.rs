@@ -5,7 +5,7 @@
 use crate::cluster::{ClusterContext, DistVec, Result};
 use crate::util::SizeOf;
 
-use super::row::Row;
+use super::row::{Features, Row};
 
 /// Column schema for dense/sparse encodings. Feature *names* are what the
 /// Eq. (2) hash family consumes; for positional encodings the name of
@@ -39,11 +39,24 @@ impl SizeOf for Schema {
 pub struct Dataset {
     pub schema: Schema,
     pub rows: DistVec<Row>,
+    /// Cached at construction: every row of every partition is densely
+    /// encoded. The dense-only baselines' input guard
+    /// (`api::ensure_dense`) reads this flag instead of probing rows, so
+    /// a mixed partition cannot slip through on a lucky first row.
+    all_dense: bool,
 }
 
 impl Dataset {
     pub fn new(schema: Schema, rows: DistVec<Row>) -> Self {
-        Dataset { schema, rows }
+        let all_dense = (0..rows.num_parts()).all(|p| {
+            rows.part(p).iter().all(|r| matches!(r.features, Features::Dense(_)))
+        });
+        Dataset { schema, rows, all_dense }
+    }
+
+    /// Whether every row (across all partitions) is densely encoded.
+    pub fn is_all_dense(&self) -> bool {
+        self.all_dense
     }
 
     pub fn len(&self) -> usize {
@@ -68,7 +81,7 @@ impl Dataset {
         })?;
         let schema =
             Schema::named(cols.iter().map(|&c| self.schema.names[c].clone()).collect());
-        Ok(Dataset { schema, rows })
+        Ok(Dataset::new(schema, rows))
     }
 }
 
@@ -99,6 +112,32 @@ mod tests {
         let s = Schema::positional(3);
         assert_eq!(s.names, vec!["f0", "f1", "f2"]);
         assert_eq!(s.dim(), 3);
+    }
+
+    #[test]
+    fn density_flag_tracks_every_row_of_every_partition() {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let rows = DistVec::from_parts(
+            &ctx,
+            vec![
+                vec![Row::dense(0, vec![1.0])],
+                // dense first row, mixed straggler behind it
+                vec![
+                    Row::dense(1, vec![2.0]),
+                    Row::mixed(2, vec![("a".into(), super::super::row::Value::Num(1.0))]),
+                ],
+            ],
+        )
+        .unwrap();
+        assert!(!Dataset::new(Schema::positional(1), rows).is_all_dense());
+
+        let ctx2 = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let rows = DistVec::from_vec(
+            &ctx2,
+            vec![Row::dense(0, vec![1.0]), Row::dense(1, vec![2.0])],
+        )
+        .unwrap();
+        assert!(Dataset::new(Schema::positional(1), rows).is_all_dense());
     }
 
     #[test]

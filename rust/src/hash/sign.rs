@@ -82,6 +82,12 @@ impl SignHasher {
     pub fn seed(&self) -> u32 {
         self.seed
     }
+
+    /// The non-zero probability this hasher was built with (needed to
+    /// reconstruct the family when deserializing a model artifact).
+    pub fn density(&self) -> f64 {
+        self.density
+    }
 }
 
 /// Materialise the implicit projection matrix R[D,K] for a *fixed* dense

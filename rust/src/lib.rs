@@ -18,31 +18,42 @@
 //! See `DESIGN.md` for the system inventory and the paper→repo experiment
 //! index, and `EXPERIMENTS.md` for measured results.
 //!
-//! ## Quickstart
+//! ## Quickstart: the model lifecycle
 //!
-//! Every detector — Sparx and the baselines alike — is driven through the
-//! unified [`api`] contract: build a [`api::Detector`] (typed builder or
-//! string registry), `fit` it, and `score` with the returned
-//! [`api::FittedModel`]. All entry points return [`api::Result`] with the
-//! crate-wide [`api::SparxError`] taxonomy.
+//! Every detector — Sparx and the baselines alike — is driven through
+//! the unified [`api`] contract, organised around a three-stage
+//! lifecycle: **fit** a [`api::Detector`] (typed builder or string
+//! registry) into a [`api::FittedModel`]; **save/load** it as a
+//! versioned binary artifact ([`api::ModelArtifact`]); **score/serve**
+//! batches or §3.5 δ-update streams from the loaded model. All entry
+//! points return [`api::Result`] with the crate-wide [`api::SparxError`]
+//! taxonomy, and a loaded model scores **bit-identically** to the
+//! in-memory one.
 //!
 //! ```no_run
-//! use sparx::api::{Detector, FittedModel, SparxBuilder};
+//! use sparx::api::{registry, Detector, FittedModel, SparxBuilder};
 //! use sparx::config::presets;
 //! use sparx::data::generators::GisetteGen;
 //!
 //! fn main() -> sparx::api::Result<()> {
 //!     let cluster = presets::config_mod().build();
 //!     let data = GisetteGen::default().generate(&cluster)?;
+//!     // fit on the cluster
 //!     let detector = SparxBuilder::new().chains(50).depth(10).sample_rate(0.1).build()?;
 //!     let model = detector.fit(&cluster, &data.dataset)?;
-//!     let scores = model.score(&cluster, &data.dataset)?; // (id, outlierness)
-//!     println!("scored {} points with a {}B model", scores.len(), model.model_bytes());
+//!     // save: the artifact payload is the whole deployable model
+//!     model.to_artifact()?.save("model.sparx")?;
+//!     // load (e.g. on a deployment node) and score a batch
+//!     let loaded = registry::load("model.sparx")?;
+//!     let scores = loaded.score(&cluster, &data.dataset)?; // (id, outlierness)
+//!     println!("scored {} points with a {}B model", scores.len(), loaded.model_bytes());
+//!     // serve the evolving stream (§3.5) in constant time per update
+//!     let mut scorer = loaded.stream_scorer(4096)?;
 //!     Ok(())
 //! }
 //! ```
 //!
-//! The same run, name-driven through the registry (what `sparx detect
+//! Name-driven construction goes through the registry (what `sparx fit
 //! --method …` does; swap the string for `"xstream"`, `"spif"` or
 //! `"dbscout"` to run a baseline through the identical codepath):
 //!
@@ -62,6 +73,12 @@
 //!     Ok(())
 //! }
 //! ```
+//!
+//! On the command line the same lifecycle is `sparx fit --method sparx
+//! --model-out m.sparx`, then `sparx score --model m.sparx`, then
+//! `sparx serve --model m.sparx` (⟨ID, F, δ⟩ triples from stdin or
+//! `--updates file`). See `rust/examples/model_lifecycle.rs` for the
+//! library version end to end.
 
 pub mod api;
 pub mod baselines;
@@ -75,7 +92,9 @@ pub mod runtime;
 pub mod sparx;
 pub mod util;
 
-pub use api::{Backend, Detector, DetectorSpec, FittedModel, SparxBuilder, SparxError};
+pub use api::{
+    Backend, Detector, DetectorSpec, FittedModel, ModelArtifact, SparxBuilder, SparxError,
+};
 pub use cluster::{ClusterConfig, ClusterContext, ClusterError};
 pub use sparx::{SparxModel, SparxParams};
 

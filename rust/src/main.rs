@@ -1,36 +1,50 @@
 //! `sparx` — CLI launcher for the Sparx reproduction.
 //!
-//! Every command drives the library through the unified
+//! The CLI is organised around the model lifecycle — **fit** a model on
+//! the cluster, **save** it as a versioned artifact, **load** it on a
+//! deployment node to **score** batches or **serve** an evolving stream
+//! (§3.5: train once, ship the O(rwLM) model, score updates in constant
+//! time). Every command drives the library through the unified
 //! [`sparx::api::Detector`] contract; errors are typed
 //! ([`sparx::api::SparxError`]) and map to exit codes: `2` for usage /
 //! validation problems, `1` for runtime failures (MEM ERR, TIMEOUT,
-//! missing artifacts, I/O). Unrecognized flags and misspelled
+//! missing/corrupt artifacts, I/O). Unrecognized flags and misspelled
 //! subcommands are rejected with a suggestion instead of being silently
 //! ignored.
 //!
 //! Subcommands (hand-rolled parser — the offline build has no clap):
 //!
 //! ```text
-//! sparx detect   --method sparx|xstream|spif|dbscout
+//! sparx fit      --method sparx|xstream|spif|dbscout --model-out m.sparx
 //!                [--dataset gisette|osm|spamurl] [--config gen|mod|local]
 //!                [--components M] [--chains M] [--depth L] [--rate R] [--k K]
 //!                [--eps E] [--min-pts P] [--scale S] [--seed N]
 //!                [--backend native|pjrt] [--exec fused|per-chain]
+//! sparx score    --model m.sparx [--dataset gisette|osm|spamurl]
+//!                [--config gen|mod|local] [--scale S] [--seed N]
 //!                [--out scores.csv]
+//! sparx serve    --model m.sparx [--updates FILE|-] [--count N]
+//!                [--cache N] [--seed N]        # ⟨ID, F, δ⟩ loop, §3.5
+//! sparx detect   --method … [fit flags] [--out scores.csv]   # fit+score in one
 //! sparx experiment <table2|table3|table4|fig2|fig3|fig4|fig5|fig6|all>
 //!                [--scale S] [--seed N] [--out EXPERIMENTS_RESULTS.md]
-//! sparx stream   [--updates N] [--cache N] [--seed N]   # §3.5 demo
+//! sparx stream   [--updates N] [--cache N] [--seed N]   # synthetic §3.5 demo
 //! sparx generate --dataset osm --out points.csv [--scale S] [--seed N]
 //! sparx info                                    # artifacts + presets
 //! ```
+//!
+//! `serve` reads one update triple per line (`#` comments and blank
+//! lines skipped): `ID FEATURE δ` for numeric increments, and
+//! `ID FEATURE old->new` (empty `old` for a newly arising value) for
+//! categorical substitutions.
 
 use std::collections::HashMap;
 use std::str::FromStr;
 
-use sparx::api::{registry, Backend, Detector as _, DetectorSpec, FittedModel as _, SparxError};
+use sparx::api::{registry, Backend, Detector as _, DetectorSpec, FittedModel, SparxError};
 use sparx::config::presets;
 use sparx::data::generators::{GisetteGen, OsmGen, SpamUrlGen};
-use sparx::data::{LabeledDataset, StreamGen};
+use sparx::data::{LabeledDataset, StreamGen, UpdateTriple};
 use sparx::experiments::{self, align_scores};
 use sparx::metrics::{RankMetrics, ResourceReport};
 use sparx::runtime::{ArtifactManifest, PjrtEngine};
@@ -156,55 +170,66 @@ fn make_dataset(
     }
 }
 
-// --------------------------------------------------------------- detect
+// ------------------------------------------------- detect / fit shared
+
+/// The hyperparameter + data flags shared by `detect` and `fit`.
+const HYPER_FLAGS: [&str; 14] = [
+    "method", "dataset", "config", "components", "chains", "depth", "rate", "k", "eps",
+    "min-pts", "scale", "seed", "backend", "exec",
+];
 
 const DETECT_FLAGS: [&str; 15] = [
     "method", "dataset", "config", "components", "chains", "depth", "rate", "k", "eps",
     "min-pts", "scale", "seed", "backend", "exec", "out",
 ];
 
-fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
-    check_flags("detect", flags, &DETECT_FLAGS)?;
-    let method = flags.get("method").cloned().unwrap_or_else(|| "sparx".into());
-    // explicitly-passed flags the chosen method would ignore are errors,
-    // not silent no-ops (the method-level cousin of check_flags)
-    let method_flags: &[&str] = match method.as_str() {
+const FIT_FLAGS: [&str; 15] = [
+    "method", "dataset", "config", "components", "chains", "depth", "rate", "k", "eps",
+    "min-pts", "scale", "seed", "backend", "exec", "model-out",
+];
+
+/// Explicitly-passed flags the chosen method would ignore are errors,
+/// not silent no-ops (the method-level cousin of `check_flags`).
+/// `extra_common` names the command's own non-hyperparameter flags.
+fn check_method_flags(
+    method: &str,
+    flags: &HashMap<String, String>,
+    extra_common: &[&str],
+) -> CliResult {
+    let method_flags: &[&str] = match method {
         "sparx" => &["chains", "components", "depth", "rate", "k", "exec", "backend"],
         "xstream" => &["chains", "components", "depth", "k"],
         "spif" => &["chains", "components", "depth", "rate"],
         "dbscout" => &["eps", "min-pts"],
         // unknown method: skip so the registry's UnknownDetector error
         // (with its typo suggestion) surfaces instead
-        _ => &DETECT_FLAGS,
+        _ => &HYPER_FLAGS,
     };
-    let common = ["method", "dataset", "config", "scale", "seed", "out"];
+    let common = ["method", "dataset", "config", "scale", "seed"];
     for key in flags.keys() {
-        if !common.contains(&key.as_str()) && !method_flags.contains(&key.as_str()) {
+        if !common.contains(&key.as_str())
+            && !extra_common.contains(&key.as_str())
+            && !method_flags.contains(&key.as_str())
+        {
             return Err(usage_err(format!(
                 "--{key} does not apply to --method {method} (applicable: {})",
                 method_flags.iter().map(|f| format!("--{f}")).collect::<Vec<_>>().join(" ")
             )));
         }
     }
-    let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "gisette".into());
-    let scale = flag_or(flags, "scale", 0.5)?;
-    let seed: Option<u64> = flag_opt(flags, "seed")?;
-    let cfg_name = flags.get("config").cloned().unwrap_or_else(|| "local".into());
-    let mut ctx = presets::by_name(&cfg_name)
-        .ok_or_else(|| usage_err(format!("unknown config {cfg_name:?} (gen|mod|local)")))?
-        .build();
-    let ld = make_dataset(&dataset, scale, seed, &ctx)?;
-    println!(
-        "dataset={dataset} n={} d={} outliers={} ({:.3}%)",
-        ld.dataset.len(),
-        ld.dataset.dim(),
-        ld.outlier_count(),
-        100.0 * ld.outlier_rate()
-    );
-    ctx.reset();
+    Ok(())
+}
+
+/// Fold the hyperparameter flags into a [`DetectorSpec`].
+fn build_spec(
+    method: &str,
+    dataset: &str,
+    seed: Option<u64>,
+    flags: &HashMap<String, String>,
+) -> Result<DetectorSpec, SparxError> {
     // the paper's per-dataset projection defaults: OSM stays raw 2-d,
     // SpamURL hashes to K=100, Gisette to K=50
-    let default_k = match dataset.as_str() {
+    let default_k = match dataset {
         "osm" => 0,
         "spamurl" => 100,
         _ => 50,
@@ -236,7 +261,7 @@ fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
     } else {
         (flag_opt(flags, "k")?, flag_opt(flags, "rate")?)
     };
-    let spec = DetectorSpec {
+    Ok(DetectorSpec {
         k,
         components,
         depth: flag_opt(flags, "depth")?,
@@ -244,10 +269,50 @@ fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
         seed,
         exec_mode,
         backend,
-        pjrt_variant: Some(dataset.clone()),
+        pjrt_variant: Some(dataset.to_string()),
         eps: flag_opt(flags, "eps")?,
         min_pts: flag_opt(flags, "min-pts")?,
-    };
+    })
+}
+
+/// Build the cluster context named by `--config` (default `local`).
+fn make_ctx(flags: &HashMap<String, String>) -> Result<ClusterContext, SparxError> {
+    let cfg_name = flags.get("config").cloned().unwrap_or_else(|| "local".into());
+    Ok(presets::by_name(&cfg_name)
+        .ok_or_else(|| usage_err(format!("unknown config {cfg_name:?} (gen|mod|local)")))?
+        .build())
+}
+
+/// Generate the dataset named by the flags and print its shape line.
+fn make_flagged_dataset(
+    flags: &HashMap<String, String>,
+    ctx: &ClusterContext,
+) -> Result<(String, LabeledDataset), SparxError> {
+    let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "gisette".into());
+    let scale = flag_or(flags, "scale", 0.5)?;
+    let seed: Option<u64> = flag_opt(flags, "seed")?;
+    let ld = make_dataset(&dataset, scale, seed, ctx)?;
+    println!(
+        "dataset={dataset} n={} d={} outliers={} ({:.3}%)",
+        ld.dataset.len(),
+        ld.dataset.dim(),
+        ld.outlier_count(),
+        100.0 * ld.outlier_rate()
+    );
+    Ok((dataset, ld))
+}
+
+// --------------------------------------------------------------- detect
+
+fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
+    check_flags("detect", flags, &DETECT_FLAGS)?;
+    let method = flags.get("method").cloned().unwrap_or_else(|| "sparx".into());
+    check_method_flags(&method, flags, &["out"])?;
+    let seed: Option<u64> = flag_opt(flags, "seed")?;
+    let mut ctx = make_ctx(flags)?;
+    let (dataset, ld) = make_flagged_dataset(flags, &ctx)?;
+    ctx.reset();
+    let spec = build_spec(&method, &dataset, seed, flags)?;
     let det = registry::build(&method, &spec)?;
     let model = det.fit(&ctx, &ld.dataset)?;
     let scores = model.score(&ctx, &ld.dataset)?;
@@ -257,8 +322,8 @@ fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
     println!(
         "{}[{},{}]: AUROC={:.3} AUPRC={:.3} F1={:.3} (model {}B)",
         det.name(),
-        backend.tag(),
-        exec_mode.tag(),
+        spec.backend.tag(),
+        spec.exec_mode.tag(),
         met.auroc,
         met.auprc,
         met.f1,
@@ -268,6 +333,187 @@ fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
     if let Some(out) = flags.get("out") {
         sparx::data::loader::write_scores_csv(out, &scores, &ld.labels)?;
         println!("scores written to {out}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fit
+
+fn cmd_fit(flags: &HashMap<String, String>) -> CliResult {
+    check_flags("fit", flags, &FIT_FLAGS)?;
+    let model_out = flags
+        .get("model-out")
+        .cloned()
+        .ok_or_else(|| usage_err("fit requires --model-out <file>".into()))?;
+    let method = flags.get("method").cloned().unwrap_or_else(|| "sparx".into());
+    check_method_flags(&method, flags, &["model-out"])?;
+    let seed: Option<u64> = flag_opt(flags, "seed")?;
+    let mut ctx = make_ctx(flags)?;
+    let (dataset, ld) = make_flagged_dataset(flags, &ctx)?;
+    ctx.reset();
+    let spec = build_spec(&method, &dataset, seed, flags)?;
+    let det = registry::build(&method, &spec)?;
+    let t0 = std::time::Instant::now();
+    let model = det.fit(&ctx, &ld.dataset)?;
+    let fit_secs = t0.elapsed().as_secs_f64();
+    let artifact = model.to_artifact()?;
+    let bytes = artifact.to_bytes();
+    let (payload, total) = (artifact.payload.len(), bytes.len());
+    std::fs::write(&model_out, bytes)?;
+    println!(
+        "fitted {} in {fit_secs:.2}s — model payload {payload}B \
+         ({total}B file with header+checksum)",
+        det.name()
+    );
+    println!("{}", ResourceReport::from_ctx(&ctx).summary());
+    println!("model written to {model_out} — score it with `sparx score --model {model_out}`");
+    Ok(())
+}
+
+// ---------------------------------------------------------------- score
+
+fn cmd_score(flags: &HashMap<String, String>) -> CliResult {
+    check_flags("score", flags, &["model", "dataset", "config", "scale", "seed", "out"])?;
+    let path = flags
+        .get("model")
+        .cloned()
+        .ok_or_else(|| usage_err("score requires --model <file>".into()))?;
+    let model = registry::load(&path)?;
+    println!("loaded {} model from {path} ({}B payload)", model.name(), model.model_bytes());
+    let mut ctx = make_ctx(flags)?;
+    let (_, ld) = make_flagged_dataset(flags, &ctx)?;
+    ctx.reset();
+    let t0 = std::time::Instant::now();
+    let scores = model.score(&ctx, &ld.dataset)?;
+    let score_secs = t0.elapsed().as_secs_f64();
+    let aligned = align_scores(&scores, ld.labels.len());
+    let met = RankMetrics::compute(&aligned, &ld.labels);
+    println!(
+        "{}: AUROC={:.3} AUPRC={:.3} F1={:.3} ({} points in {score_secs:.2}s)",
+        model.name(),
+        met.auroc,
+        met.auprc,
+        met.f1,
+        scores.len()
+    );
+    println!("{}", ResourceReport::from_ctx(&ctx).summary());
+    if let Some(out) = flags.get("out") {
+        sparx::data::loader::write_scores_csv(out, &scores, &ld.labels)?;
+        println!("scores written to {out}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- serve
+
+/// Parse one ⟨ID, F, δ⟩ line: `ID FEATURE δ` (numeric increment) or
+/// `ID FEATURE old->new` (categorical substitution, empty `old` for a
+/// newly arising value). Blank lines and `#` comments are skipped.
+fn parse_update_line(lineno: usize, line: &str) -> Result<Option<UpdateTriple>, SparxError> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let bad = |what: &str| {
+        usage_err(format!(
+            "update line {lineno}: {what} (expected `ID FEATURE δ` or `ID FEATURE old->new`)"
+        ))
+    };
+    let mut tok = line.split_whitespace();
+    let (Some(id_tok), Some(feature), Some(delta_tok), None) =
+        (tok.next(), tok.next(), tok.next(), tok.next())
+    else {
+        return Err(bad("expected exactly three whitespace-separated fields"));
+    };
+    let id: u64 = id_tok.parse().map_err(|_| bad(&format!("bad ID {id_tok:?}")))?;
+    if let Ok(delta) = delta_tok.parse::<f64>() {
+        return Ok(Some(UpdateTriple::Num { id, feature: feature.into(), delta }));
+    }
+    if let Some((old, new)) = delta_tok.split_once("->") {
+        if new.is_empty() {
+            return Err(bad("categorical update needs a non-empty new value"));
+        }
+        return Ok(Some(UpdateTriple::Cat {
+            id,
+            feature: feature.into(),
+            old: (!old.is_empty()).then(|| old.to_string()),
+            new: new.into(),
+        }));
+    }
+    Err(bad(&format!("third field {delta_tok:?} is neither a number nor old->new")))
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
+    check_flags("serve", flags, &["model", "updates", "count", "cache", "seed"])?;
+    let path = flags
+        .get("model")
+        .cloned()
+        .ok_or_else(|| usage_err("serve requires --model <file>".into()))?;
+    let cache = flag_or(flags, "cache", 4096usize)?;
+    let model = registry::load(&path)?;
+    println!(
+        "serving {} model from {path} ({}B payload, LRU cache {cache} ids)",
+        model.name(),
+        model.model_bytes()
+    );
+    let mut scorer = model.stream_scorer(cache)?;
+    let t0 = std::time::Instant::now();
+    let mut worst: Option<sparx::sparx::StreamScore> = None;
+    let mut track = |s: sparx::sparx::StreamScore| {
+        let more_outlying = match &worst {
+            None => true,
+            Some(w) => s.outlierness > w.outlierness,
+        };
+        if more_outlying {
+            worst = Some(s);
+        }
+    };
+    if let Some(src) = flags.get("updates") {
+        // --count/--seed only shape the synthetic stream; silently
+        // ignoring them alongside a real update source would break the
+        // CLI's no-ignored-flags rule
+        for inapplicable in ["count", "seed"] {
+            if flags.contains_key(inapplicable) {
+                return Err(usage_err(format!(
+                    "--{inapplicable} does not apply when --updates provides the stream"
+                )));
+            }
+        }
+        use std::io::BufRead;
+        let reader: Box<dyn BufRead> = if src == "-" {
+            Box::new(std::io::BufReader::new(std::io::stdin()))
+        } else {
+            Box::new(std::io::BufReader::new(std::fs::File::open(src)?))
+        };
+        for (i, line) in reader.lines().enumerate() {
+            if let Some(u) = parse_update_line(i + 1, &line?)? {
+                track(scorer.update(&u));
+            }
+        }
+    } else {
+        // no update source: synthesize an evolving stream against the
+        // model's own feature space (or a generic one)
+        let count = flag_or(flags, "count", 10_000usize)?;
+        let seed: Option<u64> = flag_opt(flags, "seed")?;
+        let names = match scorer.feature_names() {
+            Some(names) => names.to_vec(),
+            None => (0..64).map(|j| format!("f{j}")).collect(),
+        };
+        let mut gen = StreamGen::new(5000, names, seed.unwrap_or(42));
+        for _ in 0..count {
+            track(scorer.update(&gen.next_update()));
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let n = scorer.processed();
+    println!(
+        "processed {n} δ-updates in {dt:.3}s ({:.0} updates/s), cache {}/{cache}, {} evictions",
+        n as f64 / dt.max(1e-9),
+        scorer.cached_ids(),
+        scorer.evictions()
+    );
+    if let Some(w) = worst {
+        println!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness);
     }
     Ok(())
 }
@@ -381,7 +627,7 @@ fn cmd_generate(flags: &HashMap<String, String>) -> CliResult {
 fn cmd_info(flags: &HashMap<String, String>) -> CliResult {
     check_flags("info", flags, &[])?;
     println!("sparx — distributed outlier detection (KDD'22 reproduction)");
-    println!("\ndetectors (sparx detect --method …):");
+    println!("\ndetectors (sparx fit|detect --method …):");
     for name in registry::detector_names() {
         println!("  {name}");
     }
@@ -423,7 +669,8 @@ fn cmd_info(flags: &HashMap<String, String>) -> CliResult {
 
 // ----------------------------------------------------------------- main
 
-const COMMANDS: [&str; 5] = ["detect", "experiment", "stream", "generate", "info"];
+const COMMANDS: [&str; 8] =
+    ["fit", "score", "serve", "detect", "experiment", "stream", "generate", "info"];
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -441,6 +688,9 @@ fn main() {
         }
     };
     let result: CliResult = match pos.first().map(String::as_str) {
+        Some("fit") => no_positionals("fit").and_then(|()| cmd_fit(&flags)),
+        Some("score") => no_positionals("score").and_then(|()| cmd_score(&flags)),
+        Some("serve") => no_positionals("serve").and_then(|()| cmd_serve(&flags)),
         Some("detect") => no_positionals("detect").and_then(|()| cmd_detect(&flags)),
         Some("experiment") => cmd_experiment(&pos[1..], &flags),
         Some("stream") => no_positionals("stream").and_then(|()| cmd_stream(&flags)),

@@ -41,17 +41,32 @@ pub struct Projector {
     pub hashers: Vec<SignHasher>,
     /// Dense-schema sign matrix R[D,K], memoised once per job.
     dense_r: Option<Arc<Vec<f32>>>,
+    /// The feature names R was materialised from — kept so a serialized
+    /// model can rebuild the identical matrix at load time (the artifact
+    /// stores names, not the O(D·K) matrix).
+    schema_names: Option<Arc<Vec<String>>>,
     dim: usize,
 }
 
 impl Projector {
     /// `k` projections at `density` (paper: 1/3), seeds `0..k`.
     pub fn new(k: usize, density: f64) -> Self {
-        Projector { hashers: SignHasher::family(k, density), dense_r: None, dim: 0 }
+        Projector {
+            hashers: SignHasher::family(k, density),
+            dense_r: None,
+            schema_names: None,
+            dim: 0,
+        }
     }
 
     pub fn k(&self) -> usize {
         self.hashers.len()
+    }
+
+    /// The sign-hash density shared by the family (undefined for the
+    /// identity projector, which has no hashers).
+    pub fn density(&self) -> Option<f64> {
+        self.hashers.first().map(|h| h.density())
     }
 
     /// Precompute R for a dense schema (also used to feed the PJRT
@@ -62,12 +77,35 @@ impl Projector {
             feature_names,
             &self.hashers,
         )));
+        self.schema_names = Some(Arc::new(feature_names.to_vec()));
         self
     }
 
     /// The materialised R[D,K] (row-major by feature), if dense.
     pub fn dense_r(&self) -> Option<&[f32]> {
         self.dense_r.as_deref().map(|v| v.as_slice())
+    }
+
+    /// The feature names the dense matrix was built from, if any.
+    pub fn dense_schema(&self) -> Option<&[String]> {
+        self.schema_names.as_deref().map(|v| v.as_slice())
+    }
+
+    /// The input width this projector requires of **dense** rows: the
+    /// identity passes raw features through (width must match what the
+    /// chains were fit on), and a materialised R[D,K] indexes rows by
+    /// position. `None` means any width — the projector hashes feature
+    /// names on the fly (sparse/mixed rows, or no dense schema).
+    pub fn expected_dense_dim(&self) -> Option<usize> {
+        if self.is_identity() {
+            if self.dim > 0 {
+                Some(self.dim)
+            } else {
+                None
+            }
+        } else {
+            self.schema_names.as_ref().map(|n| n.len())
+        }
     }
 
     /// Project one row (Eq. 2). `memo` is an optional worker-local cache
@@ -144,7 +182,7 @@ impl Projector {
     /// Identity "projection" for already-low-dimensional data (the paper
     /// does not transform OSM): sketch = raw dense features.
     pub fn identity(dim: usize) -> Self {
-        Projector { hashers: Vec::new(), dense_r: None, dim }
+        Projector { hashers: Vec::new(), dense_r: None, schema_names: None, dim }
     }
 
     pub fn is_identity(&self) -> bool {

@@ -45,6 +45,11 @@ impl StreamScorer {
     /// Requires a hashing projector (k > 0): evolving features need the
     /// hash-not-cash trick of Eq. (2)/(3).
     pub fn new(model: &SparxModel, cache_size: usize) -> Result<Self> {
+        if cache_size == 0 {
+            return Err(SparxError::InvalidParams(
+                "stream cache size must be ≥ 1 (it bounds the resident sketches)".into(),
+            ));
+        }
         if model.projector.is_identity() {
             return Err(SparxError::Unsupported(
                 "streaming requires a hashing projector (params.k > 0)".into(),
@@ -70,10 +75,8 @@ impl StreamScorer {
         self.processed += 1;
         let id = u.id();
         let fresh = !self.cache.contains(&id);
-        if fresh {
-            if self.cache.put(id, vec![0.0f32; self.k]).is_some() {
-                self.evicted += 1;
-            }
+        if fresh && self.cache.put(id, vec![0.0f32; self.k]).is_some() {
+            self.evicted += 1;
         }
         {
             let s = self.cache.get_mut(&id).expect("just inserted");
@@ -136,6 +139,13 @@ impl StreamScorer {
 
     pub fn processed(&self) -> u64 {
         self.processed
+    }
+
+    /// The dense feature names the model was trained against, if its
+    /// projector carries a schema (used by `sparx serve` to synthesize a
+    /// compatible demo stream; any names hash fine either way).
+    pub fn feature_names(&self) -> Option<&[String]> {
+        self.projector.dense_schema()
     }
 }
 
@@ -224,6 +234,50 @@ mod tests {
         assert_eq!(s.processed(), 100);
     }
 
+    /// Eviction starts exactly at `cache_size`: filling the cache costs
+    /// nothing, the first id beyond it evicts.
+    #[test]
+    fn eviction_starts_exactly_at_cache_size() {
+        let model = fitted();
+        let cache_size = 6;
+        let mut s = StreamScorer::new(&model, cache_size).unwrap();
+        for id in 0..cache_size as u64 {
+            s.update(&UpdateTriple::Num { id, feature: "f0".into(), delta: 1.0 });
+        }
+        assert_eq!(s.cached_ids(), cache_size);
+        assert_eq!(s.evictions(), 0, "filling to capacity must not evict");
+        s.update(&UpdateTriple::Num { id: 999, feature: "f0".into(), delta: 1.0 });
+        assert_eq!(s.cached_ids(), cache_size);
+        assert_eq!(s.evictions(), 1, "one past capacity evicts exactly one");
+        assert_eq!(s.processed(), cache_size as u64 + 1);
+    }
+
+    /// An evicted id that comes back is `fresh` again and restarts from a
+    /// zero sketch — its score equals the original first-update score,
+    /// not the accumulated state from before eviction.
+    #[test]
+    fn readmission_after_eviction_is_fresh_with_reset_state() {
+        let model = fitted();
+        let mut s = StreamScorer::new(&model, 4).unwrap();
+        let first = s.update(&UpdateTriple::Num { id: 0, feature: "f0".into(), delta: 1.0 });
+        assert!(first.fresh);
+        // accumulate more state on id 0, then push it out with 4 new ids
+        let second = s.update(&UpdateTriple::Num { id: 0, feature: "f0".into(), delta: 1.0 });
+        assert!(!second.fresh, "cached id must not be fresh");
+        for id in 1..=4 {
+            s.update(&UpdateTriple::Num { id, feature: "f0".into(), delta: 1.0 });
+        }
+        assert!(s.evictions() >= 1, "id 0 must have been evicted");
+        assert!(s.score_id(0).is_none(), "evicted id has no cached sketch");
+        let back = s.update(&UpdateTriple::Num { id: 0, feature: "f0".into(), delta: 1.0 });
+        assert!(back.fresh, "re-admission after eviction must set fresh again");
+        assert_eq!(
+            back.outlierness, first.outlierness,
+            "re-admitted sketch must restart from zero, not resume"
+        );
+        assert_eq!(s.processed(), 7);
+    }
+
     #[test]
     fn absorb_increases_density_at_point() {
         let model = fitted();
@@ -236,6 +290,15 @@ mod tests {
         }
         let after = s.score_id(3).unwrap();
         assert!(after < before.outlierness, "{after} !< {}", before.outlierness);
+    }
+
+    #[test]
+    fn zero_cache_size_is_a_typed_error_not_a_panic() {
+        let model = fitted();
+        assert!(matches!(
+            StreamScorer::new(&model, 0),
+            Err(crate::api::SparxError::InvalidParams(_))
+        ));
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! Minimal little-endian binary codec (offline environment: serde /
+//! bincode are not in the vendored dependency set). Used by the model
+//! artifact format (`crate::api::artifact`): fixed-width primitives,
+//! length-prefixed strings and slices, and an IEEE CRC-32 for whole-file
+//! integrity.
+//!
+//! Encoding conventions, shared by every detector's artifact codec:
+//! * all integers little-endian; `usize` travels as `u64`;
+//! * strings and element slices are length-prefixed with a `u32`;
+//! * floats are stored via `to_le_bytes` (bit-exact round trips — the
+//!   artifact tests assert score bit-identity across save/load).
+
+/// Append-only binary writer.
+#[derive(Debug, Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Encoder { buf: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, no length prefix (fixed-size fields like the magic).
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// `u32` length prefix + UTF-8 bytes.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// `u32` element count + each element as `u32`.
+    pub fn put_u32_slice(&mut self, v: &[u32]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_u32(x);
+        }
+    }
+
+    /// `u32` element count + each element as `u64` (usize payloads).
+    pub fn put_usize_slice(&mut self, v: &[usize]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_u64(x as u64);
+        }
+    }
+
+    /// `u32` element count + each element's LE bits.
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+}
+
+/// Bounds-checked binary reader over a byte slice. Every accessor
+/// returns `Err` (never panics) on truncated input, so corrupt artifacts
+/// surface as typed errors all the way up.
+#[derive(Debug)]
+pub struct Decoder<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+/// Codec-level read errors (mapped to `SparxError` by the artifact layer).
+pub type CodecResult<T> = Result<T, String>;
+
+impl<'a> Decoder<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Decoder { b, i: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    pub fn take(&mut self, n: usize) -> CodecResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated: wanted {n} bytes at offset {}, {} left",
+                self.i,
+                self.remaining()
+            ));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> CodecResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> CodecResult<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> CodecResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> CodecResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> CodecResult<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f32(&mut self) -> CodecResult<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> CodecResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> CodecResult<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("invalid UTF-8 string: {e}"))
+    }
+
+    pub fn u32_vec(&mut self) -> CodecResult<Vec<u32>> {
+        let n = self.u32()? as usize;
+        // bounds-check the whole run up front so a hostile length cannot
+        // trigger a huge allocation before the truncation is noticed
+        if self.remaining() < n.saturating_mul(4) {
+            return Err(format!("truncated u32 slice: {n} elements declared"));
+        }
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    pub fn usize_vec(&mut self) -> CodecResult<Vec<usize>> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n.saturating_mul(8) {
+            return Err(format!("truncated usize slice: {n} elements declared"));
+        }
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    pub fn f32_vec(&mut self) -> CodecResult<Vec<f32>> {
+        let n = self.u32()? as usize;
+        if self.remaining() < n.saturating_mul(4) {
+            return Err(format!("truncated f32 slice: {n} elements declared"));
+        }
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    /// Assert the reader consumed everything (catches layout drift).
+    pub fn finish(&self) -> CodecResult<()> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after decode", self.remaining()))
+        }
+    }
+}
+
+/// IEEE CRC-32 (reflected, polynomial 0xEDB88320) — the artifact file
+/// trailer. Bitwise implementation: artifact I/O is not a hot path.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &byte in data {
+        crc ^= byte as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut e = Encoder::new();
+        e.put_u8(7);
+        e.put_u16(0xBEEF);
+        e.put_u32(0xDEAD_BEEF);
+        e.put_u64(u64::MAX - 1);
+        e.put_f32(-0.0);
+        e.put_f64(f64::MIN_POSITIVE);
+        e.put_str("héllo");
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 0xBEEF);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(d.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(d.f64().unwrap(), f64::MIN_POSITIVE);
+        assert_eq!(d.str().unwrap(), "héllo");
+        assert!(d.finish().is_ok());
+    }
+
+    #[test]
+    fn slices_round_trip_bit_exact() {
+        let f = vec![1.5f32, f32::NAN, -0.0, f32::INFINITY];
+        let u = vec![0u32, 1, u32::MAX];
+        let s = vec![0usize, 42, usize::MAX >> 1];
+        let mut e = Encoder::new();
+        e.put_f32_slice(&f);
+        e.put_u32_slice(&u);
+        e.put_usize_slice(&s);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        let f2 = d.f32_vec().unwrap();
+        assert_eq!(f.len(), f2.len());
+        for (a, b) in f.iter().zip(&f2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(d.u32_vec().unwrap(), u);
+        assert_eq!(d.usize_vec().unwrap(), s);
+        assert!(d.finish().is_ok());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut e = Encoder::new();
+        e.put_u64(1);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes[..5]);
+        assert!(d.u64().is_err());
+        // declared length far beyond the buffer must not allocate/panic
+        let mut e = Encoder::new();
+        e.put_u32(u32::MAX);
+        let bytes = e.into_bytes();
+        assert!(Decoder::new(&bytes).f32_vec().is_err());
+        assert!(Decoder::new(&bytes).u32_vec().is_err());
+        assert!(Decoder::new(&bytes).usize_vec().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut e = Encoder::new();
+        e.put_u8(1);
+        e.put_u8(2);
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        d.u8().unwrap();
+        assert!(d.finish().is_err());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+}

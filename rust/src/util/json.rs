@@ -60,13 +60,6 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -130,6 +123,17 @@ impl Json {
             return Err(format!("trailing data at byte {}", p.i));
         }
         Ok(v)
+    }
+}
+
+/// Compact serialization (`.to_string()` comes with it, as before, via
+/// the blanket `ToString` — the previous inherent `to_string` shadowed
+/// this idiom).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -1,6 +1,8 @@
 //! Small self-contained utilities: deterministic RNG, LRU cache, size
-//! estimation for the cluster simulator's memory/shuffle accounting.
+//! estimation for the cluster simulator's memory/shuffle accounting, and
+//! the binary codec behind the model artifact format.
 
+pub mod codec;
 pub mod json;
 pub mod lru;
 pub mod rng;

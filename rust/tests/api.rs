@@ -1,11 +1,15 @@
-//! Integration tests of the unified detector API (the ISSUE 2 acceptance
-//! criteria): the registry-driven Sparx run is bit-identical to the
-//! direct `SparxModel::fit` path, invalid hyperparameters surface as
-//! typed `SparxError::InvalidParams` instead of panicking, and every
-//! registered detector returns exactly one aligned score per point.
+//! Integration tests of the unified detector API: the registry-driven
+//! Sparx run is bit-identical to the direct `SparxModel::fit` path,
+//! invalid hyperparameters surface as typed `SparxError::InvalidParams`
+//! instead of panicking, every registered detector returns exactly one
+//! aligned score per point, and — the lifecycle acceptance criteria —
+//! fit → `to_artifact` → `registry::load_bytes` → score round trips
+//! bit-identically for every detector, with corrupt / truncated /
+//! wrong-version artifacts failing typed.
 
 use sparx::api::{
-    registry, Detector as _, DetectorSpec, FittedModel as _, SparxBuilder, SparxError,
+    registry, Detector as _, DetectorSpec, FittedModel as _, ModelArtifact, SparxBuilder,
+    SparxError,
 };
 use sparx::baselines::dbscout::{Dbscout, DbscoutParams};
 use sparx::baselines::{Spif, SpifParams, XStream, XStreamParams};
@@ -210,6 +214,219 @@ fn dense_only_baselines_reject_sparse_input() {
             r.err().map(|e| e.to_string())
         );
     }
+}
+
+/// The lifecycle acceptance criterion: for every detector (and both
+/// Sparx execution plans), fit → `to_artifact` → `to_bytes` →
+/// `registry::load_bytes` → score is **bit-identical** to scoring the
+/// in-memory model.
+#[test]
+fn artifact_round_trip_is_bit_identical_for_every_detector() {
+    use sparx::sparx::ExecMode;
+    for exec in [ExecMode::Fused, ExecMode::PerChain] {
+        let ctx = local(4);
+        let ld = GisetteGen { n: 400, d: 24, ..Default::default() }.generate(&ctx).unwrap();
+        let spec = DetectorSpec {
+            k: Some(8),
+            components: Some(6),
+            depth: Some(5),
+            sample_rate: Some(0.5),
+            exec_mode: exec,
+            ..Default::default()
+        };
+        let model = registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+        let direct = model.score(&ctx, &ld.dataset).unwrap();
+        let bytes = model.to_artifact().unwrap().to_bytes();
+        let loaded = registry::load_bytes(&bytes).unwrap();
+        assert_eq!(loaded.name(), "sparx");
+        let rescored = loaded.score(&ctx, &ld.dataset).unwrap();
+        assert_eq!(direct, rescored, "sparx[{}] round trip must be bit-identical", exec.tag());
+        // a loaded model opens the §3.5 stream front-end too
+        assert!(loaded.stream_scorer(16).is_ok());
+    }
+    for name in ["xstream", "spif", "dbscout"] {
+        let ctx = local(4);
+        let ld = small_osm().generate(&ctx).unwrap();
+        let spec = DetectorSpec {
+            k: Some(8),
+            components: Some(6),
+            depth: Some(5),
+            sample_rate: Some(0.5),
+            eps: Some(1.0),
+            min_pts: Some(4),
+            ..Default::default()
+        };
+        let model = registry::build(name, &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+        let direct = model.score(&ctx, &ld.dataset).unwrap();
+        let loaded = registry::load_bytes(&model.to_artifact().unwrap().to_bytes()).unwrap();
+        assert_eq!(loaded.name(), name);
+        let rescored = loaded.score(&ctx, &ld.dataset).unwrap();
+        assert_eq!(direct, rescored, "{name} round trip must be bit-identical");
+    }
+}
+
+/// The footprint we report must be the footprint we ship: for every
+/// registered detector, `model_bytes()` equals the artifact payload
+/// length — before framing, after framing, and after a reload.
+#[test]
+fn model_bytes_is_the_shipped_artifact_payload_length() {
+    for name in registry::detector_names() {
+        let ctx = local(2);
+        let ld = small_osm().generate(&ctx).unwrap();
+        let spec = DetectorSpec {
+            k: Some(8),
+            components: Some(4),
+            depth: Some(4),
+            sample_rate: Some(0.5),
+            eps: Some(1.0),
+            min_pts: Some(4),
+            ..Default::default()
+        };
+        let model = registry::build(name, &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+        let art = model.to_artifact().unwrap();
+        assert!(model.model_bytes() > 0, "{name}: footprint must be non-zero");
+        assert_eq!(
+            model.model_bytes(),
+            art.payload.len(),
+            "{name}: reported footprint must equal the shipped payload"
+        );
+        let loaded = registry::load_bytes(&art.to_bytes()).unwrap();
+        assert_eq!(
+            loaded.model_bytes(),
+            art.payload.len(),
+            "{name}: loaded model must report the same footprint"
+        );
+    }
+}
+
+#[test]
+fn corrupt_truncated_and_wrong_version_artifacts_fail_typed() {
+    let ctx = local(2);
+    let ld = small_osm().generate(&ctx).unwrap();
+    let spec = DetectorSpec { eps: Some(1.0), min_pts: Some(4), ..Default::default() };
+    let model = registry::build("dbscout", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    let art = model.to_artifact().unwrap();
+    let bytes = art.to_bytes();
+    // truncated
+    let r = registry::load_bytes(&bytes[..bytes.len() - 3]);
+    assert!(matches!(r, Err(SparxError::MissingArtifact(_))), "truncated: {:?}", r.err());
+    // bit flip anywhere → checksum catches it
+    let mut corrupt = bytes.clone();
+    let mid = corrupt.len() / 2;
+    corrupt[mid] ^= 0x10;
+    let r = registry::load_bytes(&corrupt);
+    assert!(
+        matches!(r, Err(SparxError::MissingArtifact(_))),
+        "corrupt: {:?}",
+        r.as_ref().err()
+    );
+    assert_eq!(r.unwrap_err().exit_code(), 1, "artifact damage is a runtime failure");
+    // not an artifact at all
+    assert!(matches!(
+        registry::load_bytes(b"definitely not a model"),
+        Err(SparxError::MissingArtifact(_))
+    ));
+    // wrong format version
+    let mut wrong = art.clone();
+    wrong.version = 77;
+    let r = registry::load_bytes(&wrong.to_bytes());
+    assert!(matches!(r, Err(SparxError::MissingArtifact(_))), "version: {:?}", r.err());
+    // intact framing, unknown detector name
+    let alien = ModelArtifact::new("florp", Vec::new(), Vec::new());
+    let r = registry::load_bytes(&alien.to_bytes());
+    assert!(
+        matches!(r, Err(SparxError::UnknownDetector(_))),
+        "alien: {:?}",
+        r.as_ref().err()
+    );
+    assert_eq!(r.unwrap_err().exit_code(), 2, "unknown detector is a usage failure");
+}
+
+/// A checksum-valid artifact whose blocks disagree (CRC-32 is
+/// integrity, not authentication) must fail typed at load, not index
+/// out of bounds at score time.
+#[test]
+fn inconsistent_artifact_blocks_fail_typed() {
+    let ctx = local(2);
+    let ld = GisetteGen { n: 150, d: 8, ..Default::default() }.generate(&ctx).unwrap();
+    let spec = DetectorSpec {
+        k: Some(4),
+        components: Some(3),
+        depth: Some(3),
+        sample_rate: Some(1.0),
+        ..Default::default()
+    };
+    let model = registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    let art = model.to_artifact().unwrap();
+    // bump the declared projection width k (first u64 of the param
+    // block) without touching the payload: the file checksum is
+    // recomputed by to_bytes, so only the cross-block check can catch it
+    let mut tampered = art.clone();
+    tampered.params[0] = tampered.params[0].wrapping_add(1); // k: 4 -> 5
+    let r = registry::load_bytes(&tampered.to_bytes());
+    assert!(
+        matches!(r, Err(SparxError::InvalidParams(_))),
+        "tampered k must fail typed: {:?}",
+        r.as_ref().err()
+    );
+}
+
+/// With the fit/score split, the scored dataset can differ from the
+/// fitted one — mismatched dense widths must fail typed, not panic in
+/// the projection.
+#[test]
+fn dense_dimension_mismatch_fails_typed_after_reload() {
+    let ctx = local(2);
+    let osm = small_osm().generate(&ctx).unwrap();
+    let gisette = GisetteGen { n: 100, d: 8, ..Default::default() }.generate(&ctx).unwrap();
+    // identity projector (k=0): raw 2-d features feed the chains directly
+    let spec = DetectorSpec {
+        k: Some(0),
+        components: Some(4),
+        depth: Some(4),
+        sample_rate: Some(1.0),
+        ..Default::default()
+    };
+    let model = registry::build("sparx", &spec).unwrap().fit(&ctx, &osm.dataset).unwrap();
+    let loaded = registry::load_bytes(&model.to_artifact().unwrap().to_bytes()).unwrap();
+    let r = loaded.score(&ctx, &gisette.dataset);
+    assert!(matches!(r, Err(SparxError::InvalidParams(_))), "identity: {:?}", r.err());
+    // hashing projector with a materialised 2-column dense schema
+    let spec = DetectorSpec {
+        k: Some(4),
+        components: Some(4),
+        depth: Some(4),
+        ..Default::default()
+    };
+    let model = registry::build("xstream", &spec).unwrap().fit(&ctx, &osm.dataset).unwrap();
+    let loaded = registry::load_bytes(&model.to_artifact().unwrap().to_bytes()).unwrap();
+    let r = loaded.score(&ctx, &gisette.dataset);
+    assert!(matches!(r, Err(SparxError::InvalidParams(_))), "xstream: {:?}", r.err());
+}
+
+#[test]
+fn save_load_file_round_trip_and_missing_file_is_io() {
+    let ctx = local(2);
+    let ld = GisetteGen { n: 200, d: 8, ..Default::default() }.generate(&ctx).unwrap();
+    let spec = DetectorSpec {
+        k: Some(4),
+        components: Some(3),
+        depth: Some(3),
+        sample_rate: Some(1.0),
+        ..Default::default()
+    };
+    let model = registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    let path = std::env::temp_dir().join(format!("sparx-api-test-{}.sparx", std::process::id()));
+    let path = path.to_str().expect("utf-8 temp path").to_string();
+    model.to_artifact().unwrap().save(&path).unwrap();
+    let loaded = registry::load(&path).unwrap();
+    assert_eq!(
+        model.score(&ctx, &ld.dataset).unwrap(),
+        loaded.score(&ctx, &ld.dataset).unwrap(),
+        "file round trip must score identically"
+    );
+    std::fs::remove_file(&path).unwrap();
+    assert!(matches!(registry::load(&path), Err(SparxError::Io(_))));
 }
 
 #[test]
