@@ -10,6 +10,9 @@
 //!   * PJRT tile execution (chain_bins + fused project_bins artifacts)
 //!   * distributed fit+score, fused vs per-chain execution plans
 //!   * streaming δ-update + rescore
+//!   * sharded serve throughput at S = 1, 2, 4, 8 (one fixed update
+//!     sequence replayed at every shard count; `-- serve` runs only
+//!     this section — CI publishes its lines as the step summary)
 
 use sparx::data::Row;
 use sparx::hash::SignHasher;
@@ -39,6 +42,15 @@ fn bench<F: FnMut() -> u64>(name: &str, items_per_iter: u64, mut f: F) {
 }
 
 fn main() {
+    // `cargo bench --bench hotpath -- serve` runs only the serve-throughput
+    // section (what the CI step summary publishes). Match anywhere in
+    // argv: cargo inserts its own `--bench` flag ahead of passthrough
+    // args even for harness = false targets.
+    if std::env::args().any(|a| a == "serve") {
+        serve_throughput();
+        println!("done");
+        return;
+    }
     let mut rng = Rng::new(7);
     println!("== sparx hot-path microbenches ==");
 
@@ -229,5 +241,65 @@ fn main() {
             acc
         });
     }
+
+    serve_throughput();
     println!("done");
+}
+
+/// Serve-throughput ladder: one fixed synthetic update sequence replayed
+/// through the single-threaded scorer (S=1) and the sharded front-end at
+/// S = 2, 4, 8 with the same total cache budget. The S=1 line is the
+/// baseline the speedup column is relative to; shards share nothing, so
+/// scoring work per update is identical at every S (the determinism
+/// story lives in tests/sharded.rs) and only the wall clock moves.
+fn serve_throughput() {
+    use sparx::cluster::ClusterConfig;
+    use sparx::data::generators::GisetteGen;
+    use sparx::data::{StreamGen, UpdateTriple};
+    use sparx::sparx::{ShardedStreamScorer, SparxModel, SparxParams, StreamScorer};
+
+    let ctx = ClusterConfig { num_partitions: 4, ..Default::default() }.build();
+    let ld = GisetteGen { n: 1000, d: 64, ..Default::default() }.generate(&ctx).unwrap();
+    let model = SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 25, num_chains: 25, depth: 10, ..Default::default() },
+    )
+    .unwrap();
+    let mut gen = StreamGen::new(20_000, ld.dataset.schema.names.clone(), 0xBEEF);
+    let updates: Vec<UpdateTriple> = (0..200_000).map(|_| gen.next_update()).collect();
+
+    let cache_total = 16_384usize;
+    let mut base = 0.0f64;
+    for shards in [1usize, 2, 4, 8] {
+        let per_shard = (cache_total / shards).max(1);
+        // sharded arms clone the replay *outside* the timed region:
+        // submit() consumes updates, and cloning inside the clock would
+        // charge them String allocations the S=1 arm never pays
+        let (processed, dt) = if shards == 1 {
+            let mut scorer = StreamScorer::new(&model, per_shard).unwrap();
+            let t0 = std::time::Instant::now();
+            for u in &updates {
+                scorer.update(u);
+            }
+            (scorer.processed(), t0.elapsed().as_secs_f64())
+        } else {
+            let mut scorer = ShardedStreamScorer::new(&model, shards, per_shard).unwrap();
+            let replay = updates.clone();
+            let t0 = std::time::Instant::now();
+            for u in replay {
+                scorer.submit(u);
+            }
+            (scorer.finish().processed(), t0.elapsed().as_secs_f64())
+        };
+        assert_eq!(processed, updates.len() as u64, "S={shards}: lost updates");
+        let rate = processed as f64 / dt.max(1e-9);
+        if shards == 1 {
+            base = rate;
+        }
+        println!(
+            "serve throughput S={shards:<2} {rate:>10.0} updates/s  ({:.2}x vs S=1)",
+            rate / base.max(1e-9)
+        );
+    }
 }

@@ -9,7 +9,10 @@ use crate::cluster::ClusterContext;
 use crate::data::Dataset;
 use crate::runtime::{PjrtBinner, PjrtEngine};
 use crate::sparx::chain::{Binner, NativeBinner};
-use crate::sparx::{project_dataset, ExecMode, ScoreMode, SparxModel, SparxParams, StreamScorer};
+use crate::sparx::{
+    project_dataset, ExecMode, ScoreMode, ShardedStreamScorer, SparxModel, SparxParams,
+    StreamScorer,
+};
 use crate::util::codec::{CodecResult, Decoder, Encoder};
 
 use super::artifact::{self, ModelArtifact};
@@ -292,6 +295,19 @@ impl FittedSparx {
     /// compiled artifacts again — [`SparxError::MissingArtifact`]
     /// otherwise); the payload restores projector, Δmax and chains.
     pub fn from_artifact(art: &ModelArtifact) -> Result<FittedSparx> {
+        Self::from_artifact_with_backend(art, None)
+    }
+
+    /// [`from_artifact`](Self::from_artifact) with an optional backend
+    /// override. Scores are backend-identical by construction
+    /// (regression-tested), so forcing [`Backend::Native`] on a
+    /// PJRT-fitted artifact is safe — it lets a deployment node without
+    /// the compiled AOT modules serve any artifact. `None` keeps the
+    /// backend the model was fitted with.
+    pub fn from_artifact_with_backend(
+        art: &ModelArtifact,
+        override_backend: Option<Backend>,
+    ) -> Result<FittedSparx> {
         let blk = |e| artifact::block_err("sparx", e);
         let mut dec = Decoder::new(&art.params);
         let params = decode_sparx_params(&mut dec).map_err(blk)?;
@@ -299,15 +315,32 @@ impl FittedSparx {
         let backend_tag = dec.u8().map_err(blk)?;
         let variant = dec.str().map_err(blk)?;
         dec.finish().map_err(blk)?;
-        let backend = match backend_tag {
-            BACKEND_NATIVE => BackendRuntime::Native,
-            BACKEND_PJRT => BackendRuntime::Pjrt {
-                engine: Arc::new(
-                    PjrtEngine::start_default().map_err(SparxError::MissingArtifact)?,
-                ),
-                variant,
-            },
+        let stored = match backend_tag {
+            BACKEND_NATIVE => Backend::Native,
+            BACKEND_PJRT => Backend::Pjrt,
             other => return Err(blk(format!("unknown backend tag {other}"))),
+        };
+        let backend = match override_backend.unwrap_or(stored) {
+            Backend::Native => BackendRuntime::Native,
+            Backend::Pjrt => {
+                // a native-fitted artifact stores no AOT variant, so the
+                // engine has no workload shape to run — guessing one
+                // would execute modules compiled for the wrong tile
+                // shapes; the safe override direction is pjrt → native
+                if variant.is_empty() {
+                    return Err(SparxError::Unsupported(
+                        "this artifact was fitted natively and stores no PJRT variant; \
+                         only the pjrt → native override is shape-safe"
+                            .into(),
+                    ));
+                }
+                BackendRuntime::Pjrt {
+                    engine: Arc::new(
+                        PjrtEngine::start_default().map_err(SparxError::MissingArtifact)?,
+                    ),
+                    variant,
+                }
+            }
         };
 
         let (projector, deltamax, chains) = artifact::decode_chain_ensemble(
@@ -360,6 +393,14 @@ impl FittedModel for FittedSparx {
 
     fn stream_scorer(&self, cache_size: usize) -> Result<StreamScorer> {
         StreamScorer::new(&self.model, cache_size)
+    }
+
+    fn stream_scorer_sharded(
+        &self,
+        shards: usize,
+        cache_per_shard: usize,
+    ) -> Result<ShardedStreamScorer> {
+        ShardedStreamScorer::new(&self.model, shards, cache_per_shard)
     }
 }
 

@@ -59,7 +59,7 @@ pub use registry::DetectorSpec;
 
 use crate::cluster::ClusterContext;
 use crate::data::Dataset;
-use crate::sparx::{Projector, StreamScorer};
+use crate::sparx::{Projector, ShardedStreamScorer, StreamScorer};
 
 /// A configured-but-unfitted outlier detector. The one contract every
 /// method implements; the CLI, the experiment harnesses and the examples
@@ -100,6 +100,26 @@ pub trait FittedModel {
     /// of `cache_size` IDs. Default: unsupported.
     fn stream_scorer(&self, cache_size: usize) -> Result<StreamScorer> {
         let _ = cache_size;
+        Err(SparxError::Unsupported(format!(
+            "{} has no evolving-stream front-end (only sparx does)",
+            self.name()
+        )))
+    }
+
+    /// Open the **sharded** concurrent front-end: `shards` shared-nothing
+    /// workers (updates route by `murmur(ID) % shards`), each with its
+    /// own LRU of `cache_per_shard` IDs. Concurrency never changes a
+    /// score: every shard is bit-identical to a single-threaded
+    /// [`stream_scorer`](Self::stream_scorer) fed its sub-stream, and
+    /// while no shard evicts, per-ID score sequences are bit-identical
+    /// across shard counts too (eviction timing depends on which IDs
+    /// share an LRU). Default: unsupported.
+    fn stream_scorer_sharded(
+        &self,
+        shards: usize,
+        cache_per_shard: usize,
+    ) -> Result<ShardedStreamScorer> {
+        let _ = (shards, cache_per_shard);
         Err(SparxError::Unsupported(format!(
             "{} has no evolving-stream front-end (only sparx does)",
             self.name()

@@ -105,18 +105,50 @@ pub fn build(name: &str, spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
 /// detector → `UnknownDetector`, blocks that don't decode →
 /// `InvalidParams`. Never panics.
 pub fn load(path: &str) -> Result<Box<dyn FittedModel>> {
-    from_artifact(&ModelArtifact::load(path)?)
+    load_with_backend(path, None)
+}
+
+/// [`load`] with an optional Sparx backend override (the CLI's
+/// `--backend` flag on `score`/`serve`): scores are backend-identical,
+/// so a PJRT-fitted artifact can be served with `Backend::Native` on a
+/// node without the compiled AOT modules. Overrides on non-sparx
+/// artifacts fail typed (`Unsupported`) — no other detector has a
+/// backend to swap.
+pub fn load_with_backend(path: &str, backend: Option<Backend>) -> Result<Box<dyn FittedModel>> {
+    from_artifact_with_backend(&ModelArtifact::load(path)?, backend)
 }
 
 /// [`load`] from in-memory bytes.
 pub fn load_bytes(bytes: &[u8]) -> Result<Box<dyn FittedModel>> {
-    from_artifact(&ModelArtifact::from_bytes(bytes)?)
+    load_bytes_with_backend(bytes, None)
+}
+
+/// [`load_with_backend`] from in-memory bytes.
+pub fn load_bytes_with_backend(
+    bytes: &[u8],
+    backend: Option<Backend>,
+) -> Result<Box<dyn FittedModel>> {
+    from_artifact_with_backend(&ModelArtifact::from_bytes(bytes)?, backend)
 }
 
 /// Dispatch a parsed artifact to its detector's deserializer.
 pub fn from_artifact(art: &ModelArtifact) -> Result<Box<dyn FittedModel>> {
+    from_artifact_with_backend(art, None)
+}
+
+/// [`from_artifact`] with an optional Sparx backend override.
+pub fn from_artifact_with_backend(
+    art: &ModelArtifact,
+    backend: Option<Backend>,
+) -> Result<Box<dyn FittedModel>> {
+    if backend.is_some() && art.detector != "sparx" {
+        return Err(SparxError::Unsupported(format!(
+            "--backend override applies to sparx artifacts only (this one was written by {:?})",
+            art.detector
+        )));
+    }
     match art.detector.as_str() {
-        "sparx" => Ok(Box::new(FittedSparx::from_artifact(art)?)),
+        "sparx" => Ok(Box::new(FittedSparx::from_artifact_with_backend(art, backend)?)),
         "xstream" => Ok(Box::new(XStream::from_artifact(art)?)),
         "spif" => Ok(Box::new(Spif::from_artifact(art)?)),
         "dbscout" => Ok(Box::new(FittedDbscout::from_artifact(art)?)),

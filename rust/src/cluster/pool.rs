@@ -1,15 +1,26 @@
-//! Bounded scoped parallelism.
+//! Bounded scoped parallelism and long-lived pinned workers.
 //!
-//! Two uses in the paper's system: (1) worker-level data parallelism —
+//! Three uses in the paper's system: (1) worker-level data parallelism —
 //! each logical worker processes its partitions; (2) the driver-side
 //! *model-parallel* thread pool that trains/scoresthe M chains
-//! concurrently (Algorithm 2, lines 9–11; Algorithm 3, lines 4–6).
+//! concurrently (Algorithm 2, lines 9–11; Algorithm 3, lines 4–6);
+//! (3) the §3.5 serving front-end's shard workers.
 //!
 //! `run_indexed` executes `n` jobs over at most `threads` OS threads with
 //! a shared atomic work queue, preserving result order. Scoped, so jobs
 //! may borrow from the caller.
+//!
+//! [`PinnedPool`] is the long-lived counterpart for *stateful* workers:
+//! each worker owns private state and a bounded ingest queue
+//! (`std::sync::mpsc::sync_channel`), items are routed to a specific
+//! worker (pinned, never stolen — the shared-nothing property sharded
+//! serving depends on), and `join` returns the final states. A full
+//! queue blocks the sender (backpressure); items are never dropped
+//! while their worker is alive (a panicked worker's items are discarded
+//! and the panic re-raised at `join`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
 use std::sync::Mutex;
 
 /// CPU time consumed by the calling thread, in nanoseconds. Immune to
@@ -144,6 +155,85 @@ where
         .collect())
 }
 
+// ------------------------------------------------- pinned worker pool
+
+/// Long-lived stateful workers, one OS thread + one bounded ingest
+/// queue each. Unlike [`run_indexed`]'s fork-join (spawn, drain a shared
+/// work list, join), a `PinnedPool` keeps its workers alive across an
+/// unbounded item stream and routes every item to the *caller-chosen*
+/// worker, so worker state never migrates between threads — the
+/// shared-nothing property the sharded §3.5 front-end is built on.
+///
+/// Queues are `std::sync::mpsc::sync_channel`s: a full queue blocks the
+/// sender (backpressure — no loss while the worker is alive; see
+/// [`send`](Self::send) for the panicked-worker exception), and the
+/// pool holds each worker's only `SyncSender`, so dropping the senders
+/// is the end-of-stream signal — workers drain what was queued, then
+/// their `recv` loop ends.
+pub struct PinnedPool<T, S> {
+    senders: Vec<SyncSender<T>>,
+    handles: Vec<std::thread::JoinHandle<S>>,
+}
+
+impl<T: Send + 'static, S: Send + 'static> PinnedPool<T, S> {
+    /// Spawn one worker per entry of `states`. Each worker loops
+    /// `handler(&mut state, item)` over its own queue (capacity
+    /// `queue_cap` items) until the queue closes, then yields its
+    /// final state back through [`join`](Self::join).
+    pub fn spawn<F>(states: Vec<S>, queue_cap: usize, handler: F) -> Self
+    where
+        F: Fn(&mut S, T) + Send + Clone + 'static,
+    {
+        let mut senders = Vec::with_capacity(states.len());
+        let mut handles = Vec::with_capacity(states.len());
+        for mut state in states {
+            let (tx, rx) = sync_channel::<T>(queue_cap.max(1));
+            let f = handler.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(item) = rx.recv() {
+                    f(&mut state, item);
+                }
+                state
+            }));
+            senders.push(tx);
+        }
+        PinnedPool { senders, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Enqueue `item` on worker `w`'s queue; blocks only while that
+    /// queue is full (backpressure — items are never dropped). If the
+    /// worker died (panicked and dropped its receiver), the item is
+    /// discarded instead of blocking forever on a queue nothing drains;
+    /// the panic itself surfaces at [`join`](Self::join).
+    pub fn send(&self, w: usize, item: T) {
+        let _ = self.senders[w].send(item);
+    }
+
+    /// Close every queue (by dropping the senders), wait for the workers
+    /// to drain them, and return the final states in worker order.
+    /// Panics in workers propagate.
+    pub fn join(mut self) -> Vec<S> {
+        self.senders.clear();
+        self.handles.drain(..).map(|h| h.join().expect("pinned worker panicked")).collect()
+    }
+}
+
+/// Dropping the pool without [`join`](PinnedPool::join) (e.g. on an
+/// error path) still shuts down cleanly: queues close, workers drain
+/// and exit, and their states are discarded.
+impl<T, S> Drop for PinnedPool<T, S> {
+    fn drop(&mut self) {
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +274,60 @@ mod tests {
     fn try_run_ok() {
         let r: Result<Vec<usize>, ()> = try_run_indexed(3, 10, Ok);
         assert_eq!(r.unwrap(), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pinned_pool_routes_to_the_chosen_worker_in_order() {
+        let states: Vec<Vec<u64>> = vec![Vec::new(), Vec::new(), Vec::new()];
+        let pool = PinnedPool::spawn(states, 8, |state: &mut Vec<u64>, item: u64| {
+            state.push(item);
+        });
+        assert_eq!(pool.workers(), 3);
+        for i in 0..300u64 {
+            pool.send((i % 3) as usize, i);
+        }
+        let states = pool.join();
+        for (w, state) in states.iter().enumerate() {
+            let want: Vec<u64> = (0..300).filter(|i| (i % 3) as usize == w).collect();
+            assert_eq!(state, &want, "worker {w} saw items out of order or missing");
+        }
+    }
+
+    #[test]
+    fn pinned_pool_drop_without_join_terminates() {
+        let pool: PinnedPool<u64, u64> =
+            PinnedPool::spawn(vec![0u64, 0], 2, |state, item| *state += item);
+        pool.send(0, 1);
+        pool.send(1, 2);
+        drop(pool); // must close + join, not hang or leak blocked threads
+    }
+
+    #[test]
+    fn pinned_pool_worker_panic_does_not_hang_the_sender() {
+        let pool: PinnedPool<u64, u64> = PinnedPool::spawn(vec![0u64], 1, |_state, item| {
+            assert!(item != 3, "boom");
+        });
+        // the worker dies at item 3; later sends must be discarded, not
+        // block forever on a queue nothing drains
+        for i in 0..100u64 {
+            pool.send(0, i);
+        }
+        let joined = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.join()));
+        assert!(joined.is_err(), "join must propagate the worker panic");
+    }
+
+    #[test]
+    fn pinned_pool_backpressure_under_contention() {
+        // queue cap 1 with a worker that does real work per item: the
+        // sender is forced to block repeatedly; every item still lands
+        let pool: PinnedPool<u64, u64> = PinnedPool::spawn(vec![0u64], 1, |state, item| {
+            *state = state.wrapping_add(item);
+            std::hint::black_box(*state);
+        });
+        for i in 0..1000u64 {
+            pool.send(0, i);
+        }
+        let states = pool.join();
+        assert_eq!(states[0], (0..1000u64).sum::<u64>());
     }
 }

@@ -10,5 +10,6 @@ pub mod stream;
 
 pub use dataset::{Dataset, LabeledDataset, Schema};
 pub use row::{Features, Row, Value};
+pub use stream::parse_update_line;
 pub use stream::StreamGen;
 pub use stream::UpdateTriple;

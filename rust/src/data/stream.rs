@@ -40,6 +40,52 @@ impl SizeOf for UpdateTriple {
     }
 }
 
+/// Parse one ⟨ID, F, δ⟩ serve-input line: `ID FEATURE δ` for a numeric
+/// increment, `ID FEATURE old->new` for a categorical substitution
+/// (empty `old` for a newly arising value). Blank lines and `#` comments
+/// yield `Ok(None)`; anything else malformed is a typed
+/// `SparxError::InvalidParams` naming the line number (exit code 2 at
+/// the CLI). This is the whole grammar `sparx serve --updates` accepts.
+pub fn parse_update_line(lineno: usize, line: &str) -> crate::api::Result<Option<UpdateTriple>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let bad = |what: &str| {
+        crate::api::SparxError::InvalidParams(format!(
+            "update line {lineno}: {what} (expected `ID FEATURE δ` or `ID FEATURE old->new`)"
+        ))
+    };
+    let mut tok = line.split_whitespace();
+    let (Some(id_tok), Some(feature), Some(delta_tok), None) =
+        (tok.next(), tok.next(), tok.next(), tok.next())
+    else {
+        return Err(bad("expected exactly three whitespace-separated fields"));
+    };
+    let id: u64 = id_tok.parse().map_err(|_| bad(&format!("bad ID {id_tok:?}")))?;
+    if let Ok(delta) = delta_tok.parse::<f64>() {
+        // a NaN/∞ increment would poison the ID's sketch permanently
+        // (every component goes non-finite until eviction) — reject it
+        // like any other malformed token instead of scoring garbage
+        if !delta.is_finite() {
+            return Err(bad(&format!("non-finite δ {delta_tok:?}")));
+        }
+        return Ok(Some(UpdateTriple::Num { id, feature: feature.into(), delta }));
+    }
+    if let Some((old, new)) = delta_tok.split_once("->") {
+        if new.is_empty() {
+            return Err(bad("categorical update needs a non-empty new value"));
+        }
+        return Ok(Some(UpdateTriple::Cat {
+            id,
+            feature: feature.into(),
+            old: (!old.is_empty()).then(|| old.to_string()),
+            new: new.into(),
+        }));
+    }
+    Err(bad(&format!("third field {delta_tok:?} is neither a number nor old->new")))
+}
+
 /// Synthetic evolving stream for the §3.5 deployment demo: mostly numeric
 /// increments on known features, occasional categorical moves, and a
 /// trickle of *brand-new* features (the paper's motivating case — e.g. a
@@ -140,6 +186,68 @@ mod tests {
         let g = StreamGen::new(10, vec!["a".into()], 3);
         for u in g.take(100) {
             assert!(u.id() < 10);
+        }
+    }
+
+    #[test]
+    fn parse_numeric_and_categorical_lines() {
+        assert_eq!(
+            parse_update_line(1, "42 bytes_sent 1.5").unwrap(),
+            Some(UpdateTriple::Num { id: 42, feature: "bytes_sent".into(), delta: 1.5 })
+        );
+        assert_eq!(
+            parse_update_line(2, "7 loc NYC->Austin").unwrap(),
+            Some(UpdateTriple::Cat {
+                id: 7,
+                feature: "loc".into(),
+                old: Some("NYC".into()),
+                new: "Austin".into(),
+            })
+        );
+        // empty old = newly arising categorical value
+        assert_eq!(
+            parse_update_line(3, "7 loc ->NYC").unwrap(),
+            Some(UpdateTriple::Cat {
+                id: 7,
+                feature: "loc".into(),
+                old: None,
+                new: "NYC".into(),
+            })
+        );
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blank_lines() {
+        assert_eq!(parse_update_line(1, "").unwrap(), None);
+        assert_eq!(parse_update_line(2, "   ").unwrap(), None);
+        assert_eq!(parse_update_line(3, "# a comment").unwrap(), None);
+        assert_eq!(parse_update_line(4, "  # indented comment").unwrap(), None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines_typed_with_line_number() {
+        use crate::api::SparxError;
+        for (lineno, line) in [
+            (1, "42"),                     // one field
+            (2, "42 f0"),                  // two fields
+            (3, "42 f0 1.0 extra"),        // four fields
+            (4, "notanid f0 1.0"),         // bad ID
+            (5, "42 f0 north"),            // neither number nor old->new
+            (6, "42 loc NYC->"),           // empty new value
+            (7, "-1 f0 1.0"),              // negative ID
+            (8, "42 f0 NaN"),              // sketch-poisoning increment
+            (9, "42 f0 inf"),              // likewise
+        ] {
+            let r = parse_update_line(lineno, line);
+            match r {
+                Err(SparxError::InvalidParams(msg)) => {
+                    assert!(
+                        msg.contains(&format!("update line {lineno}")),
+                        "line {line:?}: message must name the line, got {msg:?}"
+                    );
+                }
+                other => panic!("line {line:?} must fail typed, got {other:?}"),
+            }
         }
     }
 }

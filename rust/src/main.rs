@@ -22,9 +22,10 @@
 //!                [--backend native|pjrt] [--exec fused|per-chain]
 //! sparx score    --model m.sparx [--dataset gisette|osm|spamurl]
 //!                [--config gen|mod|local] [--scale S] [--seed N]
-//!                [--out scores.csv]
+//!                [--out scores.csv] [--backend native|pjrt]
 //! sparx serve    --model m.sparx [--updates FILE|-] [--count N]
-//!                [--cache N] [--seed N]        # ⟨ID, F, δ⟩ loop, §3.5
+//!                [--cache N] [--seed N] [--shards S]
+//!                [--backend native|pjrt]       # ⟨ID, F, δ⟩ loop, §3.5
 //! sparx detect   --method … [fit flags] [--out scores.csv]   # fit+score in one
 //! sparx experiment <table2|table3|table4|fig2|fig3|fig4|fig5|fig6|all>
 //!                [--scale S] [--seed N] [--out EXPERIMENTS_RESULTS.md]
@@ -36,7 +37,18 @@
 //! `serve` reads one update triple per line (`#` comments and blank
 //! lines skipped): `ID FEATURE δ` for numeric increments, and
 //! `ID FEATURE old->new` (empty `old` for a newly arising value) for
-//! categorical substitutions.
+//! categorical substitutions. With `--shards S > 1` (default: the
+//! machine's available parallelism — pass `--shards` explicitly for
+//! machine-independent output) updates are partitioned by
+//! `murmur(ID) % S` across S shard worker threads, each owning its own
+//! LRU of `--cache` IDs. Each shard scores bit-identically to a
+//! single-threaded scorer fed its sub-stream; while no shard evicts,
+//! per-ID scores are bit-identical to `--shards 1` too (eviction timing
+//! depends on which IDs share an LRU, so an over-subscribed cache can
+//! reset sketches at different points per shard count). `--backend
+//! native` on `score`/`serve` overrides the backend a sparx artifact
+//! was fitted with (scores are backend-identical, so a PJRT-fitted
+//! model can be served without the compiled AOT modules).
 
 use std::collections::HashMap;
 use std::str::FromStr;
@@ -44,7 +56,7 @@ use std::str::FromStr;
 use sparx::api::{registry, Backend, Detector as _, DetectorSpec, FittedModel, SparxError};
 use sparx::config::presets;
 use sparx::data::generators::{GisetteGen, OsmGen, SpamUrlGen};
-use sparx::data::{LabeledDataset, StreamGen, UpdateTriple};
+use sparx::data::{parse_update_line, LabeledDataset, StreamGen, UpdateTriple};
 use sparx::experiments::{self, align_scores};
 use sparx::metrics::{RankMetrics, ResourceReport};
 use sparx::runtime::{ArtifactManifest, PjrtEngine};
@@ -172,20 +184,12 @@ fn make_dataset(
 
 // ------------------------------------------------- detect / fit shared
 
-/// The hyperparameter + data flags shared by `detect` and `fit`.
+/// The hyperparameter + data flags shared by `detect` and `fit`; each
+/// command appends its one extra flag (`--out` / `--model-out`) at its
+/// `check_flags` call instead of repeating this list.
 const HYPER_FLAGS: [&str; 14] = [
     "method", "dataset", "config", "components", "chains", "depth", "rate", "k", "eps",
     "min-pts", "scale", "seed", "backend", "exec",
-];
-
-const DETECT_FLAGS: [&str; 15] = [
-    "method", "dataset", "config", "components", "chains", "depth", "rate", "k", "eps",
-    "min-pts", "scale", "seed", "backend", "exec", "out",
-];
-
-const FIT_FLAGS: [&str; 15] = [
-    "method", "dataset", "config", "components", "chains", "depth", "rate", "k", "eps",
-    "min-pts", "scale", "seed", "backend", "exec", "model-out",
 ];
 
 /// Explicitly-passed flags the chosen method would ignore are errors,
@@ -241,11 +245,7 @@ fn build_spec(
             return Err(usage_err(format!("unknown exec mode {other:?} (fused|per-chain)")))
         }
     };
-    let backend = match flags.get("backend").map(String::as_str) {
-        Some("pjrt") => Backend::Pjrt,
-        Some("native") | None => Backend::Native,
-        Some(other) => return Err(usage_err(format!("unknown backend {other:?} (native|pjrt)"))),
-    };
+    let backend = parse_backend_flag(flags)?.unwrap_or(Backend::Native);
     if flags.contains_key("components") && flags.contains_key("chains") {
         return Err(usage_err("--components and --chains are aliases; pass only one".into()));
     }
@@ -305,7 +305,9 @@ fn make_flagged_dataset(
 // --------------------------------------------------------------- detect
 
 fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
-    check_flags("detect", flags, &DETECT_FLAGS)?;
+    let mut allowed = HYPER_FLAGS.to_vec();
+    allowed.push("out");
+    check_flags("detect", flags, &allowed)?;
     let method = flags.get("method").cloned().unwrap_or_else(|| "sparx".into());
     check_method_flags(&method, flags, &["out"])?;
     let seed: Option<u64> = flag_opt(flags, "seed")?;
@@ -340,7 +342,9 @@ fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
 // ------------------------------------------------------------------ fit
 
 fn cmd_fit(flags: &HashMap<String, String>) -> CliResult {
-    check_flags("fit", flags, &FIT_FLAGS)?;
+    let mut allowed = HYPER_FLAGS.to_vec();
+    allowed.push("model-out");
+    check_flags("fit", flags, &allowed)?;
     let model_out = flags
         .get("model-out")
         .cloned()
@@ -372,14 +376,38 @@ fn cmd_fit(flags: &HashMap<String, String>) -> CliResult {
 
 // ---------------------------------------------------------------- score
 
+/// Parse the optional `--backend` flag. `fit`/`detect` default it to
+/// native (via `build_spec`); on `score`/`serve` it overrides the
+/// backend a sparx artifact was fitted with — scores are
+/// backend-identical, so forcing `native` on a PJRT-fitted artifact is
+/// safe (see `registry::load_with_backend`).
+fn parse_backend_flag(flags: &HashMap<String, String>) -> Result<Option<Backend>, SparxError> {
+    match flags.get("backend").map(String::as_str) {
+        None => Ok(None),
+        Some("native") => Ok(Some(Backend::Native)),
+        Some("pjrt") => Ok(Some(Backend::Pjrt)),
+        Some(other) => Err(usage_err(format!("unknown backend {other:?} (native|pjrt)"))),
+    }
+}
+
 fn cmd_score(flags: &HashMap<String, String>) -> CliResult {
-    check_flags("score", flags, &["model", "dataset", "config", "scale", "seed", "out"])?;
+    check_flags(
+        "score",
+        flags,
+        &["model", "dataset", "config", "scale", "seed", "out", "backend"],
+    )?;
     let path = flags
         .get("model")
         .cloned()
         .ok_or_else(|| usage_err("score requires --model <file>".into()))?;
-    let model = registry::load(&path)?;
-    println!("loaded {} model from {path} ({}B payload)", model.name(), model.model_bytes());
+    let backend = parse_backend_flag(flags)?;
+    let model = registry::load_with_backend(&path, backend)?;
+    println!(
+        "loaded {} model from {path} ({}B payload{})",
+        model.name(),
+        model.model_bytes(),
+        if backend.is_some() { ", backend overridden" } else { "" }
+    );
     let mut ctx = make_ctx(flags)?;
     let (_, ld) = make_flagged_dataset(flags, &ctx)?;
     ctx.reset();
@@ -406,68 +434,14 @@ fn cmd_score(flags: &HashMap<String, String>) -> CliResult {
 
 // ---------------------------------------------------------------- serve
 
-/// Parse one ⟨ID, F, δ⟩ line: `ID FEATURE δ` (numeric increment) or
-/// `ID FEATURE old->new` (categorical substitution, empty `old` for a
-/// newly arising value). Blank lines and `#` comments are skipped.
-fn parse_update_line(lineno: usize, line: &str) -> Result<Option<UpdateTriple>, SparxError> {
-    let line = line.trim();
-    if line.is_empty() || line.starts_with('#') {
-        return Ok(None);
-    }
-    let bad = |what: &str| {
-        usage_err(format!(
-            "update line {lineno}: {what} (expected `ID FEATURE δ` or `ID FEATURE old->new`)"
-        ))
-    };
-    let mut tok = line.split_whitespace();
-    let (Some(id_tok), Some(feature), Some(delta_tok), None) =
-        (tok.next(), tok.next(), tok.next(), tok.next())
-    else {
-        return Err(bad("expected exactly three whitespace-separated fields"));
-    };
-    let id: u64 = id_tok.parse().map_err(|_| bad(&format!("bad ID {id_tok:?}")))?;
-    if let Ok(delta) = delta_tok.parse::<f64>() {
-        return Ok(Some(UpdateTriple::Num { id, feature: feature.into(), delta }));
-    }
-    if let Some((old, new)) = delta_tok.split_once("->") {
-        if new.is_empty() {
-            return Err(bad("categorical update needs a non-empty new value"));
-        }
-        return Ok(Some(UpdateTriple::Cat {
-            id,
-            feature: feature.into(),
-            old: (!old.is_empty()).then(|| old.to_string()),
-            new: new.into(),
-        }));
-    }
-    Err(bad(&format!("third field {delta_tok:?} is neither a number nor old->new")))
-}
-
-fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
-    check_flags("serve", flags, &["model", "updates", "count", "cache", "seed"])?;
-    let path = flags
-        .get("model")
-        .cloned()
-        .ok_or_else(|| usage_err("serve requires --model <file>".into()))?;
-    let cache = flag_or(flags, "cache", 4096usize)?;
-    let model = registry::load(&path)?;
-    println!(
-        "serving {} model from {path} ({}B payload, LRU cache {cache} ids)",
-        model.name(),
-        model.model_bytes()
-    );
-    let mut scorer = model.stream_scorer(cache)?;
-    let t0 = std::time::Instant::now();
-    let mut worst: Option<sparx::sparx::StreamScore> = None;
-    let mut track = |s: sparx::sparx::StreamScore| {
-        let more_outlying = match &worst {
-            None => true,
-            Some(w) => s.outlierness > w.outlierness,
-        };
-        if more_outlying {
-            worst = Some(s);
-        }
-    };
+/// Drive every update from the configured source — `--updates FILE|-`
+/// (parsed by `sparx::data::parse_update_line`) or the synthetic
+/// `--count` stream — through `f`.
+fn for_each_update(
+    flags: &HashMap<String, String>,
+    names: Option<&[String]>,
+    mut f: impl FnMut(UpdateTriple),
+) -> CliResult {
     if let Some(src) = flags.get("updates") {
         // --count/--seed only shape the synthetic stream; silently
         // ignoring them alongside a real update source would break the
@@ -487,7 +461,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         };
         for (i, line) in reader.lines().enumerate() {
             if let Some(u) = parse_update_line(i + 1, &line?)? {
-                track(scorer.update(&u));
+                f(u);
             }
         }
     } else {
@@ -495,25 +469,93 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         // model's own feature space (or a generic one)
         let count = flag_or(flags, "count", 10_000usize)?;
         let seed: Option<u64> = flag_opt(flags, "seed")?;
-        let names = match scorer.feature_names() {
+        let names = match names {
             Some(names) => names.to_vec(),
             None => (0..64).map(|j| format!("f{j}")).collect(),
         };
         let mut gen = StreamGen::new(5000, names, seed.unwrap_or(42));
         for _ in 0..count {
-            track(scorer.update(&gen.next_update()));
+            f(gen.next_update());
         }
     }
-    let dt = t0.elapsed().as_secs_f64();
-    let n = scorer.processed();
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
+    check_flags(
+        "serve",
+        flags,
+        &["model", "updates", "count", "cache", "seed", "shards", "backend"],
+    )?;
+    let path = flags
+        .get("model")
+        .cloned()
+        .ok_or_else(|| usage_err("serve requires --model <file>".into()))?;
+    let cache = flag_or(flags, "cache", 4096usize)?;
+    let default_shards = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let shards = flag_or(flags, "shards", default_shards)?;
+    if shards == 0 {
+        return Err(usage_err("--shards must be ≥ 1".into()));
+    }
+    let model = registry::load_with_backend(&path, parse_backend_flag(flags)?)?;
     println!(
-        "processed {n} δ-updates in {dt:.3}s ({:.0} updates/s), cache {}/{cache}, {} evictions",
-        n as f64 / dt.max(1e-9),
-        scorer.cached_ids(),
-        scorer.evictions()
+        "serving {} model from {path} ({}B payload, {shards} shard(s) × LRU {cache} ids)",
+        model.name(),
+        model.model_bytes()
     );
-    if let Some(w) = worst {
-        println!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness);
+    if shards == 1 {
+        // single-threaded fast path: no queues, no worker threads
+        let mut scorer = model.stream_scorer(cache)?;
+        let names = scorer.feature_names().map(|n| n.to_vec());
+        let t0 = std::time::Instant::now();
+        let mut worst: Option<sparx::sparx::StreamScore> = None;
+        for_each_update(flags, names.as_deref(), |u| {
+            let s = scorer.update(&u);
+            if s.more_outlying_than(worst.as_ref()) {
+                worst = Some(s);
+            }
+        })?;
+        let dt = t0.elapsed().as_secs_f64();
+        let n = scorer.processed();
+        println!(
+            "processed {n} δ-updates in {dt:.3}s ({:.0} updates/s), cache {}/{cache}, \
+             {} evictions",
+            n as f64 / dt.max(1e-9),
+            scorer.cached_ids(),
+            scorer.evictions()
+        );
+        if let Some(w) = worst {
+            println!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness);
+        }
+    } else {
+        // sharded: murmur(ID) % shards routes each update to a pinned
+        // worker owning its own LRU — shared-nothing, so each shard is
+        // bit-identical to a single-threaded scorer fed its sub-stream
+        // (and to --shards 1 per ID, while no shard evicts)
+        let mut scorer = model.stream_scorer_sharded(shards, cache)?;
+        let names = scorer.feature_names().map(|n| n.to_vec());
+        let t0 = std::time::Instant::now();
+        for_each_update(flags, names.as_deref(), |u| scorer.submit(u))?;
+        let report = scorer.finish();
+        let dt = t0.elapsed().as_secs_f64();
+        let n = report.processed();
+        println!(
+            "processed {n} δ-updates in {dt:.3}s ({:.0} updates/s) across {shards} shards, \
+             cache {}/{} ids, {} evictions",
+            n as f64 / dt.max(1e-9),
+            report.cached_ids(),
+            shards * cache,
+            report.evictions()
+        );
+        for (i, s) in report.shards.iter().enumerate() {
+            println!(
+                "  shard {i}: {} updates, cache {}/{cache} ids, {} evictions",
+                s.processed, s.cached_ids, s.evictions
+            );
+        }
+        if let Some(w) = &report.worst {
+            println!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness);
+        }
     }
     Ok(())
 }
@@ -572,7 +614,7 @@ fn cmd_stream(flags: &HashMap<String, String>) -> CliResult {
     for _ in 0..updates {
         let u = gen.next_update();
         let s = scorer.update(&u);
-        if worst.as_ref().map_or(true, |w| s.outlierness > w.outlierness) {
+        if s.more_outlying_than(worst.as_ref()) {
             worst = Some(s);
         }
     }

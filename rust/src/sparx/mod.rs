@@ -7,6 +7,8 @@
 //! * [`ensemble`] — Steps 2–3: distributed fit and scoring (Algs. 2–3, Eq. 5)
 //! * [`plan`] — fused single-pass multi-chain executors ([`ExecMode`])
 //! * [`stream`] — §3.5 deployment front-end for evolving streams
+//! * [`sharded`] — the concurrent front-end: ID-hash sharding of
+//!   [`stream`] across pinned worker threads
 //!
 //! Most callers should not drive these pieces directly: the
 //! [`crate::api`] module wraps them in the unified [`crate::api::Detector`]
@@ -19,6 +21,7 @@ pub mod cms;
 pub mod ensemble;
 pub mod plan;
 pub mod projector;
+pub mod sharded;
 pub mod stream;
 
 pub use chain::{Binner, ChainParams, NativeBinner};
@@ -26,4 +29,5 @@ pub use cms::CountMinSketch;
 pub use ensemble::{score_bins, ScoreMode, SparxModel, SparxParams, TrainedChain};
 pub use plan::{ChainSet, ExecMode};
 pub use projector::{compute_deltamax, project_dataset, Projector, Sketch};
+pub use sharded::{shard_of, ShardCounters, ShardedReport, ShardedStreamScorer};
 pub use stream::{StreamScore, StreamScorer};

@@ -1,0 +1,328 @@
+//! Sharded concurrent serving (§3.5 scaled out): S shared-nothing
+//! shards, each owning its own LRU + sketch state behind a bounded
+//! ingest queue on a long-lived pinned worker thread.
+//!
+//! Updates route by `murmur(ID) % S`, so every update for a given ID
+//! lands on the same shard, in arrival order. Because shards share
+//! nothing — separate caches, separate CMS copies, separate scratch —
+//! each shard behaves **bit-identically** to a single-threaded
+//! [`StreamScorer`] fed that shard's sub-stream, regardless of thread
+//! interleaving. While no shard evicts, per-ID score sequences are
+//! additionally identical across shard counts (eviction resets a
+//! sketch, and *when* an ID is evicted depends on which other IDs share
+//! its LRU — the one part of the contract that is cache-sizing, not
+//! sharding). Both statements are what the determinism harness in
+//! `tests/sharded.rs` replays.
+//!
+//! Design notes:
+//! * the feeder coalesces routed updates into small batches so queue
+//!   synchronisation amortises (one lock round trip per [`BATCH`]
+//!   updates, not per update);
+//! * a full shard queue blocks the feeder ([`PinnedPool`] backpressure)
+//!   — updates are never dropped;
+//! * [`ShardedStreamScorer::finish`] flushes, closes the queues, joins
+//!   the workers and merges per-shard counters into a [`ShardedReport`].
+
+use crate::api::{Result, SparxError};
+use crate::cluster::pool::PinnedPool;
+use crate::data::UpdateTriple;
+use crate::hash::murmur3_bytes;
+
+use super::ensemble::SparxModel;
+use super::stream::{StreamScore, StreamScorer};
+
+/// Seed of the ID → shard murmur route. Fixed: shard assignment is part
+/// of the serving contract (a restarted deployment must route every ID
+/// to the same shard it lived on before).
+const SHARD_ROUTE_SEED: u32 = 0x51AD_0C47;
+
+/// Updates per channel message (feeder-side coalescing).
+const BATCH: usize = 64;
+
+/// Bound of each shard's ingest queue, in batches.
+const QUEUE_CAP_BATCHES: usize = 64;
+
+/// Shard index for `id` among `shards` shards.
+#[inline]
+pub fn shard_of(id: u64, shards: usize) -> usize {
+    debug_assert!(shards >= 1);
+    murmur3_bytes(&id.to_le_bytes(), SHARD_ROUTE_SEED) as usize % shards
+}
+
+/// Per-shard worker state: the shard's own single-threaded scorer plus
+/// the counters the merged report is built from.
+struct Shard {
+    scorer: StreamScorer,
+    worst: Option<StreamScore>,
+    admitted: u64,
+    recorded: Option<Vec<StreamScore>>,
+}
+
+/// Counters one shard reports after [`ShardedStreamScorer::finish`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardCounters {
+    /// δ-updates this shard processed.
+    pub processed: u64,
+    /// IDs admitted to this shard's cache (`fresh` scores).
+    pub admitted: u64,
+    /// LRU evictions in this shard.
+    pub evictions: u64,
+    /// Sketches resident in this shard's cache at shutdown.
+    pub cached_ids: usize,
+}
+
+/// The merged post-shutdown report: per-shard counters, the most
+/// outlying update seen anywhere, and (in recording mode) every shard's
+/// full score sequence in processing order.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    pub shards: Vec<ShardCounters>,
+    pub worst: Option<StreamScore>,
+    /// Per-shard score logs; empty unless the scorer was built with
+    /// [`ShardedStreamScorer::recording`].
+    pub scores: Vec<Vec<StreamScore>>,
+}
+
+impl ShardedReport {
+    /// Total δ-updates processed across shards.
+    pub fn processed(&self) -> u64 {
+        self.shards.iter().map(|s| s.processed).sum()
+    }
+
+    /// Total LRU evictions across shards.
+    pub fn evictions(&self) -> u64 {
+        self.shards.iter().map(|s| s.evictions).sum()
+    }
+
+    /// Total cache admissions across shards.
+    pub fn admitted(&self) -> u64 {
+        self.shards.iter().map(|s| s.admitted).sum()
+    }
+
+    /// Total sketches resident across shards at shutdown.
+    pub fn cached_ids(&self) -> usize {
+        self.shards.iter().map(|s| s.cached_ids).sum()
+    }
+}
+
+/// The multi-threaded §3.5 front-end. Build from a fitted model via
+/// [`ShardedStreamScorer::new`] (or `FittedModel::stream_scorer_sharded`
+/// through the api), [`submit`](Self::submit) the update stream, then
+/// [`finish`](Self::finish) for the merged report.
+pub struct ShardedStreamScorer {
+    pool: PinnedPool<Vec<UpdateTriple>, Shard>,
+    pending: Vec<Vec<UpdateTriple>>,
+    shards: usize,
+    submitted: u64,
+    feature_names: Option<Vec<String>>,
+}
+
+impl ShardedStreamScorer {
+    /// `shards` shared-nothing workers, each with an LRU of
+    /// `cache_per_shard` IDs (total resident sketches:
+    /// `shards × cache_per_shard`). Same model requirements as
+    /// [`StreamScorer::new`].
+    pub fn new(model: &SparxModel, shards: usize, cache_per_shard: usize) -> Result<Self> {
+        Self::build(model, shards, cache_per_shard, false)
+    }
+
+    /// Test-harness constructor: every shard additionally records its
+    /// full score sequence for later comparison. Memory grows with the
+    /// stream — not for production serving.
+    pub fn recording(model: &SparxModel, shards: usize, cache_per_shard: usize) -> Result<Self> {
+        Self::build(model, shards, cache_per_shard, true)
+    }
+
+    fn build(
+        model: &SparxModel,
+        shards: usize,
+        cache_per_shard: usize,
+        record: bool,
+    ) -> Result<Self> {
+        if shards == 0 {
+            return Err(SparxError::InvalidParams("shard count must be ≥ 1".into()));
+        }
+        if shards > 4096 {
+            return Err(SparxError::InvalidParams(format!(
+                "shard count {shards} exceeds the 4096-thread cap"
+            )));
+        }
+        let mut states = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            states.push(Shard {
+                scorer: StreamScorer::new(model, cache_per_shard)?,
+                worst: None,
+                admitted: 0,
+                recorded: record.then(Vec::new),
+            });
+        }
+        let pool = PinnedPool::spawn(
+            states,
+            QUEUE_CAP_BATCHES,
+            |shard: &mut Shard, batch: Vec<UpdateTriple>| {
+                for u in batch {
+                    let s = shard.scorer.update(&u);
+                    if s.fresh {
+                        shard.admitted += 1;
+                    }
+                    if s.more_outlying_than(shard.worst.as_ref()) {
+                        shard.worst = Some(s.clone());
+                    }
+                    if let Some(log) = &mut shard.recorded {
+                        log.push(s);
+                    }
+                }
+            },
+        );
+        Ok(ShardedStreamScorer {
+            pool,
+            pending: vec![Vec::with_capacity(BATCH); shards],
+            shards,
+            submitted: 0,
+            feature_names: model.projector.dense_schema().map(|n| n.to_vec()),
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Updates submitted so far (some may still be in flight — the
+    /// per-shard `processed` counters are exact only after `finish`).
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// See [`StreamScorer::feature_names`].
+    pub fn feature_names(&self) -> Option<&[String]> {
+        self.feature_names.as_deref()
+    }
+
+    /// Route one update to its shard. Blocks only when that shard's
+    /// bounded ingest queue is full (backpressure, never loss — unless
+    /// a shard worker has panicked, in which case its updates are
+    /// discarded and [`finish`](Self::finish) re-raises the panic).
+    pub fn submit(&mut self, u: UpdateTriple) {
+        let s = shard_of(u.id(), self.shards);
+        self.pending[s].push(u);
+        self.submitted += 1;
+        if self.pending[s].len() >= BATCH {
+            let batch = std::mem::replace(&mut self.pending[s], Vec::with_capacity(BATCH));
+            self.pool.send(s, batch);
+        }
+    }
+
+    /// Flush the pending batches, close the queues, join the workers
+    /// and merge the per-shard counters.
+    pub fn finish(self) -> ShardedReport {
+        let ShardedStreamScorer { pool, mut pending, .. } = self;
+        for (s, buf) in pending.iter_mut().enumerate() {
+            if !buf.is_empty() {
+                pool.send(s, std::mem::take(buf));
+            }
+        }
+        let shards = pool.join();
+        let mut report = ShardedReport {
+            shards: Vec::with_capacity(shards.len()),
+            worst: None,
+            scores: Vec::with_capacity(shards.len()),
+        };
+        for sh in shards {
+            report.shards.push(ShardCounters {
+                processed: sh.scorer.processed(),
+                admitted: sh.admitted,
+                evictions: sh.scorer.evictions(),
+                cached_ids: sh.scorer.cached_ids(),
+            });
+            if let Some(w) = sh.worst {
+                if w.more_outlying_than(report.worst.as_ref()) {
+                    report.worst = Some(w);
+                }
+            }
+            report.scores.push(sh.recorded.unwrap_or_default());
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::data::generators::GisetteGen;
+    use crate::sparx::SparxParams;
+
+    fn fitted() -> SparxModel {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let ld = GisetteGen { n: 300, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+        SparxModel::fit(
+            &ctx,
+            &ld.dataset,
+            &SparxParams { k: 8, num_chains: 6, depth: 5, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        for shards in [1usize, 2, 3, 8] {
+            for id in 0..500u64 {
+                let s = shard_of(id, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(id, shards));
+            }
+        }
+    }
+
+    #[test]
+    fn submit_finish_counts_every_update() {
+        let model = fitted();
+        let mut scorer = ShardedStreamScorer::new(&model, 3, 32).unwrap();
+        for id in 0..200u64 {
+            scorer.submit(UpdateTriple::Num { id, feature: "f0".into(), delta: 1.0 });
+        }
+        assert_eq!(scorer.submitted(), 200);
+        let report = scorer.finish();
+        assert_eq!(report.processed(), 200);
+        assert_eq!(report.admitted(), 200, "every id is distinct → every update admits");
+        assert_eq!(report.shards.len(), 3);
+    }
+
+    #[test]
+    fn zero_shards_and_zero_cache_are_typed_errors() {
+        let model = fitted();
+        assert!(matches!(
+            ShardedStreamScorer::new(&model, 0, 32),
+            Err(SparxError::InvalidParams(_))
+        ));
+        assert!(matches!(
+            ShardedStreamScorer::new(&model, 2, 0),
+            Err(SparxError::InvalidParams(_))
+        ));
+    }
+
+    #[test]
+    fn drop_without_finish_shuts_down() {
+        let model = fitted();
+        let mut scorer = ShardedStreamScorer::new(&model, 2, 8).unwrap();
+        scorer.submit(UpdateTriple::Num { id: 1, feature: "f0".into(), delta: 1.0 });
+        drop(scorer); // error-path shutdown: close queues, join workers
+    }
+
+    #[test]
+    fn recording_mode_captures_per_shard_logs() {
+        let model = fitted();
+        let mut scorer = ShardedStreamScorer::recording(&model, 2, 32).unwrap();
+        for id in 0..10u64 {
+            scorer.submit(UpdateTriple::Num { id, feature: "f0".into(), delta: 0.5 });
+        }
+        let report = scorer.finish();
+        let logged: usize = report.scores.iter().map(Vec::len).sum();
+        assert_eq!(logged, 10);
+        for (s, log) in report.scores.iter().enumerate() {
+            for rec in log {
+                assert_eq!(shard_of(rec.id, 2), s, "score recorded on the wrong shard");
+            }
+        }
+    }
+}

@@ -26,6 +26,21 @@ pub struct StreamScore {
     pub fresh: bool,
 }
 
+impl StreamScore {
+    /// Whether this score is strictly more outlying than `current`
+    /// (`None` loses — the first score seen always wins). The one
+    /// comparison every "most outlying update" tracker shares. Strict
+    /// `>` means ties keep the earliest candidate *a given tracker*
+    /// saw: per shard that is stream order, and the cross-shard merge
+    /// then prefers the lowest shard index among bit-equal scores.
+    pub fn more_outlying_than(&self, current: Option<&StreamScore>) -> bool {
+        match current {
+            None => true,
+            Some(w) => self.outlierness > w.outlierness,
+        }
+    }
+}
+
 /// The deployment-node scorer.
 pub struct StreamScorer {
     chains: Vec<TrainedChain>,

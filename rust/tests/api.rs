@@ -429,6 +429,67 @@ fn save_load_file_round_trip_and_missing_file_is_io() {
     assert!(matches!(registry::load(&path), Err(SparxError::Io(_))));
 }
 
+/// The ROADMAP "backend override at load" quick win: scores are
+/// backend-identical, so a PJRT-tagged artifact must load under a
+/// `Backend::Native` override and score **bit-identically** to the
+/// original native model. Without the override the stored backend wins
+/// — and in this build (no `pjrt` feature) that is a typed
+/// `MissingArtifact`, which is exactly the situation the override
+/// exists to rescue.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn backend_override_loads_pjrt_tagged_artifacts_and_scores_identically() {
+    use sparx::api::Backend;
+    let ctx = local(2);
+    let ld = GisetteGen { n: 300, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+    let spec = DetectorSpec {
+        k: Some(8),
+        components: Some(4),
+        depth: Some(4),
+        sample_rate: Some(1.0),
+        ..Default::default()
+    };
+    let model = registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    let want = model.score(&ctx, &ld.dataset).unwrap();
+    let mut art = model.to_artifact().unwrap();
+    // rewrite the stored backend to PJRT/"gisette". Param block layout:
+    // sparx hyperparameters, then the backend u8, then the
+    // u32-length-prefixed variant string ("" for native), so the native
+    // tail is exactly 5 bytes: tag at len-5, then the zero length.
+    let n = art.params.len();
+    assert_eq!(art.params[n - 5], 0, "expected the native backend tag at params[len-5]");
+    let mut tampered = art.params[..n - 5].to_vec();
+    tampered.push(1); // backend tag: PJRT
+    tampered.extend_from_slice(&7u32.to_le_bytes());
+    tampered.extend_from_slice(b"gisette");
+    art.params = tampered;
+    let bytes = art.to_bytes();
+    // stored backend wins without an override → needs the PJRT engine
+    assert!(matches!(
+        registry::load_bytes(&bytes),
+        Err(SparxError::MissingArtifact(_))
+    ));
+    // …but the native override loads it and scores bit-identically
+    let loaded = registry::load_bytes_with_backend(&bytes, Some(Backend::Native)).unwrap();
+    assert_eq!(loaded.score(&ctx, &ld.dataset).unwrap(), want, "override must not move scores");
+    // a native override on a native artifact is a no-op
+    let native_bytes = model.to_artifact().unwrap().to_bytes();
+    let renative = registry::load_bytes_with_backend(&native_bytes, Some(Backend::Native));
+    assert_eq!(renative.unwrap().score(&ctx, &ld.dataset).unwrap(), want);
+    // the override is sparx-only: other detectors reject it typed
+    let xspec = DetectorSpec { components: Some(4), depth: Some(4), ..Default::default() };
+    let xmodel = registry::build("xstream", &xspec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    let xbytes = xmodel.to_artifact().unwrap().to_bytes();
+    let r = registry::load_bytes_with_backend(&xbytes, Some(Backend::Native));
+    assert!(matches!(r, Err(SparxError::Unsupported(_))), "{:?}", r.err());
+    // and the reverse direction is shape-unsafe: a native artifact
+    // stores no AOT variant, so forcing pjrt is rejected typed rather
+    // than guessing which compiled tile shapes to run
+    let native_again = model.to_artifact().unwrap().to_bytes();
+    let r = registry::load_bytes_with_backend(&native_again, Some(Backend::Pjrt));
+    assert!(matches!(r, Err(SparxError::Unsupported(_))), "{:?}", r.err());
+}
+
 #[test]
 fn seeded_runs_reproduce_and_seeds_differentiate() {
     let ctx = local(4);

@@ -1,0 +1,193 @@
+//! End-to-end CLI tests: spawn the built `sparx` binary and assert the
+//! documented exit codes — `0` success, `2` usage/validation, `1`
+//! runtime — for the serve-input grammar (malformed triples, `old->new`
+//! substitutions, `#` comments, empty files), the `--backend` override
+//! at load, and the sharded serve path.
+
+use std::io::Write as _;
+use std::process::{Command, Stdio};
+use std::sync::OnceLock;
+
+use sparx::api::{registry, Detector as _, DetectorSpec, FittedModel as _};
+use sparx::cluster::ClusterConfig;
+use sparx::data::generators::GisetteGen;
+
+/// Run the CLI with `args` (and optional stdin), returning
+/// (exit code, stdout, stderr).
+fn run_sparx(args: &[&str], stdin: Option<&str>) -> (i32, String, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sparx"));
+    cmd.args(args).stdout(Stdio::piped()).stderr(Stdio::piped());
+    cmd.stdin(if stdin.is_some() { Stdio::piped() } else { Stdio::null() });
+    let mut child = cmd.spawn().expect("spawn the sparx binary");
+    if let Some(input) = stdin {
+        let mut pipe = child.stdin.take().expect("stdin was piped");
+        pipe.write_all(input.as_bytes()).expect("write stdin");
+        // pipe drops here → EOF for the child
+    }
+    let out = child.wait_with_output().expect("wait for sparx");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+/// Fit one small sparx model per test process and save its artifact;
+/// every test serves/scores this file. The Gisette shape (d=512) matches
+/// what `--dataset gisette` generates, so `sparx score` round trips.
+fn model_path() -> &'static str {
+    static PATH: OnceLock<String> = OnceLock::new();
+    PATH.get_or_init(|| {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let ld = GisetteGen { n: 200, d: 512, ..Default::default() }.generate(&ctx).unwrap();
+        let spec = DetectorSpec {
+            k: Some(8),
+            components: Some(4),
+            depth: Some(4),
+            sample_rate: Some(1.0),
+            ..Default::default()
+        };
+        let model = registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+        let path = std::env::temp_dir().join(format!("sparx-cli-{}.sparx", std::process::id()));
+        let path = path.to_str().expect("utf-8 temp path").to_string();
+        model.to_artifact().unwrap().save(&path).unwrap();
+        path
+    })
+}
+
+/// Write an updates file with unique name; returns its path.
+fn write_updates(content: &str) -> String {
+    static N: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+    let n = N.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let path = std::env::temp_dir()
+        .join(format!("sparx-cli-updates-{}-{n}.txt", std::process::id()));
+    std::fs::write(&path, content).expect("write updates file");
+    path.to_str().expect("utf-8 temp path").to_string()
+}
+
+/// `sparx serve` on the shared model reading the given updates file,
+/// which is deleted afterwards (no temp-dir accumulation across runs).
+fn run_serve_updates(file: &str) -> (i32, String, String) {
+    let out = run_sparx(&["serve", "--model", model_path(), "--updates", file], None);
+    let _ = std::fs::remove_file(file);
+    out
+}
+
+// ------------------------------------------------- serve-input parsing
+
+#[test]
+fn serve_parses_comments_blanks_numeric_and_substitution_lines() {
+    let file = write_updates("# hdr\n\n1 f0 1.5\n2 loc ->NYC\n2 loc NYC->Austin\n1 f1 -0.25\n");
+    let args = ["serve", "--model", model_path(), "--updates", &file, "--shards", "1"];
+    let (code, out, err) = run_sparx(&args, None);
+    let _ = std::fs::remove_file(&file);
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("processed 4 δ-updates"), "{out}");
+}
+
+#[test]
+fn serve_empty_update_file_is_a_no_op_success() {
+    let file = write_updates("");
+    let (code, out, err) = run_serve_updates(&file);
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("processed 0 δ-updates"), "{out}");
+}
+
+#[test]
+fn serve_malformed_triple_is_usage_error_naming_the_line() {
+    let file = write_updates("1 f0 1.0\n2 f0\n");
+    let (code, _out, err) = run_serve_updates(&file);
+    assert_eq!(code, 2, "stderr: {err}");
+    assert!(err.contains("update line 2"), "{err}");
+}
+
+#[test]
+fn serve_bad_id_bad_delta_and_empty_new_value_fail_typed() {
+    for line in ["abc f0 1.0", "1 f0 north", "1 loc NYC->"] {
+        let file = write_updates(&format!("{line}\n"));
+        let (code, _out, err) = run_serve_updates(&file);
+        assert_eq!(code, 2, "line {line:?} must exit 2; stderr: {err}");
+        assert!(err.contains("update line 1"), "line {line:?}: {err}");
+    }
+}
+
+#[test]
+fn serve_reads_updates_from_stdin() {
+    let args = ["serve", "--model", model_path(), "--updates", "-", "--shards", "2"];
+    let (code, out, err) = run_sparx(&args, Some("1 f0 1.0\n2 f0 2.0\n3 f0 3.0\n"));
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("processed 3 δ-updates"), "{out}");
+}
+
+#[test]
+fn serve_count_alongside_an_updates_file_is_rejected() {
+    let file = write_updates("1 f0 1.0\n");
+    let args = ["serve", "--model", model_path(), "--updates", &file, "--count", "5"];
+    let (code, _out, err) = run_sparx(&args, None);
+    let _ = std::fs::remove_file(&file);
+    assert_eq!(code, 2);
+    assert!(err.contains("--count"), "{err}");
+}
+
+// ------------------------------------------------------- sharded serve
+
+#[test]
+fn serve_sharded_synthetic_stream_reports_per_shard_counters() {
+    let args = ["serve", "--model", model_path(), "--count", "500", "--shards", "4"];
+    let (code, out, err) = run_sparx(&args, None);
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("processed 500 δ-updates"), "{out}");
+    assert!(out.contains("shard 0:"), "{out}");
+    assert!(out.contains("shard 3:"), "{out}");
+}
+
+#[test]
+fn serve_shards_zero_is_a_usage_error() {
+    let args = ["serve", "--model", model_path(), "--count", "1", "--shards", "0"];
+    let (code, _out, err) = run_sparx(&args, None);
+    assert_eq!(code, 2);
+    assert!(err.contains("--shards"), "{err}");
+}
+
+// ------------------------------------------------ backend override
+
+/// `sparx score` on the shared model with a small generated batch and
+/// the given `--backend` override.
+fn run_score_with_backend(backend: &str) -> (i32, String, String) {
+    let base = ["score", "--model", model_path(), "--dataset", "gisette", "--scale", "0.01"];
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend(["--backend", backend]);
+    run_sparx(&args, None)
+}
+
+#[test]
+fn score_accepts_a_native_backend_override() {
+    let (code, out, err) = run_score_with_backend("native");
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("backend overridden"), "{out}");
+    assert!(out.contains("AUROC"), "{out}");
+}
+
+#[test]
+fn score_pjrt_override_on_a_native_artifact_is_rejected_typed() {
+    // a native artifact stores no AOT variant, so forcing pjrt cannot
+    // know which compiled tile shapes to run — usage error, exit 2
+    let (code, _out, err) = run_score_with_backend("pjrt");
+    assert_eq!(code, 2, "stderr: {err}");
+    assert!(err.contains("PJRT variant"), "{err}");
+}
+
+#[test]
+fn score_unknown_backend_is_a_usage_error() {
+    let (code, _out, err) = run_score_with_backend("cuda");
+    assert_eq!(code, 2);
+    assert!(err.contains("backend"), "{err}");
+}
+
+#[test]
+fn serve_accepts_a_native_backend_override() {
+    let args = ["serve", "--model", model_path(), "--count", "50", "--backend", "native"];
+    let (code, out, err) = run_sparx(&args, None);
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("processed 50 δ-updates"), "{out}");
+}

@@ -1,0 +1,255 @@
+//! Determinism + stress harness for the sharded streaming front-end.
+//!
+//! The core invariant under test: shards share nothing (each owns its
+//! LRU, CMS copies and scratch), and `murmur(ID) % S` pins every ID to
+//! one shard, so **every shard is bit-identical to a single-threaded
+//! `StreamScorer` fed its sub-stream at any thread interleaving, and —
+//! while no shard evicts — per-ID score sequences are bit-identical
+//! across shard counts too**. The harness replays one recorded update sequence
+//! through S = 1 and S ∈ {2, 4, 7} under seeded shuffles of the arrival
+//! order *across* IDs (per-ID order preserved — streams never reorder a
+//! single key), and asserts score bits, eviction counts and processed
+//! totals line up exactly. A release-mode CI job reruns this file so
+//! the thread interleavings are actually exercised at speed.
+
+use std::collections::{HashMap, VecDeque};
+
+use sparx::api::{registry, Detector as _, DetectorSpec, FittedModel as _, SparxError};
+use sparx::cluster::ClusterConfig;
+use sparx::data::generators::GisetteGen;
+use sparx::data::{StreamGen, UpdateTriple};
+use sparx::sparx::{shard_of, ShardedStreamScorer, SparxModel, SparxParams, StreamScorer};
+use sparx::util::Rng;
+
+fn fitted(k: usize, chains: usize, depth: usize) -> SparxModel {
+    let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+    let ld = GisetteGen { n: 400, d: 24, ..Default::default() }.generate(&ctx).unwrap();
+    SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k, num_chains: chains, depth, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn synth_updates(ids: u64, count: usize, seed: u64) -> Vec<UpdateTriple> {
+    let names: Vec<String> = (0..24).map(|j| format!("f{j}")).collect();
+    let mut gen = StreamGen::new(ids, names, seed);
+    (0..count).map(|_| gen.next_update()).collect()
+}
+
+/// Per-ID outlierness bit sequences from a flat score log.
+fn per_id_bits(
+    scores: impl IntoIterator<Item = sparx::sparx::StreamScore>,
+) -> HashMap<u64, Vec<u64>> {
+    let mut m: HashMap<u64, Vec<u64>> = HashMap::new();
+    for s in scores {
+        m.entry(s.id).or_default().push(s.outlierness.to_bits());
+    }
+    m
+}
+
+/// Seeded shuffle of the arrival order *across* IDs that preserves each
+/// ID's own update order: split the sequence into per-ID queues, then
+/// repeatedly pop the front of a randomly chosen non-empty queue.
+fn shuffle_interleaving(updates: &[UpdateTriple], seed: u64) -> Vec<UpdateTriple> {
+    let mut queues: Vec<VecDeque<UpdateTriple>> = Vec::new();
+    let mut slot_of: HashMap<u64, usize> = HashMap::new();
+    for u in updates {
+        let next = queues.len();
+        let slot = *slot_of.entry(u.id()).or_insert(next);
+        if slot == next {
+            queues.push(VecDeque::new());
+        }
+        queues[slot].push_back(u.clone());
+    }
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(updates.len());
+    while !queues.is_empty() {
+        let pick = rng.below(queues.len() as u64) as usize;
+        let u = queues[pick].pop_front().expect("queues are drained eagerly");
+        out.push(u);
+        if queues[pick].is_empty() {
+            queues.swap_remove(pick);
+        }
+    }
+    out
+}
+
+/// The acceptance criterion: per-ID score sequences from S ∈ {2, 4, 7}
+/// shards are bit-identical to the single-threaded scorer, under a
+/// different shuffled arrival order per shard count. Run in the
+/// no-eviction regime, where the single-threaded sequence is the unique
+/// reference for every interleaving.
+#[test]
+fn sharded_per_id_scores_bit_identical_to_single_threaded() {
+    let model = fitted(12, 10, 6);
+    let updates = synth_updates(300, 8000, 0xD15C);
+
+    let mut reference = StreamScorer::new(&model, 4096).unwrap();
+    let mut ref_log = Vec::new();
+    for u in &updates {
+        ref_log.push(reference.update(u));
+    }
+    assert_eq!(reference.evictions(), 0, "harness requires the no-eviction regime");
+    let want = per_id_bits(ref_log);
+
+    for (shards, shuffle_seed) in [(2usize, 11u64), (4, 22), (7, 33)] {
+        let replay = shuffle_interleaving(&updates, shuffle_seed);
+        assert_ne!(replay, updates, "the shuffle must actually change the interleaving");
+        let mut scorer = ShardedStreamScorer::recording(&model, shards, 4096).unwrap();
+        for u in replay {
+            scorer.submit(u);
+        }
+        let report = scorer.finish();
+        assert_eq!(report.processed(), updates.len() as u64, "S={shards}: lost updates");
+        assert_eq!(report.evictions(), 0, "S={shards}: no-eviction regime violated");
+        let got = per_id_bits(report.scores.into_iter().flatten());
+        assert_eq!(got.len(), want.len(), "S={shards}: distinct-ID count differs");
+        for (id, seq) in &want {
+            assert_eq!(
+                got.get(id),
+                Some(seq),
+                "S={shards}: per-ID score sequence diverged for id {id}"
+            );
+        }
+    }
+}
+
+/// The shared-nothing contract, stated per shard and under eviction
+/// churn: every shard's full score log (values, order, fresh flags) is
+/// bit-identical to a single-threaded scorer fed that shard's
+/// sub-stream, and so are its eviction/processed/cache counters.
+#[test]
+fn each_shard_matches_a_single_threaded_scorer_fed_its_substream() {
+    let model = fitted(8, 6, 5);
+    let updates = synth_updates(500, 6000, 0xACE);
+    let shards = 4usize;
+    let cache_per_shard = 8; // tiny: heavy LRU churn inside every shard
+
+    let mut scorer = ShardedStreamScorer::recording(&model, shards, cache_per_shard).unwrap();
+    for u in &updates {
+        scorer.submit(u.clone());
+    }
+    let report = scorer.finish();
+    assert!(report.evictions() > 0, "harness requires the eviction regime");
+
+    let mut total_ref_evictions = 0;
+    for s in 0..shards {
+        let mut reference = StreamScorer::new(&model, cache_per_shard).unwrap();
+        let mut ref_log = Vec::new();
+        for u in updates.iter().filter(|u| shard_of(u.id(), shards) == s) {
+            ref_log.push(reference.update(u));
+        }
+        assert_eq!(report.scores[s], ref_log, "shard {s}: score log diverged");
+        assert_eq!(report.shards[s].processed, reference.processed(), "shard {s}: processed");
+        assert_eq!(report.shards[s].evictions, reference.evictions(), "shard {s}: evictions");
+        assert_eq!(report.shards[s].cached_ids, reference.cached_ids(), "shard {s}: cache");
+        total_ref_evictions += reference.evictions();
+    }
+    assert_eq!(report.evictions(), total_ref_evictions, "eviction counts must sum per shard");
+    assert_eq!(report.processed(), updates.len() as u64);
+}
+
+/// One shard degenerates to the single-threaded scorer exactly: the
+/// whole score log, not just per-ID projections, is bit-identical.
+#[test]
+fn one_shard_matches_the_unsharded_scorer_exactly() {
+    let model = fitted(8, 6, 5);
+    let updates = synth_updates(200, 2000, 7);
+    let mut reference = StreamScorer::new(&model, 32).unwrap();
+    let ref_log: Vec<_> = updates.iter().map(|u| reference.update(u)).collect();
+    let mut sharded = ShardedStreamScorer::recording(&model, 1, 32).unwrap();
+    for u in updates {
+        sharded.submit(u);
+    }
+    let report = sharded.finish();
+    assert_eq!(report.scores[0], ref_log);
+    assert_eq!(report.processed(), reference.processed());
+    assert_eq!(report.evictions(), reference.evictions());
+    assert_eq!(report.cached_ids(), reference.cached_ids());
+}
+
+/// Stress: 4 shards × 50k updates against a tiny per-shard cache,
+/// exercising bounded-queue backpressure and LRU churn under real
+/// contention (the release-mode CI job runs this at full speed).
+/// Asserts termination (no deadlock), no lost updates, and counter
+/// consistency: admitted − evicted == resident, per shard.
+#[test]
+fn stress_4_shards_50k_updates_small_cache_counters_consistent() {
+    let model = fitted(8, 5, 4);
+    let names: Vec<String> = (0..16).map(|j| format!("f{j}")).collect();
+    let mut gen = StreamGen::new(5000, names, 0x57E55);
+    let total = 50_000u64;
+    let mut scorer = ShardedStreamScorer::new(&model, 4, 16).unwrap();
+    for _ in 0..total {
+        scorer.submit(gen.next_update());
+    }
+    let report = scorer.finish();
+    assert_eq!(report.processed(), total, "updates were lost under contention");
+    assert_eq!(report.shards.len(), 4);
+    for (s, c) in report.shards.iter().enumerate() {
+        assert!(c.processed > 0, "shard {s} starved — routing is broken");
+        assert!(c.cached_ids <= 16, "shard {s} cache over capacity");
+        assert_eq!(
+            c.admitted - c.evictions,
+            c.cached_ids as u64,
+            "shard {s}: admitted − evicted must equal resident sketches"
+        );
+    }
+    assert!(report.evictions() > 0, "a tiny cache must evict under churn");
+    assert!(report.worst.is_some());
+}
+
+/// Murmur routing is deterministic, in range, and roughly balanced.
+#[test]
+fn shard_routing_is_stable_and_covers_all_shards() {
+    for shards in [2usize, 4, 7] {
+        let mut hit = vec![0u64; shards];
+        for id in 0..10_000u64 {
+            let s = shard_of(id, shards);
+            assert!(s < shards);
+            assert_eq!(s, shard_of(id, shards), "routing must be deterministic");
+            hit[s] += 1;
+        }
+        for (s, &n) in hit.iter().enumerate() {
+            assert!(n > 10_000 / shards as u64 / 2, "shard {s} underloaded: {n} hits");
+        }
+    }
+}
+
+/// The api-trait surface: sparx opens the sharded front-end, parameter
+/// misuse fails typed, and detectors without a stream front-end reject
+/// it with `Unsupported` — same taxonomy as `stream_scorer`.
+#[test]
+fn api_surface_and_typed_errors() {
+    let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+    let ld = GisetteGen { n: 300, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+    let spec = DetectorSpec {
+        k: Some(8),
+        components: Some(4),
+        depth: Some(4),
+        sample_rate: Some(0.5),
+        ..Default::default()
+    };
+    let model = registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    let mut scorer = model.stream_scorer_sharded(3, 64).unwrap();
+    scorer.submit(UpdateTriple::Num { id: 1, feature: "f0".into(), delta: 1.0 });
+    assert_eq!(scorer.finish().processed(), 1);
+    assert!(matches!(
+        model.stream_scorer_sharded(0, 64),
+        Err(SparxError::InvalidParams(_))
+    ));
+    assert!(matches!(
+        model.stream_scorer_sharded(2, 0),
+        Err(SparxError::InvalidParams(_))
+    ));
+    // a reloaded artifact opens the sharded front-end too
+    let loaded = registry::load_bytes(&model.to_artifact().unwrap().to_bytes()).unwrap();
+    assert!(loaded.stream_scorer_sharded(2, 64).is_ok());
+    let spif = registry::build("spif", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+    assert!(matches!(
+        spif.stream_scorer_sharded(2, 64),
+        Err(SparxError::Unsupported(_))
+    ));
+}
