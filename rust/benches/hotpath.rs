@@ -269,6 +269,25 @@ fn serve_throughput() {
     let mut gen = StreamGen::new(20_000, ld.dataset.schema.names.clone(), 0xBEEF);
     let updates: Vec<UpdateTriple> = (0..200_000).map(|_| gen.next_update()).collect();
 
+    // resident model footprint: all shards score against ONE Arc-shared
+    // ensemble, so the resident bytes are independent of S (the
+    // pre-refactor design cloned the chains + CMS blocks per shard,
+    // i.e. S×). CI publishes these lines next to the throughput ladder.
+    {
+        let s1 = StreamScorer::new(&model, 16).unwrap();
+        let bytes = s1.resident_ensemble_bytes();
+        println!("serve resident ensemble S=1  {bytes:>10} B (1.00x)");
+        let s8 = ShardedStreamScorer::new(&model, 8, 16).unwrap();
+        let shared = s8.resident_ensemble_bytes();
+        println!(
+            "serve resident ensemble S=8  {shared:>10} B ({:.2}x — Arc-shared; was {}B at S×)",
+            shared as f64 / bytes as f64,
+            8 * bytes
+        );
+        assert_eq!(shared, bytes, "S=8 must hold exactly one resident ensemble");
+        let _ = s8.finish();
+    }
+
     let cache_total = 16_384usize;
     let mut base = 0.0f64;
     for shards in [1usize, 2, 4, 8] {

@@ -9,10 +9,14 @@
 //!
 //! Run: `cargo run --release --example streaming [num_updates]`
 
+use std::sync::Arc;
+
 use sparx::config::presets;
 use sparx::data::generators::GisetteGen;
 use sparx::data::{StreamGen, UpdateTriple};
-use sparx::sparx::{ShardedStreamScorer, SparxModel, SparxParams, StreamScorer};
+use sparx::sparx::{
+    ServeOptions, ServedEnsemble, ShardedStreamScorer, SparxModel, SparxParams, StreamScorer,
+};
 
 fn main() {
     let updates: usize =
@@ -93,9 +97,10 @@ fn main() {
 
     // scale out: the same evolving stream through the sharded front-end —
     // murmur(ID) % S routes every update to a pinned shard worker with
-    // its own LRU; each shard scores bit-identically to a
-    // single-threaded scorer fed its sub-stream while throughput scales
-    // with the cores
+    // its own LRU, while every shard scores against ONE Arc-shared
+    // read-only ensemble (1x resident model, any S); each shard scores
+    // bit-identically to a single-threaded scorer fed its sub-stream
+    // while throughput scales with the cores
     let shards = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 8);
     // a fresh generator with the identical seed/config replays exactly
     // the update sequence the single-threaded loop above consumed, and
@@ -103,15 +108,31 @@ fn main() {
     // factor below compares the same workload end to end
     let mut gen = StreamGen::new(10_000, ld.dataset.schema.names.clone(), 0xFEED);
     gen.new_feature_rate = 0.02;
-    let mut sharded = ShardedStreamScorer::new(&model, shards, 4096 / shards).unwrap();
+    let ensemble = Arc::new(ServedEnsemble::new(&model).unwrap());
+    println!(
+        "\nshared serving ensemble: {} bytes resident — held once for any shard count",
+        ensemble.resident_bytes()
+    );
+    let mut sharded = ShardedStreamScorer::from_ensemble(
+        ensemble.clone(),
+        shards,
+        4096 / shards,
+        ServeOptions::default(),
+        None,
+    )
+    .unwrap();
     let t0 = std::time::Instant::now();
     for _ in 0..updates {
         sharded.submit(gen.next_update());
     }
+    // cut a durable checkpoint of the mutable half (LRU sketches +
+    // absorbed deltas + counters) — what `sparx serve --checkpoint-out`
+    // writes and `--resume` restores bit-identically
+    let checkpoint = sharded.checkpoint();
     let report = sharded.finish();
     let dt2 = t0.elapsed().as_secs_f64();
     println!(
-        "\nsharded front-end (S={shards}): {} δ-updates in {dt2:.2}s — {:.0} updates/s \
+        "sharded front-end (S={shards}): {} δ-updates in {dt2:.2}s — {:.0} updates/s \
          ({:.2}x the single-threaded rate)",
         report.processed(),
         report.processed() as f64 / dt2,
@@ -123,4 +144,22 @@ fn main() {
             c.processed, c.cached_ids, c.evictions
         );
     }
+    // a "restarted" deployment restores the checkpoint and continues the
+    // stream exactly where the first process left off
+    let mut resumed = ShardedStreamScorer::from_ensemble(
+        ensemble,
+        shards,
+        4096 / shards,
+        ServeOptions::default(),
+        Some(&checkpoint),
+    )
+    .unwrap();
+    resumed.submit(gen.next_update());
+    let resumed_report = resumed.finish();
+    println!(
+        "checkpoint → resume: {} sketches restored across {shards} shards, stream \
+         continued at update #{}",
+        checkpoint.merged().entries.len(),
+        resumed_report.processed()
+    );
 }

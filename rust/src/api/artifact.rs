@@ -3,16 +3,36 @@
 //! story: train once on the cluster, ship the O(rwLM) model to a
 //! deployment node, score updates in constant time).
 //!
-//! ## File format (all little-endian)
+//! ## File format v2 (all little-endian)
 //!
 //! ```text
 //! magic            4 bytes   "SPRX"
-//! format version   u16       bumped on any layout change
-//! detector name    u32-len str   "sparx" | "xstream" | "spif" | "dbscout"
-//! param block      u32-len bytes detector hyperparameters (+ backend)
-//! payload          u32-len bytes the fitted state — the deployable model
+//! format version   u16       2 (v1 files remain readable, see below)
+//! detector name    u32-len str   "sparx" | "xstream" | "spif" |
+//!                                "dbscout" | "absorb-state" (checkpoint)
+//! param block      u32-len bytes + u32 CRC-32 of the block
+//! payload          u32-len bytes + u32 CRC-32 of the block
+//! extension count  u32
+//!   per extension: u32-len name str, u32-len bytes, u32 CRC-32
+//!                  (unknown names are skipped after CRC verification —
+//!                  forward compatibility; "manifest" carries the
+//!                  provenance key/value pairs)
 //! checksum         u32       IEEE CRC-32 over everything above
 //! ```
+//!
+//! The **per-block CRCs** let a reader verify exactly the block it needs
+//! (e.g. a header-only peek) without trusting the rest of a partially
+//! read file, and pinpoint *which* block a corruption hit. The
+//! **manifest** extension records training provenance (dataset, scale,
+//! seed, CLI command) as ordered string pairs — carried verbatim,
+//! never interpreted by the loaders.
+//!
+//! ### v1 compatibility
+//!
+//! Version-1 files (`detector | params | payload | file CRC`, no
+//! per-block CRCs, no extensions) are still read; an artifact loaded
+//! from a v1 file keeps `version == 1` and re-serializes in the v1
+//! layout, so round trips never silently rewrite a file's format.
 //!
 //! The *payload* holds exactly the fitted state a deployment node needs
 //! (chains + CMS counts + projector seeds for Sparx; the tree pool for
@@ -41,15 +61,25 @@ use super::error::{Result, SparxError};
 /// File magic: the first four bytes of every model artifact.
 pub const MAGIC: [u8; 4] = *b"SPRX";
 
-/// Current artifact format version. Readers reject any other value with
-/// a typed error rather than guessing at the layout.
-pub const FORMAT_VERSION: u16 = 1;
+/// Current artifact format version. Readers accept this and v1; any
+/// other value is rejected with a typed error rather than guessing at
+/// the layout.
+pub const FORMAT_VERSION: u16 = 2;
+
+/// Name of the provenance extension block.
+const MANIFEST_BLOCK: &str = "manifest";
+
+/// Cap on counts decoded from v2 headers (extension blocks, manifest
+/// entries) so a hostile file cannot demand huge allocations up front.
+const MAX_V2_ITEMS: usize = 1 << 12;
 
 /// A parsed (or to-be-written) model artifact: the header fields plus
-/// the two opaque blocks each detector encodes/decodes for itself.
+/// the two opaque blocks each detector encodes/decodes for itself, and
+/// (v2) the provenance manifest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelArtifact {
-    /// Registry name of the detector that produced this model.
+    /// Registry name of the detector that produced this model (or
+    /// `"absorb-state"` for a serving checkpoint).
     pub detector: String,
     /// Format version the blocks were written under.
     pub version: u16,
@@ -57,35 +87,77 @@ pub struct ModelArtifact {
     pub params: Vec<u8>,
     /// The fitted state — what a deployment node loads.
     pub payload: Vec<u8>,
+    /// Provenance manifest: ordered key/value pairs (dataset, scale,
+    /// seed, …), carried verbatim and never interpreted by the loaders.
+    /// Empty for v1 files and for artifacts that set none.
+    pub manifest: Vec<(String, String)>,
 }
 
 impl ModelArtifact {
     pub fn new(detector: &str, params: Vec<u8>, payload: Vec<u8>) -> Self {
-        ModelArtifact { detector: detector.into(), version: FORMAT_VERSION, params, payload }
+        ModelArtifact {
+            detector: detector.into(),
+            version: FORMAT_VERSION,
+            params,
+            payload,
+            manifest: Vec::new(),
+        }
     }
 
-    /// Serialize with framing + checksum.
+    /// Attach provenance manifest entries (v2 artifacts only; a v1
+    /// round-tripped artifact has nowhere to carry them).
+    pub fn with_manifest(mut self, manifest: Vec<(String, String)>) -> Self {
+        self.manifest = manifest;
+        self
+    }
+
+    /// Serialize with framing + checksums, in the layout `self.version`
+    /// names (v1 artifacts re-serialize as v1 — see the module docs).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut enc = Encoder::new();
         enc.put_bytes(&MAGIC);
         enc.put_u16(self.version);
         enc.put_str(&self.detector);
-        enc.put_u32(self.params.len() as u32);
-        enc.put_bytes(&self.params);
-        enc.put_u32(self.payload.len() as u32);
-        enc.put_bytes(&self.payload);
+        if self.version == 1 {
+            enc.put_u32(self.params.len() as u32);
+            enc.put_bytes(&self.params);
+            enc.put_u32(self.payload.len() as u32);
+            enc.put_bytes(&self.payload);
+        } else {
+            for block in [&self.params, &self.payload] {
+                enc.put_u32(block.len() as u32);
+                enc.put_bytes(block);
+                enc.put_u32(crc32(block));
+            }
+            let exts: u32 = u32::from(!self.manifest.is_empty());
+            enc.put_u32(exts);
+            if !self.manifest.is_empty() {
+                let mut m = Encoder::new();
+                m.put_u32(self.manifest.len() as u32);
+                for (key, value) in &self.manifest {
+                    m.put_str(key);
+                    m.put_str(value);
+                }
+                let bytes = m.into_bytes();
+                enc.put_str(MANIFEST_BLOCK);
+                enc.put_u32(bytes.len() as u32);
+                enc.put_bytes(&bytes);
+                enc.put_u32(crc32(&bytes));
+            }
+        }
         let sum = crc32(enc.as_slice());
         enc.put_u32(sum);
         enc.into_bytes()
     }
 
-    /// Parse framing + checksum. Typed failures, no panics:
-    /// bad magic / truncation / checksum / version → `MissingArtifact`.
+    /// Parse framing + checksums. Typed failures, no panics:
+    /// bad magic / truncation / checksum (whole-file or per-block) /
+    /// unknown version → `MissingArtifact`.
     pub fn from_bytes(bytes: &[u8]) -> Result<ModelArtifact> {
         let corrupt = |what: &str| {
             SparxError::MissingArtifact(format!("cannot read model artifact: {what}"))
         };
-        // magic + version + name len + two block lens + checksum
+        // magic + version + name len + two block lens + checksum (v1 floor)
         if bytes.len() < MAGIC.len() + 2 + 4 + 4 + 4 + 4 {
             return Err(corrupt("file too short to be a sparx model artifact"));
         }
@@ -101,30 +173,94 @@ impl ModelArtifact {
         let parse = |e: String| corrupt(&e);
         dec.take(MAGIC.len()).map_err(parse)?;
         let version = dec.u16().map_err(parse)?;
-        if version != FORMAT_VERSION {
+        if version != 1 && version != FORMAT_VERSION {
             return Err(SparxError::MissingArtifact(format!(
-                "unsupported artifact format version {version} (this build reads v{FORMAT_VERSION})"
+                "unsupported artifact format version {version} (this build reads v1 and \
+                 v{FORMAT_VERSION})"
             )));
         }
         let detector = dec.str().map_err(parse)?;
-        let params_len = dec.u32().map_err(parse)? as usize;
-        let params = dec.take(params_len).map_err(parse)?.to_vec();
-        let payload_len = dec.u32().map_err(parse)? as usize;
-        let payload = dec.take(payload_len).map_err(parse)?.to_vec();
+        let mut art = ModelArtifact {
+            detector,
+            version,
+            params: Vec::new(),
+            payload: Vec::new(),
+            manifest: Vec::new(),
+        };
+        if version == 1 {
+            let params_len = dec.u32().map_err(parse)? as usize;
+            art.params = dec.take(params_len).map_err(parse)?.to_vec();
+            let payload_len = dec.u32().map_err(parse)? as usize;
+            art.payload = dec.take(payload_len).map_err(parse)?.to_vec();
+        } else {
+            art.params = read_checked_block(&mut dec, "params").map_err(parse)?;
+            art.payload = read_checked_block(&mut dec, "payload").map_err(parse)?;
+            let exts = dec.u32().map_err(parse)? as usize;
+            if exts > MAX_V2_ITEMS {
+                return Err(corrupt(&format!("{exts} extension blocks declared")));
+            }
+            for _ in 0..exts {
+                let name = dec.str().map_err(parse)?;
+                let block = read_checked_block(&mut dec, &name).map_err(parse)?;
+                if name == MANIFEST_BLOCK {
+                    art.manifest = decode_manifest(&block).map_err(parse)?;
+                }
+                // unknown extension names: CRC-verified above, then
+                // skipped — newer writers may add blocks we don't know
+            }
+        }
         dec.finish().map_err(parse)?;
-        Ok(ModelArtifact { detector, version, params, payload })
+        Ok(art)
     }
 
-    /// Write the framed artifact to a file.
-    pub fn save(&self, path: &str) -> Result<()> {
-        std::fs::write(path, self.to_bytes())?;
-        Ok(())
+    /// Write the framed artifact to a file **atomically** (temp file +
+    /// rename in the same directory): readers — including a live
+    /// `sparx serve --watch` polling this path — can never observe a
+    /// torn, half-written artifact. Returns the framed byte count, so
+    /// callers reporting file sizes don't serialize a second time.
+    pub fn save(&self, path: &str) -> Result<usize> {
+        let bytes = self.to_bytes();
+        let total = bytes.len();
+        let tmp = format!("{path}.tmp");
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(total)
     }
 
     /// Read and parse an artifact file.
     pub fn load(path: &str) -> Result<ModelArtifact> {
         Self::from_bytes(&std::fs::read(path)?)
     }
+}
+
+/// Read one v2 block (`u32` length, bytes, `u32` CRC-32) and verify its
+/// CRC, naming the block on failure.
+fn read_checked_block(dec: &mut Decoder, name: &str) -> CodecResult<Vec<u8>> {
+    let len = dec.u32()? as usize;
+    let bytes = dec.take(len)?.to_vec();
+    let stored = dec.u32()?;
+    if crc32(&bytes) != stored {
+        return Err(format!("{name} block fails its CRC-32 (corrupt block)"));
+    }
+    Ok(bytes)
+}
+
+/// Decode the manifest extension: `u32` count + (key, value) string
+/// pairs.
+fn decode_manifest(block: &[u8]) -> CodecResult<Vec<(String, String)>> {
+    let mut dec = Decoder::new(block);
+    let n = dec.u32()? as usize;
+    if n > MAX_V2_ITEMS {
+        return Err(format!("{n} manifest entries declared"));
+    }
+    let mut manifest = Vec::with_capacity(n);
+    for _ in 0..n {
+        let key = dec.str()?;
+        let value = dec.str()?;
+        manifest.push((key, value));
+    }
+    dec.finish()?;
+    Ok(manifest)
 }
 
 /// Map a block-decode failure to the typed error the lifecycle promises:
@@ -450,6 +586,66 @@ mod tests {
                 assert!(msg.contains("99"), "message must name the version: {msg}");
             }
             other => panic!("expected MissingArtifact, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips_and_absence_is_empty() {
+        let art = ModelArtifact::new("sparx", vec![1], vec![2, 3]).with_manifest(vec![
+            ("dataset".into(), "gisette".into()),
+            ("scale".into(), "0.5".into()),
+            ("seed".into(), "7".into()),
+        ]);
+        let back = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
+        assert_eq!(art, back);
+        assert_eq!(back.manifest.len(), 3);
+        assert_eq!(back.manifest[0], ("dataset".into(), "gisette".into()));
+        // no manifest → empty on read, and struct equality still holds
+        let bare = ModelArtifact::new("spif", vec![9], Vec::new());
+        let back = ModelArtifact::from_bytes(&bare.to_bytes()).unwrap();
+        assert!(back.manifest.is_empty());
+        assert_eq!(bare, back);
+    }
+
+    /// v1 files (written by the previous release) still load, and a
+    /// loaded v1 artifact re-serializes in the v1 layout — round trips
+    /// never silently rewrite a file's format version.
+    #[test]
+    fn v1_artifacts_round_trip_unchanged() {
+        let mut v1 = ModelArtifact::new("xstream", vec![5; 10], vec![6; 20]);
+        v1.version = 1;
+        let bytes = v1.to_bytes();
+        let back = ModelArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back.version, 1);
+        assert_eq!(back.params, v1.params);
+        assert_eq!(back.payload, v1.payload);
+        assert!(back.manifest.is_empty());
+        assert_eq!(back.to_bytes(), bytes, "v1 must re-serialize byte-identically");
+        // and the v2 serialization of the same blocks differs but parses
+        let v2 = ModelArtifact::new("xstream", vec![5; 10], vec![6; 20]);
+        assert_ne!(v2.to_bytes(), bytes);
+        assert_eq!(ModelArtifact::from_bytes(&v2.to_bytes()).unwrap().version, 2);
+    }
+
+    /// The v2 per-block CRCs catch corruption even when the whole-file
+    /// checksum is recomputed to match (an attacker or a buggy tool
+    /// rewriting the trailer).
+    #[test]
+    fn per_block_crc_catches_patched_files() {
+        let art = ModelArtifact::new("sparx", vec![0xAA; 32], vec![0xBB; 64]);
+        let bytes = art.to_bytes();
+        // flip one params byte AND fix up the file checksum
+        let mut patched = bytes.clone();
+        let params_start = MAGIC.len() + 2 + 4 + "sparx".len() + 4;
+        patched[params_start] ^= 0x01;
+        let body_len = patched.len() - 4;
+        let sum = crc32(&patched[..body_len]).to_le_bytes();
+        patched[body_len..].copy_from_slice(&sum);
+        match ModelArtifact::from_bytes(&patched) {
+            Err(SparxError::MissingArtifact(msg)) => {
+                assert!(msg.contains("params block"), "must name the damaged block: {msg}");
+            }
+            other => panic!("patched params must fail typed, got {other:?}"),
         }
     }
 

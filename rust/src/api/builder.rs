@@ -10,8 +10,8 @@ use crate::data::Dataset;
 use crate::runtime::{PjrtBinner, PjrtEngine};
 use crate::sparx::chain::{Binner, NativeBinner};
 use crate::sparx::{
-    project_dataset, ExecMode, ScoreMode, ShardedStreamScorer, SparxModel, SparxParams,
-    StreamScorer,
+    project_dataset, ExecMode, ScoreMode, ServedEnsemble, ShardedStreamScorer, SparxModel,
+    SparxParams, StreamScorer,
 };
 use crate::util::codec::{CodecResult, Decoder, Encoder};
 
@@ -401,6 +401,10 @@ impl FittedModel for FittedSparx {
         cache_per_shard: usize,
     ) -> Result<ShardedStreamScorer> {
         ShardedStreamScorer::new(&self.model, shards, cache_per_shard)
+    }
+
+    fn served_ensemble(&self) -> Result<std::sync::Arc<ServedEnsemble>> {
+        Ok(std::sync::Arc::new(ServedEnsemble::new(&self.model)?))
     }
 }
 

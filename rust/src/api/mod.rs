@@ -57,9 +57,11 @@ pub use builder::{Backend, FittedSparx, SparxBuilder, SparxDetector};
 pub use error::{Result, SparxError};
 pub use registry::DetectorSpec;
 
+use std::sync::Arc;
+
 use crate::cluster::ClusterContext;
 use crate::data::Dataset;
-use crate::sparx::{Projector, ShardedStreamScorer, StreamScorer};
+use crate::sparx::{Projector, ServedEnsemble, ShardedStreamScorer, StreamScorer};
 
 /// A configured-but-unfitted outlier detector. The one contract every
 /// method implements; the CLI, the experiment harnesses and the examples
@@ -120,6 +122,19 @@ pub trait FittedModel {
         cache_per_shard: usize,
     ) -> Result<ShardedStreamScorer> {
         let _ = (shards, cache_per_shard);
+        Err(SparxError::Unsupported(format!(
+            "{} has no evolving-stream front-end (only sparx does)",
+            self.name()
+        )))
+    }
+
+    /// Freeze the **read-only** serving state (chains, trained CMS
+    /// counts, projector, bin schema) behind an `Arc`, so any number of
+    /// stream scorers — including every shard of a
+    /// [`ShardedStreamScorer`] — share one resident copy of the model.
+    /// This is also the unit `sparx serve --watch` hot-swaps between
+    /// batches. Default: unsupported (only sparx serves streams).
+    fn served_ensemble(&self) -> Result<Arc<ServedEnsemble>> {
         Err(SparxError::Unsupported(format!(
             "{} has no evolving-stream front-end (only sparx does)",
             self.name()

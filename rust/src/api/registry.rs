@@ -152,6 +152,14 @@ pub fn from_artifact_with_backend(
         "xstream" => Ok(Box::new(XStream::from_artifact(art)?)),
         "spif" => Ok(Box::new(Spif::from_artifact(art)?)),
         "dbscout" => Ok(Box::new(FittedDbscout::from_artifact(art)?)),
+        // a well-framed artifact that is a serving checkpoint, not a
+        // model: point the caller at the right flag instead of the
+        // generic unknown-detector message
+        crate::sparx::checkpoint::CHECKPOINT_DETECTOR => Err(SparxError::InvalidParams(
+            "this file is an absorb-state checkpoint (written by `sparx serve \
+             --checkpoint-out`), not a model artifact — pass it to `sparx serve --resume`"
+                .into(),
+        )),
         other => {
             let names = detector_names().join("|");
             Err(SparxError::UnknownDetector(format!(

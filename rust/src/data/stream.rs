@@ -27,6 +27,21 @@ impl UpdateTriple {
             UpdateTriple::Num { feature, .. } | UpdateTriple::Cat { feature, .. } => feature,
         }
     }
+
+    /// Render the triple in the serve-input line grammar
+    /// ([`parse_update_line`] is the exact inverse — round trips are
+    /// bit-identical, f64 `Display` being shortest-round-trip). What
+    /// `sparx generate --stream` writes. Feature and category names must
+    /// not contain whitespace or `->`; the synthetic generators never
+    /// produce such names.
+    pub fn to_line(&self) -> String {
+        match self {
+            UpdateTriple::Num { id, feature, delta } => format!("{id} {feature} {delta}"),
+            UpdateTriple::Cat { id, feature, old, new } => {
+                format!("{id} {feature} {}->{new}", old.as_deref().unwrap_or(""))
+            }
+        }
+    }
 }
 
 impl SizeOf for UpdateTriple {
@@ -214,6 +229,35 @@ mod tests {
                 new: "NYC".into(),
             })
         );
+    }
+
+    /// `to_line` → `parse_update_line` is the identity, bit for bit —
+    /// the contract `sparx generate --stream` + `serve --updates` (and
+    /// the lifecycle-e2e CI job) rely on.
+    #[test]
+    fn to_line_parse_round_trips_bit_identically() {
+        let mut g = StreamGen::new(500, (0..8).map(|j| format!("f{j}")).collect(), 0xC0DE);
+        g.new_feature_rate = 0.1;
+        g.categorical_rate = 0.2;
+        for i in 0..2000 {
+            let u = g.next_update();
+            let line = u.to_line();
+            let back = parse_update_line(i + 1, &line).unwrap().unwrap_or_else(|| {
+                panic!("line {line:?} parsed as a comment/blank")
+            });
+            assert_eq!(u, back, "round trip diverged for {line:?}");
+        }
+        // hand-picked deltas that stress the float formatting
+        for delta in [0.1, -0.0, 1e-12, 123456789.123456, f64::MIN_POSITIVE] {
+            let u = UpdateTriple::Num { id: 1, feature: "f0".into(), delta };
+            let back = parse_update_line(1, &u.to_line()).unwrap().unwrap();
+            match back {
+                UpdateTriple::Num { delta: d, .. } => {
+                    assert_eq!(d.to_bits(), delta.to_bits(), "{delta} mangled");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
     }
 
     #[test]

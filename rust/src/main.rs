@@ -25,12 +25,16 @@
 //!                [--out scores.csv] [--backend native|pjrt]
 //! sparx serve    --model m.sparx [--updates FILE|-] [--count N]
 //!                [--cache N] [--seed N] [--shards S]
-//!                [--backend native|pjrt]       # ⟨ID, F, δ⟩ loop, §3.5
+//!                [--backend native|pjrt]
+//!                [--checkpoint-out c.sparx [--checkpoint-every N]]
+//!                [--resume c.sparx] [--watch] [--absorb]
+//!                [--score-log FILE|-]          # ⟨ID, F, δ⟩ loop, §3.5
 //! sparx detect   --method … [fit flags] [--out scores.csv]   # fit+score in one
 //! sparx experiment <table2|table3|table4|fig2|fig3|fig4|fig5|fig6|all>
 //!                [--scale S] [--seed N] [--out EXPERIMENTS_RESULTS.md]
 //! sparx stream   [--updates N] [--cache N] [--seed N]   # synthetic §3.5 demo
 //! sparx generate --dataset osm --out points.csv [--scale S] [--seed N]
+//! sparx generate --stream N --out updates.txt [--seed N]  # ⟨ID, F, δ⟩ lines
 //! sparx info                                    # artifacts + presets
 //! ```
 //!
@@ -49,6 +53,25 @@
 //! native` on `score`/`serve` overrides the backend a sparx artifact
 //! was fitted with (scores are backend-identical, so a PJRT-fitted
 //! model can be served without the compiled AOT modules).
+//!
+//! Serving state is durable and hot-swappable: all shards score against
+//! **one** Arc-shared read-only ensemble; `--checkpoint-out PATH`
+//! (periodically with `--checkpoint-every N`, and always at the end of
+//! the stream) atomically writes the merged per-shard absorb state —
+//! LRU sketches, absorbed CMS deltas (`--absorb`), counters — as a
+//! format-v2 artifact, and `--resume PATH` restores it so a restarted
+//! server continues the stream **bit-for-bit** (same model, same
+//! `--shards`/`--cache`; mismatches fail typed). `--watch` polls the
+//! model file between batches and atomically swaps the ensemble when it
+//! changes, carrying absorb state forward when the serving schema
+//! matches and rejecting typed when it does not. `--score-log FILE|-`
+//! records every score and writes them in global submit order (`id
+//! score-bits-hex` per line; with `-` the log owns stdout and human
+//! output moves to stderr) — what the lifecycle-e2e CI job diffs
+//! across a kill/resume boundary. Recording buffers the whole run's
+//! scores in memory and writes at stream end (the submit order can
+//! only be reassembled once every shard has drained), so it is a
+//! bounded-run diagnostic, not a steady-state access log.
 
 use std::collections::HashMap;
 use std::str::FromStr;
@@ -60,7 +83,9 @@ use sparx::data::{parse_update_line, LabeledDataset, StreamGen, UpdateTriple};
 use sparx::experiments::{self, align_scores};
 use sparx::metrics::{RankMetrics, ResourceReport};
 use sparx::runtime::{ArtifactManifest, PjrtEngine};
-use sparx::sparx::ExecMode;
+use sparx::sparx::{
+    AbsorbCheckpoint, ExecMode, ServeOptions, ShardedStreamScorer, StreamScore, SwapCarry,
+};
 use sparx::util::closest_match;
 use sparx::ClusterContext;
 
@@ -131,6 +156,20 @@ fn flag_opt<T: FromStr>(
             .parse()
             .map(Some)
             .map_err(|_| usage_err(format!("--{key}: cannot parse value {v:?}"))),
+    }
+}
+
+/// Boolean flag: absent → false, bare `--flag` → true (the parser maps a
+/// valueless flag to `"true"`). An explicit non-boolean value is a hard
+/// error — it usually means the flag swallowed the next argument.
+fn flag_bool(flags: &HashMap<String, String>, key: &str) -> Result<bool, SparxError> {
+    match flags.get(key).map(String::as_str) {
+        None => Ok(false),
+        Some("true" | "1") => Ok(true),
+        Some("false" | "0") => Ok(false),
+        Some(other) => Err(usage_err(format!(
+            "--{key} is a boolean flag (got {other:?} — did it swallow the next argument?)"
+        ))),
     }
 }
 
@@ -360,10 +399,19 @@ fn cmd_fit(flags: &HashMap<String, String>) -> CliResult {
     let t0 = std::time::Instant::now();
     let model = det.fit(&ctx, &ld.dataset)?;
     let fit_secs = t0.elapsed().as_secs_f64();
-    let artifact = model.to_artifact()?;
-    let bytes = artifact.to_bytes();
-    let (payload, total) = (artifact.payload.len(), bytes.len());
-    std::fs::write(&model_out, bytes)?;
+    // training provenance travels in the format-v2 manifest block —
+    // carried verbatim, never interpreted by the loaders
+    let artifact = model.to_artifact()?.with_manifest(vec![
+        ("method".into(), det.name().into()),
+        ("dataset".into(), dataset.clone()),
+        ("scale".into(), flags.get("scale").cloned().unwrap_or_else(|| "0.5".into())),
+        ("seed".into(), seed.map_or_else(|| "default".into(), |s| s.to_string())),
+        ("config".into(), flags.get("config").cloned().unwrap_or_else(|| "local".into())),
+    ]);
+    let payload = artifact.payload.len();
+    // ModelArtifact::save writes atomically (temp + rename): a live
+    // `serve --watch` on this path can never read a torn artifact
+    let total = artifact.save(&model_out)?;
     println!(
         "fitted {} in {fit_secs:.2}s — model payload {payload}B \
          ({total}B file with header+checksum)",
@@ -436,11 +484,12 @@ fn cmd_score(flags: &HashMap<String, String>) -> CliResult {
 
 /// Drive every update from the configured source — `--updates FILE|-`
 /// (parsed by `sparx::data::parse_update_line`) or the synthetic
-/// `--count` stream — through `f`.
+/// `--count` stream — through `f` (which may fail, e.g. a checkpoint
+/// write or a rejected hot reload: the stream stops there).
 fn for_each_update(
     flags: &HashMap<String, String>,
     names: Option<&[String]>,
-    mut f: impl FnMut(UpdateTriple),
+    mut f: impl FnMut(UpdateTriple) -> CliResult,
 ) -> CliResult {
     if let Some(src) = flags.get("updates") {
         // --count/--seed only shape the synthetic stream; silently
@@ -461,7 +510,7 @@ fn for_each_update(
         };
         for (i, line) in reader.lines().enumerate() {
             if let Some(u) = parse_update_line(i + 1, &line?)? {
-                f(u);
+                f(u)?;
             }
         }
     } else {
@@ -475,45 +524,186 @@ fn for_each_update(
         };
         let mut gen = StreamGen::new(5000, names, seed.unwrap_or(42));
         for _ in 0..count {
-            f(gen.next_update());
+            f(gen.next_update())?;
         }
     }
     Ok(())
 }
 
+/// (mtime, length) stamp used by `serve --watch` to notice model
+/// rewrites between batches.
+fn file_stamp(path: &str) -> Option<(std::time::SystemTime, u64)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
+}
+
+/// Cut a checkpoint from the live scorer and write it atomically
+/// (temp + rename), with provenance in the manifest.
+fn write_checkpoint(scorer: &mut ShardedStreamScorer, out: &str, model_path: &str) -> CliResult {
+    let ckpt = scorer.checkpoint();
+    let manifest = vec![
+        ("kind".into(), "absorb-state checkpoint".into()),
+        ("model".into(), model_path.into()),
+        ("model-fingerprint".into(), format!("{:08x}", ckpt.model_fingerprint)),
+        ("submitted".into(), ckpt.submitted.to_string()),
+        ("shards".into(), ckpt.shards.to_string()),
+        ("cache-per-shard".into(), ckpt.cache_per_shard.to_string()),
+        ("absorb".into(), ckpt.absorb.to_string()),
+    ];
+    ckpt.save(out, manifest)?;
+    Ok(())
+}
+
+/// If the model file's stamp moved, reload it and hot-swap the shared
+/// ensemble. A file that does not (yet) read as a valid artifact is a
+/// transient condition — a writer without the atomic temp+rename
+/// discipline may be mid-flight — so it logs and retries at the next
+/// poll instead of killing a live server. Incompatible serving schemas,
+/// however, surface typed (exit 2) per the `--watch` contract —
+/// absorbed state must never be silently misinterpreted under a
+/// mismatched model.
+fn check_reload(
+    scorer: &mut ShardedStreamScorer,
+    path: &str,
+    backend: Option<Backend>,
+    last: &mut Option<(std::time::SystemTime, u64)>,
+) -> CliResult {
+    let now = file_stamp(path);
+    if now.is_none() || now == *last {
+        return Ok(());
+    }
+    let reloaded = match registry::load_with_backend(path, backend) {
+        Ok(model) => model,
+        Err(e) => {
+            // don't advance the stamp: retry on the next poll (the file
+            // may still be being written)
+            eprintln!("sparx: --watch: {path} not loadable yet ({e}); retrying next poll");
+            return Ok(());
+        }
+    };
+    *last = now;
+    let carry = scorer.swap_ensemble(reloaded.served_ensemble()?)?;
+    // stderr: an operational notice, and stdout may be a `--score-log -`
+    // stream that must stay machine-diffable
+    eprintln!(
+        "sparx: model reloaded from {path}: {}",
+        match carry {
+            SwapCarry::Full => "same fitted model — absorbed state carried in full",
+            SwapCarry::SketchesOnly =>
+                "new chains, same serving schema — sketches carried, absorbed delta reset",
+        }
+    );
+    Ok(())
+}
+
+/// Write the merged score log: one `id score-bits-hex` line per update,
+/// in global submit order (bit-stable across shard counts and runs).
+fn write_score_log(path: &str, scores: &[StreamScore]) -> CliResult {
+    use std::io::Write as _;
+    let mut out: Box<dyn std::io::Write> = if path == "-" {
+        Box::new(std::io::stdout().lock())
+    } else {
+        Box::new(std::io::BufWriter::new(std::fs::File::create(path)?))
+    };
+    for s in scores {
+        writeln!(out, "{} {:016x}", s.id, s.outlierness.to_bits())?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+/// How many updates pass between `--watch` stat polls of the model file.
+const WATCH_POLL_UPDATES: u64 = 1024;
+
 fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
     check_flags(
         "serve",
         flags,
-        &["model", "updates", "count", "cache", "seed", "shards", "backend"],
+        &[
+            "model",
+            "updates",
+            "count",
+            "cache",
+            "seed",
+            "shards",
+            "backend",
+            "checkpoint-out",
+            "checkpoint-every",
+            "resume",
+            "watch",
+            "absorb",
+            "score-log",
+        ],
     )?;
     let path = flags
         .get("model")
         .cloned()
         .ok_or_else(|| usage_err("serve requires --model <file>".into()))?;
-    let cache = flag_or(flags, "cache", 4096usize)?;
+    let backend = parse_backend_flag(flags)?;
+    let resume = match flags.get("resume") {
+        Some(p) => Some(AbsorbCheckpoint::load(p)?),
+        None => None,
+    };
+    // an unflagged --cache/--shards adopts the resumed checkpoint's
+    // layout (explicit flags still win and are validated against it)
+    let cache = match flag_opt(flags, "cache")? {
+        Some(c) => c,
+        None => resume.as_ref().map(|c| c.cache_per_shard as usize).unwrap_or(4096),
+    };
     let default_shards = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let shards = flag_or(flags, "shards", default_shards)?;
+    let shards = match flag_opt(flags, "shards")? {
+        Some(s) => s,
+        None => resume.as_ref().map(|c| c.shards as usize).unwrap_or(default_shards),
+    };
     if shards == 0 {
         return Err(usage_err("--shards must be ≥ 1".into()));
     }
-    let model = registry::load_with_backend(&path, parse_backend_flag(flags)?)?;
-    println!(
+    // like --shards/--cache, an unflagged --absorb adopts the resumed
+    // checkpoint's mode; an explicit mismatch is rejected typed (it
+    // would silently diverge the continued stream)
+    let absorb = if flags.contains_key("absorb") {
+        flag_bool(flags, "absorb")?
+    } else {
+        resume.as_ref().map(|c| c.absorb).unwrap_or(false)
+    };
+    let watch = flag_bool(flags, "watch")?;
+    let score_log = flags.get("score-log").cloned();
+    let ckpt_out = flags.get("checkpoint-out").cloned();
+    let ckpt_every: u64 = flag_or(flags, "checkpoint-every", 0u64)?;
+    if ckpt_every > 0 && ckpt_out.is_none() {
+        return Err(usage_err("--checkpoint-every needs --checkpoint-out <file>".into()));
+    }
+    let model = registry::load_with_backend(&path, backend)?;
+    // `--score-log -` reserves stdout for the machine-diffable score
+    // lines; every human-readable serve line then goes to stderr so the
+    // log pipes clean
+    let log_to_stdout = score_log.as_deref() == Some("-");
+    let status = |line: String| {
+        if log_to_stdout {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
+    status(format!(
         "serving {} model from {path} ({}B payload, {shards} shard(s) × LRU {cache} ids)",
         model.name(),
         model.model_bytes()
-    );
-    if shards == 1 {
+    ));
+    let plain =
+        !absorb && !watch && score_log.is_none() && ckpt_out.is_none() && resume.is_none();
+    if shards == 1 && plain {
         // single-threaded fast path: no queues, no worker threads
         let mut scorer = model.stream_scorer(cache)?;
         let names = scorer.feature_names().map(|n| n.to_vec());
         let t0 = std::time::Instant::now();
-        let mut worst: Option<sparx::sparx::StreamScore> = None;
+        let mut worst: Option<StreamScore> = None;
         for_each_update(flags, names.as_deref(), |u| {
             let s = scorer.update(&u);
             if s.more_outlying_than(worst.as_ref()) {
                 worst = Some(s);
             }
+            Ok(())
         })?;
         let dt = t0.elapsed().as_secs_f64();
         let n = scorer.processed();
@@ -527,34 +717,94 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         if let Some(w) = worst {
             println!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness);
         }
-    } else {
-        // sharded: murmur(ID) % shards routes each update to a pinned
-        // worker owning its own LRU — shared-nothing, so each shard is
-        // bit-identical to a single-threaded scorer fed its sub-stream
-        // (and to --shards 1 per ID, while no shard evicts)
-        let mut scorer = model.stream_scorer_sharded(shards, cache)?;
-        let names = scorer.feature_names().map(|n| n.to_vec());
-        let t0 = std::time::Instant::now();
-        for_each_update(flags, names.as_deref(), |u| scorer.submit(u))?;
-        let report = scorer.finish();
-        let dt = t0.elapsed().as_secs_f64();
-        let n = report.processed();
-        println!(
-            "processed {n} δ-updates in {dt:.3}s ({:.0} updates/s) across {shards} shards, \
-             cache {}/{} ids, {} evictions",
-            n as f64 / dt.max(1e-9),
-            report.cached_ids(),
-            shards * cache,
-            report.evictions()
-        );
-        for (i, s) in report.shards.iter().enumerate() {
-            println!(
-                "  shard {i}: {} updates, cache {}/{cache} ids, {} evictions",
-                s.processed, s.cached_ids, s.evictions
-            );
+        return Ok(());
+    }
+    // sharded serving: murmur(ID) % shards routes each update to a
+    // pinned worker owning its own LRU + absorbed delta, while all
+    // shards score against ONE Arc-shared read-only ensemble — each
+    // shard is bit-identical to a single-threaded scorer fed its
+    // sub-stream (and to --shards 1 per ID, while no shard evicts and
+    // absorb is off)
+    let ensemble = model.served_ensemble()?;
+    status(format!(
+        "resident ensemble: {}B, Arc-shared across {shards} shard(s) (1x, fingerprint \
+         {:08x})",
+        ensemble.resident_bytes(),
+        ensemble.model_fingerprint()
+    ));
+    let opts = ServeOptions { record: score_log.is_some(), absorb };
+    let mut scorer =
+        ShardedStreamScorer::from_ensemble(ensemble, shards, cache, opts, resume.as_ref())?;
+    let resumed_offset = resume.as_ref().map(|c| c.submitted).unwrap_or(0);
+    if let Some(ckpt) = &resume {
+        let resident: usize = ckpt.snapshots.iter().map(|s| s.entries.len()).sum();
+        status(format!(
+            "resumed from checkpoint: {} updates already absorbed into the stream state, \
+             {resident} sketches resident across {} shard(s)",
+            ckpt.submitted, ckpt.shards
+        ));
+    }
+    let names = scorer.feature_names().map(|n| n.to_vec());
+    let mut watch_stamp = if watch { file_stamp(&path) } else { None };
+    let mut since_ckpt = 0u64;
+    let mut since_watch = 0u64;
+    let t0 = std::time::Instant::now();
+    for_each_update(flags, names.as_deref(), |u| {
+        scorer.submit(u);
+        if ckpt_every > 0 {
+            since_ckpt += 1;
+            if since_ckpt >= ckpt_every {
+                since_ckpt = 0;
+                let out = ckpt_out.as_deref().expect("checked: every implies out");
+                write_checkpoint(&mut scorer, out, &path)?;
+            }
         }
-        if let Some(w) = &report.worst {
-            println!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness);
+        if watch {
+            since_watch += 1;
+            if since_watch >= WATCH_POLL_UPDATES {
+                since_watch = 0;
+                check_reload(&mut scorer, &path, backend, &mut watch_stamp)?;
+            }
+        }
+        Ok(())
+    })?;
+    if let Some(out) = &ckpt_out {
+        // the final cut: covers every update of this run, so a restart
+        // with --resume continues exactly at the end of the stream
+        write_checkpoint(&mut scorer, out, &path)?;
+        status(format!(
+            "checkpoint written to {out} ({} updates covered)",
+            scorer.submitted()
+        ));
+    }
+    let report = scorer.finish();
+    let dt = t0.elapsed().as_secs_f64();
+    let total = report.processed();
+    let this_run = total - resumed_offset;
+    status(format!(
+        "processed {this_run} δ-updates in {dt:.3}s ({:.0} updates/s) across {shards} \
+         shards ({total} total over the stream's lifetime), cache {}/{} ids, {} evictions, \
+         {} absorbed",
+        this_run as f64 / dt.max(1e-9),
+        report.cached_ids(),
+        shards * cache,
+        report.evictions(),
+        report.absorbed()
+    ));
+    for (i, s) in report.shards.iter().enumerate() {
+        status(format!(
+            "  shard {i}: {} updates, cache {}/{cache} ids, {} evictions",
+            s.processed, s.cached_ids, s.evictions
+        ));
+    }
+    if let Some(w) = &report.worst {
+        status(format!("most outlying update: id={} outlierness={:.3}", w.id, w.outlierness));
+    }
+    if let Some(log) = &score_log {
+        let merged = report.merged_scores();
+        write_score_log(log, &merged)?;
+        if log != "-" {
+            println!("score log: {} scores written to {log} in submit order", merged.len());
         }
     }
     Ok(())
@@ -635,7 +885,32 @@ fn cmd_stream(flags: &HashMap<String, String>) -> CliResult {
 // ------------------------------------------------------------- generate
 
 fn cmd_generate(flags: &HashMap<String, String>) -> CliResult {
-    check_flags("generate", flags, &["dataset", "scale", "seed", "out"])?;
+    check_flags("generate", flags, &["dataset", "scale", "seed", "out", "stream"])?;
+    if let Some(n) = flag_opt::<usize>(flags, "stream")? {
+        // ⟨ID, F, δ⟩ update lines instead of a point CSV — the file form
+        // `sparx serve --updates` reads (and what the lifecycle-e2e CI
+        // job splits around a kill/resume boundary). Same generator
+        // defaults as serve's synthetic stream, so the two agree.
+        for inapplicable in ["dataset", "scale"] {
+            if flags.contains_key(inapplicable) {
+                return Err(usage_err(format!(
+                    "--{inapplicable} does not apply to --stream (update lines, not points)"
+                )));
+            }
+        }
+        let seed: Option<u64> = flag_opt(flags, "seed")?;
+        let out = flags.get("out").cloned().unwrap_or_else(|| "updates.txt".into());
+        let names: Vec<String> = (0..64).map(|j| format!("f{j}")).collect();
+        let mut gen = StreamGen::new(5000, names, seed.unwrap_or(42));
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&out)?);
+        for _ in 0..n {
+            writeln!(f, "{}", gen.next_update().to_line())?;
+        }
+        f.flush()?;
+        println!("wrote {n} update triples to {out}");
+        return Ok(());
+    }
     let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "osm".into());
     let scale = flag_or(flags, "scale", 0.1)?;
     let seed = flag_opt(flags, "seed")?;

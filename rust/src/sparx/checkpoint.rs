@@ -1,0 +1,542 @@
+//! Durable absorb-state checkpoints for the §3.5 serving front-end.
+//!
+//! A served model's *mutable* state — per-shard LRU sketches, absorbed
+//! CMS deltas and counters ([`crate::sparx::StreamScorer::snapshot`]) —
+//! dies with the process unless it is checkpointed. This module defines
+//! the serializable snapshot unit ([`AbsorbSnapshot`]), the merged
+//! multi-shard checkpoint ([`AbsorbCheckpoint`]) and its file form: a
+//! format-v2 model artifact (per-block CRCs + provenance manifest, see
+//! [`crate::api::artifact`]) whose detector name is
+//! [`CHECKPOINT_DETECTOR`], written by `sparx serve --checkpoint-out`
+//! and read back by `serve --resume`.
+//!
+//! Resume contract: restoring a checkpoint into scorers built from the
+//! **same model** (fingerprint equality) and the same shard/cache
+//! layout continues the stream **bit-identically** — LRU recency order
+//! is preserved entry-for-entry, so even eviction timing reproduces.
+//! Corrupt, truncated or schema-mismatched checkpoint files fail typed
+//! (never panic), like every other artifact read in the crate.
+
+use crate::api::artifact::{block_err, ModelArtifact};
+use crate::api::{Result, SparxError};
+use crate::util::codec::{CodecResult, Decoder, Encoder};
+
+use super::stream::ServedEnsemble;
+
+/// Detector-name tag that marks an artifact file as an absorb-state
+/// checkpoint rather than a fitted model.
+pub const CHECKPOINT_DETECTOR: &str = "absorb-state";
+
+/// One scorer's (= one shard's) serialized mutable state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AbsorbSnapshot {
+    /// δ-updates this scorer processed.
+    pub processed: u64,
+    /// LRU evictions so far.
+    pub evicted: u64,
+    /// Points absorbed into the delta overlay.
+    pub absorbed: u64,
+    /// Cached sketches in **LRU → MRU order** (re-inserting in this
+    /// order reproduces the recency order exactly).
+    pub entries: Vec<(u64, Vec<f32>)>,
+    /// Absorbed CMS increments per (chain-major) level, each sorted by
+    /// row-major bucket index.
+    pub delta: Vec<Vec<(u32, u32)>>,
+}
+
+impl AbsorbSnapshot {
+    /// Cache admissions implied by this snapshot (`admitted − evicted ==
+    /// resident` is the serving counter invariant).
+    pub fn admitted(&self) -> u64 {
+        self.evicted + self.entries.len() as u64
+    }
+}
+
+/// The merged, durable serving state: the header that pins it to one
+/// model + shard layout, plus every shard's snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AbsorbCheckpoint {
+    /// `ServedEnsemble::model_fingerprint` of the served model — resume
+    /// requires exact equality (bit-identical continuation needs the
+    /// exact trained counts).
+    pub model_fingerprint: u32,
+    /// `ServedEnsemble::schema_fingerprint` of the served model.
+    pub schema_fingerprint: u32,
+    /// Shard count the state was captured under; resume must match (the
+    /// murmur ID route and per-shard LRU orders are S-specific).
+    pub shards: u32,
+    /// Per-shard LRU capacity at capture time; resume must match
+    /// (eviction timing depends on it).
+    pub cache_per_shard: u64,
+    /// Updates submitted to the sharded scorer when the checkpoint was
+    /// cut — the resumed scorer continues its submit sequence here.
+    pub submitted: u64,
+    /// Whether the capturing run absorbed every update (`--absorb`).
+    /// Resume must match: an absorb-mode mismatch silently diverges the
+    /// continued stream, so it is rejected typed like shards/cache.
+    pub absorb: bool,
+    // serving-schema summary, duplicated from the ensemble so mismatch
+    // errors can name shapes without loading the model
+    pub k: usize,
+    pub depth: usize,
+    pub num_chains: usize,
+    pub cms_rows: usize,
+    pub cms_cols: usize,
+    /// One snapshot per shard, in shard order.
+    pub snapshots: Vec<AbsorbSnapshot>,
+}
+
+impl AbsorbCheckpoint {
+    /// Header fields derived from the served ensemble; `snapshots` and
+    /// `submitted` are filled by the caller.
+    pub fn for_ensemble(
+        ens: &ServedEnsemble,
+        shards: u32,
+        cache_per_shard: u64,
+        submitted: u64,
+        absorb: bool,
+        snapshots: Vec<AbsorbSnapshot>,
+    ) -> AbsorbCheckpoint {
+        AbsorbCheckpoint {
+            model_fingerprint: ens.model_fingerprint(),
+            schema_fingerprint: ens.schema_fingerprint(),
+            shards,
+            cache_per_shard,
+            submitted,
+            absorb,
+            k: ens.k(),
+            depth: ens.depth(),
+            num_chains: ens.num_chains(),
+            cms_rows: ens.cms_rows(),
+            cms_cols: ens.cms_cols(),
+            snapshots,
+        }
+    }
+
+    /// Typed pre-restore validation against a live ensemble and serve
+    /// configuration. Everything that would make the continuation not
+    /// bit-identical is rejected here, before any state moves.
+    pub fn validate_for(
+        &self,
+        ens: &ServedEnsemble,
+        shards: usize,
+        cache_per_shard: usize,
+        absorb: bool,
+    ) -> Result<()> {
+        if self.model_fingerprint != ens.model_fingerprint() {
+            return Err(SparxError::InvalidParams(format!(
+                "checkpoint was taken against a different model \
+                 (fingerprint {:08x}, served model {:08x}) — resume requires the exact \
+                 artifact the checkpoint was written under",
+                self.model_fingerprint,
+                ens.model_fingerprint()
+            )));
+        }
+        if self.shards as usize != shards {
+            return Err(SparxError::InvalidParams(format!(
+                "checkpoint holds {} shard snapshot(s) but serve is configured with \
+                 --shards {shards}; per-shard LRU state only restores onto the same layout",
+                self.shards
+            )));
+        }
+        if self.cache_per_shard as usize != cache_per_shard {
+            return Err(SparxError::InvalidParams(format!(
+                "checkpoint was taken with --cache {} but serve is configured with \
+                 --cache {cache_per_shard}; eviction timing depends on the capacity",
+                self.cache_per_shard
+            )));
+        }
+        if self.absorb != absorb {
+            return Err(SparxError::InvalidParams(format!(
+                "checkpoint was taken with absorb mode {} but serve is configured with \
+                 absorb mode {}; a mismatch silently diverges the continued stream — \
+                 {} --absorb to match",
+                if self.absorb { "on" } else { "off" },
+                if absorb { "on" } else { "off" },
+                if self.absorb { "pass" } else { "drop" }
+            )));
+        }
+        if self.snapshots.len() != shards {
+            return Err(SparxError::InvalidParams(format!(
+                "checkpoint header declares {} shards but carries {} snapshots",
+                self.shards,
+                self.snapshots.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Merge the per-shard snapshots into one aggregate state: entries
+    /// concatenated in shard order, deltas summed bucket-wise, counters
+    /// summed. Because every ID is pinned to one shard, the merged
+    /// sketch set and summed delta equal what a single-shard scorer
+    /// would hold for the same stream (in the no-eviction regime) — the
+    /// property `rust/tests/checkpoint.rs` asserts for any S.
+    pub fn merged(&self) -> AbsorbSnapshot {
+        let levels = self.num_chains * self.depth;
+        let mut merged = AbsorbSnapshot {
+            processed: 0,
+            evicted: 0,
+            absorbed: 0,
+            entries: Vec::new(),
+            delta: vec![Vec::new(); levels],
+        };
+        let mut maps: Vec<std::collections::HashMap<u32, u32>> =
+            vec![std::collections::HashMap::new(); levels];
+        for snap in &self.snapshots {
+            merged.processed += snap.processed;
+            merged.evicted += snap.evicted;
+            merged.absorbed += snap.absorbed;
+            merged.entries.extend(snap.entries.iter().cloned());
+            for (slot, lvl) in snap.delta.iter().enumerate().take(levels) {
+                for &(bucket, count) in lvl {
+                    *maps[slot].entry(bucket).or_insert(0) += count;
+                }
+            }
+        }
+        for (slot, map) in maps.into_iter().enumerate() {
+            let mut v: Vec<(u32, u32)> = map.into_iter().collect();
+            v.sort_unstable();
+            merged.delta[slot] = v;
+        }
+        merged
+    }
+
+    // ------------------------------------------------------ file format
+
+    /// Wrap the checkpoint in a (format-v2) artifact container: the
+    /// header travels in the params block, the snapshots in the payload,
+    /// each with its own CRC. Callers add provenance manifest entries
+    /// with [`ModelArtifact::with_manifest`].
+    pub fn to_artifact(&self) -> ModelArtifact {
+        let mut params = Encoder::new();
+        params.put_u32(self.model_fingerprint);
+        params.put_u32(self.schema_fingerprint);
+        params.put_u32(self.shards);
+        params.put_u64(self.cache_per_shard);
+        params.put_u64(self.submitted);
+        params.put_u8(u8::from(self.absorb));
+        params.put_usize(self.k);
+        params.put_usize(self.depth);
+        params.put_usize(self.num_chains);
+        params.put_usize(self.cms_rows);
+        params.put_usize(self.cms_cols);
+        let mut payload = Encoder::new();
+        payload.put_u32(self.snapshots.len() as u32);
+        for snap in &self.snapshots {
+            encode_snapshot(&mut payload, snap);
+        }
+        ModelArtifact::new(CHECKPOINT_DETECTOR, params.into_bytes(), payload.into_bytes())
+    }
+
+    /// Parse an artifact back into a checkpoint, validating internal
+    /// consistency (shard/snapshot counts, delta level counts, sketch
+    /// widths, bucket ranges). Framing damage surfaces from the artifact
+    /// layer as `MissingArtifact`; a well-framed file that is not an
+    /// absorb-state checkpoint, or whose blocks are inconsistent, fails
+    /// `InvalidParams`.
+    pub fn from_artifact(art: &ModelArtifact) -> Result<AbsorbCheckpoint> {
+        if art.detector != CHECKPOINT_DETECTOR {
+            return Err(SparxError::InvalidParams(format!(
+                "expected an absorb-state checkpoint, found a {:?} artifact — \
+                 `--resume` takes the file `serve --checkpoint-out` wrote",
+                art.detector
+            )));
+        }
+        let blk = |e| block_err(CHECKPOINT_DETECTOR, e);
+        let mut dec = Decoder::new(&art.params);
+        let header = decode_header(&mut dec).map_err(blk)?;
+        dec.finish().map_err(blk)?;
+        let mut ckpt = header;
+        let mut dec = Decoder::new(&art.payload);
+        decode_snapshots(&mut dec, &mut ckpt).map_err(blk)?;
+        dec.finish().map_err(blk)?;
+        Ok(ckpt)
+    }
+
+    /// Write the checkpoint file — atomically, via the one shared
+    /// temp+rename discipline in [`ModelArtifact::save`], so a crash
+    /// mid-write can never leave a torn checkpoint where a good one
+    /// stood.
+    pub fn save(&self, path: &str, manifest: Vec<(String, String)>) -> Result<()> {
+        self.to_artifact().with_manifest(manifest).save(path).map(|_| ())
+    }
+
+    /// Read and parse a checkpoint file.
+    pub fn load(path: &str) -> Result<AbsorbCheckpoint> {
+        Self::from_artifact(&ModelArtifact::load(path)?)
+    }
+}
+
+fn encode_snapshot(enc: &mut Encoder, snap: &AbsorbSnapshot) {
+    enc.put_u64(snap.processed);
+    enc.put_u64(snap.evicted);
+    enc.put_u64(snap.absorbed);
+    enc.put_u32(snap.entries.len() as u32);
+    for (id, sketch) in &snap.entries {
+        enc.put_u64(*id);
+        enc.put_f32_slice(sketch);
+    }
+    enc.put_u32(snap.delta.len() as u32);
+    for lvl in &snap.delta {
+        enc.put_u32(lvl.len() as u32);
+        for &(bucket, count) in lvl {
+            enc.put_u32(bucket);
+            enc.put_u32(count);
+        }
+    }
+}
+
+fn decode_header(dec: &mut Decoder) -> CodecResult<AbsorbCheckpoint> {
+    let ckpt = AbsorbCheckpoint {
+        model_fingerprint: dec.u32()?,
+        schema_fingerprint: dec.u32()?,
+        shards: dec.u32()?,
+        cache_per_shard: dec.u64()?,
+        submitted: dec.u64()?,
+        absorb: match dec.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(format!("unknown absorb-mode tag {other}")),
+        },
+        k: dec.usize()?,
+        depth: dec.usize()?,
+        num_chains: dec.usize()?,
+        cms_rows: dec.usize()?,
+        cms_cols: dec.usize()?,
+        snapshots: Vec::new(),
+    };
+    if ckpt.shards == 0 || ckpt.shards > 4096 {
+        return Err(format!("checkpoint shard count {} out of range", ckpt.shards));
+    }
+    // the LRU pre-reserves its declared capacity, so an unbounded value
+    // here is a thin-air allocation like the shape fields below
+    if ckpt.cache_per_shard == 0 || ckpt.cache_per_shard > (1 << 24) {
+        return Err(format!(
+            "checkpoint cache capacity {} out of range (1..=2^24)",
+            ckpt.cache_per_shard
+        ));
+    }
+    if ckpt.k == 0
+        || ckpt.depth == 0
+        || ckpt.num_chains == 0
+        || ckpt.cms_rows == 0
+        || ckpt.cms_cols == 0
+    {
+        return Err(format!(
+            "degenerate checkpoint schema: K={} L={} M={} r={} w={}",
+            ckpt.k, ckpt.depth, ckpt.num_chains, ckpt.cms_rows, ckpt.cms_cols
+        ));
+    }
+    // same packing bound the CMS itself enforces; keeps bucket indices
+    // in u32 and blocks thin-air allocations from hostile headers
+    if ckpt.cms_rows >= 128 || ckpt.cms_cols >= (1 << 20) || ckpt.k > (1 << 24) {
+        return Err("checkpoint schema exceeds the serving shape caps".into());
+    }
+    // ensemble-shape caps: M and L are unbounded in SparxParams, but a
+    // checkpoint header declaring absurd values exists only to demand
+    // absurd allocations — reject before anything is reserved
+    if ckpt.num_chains > (1 << 12) || ckpt.depth > (1 << 12) {
+        return Err(format!(
+            "checkpoint ensemble shape M={} L={} exceeds the serving shape caps",
+            ckpt.num_chains, ckpt.depth
+        ));
+    }
+    Ok(ckpt)
+}
+
+fn decode_snapshots(dec: &mut Decoder, ckpt: &mut AbsorbCheckpoint) -> CodecResult<()> {
+    let n = dec.u32()? as usize;
+    if n != ckpt.shards as usize {
+        return Err(format!(
+            "payload carries {n} snapshots but the header declares {} shards",
+            ckpt.shards
+        ));
+    }
+    let levels = ckpt.num_chains * ckpt.depth;
+    let buckets = (ckpt.cms_rows * ckpt.cms_cols) as u32;
+    ckpt.snapshots.reserve(n);
+    for _ in 0..n {
+        let processed = dec.u64()?;
+        let evicted = dec.u64()?;
+        let absorbed = dec.u64()?;
+        let n_entries = dec.u32()? as usize;
+        if n_entries as u64 > ckpt.cache_per_shard {
+            return Err(format!(
+                "snapshot holds {n_entries} sketches, over the declared cache \
+                 capacity {}",
+                ckpt.cache_per_shard
+            ));
+        }
+        // every entry costs ≥ 12 bytes on the wire; reject declared
+        // counts the remaining bytes cannot possibly back
+        if dec.remaining() < n_entries.saturating_mul(12) {
+            return Err(format!("truncated snapshot: {n_entries} sketch entries declared"));
+        }
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let id = dec.u64()?;
+            let sketch = dec.f32_vec()?;
+            if sketch.len() != ckpt.k {
+                return Err(format!(
+                    "sketch for id {id} is {}-wide, header declares K={}",
+                    sketch.len(),
+                    ckpt.k
+                ));
+            }
+            entries.push((id, sketch));
+        }
+        let n_levels = dec.u32()? as usize;
+        if n_levels != levels {
+            return Err(format!(
+                "snapshot has {n_levels} delta levels, header declares M·L = {levels}"
+            ));
+        }
+        // every level costs ≥ 4 bytes on the wire; reject declared
+        // counts the remaining bytes cannot possibly back (no
+        // allocate-then-discover-truncation)
+        if dec.remaining() < n_levels.saturating_mul(4) {
+            return Err(format!("truncated snapshot: {n_levels} delta levels declared"));
+        }
+        let mut delta = Vec::with_capacity(n_levels);
+        for _ in 0..n_levels {
+            let n_pairs = dec.u32()? as usize;
+            if dec.remaining() < n_pairs.saturating_mul(8) {
+                return Err(format!("truncated snapshot: {n_pairs} delta pairs declared"));
+            }
+            let mut lvl = Vec::with_capacity(n_pairs);
+            let mut prev: Option<u32> = None;
+            for _ in 0..n_pairs {
+                let bucket = dec.u32()?;
+                let count = dec.u32()?;
+                if bucket >= buckets {
+                    return Err(format!(
+                        "delta bucket {bucket} out of range for a {}×{} CMS",
+                        ckpt.cms_rows, ckpt.cms_cols
+                    ));
+                }
+                if count == 0 {
+                    return Err("delta entries must carry a non-zero count".into());
+                }
+                if let Some(p) = prev {
+                    if bucket <= p {
+                        return Err("delta buckets must be strictly increasing".into());
+                    }
+                }
+                prev = Some(bucket);
+                lvl.push((bucket, count));
+            }
+            delta.push(lvl);
+        }
+        ckpt.snapshots.push(AbsorbSnapshot { processed, evicted, absorbed, entries, delta });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AbsorbCheckpoint {
+        AbsorbCheckpoint {
+            model_fingerprint: 0xDEAD_BEEF,
+            schema_fingerprint: 0x5A5A_0001,
+            shards: 2,
+            cache_per_shard: 4,
+            submitted: 17,
+            absorb: true,
+            k: 3,
+            depth: 2,
+            num_chains: 2,
+            cms_rows: 4,
+            cms_cols: 16,
+            snapshots: vec![
+                AbsorbSnapshot {
+                    processed: 10,
+                    evicted: 1,
+                    absorbed: 3,
+                    entries: vec![(7, vec![1.0, -2.0, 0.5]), (9, vec![0.0, 0.0, 4.0])],
+                    delta: vec![vec![(0, 2), (5, 1)], vec![], vec![(63, 4)], vec![]],
+                },
+                AbsorbSnapshot {
+                    processed: 7,
+                    evicted: 0,
+                    absorbed: 0,
+                    entries: vec![(2, vec![0.25, 0.0, -0.0])],
+                    delta: vec![vec![], vec![], vec![], vec![]],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn artifact_round_trip_is_exact() {
+        let ckpt = sample();
+        let art = ckpt.to_artifact();
+        assert_eq!(art.detector, CHECKPOINT_DETECTOR);
+        let back = AbsorbCheckpoint::from_artifact(
+            &ModelArtifact::from_bytes(&art.to_bytes()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(ckpt, back);
+    }
+
+    #[test]
+    fn non_checkpoint_artifacts_are_rejected_typed() {
+        let art = ModelArtifact::new("sparx", vec![1, 2], vec![3]);
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&art),
+            Err(SparxError::InvalidParams(_))
+        ));
+    }
+
+    #[test]
+    fn inconsistent_blocks_fail_typed() {
+        let ckpt = sample();
+        // header/payload snapshot-count mismatch
+        let mut short = ckpt.clone();
+        short.snapshots.pop();
+        let art = short.to_artifact();
+        // keep the header claiming 2 shards but ship 1 snapshot
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&art),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // wrong sketch width
+        let mut bad = ckpt.clone();
+        bad.snapshots[0].entries[0].1.push(9.0);
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // bucket out of range
+        let mut bad = ckpt.clone();
+        bad.snapshots[0].delta[0].push((4 * 16, 1));
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // over-capacity snapshot
+        let mut bad = ckpt;
+        for id in 100..110 {
+            bad.snapshots[0].entries.push((id, vec![0.0; 3]));
+        }
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+    }
+
+    #[test]
+    fn merged_sums_counters_and_deltas() {
+        let ckpt = sample();
+        let merged = ckpt.merged();
+        assert_eq!(merged.processed, 17);
+        assert_eq!(merged.evicted, 1);
+        assert_eq!(merged.absorbed, 3);
+        assert_eq!(merged.entries.len(), 3);
+        assert_eq!(merged.delta[0], vec![(0, 2), (5, 1)]);
+        assert_eq!(merged.delta[2], vec![(63, 4)]);
+        assert_eq!(merged.admitted(), 1 + 3);
+    }
+}

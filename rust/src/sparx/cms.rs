@@ -7,6 +7,8 @@
 //! fit, buckets are filled from the `reduceByKey` output rather than by
 //! point-wise insertion, which is numerically identical.
 
+use std::collections::HashMap;
+
 use crate::hash::{bin_hash, cms_bucket_from, BinHash};
 use crate::util::SizeOf;
 
@@ -96,6 +98,41 @@ impl CountMinSketch {
         self.counts[row as usize * self.w + col as usize] += count;
     }
 
+    /// Query with a sparse *overlay* of absorbed increments on top of the
+    /// base counts: min over rows of `base + overlay`. The overlay is
+    /// keyed by the row-major bucket index (`row · w + col`, which fits a
+    /// `u32` under the shuffle-key packing limits r < 128, w < 2^20).
+    /// With an empty overlay this equals [`query`](Self::query) exactly —
+    /// the serving front-end's Arc-shared ensemble depends on that
+    /// bit-identity.
+    #[inline]
+    pub fn query_overlaid(&self, bin: &[i32], overlay: &HashMap<u32, u32>) -> u32 {
+        let h = bin_hash(bin);
+        let mut m = u32::MAX;
+        for row in 0..self.r {
+            let idx = row * self.w + cms_bucket_from(h, row as u32, self.w);
+            let v = self.counts[idx] + overlay.get(&(idx as u32)).copied().unwrap_or(0);
+            if v < m {
+                m = v;
+            }
+        }
+        m
+    }
+
+    /// Record one insertion into a sparse overlay *instead of* the base
+    /// counts — the serving absorb path, where the trained counts are
+    /// shared read-only across shards and each shard owns only its delta.
+    /// `query_overlaid` after `overlay_insert` equals `query` after
+    /// [`insert`](Self::insert) on an owned copy, bit for bit.
+    #[inline]
+    pub fn overlay_insert(&self, bin: &[i32], overlay: &mut HashMap<u32, u32>) {
+        let h = bin_hash(bin);
+        for row in 0..self.r {
+            let idx = (row * self.w + cms_bucket_from(h, row as u32, self.w)) as u32;
+            *overlay.entry(idx).or_insert(0) += 1;
+        }
+    }
+
     /// Merge another CMS of identical shape (distributed partial merge).
     pub fn merge(&mut self, other: &CountMinSketch) {
         assert_eq!((self.r, self.w), (other.r, other.w));
@@ -179,6 +216,33 @@ mod tests {
             via_reduce.set_bucket(row, col, c);
         }
         assert_eq!(direct, via_reduce);
+    }
+
+    /// The serving-absorb contract: inserting into a sparse overlay over
+    /// read-only base counts queries bit-identically to inserting into an
+    /// owned copy of the counts.
+    #[test]
+    fn overlay_insert_and_query_match_in_place_mutation() {
+        let mut owned = CountMinSketch::new(6, 64);
+        let shared = owned.clone(); // the "trained" base, never mutated
+        let mut overlay: HashMap<u32, u32> = HashMap::new();
+        let mut rng = Rng::new(17);
+        let mut bins = Vec::new();
+        for _ in 0..400 {
+            let bin = vec![rng.below(50) as i32, rng.below(7) as i32];
+            owned.insert(&bin);
+            shared.overlay_insert(&bin, &mut overlay);
+            bins.push(bin);
+        }
+        for bin in &bins {
+            assert_eq!(owned.query(bin), shared.query_overlaid(bin, &overlay));
+        }
+        // unseen bins agree too, and an empty overlay is a plain query
+        assert_eq!(owned.query(&[-7, 99]), shared.query_overlaid(&[-7, 99], &overlay));
+        let empty: HashMap<u32, u32> = HashMap::new();
+        for bin in bins.iter().take(20) {
+            assert_eq!(shared.query(bin), shared.query_overlaid(bin, &empty));
+        }
     }
 
     #[test]

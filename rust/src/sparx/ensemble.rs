@@ -145,6 +145,42 @@ pub fn score_bins(chain: &TrainedChain, mode: ScoreMode, bins: &[i32]) -> f64 {
     best
 }
 
+/// [`score_bins`] with a per-level sparse overlay of absorbed counts on
+/// top of the chain's read-only CMS blocks (`overlays[lvl]` keyed by
+/// row-major bucket index — see [`CountMinSketch::query_overlaid`]).
+/// With empty overlays this is bit-identical to [`score_bins`]; it is
+/// what lets the serving front-end share one trained ensemble across
+/// shards while each shard owns only its absorbed delta.
+#[inline]
+pub fn score_bins_overlaid(
+    chain: &TrainedChain,
+    mode: ScoreMode,
+    bins: &[i32],
+    overlays: &[std::collections::HashMap<u32, u32>],
+) -> f64 {
+    let k = chain.params.k();
+    debug_assert_eq!(bins.len(), chain.params.depth() * k);
+    debug_assert_eq!(overlays.len(), chain.cms.len());
+    let mut best = f64::INFINITY;
+    for (lvl, cms) in chain.cms.iter().enumerate() {
+        let row = &bins[lvl * k..(lvl + 1) * k];
+        let counted = if overlays[lvl].is_empty() {
+            cms.query(row)
+        } else {
+            cms.query_overlaid(row, &overlays[lvl])
+        };
+        let c = counted as f64;
+        let v = match mode {
+            ScoreMode::Extrapolated => (1u64 << (lvl + 1)) as f64 * c,
+            ScoreMode::Log2 => (1.0 + c).log2() + (lvl + 1) as f64,
+        };
+        if v < best {
+            best = v;
+        }
+    }
+    best
+}
+
 /// One trained chain: sampled parameters + per-level CMS counts.
 #[derive(Debug, Clone)]
 pub struct TrainedChain {

@@ -6,9 +6,12 @@
 //! * [`cms`] — count-min sketches (per chain level)
 //! * [`ensemble`] — Steps 2–3: distributed fit and scoring (Algs. 2–3, Eq. 5)
 //! * [`plan`] — fused single-pass multi-chain executors ([`ExecMode`])
-//! * [`stream`] — §3.5 deployment front-end for evolving streams
+//! * [`stream`] — §3.5 deployment front-end for evolving streams: the
+//!   Arc-shared read-only [`ServedEnsemble`] + per-scorer absorb state
 //! * [`sharded`] — the concurrent front-end: ID-hash sharding of
-//!   [`stream`] across pinned worker threads
+//!   [`stream`] across pinned worker threads, one shared ensemble
+//! * [`checkpoint`] — durable absorb-state snapshots (`serve
+//!   --checkpoint-out` / `--resume`)
 //!
 //! Most callers should not drive these pieces directly: the
 //! [`crate::api`] module wraps them in the unified [`crate::api::Detector`]
@@ -17,6 +20,7 @@
 //! benchmarking and the cross-implementation equivalence tests.
 
 pub mod chain;
+pub mod checkpoint;
 pub mod cms;
 pub mod ensemble;
 pub mod plan;
@@ -25,9 +29,12 @@ pub mod sharded;
 pub mod stream;
 
 pub use chain::{Binner, ChainParams, NativeBinner};
+pub use checkpoint::{AbsorbCheckpoint, AbsorbSnapshot};
 pub use cms::CountMinSketch;
-pub use ensemble::{score_bins, ScoreMode, SparxModel, SparxParams, TrainedChain};
+pub use ensemble::{
+    score_bins, score_bins_overlaid, ScoreMode, SparxModel, SparxParams, TrainedChain,
+};
 pub use plan::{ChainSet, ExecMode};
 pub use projector::{compute_deltamax, project_dataset, Projector, Sketch};
-pub use sharded::{shard_of, ShardCounters, ShardedReport, ShardedStreamScorer};
-pub use stream::{StreamScore, StreamScorer};
+pub use sharded::{shard_of, ServeOptions, ShardCounters, ShardedReport, ShardedStreamScorer};
+pub use stream::{ServedEnsemble, StreamScore, StreamScorer, SwapCarry};

@@ -196,6 +196,20 @@ impl Projector {
             self.k()
         }
     }
+
+    /// Resident bytes of this projector: hashers, the memoised R\[D,K\]
+    /// sign matrix and the schema names. Used to account the shared
+    /// serving ensemble's footprint (`ServedEnsemble::resident_bytes`).
+    /// The R matrix and names live behind `Arc`s, so clones of one
+    /// projector share them — this reports the one resident copy.
+    pub fn resident_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.hashers.len() * std::mem::size_of::<crate::hash::SignHasher>()
+            + self.dense_r.as_ref().map_or(0, |r| r.len() * 4)
+            + self.schema_names.as_ref().map_or(0, |names| {
+                names.iter().map(|n| n.len() + std::mem::size_of::<String>()).sum()
+            })
+    }
 }
 
 /// Step 1 as a distributed job: one map pass, no shuffles.

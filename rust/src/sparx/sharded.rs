@@ -1,13 +1,16 @@
-//! Sharded concurrent serving (§3.5 scaled out): S shared-nothing
-//! shards, each owning its own LRU + sketch state behind a bounded
-//! ingest queue on a long-lived pinned worker thread.
+//! Sharded concurrent serving (§3.5 scaled out): S shards, each owning
+//! its own **mutable** absorb state (LRU + absorbed CMS delta) behind a
+//! bounded ingest queue on a long-lived pinned worker thread — while all
+//! S shards share **one** read-only [`ServedEnsemble`] behind an `Arc`,
+//! so the resident model footprint is 1× regardless of the shard count.
 //!
 //! Updates route by `murmur(ID) % S`, so every update for a given ID
-//! lands on the same shard, in arrival order. Because shards share
-//! nothing — separate caches, separate CMS copies, separate scratch —
-//! each shard behaves **bit-identically** to a single-threaded
-//! [`StreamScorer`] fed that shard's sub-stream, regardless of thread
-//! interleaving. While no shard evicts, per-ID score sequences are
+//! lands on the same shard, in arrival order. Shards share no *mutable*
+//! state — separate caches, separate absorbed deltas, separate scratch —
+//! and scoring only reads the shared ensemble, so each shard behaves
+//! **bit-identically** to a single-threaded [`StreamScorer`] fed that
+//! shard's sub-stream, regardless of thread interleaving. While no shard
+//! evicts (and absorb mode is off), per-ID score sequences are
 //! additionally identical across shard counts (eviction resets a
 //! sketch, and *when* an ID is evicted depends on which other IDs share
 //! its LRU — the one part of the contract that is cache-sizing, not
@@ -17,23 +20,36 @@
 //! Design notes:
 //! * the feeder coalesces routed updates into small batches so queue
 //!   synchronisation amortises (one lock round trip per [`BATCH`]
-//!   updates, not per update);
+//!   updates, not per update); every update carries its global submit
+//!   **sequence number**, so recorded per-shard score logs merge back
+//!   into exact submit order ([`ShardedReport::merged_scores`]);
 //! * a full shard queue blocks the feeder ([`PinnedPool`] backpressure)
 //!   — updates are never dropped;
+//! * the same queues carry the serving control plane: state snapshots
+//!   for checkpointing ([`ShardedStreamScorer::checkpoint`]) and atomic
+//!   ensemble swaps for hot reload
+//!   ([`ShardedStreamScorer::swap_ensemble`]) are messages processed in
+//!   stream order, so a checkpoint cut or a model swap lands at a
+//!   deterministic point of every shard's sub-stream;
 //! * [`ShardedStreamScorer::finish`] flushes, closes the queues, joins
 //!   the workers and merges per-shard counters into a [`ShardedReport`].
+
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::Arc;
 
 use crate::api::{Result, SparxError};
 use crate::cluster::pool::PinnedPool;
 use crate::data::UpdateTriple;
 use crate::hash::murmur3_bytes;
 
+use super::checkpoint::{AbsorbCheckpoint, AbsorbSnapshot};
 use super::ensemble::SparxModel;
-use super::stream::{StreamScore, StreamScorer};
+use super::stream::{ServedEnsemble, StreamScore, StreamScorer, SwapCarry};
 
 /// Seed of the ID → shard murmur route. Fixed: shard assignment is part
 /// of the serving contract (a restarted deployment must route every ID
-/// to the same shard it lived on before).
+/// to the same shard it lived on before — which is also what lets a
+/// checkpoint restore per-shard state onto the same layout).
 const SHARD_ROUTE_SEED: u32 = 0x51AD_0C47;
 
 /// Updates per channel message (feeder-side coalescing).
@@ -49,13 +65,43 @@ pub fn shard_of(id: u64, shards: usize) -> usize {
     murmur3_bytes(&id.to_le_bytes(), SHARD_ROUTE_SEED) as usize % shards
 }
 
+/// Serving-mode switches for the sharded front-end.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeOptions {
+    /// Record every (sequence, score) pair per shard for later merging —
+    /// memory grows with the stream; for harnesses and `--score-log`,
+    /// not steady-state production serving.
+    pub record: bool,
+    /// Absorb every update's point into its shard's delta overlay after
+    /// scoring (the xStream online behaviour). The reported score stays
+    /// the pre-absorb one. Note absorb couples IDs *within* a shard, so
+    /// cross-shard-count score identity no longer holds — but per-shard
+    /// state still checkpoints/merges exactly.
+    pub absorb: bool,
+}
+
+/// What travels over a shard's ingest queue: data batches, plus the two
+/// control messages of the serving lifecycle.
+enum ShardMsg {
+    /// Sequence-numbered updates, in submit order.
+    Batch(Vec<(u64, UpdateTriple)>),
+    /// Snapshot the shard's absorb state and send it back (checkpoint
+    /// cut: lands after every update submitted before it).
+    Snapshot(SyncSender<AbsorbSnapshot>),
+    /// Atomically swap the shared ensemble (hot reload). The feeder
+    /// validates compatibility *before* broadcasting, so the per-shard
+    /// swap cannot fail.
+    Swap(Arc<ServedEnsemble>),
+}
+
 /// Per-shard worker state: the shard's own single-threaded scorer plus
 /// the counters the merged report is built from.
 struct Shard {
     scorer: StreamScorer,
     worst: Option<StreamScore>,
     admitted: u64,
-    recorded: Option<Vec<StreamScore>>,
+    recorded: Option<Vec<(u64, StreamScore)>>,
+    absorb: bool,
 }
 
 /// Counters one shard reports after [`ShardedStreamScorer::finish`].
@@ -69,18 +115,22 @@ pub struct ShardCounters {
     pub evictions: u64,
     /// Sketches resident in this shard's cache at shutdown.
     pub cached_ids: usize,
+    /// Points absorbed into this shard's delta overlay.
+    pub absorbed: u64,
 }
 
 /// The merged post-shutdown report: per-shard counters, the most
 /// outlying update seen anywhere, and (in recording mode) every shard's
-/// full score sequence in processing order.
+/// full score sequence tagged with global submit sequence numbers.
 #[derive(Debug, Clone)]
 pub struct ShardedReport {
     pub shards: Vec<ShardCounters>,
     pub worst: Option<StreamScore>,
-    /// Per-shard score logs; empty unless the scorer was built with
-    /// [`ShardedStreamScorer::recording`].
-    pub scores: Vec<Vec<StreamScore>>,
+    /// Per-shard `(submit sequence, score)` logs in shard processing
+    /// order; empty unless the scorer was built with
+    /// [`ServeOptions::record`]. Use
+    /// [`merged_scores`](Self::merged_scores) for the global view.
+    pub scores: Vec<Vec<(u64, StreamScore)>>,
 }
 
 impl ShardedReport {
@@ -103,41 +153,84 @@ impl ShardedReport {
     pub fn cached_ids(&self) -> usize {
         self.shards.iter().map(|s| s.cached_ids).sum()
     }
+
+    /// Total points absorbed across shards.
+    pub fn absorbed(&self) -> u64 {
+        self.shards.iter().map(|s| s.absorbed).sum()
+    }
+
+    /// The recorded score logs interleaved back into **global submit
+    /// order** by sequence number — bit-stable across shard counts and
+    /// thread interleavings, which is what lets a resumed run's log be
+    /// diffed against an uninterrupted one. Empty unless recording.
+    pub fn merged_scores(&self) -> Vec<StreamScore> {
+        let mut tagged: Vec<(u64, &StreamScore)> = self
+            .scores
+            .iter()
+            .flatten()
+            .map(|(seq, score)| (*seq, score))
+            .collect();
+        tagged.sort_unstable_by_key(|(seq, _)| *seq);
+        tagged.into_iter().map(|(_, score)| score.clone()).collect()
+    }
 }
 
 /// The multi-threaded §3.5 front-end. Build from a fitted model via
 /// [`ShardedStreamScorer::new`] (or `FittedModel::stream_scorer_sharded`
-/// through the api), [`submit`](Self::submit) the update stream, then
-/// [`finish`](Self::finish) for the merged report.
+/// through the api), or share an already-frozen ensemble with
+/// [`ShardedStreamScorer::from_ensemble`]; [`submit`](Self::submit) the
+/// update stream, then [`finish`](Self::finish) for the merged report.
 pub struct ShardedStreamScorer {
-    pool: PinnedPool<Vec<UpdateTriple>, Shard>,
-    pending: Vec<Vec<UpdateTriple>>,
+    pool: PinnedPool<ShardMsg, Shard>,
+    pending: Vec<Vec<(u64, UpdateTriple)>>,
     shards: usize,
+    cache_per_shard: usize,
     submitted: u64,
-    feature_names: Option<Vec<String>>,
+    absorb: bool,
+    ensemble: Arc<ServedEnsemble>,
 }
 
 impl ShardedStreamScorer {
-    /// `shards` shared-nothing workers, each with an LRU of
-    /// `cache_per_shard` IDs (total resident sketches:
-    /// `shards × cache_per_shard`). Same model requirements as
-    /// [`StreamScorer::new`].
+    /// `shards` workers sharing one read-only ensemble, each with a
+    /// private LRU of `cache_per_shard` IDs (total resident sketches:
+    /// `shards × cache_per_shard`; resident model: **1×**, Arc-shared).
+    /// Same model requirements as [`StreamScorer::new`].
     pub fn new(model: &SparxModel, shards: usize, cache_per_shard: usize) -> Result<Self> {
-        Self::build(model, shards, cache_per_shard, false)
+        Self::from_ensemble(
+            Arc::new(ServedEnsemble::new(model)?),
+            shards,
+            cache_per_shard,
+            ServeOptions::default(),
+            None,
+        )
     }
 
     /// Test-harness constructor: every shard additionally records its
     /// full score sequence for later comparison. Memory grows with the
     /// stream — not for production serving.
     pub fn recording(model: &SparxModel, shards: usize, cache_per_shard: usize) -> Result<Self> {
-        Self::build(model, shards, cache_per_shard, true)
+        Self::from_ensemble(
+            Arc::new(ServedEnsemble::new(model)?),
+            shards,
+            cache_per_shard,
+            ServeOptions { record: true, absorb: false },
+            None,
+        )
     }
 
-    fn build(
-        model: &SparxModel,
+    /// The full-control constructor: share `ensemble` across `shards`
+    /// workers, optionally recording and/or absorbing
+    /// ([`ServeOptions`]), optionally restoring a checkpoint so the
+    /// stream continues exactly where a previous process left off.
+    /// Resume is validated typed before any worker spawns: the
+    /// checkpoint must carry the same model fingerprint, shard count and
+    /// cache capacity it was taken under.
+    pub fn from_ensemble(
+        ensemble: Arc<ServedEnsemble>,
         shards: usize,
         cache_per_shard: usize,
-        record: bool,
+        opts: ServeOptions,
+        resume: Option<&AbsorbCheckpoint>,
     ) -> Result<Self> {
         if shards == 0 {
             return Err(SparxError::InvalidParams("shard count must be ≥ 1".into()));
@@ -147,30 +240,59 @@ impl ShardedStreamScorer {
                 "shard count {shards} exceeds the 4096-thread cap"
             )));
         }
+        if let Some(ckpt) = resume {
+            ckpt.validate_for(&ensemble, shards, cache_per_shard, opts.absorb)?;
+        }
         let mut states = Vec::with_capacity(shards);
-        for _ in 0..shards {
+        for s in 0..shards {
+            let mut scorer = StreamScorer::from_ensemble(ensemble.clone(), cache_per_shard)?;
+            let mut admitted = 0;
+            if let Some(ckpt) = resume {
+                let snap = &ckpt.snapshots[s];
+                scorer.restore(snap)?;
+                admitted = snap.admitted();
+            }
             states.push(Shard {
-                scorer: StreamScorer::new(model, cache_per_shard)?,
+                scorer,
                 worst: None,
-                admitted: 0,
-                recorded: record.then(Vec::new),
+                admitted,
+                recorded: opts.record.then(Vec::new),
+                absorb: opts.absorb,
             });
         }
         let pool = PinnedPool::spawn(
             states,
             QUEUE_CAP_BATCHES,
-            |shard: &mut Shard, batch: Vec<UpdateTriple>| {
-                for u in batch {
-                    let s = shard.scorer.update(&u);
-                    if s.fresh {
-                        shard.admitted += 1;
+            |shard: &mut Shard, msg: ShardMsg| match msg {
+                ShardMsg::Batch(batch) => {
+                    for (seq, u) in batch {
+                        let s = shard.scorer.update(&u);
+                        if s.fresh {
+                            shard.admitted += 1;
+                        }
+                        if shard.absorb {
+                            shard.scorer.absorb_only(s.id);
+                        }
+                        if s.more_outlying_than(shard.worst.as_ref()) {
+                            shard.worst = Some(s.clone());
+                        }
+                        if let Some(log) = &mut shard.recorded {
+                            log.push((seq, s));
+                        }
                     }
-                    if s.more_outlying_than(shard.worst.as_ref()) {
-                        shard.worst = Some(s.clone());
-                    }
-                    if let Some(log) = &mut shard.recorded {
-                        log.push(s);
-                    }
+                }
+                ShardMsg::Snapshot(reply) => {
+                    // a dropped receiver (feeder gone) is not an error
+                    let _ = reply.send(shard.scorer.snapshot());
+                }
+                ShardMsg::Swap(ens) => {
+                    // the feeder validated compatibility against the same
+                    // shared ensemble every shard holds, so this cannot
+                    // fail; a panic here would mean shards diverged
+                    shard
+                        .scorer
+                        .swap_ensemble(ens)
+                        .expect("feeder validates swap compatibility");
                 }
             },
         );
@@ -178,8 +300,10 @@ impl ShardedStreamScorer {
             pool,
             pending: vec![Vec::with_capacity(BATCH); shards],
             shards,
-            submitted: 0,
-            feature_names: model.projector.dense_schema().map(|n| n.to_vec()),
+            cache_per_shard,
+            submitted: resume.map_or(0, |c| c.submitted),
+            absorb: opts.absorb,
+            ensemble,
         })
     }
 
@@ -187,40 +311,102 @@ impl ShardedStreamScorer {
         self.shards
     }
 
-    /// Updates submitted so far (some may still be in flight — the
-    /// per-shard `processed` counters are exact only after `finish`).
+    /// Updates submitted so far — across process restarts when resumed
+    /// from a checkpoint (some may still be in flight; the per-shard
+    /// `processed` counters are exact only after `finish`).
     pub fn submitted(&self) -> u64 {
         self.submitted
     }
 
-    /// See [`StreamScorer::feature_names`].
-    pub fn feature_names(&self) -> Option<&[String]> {
-        self.feature_names.as_deref()
+    /// The shared read-only ensemble all shards score against.
+    pub fn ensemble(&self) -> &Arc<ServedEnsemble> {
+        &self.ensemble
     }
 
-    /// Route one update to its shard. Blocks only when that shard's
-    /// bounded ingest queue is full (backpressure, never loss — unless
-    /// a shard worker has panicked, in which case its updates are
-    /// discarded and [`finish`](Self::finish) re-raises the panic).
+    /// Bytes of the **one** resident ensemble all shards share — this
+    /// does not scale with the shard count (the pre-refactor design held
+    /// S independent copies).
+    pub fn resident_ensemble_bytes(&self) -> usize {
+        self.ensemble.resident_bytes()
+    }
+
+    /// See [`ServedEnsemble::feature_names`].
+    pub fn feature_names(&self) -> Option<&[String]> {
+        self.ensemble.feature_names()
+    }
+
+    /// Route one update to its shard, tagged with its global submit
+    /// sequence number. Blocks only when that shard's bounded ingest
+    /// queue is full (backpressure, never loss — unless a shard worker
+    /// has panicked, in which case its updates are discarded and
+    /// [`finish`](Self::finish) re-raises the panic).
     pub fn submit(&mut self, u: UpdateTriple) {
         let s = shard_of(u.id(), self.shards);
-        self.pending[s].push(u);
+        let seq = self.submitted;
         self.submitted += 1;
+        self.pending[s].push((seq, u));
         if self.pending[s].len() >= BATCH {
             let batch = std::mem::replace(&mut self.pending[s], Vec::with_capacity(BATCH));
-            self.pool.send(s, batch);
+            self.pool.send(s, ShardMsg::Batch(batch));
         }
+    }
+
+    /// Flush everything submitted so far to the shards.
+    fn flush_pending(&mut self) {
+        for (s, buf) in self.pending.iter_mut().enumerate() {
+            if !buf.is_empty() {
+                self.pool.send(s, ShardMsg::Batch(std::mem::take(buf)));
+            }
+        }
+    }
+
+    /// Cut a consistent checkpoint: flush the pending batches, ask every
+    /// shard to snapshot its absorb state (the snapshot message lands
+    /// *after* every update submitted before this call), and merge the S
+    /// snapshots under one header. The stream can keep flowing
+    /// afterwards — nothing is torn down.
+    pub fn checkpoint(&mut self) -> AbsorbCheckpoint {
+        self.flush_pending();
+        let mut replies = Vec::with_capacity(self.shards);
+        for s in 0..self.shards {
+            let (tx, rx) = sync_channel(1);
+            self.pool.send(s, ShardMsg::Snapshot(tx));
+            replies.push(rx);
+        }
+        let snapshots: Vec<AbsorbSnapshot> = replies
+            .into_iter()
+            .map(|rx| rx.recv().expect("shard worker died before answering the snapshot"))
+            .collect();
+        AbsorbCheckpoint::for_ensemble(
+            &self.ensemble,
+            self.shards as u32,
+            self.cache_per_shard as u64,
+            self.submitted,
+            self.absorb,
+            snapshots,
+        )
+    }
+
+    /// Hot model reload: validate the swap once at the feeder (typed
+    /// rejection when the serving schemas differ — no shard is touched),
+    /// flush, then broadcast the new `Arc` so every shard swaps at the
+    /// same deterministic point of its sub-stream, carrying its absorb
+    /// state forward per [`ServedEnsemble::swap_carry`].
+    pub fn swap_ensemble(&mut self, new: Arc<ServedEnsemble>) -> Result<SwapCarry> {
+        let carry = self.ensemble.swap_carry(&new)?;
+        self.flush_pending();
+        for s in 0..self.shards {
+            self.pool.send(s, ShardMsg::Swap(new.clone()));
+        }
+        self.ensemble = new;
+        Ok(carry)
     }
 
     /// Flush the pending batches, close the queues, join the workers
     /// and merge the per-shard counters.
-    pub fn finish(self) -> ShardedReport {
-        let ShardedStreamScorer { pool, mut pending, .. } = self;
-        for (s, buf) in pending.iter_mut().enumerate() {
-            if !buf.is_empty() {
-                pool.send(s, std::mem::take(buf));
-            }
-        }
+    pub fn finish(mut self) -> ShardedReport {
+        self.flush_pending();
+        let ShardedStreamScorer { pool, .. } = self;
         let shards = pool.join();
         let mut report = ShardedReport {
             shards: Vec::with_capacity(shards.len()),
@@ -233,6 +419,7 @@ impl ShardedStreamScorer {
                 admitted: sh.admitted,
                 evictions: sh.scorer.evictions(),
                 cached_ids: sh.scorer.cached_ids(),
+                absorbed: sh.scorer.absorbed(),
             });
             if let Some(w) = sh.worst {
                 if w.more_outlying_than(report.worst.as_ref()) {
@@ -310,7 +497,7 @@ mod tests {
     }
 
     #[test]
-    fn recording_mode_captures_per_shard_logs() {
+    fn recording_mode_captures_per_shard_logs_with_submit_seqs() {
         let model = fitted();
         let mut scorer = ShardedStreamScorer::recording(&model, 2, 32).unwrap();
         for id in 0..10u64 {
@@ -320,9 +507,78 @@ mod tests {
         let logged: usize = report.scores.iter().map(Vec::len).sum();
         assert_eq!(logged, 10);
         for (s, log) in report.scores.iter().enumerate() {
-            for rec in log {
+            for (seq, rec) in log {
                 assert_eq!(shard_of(rec.id, 2), s, "score recorded on the wrong shard");
+                assert!(*seq < 10, "sequence numbers come from the submit counter");
             }
         }
+        // the merged view is in exact submit order: seq 0..10, and since
+        // ids were submitted in order, ids 0..10 in order too
+        let merged = report.merged_scores();
+        assert_eq!(merged.len(), 10);
+        let ids: Vec<u64> = merged.iter().map(|s| s.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>(), "merge must restore submit order");
+    }
+
+    /// The Arc-sharing contract: S shards hold handles on one ensemble
+    /// (S worker handles + the feeder's), and the reported resident
+    /// footprint does not scale with S.
+    #[test]
+    fn shards_share_one_ensemble_at_one_x_footprint() {
+        let model = fitted();
+        let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+        let one = ShardedStreamScorer::from_ensemble(
+            ens.clone(),
+            1,
+            16,
+            ServeOptions::default(),
+            None,
+        )
+        .unwrap();
+        let bytes_s1 = one.resident_ensemble_bytes();
+        drop(one.finish());
+        let eight = ShardedStreamScorer::from_ensemble(
+            ens.clone(),
+            8,
+            16,
+            ServeOptions::default(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(
+            Arc::strong_count(&ens),
+            1 + 1 + 8,
+            "local + feeder + 8 shard handles on ONE ensemble"
+        );
+        assert_eq!(
+            eight.resident_ensemble_bytes(),
+            bytes_s1,
+            "resident ensemble bytes must be independent of the shard count"
+        );
+        assert!(bytes_s1 > 0);
+        drop(eight.finish());
+        assert_eq!(Arc::strong_count(&ens), 1, "workers must release their handles at join");
+    }
+
+    /// Absorb mode: every update's point lands in its shard's delta; the
+    /// per-shard absorbed counters sum to the stream length.
+    #[test]
+    fn absorb_mode_counts_and_reports() {
+        let model = fitted();
+        let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+        let mut scorer = ShardedStreamScorer::from_ensemble(
+            ens,
+            3,
+            64,
+            ServeOptions { record: false, absorb: true },
+            None,
+        )
+        .unwrap();
+        for id in 0..50u64 {
+            scorer.submit(UpdateTriple::Num { id, feature: "f0".into(), delta: 0.5 });
+        }
+        let report = scorer.finish();
+        assert_eq!(report.processed(), 50);
+        assert_eq!(report.absorbed(), 50, "absorb mode must absorb every update");
     }
 }

@@ -9,11 +9,33 @@
 //!   entries are hashed on the fly, not cached;
 //! * re-scoring reads r buckets per level per chain — O(K + rLM) time;
 //! * the model (all CMSes) is O(rwLM) — constant in n and d.
+//!
+//! ## Served state split (read-only ensemble vs mutable absorb state)
+//!
+//! The scorer is split into two halves with very different lifecycles:
+//!
+//! * [`ServedEnsemble`] — the **read-only** fitted model (chains, trained
+//!   CMS counts, projector, bin schema). It lives behind an `Arc`, so S
+//!   shard workers share **one** copy at 1× the model footprint instead
+//!   of cloning it S times — and because scoring only reads it, sharing
+//!   cannot move a score by even a bit.
+//! * the **mutable absorb state** owned by each [`StreamScorer`]: the LRU
+//!   sketch cache plus a sparse *delta* overlay of absorbed CMS counts
+//!   ([`super::cms::CountMinSketch::query_overlaid`]). Absorbing a point
+//!   increments the overlay, never the shared base counts. This state is small,
+//!   per-shard, serializable ([`StreamScorer::snapshot`] /
+//!   [`StreamScorer::restore`] — see [`super::checkpoint`]) and survives
+//!   a hot model swap ([`StreamScorer::swap_ensemble`]).
+
+use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::api::{Result, SparxError};
+use crate::util::codec::{crc32, Encoder};
 use crate::util::LruCache;
 
-use super::ensemble::{score_bins, ScoreMode, SparxModel, TrainedChain};
+use super::checkpoint::AbsorbSnapshot;
+use super::ensemble::{score_bins, score_bins_overlaid, ScoreMode, SparxModel, TrainedChain};
 use crate::data::UpdateTriple;
 
 /// Outcome of one streamed update.
@@ -41,18 +63,233 @@ impl StreamScore {
     }
 }
 
-/// The deployment-node scorer.
-pub struct StreamScorer {
-    chains: Vec<TrainedChain>,
-    projector: crate::sparx::Projector,
+/// What a hot model swap carries forward (see
+/// [`ServedEnsemble::swap_carry`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapCarry {
+    /// Same fitted model (fingerprint match): sketches, counters **and**
+    /// the absorbed CMS delta all carry forward.
+    Full,
+    /// Same serving schema but different fitted chains: sketches and
+    /// counters carry forward; the absorbed delta is reset, because its
+    /// bucket indices were computed against the old chains' bins.
+    SketchesOnly,
+}
+
+/// The read-only half of the serving state: everything scoring needs and
+/// nothing a δ-update mutates. Build once per loaded model
+/// ([`ServedEnsemble::new`] or `FittedModel::served_ensemble` on the
+/// api), wrap in an `Arc`, and hand the same handle to every shard.
+pub struct ServedEnsemble {
+    pub(crate) chains: Vec<TrainedChain>,
+    pub(crate) projector: super::Projector,
     mode: ScoreMode,
     k: usize,
+    depth: usize,
+    cms_rows: usize,
+    cms_cols: usize,
+    /// CRC-32 over the encoded projector + score mode + every trained
+    /// chain: two ensembles score identically iff this matches.
+    model_fingerprint: u32,
+    /// CRC-32 over the *serving schema* only (projection width/density,
+    /// ensemble shape, score mode, dense feature names): absorb state is
+    /// portable between ensembles exactly when this matches.
+    schema_fingerprint: u32,
+}
+
+impl ServedEnsemble {
+    /// Freeze a fitted model's scoring state. Requires a hashing
+    /// projector (k > 0): evolving features need the hash-not-cash trick
+    /// of Eq. (2)/(3).
+    pub fn new(model: &SparxModel) -> Result<ServedEnsemble> {
+        if model.projector.is_identity() {
+            return Err(SparxError::Unsupported(
+                "streaming requires a hashing projector (params.k > 0)".into(),
+            ));
+        }
+        if model.chains.is_empty() || model.chains[0].cms.is_empty() {
+            return Err(SparxError::InvalidParams(
+                "cannot serve an ensemble with no trained chains".into(),
+            ));
+        }
+        let k = model.projector.k();
+        let depth = model.params.depth;
+        let (cms_rows, cms_cols) = (model.chains[0].cms[0].rows(), model.chains[0].cms[0].cols());
+        let mut ens = ServedEnsemble {
+            chains: model.chains.clone(),
+            projector: model.projector.clone(),
+            mode: model.params.score_mode,
+            k,
+            depth,
+            cms_rows,
+            cms_cols,
+            model_fingerprint: 0,
+            schema_fingerprint: 0,
+        };
+        ens.model_fingerprint = ens.compute_model_fingerprint();
+        ens.schema_fingerprint = ens.compute_schema_fingerprint();
+        Ok(ens)
+    }
+
+    fn compute_model_fingerprint(&self) -> u32 {
+        let mut enc = Encoder::new();
+        crate::api::artifact::encode_projector(&mut enc, &self.projector);
+        crate::api::artifact::encode_score_mode(&mut enc, self.mode);
+        for chain in &self.chains {
+            crate::api::artifact::encode_chain(&mut enc, chain);
+        }
+        crc32(enc.as_slice())
+    }
+
+    fn compute_schema_fingerprint(&self) -> u32 {
+        let mut enc = Encoder::new();
+        enc.put_usize(self.k);
+        enc.put_f64(self.projector.density().unwrap_or(0.0));
+        enc.put_usize(self.depth);
+        enc.put_usize(self.chains.len());
+        enc.put_usize(self.cms_rows);
+        enc.put_usize(self.cms_cols);
+        crate::api::artifact::encode_score_mode(&mut enc, self.mode);
+        match self.projector.dense_schema() {
+            None => enc.put_u8(0),
+            Some(names) => {
+                enc.put_u8(1);
+                enc.put_u32(names.len() as u32);
+                for n in names {
+                    enc.put_str(n);
+                }
+            }
+        }
+        crc32(enc.as_slice())
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn num_chains(&self) -> usize {
+        self.chains.len()
+    }
+
+    pub fn cms_rows(&self) -> usize {
+        self.cms_rows
+    }
+
+    pub fn cms_cols(&self) -> usize {
+        self.cms_cols
+    }
+
+    pub fn score_mode(&self) -> ScoreMode {
+        self.mode
+    }
+
+    /// CRC-32 over the encoded projector + score mode + every trained
+    /// chain: two ensembles score identically iff this matches. Resume
+    /// (`serve --resume`) requires equality — a checkpoint only
+    /// reproduces the interrupted stream bit-for-bit under the exact
+    /// model it was taken against.
+    pub fn model_fingerprint(&self) -> u32 {
+        self.model_fingerprint
+    }
+
+    /// CRC-32 over the *serving schema* only (projection width/density,
+    /// ensemble shape, score mode, dense feature names): absorb state is
+    /// portable between ensembles exactly when this matches — the
+    /// hot-reload carry-forward rule.
+    pub fn schema_fingerprint(&self) -> u32 {
+        self.schema_fingerprint
+    }
+
+    /// The dense feature names the model was trained against, if its
+    /// projector carries a schema (used by `sparx serve` to synthesize a
+    /// compatible demo stream; any names hash fine either way).
+    pub fn feature_names(&self) -> Option<&[String]> {
+        self.projector.dense_schema()
+    }
+
+    /// Resident bytes of the shared scoring state: trained chains (CMS
+    /// blocks + chain params) plus the projector (hashers, memoised
+    /// R\[D,K\], schema names). This is the footprint that is held
+    /// **once** per process under Arc-sharing, regardless of the shard
+    /// count.
+    pub fn resident_bytes(&self) -> usize {
+        use crate::util::SizeOf;
+        self.chains.iter().map(SizeOf::size_of).sum::<usize>() + self.projector.resident_bytes()
+    }
+
+    /// Decide what a hot swap from `self` to `new` may carry forward:
+    /// same fingerprint ⇒ everything ([`SwapCarry::Full`]); same serving
+    /// schema ⇒ sketches and counters but not the absorbed delta
+    /// ([`SwapCarry::SketchesOnly`]); different schema ⇒ typed rejection
+    /// (the resident sketches would be meaningless under the new model).
+    pub fn swap_carry(&self, new: &ServedEnsemble) -> Result<SwapCarry> {
+        if self.model_fingerprint == new.model_fingerprint {
+            return Ok(SwapCarry::Full);
+        }
+        if self.schema_fingerprint == new.schema_fingerprint {
+            return Ok(SwapCarry::SketchesOnly);
+        }
+        Err(SparxError::Unsupported(format!(
+            "cannot hot-swap to an ensemble with a different serving schema \
+             (K={} L={} M={} r={} w={} vs K={} L={} M={} r={} w={}): absorbed \
+             stream state is not portable across schemas",
+            self.k,
+            self.depth,
+            self.chains.len(),
+            self.cms_rows,
+            self.cms_cols,
+            new.k,
+            new.depth,
+            new.chains.len(),
+            new.cms_rows,
+            new.cms_cols,
+        )))
+    }
+}
+
+/// Sparse per-level overlay of absorbed CMS increments: the mutable
+/// counterpart of the shared read-only counts. Indexed chain-major
+/// (`m · L + l`), each level keyed by row-major bucket index.
+#[derive(Debug, Clone)]
+pub(crate) struct DeltaCms {
+    pub(crate) levels: Vec<HashMap<u32, u32>>,
+    depth: usize,
+    /// Total overlay insertions recorded (never decremented); `0` means
+    /// the fast no-overlay query path is exact.
+    inserts: u64,
+}
+
+impl DeltaCms {
+    fn new(num_chains: usize, depth: usize) -> DeltaCms {
+        DeltaCms { levels: vec![HashMap::new(); num_chains * depth], depth, inserts: 0 }
+    }
+
+    fn chain_levels(&self, m: usize) -> &[HashMap<u32, u32>] {
+        &self.levels[m * self.depth..(m + 1) * self.depth]
+    }
+
+    fn is_empty(&self) -> bool {
+        self.inserts == 0
+    }
+}
+
+/// The deployment-node scorer: one `Arc` handle on the shared
+/// [`ServedEnsemble`] plus this scorer's own mutable absorb state (LRU
+/// sketches + absorbed CMS delta + counters + scratch).
+pub struct StreamScorer {
+    ensemble: Arc<ServedEnsemble>,
     cache: LruCache<u64, Vec<f32>>,
+    delta: DeltaCms,
     // scratch buffers reused across updates (no allocation per update)
     scratch: Vec<f32>,
     bins: Vec<i32>,
     evicted: u64,
     processed: u64,
+    absorbed: u64,
 }
 
 impl StreamScorer {
@@ -60,37 +297,51 @@ impl StreamScorer {
     /// Requires a hashing projector (k > 0): evolving features need the
     /// hash-not-cash trick of Eq. (2)/(3).
     pub fn new(model: &SparxModel, cache_size: usize) -> Result<Self> {
+        Self::from_ensemble(Arc::new(ServedEnsemble::new(model)?), cache_size)
+    }
+
+    /// Build from an already-frozen (possibly shared) ensemble — the
+    /// constructor the sharded front-end uses, so S shards hold S `Arc`
+    /// handles on **one** resident model.
+    pub fn from_ensemble(ensemble: Arc<ServedEnsemble>, cache_size: usize) -> Result<Self> {
         if cache_size == 0 {
             return Err(SparxError::InvalidParams(
                 "stream cache size must be ≥ 1 (it bounds the resident sketches)".into(),
             ));
         }
-        if model.projector.is_identity() {
-            return Err(SparxError::Unsupported(
-                "streaming requires a hashing projector (params.k > 0)".into(),
-            ));
-        }
-        let k = model.projector.k();
-        let depth = model.params.depth;
+        let k = ensemble.k();
+        let depth = ensemble.depth();
+        let m = ensemble.num_chains();
         Ok(StreamScorer {
-            chains: model.chains.clone(),
-            projector: model.projector.clone(),
-            mode: model.params.score_mode,
-            k,
             cache: LruCache::new(cache_size),
+            delta: DeltaCms::new(m, depth),
             scratch: vec![0.0; k],
             bins: vec![0; depth * k],
             evicted: 0,
             processed: 0,
+            absorbed: 0,
+            ensemble,
         })
+    }
+
+    /// The shared read-only half of this scorer's state.
+    pub fn ensemble(&self) -> &Arc<ServedEnsemble> {
+        &self.ensemble
+    }
+
+    /// Bytes of the shared ensemble this scorer holds a handle on (not
+    /// duplicated per scorer — see [`ServedEnsemble::resident_bytes`]).
+    pub fn resident_ensemble_bytes(&self) -> usize {
+        self.ensemble.resident_bytes()
     }
 
     /// Apply one ⟨ID, F, δ⟩ update (Eq. 3) and return the updated score.
     pub fn update(&mut self, u: &UpdateTriple) -> StreamScore {
         self.processed += 1;
         let id = u.id();
+        let k = self.ensemble.k();
         let fresh = !self.cache.contains(&id);
-        if fresh && self.cache.put(id, vec![0.0f32; self.k]).is_some() {
+        if fresh && self.cache.put(id, vec![0.0f32; k]).is_some() {
             self.evicted += 1;
         }
         {
@@ -98,13 +349,13 @@ impl StreamScorer {
             match u {
                 UpdateTriple::Num { feature, delta, .. } => {
                     // s[k] += h_k(F) · δ — works for brand-new features too
-                    for (sk, h) in s.iter_mut().zip(&self.projector.hashers) {
+                    for (sk, h) in s.iter_mut().zip(&self.ensemble.projector.hashers) {
                         *sk += h.feature(feature) * *delta as f32;
                     }
                 }
                 UpdateTriple::Cat { feature, old, new, .. } => {
                     // s[k] += h_k(F⊕new) − h_k(F⊕old); old = null ⇒ 0
-                    for (sk, h) in s.iter_mut().zip(&self.projector.hashers) {
+                    for (sk, h) in s.iter_mut().zip(&self.ensemble.projector.hashers) {
                         *sk += h.feature_value(feature, new);
                         if let Some(o) = old {
                             *sk -= h.feature_value(feature, o);
@@ -119,29 +370,155 @@ impl StreamScorer {
 
     /// Score a cached ID against the ensemble: O(rLM) CMS reads, zero
     /// allocations (scratch buffers are reused across updates). Uses the
-    /// same [`score_bins`] kernel as the distributed and fused scorers.
+    /// same [`score_bins`] kernel as the distributed and fused scorers,
+    /// overlaying this scorer's absorbed delta when it is non-empty.
     pub fn score_id(&mut self, id: u64) -> Option<f64> {
         let s = self.cache.get(&id)?; // disjoint field borrows below
+        let ens = &*self.ensemble;
+        let overlay = !self.delta.is_empty();
         let mut total = 0.0;
-        for chain in &self.chains {
+        for (m, chain) in ens.chains.iter().enumerate() {
             chain.params.bins_into(s, &mut self.scratch, &mut self.bins);
-            total += score_bins(chain, self.mode, &self.bins);
+            total += if overlay {
+                score_bins_overlaid(chain, ens.mode, &self.bins, self.delta.chain_levels(m))
+            } else {
+                score_bins(chain, ens.mode, &self.bins)
+            };
         }
-        Some(-(total / self.chains.len() as f64))
+        Some(-(total / ens.chains.len() as f64))
     }
 
     /// Absorb the point's current sketch into the density counts (the
-    /// xStream streaming behaviour: new points update the histograms).
-    pub fn absorb(&mut self, id: u64) -> bool {
+    /// xStream streaming behaviour: new points update the histograms) and
+    /// return its **post-absorb** score, so callers never pay a second
+    /// `score_id` round. The increments land in this scorer's private
+    /// delta overlay — the shared ensemble is never written.
+    /// Returns `None` if the ID is not cached.
+    pub fn absorb(&mut self, id: u64) -> Option<f64> {
+        if !self.absorb_only(id) {
+            return None;
+        }
+        self.score_id(id)
+    }
+
+    /// The insert half of [`absorb`](Self::absorb), without the rescore —
+    /// what the sharded absorb-every-update serving mode uses (it already
+    /// has the pre-absorb score to report).
+    pub(crate) fn absorb_only(&mut self, id: u64) -> bool {
         let Some(s) = self.cache.get(&id).cloned() else { return false };
-        let k = self.k;
-        for chain in &mut self.chains {
+        let ens = &*self.ensemble;
+        let k = ens.k;
+        let depth = self.delta.depth;
+        for (m, chain) in ens.chains.iter().enumerate() {
             chain.params.bins_into(&s, &mut self.scratch, &mut self.bins);
-            for (lvl, cms) in chain.cms.iter_mut().enumerate() {
-                cms.insert(&self.bins[lvl * k..(lvl + 1) * k]);
+            for (lvl, cms) in chain.cms.iter().enumerate() {
+                cms.overlay_insert(
+                    &self.bins[lvl * k..(lvl + 1) * k],
+                    &mut self.delta.levels[m * depth + lvl],
+                );
             }
         }
+        self.delta.inserts += (ens.chains.len() * ens.depth * ens.cms_rows) as u64;
+        self.absorbed += 1;
         true
+    }
+
+    /// Serialize this scorer's mutable state (sketches in LRU→MRU order,
+    /// absorbed delta, counters) — the unit the serving checkpoint merges
+    /// across shards. The shared ensemble is *not* part of the snapshot;
+    /// only its fingerprints travel, in the checkpoint header.
+    pub fn snapshot(&self) -> AbsorbSnapshot {
+        AbsorbSnapshot {
+            processed: self.processed,
+            evicted: self.evicted,
+            absorbed: self.absorbed,
+            entries: self.cache.iter_lru_to_mru().map(|(id, sk)| (*id, sk.clone())).collect(),
+            delta: self
+                .delta
+                .levels
+                .iter()
+                .map(|lvl| {
+                    let mut v: Vec<(u32, u32)> = lvl.iter().map(|(&b, &c)| (b, c)).collect();
+                    v.sort_unstable();
+                    v
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore a snapshot taken by [`snapshot`](Self::snapshot) against
+    /// the **same** ensemble schema: the scorer continues bit-identically
+    /// to the one the snapshot was taken from. Shape mismatches (sketch
+    /// width, delta level count, bucket range, more entries than the
+    /// cache holds) fail typed without touching the current state.
+    pub fn restore(&mut self, snap: &AbsorbSnapshot) -> Result<()> {
+        let ens = &*self.ensemble;
+        let buckets = (ens.cms_rows * ens.cms_cols) as u32;
+        if snap.delta.len() != ens.chains.len() * ens.depth {
+            return Err(SparxError::InvalidParams(format!(
+                "absorb snapshot has {} delta levels for an M={} L={} ensemble",
+                snap.delta.len(),
+                ens.chains.len(),
+                ens.depth
+            )));
+        }
+        if snap.entries.len() > self.cache.capacity() {
+            return Err(SparxError::InvalidParams(format!(
+                "absorb snapshot holds {} sketches but the cache capacity is {}",
+                snap.entries.len(),
+                self.cache.capacity()
+            )));
+        }
+        for (id, sk) in &snap.entries {
+            if sk.len() != ens.k {
+                return Err(SparxError::InvalidParams(format!(
+                    "absorb snapshot sketch for id {id} is {}-wide, ensemble expects K={}",
+                    sk.len(),
+                    ens.k
+                )));
+            }
+        }
+        for lvl in &snap.delta {
+            for &(bucket, count) in lvl {
+                if bucket >= buckets || count == 0 {
+                    return Err(SparxError::InvalidParams(format!(
+                        "absorb snapshot delta entry (bucket {bucket}, count {count}) is out \
+                         of range for a {}×{} CMS",
+                        ens.cms_rows, ens.cms_cols
+                    )));
+                }
+            }
+        }
+        let mut cache = LruCache::new(self.cache.capacity());
+        for (id, sk) in &snap.entries {
+            cache.put(*id, sk.clone());
+        }
+        let mut delta = DeltaCms::new(ens.chains.len(), ens.depth);
+        for (slot, lvl) in snap.delta.iter().enumerate() {
+            for &(bucket, count) in lvl {
+                delta.levels[slot].insert(bucket, count);
+                delta.inserts += count as u64;
+            }
+        }
+        self.cache = cache;
+        self.delta = delta;
+        self.processed = snap.processed;
+        self.evicted = snap.evicted;
+        self.absorbed = snap.absorbed;
+        Ok(())
+    }
+
+    /// Atomically swap the served model (hot reload): the absorb state
+    /// carries forward per [`ServedEnsemble::swap_carry`] — fully when
+    /// the fingerprint matches, sketches-only when just the schema does —
+    /// and a schema mismatch is rejected typed with no state change.
+    pub fn swap_ensemble(&mut self, new: Arc<ServedEnsemble>) -> Result<SwapCarry> {
+        let carry = self.ensemble.swap_carry(&new)?;
+        if carry == SwapCarry::SketchesOnly {
+            self.delta = DeltaCms::new(new.num_chains(), new.depth());
+        }
+        self.ensemble = new;
+        Ok(carry)
     }
 
     pub fn cached_ids(&self) -> usize {
@@ -156,11 +533,14 @@ impl StreamScorer {
         self.processed
     }
 
-    /// The dense feature names the model was trained against, if its
-    /// projector carries a schema (used by `sparx serve` to synthesize a
-    /// compatible demo stream; any names hash fine either way).
+    /// Points absorbed into this scorer's delta overlay so far.
+    pub fn absorbed(&self) -> u64 {
+        self.absorbed
+    }
+
+    /// See [`ServedEnsemble::feature_names`].
     pub fn feature_names(&self) -> Option<&[String]> {
-        self.projector.dense_schema()
+        self.ensemble.feature_names()
     }
 }
 
@@ -294,17 +674,176 @@ mod tests {
     }
 
     #[test]
-    fn absorb_increases_density_at_point() {
+    fn absorb_increases_density_at_point_and_returns_the_post_absorb_score() {
         let model = fitted();
         let mut s = StreamScorer::new(&model, 16).unwrap();
         let before = s.update(&UpdateTriple::Num { id: 3, feature: "f2".into(), delta: 5.0 });
         // absorbing the point several times makes its region denser ⇒ its
         // outlierness must strictly drop
+        let mut last = f64::INFINITY;
         for _ in 0..5 {
-            assert!(s.absorb(3));
+            last = s.absorb(3).expect("id 3 is cached");
         }
-        let after = s.score_id(3).unwrap();
-        assert!(after < before.outlierness, "{after} !< {}", before.outlierness);
+        assert_eq!(s.absorbed(), 5);
+        assert!(last < before.outlierness, "{last} !< {}", before.outlierness);
+        // the returned score is exactly what a rescore would produce
+        assert_eq!(s.score_id(3).unwrap(), last, "absorb must return the post-absorb score");
+        // absorbing an uncached id is a no-op signalled by None
+        assert_eq!(s.absorb(123456), None);
+        assert_eq!(s.absorbed(), 5);
+    }
+
+    /// Two scorers sharing one `Arc<ServedEnsemble>`: absorbing on one
+    /// must not move the other's scores by a bit — the shared base counts
+    /// are read-only, deltas are private.
+    #[test]
+    fn absorb_is_private_to_the_scorer_under_a_shared_ensemble() {
+        let model = fitted();
+        let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+        let mut a = StreamScorer::from_ensemble(ens.clone(), 16).unwrap();
+        let mut b = StreamScorer::from_ensemble(ens.clone(), 16).unwrap();
+        let u = UpdateTriple::Num { id: 7, feature: "f1".into(), delta: 2.0 };
+        let sa = a.update(&u);
+        let sb = b.update(&u);
+        assert_eq!(sa.outlierness.to_bits(), sb.outlierness.to_bits());
+        for _ in 0..10 {
+            a.absorb(7).unwrap();
+        }
+        assert_eq!(
+            b.score_id(7).unwrap().to_bits(),
+            sb.outlierness.to_bits(),
+            "a sibling scorer's absorb must not leak through the shared ensemble"
+        );
+        assert!(a.score_id(7).unwrap() < sa.outlierness);
+        assert_eq!(Arc::strong_count(&ens), 3, "one shared ensemble, three handles");
+    }
+
+    /// Snapshot → restore continues bit-identically, including LRU
+    /// recency (eviction order) and the absorbed delta.
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        let model = fitted();
+        let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+        let mut original = StreamScorer::from_ensemble(ens.clone(), 4).unwrap();
+        for id in 0..6u64 {
+            let s = original.update(&UpdateTriple::Num {
+                id,
+                feature: "f0".into(),
+                delta: 0.5 + id as f64,
+            });
+            original.absorb(s.id);
+        }
+        let snap = original.snapshot();
+        let mut restored = StreamScorer::from_ensemble(ens, 4).unwrap();
+        restored.restore(&snap).unwrap();
+        assert_eq!(restored.processed(), original.processed());
+        assert_eq!(restored.evictions(), original.evictions());
+        assert_eq!(restored.absorbed(), original.absorbed());
+        assert_eq!(restored.cached_ids(), original.cached_ids());
+        // identical continuation: same scores, same eviction behaviour
+        for id in [3u64, 9, 4, 0, 11, 5] {
+            let a = original.update(&UpdateTriple::Num { id, feature: "f1".into(), delta: 1.5 });
+            let b = restored.update(&UpdateTriple::Num { id, feature: "f1".into(), delta: 1.5 });
+            assert_eq!(a, b, "divergence at id {id}");
+        }
+        assert_eq!(original.evictions(), restored.evictions());
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_shapes_typed() {
+        let model = fitted();
+        let mut s = StreamScorer::new(&model, 4).unwrap();
+        s.update(&UpdateTriple::Num { id: 1, feature: "f0".into(), delta: 1.0 });
+        let good = s.snapshot();
+        // wrong sketch width
+        let mut bad = good.clone();
+        bad.entries.push((99, vec![0.0; 3]));
+        assert!(matches!(s.restore(&bad), Err(SparxError::InvalidParams(_))));
+        // wrong delta level count
+        let mut bad = good.clone();
+        bad.delta.pop();
+        assert!(matches!(s.restore(&bad), Err(SparxError::InvalidParams(_))));
+        // more entries than the cache can hold
+        let mut bad = good.clone();
+        for id in 100..110u64 {
+            bad.entries.push((id, vec![0.0; 8]));
+        }
+        assert!(matches!(s.restore(&bad), Err(SparxError::InvalidParams(_))));
+        // bucket out of range
+        let mut bad = good;
+        bad.delta[0].push((u32::MAX, 1));
+        assert!(matches!(s.restore(&bad), Err(SparxError::InvalidParams(_))));
+        // the failed restores must not have clobbered the live state
+        assert_eq!(s.processed(), 1);
+    }
+
+    /// Hot swap: same model carries everything; same schema but different
+    /// chains carries the sketches and resets the delta; a different
+    /// schema is rejected typed with no state change.
+    #[test]
+    fn swap_ensemble_carry_rules() {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let ld = GisetteGen { n: 400, d: 24, ..Default::default() }.generate(&ctx).unwrap();
+        let p = SparxParams { k: 8, num_chains: 8, depth: 5, ..Default::default() };
+        let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+        let retrained = SparxModel::fit(
+            &ctx,
+            &ld.dataset,
+            &SparxParams { seed: 0xD1FF, ..p.clone() },
+        )
+        .unwrap();
+        let other_schema =
+            SparxModel::fit(&ctx, &ld.dataset, &SparxParams { k: 12, ..p.clone() }).unwrap();
+
+        let mut s = StreamScorer::new(&model, 16).unwrap();
+        let u = UpdateTriple::Num { id: 1, feature: "f0".into(), delta: 1.0 };
+        let before = s.update(&u);
+        s.absorb(1).unwrap();
+
+        // same model → Full carry: nothing moves
+        let same = Arc::new(ServedEnsemble::new(&model).unwrap());
+        let with_delta = s.score_id(1).unwrap();
+        assert_eq!(s.swap_ensemble(same).unwrap(), SwapCarry::Full);
+        assert_eq!(s.score_id(1).unwrap().to_bits(), with_delta.to_bits());
+        assert_eq!(s.processed(), 1);
+
+        // schema match, different chains → sketches carry, delta resets
+        let re = Arc::new(ServedEnsemble::new(&retrained).unwrap());
+        assert_eq!(s.swap_ensemble(re.clone()).unwrap(), SwapCarry::SketchesOnly);
+        assert_eq!(s.cached_ids(), 1, "sketches must survive a schema-compatible swap");
+        let mut fresh = StreamScorer::from_ensemble(re, 16).unwrap();
+        let fresh_score = fresh.update(&u);
+        assert_eq!(
+            s.score_id(1).unwrap().to_bits(),
+            fresh_score.outlierness.to_bits(),
+            "after a sketches-only swap the score must equal a fresh scorer's \
+             (same sketch, no delta) under the new model"
+        );
+
+        // different schema → typed rejection, no state change
+        let alien = Arc::new(ServedEnsemble::new(&other_schema).unwrap());
+        let r = s.swap_ensemble(alien);
+        assert!(matches!(r, Err(SparxError::Unsupported(_))), "{:?}", r.err());
+        assert_eq!(s.cached_ids(), 1);
+        let _ = before;
+    }
+
+    #[test]
+    fn fingerprints_separate_model_schema_and_mode() {
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let ld = GisetteGen { n: 300, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+        let p = SparxParams { k: 8, num_chains: 6, depth: 4, ..Default::default() };
+        let a = ServedEnsemble::new(&SparxModel::fit(&ctx, &ld.dataset, &p).unwrap()).unwrap();
+        let b = ServedEnsemble::new(&SparxModel::fit(&ctx, &ld.dataset, &p).unwrap()).unwrap();
+        assert_eq!(a.model_fingerprint(), b.model_fingerprint(), "same fit must fingerprint equal");
+        let reseeded =
+            SparxModel::fit(&ctx, &ld.dataset, &SparxParams { seed: 99, ..p.clone() }).unwrap();
+        let c = ServedEnsemble::new(&reseeded).unwrap();
+        assert_ne!(a.model_fingerprint(), c.model_fingerprint());
+        assert_eq!(a.schema_fingerprint(), c.schema_fingerprint(), "same schema, new chains");
+        let wider = SparxModel::fit(&ctx, &ld.dataset, &SparxParams { k: 9, ..p }).unwrap();
+        let d = ServedEnsemble::new(&wider).unwrap();
+        assert_ne!(a.schema_fingerprint(), d.schema_fingerprint());
     }
 
     #[test]
@@ -335,5 +874,6 @@ mod tests {
         )
         .unwrap();
         assert!(StreamScorer::new(&model, 8).is_err());
+        assert!(ServedEnsemble::new(&model).is_err());
     }
 }

@@ -1,0 +1,393 @@
+//! Durable serving-state harness: checkpoint merge correctness, file
+//! round trips, kill→resume bit-identity, typed failure of damaged or
+//! mismatched checkpoint files, and hot ensemble swaps mid-stream.
+//!
+//! The two load-bearing properties:
+//!
+//! 1. **Merge property** — merging the S per-shard `AbsorbState`
+//!    snapshots equals the S=1 absorb state for the same stream (any S,
+//!    seeded per-ID-order-preserving shuffles, absorb-every-update, in
+//!    the no-eviction regime): same sketch set bit-for-bit, same summed
+//!    CMS delta, same counters. Every ID is pinned to one shard and its
+//!    sketch evolves identically there, so each absorb inserts the same
+//!    bins regardless of S — the per-bucket delta counts must sum
+//!    exactly.
+//! 2. **Resume property** — checkpoint → new process → `--resume`
+//!    continues the stream bit-for-bit: the concatenated score logs of
+//!    an interrupted run equal the uninterrupted run's log, order
+//!    included.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use sparx::api::{registry, SparxError};
+use sparx::cluster::ClusterConfig;
+use sparx::data::generators::GisetteGen;
+use sparx::data::{StreamGen, UpdateTriple};
+use sparx::sparx::{
+    AbsorbCheckpoint, AbsorbSnapshot, ServeOptions, ServedEnsemble, ShardedStreamScorer,
+    SparxModel, SparxParams, StreamScore, StreamScorer, SwapCarry,
+};
+use sparx::util::Rng;
+
+fn fitted(seed: u64) -> SparxModel {
+    let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+    let ld = GisetteGen { n: 350, d: 20, ..Default::default() }.generate(&ctx).unwrap();
+    SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 8, num_chains: 6, depth: 5, seed, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn synth_updates(ids: u64, count: usize, seed: u64) -> Vec<UpdateTriple> {
+    let names: Vec<String> = (0..20).map(|j| format!("f{j}")).collect();
+    let mut gen = StreamGen::new(ids, names, seed);
+    (0..count).map(|_| gen.next_update()).collect()
+}
+
+/// Seeded shuffle of the arrival order *across* IDs that preserves each
+/// ID's own update order (streams never reorder a single key).
+fn shuffle_interleaving(updates: &[UpdateTriple], seed: u64) -> Vec<UpdateTriple> {
+    let mut queues: Vec<VecDeque<UpdateTriple>> = Vec::new();
+    let mut slot_of: HashMap<u64, usize> = HashMap::new();
+    for u in updates {
+        let next = queues.len();
+        let slot = *slot_of.entry(u.id()).or_insert(next);
+        if slot == next {
+            queues.push(VecDeque::new());
+        }
+        queues[slot].push_back(u.clone());
+    }
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(updates.len());
+    while !queues.is_empty() {
+        let pick = rng.below(queues.len() as u64) as usize;
+        let u = queues[pick].pop_front().expect("queues are drained eagerly");
+        out.push(u);
+        if queues[pick].is_empty() {
+            queues.swap_remove(pick);
+        }
+    }
+    out
+}
+
+/// Sketch entries as (id, f32-bit) pairs sorted by id — sharding changes
+/// only the partitioning and recency order of entries, never their bits.
+fn entries_by_id(snap: &AbsorbSnapshot) -> Vec<(u64, Vec<u32>)> {
+    let mut v: Vec<(u64, Vec<u32>)> = snap
+        .entries
+        .iter()
+        .map(|(id, sk)| (*id, sk.iter().map(|x| x.to_bits()).collect()))
+        .collect();
+    v.sort_unstable_by_key(|(id, _)| *id);
+    v
+}
+
+fn temp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sparx-ckpt-test-{}-{tag}.sparx", std::process::id()))
+        .to_str()
+        .expect("utf-8 temp path")
+        .to_string()
+}
+
+/// Property 1: merged shard snapshots == the S=1 absorb state, for any
+/// shard count and arrival interleaving, absorbing every update.
+#[test]
+fn merging_shard_snapshots_equals_the_single_shard_absorb_state() {
+    let model = fitted(0x5AB4);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let updates = synth_updates(300, 5000, 0xAB50);
+
+    // S=1 reference: update then absorb, exactly like the absorb serving
+    // mode does per shard
+    let mut reference = StreamScorer::from_ensemble(ens.clone(), 4096).unwrap();
+    for u in &updates {
+        let s = reference.update(u);
+        reference.absorb(s.id).expect("just updated, must be cached");
+    }
+    assert_eq!(reference.evictions(), 0, "harness requires the no-eviction regime");
+    let want = reference.snapshot();
+
+    for (shards, shuffle_seed) in [(2usize, 21u64), (3, 22), (5, 23)] {
+        let replay = shuffle_interleaving(&updates, shuffle_seed);
+        assert_ne!(replay, updates, "the shuffle must actually change the interleaving");
+        let mut scorer = ShardedStreamScorer::from_ensemble(
+            ens.clone(),
+            shards,
+            4096,
+            ServeOptions { record: false, absorb: true },
+            None,
+        )
+        .unwrap();
+        for u in replay {
+            scorer.submit(u);
+        }
+        let ckpt = scorer.checkpoint();
+        let report = scorer.finish();
+        assert_eq!(report.processed(), updates.len() as u64, "S={shards}: lost updates");
+        assert_eq!(report.absorbed(), updates.len() as u64, "S={shards}: lost absorbs");
+        assert_eq!(ckpt.snapshots.len(), shards);
+        let merged = ckpt.merged();
+        assert_eq!(merged.processed, want.processed, "S={shards}: processed");
+        assert_eq!(merged.evicted, 0, "S={shards}: evictions in the no-eviction regime");
+        assert_eq!(merged.absorbed, want.absorbed, "S={shards}: absorbed");
+        assert_eq!(
+            entries_by_id(&merged),
+            entries_by_id(&want),
+            "S={shards}: merged sketch set must equal the single-shard cache bit-for-bit"
+        );
+        assert_eq!(
+            merged.delta, want.delta,
+            "S={shards}: summed per-shard deltas must equal the S=1 delta exactly"
+        );
+    }
+}
+
+/// Property 2: checkpoint at an arbitrary stream position, tear the
+/// scorer down (the "kill"), restore from the **file** into a fresh
+/// scorer, continue — the concatenated score logs are bit-identical to
+/// an uninterrupted run. Exercised with absorb on and real evictions.
+#[test]
+fn file_checkpoint_resume_continues_bit_identically() {
+    let model = fitted(0x7E57);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let updates = synth_updates(500, 4000, 0xFEED5);
+    let shards = 4usize;
+    let cache = 64usize; // small: real LRU churn crosses the checkpoint
+    let opts = ServeOptions { record: true, absorb: true };
+
+    // uninterrupted reference run
+    let mut full = ShardedStreamScorer::from_ensemble(ens.clone(), shards, cache, opts, None)
+        .unwrap();
+    for u in &updates {
+        full.submit(u.clone());
+    }
+    let full_report = full.finish();
+    assert!(full_report.evictions() > 0, "harness requires the eviction regime");
+    let want: Vec<StreamScore> = full_report.merged_scores();
+
+    // interrupted run: first half, checkpoint to a file, drop everything
+    let cut = updates.len() / 2;
+    let mut first = ShardedStreamScorer::from_ensemble(ens.clone(), shards, cache, opts, None)
+        .unwrap();
+    for u in &updates[..cut] {
+        first.submit(u.clone());
+    }
+    let ckpt = first.checkpoint();
+    let path = temp_path("resume");
+    ckpt.save(&path, vec![("model".into(), "in-memory".into())]).unwrap();
+    let part1 = first.finish().merged_scores();
+
+    // "new process": reload the checkpoint file and continue the stream
+    let loaded = AbsorbCheckpoint::load(&path).unwrap();
+    assert_eq!(loaded, ckpt, "file round trip must be exact");
+    let mut second =
+        ShardedStreamScorer::from_ensemble(ens, shards, cache, opts, Some(&loaded)).unwrap();
+    assert_eq!(second.submitted(), cut as u64, "resume continues the submit sequence");
+    for u in &updates[cut..] {
+        second.submit(u.clone());
+    }
+    let second_report = second.finish();
+    assert_eq!(second_report.processed(), updates.len() as u64, "lifetime total");
+    let part2 = second_report.merged_scores();
+    std::fs::remove_file(&path).unwrap();
+
+    assert_eq!(part1.len() + part2.len(), want.len());
+    let resumed: Vec<StreamScore> = part1.into_iter().chain(part2).collect();
+    for (i, (got, wanted)) in resumed.iter().zip(&want).enumerate() {
+        assert_eq!(got, wanted, "resumed stream diverged at submit #{i}");
+    }
+}
+
+/// Damaged or mismatched checkpoint files fail typed — never panic,
+/// never restore garbage.
+#[test]
+fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
+    let model = fitted(1);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let mut scorer = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        2,
+        32,
+        ServeOptions { record: false, absorb: true },
+        None,
+    )
+    .unwrap();
+    for u in synth_updates(50, 400, 9) {
+        scorer.submit(u);
+    }
+    let ckpt = scorer.checkpoint();
+    drop(scorer.finish());
+    let bytes = ckpt.to_artifact().to_bytes();
+
+    // truncation at every eighth prefix — always typed, never a panic
+    for cut in (0..bytes.len()).step_by(8) {
+        let r = sparx::api::ModelArtifact::from_bytes(&bytes[..cut]);
+        assert!(
+            matches!(r, Err(SparxError::MissingArtifact(_))),
+            "prefix of {cut} bytes must fail typed, got {:?}",
+            r.err()
+        );
+    }
+    // bit flips are caught by the file checksum
+    for pos in [7usize, bytes.len() / 3, bytes.len() - 2] {
+        let mut c = bytes.clone();
+        c[pos] ^= 0x20;
+        assert!(matches!(
+            sparx::api::ModelArtifact::from_bytes(&c),
+            Err(SparxError::MissingArtifact(_))
+        ));
+    }
+    // a checkpoint is not a model: the registry points at --resume
+    let r = registry::load_bytes(&bytes);
+    match r {
+        Err(SparxError::InvalidParams(msg)) => {
+            assert!(msg.contains("--resume"), "must point at the right flag: {msg}")
+        }
+        other => panic!("expected InvalidParams, got {other:?}"),
+    }
+    // a model is not a checkpoint
+    let model_bytes = {
+        use sparx::api::{Detector as _, DetectorSpec, FittedModel as _};
+        let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+        let ld = GisetteGen { n: 200, d: 8, ..Default::default() }.generate(&ctx).unwrap();
+        let spec = DetectorSpec {
+            k: Some(4),
+            components: Some(3),
+            depth: Some(3),
+            ..Default::default()
+        };
+        let m = registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
+        m.to_artifact().unwrap().to_bytes()
+    };
+    let art = sparx::api::ModelArtifact::from_bytes(&model_bytes).unwrap();
+    assert!(matches!(
+        AbsorbCheckpoint::from_artifact(&art),
+        Err(SparxError::InvalidParams(_))
+    ));
+
+    // wrong model: resume must reject a fingerprint mismatch
+    let other = Arc::new(ServedEnsemble::new(&fitted(2)).unwrap());
+    let r = ShardedStreamScorer::from_ensemble(
+        other,
+        2,
+        32,
+        ServeOptions::default(),
+        Some(&ckpt),
+    );
+    assert!(matches!(r.err(), Some(SparxError::InvalidParams(_))), "wrong model must fail");
+    // wrong layout: shard count and cache capacity must match the capture
+    for (shards, cache) in [(3usize, 32usize), (2, 16)] {
+        let r = ShardedStreamScorer::from_ensemble(
+            ens.clone(),
+            shards,
+            cache,
+            ServeOptions::default(),
+            Some(&ckpt),
+        );
+        assert!(
+            matches!(r.err(), Some(SparxError::InvalidParams(_))),
+            "S={shards} cache={cache} must be rejected against a S=2/cache=32 checkpoint"
+        );
+    }
+    // wrong absorb mode: the continued stream would silently diverge
+    let r = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        2,
+        32,
+        ServeOptions { record: false, absorb: false },
+        Some(&ckpt),
+    );
+    assert!(
+        matches!(r.err(), Some(SparxError::InvalidParams(_))),
+        "absorb-mode mismatch must be rejected against an absorb-on checkpoint"
+    );
+    // ...and the matching layout + mode restores fine
+    let ok = ShardedStreamScorer::from_ensemble(
+        ens,
+        2,
+        32,
+        ServeOptions { record: false, absorb: true },
+        Some(&ckpt),
+    )
+    .unwrap();
+    assert_eq!(ok.submitted(), 400);
+    drop(ok.finish());
+}
+
+/// Hot reload mid-stream: swaps land between batches, drop no updates,
+/// and follow the carry rules (Full / SketchesOnly / typed rejection).
+#[test]
+fn hot_swap_mid_stream_drops_no_updates_and_follows_carry_rules() {
+    let model = fitted(0xA);
+    let retrained = fitted(0xB); // same schema, different chains
+    let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+    let ld = GisetteGen { n: 350, d: 20, ..Default::default() }.generate(&ctx).unwrap();
+    let wider = SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 12, num_chains: 6, depth: 5, ..Default::default() },
+    )
+    .unwrap();
+
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let mut scorer = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        3,
+        256,
+        ServeOptions { record: true, absorb: true },
+        None,
+    )
+    .unwrap();
+    let updates = synth_updates(80, 900, 0x5107);
+    for u in &updates[..300] {
+        scorer.submit(u.clone());
+    }
+    // same model re-loaded → everything carries
+    let same = Arc::new(ServedEnsemble::new(&model).unwrap());
+    assert_eq!(scorer.swap_ensemble(same).unwrap(), SwapCarry::Full);
+    for u in &updates[300..600] {
+        scorer.submit(u.clone());
+    }
+    // retrained, same schema → sketches carry, delta resets
+    let re = Arc::new(ServedEnsemble::new(&retrained).unwrap());
+    assert_eq!(scorer.swap_ensemble(re).unwrap(), SwapCarry::SketchesOnly);
+    // different schema → typed rejection, stream keeps flowing
+    let alien = Arc::new(ServedEnsemble::new(&wider).unwrap());
+    let r = scorer.swap_ensemble(alien);
+    assert!(matches!(r, Err(SparxError::Unsupported(_))), "{:?}", r.err());
+    for u in &updates[600..] {
+        scorer.submit(u.clone());
+    }
+    let report = scorer.finish();
+    assert_eq!(report.processed(), 900, "swaps must not drop updates");
+    let merged = report.merged_scores();
+    assert_eq!(merged.len(), 900, "recording must span every swap");
+    // determinism of the swap point: replaying the same submits + swaps
+    // yields the bit-identical merged log
+    let mut replay = ShardedStreamScorer::from_ensemble(
+        Arc::new(ServedEnsemble::new(&model).unwrap()),
+        3,
+        256,
+        ServeOptions { record: true, absorb: true },
+        None,
+    )
+    .unwrap();
+    for u in &updates[..300] {
+        replay.submit(u.clone());
+    }
+    replay.swap_ensemble(Arc::new(ServedEnsemble::new(&model).unwrap())).unwrap();
+    for u in &updates[300..600] {
+        replay.submit(u.clone());
+    }
+    replay.swap_ensemble(Arc::new(ServedEnsemble::new(&retrained).unwrap())).unwrap();
+    for u in &updates[600..] {
+        replay.submit(u.clone());
+    }
+    let merged2 = replay.finish().merged_scores();
+    assert_eq!(merged, merged2, "swap points must be deterministic in the sub-streams");
+    let _ = ens;
+}

@@ -149,6 +149,198 @@ fn serve_shards_zero_is_a_usage_error() {
     assert!(err.contains("--shards"), "{err}");
 }
 
+// ------------------------------- checkpoint / resume / reload lifecycle
+
+/// Unique temp path for artifacts produced by these tests.
+fn temp_file(tag: &str) -> String {
+    static N: std::sync::atomic::AtomicU32 = std::sync::atomic::AtomicU32::new(0);
+    let n = N.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir()
+        .join(format!("sparx-cli-{tag}-{}-{n}", std::process::id()))
+        .to_str()
+        .expect("utf-8 temp path")
+        .to_string()
+}
+
+/// A deterministic update file in the serve line grammar; returns
+/// (path, lines).
+fn synth_updates_file(count: usize, seed: u64) -> (String, Vec<String>) {
+    use sparx::data::StreamGen;
+    let names: Vec<String> = (0..32).map(|j| format!("f{j}")).collect();
+    let mut gen = StreamGen::new(200, names, seed);
+    let lines: Vec<String> = (0..count).map(|_| gen.next_update().to_line()).collect();
+    let path = write_updates(&(lines.join("\n") + "\n"));
+    (path, lines)
+}
+
+/// The acceptance criterion, end to end through the real binary: fit →
+/// serve with periodic checkpoints → process exit ("kill") → `--resume`
+/// → serve the rest, and the concatenated score logs diff clean against
+/// an uninterrupted run — bit for bit, absorb mode on, order included.
+#[test]
+fn serve_checkpoint_kill_resume_reproduces_the_uninterrupted_score_log() {
+    let (full_file, lines) = synth_updates_file(600, 0xE2E);
+    let cut = 300;
+    let first_file = write_updates(&(lines[..cut].join("\n") + "\n"));
+    let rest_file = write_updates(&(lines[cut..].join("\n") + "\n"));
+    let (full_log, p1_log, p2_log) =
+        (temp_file("full.log"), temp_file("p1.log"), temp_file("p2.log"));
+    let ckpt = temp_file("ck.sparx");
+
+    // uninterrupted reference run
+    let (code, _out, err) = run_sparx(
+        &[
+            "serve", "--model", model_path(), "--updates", &full_file, "--shards", "3",
+            "--cache", "64", "--absorb", "--score-log", &full_log,
+        ],
+        None,
+    );
+    assert_eq!(code, 0, "full run failed: {err}");
+    // first half, checkpointing every 100 updates and at stream end,
+    // then the process exits — that's the kill
+    let (code, out, err) = run_sparx(
+        &[
+            "serve", "--model", model_path(), "--updates", &first_file, "--shards", "3",
+            "--cache", "64", "--absorb", "--checkpoint-out", &ckpt, "--checkpoint-every",
+            "100", "--score-log", &p1_log,
+        ],
+        None,
+    );
+    assert_eq!(code, 0, "first half failed: {err}");
+    assert!(out.contains("checkpoint written"), "{out}");
+    // resume adopts --shards/--cache from the checkpoint
+    let (code, out, err) = run_sparx(
+        &[
+            "serve", "--model", model_path(), "--updates", &rest_file, "--resume", &ckpt,
+            "--absorb", "--score-log", &p2_log,
+        ],
+        None,
+    );
+    assert_eq!(code, 0, "resumed half failed: {err}");
+    assert!(out.contains("resumed from checkpoint"), "{out}");
+    assert!(out.contains("600 total"), "lifetime counter must span the restart: {out}");
+
+    let full = std::fs::read_to_string(&full_log).unwrap();
+    let p1 = std::fs::read_to_string(&p1_log).unwrap();
+    let p2 = std::fs::read_to_string(&p2_log).unwrap();
+    assert_eq!(full.lines().count(), 600);
+    assert_eq!(
+        format!("{p1}{p2}"),
+        full,
+        "resumed score log must diff clean against the uninterrupted run"
+    );
+    for f in [full_file, first_file, rest_file, full_log, p1_log, p2_log, ckpt] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+#[test]
+fn serve_resume_with_mismatched_layout_or_model_is_rejected_typed() {
+    let (file, _) = synth_updates_file(120, 7);
+    let ckpt = temp_file("mismatch.sparx");
+    let (code, _out, err) = run_sparx(
+        &[
+            "serve", "--model", model_path(), "--updates", &file, "--shards", "2", "--cache",
+            "32", "--checkpoint-out", &ckpt,
+        ],
+        None,
+    );
+    assert_eq!(code, 0, "checkpoint run failed: {err}");
+    // wrong shard count
+    let (code, _out, err) = run_sparx(
+        &["serve", "--model", model_path(), "--count", "10", "--resume", &ckpt, "--shards", "5"],
+        None,
+    );
+    assert_eq!(code, 2, "shard mismatch must be a usage error; stderr: {err}");
+    assert!(err.contains("shard"), "{err}");
+    // wrong cache capacity
+    let (code, _out, err) = run_sparx(
+        &["serve", "--model", model_path(), "--count", "10", "--resume", &ckpt, "--cache", "99"],
+        None,
+    );
+    assert_eq!(code, 2, "cache mismatch must be a usage error; stderr: {err}");
+    // a checkpoint is not a model
+    let (code, _out, err) =
+        run_sparx(&["serve", "--model", &ckpt, "--count", "10"], None);
+    assert_eq!(code, 2, "stderr: {err}");
+    assert!(err.contains("--resume"), "must point at the right flag: {err}");
+    // a model is not a checkpoint
+    let (code, _out, err) = run_sparx(
+        &["serve", "--model", model_path(), "--count", "10", "--resume", model_path()],
+        None,
+    );
+    assert_eq!(code, 2, "stderr: {err}");
+    let _ = std::fs::remove_file(&file);
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn serve_watch_and_checkpoint_flags_run_on_the_synthetic_stream() {
+    let ckpt = temp_file("watch.sparx");
+    let (code, out, err) = run_sparx(
+        &[
+            "serve", "--model", model_path(), "--count", "400", "--shards", "2", "--cache",
+            "64", "--watch", "--absorb", "--checkpoint-out", &ckpt,
+        ],
+        None,
+    );
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("resident ensemble"), "{out}");
+    assert!(out.contains("400 absorbed"), "{out}");
+    assert!(out.contains("checkpoint written"), "{out}");
+    // --checkpoint-every without --checkpoint-out is a usage error
+    let (code, _out, err) = run_sparx(
+        &["serve", "--model", model_path(), "--count", "10", "--checkpoint-every", "5"],
+        None,
+    );
+    assert_eq!(code, 2);
+    assert!(err.contains("checkpoint-out"), "{err}");
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+#[test]
+fn serve_score_log_to_stdout_is_machine_clean() {
+    let args =
+        ["serve", "--model", model_path(), "--count", "20", "--shards", "2", "--score-log", "-"];
+    let (code, out, err) = run_sparx(&args, None);
+    assert_eq!(code, 0, "stderr: {err}");
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 20, "stdout must carry only the score log: {out:?}");
+    for l in &lines {
+        let mut it = l.split(' ');
+        let id = it.next().unwrap_or("");
+        let bits = it.next().unwrap_or("");
+        assert!(it.next().is_none(), "line has extra fields: {l:?}");
+        assert!(!id.is_empty() && id.chars().all(|c| c.is_ascii_digit()), "{l:?}");
+        assert_eq!(bits.len(), 16, "{l:?}");
+        assert!(bits.chars().all(|c| c.is_ascii_hexdigit()), "{l:?}");
+    }
+    assert!(err.contains("serving sparx model"), "human output must land on stderr: {err}");
+}
+
+#[test]
+fn generate_stream_emits_lines_serve_accepts() {
+    let out_file = temp_file("updates.txt");
+    let (code, out, err) =
+        run_sparx(&["generate", "--stream", "80", "--seed", "5", "--out", &out_file], None);
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("80 update triples"), "{out}");
+    let content = std::fs::read_to_string(&out_file).unwrap();
+    assert_eq!(content.lines().count(), 80);
+    for (i, line) in content.lines().enumerate() {
+        let parsed = sparx::data::parse_update_line(i + 1, line).unwrap();
+        assert!(parsed.is_some(), "line {i} must be a real update: {line:?}");
+    }
+    // and the real binary serves the file
+    let (code, out, err) = run_sparx(
+        &["serve", "--model", model_path(), "--updates", &out_file, "--shards", "2"],
+        None,
+    );
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("processed 80 δ-updates"), "{out}");
+    let _ = std::fs::remove_file(&out_file);
+}
+
 // ------------------------------------------------ backend override
 
 /// `sparx score` on the shared model with a small generated batch and

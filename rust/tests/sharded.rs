@@ -104,7 +104,7 @@ fn sharded_per_id_scores_bit_identical_to_single_threaded() {
         let report = scorer.finish();
         assert_eq!(report.processed(), updates.len() as u64, "S={shards}: lost updates");
         assert_eq!(report.evictions(), 0, "S={shards}: no-eviction regime violated");
-        let got = per_id_bits(report.scores.into_iter().flatten());
+        let got = per_id_bits(report.scores.into_iter().flatten().map(|(_, s)| s));
         assert_eq!(got.len(), want.len(), "S={shards}: distinct-ID count differs");
         for (id, seq) in &want {
             assert_eq!(
@@ -141,7 +141,8 @@ fn each_shard_matches_a_single_threaded_scorer_fed_its_substream() {
         for u in updates.iter().filter(|u| shard_of(u.id(), shards) == s) {
             ref_log.push(reference.update(u));
         }
-        assert_eq!(report.scores[s], ref_log, "shard {s}: score log diverged");
+        let shard_log: Vec<_> = report.scores[s].iter().map(|(_, sc)| sc.clone()).collect();
+        assert_eq!(shard_log, ref_log, "shard {s}: score log diverged");
         assert_eq!(report.shards[s].processed, reference.processed(), "shard {s}: processed");
         assert_eq!(report.shards[s].evictions, reference.evictions(), "shard {s}: evictions");
         assert_eq!(report.shards[s].cached_ids, reference.cached_ids(), "shard {s}: cache");
@@ -164,10 +165,36 @@ fn one_shard_matches_the_unsharded_scorer_exactly() {
         sharded.submit(u);
     }
     let report = sharded.finish();
-    assert_eq!(report.scores[0], ref_log);
+    let log: Vec<_> = report.scores[0].iter().map(|(_, sc)| sc.clone()).collect();
+    assert_eq!(log, ref_log);
     assert_eq!(report.processed(), reference.processed());
     assert_eq!(report.evictions(), reference.evictions());
     assert_eq!(report.cached_ids(), reference.cached_ids());
+}
+
+/// The merge-order bugfix: recorded per-shard logs interleave back into
+/// **global submit order** by sequence number, so the merged log of any
+/// shard count is bit-identical to the single-threaded scorer's full
+/// log — order included — in the no-eviction regime. (The old merge
+/// concatenated per-shard logs and lost the submit order.)
+#[test]
+fn merged_scores_restore_global_submit_order_at_any_shard_count() {
+    let model = fitted(10, 8, 5);
+    let updates = synth_updates(250, 5000, 0x0DE4);
+    let mut reference = StreamScorer::new(&model, 4096).unwrap();
+    let ref_log: Vec<_> = updates.iter().map(|u| reference.update(u)).collect();
+    assert_eq!(reference.evictions(), 0, "harness requires the no-eviction regime");
+    for shards in [1usize, 3, 5] {
+        let mut scorer = ShardedStreamScorer::recording(&model, shards, 4096).unwrap();
+        for u in &updates {
+            scorer.submit(u.clone());
+        }
+        let merged = scorer.finish().merged_scores();
+        assert_eq!(merged.len(), ref_log.len(), "S={shards}: merged log length");
+        for (i, (got, want)) in merged.iter().zip(&ref_log).enumerate() {
+            assert_eq!(got, want, "S={shards}: merged log diverged at submit #{i}");
+        }
+    }
 }
 
 /// Stress: 4 shards × 50k updates against a tiny per-shard cache,
