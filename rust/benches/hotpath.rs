@@ -2,157 +2,297 @@
 //! in the offline dependency set, so this uses a small in-file timer with
 //! warmup + repetitions + ns/op reporting).
 //!
-//! Covers the §Perf targets of EXPERIMENTS.md:
-//!   * native chain binning (L3 request path, per-point cost)
-//!   * multi-chain tiling (the fused executors' binning entry point)
-//!   * CMS insert / query
-//!   * hash projection (dense memoised R and sparse on-the-fly)
-//!   * PJRT tile execution (chain_bins + fused project_bins artifacts)
-//!   * distributed fit+score, fused vs per-chain execution plans
-//!   * streaming δ-update + rescore
-//!   * sharded serve throughput at S = 1, 2, 4, 8 (one fixed update
-//!     sequence replayed at every shard count; `-- serve` runs only
-//!     this section — CI publishes its lines as the step summary)
+//! Sections — run one with `cargo bench --bench hotpath -- <section>`
+//! (any argument that is not a flag or subcommand selects a section; no
+//! section argument runs everything):
+//!   * `bins`     — chain binning kernels: the reference per-point loop
+//!                  vs the floor-cache scalar kernel vs the runtime
+//!                  dispatched (AVX2 where available) path, single- and
+//!                  multi-chain
+//!   * `cms`      — CMS insert/query, pointwise and batched
+//!                  (`insert_many` / `query_many`)
+//!   * `project`  — hash projection (dense memoised R, sparse rows, the
+//!                  sign hash itself)
+//!   * `pjrt`     — PJRT tile execution (chain_bins + fused project_bins
+//!                  artifacts; skipped when not built)
+//!   * `dist`     — distributed fit+score, fused vs per-chain plans
+//!   * `artifact` — model artifact serialize / load + framed sizes
+//!   * `stream`   — streaming δ-update + rescore, quantized-CMS resident
+//!                  sizes
+//!   * `serve`    — sharded serve throughput at S = 1, 2, 4, 8 (CI
+//!                  publishes its lines as the step summary)
+//!
+//! Modes:
+//!   * `--json` additionally writes `BENCH_hotpath.json` (per-kernel
+//!     ns/op ladders, sizes, derived speedups) and `BENCH_serve.json`
+//!     (throughput ladder) to the working directory. `BENCH_HOST` labels
+//!     the host in both files; comparisons only gate between matching
+//!     labels.
+//!   * `compare <baseline.json> <current.json> [tolerance]` prints a
+//!     markdown delta table and exits 1 if any benchmark regressed
+//!     beyond the tolerance band (default 0.5 = +50%; microbench noise
+//!     on shared runners is real). Files from different hosts are
+//!     reported but never gate.
+//!   * `table <file.json>` renders a results file as a markdown table
+//!     (what CI puts in the step summary).
 
 use sparx::data::Row;
-use sparx::hash::SignHasher;
-use sparx::sparx::{ChainParams, CountMinSketch, NativeBinner, Projector};
+use sparx::hash::{bin_hash, BinHash, SignHasher};
 use sparx::sparx::chain::Binner;
-use sparx::util::Rng;
+use sparx::sparx::{
+    kernel_path, tile_bins_reference, tile_bins_scalar, ChainParams, CountMinSketch, NativeBinner,
+    Projector,
+};
+use sparx::util::{Json, Rng};
 
-fn bench<F: FnMut() -> u64>(name: &str, items_per_iter: u64, mut f: F) {
-    // warmup
-    let mut sink = 0u64;
-    for _ in 0..3 {
-        sink = sink.wrapping_add(f());
+const SECTIONS: &[&str] =
+    &["bins", "cms", "project", "pjrt", "dist", "artifact", "stream", "serve"];
+
+/// One timed result, as printed and as written to `BENCH_hotpath.json`.
+struct Entry {
+    section: String,
+    name: String,
+    ns_per_item: f64,
+    mitems_per_s: f64,
+}
+
+/// Collects timings + measured sizes across sections; also owns the
+/// section filter so skipped sections pay no setup cost.
+struct Recorder {
+    filter: Option<String>,
+    entries: Vec<Entry>,
+    sizes: Vec<(String, u64)>,
+}
+
+impl Recorder {
+    fn runs(&self, section: &str) -> bool {
+        match &self.filter {
+            None => true,
+            Some(f) => f == section,
+        }
     }
-    let mut iters = 0u64;
-    let t0 = std::time::Instant::now();
-    while t0.elapsed().as_secs_f64() < 1.0 {
-        sink = sink.wrapping_add(f());
-        iters += 1;
+
+    fn bench<F: FnMut() -> u64>(&mut self, section: &str, name: &str, items: u64, mut f: F) {
+        if !self.runs(section) {
+            return;
+        }
+        // warmup
+        let mut sink = 0u64;
+        for _ in 0..3 {
+            sink = sink.wrapping_add(f());
+        }
+        let mut iters = 0u64;
+        let t0 = std::time::Instant::now();
+        while t0.elapsed().as_secs_f64() < 1.0 {
+            sink = sink.wrapping_add(f());
+            iters += 1;
+        }
+        let total = t0.elapsed().as_secs_f64();
+        let per_item = total / (iters as f64 * items as f64);
+        println!(
+            "{name:<52} {:>10.1} ns/item  ({:>8.2} Mitems/s)  [sink {sink}]",
+            per_item * 1e9,
+            1e-6 / per_item
+        );
+        self.entries.push(Entry {
+            section: section.into(),
+            name: name.into(),
+            ns_per_item: per_item * 1e9,
+            mitems_per_s: 1e-6 / per_item,
+        });
     }
-    let total = t0.elapsed().as_secs_f64();
-    let per_item = total / (iters as f64 * items_per_iter as f64);
-    println!(
-        "{name:<44} {:>10.1} ns/item  ({:>8.2} Mitems/s)  [sink {sink}]",
-        per_item * 1e9,
-        1e-6 / per_item
-    );
+
+    fn size(&mut self, name: &str, bytes: u64) {
+        println!("size {name:<47} {bytes:>12} B");
+        self.sizes.push((name.into(), bytes));
+    }
+
+    fn ns_of(&self, name: &str) -> Option<f64> {
+        self.entries.iter().find(|e| e.name == name).map(|e| e.ns_per_item)
+    }
+}
+
+/// Serve-throughput results, as printed and as `BENCH_serve.json`.
+struct ServeData {
+    /// (shards, updates/s, speedup vs S=1)
+    ladder: Vec<(usize, f64, f64)>,
+    resident_ensemble_bytes: u64,
+}
+
+fn host_label() -> String {
+    std::env::var("BENCH_HOST").unwrap_or_else(|_| "unknown".into())
 }
 
 fn main() {
-    // `cargo bench --bench hotpath -- serve` runs only the serve-throughput
-    // section (what the CI step summary publishes). Match anywhere in
-    // argv: cargo inserts its own `--bench` flag ahead of passthrough
-    // args even for harness = false targets.
-    if std::env::args().any(|a| a == "serve") {
-        serve_throughput();
-        println!("done");
-        return;
+    // cargo appends `--bench` to harness = false targets; drop it before
+    // dispatching so the first real argument selects the subcommand
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    match args.first().map(String::as_str) {
+        Some("compare") => std::process::exit(compare(&args[1..])),
+        Some("table") => std::process::exit(table(&args[1..])),
+        _ => {}
     }
+    let json_mode = args.iter().any(|a| a == "--json");
+    let filter = args.iter().find(|a| !a.starts_with("--")).cloned();
+    if let Some(f) = &filter {
+        if !SECTIONS.contains(&f.as_str()) {
+            eprintln!("unknown section {f:?}; known sections: {}", SECTIONS.join(", "));
+            std::process::exit(2);
+        }
+    }
+    let mut rec = Recorder { filter, entries: Vec::new(), sizes: Vec::new() };
+    println!("== sparx hot-path microbenches (binning kernel: {}) ==", kernel_path());
+
+    run_sections(&mut rec);
+    let serve = serve_throughput(&rec);
+
+    if json_mode {
+        write_hotpath_json(&rec);
+        if let Some(s) = &serve {
+            write_serve_json(s);
+        }
+    }
+    println!("done");
+}
+
+fn run_sections(rec: &mut Recorder) {
     let mut rng = Rng::new(7);
-    println!("== sparx hot-path microbenches ==");
 
-    // --- chain binning (K=50, L=20, tile of 256) — the scoring hot loop
-    let k = 50;
-    let l = 20;
-    let n = 256;
-    let delta: Vec<f32> = (0..k).map(|_| rng.range_f64(0.5, 2.0) as f32).collect();
-    let chain = ChainParams::sample(&delta, l, &mut rng);
-    let s: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
-    bench("native tile_bins K=50 L=20 (per point)", n as u64, || {
-        NativeBinner.tile_bins(&chain, &s, n)[0] as u64
-    });
+    // --- bins: K=50, L=20, tile of 256 — the scoring hot loop. The
+    //     reference arm is the oracle loop the kernels are verified
+    //     against; reference → scalar → dispatched is the speedup ladder
+    if rec.runs("bins") {
+        let k = 50;
+        let l = 20;
+        let n = 256;
+        let delta: Vec<f32> = (0..k).map(|_| rng.range_f64(0.5, 2.0) as f32).collect();
+        let chain = ChainParams::sample(&delta, l, &mut rng);
+        let s: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        rec.bench("bins", "tile_bins reference K=50 L=20 (per point)", n as u64, || {
+            tile_bins_reference(&chain, &s, n)[0] as u64
+        });
+        rec.bench("bins", "tile_bins scalar K=50 L=20 (per point)", n as u64, || {
+            tile_bins_scalar(&chain, &s, n)[0] as u64
+        });
+        rec.bench("bins", "tile_bins dispatched K=50 L=20 (per point)", n as u64, || {
+            NativeBinner.tile_bins(&chain, &s, n).unwrap()[0] as u64
+        });
 
-    // --- multi-chain tiling: M=10 chains over one resident tile
-    let chains: Vec<ChainParams> =
-        (0..10).map(|_| ChainParams::sample(&delta, l, &mut rng)).collect();
-    let chain_refs: Vec<&ChainParams> = chains.iter().collect();
-    bench("native tile_bins_multi M=10 (per point·chain)", (n * 10) as u64, || {
-        NativeBinner.tile_bins_multi(&chain_refs, &s, n)[0] as u64
-    });
-
-    // --- CMS insert + query
-    let mut cms = CountMinSketch::new(10, 100);
-    let bins: Vec<Vec<i32>> = (0..64).map(|i| vec![i as i32; k]).collect();
-    bench("CMS insert r=10 w=100 (per insert)", bins.len() as u64, || {
-        for b in &bins {
-            cms.insert(b);
-        }
-        cms.total()
-    });
-    bench("CMS query r=10 w=100 (per query)", bins.len() as u64, || {
-        bins.iter().map(|b| cms.query(b) as u64).sum()
-    });
-
-    // --- dense projection with memoised R (Gisette shape)
-    let d = 512;
-    let names: Vec<String> = (0..d).map(|j| format!("f{j}")).collect();
-    let proj = Projector::new(k, 1.0 / 3.0).with_dense_schema(&names);
-    let rows: Vec<Row> = (0..32)
-        .map(|i| Row::dense(i, (0..d).map(|_| rng.normal() as f32).collect()))
-        .collect();
-    bench("dense project d=512 K=50 (per row)", rows.len() as u64, || {
-        rows.iter().map(|r| proj.project(r, None).s[0].abs() as u64).sum()
-    });
-
-    // --- sparse projection, memoised hash rows (SpamURL shape)
-    let sparse_rows: Vec<Row> = (0..32)
-        .map(|i| {
-            let mut idx: Vec<u32> =
-                (0..120).map(|_| rng.below(100_000) as u32).collect();
-            idx.sort();
-            idx.dedup();
-            let val = vec![1.0f32; idx.len()];
-            Row::sparse(i, idx, val)
-        })
-        .collect();
-    let sproj = Projector::new(100, 1.0 / 3.0);
-    bench("sparse project nnz≈120 K=100 (per row, memo)", sparse_rows.len() as u64, || {
-        let mut memo = std::collections::HashMap::new();
-        sparse_rows.iter().map(|r| sproj.project(r, Some(&mut memo)).s[0].abs() as u64).sum()
-    });
-
-    // --- sign hash itself
-    let h = SignHasher::new(3, 1.0 / 3.0);
-    bench("sign hash h_k(name) (per hash)", 64, || {
-        (0..64).map(|i| h.feature(&format!("f{i}")) as i64 as u64).sum()
-    });
-
-    // --- PJRT artifacts, if built
-    match sparx::runtime::PjrtEngine::start_default() {
-        Ok(engine) => {
-            let gk = 50;
-            let gl = 20;
-            let gd = 512;
-            let gb = 256;
-            let delta: Vec<f32> = (0..gk).map(|_| rng.range_f64(0.5, 2.0) as f32).collect();
-            let gchain = ChainParams::sample(&delta, gl, &mut rng);
-            let gs: Vec<f32> = (0..gb * gk).map(|_| rng.normal() as f32).collect();
-            bench("PJRT chain_bins gisette B=256 (per point)", gb as u64, || {
-                engine.chain_bins("gisette", &gs, gb, &gchain).unwrap()[0] as u64
-            });
-            let gx: Vec<f32> = (0..gb * gd).map(|_| rng.normal() as f32).collect();
-            let gr: Vec<f32> = (0..gd * gk)
-                .map(|_| [(-1.0f32), 0.0, 1.0][rng.below(3) as usize])
-                .collect();
-            let mut xr = gx.clone();
-            xr.extend_from_slice(&gr);
-            bench("PJRT project gisette B=256 d=512 (per point)", gb as u64, || {
-                engine.project("gisette", &xr, gb).unwrap()[0].abs() as u64
-            });
-            bench("PJRT fused project_bins gisette (per point)", gb as u64, || {
-                engine.project_bins("gisette", &xr, gb, &gchain).unwrap()[0] as u64
-            });
-        }
-        Err(e) => println!("(PJRT benches skipped: {e})"),
+        // multi-chain tiling: M=10 chains over one resident tile
+        let chains: Vec<ChainParams> =
+            (0..10).map(|_| ChainParams::sample(&delta, l, &mut rng)).collect();
+        let refs: Vec<&ChainParams> = chains.iter().collect();
+        let items = (n * 10) as u64;
+        rec.bench("bins", "tile_bins_multi reference M=10 (per point·chain)", items, || {
+            let mut acc = 0u64;
+            for c in &chains {
+                acc = acc.wrapping_add(tile_bins_reference(c, &s, n)[0] as u64);
+            }
+            acc
+        });
+        rec.bench("bins", "tile_bins_multi dispatched M=10 (per point·chain)", items, || {
+            NativeBinner.tile_bins_multi(&refs, &s, n).unwrap()[0] as u64
+        });
     }
 
-    // --- distributed fit+score on a fixed Gisette workload: the fused
+    // --- cms: pointwise and batched entry points
+    if rec.runs("cms") {
+        let k = 50;
+        let mut cms = CountMinSketch::new(10, 100);
+        let bins: Vec<Vec<i32>> = (0..64).map(|i| vec![i as i32; k]).collect();
+        rec.bench("cms", "CMS insert r=10 w=100 (per insert)", bins.len() as u64, || {
+            for b in &bins {
+                cms.insert(b);
+            }
+            cms.total()
+        });
+        rec.bench("cms", "CMS query r=10 w=100 (per query)", bins.len() as u64, || {
+            bins.iter().map(|b| cms.query(b) as u64).sum()
+        });
+        let hashes: Vec<BinHash> = bins.iter().map(|b| bin_hash(b)).collect();
+        rec.bench("cms", "CMS insert_many r=10 w=100 (per insert)", hashes.len() as u64, || {
+            cms.insert_many(&hashes);
+            cms.total()
+        });
+        let mut out = vec![0u32; hashes.len()];
+        rec.bench("cms", "CMS query_many r=10 w=100 (per query)", hashes.len() as u64, || {
+            cms.query_many(&hashes, &mut out);
+            out.iter().map(|&x| x as u64).sum()
+        });
+    }
+
+    // --- project: dense memoised R (Gisette shape), sparse on-the-fly
+    //     (SpamURL shape), and the sign hash itself
+    if rec.runs("project") {
+        let k = 50;
+        let d = 512;
+        let names: Vec<String> = (0..d).map(|j| format!("f{j}")).collect();
+        let proj = Projector::new(k, 1.0 / 3.0).with_dense_schema(&names);
+        let rows: Vec<Row> = (0..32)
+            .map(|i| Row::dense(i, (0..d).map(|_| rng.normal() as f32).collect()))
+            .collect();
+        rec.bench("project", "dense project d=512 K=50 (per row)", rows.len() as u64, || {
+            rows.iter().map(|r| proj.project(r, None).s[0].abs() as u64).sum()
+        });
+
+        let sparse_rows: Vec<Row> = (0..32)
+            .map(|i| {
+                let mut idx: Vec<u32> =
+                    (0..120).map(|_| rng.below(100_000) as u32).collect();
+                idx.sort();
+                idx.dedup();
+                let val = vec![1.0f32; idx.len()];
+                Row::sparse(i, idx, val)
+            })
+            .collect();
+        let sproj = Projector::new(100, 1.0 / 3.0);
+        let items = sparse_rows.len() as u64;
+        rec.bench("project", "sparse project nnz≈120 K=100 (per row, memo)", items, || {
+            let mut memo = std::collections::HashMap::new();
+            sparse_rows.iter().map(|r| sproj.project(r, Some(&mut memo)).s[0].abs() as u64).sum()
+        });
+
+        let h = SignHasher::new(3, 1.0 / 3.0);
+        rec.bench("project", "sign hash h_k(name) (per hash)", 64, || {
+            (0..64).map(|i| h.feature(&format!("f{i}")) as i64 as u64).sum()
+        });
+    }
+
+    // --- pjrt: AOT Pallas artifacts, if built
+    if rec.runs("pjrt") {
+        match sparx::runtime::PjrtEngine::start_default() {
+            Ok(engine) => {
+                let gk = 50;
+                let gl = 20;
+                let gd = 512;
+                let gb = 256;
+                let delta: Vec<f32> = (0..gk).map(|_| rng.range_f64(0.5, 2.0) as f32).collect();
+                let gchain = ChainParams::sample(&delta, gl, &mut rng);
+                let gs: Vec<f32> = (0..gb * gk).map(|_| rng.normal() as f32).collect();
+                rec.bench("pjrt", "PJRT chain_bins gisette B=256 (per point)", gb as u64, || {
+                    engine.chain_bins("gisette", &gs, gb, &gchain).unwrap()[0] as u64
+                });
+                let gx: Vec<f32> = (0..gb * gd).map(|_| rng.normal() as f32).collect();
+                let gr: Vec<f32> = (0..gd * gk)
+                    .map(|_| [(-1.0f32), 0.0, 1.0][rng.below(3) as usize])
+                    .collect();
+                let mut xr = gx.clone();
+                xr.extend_from_slice(&gr);
+                rec.bench("pjrt", "PJRT project gisette B=256 d=512 (per point)", gb as u64, || {
+                    engine.project("gisette", &xr, gb).unwrap()[0].abs() as u64
+                });
+                rec.bench("pjrt", "PJRT fused project_bins gisette (per point)", gb as u64, || {
+                    engine.project_bins("gisette", &xr, gb, &gchain).unwrap()[0] as u64
+                });
+            }
+            Err(e) => println!("(PJRT benches skipped: {e})"),
+        }
+    }
+
+    // --- dist: fit+score on a fixed Gisette workload, the fused
     //     single-pass executors vs the legacy one-round-per-chain plan
-    //     (BENCH_*.json tracks the gap between these two lines)
-    {
+    //     (BENCH_hotpath.json tracks the gap between these two lines)
+    if rec.runs("dist") {
         use sparx::cluster::ClusterConfig;
         use sparx::data::generators::GisetteGen;
         use sparx::sparx::{ExecMode, SparxModel, SparxParams};
@@ -175,7 +315,8 @@ fn main() {
                 exec_mode: mode,
                 ..Default::default()
             };
-            bench(&format!("dist fit+score gisette M=25 [{tag}] (per point)"), fit_n as u64, || {
+            let name = format!("dist fit+score gisette M=25 [{tag}] (per point)");
+            rec.bench("dist", &name, fit_n as u64, || {
                 let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
                 let scores = model.score_dataset(&ctx, &ld.dataset).unwrap();
                 scores.len() as u64
@@ -185,7 +326,7 @@ fn main() {
 
     // --- artifact codec: serialize + rehydrate the deployable model
     //     (the save/load stage of the fit → save/load → score lifecycle)
-    {
+    if rec.runs("artifact") {
         use sparx::api::{registry, Detector as _, FittedModel as _, SparxBuilder};
         use sparx::cluster::ClusterConfig;
         use sparx::data::generators::GisetteGen;
@@ -200,19 +341,21 @@ fn main() {
             .unwrap();
         let model = det.fit(&ctx, &ld.dataset).unwrap();
         let bytes = model.to_artifact().unwrap().to_bytes();
-        println!("(artifact: {} bytes framed, {}B payload)", bytes.len(), model.model_bytes());
-        bench("artifact serialize M=25 L=10 (per call)", 1, || {
+        rec.size("artifact framed (v3, packed counts)", bytes.len() as u64);
+        rec.size("artifact payload", model.model_bytes() as u64);
+        rec.bench("artifact", "artifact serialize M=25 L=10 (per call)", 1, || {
             model.to_artifact().unwrap().to_bytes().len() as u64
         });
-        bench("artifact load_bytes M=25 L=10 (per call)", 1, || {
+        rec.bench("artifact", "artifact load_bytes M=25 L=10 (per call)", 1, || {
             // name() as the sink: model_bytes() would re-serialize the
             // payload and double-count the cost being measured
             registry::load_bytes(&bytes).unwrap().name().len() as u64
         });
     }
 
-    // --- streaming update+rescore
-    {
+    // --- stream: δ-update + rescore, plus the residency the quantized
+    //     CMS counters actually occupy vs the pre-quantization u32 layout
+    if rec.runs("stream") {
         use sparx::cluster::ClusterConfig;
         use sparx::data::generators::GisetteGen;
         use sparx::data::UpdateTriple;
@@ -225,9 +368,19 @@ fn main() {
             &SparxParams { k: 25, num_chains: 25, depth: 10, ..Default::default() },
         )
         .unwrap();
+        let (mut quantized, mut u32_layout) = (0u64, 0u64);
+        for chain in &model.chains {
+            for cms in &chain.cms {
+                let cells = (cms.rows() * cms.cols()) as u64;
+                quantized += cells * cms.storage_bits() as u64 / 8;
+                u32_layout += cells * 4;
+            }
+        }
+        rec.size("CMS counters resident (quantized)", quantized);
+        rec.size("CMS counters resident (u32 layout)", u32_layout);
         let mut scorer = StreamScorer::new(&model, 512).unwrap();
         let mut i = 0u64;
-        bench("stream δ-update + rescore M=25 L=10 (per upd)", 16, || {
+        rec.bench("stream", "stream δ-update + rescore M=25 L=10 (per upd)", 16, || {
             let mut acc = 0u64;
             for _ in 0..16 {
                 i += 1;
@@ -241,9 +394,6 @@ fn main() {
             acc
         });
     }
-
-    serve_throughput();
-    println!("done");
 }
 
 /// Serve-throughput ladder: one fixed synthetic update sequence replayed
@@ -252,7 +402,10 @@ fn main() {
 /// baseline the speedup column is relative to; shards share nothing, so
 /// scoring work per update is identical at every S (the determinism
 /// story lives in tests/sharded.rs) and only the wall clock moves.
-fn serve_throughput() {
+fn serve_throughput(rec: &Recorder) -> Option<ServeData> {
+    if !rec.runs("serve") {
+        return None;
+    }
     use sparx::cluster::ClusterConfig;
     use sparx::data::generators::GisetteGen;
     use sparx::data::{StreamGen, UpdateTriple};
@@ -273,7 +426,7 @@ fn serve_throughput() {
     // ensemble, so the resident bytes are independent of S (the
     // pre-refactor design cloned the chains + CMS blocks per shard,
     // i.e. S×). CI publishes these lines next to the throughput ladder.
-    {
+    let resident = {
         let s1 = StreamScorer::new(&model, 16).unwrap();
         let bytes = s1.resident_ensemble_bytes();
         println!("serve resident ensemble S=1  {bytes:>10} B (1.00x)");
@@ -286,10 +439,12 @@ fn serve_throughput() {
         );
         assert_eq!(shared, bytes, "S=8 must hold exactly one resident ensemble");
         let _ = s8.finish();
-    }
+        bytes as u64
+    };
 
     let cache_total = 16_384usize;
     let mut base = 0.0f64;
+    let mut ladder = Vec::new();
     for shards in [1usize, 2, 4, 8] {
         let per_shard = (cache_total / shards).max(1);
         // sharded arms clone the replay *outside* the timed region:
@@ -316,9 +471,214 @@ fn serve_throughput() {
         if shards == 1 {
             base = rate;
         }
-        println!(
-            "serve throughput S={shards:<2} {rate:>10.0} updates/s  ({:.2}x vs S=1)",
-            rate / base.max(1e-9)
-        );
+        let speedup = rate / base.max(1e-9);
+        println!("serve throughput S={shards:<2} {rate:>10.0} updates/s  ({speedup:.2}x vs S=1)");
+        ladder.push((shards, rate, speedup));
     }
+    Some(ServeData { ladder, resident_ensemble_bytes: resident })
+}
+
+// ------------------------------------------------------------- json I/O
+
+fn write_hotpath_json(rec: &Recorder) {
+    let entries: Vec<Json> = rec
+        .entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("section", Json::Str(e.section.clone())),
+                ("name", Json::Str(e.name.clone())),
+                ("ns_per_item", Json::Num(e.ns_per_item)),
+                ("mitems_per_s", Json::Num(e.mitems_per_s)),
+            ])
+        })
+        .collect();
+    let sizes: Vec<(&str, Json)> =
+        rec.sizes.iter().map(|(n, b)| (n.as_str(), Json::Num(*b as f64))).collect();
+    let mut derived: Vec<(&str, Json)> = Vec::new();
+    let speedup = |a: Option<f64>, b: Option<f64>| match (a, b) {
+        (Some(r), Some(d)) if d > 0.0 => Some(r / d),
+        _ => None,
+    };
+    if let Some(s) = speedup(
+        rec.ns_of("tile_bins reference K=50 L=20 (per point)"),
+        rec.ns_of("tile_bins dispatched K=50 L=20 (per point)"),
+    ) {
+        derived.push(("tile_bins_speedup_vs_reference", Json::Num(s)));
+    }
+    if let Some(s) = speedup(
+        rec.ns_of("tile_bins_multi reference M=10 (per point·chain)"),
+        rec.ns_of("tile_bins_multi dispatched M=10 (per point·chain)"),
+    ) {
+        derived.push(("tile_bins_multi_speedup_vs_reference", Json::Num(s)));
+    }
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("sparx-bench-hotpath/1".into())),
+        ("host", Json::Str(host_label())),
+        ("kernel", Json::Str(kernel_path().into())),
+        ("entries", Json::Arr(entries)),
+        ("sizes", Json::obj(sizes)),
+        ("derived", Json::obj(derived)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", format!("{doc}\n")).expect("write BENCH_hotpath.json");
+    println!("(wrote BENCH_hotpath.json)");
+}
+
+fn write_serve_json(serve: &ServeData) {
+    let ladder: Vec<Json> = serve
+        .ladder
+        .iter()
+        .map(|&(shards, rate, speedup)| {
+            Json::obj(vec![
+                ("shards", Json::Num(shards as f64)),
+                ("updates_per_s", Json::Num(rate)),
+                ("speedup_vs_s1", Json::Num(speedup)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("schema", Json::Str("sparx-bench-serve/1".into())),
+        ("host", Json::Str(host_label())),
+        ("kernel", Json::Str(kernel_path().into())),
+        ("ladder", Json::Arr(ladder)),
+        ("resident_ensemble_bytes", Json::Num(serve.resident_ensemble_bytes as f64)),
+    ]);
+    std::fs::write("BENCH_serve.json", format!("{doc}\n")).expect("write BENCH_serve.json");
+    println!("(wrote BENCH_serve.json)");
+}
+
+fn read_json(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+}
+
+/// `compare <baseline.json> <current.json> [tolerance]` — markdown delta
+/// table on stdout; exit 1 on regression, 0 otherwise, 2 on usage/parse
+/// errors. Host labels must match for the gate to arm: a baseline from
+/// different hardware is context, not a contract.
+fn compare(args: &[String]) -> i32 {
+    let (Some(base_path), Some(cur_path)) = (args.first(), args.get(1)) else {
+        eprintln!("usage: hotpath compare <baseline.json> <current.json> [tolerance]");
+        return 2;
+    };
+    let tol: f64 = match args.get(2) {
+        Some(t) => match t.parse() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("bad tolerance {t:?}");
+                return 2;
+            }
+        },
+        None => 0.5,
+    };
+    let (base, cur) = match (read_json(base_path), read_json(cur_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("compare: {e}");
+            return 2;
+        }
+    };
+    let base_host = base.get("host").and_then(Json::as_str).unwrap_or("unknown");
+    let cur_host = cur.get("host").and_then(Json::as_str).unwrap_or("unknown");
+    let gate = base_host == cur_host;
+    let lookup = |doc: &Json, name: &str| -> Option<f64> {
+        doc.get("entries")?
+            .items()
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+            .and_then(|e| e.get("ns_per_item"))
+            .and_then(Json::as_f64)
+    };
+    println!("| benchmark | baseline ns/item | current ns/item | Δ |");
+    println!("|---|---:|---:|---:|");
+    let mut regressions = 0usize;
+    for e in cur.get("entries").map(Json::items).unwrap_or(&[]) {
+        let Some(name) = e.get("name").and_then(Json::as_str) else { continue };
+        let Some(ns) = e.get("ns_per_item").and_then(Json::as_f64) else { continue };
+        match lookup(&base, name) {
+            Some(b) if b > 0.0 => {
+                let delta = ns / b - 1.0;
+                let flag = if delta > tol {
+                    regressions += 1;
+                    " ⚠ regression"
+                } else {
+                    ""
+                };
+                println!("| {name} | {b:.1} | {ns:.1} | {:+.1}%{flag} |", delta * 100.0);
+            }
+            _ => println!("| {name} | — | {ns:.1} | new |"),
+        }
+    }
+    if !gate {
+        println!();
+        println!(
+            "_hosts differ (baseline {base_host:?}, current {cur_host:?}) — \
+             informational only, not gating_"
+        );
+        return 0;
+    }
+    if regressions > 0 {
+        eprintln!(
+            "{regressions} benchmark(s) regressed beyond the {:.0}% tolerance band",
+            tol * 100.0
+        );
+        return 1;
+    }
+    0
+}
+
+/// `table <file.json>` — render a results file as a markdown table.
+fn table(args: &[String]) -> i32 {
+    let Some(path) = args.first() else {
+        eprintln!("usage: hotpath table <file.json>");
+        return 2;
+    };
+    let doc = match read_json(path) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("table: {e}");
+            return 2;
+        }
+    };
+    let host = doc.get("host").and_then(Json::as_str).unwrap_or("unknown");
+    let kernel = doc.get("kernel").and_then(Json::as_str).unwrap_or("?");
+    if let Some(ladder) = doc.get("ladder") {
+        println!("**serve throughput** (host {host}, kernel {kernel})");
+        println!();
+        println!("| shards | updates/s | speedup vs S=1 |");
+        println!("|---:|---:|---:|");
+        for e in ladder.items() {
+            let s = e.get("shards").and_then(Json::as_usize).unwrap_or(0);
+            let r = e.get("updates_per_s").and_then(Json::as_f64).unwrap_or(0.0);
+            let x = e.get("speedup_vs_s1").and_then(Json::as_f64).unwrap_or(0.0);
+            println!("| {s} | {r:.0} | {x:.2}x |");
+        }
+        return 0;
+    }
+    println!("**hot-path kernels** (host {host}, kernel {kernel})");
+    println!();
+    println!("| section | benchmark | ns/item | Mitems/s |");
+    println!("|---|---|---:|---:|");
+    for e in doc.get("entries").map(Json::items).unwrap_or(&[]) {
+        let sec = e.get("section").and_then(Json::as_str).unwrap_or("");
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        let ns = e.get("ns_per_item").and_then(Json::as_f64).unwrap_or(0.0);
+        let mi = e.get("mitems_per_s").and_then(Json::as_f64).unwrap_or(0.0);
+        println!("| {sec} | {name} | {ns:.1} | {mi:.2} |");
+    }
+    if let Some(Json::Obj(sizes)) = doc.get("sizes") {
+        println!();
+        println!("| size | bytes |");
+        println!("|---|---:|");
+        for (name, v) in sizes {
+            println!("| {name} | {:.0} |", v.as_f64().unwrap_or(0.0));
+        }
+    }
+    if let Some(Json::Obj(derived)) = doc.get("derived") {
+        println!();
+        for (name, v) in derived {
+            println!("- **{name}**: {:.2}x", v.as_f64().unwrap_or(0.0));
+        }
+    }
+    0
 }

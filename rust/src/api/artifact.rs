@@ -3,11 +3,11 @@
 //! story: train once on the cluster, ship the O(rwLM) model to a
 //! deployment node, score updates in constant time).
 //!
-//! ## File format v2 (all little-endian)
+//! ## File format v3 (all little-endian)
 //!
 //! ```text
 //! magic            4 bytes   "SPRX"
-//! format version   u16       2 (v1 files remain readable, see below)
+//! format version   u16       3 (v1/v2 files remain readable, see below)
 //! detector name    u32-len str   "sparx" | "xstream" | "spif" |
 //!                                "dbscout" | "absorb-state" (checkpoint)
 //! param block      u32-len bytes + u32 CRC-32 of the block
@@ -27,12 +27,19 @@
 //! seed, CLI command) as ordered string pairs — carried verbatim,
 //! never interpreted by the loaders.
 //!
-//! ### v1 compatibility
+//! ### Version history
 //!
-//! Version-1 files (`detector | params | payload | file CRC`, no
-//! per-block CRCs, no extensions) are still read; an artifact loaded
-//! from a v1 file keeps `version == 1` and re-serializes in the v1
-//! layout, so round trips never silently rewrite a file's format.
+//! * **v3** keeps the v2 framing byte-for-byte but compresses the CMS
+//!   count blocks inside chain payloads with the zero-RLE varint codec
+//!   ([`Encoder::put_u32_slice_packed`]) — sketch counts are dominated
+//!   by zeros and small values, so fitted-model artifacts shrink
+//!   several-fold with no change in decoded counts.
+//! * **v2** added per-block CRCs and extension blocks (manifest).
+//! * **v1** files (`detector | params | payload | file CRC`, no
+//!   per-block CRCs, no extensions) are still read; an artifact loaded
+//!   from a v1 (or v2) file keeps its original `version` and
+//!   re-serializes in that layout, so round trips never silently
+//!   rewrite a file's format.
 //!
 //! The *payload* holds exactly the fitted state a deployment node needs
 //! (chains + CMS counts + projector seeds for Sparx; the tree pool for
@@ -61,10 +68,10 @@ use super::error::{Result, SparxError};
 /// File magic: the first four bytes of every model artifact.
 pub const MAGIC: [u8; 4] = *b"SPRX";
 
-/// Current artifact format version. Readers accept this and v1; any
-/// other value is rejected with a typed error rather than guessing at
-/// the layout.
-pub const FORMAT_VERSION: u16 = 2;
+/// Current artifact format version. Readers accept v1 through this;
+/// any other value is rejected with a typed error rather than guessing
+/// at the layout.
+pub const FORMAT_VERSION: u16 = 3;
 
 /// Name of the provenance extension block.
 const MANIFEST_BLOCK: &str = "manifest";
@@ -173,9 +180,9 @@ impl ModelArtifact {
         let parse = |e: String| corrupt(&e);
         dec.take(MAGIC.len()).map_err(parse)?;
         let version = dec.u16().map_err(parse)?;
-        if version != 1 && version != FORMAT_VERSION {
+        if !(1..=FORMAT_VERSION).contains(&version) {
             return Err(SparxError::MissingArtifact(format!(
-                "unsupported artifact format version {version} (this build reads v1 and \
+                "unsupported artifact format version {version} (this build reads v1 through \
                  v{FORMAT_VERSION})"
             )));
         }
@@ -303,8 +310,17 @@ pub(crate) fn decode_exec_mode(dec: &mut Decoder) -> CodecResult<ExecMode> {
     }
 }
 
+/// Sanity ceiling on decoded CMS shapes (v3 path): `r·w` is the
+/// allocation a hostile header can demand before any payload bytes are
+/// read, so both axes are bounded — 128 rows / 1M columns comfortably
+/// cover every configuration the builders accept.
+const MAX_CMS_ROWS: usize = 128;
+const MAX_CMS_COLS: usize = 1 << 20;
+
 /// One trained chain: sampled parameters + the per-level CMS blocks.
-pub(crate) fn encode_chain(enc: &mut Encoder, chain: &TrainedChain) {
+/// From v3 on, the count blocks are zero-RLE varint compressed; v1/v2
+/// write them raw so old-format round trips stay byte-identical.
+pub(crate) fn encode_chain(enc: &mut Encoder, chain: &TrainedChain, version: u16) {
     enc.put_usize_slice(&chain.params.fs);
     enc.put_f32_slice(&chain.params.shift);
     enc.put_f32_slice(&chain.params.deltamax);
@@ -312,11 +328,15 @@ pub(crate) fn encode_chain(enc: &mut Encoder, chain: &TrainedChain) {
     for cms in &chain.cms {
         enc.put_u32(cms.rows() as u32);
         enc.put_u32(cms.cols() as u32);
-        enc.put_u32_slice(cms.counts());
+        if version >= 3 {
+            enc.put_u32_slice_packed(&cms.counts_u32());
+        } else {
+            enc.put_u32_slice(&cms.counts_u32());
+        }
     }
 }
 
-pub(crate) fn decode_chain(dec: &mut Decoder) -> CodecResult<TrainedChain> {
+pub(crate) fn decode_chain(dec: &mut Decoder, version: u16) -> CodecResult<TrainedChain> {
     let fs = dec.usize_vec()?;
     let shift = dec.f32_vec()?;
     let deltamax = dec.f32_vec()?;
@@ -336,7 +356,14 @@ pub(crate) fn decode_chain(dec: &mut Decoder) -> CodecResult<TrainedChain> {
     for _ in 0..levels {
         let r = dec.u32()? as usize;
         let w = dec.u32()? as usize;
-        let counts = dec.u32_vec()?;
+        let counts = if version >= 3 {
+            if r == 0 || w == 0 || r > MAX_CMS_ROWS || w > MAX_CMS_COLS {
+                return Err(format!("CMS shape r={r} w={w} out of range"));
+            }
+            dec.u32_vec_packed(r * w)?
+        } else {
+            dec.u32_vec()?
+        };
         if r == 0 || w == 0 || counts.len() != r * w {
             return Err(format!("CMS block shape mismatch: r={r} w={w} n={}", counts.len()));
         }
@@ -355,12 +382,13 @@ pub(crate) fn encode_chain_ensemble(
     projector: &Projector,
     deltamax: &[f32],
     chains: &[TrainedChain],
+    version: u16,
 ) {
     encode_projector(enc, projector);
     enc.put_f32_slice(deltamax);
     enc.put_u32(chains.len() as u32);
     for chain in chains {
-        encode_chain(enc, chain);
+        encode_chain(enc, chain, version);
     }
 }
 
@@ -376,6 +404,7 @@ pub(crate) fn decode_chain_ensemble(
     k: usize,
     num_chains: usize,
     depth: usize,
+    version: u16,
 ) -> CodecResult<(Projector, Vec<f32>, Vec<TrainedChain>)> {
     let mut dec = Decoder::new(payload);
     let projector = decode_projector(&mut dec)?;
@@ -384,7 +413,8 @@ pub(crate) fn decode_chain_ensemble(
     if m != num_chains {
         return Err(format!("payload has {m} chains but params declare {num_chains}"));
     }
-    let chains = (0..m).map(|_| decode_chain(&mut dec)).collect::<CodecResult<Vec<_>>>()?;
+    let chains =
+        (0..m).map(|_| decode_chain(&mut dec, version)).collect::<CodecResult<Vec<_>>>()?;
     dec.finish()?;
     let consistent = if k == 0 {
         projector.is_identity()
@@ -621,10 +651,80 @@ mod tests {
         assert_eq!(back.payload, v1.payload);
         assert!(back.manifest.is_empty());
         assert_eq!(back.to_bytes(), bytes, "v1 must re-serialize byte-identically");
-        // and the v2 serialization of the same blocks differs but parses
-        let v2 = ModelArtifact::new("xstream", vec![5; 10], vec![6; 20]);
-        assert_ne!(v2.to_bytes(), bytes);
-        assert_eq!(ModelArtifact::from_bytes(&v2.to_bytes()).unwrap().version, 2);
+        // and the current serialization of the same blocks differs but parses
+        let cur = ModelArtifact::new("xstream", vec![5; 10], vec![6; 20]);
+        assert_ne!(cur.to_bytes(), bytes);
+        assert_eq!(ModelArtifact::from_bytes(&cur.to_bytes()).unwrap().version, FORMAT_VERSION);
+    }
+
+    /// v2 files (same framing, raw CMS counts) still load and keep their
+    /// version, exactly like v1.
+    #[test]
+    fn v2_artifacts_round_trip_unchanged() {
+        let mut v2 = ModelArtifact::new("sparx", vec![5; 10], vec![6; 20])
+            .with_manifest(vec![("seed".into(), "7".into())]);
+        v2.version = 2;
+        let bytes = v2.to_bytes();
+        let back = ModelArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back.version, 2);
+        assert_eq!(back.to_bytes(), bytes, "v2 must re-serialize byte-identically");
+    }
+
+    fn tiny_chain() -> TrainedChain {
+        let params = ChainParams::new(vec![0, 1, 0], vec![0.25, 0.5], vec![1.0, 2.0]);
+        let mut cms = Vec::new();
+        for lvl in 0..params.depth() {
+            let mut s = CountMinSketch::new(3, 64);
+            for bin in 0..(lvl + 2) as i32 {
+                s.insert(&[bin, bin * 7]);
+            }
+            cms.push(s);
+        }
+        TrainedChain { params, cms }
+    }
+
+    /// The same chain encodes under v2 (raw) and v3 (packed); both
+    /// decode to identical models, and the v3 payload is smaller for
+    /// the sparse counts a fitted CMS actually holds.
+    #[test]
+    fn chain_codec_versions_decode_identically_and_v3_is_smaller() {
+        let chain = tiny_chain();
+        let mut raw = Encoder::new();
+        encode_chain(&mut raw, &chain, 2);
+        let raw = raw.into_bytes();
+        let mut packed = Encoder::new();
+        encode_chain(&mut packed, &chain, 3);
+        let packed = packed.into_bytes();
+        assert!(
+            packed.len() * 2 < raw.len(),
+            "packed {} vs raw {} bytes: sparse counts should compress >2x",
+            packed.len(),
+            raw.len()
+        );
+        let from_raw = decode_chain(&mut Decoder::new(&raw), 2).unwrap();
+        let from_packed = decode_chain(&mut Decoder::new(&packed), 3).unwrap();
+        assert_eq!(from_raw.cms, chain.cms);
+        assert_eq!(from_packed.cms, chain.cms);
+        assert_eq!(from_raw.params.fs, chain.params.fs);
+        assert_eq!(from_packed.params.fs, chain.params.fs);
+    }
+
+    /// A v3 chain whose CMS header declares an outlandish shape fails
+    /// before any allocation, with the shape in the message.
+    #[test]
+    fn v3_chain_rejects_hostile_cms_shapes() {
+        let chain = tiny_chain();
+        // hand-built chain header declaring levels=1, r=u32::MAX, w=u32::MAX
+        let mut enc = Encoder::new();
+        enc.put_usize_slice(&chain.params.fs);
+        enc.put_f32_slice(&chain.params.shift);
+        enc.put_f32_slice(&chain.params.deltamax);
+        enc.put_u32(1);
+        enc.put_u32(u32::MAX);
+        enc.put_u32(u32::MAX);
+        let bytes = enc.into_bytes();
+        let err = decode_chain(&mut Decoder::new(&bytes), 3).unwrap_err();
+        assert!(err.contains("out of range"), "got: {err}");
     }
 
     /// The v2 per-block CRCs catch corruption even when the whole-file

@@ -285,6 +285,7 @@ impl FittedSparx {
             &self.model.projector,
             &self.model.deltamax,
             &self.model.chains,
+            artifact::FORMAT_VERSION,
         );
         enc.into_bytes()
     }
@@ -348,6 +349,7 @@ impl FittedSparx {
             params.k,
             params.num_chains,
             params.depth,
+            art.version,
         )
         .map_err(blk)?;
         Ok(FittedSparx {

@@ -171,7 +171,13 @@ impl XStream {
 
     fn encode_payload(&self) -> Vec<u8> {
         let mut enc = Encoder::new();
-        artifact::encode_chain_ensemble(&mut enc, &self.projector, &self.deltamax, &self.chains);
+        artifact::encode_chain_ensemble(
+            &mut enc,
+            &self.projector,
+            &self.deltamax,
+            &self.chains,
+            artifact::FORMAT_VERSION,
+        );
         enc.into_bytes()
     }
 
@@ -196,6 +202,7 @@ impl XStream {
             params.k,
             params.num_chains,
             params.depth,
+            art.version,
         )
         .map_err(blk)?;
         Ok(XStream { params, projector, deltamax, chains })

@@ -51,6 +51,50 @@ pub fn cms_bucket(bin: &[i32], row: u32, w: usize) -> usize {
     cms_bucket_from(bin_hash(bin), row, w)
 }
 
+/// Branch-free incremental walk over the `r` row buckets of one bin hash.
+///
+/// `cms_bucket_from` pays one 64-bit modulo per row; this walk pays two
+/// modulos total (`h1 % w`, `h2 % w`) and then advances with an add and a
+/// predicated subtract — bit-identical to the per-row formula because
+/// `h1`, `h2` < 2^32 (murmur3 outputs) and row counts stay far below the
+/// shuffle-key packing limit r < 128, so `h1 + row·h2 < 2^39` never wraps
+/// a `u64` and `(b + step) < 2w` needs at most one reduction.
+#[derive(Debug, Clone, Copy)]
+pub struct BucketWalk {
+    bucket: u64,
+    step: u64,
+    w: u64,
+}
+
+impl BucketWalk {
+    #[inline]
+    pub fn new(h: BinHash, w: usize) -> BucketWalk {
+        debug_assert!(w >= 1);
+        debug_assert!(h.h1 <= u32::MAX as u64 && h.h2 <= u32::MAX as u64);
+        let w64 = w as u64;
+        BucketWalk { bucket: h.h1 % w64, step: h.h2 % w64, w: w64 }
+    }
+
+    /// Bucket for the current row, then advance to the next row.
+    #[inline]
+    pub fn next_bucket(&mut self) -> usize {
+        let cur = self.bucket;
+        let next = self.bucket + self.step;
+        self.bucket = next - self.w * u64::from(next >= self.w);
+        cur as usize
+    }
+}
+
+/// All `out.len()` row buckets of `h` at once (the batch entry point the
+/// fused executors and `query_many`/`insert_many` build on).
+#[inline]
+pub fn cms_buckets_into(h: BinHash, w: usize, out: &mut [u32]) {
+    let mut walk = BucketWalk::new(h, w);
+    for slot in out.iter_mut() {
+        *slot = walk.next_bucket() as u32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,6 +120,35 @@ mod tests {
                 let b = cms_bucket(&[v, -v, v * 7], row, 97);
                 assert!(b < 97);
             }
+        }
+    }
+
+    #[test]
+    fn bucket_walk_matches_per_row_formula() {
+        // the incremental walk is the hot-path replacement for the per-row
+        // modulo — it must agree bucket-for-bucket with the oracle
+        for w in [1usize, 2, 3, 97, 100, 1024, (1 << 20) - 1] {
+            for v in 0..50i32 {
+                let h = bin_hash(&[v, v * 31 - 7, -v]);
+                let mut walk = BucketWalk::new(h, w);
+                for row in 0..127u32 {
+                    assert_eq!(
+                        walk.next_bucket(),
+                        cms_bucket_from(h, row, w),
+                        "w={w} v={v} row={row}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cms_buckets_into_fills_all_rows() {
+        let h = bin_hash(&[5, -9]);
+        let mut out = [0u32; 10];
+        cms_buckets_into(h, 97, &mut out);
+        for (row, &b) in out.iter().enumerate() {
+            assert_eq!(b as usize, cms_bucket_from(h, row as u32, 97));
         }
     }
 

@@ -351,10 +351,18 @@ pub struct PjrtBinner<'e> {
 /// per dispatch, keeping the PJRT path at parity with the native fused
 /// executors.
 impl Binner for PjrtBinner<'_> {
-    fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32> {
-        self.engine
-            .chain_bins(&self.variant, s, n, chain)
-            .unwrap_or_else(|e| panic!("PJRT binning failed ({}): {e}", self.variant))
+    fn tile_bins(
+        &self,
+        chain: &ChainParams,
+        s: &[f32],
+        n: usize,
+    ) -> crate::cluster::Result<Vec<i32>> {
+        self.engine.chain_bins(&self.variant, s, n, chain).map_err(|e| {
+            crate::cluster::ClusterError::Invalid(format!(
+                "PJRT binning failed ({}): {e}",
+                self.variant
+            ))
+        })
     }
 }
 
@@ -412,8 +420,9 @@ mod tests {
         let chain = demo_chain(&mut rng);
         let n = 29; // forces 4 tiles with padding on B=8
         let s: Vec<f32> = (0..n * 4).map(|_| (rng.normal() * 2.0) as f32).collect();
-        let native = NativeBinner.tile_bins(&chain, &s, n);
-        let pjrt = PjrtBinner { engine: &e, variant: "demo".into() }.tile_bins(&chain, &s, n);
+        let native = NativeBinner.tile_bins(&chain, &s, n).unwrap();
+        let pjrt =
+            PjrtBinner { engine: &e, variant: "demo".into() }.tile_bins(&chain, &s, n).unwrap();
         assert_eq!(native.len(), pjrt.len());
         let diff = native.iter().zip(&pjrt).filter(|(a, b)| a != b).count();
         // identical semantics; float-order may flip a floor at an exact

@@ -62,7 +62,12 @@ pub struct PjrtBinner<'e> {
 }
 
 impl Binner for PjrtBinner<'_> {
-    fn tile_bins(&self, _chain: &ChainParams, _s: &[f32], _n: usize) -> Vec<i32> {
+    fn tile_bins(
+        &self,
+        _chain: &ChainParams,
+        _s: &[f32],
+        _n: usize,
+    ) -> crate::cluster::Result<Vec<i32>> {
         unreachable!("stub PjrtEngine cannot be constructed")
     }
 }

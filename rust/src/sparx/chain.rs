@@ -12,7 +12,18 @@
 //! * the Pallas kernel behind the AOT artifacts (`python/compile/kernels/
 //!   chain.py`, loaded via [`crate::runtime`]),
 //! * the pure-jnp oracle (`ref.py`).
+//!
+//! The native path itself has three tiers, all bit-identical:
+//! * [`ChainParams::bins_into`] / [`tile_bins_reference`] — the plain
+//!   per-point loop, kept as the oracle;
+//! * the **floor-cache scalar kernel**: per level only the sampled
+//!   feature's prebin value changes, so the K-wide floor loop collapses
+//!   to one new floor plus a row copy (n·(K+L) floors instead of n·L·K);
+//! * a runtime-detected **AVX2 block kernel** (8 points per register)
+//!   behind `is_x86_feature_detected!`, selected by [`kernel_path`] and
+//!   disabled with `SPARX_NO_AVX2=1`.
 
+use crate::cluster::Result;
 use crate::util::{Rng, SizeOf};
 
 /// Per-chain sampled parameters (shared by every worker — Algorithm 2).
@@ -61,7 +72,8 @@ impl ChainParams {
 
     /// Incremental bin ids of one sketch at every level: returns a
     /// row-major `[L][K]` i32 buffer. `scratch` must be `K` floats
-    /// (avoids a per-point allocation on the hot path).
+    /// (avoids a per-point allocation on the hot path). This is the
+    /// reference recurrence the blocked kernels are tested against.
     pub fn bins_into(&self, s: &[f32], scratch: &mut [f32], out: &mut [i32]) {
         let k = self.k();
         let l = self.depth();
@@ -102,24 +114,256 @@ impl SizeOf for ChainParams {
     }
 }
 
+/// Reference tile binning: the straightforward per-point loop over
+/// [`ChainParams::bins_into`]. The oracle the floor-cache and AVX2
+/// kernels are property-tested (and benchmarked) against.
+pub fn tile_bins_reference(chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32> {
+    let k = chain.k();
+    let l = chain.depth();
+    debug_assert_eq!(s.len(), n * k);
+    let mut out = vec![0i32; n * l * k];
+    let mut scratch = vec![0f32; k];
+    for i in 0..n {
+        chain.bins_into(
+            &s[i * k..(i + 1) * k],
+            &mut scratch,
+            &mut out[i * l * k..(i + 1) * l * k],
+        );
+    }
+    out
+}
+
+/// Force the scalar floor-cache kernel (no SIMD) — the bench A/B arm and
+/// the property-test seam under the runtime-dispatched path.
+pub fn tile_bins_scalar(chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32> {
+    let k = chain.k();
+    let l = chain.depth();
+    debug_assert_eq!(s.len(), n * k);
+    let mut out = vec![0i32; n * l * k];
+    tile_bins_scalar_into(chain, s, 0, n, &mut out);
+    out
+}
+
+/// One point through the floor-cache kernel. Only `fs[lvl]`'s prebin
+/// value changes per level, so `ibins` (the cached floors, point-major
+/// `[K]`) needs exactly one update before the row copy — bit-identical
+/// to `bins_into` because every untouched scratch value floors to the
+/// same integer it did at the previous level.
+fn bins_point_cached(
+    chain: &ChainParams,
+    s: &[f32],
+    scratch: &mut [f32],
+    ibins: &mut [i32],
+    out: &mut [i32],
+) {
+    let k = chain.k();
+    let l = chain.depth();
+    debug_assert_eq!(s.len(), k);
+    debug_assert_eq!(out.len(), l * k);
+    scratch.fill(0.0);
+    ibins.fill(0); // floor(0.0) = 0 for never-sampled features
+    for (lvl, &f) in chain.fs.iter().enumerate() {
+        let new = if chain.first[lvl] {
+            (s[f] + chain.shift[f]) / chain.deltamax[f]
+        } else {
+            2.0 * scratch[f] - chain.shift[f] / chain.deltamax[f]
+        };
+        scratch[f] = new;
+        ibins[f] = new.floor() as i32;
+        out[lvl * k..(lvl + 1) * k].copy_from_slice(ibins);
+    }
+}
+
+/// Floor-cache kernel over points `[from, n)` of the tile.
+fn tile_bins_scalar_into(chain: &ChainParams, s: &[f32], from: usize, n: usize, out: &mut [i32]) {
+    let k = chain.k();
+    let l = chain.depth();
+    let mut scratch = vec![0f32; k];
+    let mut ibins = vec![0i32; k];
+    for i in from..n {
+        bins_point_cached(
+            chain,
+            &s[i * k..(i + 1) * k],
+            &mut scratch,
+            &mut ibins,
+            &mut out[i * l * k..(i + 1) * l * k],
+        );
+    }
+}
+
+/// AVX2 prefix of the tile: bins as many full 8-point blocks as fit,
+/// returning how many points were handled (0 when AVX2 is unavailable,
+/// disabled via `SPARX_NO_AVX2`, or the chain is degenerate).
+#[cfg(target_arch = "x86_64")]
+fn tile_bins_simd_prefix(chain: &ChainParams, s: &[f32], n: usize, out: &mut [i32]) -> usize {
+    if chain.k() == 0 || !avx2_enabled() {
+        return 0;
+    }
+    let k = chain.k();
+    let l = chain.depth();
+    let lanes = avx2::LANES;
+    let mut fscratch = vec![0f32; lanes * k];
+    let mut ibins = vec![0i32; lanes * k];
+    let mut done = 0;
+    while done + lanes <= n {
+        // SAFETY: `avx2_enabled` verified AVX2 support at runtime.
+        unsafe {
+            avx2::bins_block(
+                chain,
+                &s[done * k..(done + lanes) * k],
+                &mut fscratch,
+                &mut ibins,
+                &mut out[done * l * k..(done + lanes) * l * k],
+            );
+        }
+        done += lanes;
+    }
+    done
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn tile_bins_simd_prefix(_chain: &ChainParams, _s: &[f32], _n: usize, _out: &mut [i32]) -> usize {
+    0
+}
+
+/// Runtime-dispatched tile binning: AVX2 blocks then the floor-cache
+/// scalar kernel for the remainder.
+fn tile_bins_into(chain: &ChainParams, s: &[f32], n: usize, out: &mut [i32]) {
+    debug_assert_eq!(s.len(), n * chain.k());
+    debug_assert_eq!(out.len(), n * chain.depth() * chain.k());
+    let from = tile_bins_simd_prefix(chain, s, n, out);
+    tile_bins_scalar_into(chain, s, from, n, out);
+}
+
+/// Which binning kernel [`NativeBinner`] dispatches to on this host:
+/// `"avx2"` or `"scalar"`. Setting `SPARX_NO_AVX2=1` (checked once, at
+/// first dispatch) forces the scalar path.
+pub fn kernel_path() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            return "avx2";
+        }
+    }
+    "scalar"
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_enabled() -> bool {
+    use std::sync::OnceLock;
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| {
+        std::env::var_os("SPARX_NO_AVX2").is_none() && is_x86_feature_detected!("avx2")
+    })
+}
+
+/// The AVX2 block kernel: 8 points per register, prebin state held
+/// feature-major so each level is one vector op chain, floored bins
+/// cached point-major so the per-level row emit is a memcpy. Every
+/// arithmetic step mirrors the scalar recurrence operation-for-operation
+/// (IEEE 754 lane-wise ⇒ bit-identical), and the float→i32 conversion
+/// reproduces Rust `as` cast semantics exactly (NaN → 0, saturation at
+/// the i32 range).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::ChainParams;
+    use std::arch::x86_64::*;
+
+    /// Points per block: one AVX2 register of f32 lanes.
+    pub(super) const LANES: usize = 8;
+
+    /// `v.floor() as i32` per lane with Rust cast semantics: cvttps
+    /// already saturates ≤ −2^31 to `i32::MIN` (its "indefinite" value);
+    /// values ≥ 2^31 are blended to `i32::MAX` and NaNs to 0.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn floor_as_i32(v: __m256) -> __m256i {
+        let fl = _mm256_floor_ps(v);
+        let tr = _mm256_cvttps_epi32(fl);
+        let high = _mm256_cmp_ps::<_CMP_GE_OQ>(fl, _mm256_set1_ps(2_147_483_648.0));
+        let sat =
+            _mm256_blendv_epi8(tr, _mm256_set1_epi32(i32::MAX), _mm256_castps_si256(high));
+        let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(v, v);
+        _mm256_blendv_epi8(sat, _mm256_setzero_si256(), _mm256_castps_si256(nan))
+    }
+
+    /// Bin one 8-point block of `chain`: `s` is the block's sketches
+    /// (point-major `[8][K]`), `lanes` is `[K][8]` feature-major prebin
+    /// scratch, `ibins` is `[8][K]` point-major cached floors, `out` is
+    /// the block's `[8][L][K]` slice of the tile buffer.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn bins_block(
+        chain: &ChainParams,
+        s: &[f32],
+        lanes: &mut [f32],
+        ibins: &mut [i32],
+        out: &mut [i32],
+    ) {
+        let k = chain.k();
+        let l = chain.depth();
+        debug_assert_eq!(s.len(), LANES * k);
+        debug_assert_eq!(lanes.len(), LANES * k);
+        debug_assert_eq!(ibins.len(), LANES * k);
+        debug_assert_eq!(out.len(), LANES * l * k);
+        lanes.fill(0.0);
+        ibins.fill(0);
+        let mut floors = [0i32; LANES];
+        for (lvl, &f) in chain.fs.iter().enumerate() {
+            let lane = lanes.as_mut_ptr().add(f * LANES);
+            let new = if chain.first[lvl] {
+                // transpose the feature's column out of the point-major
+                // block, then (s + shift) / Δ lane-wise
+                let mut col = [0f32; LANES];
+                for (p, c) in col.iter_mut().enumerate() {
+                    *c = *s.get_unchecked(p * k + f);
+                }
+                let sv = _mm256_loadu_ps(col.as_ptr());
+                let sh = _mm256_set1_ps(chain.shift[f]);
+                let dm = _mm256_set1_ps(chain.deltamax[f]);
+                _mm256_div_ps(_mm256_add_ps(sv, sh), dm)
+            } else {
+                // 2·prebin − shift/Δ, the repeat-occurrence halving
+                let old = _mm256_loadu_ps(lane);
+                let c = _mm256_set1_ps(chain.shift[f] / chain.deltamax[f]);
+                _mm256_sub_ps(_mm256_mul_ps(_mm256_set1_ps(2.0), old), c)
+            };
+            _mm256_storeu_ps(lane, new);
+            _mm256_storeu_si256(floors.as_mut_ptr() as *mut __m256i, floor_as_i32(new));
+            for p in 0..LANES {
+                *ibins.get_unchecked_mut(p * k + f) = floors[p];
+            }
+            for p in 0..LANES {
+                let dst = (p * l + lvl) * k;
+                out[dst..dst + k].copy_from_slice(&ibins[p * k..p * k + k]);
+            }
+        }
+    }
+}
+
 /// Tile-level binning backend: maps a tile of `n` K-dim sketches to
-/// `n × L × K` bin ids. The native implementation loops in Rust; the PJRT
-/// implementation ([`crate::runtime::PjrtBinner`]) executes the AOT
-/// Pallas artifact. Both must agree bit-for-bit (integration-tested).
+/// `n × L × K` bin ids. The native implementation dispatches between the
+/// scalar and AVX2 kernels (and never fails); the PJRT implementation
+/// ([`crate::runtime::PjrtBinner`]) executes the AOT Pallas artifact and
+/// surfaces engine failures as typed [`crate::cluster::ClusterError`]s
+/// instead of panicking. All paths must agree bit-for-bit
+/// (integration-tested).
 pub trait Binner: Sync {
-    fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32>;
+    fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Result<Vec<i32>>;
 
     /// Multi-chain tiling: bin the *same* resident tile of `n` sketches
     /// against every chain in `chains`, returning a chain-major
     /// `[M][n][L][K]` buffer. The fused partition executors
     /// ([`crate::sparx::plan`]) use this so the sketch block is flattened
     /// once per partition visit instead of once per chain.
-    fn tile_bins_multi(&self, chains: &[&ChainParams], s: &[f32], n: usize) -> Vec<i32> {
+    fn tile_bins_multi(&self, chains: &[&ChainParams], s: &[f32], n: usize) -> Result<Vec<i32>> {
         let mut out = Vec::with_capacity(chains.iter().map(|c| n * c.depth() * c.k()).sum());
         for chain in chains {
-            out.extend(self.tile_bins(chain, s, n));
+            out.extend(self.tile_bins(chain, s, n)?);
         }
-        out
+        Ok(out)
     }
 }
 
@@ -128,43 +372,24 @@ pub trait Binner: Sync {
 pub struct NativeBinner;
 
 impl Binner for NativeBinner {
-    fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Vec<i32> {
-        let k = chain.k();
-        let l = chain.depth();
-        debug_assert_eq!(s.len(), n * k);
-        let mut out = vec![0i32; n * l * k];
-        let mut scratch = vec![0f32; k];
-        for i in 0..n {
-            chain.bins_into(
-                &s[i * k..(i + 1) * k],
-                &mut scratch,
-                &mut out[i * l * k..(i + 1) * l * k],
-            );
-        }
-        out
+    fn tile_bins(&self, chain: &ChainParams, s: &[f32], n: usize) -> Result<Vec<i32>> {
+        let mut out = vec![0i32; n * chain.depth() * chain.k()];
+        tile_bins_into(chain, s, n, &mut out);
+        Ok(out)
     }
 
-    /// Single allocation + shared scratch across all chains of the tile.
-    fn tile_bins_multi(&self, chains: &[&ChainParams], s: &[f32], n: usize) -> Vec<i32> {
+    /// Single allocation across all chains of the tile, each chain run
+    /// through the dispatched kernel over the shared sketch block.
+    fn tile_bins_multi(&self, chains: &[&ChainParams], s: &[f32], n: usize) -> Result<Vec<i32>> {
         let total: usize = chains.iter().map(|c| n * c.depth() * c.k()).sum();
         let mut out = vec![0i32; total];
-        let kmax = chains.iter().map(|c| c.k()).max().unwrap_or(0);
-        let mut scratch = vec![0f32; kmax];
         let mut off = 0;
         for chain in chains {
-            let k = chain.k();
-            let l = chain.depth();
-            debug_assert_eq!(s.len(), n * k);
-            for i in 0..n {
-                chain.bins_into(
-                    &s[i * k..(i + 1) * k],
-                    &mut scratch[..k],
-                    &mut out[off + i * l * k..off + (i + 1) * l * k],
-                );
-            }
-            off += n * l * k;
+            let span = n * chain.depth() * chain.k();
+            tile_bins_into(chain, s, n, &mut out[off..off + span]);
+            off += span;
         }
-        out
+        Ok(out)
     }
 }
 
@@ -230,7 +455,7 @@ mod tests {
         let mut rng = Rng::new(9);
         let c = ChainParams::sample(&[2.0, 3.0], 8, &mut rng);
         let pts: Vec<f32> = (0..20).map(|_| rng.f32() * 4.0 - 2.0).collect();
-        let tiled = NativeBinner.tile_bins(&c, &pts, 10);
+        let tiled = NativeBinner.tile_bins(&c, &pts, 10).unwrap();
         for i in 0..10 {
             let single = c.bins(&pts[i * 2..(i + 1) * 2]);
             assert_eq!(&tiled[i * 16..(i + 1) * 16], single.as_slice(), "point {i}");
@@ -246,12 +471,55 @@ mod tests {
         let refs: Vec<&ChainParams> = chains.iter().collect();
         let n = 11;
         let s: Vec<f32> = (0..n * 3).map(|_| rng.normal() as f32 * 2.0).collect();
-        let multi = NativeBinner.tile_bins_multi(&refs, &s, n);
+        let multi = NativeBinner.tile_bins_multi(&refs, &s, n).unwrap();
         let mut concat = Vec::new();
         for c in &chains {
-            concat.extend(NativeBinner.tile_bins(c, &s, n));
+            concat.extend(NativeBinner.tile_bins(c, &s, n).unwrap());
         }
         assert_eq!(multi, concat);
+    }
+
+    /// The dispatched kernels (floor-cache scalar and, where the host
+    /// supports it, AVX2 blocks) agree bit-for-bit with the per-point
+    /// oracle across edge shapes: k=1, n=0, n not a multiple of the lane
+    /// width, and inputs that stress the float→i32 cast (NaN, ±∞, values
+    /// past the i32 range).
+    #[test]
+    fn kernels_match_reference_on_edge_shapes() {
+        let mut rng = Rng::new(33);
+        for &k in &[1usize, 3, 8, 17] {
+            for &depth in &[1usize, 4, 9] {
+                let delta: Vec<f32> = (0..k).map(|_| 0.5 + rng.f32() * 3.0).collect();
+                let c = ChainParams::sample(&delta, depth, &mut rng);
+                for &n in &[0usize, 1, 5, 8, 13, 64] {
+                    let mut s: Vec<f32> =
+                        (0..n * k).map(|_| rng.normal() as f32 * 10.0).collect();
+                    if s.len() >= 4 {
+                        s[0] = f32::NAN;
+                        s[1] = f32::INFINITY;
+                        s[2] = -3.0e9;
+                        s[3] = 2.0e9;
+                    }
+                    let expect = tile_bins_reference(&c, &s, n);
+                    assert_eq!(
+                        tile_bins_scalar(&c, &s, n),
+                        expect,
+                        "scalar k={k} depth={depth} n={n}"
+                    );
+                    assert_eq!(
+                        NativeBinner.tile_bins(&c, &s, n).unwrap(),
+                        expect,
+                        "dispatched ({}) k={k} depth={depth} n={n}",
+                        kernel_path()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_path_reports_a_known_kernel() {
+        assert!(matches!(kernel_path(), "avx2" | "scalar"));
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! dies with the process unless it is checkpointed. This module defines
 //! the serializable snapshot unit ([`AbsorbSnapshot`]), the merged
 //! multi-shard checkpoint ([`AbsorbCheckpoint`]) and its file form: a
-//! format-v2 model artifact (per-block CRCs + provenance manifest, see
+//! model artifact (per-block CRCs + provenance manifest, see
 //! [`crate::api::artifact`]) whose detector name is
 //! [`CHECKPOINT_DETECTOR`], written by `sparx serve --checkpoint-out`
-//! and read back by `serve --resume`.
+//! and read back by `serve --resume`. From format v3 the absorbed-delta
+//! levels travel compressed (first bucket + strictly-increasing gap
+//! varints, varint counts); v2 checkpoint files remain readable.
 //!
 //! Resume contract: restoring a checkpoint into scorers built from the
 //! **same model** (fingerprint equality) and the same shard/cache
@@ -190,7 +192,8 @@ impl AbsorbCheckpoint {
             merged.entries.extend(snap.entries.iter().cloned());
             for (slot, lvl) in snap.delta.iter().enumerate().take(levels) {
                 for &(bucket, count) in lvl {
-                    *maps[slot].entry(bucket).or_insert(0) += count;
+                    let slot_count = maps[slot].entry(bucket).or_insert(0);
+                    *slot_count = slot_count.saturating_add(count);
                 }
             }
         }
@@ -204,7 +207,7 @@ impl AbsorbCheckpoint {
 
     // ------------------------------------------------------ file format
 
-    /// Wrap the checkpoint in a (format-v2) artifact container: the
+    /// Wrap the checkpoint in a current-format artifact container: the
     /// header travels in the params block, the snapshots in the payload,
     /// each with its own CRC. Callers add provenance manifest entries
     /// with [`ModelArtifact::with_manifest`].
@@ -224,7 +227,7 @@ impl AbsorbCheckpoint {
         let mut payload = Encoder::new();
         payload.put_u32(self.snapshots.len() as u32);
         for snap in &self.snapshots {
-            encode_snapshot(&mut payload, snap);
+            encode_snapshot(&mut payload, snap, crate::api::artifact::FORMAT_VERSION);
         }
         ModelArtifact::new(CHECKPOINT_DETECTOR, params.into_bytes(), payload.into_bytes())
     }
@@ -249,7 +252,7 @@ impl AbsorbCheckpoint {
         dec.finish().map_err(blk)?;
         let mut ckpt = header;
         let mut dec = Decoder::new(&art.payload);
-        decode_snapshots(&mut dec, &mut ckpt).map_err(blk)?;
+        decode_snapshots(&mut dec, &mut ckpt, art.version).map_err(blk)?;
         dec.finish().map_err(blk)?;
         Ok(ckpt)
     }
@@ -268,7 +271,12 @@ impl AbsorbCheckpoint {
     }
 }
 
-fn encode_snapshot(enc: &mut Encoder, snap: &AbsorbSnapshot) {
+/// Snapshot wire form. The counters and sketch entries are identical
+/// across versions; the delta levels are raw `(u32 bucket, u32 count)`
+/// pairs in v2 and — because buckets are strictly increasing and counts
+/// are small — `varint(first bucket) + varint(gap)…` with varint counts
+/// from v3 on.
+fn encode_snapshot(enc: &mut Encoder, snap: &AbsorbSnapshot, version: u16) {
     enc.put_u64(snap.processed);
     enc.put_u64(snap.evicted);
     enc.put_u64(snap.absorbed);
@@ -280,9 +288,19 @@ fn encode_snapshot(enc: &mut Encoder, snap: &AbsorbSnapshot) {
     enc.put_u32(snap.delta.len() as u32);
     for lvl in &snap.delta {
         enc.put_u32(lvl.len() as u32);
-        for &(bucket, count) in lvl {
-            enc.put_u32(bucket);
-            enc.put_u32(count);
+        if version >= 3 {
+            let mut prev = 0u32;
+            for (i, &(bucket, count)) in lvl.iter().enumerate() {
+                let gap = if i == 0 { bucket } else { bucket - prev };
+                enc.put_varint(gap as u64);
+                enc.put_varint(count as u64);
+                prev = bucket;
+            }
+        } else {
+            for &(bucket, count) in lvl {
+                enc.put_u32(bucket);
+                enc.put_u32(count);
+            }
         }
     }
 }
@@ -345,7 +363,11 @@ fn decode_header(dec: &mut Decoder) -> CodecResult<AbsorbCheckpoint> {
     Ok(ckpt)
 }
 
-fn decode_snapshots(dec: &mut Decoder, ckpt: &mut AbsorbCheckpoint) -> CodecResult<()> {
+fn decode_snapshots(
+    dec: &mut Decoder,
+    ckpt: &mut AbsorbCheckpoint,
+    version: u16,
+) -> CodecResult<()> {
     let n = dec.u32()? as usize;
     if n != ckpt.shards as usize {
         return Err(format!(
@@ -399,30 +421,52 @@ fn decode_snapshots(dec: &mut Decoder, ckpt: &mut AbsorbCheckpoint) -> CodecResu
             return Err(format!("truncated snapshot: {n_levels} delta levels declared"));
         }
         let mut delta = Vec::with_capacity(n_levels);
+        // v2 pairs are 8 raw bytes; v3 pairs are ≥ 2 varint bytes
+        let min_pair_bytes: usize = if version >= 3 { 2 } else { 8 };
         for _ in 0..n_levels {
             let n_pairs = dec.u32()? as usize;
-            if dec.remaining() < n_pairs.saturating_mul(8) {
+            if dec.remaining() < n_pairs.saturating_mul(min_pair_bytes) {
                 return Err(format!("truncated snapshot: {n_pairs} delta pairs declared"));
             }
             let mut lvl = Vec::with_capacity(n_pairs);
             let mut prev: Option<u32> = None;
             for _ in 0..n_pairs {
-                let bucket = dec.u32()?;
-                let count = dec.u32()?;
-                if bucket >= buckets {
-                    return Err(format!(
-                        "delta bucket {bucket} out of range for a {}×{} CMS",
-                        ckpt.cms_rows, ckpt.cms_cols
-                    ));
-                }
-                if count == 0 {
-                    return Err("delta entries must carry a non-zero count".into());
-                }
-                if let Some(p) = prev {
-                    if bucket <= p {
+                let (bucket, count) = if version >= 3 {
+                    let gap = dec.varint()?;
+                    let count = dec.varint()?;
+                    if count == 0 || count > u32::MAX as u64 {
+                        return Err(format!("delta count {count} out of range"));
+                    }
+                    if prev.is_some() && gap == 0 {
                         return Err("delta buckets must be strictly increasing".into());
                     }
-                }
+                    let bucket = prev.map_or(0, u64::from) + gap;
+                    if bucket >= buckets as u64 {
+                        return Err(format!(
+                            "delta bucket {bucket} out of range for a {}×{} CMS",
+                            ckpt.cms_rows, ckpt.cms_cols
+                        ));
+                    }
+                    (bucket as u32, count as u32)
+                } else {
+                    let bucket = dec.u32()?;
+                    let count = dec.u32()?;
+                    if bucket >= buckets {
+                        return Err(format!(
+                            "delta bucket {bucket} out of range for a {}×{} CMS",
+                            ckpt.cms_rows, ckpt.cms_cols
+                        ));
+                    }
+                    if count == 0 {
+                        return Err("delta entries must carry a non-zero count".into());
+                    }
+                    if let Some(p) = prev {
+                        if bucket <= p {
+                            return Err("delta buckets must be strictly increasing".into());
+                        }
+                    }
+                    (bucket, count)
+                };
                 prev = Some(bucket);
                 lvl.push((bucket, count));
             }
@@ -525,6 +569,28 @@ mod tests {
             AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
             Err(SparxError::InvalidParams(_))
         ));
+    }
+
+    /// Checkpoint files written by the previous release (format v2, raw
+    /// delta pairs) still restore exactly; the v3 payload for the same
+    /// state is smaller.
+    #[test]
+    fn v2_checkpoint_payloads_still_decode() {
+        let ckpt = sample();
+        let mut art = ckpt.to_artifact();
+        let v3_payload_len = art.payload.len();
+        // rebuild the payload in the v2 (raw pairs) layout, mark the file v2
+        let mut payload = Encoder::new();
+        payload.put_u32(ckpt.snapshots.len() as u32);
+        for snap in &ckpt.snapshots {
+            encode_snapshot(&mut payload, snap, 2);
+        }
+        art.payload = payload.into_bytes();
+        art.version = 2;
+        assert!(v3_payload_len < art.payload.len(), "v3 must compress the delta levels");
+        let reread = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
+        let back = AbsorbCheckpoint::from_artifact(&reread).unwrap();
+        assert_eq!(ckpt, back);
     }
 
     #[test]

@@ -6,24 +6,123 @@
 //! rows (the least over-estimate — hence count-*min*). In the distributed
 //! fit, buckets are filled from the `reduceByKey` output rather than by
 //! point-wise insertion, which is numerically identical.
+//!
+//! Two hot-path properties of this implementation:
+//! * **Branch-free bucket derivation.** Each operation hashes the bin
+//!   once ([`bin_hash`]) and walks the `r` row buckets with
+//!   [`BucketWalk`] — two modulos total instead of one per row, bucket
+//!   indices bit-identical to the per-row formula.
+//! * **Quantized counters.** Counts are stored at the narrowest of
+//!   `u8`/`u16`/`u32` that holds the current maximum, promoting in place
+//!   when a count outgrows the width (values stay exact, so queries are
+//!   bit-identical to a `u32` sketch). Arithmetic saturates at
+//!   `u32::MAX` instead of wrapping — a wrapped hot bucket would make
+//!   the hottest bin look like an outlier. Typical trained sketches fit
+//!   in `u8`/`u16`, shrinking serve residency and artifacts 2–4×.
 
 use std::collections::HashMap;
 
-use crate::hash::{bin_hash, cms_bucket_from, BinHash};
+use crate::hash::{bin_hash, BinHash, BucketWalk};
 use crate::util::SizeOf;
 
-#[derive(Debug, Clone, PartialEq)]
+/// Width-quantized bucket storage. All widths hold the exact same
+/// logical `u32` values; the enum only changes the bytes spent per
+/// bucket. Promotion (widening) preserves every count, so the storage
+/// width is unobservable through the query API.
+#[derive(Debug, Clone)]
+enum Counters {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+impl Counters {
+    fn zeros(len: usize) -> Counters {
+        Counters::U8(vec![0; len])
+    }
+
+    #[inline]
+    fn get(&self, idx: usize) -> u32 {
+        match self {
+            Counters::U8(v) => v[idx] as u32,
+            Counters::U16(v) => v[idx] as u32,
+            Counters::U32(v) => v[idx],
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Counters::U8(v) => v.len(),
+            Counters::U16(v) => v.len(),
+            Counters::U32(v) => v.len(),
+        }
+    }
+
+    /// Bits per bucket at the current quantization width.
+    fn bits(&self) -> u32 {
+        match self {
+            Counters::U8(_) => 8,
+            Counters::U16(_) => 16,
+            Counters::U32(_) => 32,
+        }
+    }
+
+    /// Widen one step, copying every count exactly.
+    fn promote(&mut self) {
+        *self = match self {
+            Counters::U8(v) => Counters::U16(v.iter().map(|&x| x as u16).collect()),
+            Counters::U16(v) => Counters::U32(v.iter().map(|&x| x as u32).collect()),
+            Counters::U32(_) => return,
+        };
+    }
+
+    /// Store `v` at `idx`, promoting until the width holds it (the
+    /// overflow escape: a `u32` count always fits eventually).
+    #[inline]
+    fn set(&mut self, idx: usize, v: u32) {
+        loop {
+            match self {
+                Counters::U8(b) if v <= u8::MAX as u32 => {
+                    b[idx] = v as u8;
+                    return;
+                }
+                Counters::U16(b) if v <= u16::MAX as u32 => {
+                    b[idx] = v as u16;
+                    return;
+                }
+                Counters::U32(b) => {
+                    b[idx] = v;
+                    return;
+                }
+                _ => {}
+            }
+            self.promote();
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
 pub struct CountMinSketch {
     r: usize,
     w: usize,
-    /// row-major [r][w]
-    counts: Vec<u32>,
+    /// row-major [r][w], width-quantized
+    counts: Counters,
+}
+
+/// Equality is over logical counts (and shape) — two sketches with the
+/// same counts compare equal even at different quantization widths.
+impl PartialEq for CountMinSketch {
+    fn eq(&self, other: &Self) -> bool {
+        self.r == other.r
+            && self.w == other.w
+            && (0..self.r * self.w).all(|i| self.counts.get(i) == other.counts.get(i))
+    }
 }
 
 impl CountMinSketch {
     pub fn new(r: usize, w: usize) -> Self {
         assert!(r >= 1 && w >= 1);
-        CountMinSketch { r, w, counts: vec![0; r * w] }
+        CountMinSketch { r, w, counts: Counters::zeros(r * w) }
     }
 
     pub fn rows(&self) -> usize {
@@ -41,11 +140,24 @@ impl CountMinSketch {
     }
 
     /// Insert by precomputed bin hash (hot paths hash once per level).
+    /// Saturates at `u32::MAX` instead of wrapping.
     #[inline]
     pub fn insert_hashed(&mut self, h: BinHash) {
-        for row in 0..self.r {
-            let b = cms_bucket_from(h, row as u32, self.w);
-            self.counts[row * self.w + b] += 1;
+        let mut walk = BucketWalk::new(h, self.w);
+        let mut base = 0usize;
+        for _ in 0..self.r {
+            let idx = base + walk.next_bucket();
+            let v = self.counts.get(idx).saturating_add(1);
+            self.counts.set(idx, v);
+            base += self.w;
+        }
+    }
+
+    /// Batched insert: one hash per bin done by the caller, buckets
+    /// derived branch-free per hash.
+    pub fn insert_many(&mut self, hashes: &[BinHash]) {
+        for &h in hashes {
+            self.insert_hashed(h);
         }
     }
 
@@ -53,8 +165,8 @@ impl CountMinSketch {
     /// `allCols` (Eq. 6): one `((row, col), 1)` pair per hash table.
     #[inline]
     pub fn all_cols<'a>(&'a self, bin: &'a [i32]) -> impl Iterator<Item = (u32, u32)> + 'a {
-        let h = bin_hash(bin);
-        (0..self.r as u32).map(move |row| (row, cms_bucket_from(h, row, self.w) as u32))
+        let mut walk = BucketWalk::new(bin_hash(bin), self.w);
+        (0..self.r as u32).map(move |row| (row, walk.next_bucket() as u32))
     }
 
     /// Estimated count = min over rows.
@@ -66,36 +178,66 @@ impl CountMinSketch {
     /// Query by precomputed bin hash.
     #[inline]
     pub fn query_hashed(&self, h: BinHash) -> u32 {
+        let mut walk = BucketWalk::new(h, self.w);
         let mut m = u32::MAX;
-        for row in 0..self.r {
-            let b = cms_bucket_from(h, row as u32, self.w);
-            m = m.min(self.counts[row * self.w + b]);
+        let mut base = 0usize;
+        for _ in 0..self.r {
+            let c = self.counts.get(base + walk.next_bucket());
+            m = m.min(c);
+            base += self.w;
         }
         m
+    }
+
+    /// Batched query: `out[i] = min over rows` for `hashes[i]`. The fused
+    /// score executor calls this once per (chain, level) tile so one
+    /// sketch stays cache-hot across the whole batch.
+    pub fn query_many(&self, hashes: &[BinHash], out: &mut [u32]) {
+        debug_assert_eq!(hashes.len(), out.len());
+        for (&h, slot) in hashes.iter().zip(out.iter_mut()) {
+            *slot = self.query_hashed(h);
+        }
     }
 
     /// Fill a bucket from the reduce output (total count for (row,col)).
     #[inline]
     pub fn set_bucket(&mut self, row: u32, col: u32, count: u32) {
-        self.counts[row as usize * self.w + col as usize] = count;
+        self.counts.set(row as usize * self.w + col as usize, count);
     }
 
     /// Build from a reduced dense count block (row-major [r][w]) — the
     /// collectAsMap-equivalent when the map-side combine is dense.
+    /// Storage narrows to the smallest width holding the block's maximum.
     pub fn from_counts(r: usize, w: usize, counts: &[u32]) -> Self {
         assert_eq!(counts.len(), r * w);
-        CountMinSketch { r, w, counts: counts.to_vec() }
+        let max = counts.iter().copied().max().unwrap_or(0);
+        let counts = if max <= u8::MAX as u32 {
+            Counters::U8(counts.iter().map(|&c| c as u8).collect())
+        } else if max <= u16::MAX as u32 {
+            Counters::U16(counts.iter().map(|&c| c as u16).collect())
+        } else {
+            Counters::U32(counts.to_vec())
+        };
+        CountMinSketch { r, w, counts }
     }
 
-    /// Raw bucket counts (row-major [r][w]).
-    pub fn counts(&self) -> &[u32] {
-        &self.counts
+    /// Bucket counts widened to `u32` (row-major [r][w]) — the artifact
+    /// codec's canonical form, independent of the quantization width.
+    pub fn counts_u32(&self) -> Vec<u32> {
+        (0..self.counts.len()).map(|i| self.counts.get(i)).collect()
     }
 
-    /// Add into a bucket (merging partial counts).
+    /// Bits per bucket at the current quantization width (8/16/32).
+    pub fn storage_bits(&self) -> u32 {
+        self.counts.bits()
+    }
+
+    /// Add into a bucket (merging partial counts), saturating.
     #[inline]
     pub fn add_bucket(&mut self, row: u32, col: u32, count: u32) {
-        self.counts[row as usize * self.w + col as usize] += count;
+        let idx = row as usize * self.w + col as usize;
+        let v = self.counts.get(idx).saturating_add(count);
+        self.counts.set(idx, v);
     }
 
     /// Query with a sparse *overlay* of absorbed increments on top of the
@@ -104,17 +246,22 @@ impl CountMinSketch {
     /// `u32` under the shuffle-key packing limits r < 128, w < 2^20).
     /// With an empty overlay this equals [`query`](Self::query) exactly —
     /// the serving front-end's Arc-shared ensemble depends on that
-    /// bit-identity.
+    /// bit-identity. The sum saturates rather than wrapping.
     #[inline]
     pub fn query_overlaid(&self, bin: &[i32], overlay: &HashMap<u32, u32>) -> u32 {
-        let h = bin_hash(bin);
+        let mut walk = BucketWalk::new(bin_hash(bin), self.w);
         let mut m = u32::MAX;
-        for row in 0..self.r {
-            let idx = row * self.w + cms_bucket_from(h, row as u32, self.w);
-            let v = self.counts[idx] + overlay.get(&(idx as u32)).copied().unwrap_or(0);
+        let mut base = 0usize;
+        for _ in 0..self.r {
+            let idx = base + walk.next_bucket();
+            let v = self
+                .counts
+                .get(idx)
+                .saturating_add(overlay.get(&(idx as u32)).copied().unwrap_or(0));
             if v < m {
                 m = v;
             }
+            base += self.w;
         }
         m
     }
@@ -126,30 +273,35 @@ impl CountMinSketch {
     /// [`insert`](Self::insert) on an owned copy, bit for bit.
     #[inline]
     pub fn overlay_insert(&self, bin: &[i32], overlay: &mut HashMap<u32, u32>) {
-        let h = bin_hash(bin);
-        for row in 0..self.r {
-            let idx = (row * self.w + cms_bucket_from(h, row as u32, self.w)) as u32;
-            *overlay.entry(idx).or_insert(0) += 1;
+        let mut walk = BucketWalk::new(bin_hash(bin), self.w);
+        let mut base = 0usize;
+        for _ in 0..self.r {
+            let idx = (base + walk.next_bucket()) as u32;
+            let slot = overlay.entry(idx).or_insert(0);
+            *slot = slot.saturating_add(1);
+            base += self.w;
         }
     }
 
-    /// Merge another CMS of identical shape (distributed partial merge).
+    /// Merge another CMS of identical shape (distributed partial merge),
+    /// saturating bucket-wise.
     pub fn merge(&mut self, other: &CountMinSketch) {
         assert_eq!((self.r, self.w), (other.r, other.w));
-        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
-            *a += b;
+        for idx in 0..self.r * self.w {
+            let v = self.counts.get(idx).saturating_add(other.counts.get(idx));
+            self.counts.set(idx, v);
         }
     }
 
     /// Total insertions (any row sums to it).
     pub fn total(&self) -> u64 {
-        self.counts[..self.w].iter().map(|&c| c as u64).sum()
+        (0..self.w).map(|i| self.counts.get(i) as u64).sum()
     }
 }
 
 impl SizeOf for CountMinSketch {
     fn size_of(&self) -> usize {
-        std::mem::size_of::<Self>() + self.counts.len() * 4
+        std::mem::size_of::<Self>() + self.counts.len() * (self.counts.bits() as usize / 8)
     }
 }
 
@@ -263,5 +415,82 @@ mod tests {
         let mut a = CountMinSketch::new(2, 8);
         let b = CountMinSketch::new(2, 9);
         a.merge(&b);
+    }
+
+    /// Regression for the silent-wrap bug: a bucket at `u32::MAX` must
+    /// stay there under insert/add/merge/overlay instead of wrapping to
+    /// ~0 and making the hottest bin look like an outlier.
+    #[test]
+    fn arithmetic_saturates_instead_of_wrapping() {
+        let mut cms = CountMinSketch::new(3, 16);
+        let bin = [42];
+        for (row, col) in cms.all_cols(&bin).collect::<Vec<_>>() {
+            cms.set_bucket(row, col, u32::MAX);
+        }
+        cms.insert(&bin);
+        assert_eq!(cms.query(&bin), u32::MAX);
+        cms.add_bucket(0, cms.all_cols(&bin).next().unwrap().1, 10);
+        assert_eq!(cms.query(&bin), u32::MAX);
+        let other = cms.clone();
+        cms.merge(&other);
+        assert_eq!(cms.query(&bin), u32::MAX);
+        // overlay sum saturates too
+        let mut overlay = HashMap::new();
+        cms.overlay_insert(&bin, &mut overlay);
+        assert_eq!(cms.query_overlaid(&bin, &overlay), u32::MAX);
+    }
+
+    /// Quantization is unobservable: counts promote u8 → u16 → u32
+    /// without losing a single increment.
+    #[test]
+    fn promotion_preserves_exact_counts() {
+        let mut cms = CountMinSketch::new(2, 8);
+        assert_eq!(cms.storage_bits(), 8);
+        for i in 0..300u32 {
+            cms.insert(&[7]);
+            assert_eq!(cms.query(&[7]), i + 1);
+        }
+        assert_eq!(cms.storage_bits(), 16);
+        cms.set_bucket(0, 0, 70_000);
+        assert_eq!(cms.storage_bits(), 32);
+        // the hot bin's count survived both promotions exactly
+        assert_eq!(cms.query(&[7]), 300);
+    }
+
+    /// `from_counts` narrows to the smallest width holding the block and
+    /// still compares equal to (and queries identically to) a sketch
+    /// whose storage was forced wide.
+    #[test]
+    fn from_counts_narrows_and_queries_match_u32() {
+        let mut rng = Rng::new(9);
+        let counts: Vec<u32> = (0..5 * 64).map(|_| rng.below(200) as u32).collect();
+        let narrow = CountMinSketch::from_counts(5, 64, &counts);
+        assert_eq!(narrow.storage_bits(), 8);
+        let mut wide = CountMinSketch::from_counts(5, 64, &counts);
+        wide.set_bucket(0, 0, 100_000); // force u32 storage...
+        wide.set_bucket(0, 0, counts[0]); // ...then restore the value
+        assert_eq!(wide.storage_bits(), 32);
+        assert_eq!(narrow, wide);
+        for v in -50..50i32 {
+            assert_eq!(narrow.query(&[v, v * 3]), wide.query(&[v, v * 3]));
+        }
+        assert_eq!(narrow.counts_u32(), counts);
+        // quantized residency is smaller than the u32-equivalent
+        assert!(narrow.size_of() < wide.size_of());
+    }
+
+    #[test]
+    fn query_many_matches_pointwise() {
+        let mut cms = CountMinSketch::new(4, 128);
+        let mut rng = Rng::new(5);
+        let bins: Vec<Vec<i32>> =
+            (0..200).map(|_| vec![rng.below(60) as i32, rng.below(60) as i32]).collect();
+        let hashes: Vec<BinHash> = bins.iter().map(|b| bin_hash(b)).collect();
+        cms.insert_many(&hashes);
+        let mut out = vec![0u32; hashes.len()];
+        cms.query_many(&hashes, &mut out);
+        for (bin, &got) in bins.iter().zip(&out) {
+            assert_eq!(got, cms.query(bin));
+        }
     }
 }

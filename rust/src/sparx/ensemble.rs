@@ -28,6 +28,7 @@
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{pool, ClusterContext, ClusterError, DistVec, Result};
 use crate::data::Dataset;
+use crate::hash::bin_hash;
 use crate::util::SizeOf;
 
 use super::chain::{Binner, ChainParams, NativeBinner};
@@ -181,6 +182,50 @@ pub fn score_bins_overlaid(
     best
 }
 
+/// Tile form of [`score_bins`]: adds each point's min-over-levels
+/// contribution for `chain` into `totals[i]`. Level-major — per level the
+/// whole tile's bin rows are hashed once and resolved through
+/// [`CountMinSketch::query_many`], so one CMS block stays cache-hot
+/// across the batch instead of all L blocks thrashing per point. The
+/// per-point fold visits levels in the same ascending order with the
+/// same comparisons as [`score_bins`], so the accumulated totals are
+/// bit-identical to the per-point loop (asserted in tests).
+pub fn score_bins_tile(
+    chain: &TrainedChain,
+    mode: ScoreMode,
+    bins: &[i32],
+    n: usize,
+    totals: &mut [f64],
+) {
+    let k = chain.params.k();
+    let l = chain.params.depth();
+    debug_assert_eq!(bins.len(), n * l * k);
+    debug_assert_eq!(totals.len(), n);
+    let mut best = vec![f64::INFINITY; n];
+    let mut hashes = Vec::with_capacity(n);
+    let mut counts = vec![0u32; n];
+    for (lvl, cms) in chain.cms.iter().enumerate() {
+        hashes.clear();
+        for i in 0..n {
+            hashes.push(bin_hash(&bins[(i * l + lvl) * k..(i * l + lvl + 1) * k]));
+        }
+        cms.query_many(&hashes, &mut counts);
+        for (b, &cnt) in best.iter_mut().zip(counts.iter()) {
+            let c = cnt as f64;
+            let v = match mode {
+                ScoreMode::Extrapolated => (1u64 << (lvl + 1)) as f64 * c,
+                ScoreMode::Log2 => (1.0 + c).log2() + (lvl + 1) as f64,
+            };
+            if v < *b {
+                *b = v;
+            }
+        }
+    }
+    for (t, b) in totals.iter_mut().zip(best) {
+        *t += b;
+    }
+}
+
 /// One trained chain: sampled parameters + per-level CMS counts.
 #[derive(Debug, Clone)]
 pub struct TrainedChain {
@@ -276,7 +321,7 @@ impl SparxModel {
                 for sk in part {
                     flat.extend_from_slice(&sk.s);
                 }
-                let bins = binner.tile_bins(&chain, &flat, n);
+                let bins = binner.tile_bins(&chain, &flat, n)?;
                 let mut counts = vec![0u32; l * r * w];
                 plan::accumulate_counts(&bins, n, l, k, r, w, &mut counts);
                 Ok(vec![counts])
@@ -288,13 +333,13 @@ impl SparxModel {
                 vec![0u32; l * r * w],
                 |mut acc, c| {
                     for (a, b) in acc.iter_mut().zip(c.iter()) {
-                        *a += b;
+                        *a = a.saturating_add(*b);
                     }
                     acc
                 },
                 |mut a, b| {
                     for (x, y) in a.iter_mut().zip(&b) {
-                        *x += y;
+                        *x = x.saturating_add(*y);
                     }
                     a
                 },
@@ -413,7 +458,7 @@ impl SparxModel {
             for sk in part {
                 flat.extend_from_slice(&sk.s);
             }
-            let bins = binner.tile_bins(&chain.params, &flat, n);
+            let bins = binner.tile_bins(&chain.params, &flat, n)?;
             Ok((0..n)
                 .map(|i| score_bins(chain, mode, &bins[i * l * k..(i + 1) * l * k]))
                 .collect())

@@ -28,11 +28,14 @@ pub mod projector;
 pub mod sharded;
 pub mod stream;
 
-pub use chain::{Binner, ChainParams, NativeBinner};
+pub use chain::{
+    kernel_path, tile_bins_reference, tile_bins_scalar, Binner, ChainParams, NativeBinner,
+};
 pub use checkpoint::{AbsorbCheckpoint, AbsorbSnapshot};
 pub use cms::CountMinSketch;
 pub use ensemble::{
-    score_bins, score_bins_overlaid, ScoreMode, SparxModel, SparxParams, TrainedChain,
+    score_bins, score_bins_overlaid, score_bins_tile, ScoreMode, SparxModel, SparxParams,
+    TrainedChain,
 };
 pub use plan::{ChainSet, ExecMode};
 pub use projector::{compute_deltamax, project_dataset, Projector, Sketch};

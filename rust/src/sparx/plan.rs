@@ -28,7 +28,7 @@ use crate::util::Rng;
 
 use super::chain::{Binner, ChainParams};
 use super::cms::CountMinSketch;
-use super::ensemble::{score_bins, SparxModel, SparxParams, TrainedChain};
+use super::ensemble::{score_bins_tile, SparxModel, SparxParams, TrainedChain};
 use super::projector::Sketch;
 
 /// Execution strategy for distributed fit/score.
@@ -111,10 +111,15 @@ pub(crate) fn accumulate_counts(
     for i in 0..n {
         for lvl in 0..l {
             let bin = &bins[(i * l + lvl) * k..(i * l + lvl + 1) * k];
-            let h = crate::hash::bin_hash(bin);
+            // hash once, then derive all r buckets branch-free; counts
+            // saturate (consistent with CountMinSketch) instead of wrapping
+            let mut walk = crate::hash::BucketWalk::new(crate::hash::bin_hash(bin), w);
             let block = &mut counts[lvl * r * w..(lvl + 1) * r * w];
-            for row in 0..r as u32 {
-                block[row as usize * w + crate::hash::cms_bucket_from(h, row, w)] += 1;
+            let mut base = 0usize;
+            for _ in 0..r {
+                let slot = &mut block[base + walk.next_bucket()];
+                *slot = slot.saturating_add(1);
+                base += w;
             }
         }
     }
@@ -197,7 +202,7 @@ impl ChainSet {
                     let mut m0 = 0;
                     while m0 < m {
                         let mc = chunk.min(m - m0);
-                        let bins = binner.tile_bins_multi(&refs[m0..m0 + mc], &flat, n);
+                        let bins = binner.tile_bins_multi(&refs[m0..m0 + mc], &flat, n)?;
                         for j in 0..mc {
                             accumulate_counts(
                                 &bins[j * n * l * k..(j + 1) * n * l * k],
@@ -227,7 +232,7 @@ impl ChainSet {
                                 ns += 1;
                             }
                         }
-                        let bins = binner.tile_bins(chain, &sub, ns);
+                        let bins = binner.tile_bins(chain, &sub, ns)?;
                         accumulate_counts(
                             &bins,
                             ns,
@@ -243,7 +248,7 @@ impl ChainSet {
             },
             |mut a, b| {
                 for (x, y) in a.iter_mut().zip(&b) {
-                    *x += y;
+                    *x = x.saturating_add(*y);
                 }
                 a
             },
@@ -271,9 +276,9 @@ impl ChainSet {
 
 /// Fused score: broadcast the ensemble once, then a single partition
 /// visit flattens the sketch block once, bins chains in ascending chunks,
-/// and folds Eq. (5) per point — min over levels (via [`score_bins`]),
-/// sum over chains in chain order (the per-chain path's exact fold
-/// order), emitting `(id, -avg)` directly.
+/// and folds Eq. (5) per point — min over levels (via the level-major
+/// [`score_bins_tile`] kernel), sum over chains in chain order (the
+/// per-chain path's exact fold order), emitting `(id, -avg)` directly.
 pub(crate) fn score_fused(
     model: &SparxModel,
     ctx: &ClusterContext,
@@ -301,13 +306,13 @@ pub(crate) fn score_fused(
         while m0 < m {
             let mc = chunk.min(m - m0);
             let refs: Vec<&ChainParams> = chains[m0..m0 + mc].iter().map(|c| &c.params).collect();
-            let bins = binner.tile_bins_multi(&refs, &flat, n);
+            let bins = binner.tile_bins_multi(&refs, &flat, n)?;
             for j in 0..mc {
                 let chain = &chains[m0 + j];
-                for (i, t) in totals.iter_mut().enumerate() {
-                    let point = &bins[(j * n + i) * l * k..(j * n + i + 1) * l * k];
-                    *t += score_bins(chain, mode, point);
-                }
+                // level-major tile kernel: same per-point value fold as
+                // score_bins, one CMS cache-hot across the whole tile
+                let span = &bins[j * n * l * k..(j + 1) * n * l * k];
+                score_bins_tile(chain, mode, span, n, &mut totals);
             }
             m0 += mc;
         }

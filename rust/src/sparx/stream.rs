@@ -136,7 +136,10 @@ impl ServedEnsemble {
         crate::api::artifact::encode_projector(&mut enc, &self.projector);
         crate::api::artifact::encode_score_mode(&mut enc, self.mode);
         for chain in &self.chains {
-            crate::api::artifact::encode_chain(&mut enc, chain);
+            // pinned to the v2 (raw-counts) chain encoding: the
+            // fingerprint is a stable identity for "same fitted model",
+            // and must not change when the artifact payload codec does
+            crate::api::artifact::encode_chain(&mut enc, chain, 2);
         }
         crc32(enc.as_slice())
     }

@@ -99,6 +99,40 @@ impl Encoder {
             self.put_f32(x);
         }
     }
+
+    /// LEB128 varint: 7 value bits per byte, high bit = continuation.
+    pub fn put_varint(&mut self, mut v: u64) {
+        while v >= 0x80 {
+            self.buf.push((v as u8 & 0x7F) | 0x80);
+            v >>= 7;
+        }
+        self.buf.push(v as u8);
+    }
+
+    /// Compressed `u32` slice: `u32` element count, then a token stream
+    /// of `varint(value)` where a zero value is followed by
+    /// `varint(run_length)` covering the whole zero run. CMS count
+    /// blocks are dominated by small values and zero runs, so this is
+    /// the artifact-format-v3 payload codec for sketch counts (see
+    /// `crate::api::artifact`). Decode with [`Decoder::u32_vec_packed`].
+    pub fn put_u32_slice_packed(&mut self, v: &[u32]) {
+        self.put_u32(v.len() as u32);
+        let mut i = 0;
+        while i < v.len() {
+            if v[i] == 0 {
+                let mut j = i + 1;
+                while j < v.len() && v[j] == 0 {
+                    j += 1;
+                }
+                self.put_varint(0);
+                self.put_varint((j - i) as u64);
+                i = j;
+            } else {
+                self.put_varint(v[i] as u64);
+                i += 1;
+            }
+        }
+    }
 }
 
 /// Bounds-checked binary reader over a byte slice. Every accessor
@@ -193,6 +227,51 @@ impl<'a> Decoder<'a> {
             return Err(format!("truncated f32 slice: {n} elements declared"));
         }
         (0..n).map(|_| self.f32()).collect()
+    }
+
+    /// LEB128 varint (≤ 10 bytes; rejects encodings past 64 bits).
+    pub fn varint(&mut self) -> CodecResult<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.u8()?;
+            if shift > 63 || (shift == 63 && (byte & 0x7F) > 1) {
+                return Err("varint overflows u64".into());
+            }
+            v |= ((byte & 0x7F) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    /// Decode [`Encoder::put_u32_slice_packed`]. `max_len` caps the
+    /// declared element count so a hostile length cannot allocate out of
+    /// thin air (callers pass the exact count they expect, e.g. `r·w`).
+    pub fn u32_vec_packed(&mut self, max_len: usize) -> CodecResult<Vec<u32>> {
+        let n = self.u32()? as usize;
+        if n > max_len {
+            return Err(format!("packed u32 slice declares {n} elements, cap is {max_len}"));
+        }
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let v = self.varint()?;
+            if v == 0 {
+                let run = self.varint()? as usize;
+                if run == 0 || run > n - out.len() {
+                    return Err(format!(
+                        "zero run of {run} overflows the declared length {n}"
+                    ));
+                }
+                out.resize(out.len() + run, 0);
+            } else if v > u32::MAX as u64 {
+                return Err(format!("packed value {v} exceeds u32"));
+            } else {
+                out.push(v as u32);
+            }
+        }
+        Ok(out)
     }
 
     /// Assert the reader consumed everything (catches layout drift).
@@ -291,6 +370,86 @@ mod tests {
         let mut d = Decoder::new(&bytes);
         d.u8().unwrap();
         assert!(d.finish().is_err());
+    }
+
+    #[test]
+    fn varint_round_trips_and_known_encodings() {
+        let mut e = Encoder::new();
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            e.put_varint(v);
+        }
+        let bytes = e.into_bytes();
+        let mut d = Decoder::new(&bytes);
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            assert_eq!(d.varint().unwrap(), v);
+        }
+        assert!(d.finish().is_ok());
+        // canonical encodings: single byte below 128, LEB128 for 300
+        let mut e = Encoder::new();
+        e.put_varint(300);
+        assert_eq!(e.as_slice(), &[0xAC, 0x02]);
+        // an 11-byte continuation chain overflows u64 → typed error
+        let mut d = Decoder::new(&[0xFF; 11]);
+        assert!(d.varint().is_err());
+    }
+
+    #[test]
+    fn packed_u32_round_trips() {
+        let cases: Vec<Vec<u32>> = vec![
+            vec![],
+            vec![0],
+            vec![0; 1000],
+            vec![1, 2, 3],
+            vec![0, 0, 5, 0, 0, 0, 7, u32::MAX, 0],
+            (0..500).map(|i| if i % 7 == 0 { i } else { 0 }).collect(),
+        ];
+        for v in &cases {
+            let mut e = Encoder::new();
+            e.put_u32_slice_packed(v);
+            let bytes = e.into_bytes();
+            let mut d = Decoder::new(&bytes);
+            assert_eq!(&d.u32_vec_packed(v.len()).unwrap(), v);
+            assert!(d.finish().is_ok());
+        }
+        // sparse data compresses well below the 4-bytes-per-element raw form
+        let sparse = vec![0u32; 10_000];
+        let mut e = Encoder::new();
+        e.put_u32_slice_packed(&sparse);
+        assert!(e.len() < 16, "10k zeros should pack to a few bytes, got {}", e.len());
+    }
+
+    #[test]
+    fn packed_u32_rejects_hostile_payloads() {
+        // declared count above the caller's cap
+        let mut e = Encoder::new();
+        e.put_u32_slice_packed(&[1, 2, 3]);
+        let bytes = e.into_bytes();
+        assert!(Decoder::new(&bytes).u32_vec_packed(2).is_err());
+        // zero run overflowing the declared length
+        let mut e = Encoder::new();
+        e.put_u32(2); // declares 2 elements
+        e.put_varint(0);
+        e.put_varint(100); // ...but a 100-long zero run
+        let bytes = e.into_bytes();
+        assert!(Decoder::new(&bytes).u32_vec_packed(10).is_err());
+        // zero-length zero run is malformed
+        let mut e = Encoder::new();
+        e.put_u32(1);
+        e.put_varint(0);
+        e.put_varint(0);
+        let bytes = e.into_bytes();
+        assert!(Decoder::new(&bytes).u32_vec_packed(10).is_err());
+        // value past u32::MAX
+        let mut e = Encoder::new();
+        e.put_u32(1);
+        e.put_varint(u32::MAX as u64 + 1);
+        let bytes = e.into_bytes();
+        assert!(Decoder::new(&bytes).u32_vec_packed(10).is_err());
+        // truncated token stream surfaces as an error, not a panic
+        let mut e = Encoder::new();
+        e.put_u32_slice_packed(&[9, 9, 9]);
+        let bytes = e.into_bytes();
+        assert!(Decoder::new(&bytes[..bytes.len() - 1]).u32_vec_packed(3).is_err());
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Cross-path equality tests for the hot-path kernels: the dispatched
+//! (AVX2-where-available) binning kernel, the floor-cache scalar kernel
+//! and the per-point reference loop must agree bit-for-bit on every
+//! shape and every value class (including NaN / ±∞ / overflow-range
+//! inputs); the quantized CMS counters must be indistinguishable from
+//! plain u32 counters through both width promotions; and the packed
+//! artifact codec, the fused execution plan and the sharded serving
+//! front-end must all leave score bits unchanged.
+
+use std::collections::HashMap;
+
+use sparx::api::{registry, Detector as _, FittedModel as _, SparxBuilder};
+use sparx::cluster::ClusterConfig;
+use sparx::data::generators::GisetteGen;
+use sparx::data::{StreamGen, UpdateTriple};
+use sparx::hash::bin_hash;
+use sparx::sparx::chain::Binner;
+use sparx::sparx::{
+    kernel_path, tile_bins_reference, tile_bins_scalar, ChainParams, CountMinSketch, ExecMode,
+    NativeBinner, ShardedStreamScorer, SparxModel, SparxParams, StreamScorer,
+};
+use sparx::util::codec::{Decoder, Encoder};
+use sparx::util::Rng;
+
+/// Reference loop, scalar kernel and runtime-dispatched kernel agree
+/// bit-for-bit across shapes chosen to straddle the SIMD lane width
+/// (K = 1..33 around the 8-lane boundary), degenerate tiles (n = 0, 1)
+/// and hostile value classes (NaN, ±∞, values past the i32 cast range).
+#[test]
+fn kernels_agree_bitwise_across_edge_shapes() {
+    let mut rng = Rng::new(0xD15);
+    let shapes = [
+        (1, 1, 1),
+        (1, 4, 3),
+        (7, 3, 5),
+        (8, 1, 2),
+        (9, 20, 1),
+        (16, 8, 8),
+        (33, 5, 17),
+        (4, 2, 0),
+    ];
+    for &(k, l, n) in &shapes {
+        for case in 0..4 {
+            let delta: Vec<f32> = (0..k).map(|_| rng.range_f64(0.25, 4.0) as f32).collect();
+            let chain = ChainParams::sample(&delta, l, &mut rng);
+            let mut s: Vec<f32> = (0..n * k).map(|_| (rng.normal() * 3.0) as f32).collect();
+            if case == 3 && s.len() >= 4 {
+                s[0] = f32::NAN;
+                s[1] = f32::INFINITY;
+                s[2] = f32::NEG_INFINITY;
+                s[3] = 3.0e38;
+            }
+            let reference = tile_bins_reference(&chain, &s, n);
+            let scalar = tile_bins_scalar(&chain, &s, n);
+            let dispatched = NativeBinner.tile_bins(&chain, &s, n).unwrap();
+            assert_eq!(scalar, reference, "scalar: K={k} L={l} n={n} case={case}");
+            assert_eq!(
+                dispatched,
+                reference,
+                "dispatched ({}): K={k} L={l} n={n} case={case}",
+                kernel_path()
+            );
+        }
+    }
+}
+
+/// The fused executors hand `tile_bins_multi` chains of *different*
+/// depths after per-chain subsampling; the chain-major output must equal
+/// the per-chain reference loop, concatenated.
+#[test]
+fn tile_bins_multi_matches_per_chain_reference_with_mixed_depths() {
+    let mut rng = Rng::new(0xB00);
+    let k = 13;
+    let delta: Vec<f32> = (0..k).map(|_| rng.range_f64(0.5, 2.0) as f32).collect();
+    let chains: Vec<ChainParams> =
+        [1usize, 3, 8, 20, 5].iter().map(|&l| ChainParams::sample(&delta, l, &mut rng)).collect();
+    let refs: Vec<&ChainParams> = chains.iter().collect();
+    let n = 19;
+    let s: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+    let multi = NativeBinner.tile_bins_multi(&refs, &s, n).unwrap();
+    let mut concat = Vec::new();
+    for c in &chains {
+        concat.extend(tile_bins_reference(c, &s, n));
+    }
+    assert_eq!(multi, concat);
+}
+
+/// Quantized counters (u8 → u16 → u32 promote-on-overflow) report the
+/// exact same counts as unbounded arithmetic through both promotion
+/// boundaries, and the batched query path agrees with the pointwise one.
+#[test]
+fn quantized_counters_match_exact_counts_through_promotions() {
+    // one hot key pushed through 255 (u8 edge) and 65535 (u16 edge)
+    let mut cms = CountMinSketch::new(4, 32);
+    let hot = vec![3i32, -7, 11];
+    let h = bin_hash(&hot);
+    for milestone in [255u32, 256, 65_535, 65_536, 70_000] {
+        while cms.query(&hot) < milestone {
+            cms.insert(&hot);
+        }
+        assert_eq!(cms.query(&hot), milestone, "promotion changed a count");
+        let mut out = [0u32; 1];
+        cms.query_many(&[h], &mut out);
+        assert_eq!(out[0], milestone, "batched query diverged at {milestone}");
+    }
+
+    // a random workload: batched == pointwise, and never underestimates
+    let mut rng = Rng::new(0x5EED);
+    let mut cms = CountMinSketch::new(6, 128);
+    let mut truth: HashMap<Vec<i32>, u32> = HashMap::new();
+    let keys: Vec<Vec<i32>> =
+        (0..80).map(|_| (0..4).map(|_| rng.below(30) as i32 - 15).collect()).collect();
+    for _ in 0..3000 {
+        let key = &keys[rng.below(80) as usize];
+        cms.insert(key);
+        *truth.entry(key.clone()).or_insert(0) += 1;
+    }
+    let hashes: Vec<_> = keys.iter().map(|b| bin_hash(b)).collect();
+    let mut out = vec![0u32; keys.len()];
+    cms.query_many(&hashes, &mut out);
+    for (i, key) in keys.iter().enumerate() {
+        assert_eq!(out[i], cms.query(key), "batched vs pointwise at key {i}");
+        assert!(out[i] >= truth.get(key).copied().unwrap_or(0), "underestimate at key {i}");
+    }
+}
+
+/// The packed (varint + zero-RLE) count codec round-trips arbitrary
+/// spiky count vectors and actually compresses the sparse ones.
+#[test]
+fn packed_count_codec_round_trips_and_compresses() {
+    let mut rng = Rng::new(0xC0DE);
+    for case in 0..50 {
+        let n = rng.below(3000) as usize;
+        let counts: Vec<u32> = (0..n)
+            .map(|_| match rng.below(10) {
+                0..=6 => 0,
+                7 => rng.below(200) as u32,
+                8 => rng.below(70_000) as u32,
+                _ => u32::MAX - rng.below(3) as u32,
+            })
+            .collect();
+        let mut enc = Encoder::new();
+        enc.put_u32_slice_packed(&counts);
+        let bytes = enc.into_bytes();
+        let mut dec = Decoder::new(&bytes);
+        let back = dec.u32_vec_packed(n).unwrap();
+        assert_eq!(back, counts, "case {case} (n={n})");
+        assert_eq!(dec.remaining(), 0, "case {case}: trailing bytes");
+    }
+    // mostly-zero vectors (the CMS regime) must shrink well below 4B/cell
+    let sparse = vec![0u32; 10_000];
+    let mut enc = Encoder::new();
+    enc.put_u32_slice_packed(&sparse);
+    assert!(enc.into_bytes().len() < 16, "zero-run encoding regressed");
+}
+
+/// End-to-end codec contract on the public API: a model saved through
+/// the v3 (packed-count) artifact format scores bit-identically after
+/// `registry::load_bytes`, and `model_bytes` matches the payload it
+/// ships.
+#[test]
+fn scores_survive_artifact_roundtrip_bit_identically() {
+    let ctx = ClusterConfig { num_partitions: 4, ..Default::default() }.build();
+    let ld = GisetteGen { n: 400, d: 48, ..Default::default() }.generate(&ctx).unwrap();
+    let det = SparxBuilder::new().k(12).chains(8).depth(6).build().unwrap();
+    let model = det.fit(&ctx, &ld.dataset).unwrap();
+    let before = model.score(&ctx, &ld.dataset).unwrap();
+
+    let art = model.to_artifact().unwrap();
+    assert_eq!(art.payload.len(), model.model_bytes(), "model_bytes contract");
+    let bytes = art.to_bytes();
+    let loaded = registry::load_bytes(&bytes).unwrap();
+    let after = loaded.score(&ctx, &ld.dataset).unwrap();
+    assert_eq!(before.len(), after.len());
+    for (b, a) in before.iter().zip(&after) {
+        assert_eq!(b.0, a.0, "row ids must line up");
+        assert_eq!(b.1.to_bits(), a.1.to_bits(), "score bits changed for id {}", b.0);
+    }
+}
+
+/// The fused single-pass plan and the legacy one-round-per-chain plan
+/// produce bit-identical scores (re-run on top of the batched CMS and
+/// dispatched binning kernels).
+#[test]
+fn fused_and_per_chain_plans_score_identically() {
+    let ctx = ClusterConfig { num_partitions: 6, num_workers: 3, ..Default::default() }.build();
+    let ld = GisetteGen { n: 500, d: 64, ..Default::default() }.generate(&ctx).unwrap();
+    let mut outs = Vec::new();
+    for mode in ExecMode::ALL {
+        let p = SparxParams {
+            k: 16,
+            num_chains: 12,
+            depth: 8,
+            exec_mode: mode,
+            ..Default::default()
+        };
+        let model = SparxModel::fit(&ctx, &ld.dataset, &p).unwrap();
+        outs.push(model.score_dataset(&ctx, &ld.dataset).unwrap());
+    }
+    assert_eq!(outs[0], outs[1], "fused vs per-chain scores diverged");
+}
+
+/// Sharded serving determinism, re-run on top of the new kernels: per-ID
+/// score sequences at S = 4 are bit-identical to the single-threaded
+/// scorer in the no-eviction regime.
+#[test]
+fn sharded_per_id_scores_still_bit_identical_over_new_kernels() {
+    let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+    let ld = GisetteGen { n: 400, d: 24, ..Default::default() }.generate(&ctx).unwrap();
+    let model = SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 12, num_chains: 10, depth: 6, ..Default::default() },
+    )
+    .unwrap();
+    let names: Vec<String> = (0..24).map(|j| format!("f{j}")).collect();
+    let mut gen = StreamGen::new(200, names, 0xFACE);
+    let updates: Vec<UpdateTriple> = (0..4000).map(|_| gen.next_update()).collect();
+
+    let mut reference = StreamScorer::new(&model, 4096).unwrap();
+    let mut want: HashMap<u64, Vec<u64>> = HashMap::new();
+    for u in &updates {
+        let s = reference.update(u);
+        want.entry(s.id).or_default().push(s.outlierness.to_bits());
+    }
+    assert_eq!(reference.evictions(), 0, "harness requires the no-eviction regime");
+
+    let mut scorer = ShardedStreamScorer::recording(&model, 4, 4096).unwrap();
+    for u in updates.clone() {
+        scorer.submit(u);
+    }
+    let report = scorer.finish();
+    assert_eq!(report.processed(), updates.len() as u64);
+    let mut got: HashMap<u64, Vec<u64>> = HashMap::new();
+    for (_, s) in report.scores.into_iter().flatten() {
+        got.entry(s.id).or_default().push(s.outlierness.to_bits());
+    }
+    assert_eq!(got, want, "sharded per-ID score bits diverged from S=1");
+}

@@ -143,7 +143,7 @@ fn prop_binning_invariants() {
         // tile == per-point
         let n = 1 + rng.below(40) as usize;
         let flat: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
-        let tiled = NativeBinner.tile_bins(&chain, &flat, n);
+        let tiled = NativeBinner.tile_bins(&chain, &flat, n).unwrap();
         for i in 0..n {
             assert_eq!(
                 &tiled[i * l * k..(i + 1) * l * k],
