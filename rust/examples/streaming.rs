@@ -128,7 +128,7 @@ fn main() {
     // cut a durable checkpoint of the mutable half (LRU sketches +
     // absorbed deltas + counters) — what `sparx serve --checkpoint-out`
     // writes and `--resume` restores bit-identically
-    let checkpoint = sharded.checkpoint();
+    let checkpoint = sharded.checkpoint().unwrap();
     let report = sharded.finish();
     let dt2 = t0.elapsed().as_secs_f64();
     println!(

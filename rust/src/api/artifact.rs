@@ -168,16 +168,16 @@ impl ModelArtifact {
         if bytes.len() < MAGIC.len() + 2 + 4 + 4 + 4 + 4 {
             return Err(corrupt("file too short to be a sparx model artifact"));
         }
-        if bytes[..MAGIC.len()] != MAGIC {
+        if !bytes.starts_with(&MAGIC) {
             return Err(corrupt("bad magic (not a sparx model artifact)"));
         }
+        let parse = |e: String| corrupt(&e);
         let (body, tail) = bytes.split_at(bytes.len() - 4);
-        let stored = u32::from_le_bytes(tail.try_into().expect("4-byte tail"));
+        let stored = Decoder::new(tail).u32().map_err(parse)?;
         if crc32(body) != stored {
             return Err(corrupt("checksum mismatch (corrupt or truncated artifact)"));
         }
         let mut dec = Decoder::new(body);
-        let parse = |e: String| corrupt(&e);
         dec.take(MAGIC.len()).map_err(parse)?;
         let version = dec.u16().map_err(parse)?;
         if !(1..=FORMAT_VERSION).contains(&version) {
@@ -487,14 +487,19 @@ const MAX_DENSE_R_ENTRIES: usize = 1 << 30;
 /// than shipped. Positional schemas (`f0..f{d-1}`) compress to a single
 /// dimension count.
 pub(crate) fn encode_projector(enc: &mut Encoder, proj: &Projector) {
-    if proj.is_identity() {
-        enc.put_u8(PROJ_IDENTITY);
-        enc.put_usize(proj.out_dim());
-        return;
-    }
+    // `density()` is `None` exactly when the projector is the identity,
+    // so matching on it covers both arms without a panic path.
+    let density = match proj.density() {
+        None => {
+            enc.put_u8(PROJ_IDENTITY);
+            enc.put_usize(proj.out_dim());
+            return;
+        }
+        Some(d) => d,
+    };
     enc.put_u8(PROJ_HASHING);
     enc.put_usize(proj.k());
-    enc.put_f64(proj.density().expect("hashing projector has hashers"));
+    enc.put_f64(density);
     match proj.dense_schema() {
         None => enc.put_u8(SCHEMA_NONE),
         Some(names) => {

@@ -163,7 +163,7 @@ impl ITree {
     /// artifact can never send `path_length` out of bounds — children
     /// must point strictly *forward* (as `fit` builds them), which also
     /// rules out cycles that would hang traversal.
-    pub fn decode(dec: &mut Decoder) -> CodecResult<ITree> {
+    pub(crate) fn decode(dec: &mut Decoder) -> CodecResult<ITree> {
         let sample_size = dec.usize()?;
         let n = dec.u32()? as usize;
         if n == 0 {

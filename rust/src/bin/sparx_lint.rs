@@ -1,0 +1,70 @@
+//! Repo-invariant linter (see [`sparx::lint`]): scans `src/` for
+//! violations of the no-panic / unsafe-whitelist / error-taxonomy /
+//! CMS-encapsulation rules and exits non-zero when any are found.
+//!
+//! ```text
+//! cargo run --bin sparx_lint            # human output, exit 1 on findings
+//! cargo run --bin sparx_lint -- --json  # machine output (CI step summary)
+//! sparx_lint --root path/to/src         # lint another tree (self-tests)
+//! ```
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: sparx_lint [--json] [--root <src-dir>]";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut json = false;
+    let mut root: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => match it.next() {
+                Some(r) => root = Some(r.clone()),
+                None => {
+                    eprintln!("sparx_lint: --root needs a path\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}\n\nrules:");
+                for rule in sparx::lint::rules() {
+                    println!("  {:<20} {}", rule.name, rule.description);
+                }
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("sparx_lint: unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // default: this crate's own src/ (compiled in, so the binary works
+    // from any cwd — CI runs it from the workspace root)
+    let root = root.unwrap_or_else(|| concat!(env!("CARGO_MANIFEST_DIR"), "/src").to_string());
+    let findings = match sparx::lint::run_dir(std::path::Path::new(&root)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("sparx_lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        println!("{}", sparx::lint::to_json(&findings));
+    } else if findings.is_empty() {
+        println!("sparx_lint: clean ({} rules over {root})", sparx::lint::rules().len());
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        }
+        println!("sparx_lint: {} finding(s)", findings.len());
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

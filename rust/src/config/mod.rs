@@ -106,10 +106,11 @@ impl ClusterConfigFile {
         ])
     }
 
-    pub fn load(path: &std::path::Path) -> std::io::Result<Self> {
+    pub fn load(path: &std::path::Path) -> crate::api::Result<Self> {
         let text = std::fs::read_to_string(path)?;
-        let j = Json::parse(&text)
-            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        let j = Json::parse(&text).map_err(|e| {
+            crate::api::SparxError::InvalidParams(format!("{}: {e}", path.display()))
+        })?;
         Ok(Self::from_json(&j))
     }
 }

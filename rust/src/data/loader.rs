@@ -156,12 +156,13 @@ pub fn write_scores_csv(
     path: impl AsRef<Path>,
     scores: &[(u64, f64)],
     labels: &[bool],
-) -> std::io::Result<()> {
+) -> crate::api::Result<()> {
     use std::io::Write;
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     writeln!(f, "id,score,label")?;
     for &(id, s) in scores {
-        writeln!(f, "{id},{s},{}", u8::from(labels[id as usize]))?;
+        let label = labels.get(id as usize).copied().unwrap_or(false);
+        writeln!(f, "{id},{s},{}", u8::from(label))?;
     }
     Ok(())
 }

@@ -80,6 +80,19 @@
 //! `--updates file`). See `rust/examples/model_lifecycle.rs` for the
 //! library version end to end.
 
+// Correctness posture (see ARCHITECTURE.md "Correctness tooling"):
+// `unsafe` is opt-in per module — only the two whitelisted kernel
+// modules (`sparx::chain`, `cluster::pool`) re-enable it — and every
+// unsafe operation inside an `unsafe fn` still needs its own block.
+// `unreachable_pub` keeps the public surface honest so the artifact /
+// serving APIs stay the only entry points. The repo-specific invariants
+// the compiler can't see (no-panic decode paths, SAFETY comments, error
+// taxonomy, CMS encapsulation) are enforced by `cargo run --bin
+// sparx_lint` ([`lint`]).
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+#![deny(unreachable_pub)]
+
 pub mod api;
 pub mod baselines;
 pub mod cluster;
@@ -87,9 +100,11 @@ pub mod config;
 pub mod data;
 pub mod experiments;
 pub mod hash;
+pub mod lint;
 pub mod metrics;
 pub mod runtime;
 pub mod sparx;
+pub mod testing;
 pub mod util;
 
 pub use api::{

@@ -1,0 +1,471 @@
+//! `sparx-lint`: repo-invariant lints the compiler can't express.
+//!
+//! A zero-dependency source scanner (run as `cargo run --bin
+//! sparx_lint`, blocking in CI) enforcing four rules over `src/`:
+//!
+//! * **no-panic-paths** — the load/serve/decode files must not contain
+//!   `unwrap`/`expect`/`panic!`-family macros or slice indexing that can
+//!   panic; corrupt input and shard failure surface as typed
+//!   [`SparxError`](crate::api::SparxError)s, never a crash.
+//! * **unsafe-whitelist** — `unsafe` only in the two kernel modules
+//!   (`sparx/chain.rs`, `cluster/pool.rs`), each site preceded by a
+//!   `// SAFETY:` comment (or a `# Safety` doc section).
+//! * **error-taxonomy** — plain-`pub` functions must not leak
+//!   `std::io::Error`/`io::Result` or the internal `CodecResult`; the
+//!   crate's fallible surface is `SparxError`.
+//! * **cms-encapsulation** — raw `CountMinSketch` counter access
+//!   (`counts_u32`) stays inside `sparx/cms.rs` and the artifact codec;
+//!   everything else goes through insert/query so the quantized-counter
+//!   invariants hold.
+//!
+//! Rules match on *masked* source (comments, strings and `#[cfg(test)]
+//! mod` bodies blanked by [`scanner`]), so test code and literals never
+//! trip them. A deliberate exception is escaped inline with
+//! `// lint:allow(rule-name)` on the offending line or the line above —
+//! each escape is a reviewed invariant, not a suppression dump.
+//!
+//! Adding a rule: write a `fn(&SourceFile, &mut Vec<Finding>)`, add a
+//! `Rule` entry to [`rules`], and seed a violation in
+//! `rust/tests/lint.rs` so the self-test proves the rule fires.
+
+mod scanner;
+
+use std::path::Path;
+
+/// Files where panicking constructs are forbidden (the load/serve/decode
+/// paths; `main.rs` is the CLI binary root).
+const NO_PANIC_PATHS: &[&str] = &[
+    "api/artifact.rs",
+    "api/registry.rs",
+    "util/codec.rs",
+    "sparx/checkpoint.rs",
+    "sparx/sharded.rs",
+    "main.rs",
+];
+
+/// The only modules allowed to contain `unsafe` (the AVX2 binning kernel
+/// and the pool's direct `clock_gettime` call).
+const UNSAFE_WHITELIST: &[&str] = &["sparx/chain.rs", "cluster/pool.rs"];
+
+/// Files allowed to touch raw CMS counters: the sketch itself and the
+/// artifact codec that serializes it.
+const CMS_COUNTER_ALLOW: &[&str] = &["sparx/cms.rs", "api/artifact.rs"];
+
+/// Files exempt from the error-taxonomy rule: the codec layer *defines*
+/// `CodecResult`, and the error module defines the `From<io::Error>`
+/// mapping.
+const TAXONOMY_EXEMPT: &[&str] = &["util/codec.rs", "api/error.rs"];
+
+/// Panic-capable tokens matched verbatim on masked source. `.unwrap_or*`
+/// and `.expect_err` do not match (different token tails).
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+/// Keywords that legitimately precede `[` (array literals, `for … in
+/// […]`), excluded from the indexing heuristic.
+const INDEX_KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "static", "struct", "unsafe", "use", "where", "while", "yield",
+];
+
+/// One lint violation: rule, file (relative to `src/`), 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// A registered lint rule.
+pub struct Rule {
+    pub name: &'static str,
+    pub description: &'static str,
+    check: fn(&SourceFile, &mut Vec<Finding>),
+}
+
+/// The rule registry, in reporting order.
+pub fn rules() -> &'static [Rule] {
+    &[
+        Rule {
+            name: "no-panic-paths",
+            description: "load/serve/decode paths must not unwrap/expect/panic or index slices",
+            check: check_no_panic_paths,
+        },
+        Rule {
+            name: "unsafe-whitelist",
+            description: "unsafe only in sparx/chain.rs + cluster/pool.rs, with // SAFETY:",
+            check: check_unsafe_whitelist,
+        },
+        Rule {
+            name: "error-taxonomy",
+            description: "pub fns return SparxError-based results, no io::Error/CodecResult leaks",
+            check: check_error_taxonomy,
+        },
+        Rule {
+            name: "cms-encapsulation",
+            description: "raw CMS counter access only in sparx/cms.rs and the artifact codec",
+            check: check_cms_encapsulation,
+        },
+    ]
+}
+
+/// One source file prepared for rule matching.
+pub struct SourceFile {
+    /// Path relative to the scanned root, `/`-separated.
+    pub rel: String,
+    /// Unmodified source (SAFETY-comment checks and escape comments read
+    /// this — comments are invisible on the masked text).
+    pub raw: String,
+    /// Comments, literals and test-mod bodies blanked; same offsets.
+    masked: String,
+}
+
+impl SourceFile {
+    pub fn new(rel: &str, raw: &str) -> SourceFile {
+        let masked = scanner::strip_test_mods(&scanner::mask(raw));
+        SourceFile { rel: rel.to_string(), raw: raw.to_string(), masked }
+    }
+
+    fn line_of(&self, offset: usize) -> usize {
+        self.masked.as_bytes().iter().take(offset).filter(|&&c| c == b'\n').count() + 1
+    }
+
+    fn raw_line(&self, line: usize) -> &str {
+        self.raw.lines().nth(line.saturating_sub(1)).unwrap_or("")
+    }
+}
+
+/// Lint one file's source text with every registered rule, honouring
+/// `// lint:allow(rule)` escapes. `rel` is the path relative to `src/`.
+pub fn check_source(rel: &str, raw: &str) -> Vec<Finding> {
+    let sf = SourceFile::new(rel, raw);
+    let mut findings = Vec::new();
+    for rule in rules() {
+        (rule.check)(&sf, &mut findings);
+    }
+    findings.retain(|f| !escaped(&sf, f));
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+fn escaped(sf: &SourceFile, f: &Finding) -> bool {
+    let marker = format!("lint:allow({})", f.rule);
+    sf.raw_line(f.line).contains(&marker)
+        || (f.line > 1 && sf.raw_line(f.line - 1).contains(&marker))
+}
+
+/// Lint every `.rs` file under `root` (normally the crate's `src/`).
+/// Deterministic: files are visited in sorted order.
+pub fn run_dir(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for path in files {
+        let raw = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        findings.extend(check_source(&rel, &raw));
+    }
+    Ok(findings)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- rules
+
+fn check_no_panic_paths(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !NO_PANIC_PATHS.contains(&sf.rel.as_str()) {
+        return;
+    }
+    for token in PANIC_TOKENS {
+        for (at, _) in sf.masked.match_indices(token) {
+            out.push(Finding {
+                rule: "no-panic-paths",
+                file: sf.rel.clone(),
+                line: sf.line_of(at),
+                message: format!("`{token}` on a load/serve/decode path — return a typed error"),
+            });
+        }
+    }
+    let b = sf.masked.as_bytes();
+    let is_ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    for (p, &c) in b.iter().enumerate() {
+        if c != b'[' || p == 0 {
+            continue;
+        }
+        let prev = b[p - 1];
+        if !(is_ident(prev) || prev == b')' || prev == b']') {
+            continue;
+        }
+        let mut s = p;
+        while s > 0 && is_ident(b[s - 1]) {
+            s -= 1;
+        }
+        let word = &sf.masked[s..p];
+        if INDEX_KEYWORDS.contains(&word) {
+            continue;
+        }
+        out.push(Finding {
+            rule: "no-panic-paths",
+            file: sf.rel.clone(),
+            line: sf.line_of(p),
+            message: format!(
+                "slice/array indexing can panic on a load/serve/decode path \
+                 (`{}[`) — use .get()/.get_mut()",
+                if word.is_empty() { "…" } else { word }
+            ),
+        });
+    }
+}
+
+fn check_unsafe_whitelist(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let b = sf.masked.as_bytes();
+    let is_ident = |c: u8| c == b'_' || c.is_ascii_alphanumeric();
+    for (at, token) in sf.masked.match_indices("unsafe") {
+        // word boundaries: skip `unsafe_code`, `unused_unsafe`, …
+        if at > 0 && is_ident(b[at - 1]) {
+            continue;
+        }
+        let end = at + token.len();
+        if end < b.len() && is_ident(b[end]) {
+            continue;
+        }
+        let line = sf.line_of(at);
+        if !UNSAFE_WHITELIST.contains(&sf.rel.as_str()) {
+            out.push(Finding {
+                rule: "unsafe-whitelist",
+                file: sf.rel.clone(),
+                line,
+                message: "`unsafe` outside the whitelisted kernel modules \
+                          (sparx/chain.rs, cluster/pool.rs)"
+                    .to_string(),
+            });
+            continue;
+        }
+        if !has_safety_comment(sf, line) {
+            out.push(Finding {
+                rule: "unsafe-whitelist",
+                file: sf.rel.clone(),
+                line,
+                message: "`unsafe` without a preceding `// SAFETY:` comment \
+                          (or `# Safety` doc section)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Scan upward from the `unsafe` site over contiguous comment / attribute
+/// / blank lines, looking for a SAFETY marker.
+fn has_safety_comment(sf: &SourceFile, line: usize) -> bool {
+    let mentions_safety = |l: &str| l.contains("SAFETY") || l.contains("Safety");
+    if mentions_safety(sf.raw_line(line)) {
+        return true;
+    }
+    let mut cur = line;
+    while cur > 1 {
+        cur -= 1;
+        let t = sf.raw_line(cur).trim_start();
+        let is_context = t.is_empty()
+            || t.starts_with("//")
+            || t.starts_with("#[")
+            || t.starts_with("#!")
+            || t.starts_with("/*")
+            || t.starts_with('*');
+        if !is_context {
+            return false;
+        }
+        if mentions_safety(t) {
+            return true;
+        }
+    }
+    false
+}
+
+fn check_error_taxonomy(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if TAXONOMY_EXEMPT.contains(&sf.rel.as_str()) {
+        return;
+    }
+    for (at, _) in sf.masked.match_indices("pub fn ") {
+        let sig_end = sf.masked[at..]
+            .find(|c| c == '{' || c == ';')
+            .map_or(sf.masked.len(), |rel| at + rel);
+        let sig = &sf.masked[at..sig_end];
+        for leak in ["io::Error", "io::Result", "CodecResult"] {
+            if sig.contains(leak) {
+                out.push(Finding {
+                    rule: "error-taxonomy",
+                    file: sf.rel.clone(),
+                    line: sf.line_of(at),
+                    message: format!(
+                        "public fn signature leaks `{leak}` — the crate's fallible surface \
+                         is `SparxError` (api::Result)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn check_cms_encapsulation(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if CMS_COUNTER_ALLOW.contains(&sf.rel.as_str()) {
+        return;
+    }
+    for (at, _) in sf.masked.match_indices("counts_u32(") {
+        out.push(Finding {
+            rule: "cms-encapsulation",
+            file: sf.rel.clone(),
+            line: sf.line_of(at),
+            message: "raw CountMinSketch counter access outside sparx/cms.rs — go through \
+                      insert/query so the quantized-counter invariants hold"
+                .to_string(),
+        });
+    }
+}
+
+// -------------------------------------------------------------- output
+
+/// Serialize findings as JSON (hand-rolled — the crate is
+/// dependency-free): `{"count":N,"findings":[{rule,file,line,message}]}`.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut s = String::from("{\"count\":");
+    s.push_str(&findings.len().to_string());
+    s.push_str(",\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("{\"rule\":\"");
+        s.push_str(&json_escape(f.rule));
+        s.push_str("\",\"file\":\"");
+        s.push_str(&json_escape(&f.file));
+        s.push_str("\",\"line\":");
+        s.push_str(&f.line.to_string());
+        s.push_str(",\"message\":\"");
+        s.push_str(&json_escape(&f.message));
+        s.push_str("\"}");
+    }
+    s.push_str("]}");
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_snippet_passes() {
+        let src = "pub fn ok(v: &[u8]) -> Option<u8> { v.first().copied() }\n";
+        assert!(check_source("api/artifact.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_flagged_only_in_scope() {
+        let src = "fn f(v: Option<u8>) -> u8 { v.unwrap() }\n";
+        assert_eq!(check_source("util/codec.rs", src).len(), 1);
+        assert!(check_source("metrics/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn indexing_heuristic() {
+        let hit = "fn f(v: &[u8]) -> u8 { v[0] }\n";
+        let findings = check_source("sparx/sharded.rs", hit);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        // keywords, macros, array types and literals don't trip it
+        let clean = "fn g() { let v = vec![0u8; 4]; for _x in [1, 2] {} \
+                     let _t: [u8; 2] = [0, 0]; }\n";
+        assert!(check_source("sparx/sharded.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn escape_comment_honoured() {
+        let src =
+            "fn f(v: Option<u8>) -> u8 {\n    // lint:allow(no-panic-paths)\n    v.unwrap()\n}\n";
+        assert!(check_source("main.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_rules() {
+        let bare = "fn f() { unsafe { std::hint::unreachable_unchecked() } }\n";
+        let out = check_source("sparx/plan.rs", bare);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "unsafe-whitelist");
+        // whitelisted module still needs the SAFETY comment
+        let out = check_source("sparx/chain.rs", bare);
+        assert_eq!(out.len(), 1, "{out:?}");
+        let commented = "fn f() {\n    // SAFETY: provably unreachable\n    \
+                         unsafe { std::hint::unreachable_unchecked() }\n}\n";
+        assert!(check_source("sparx/chain.rs", commented).is_empty());
+    }
+
+    #[test]
+    fn taxonomy_and_cms() {
+        let leak = "pub fn save(p: &str) -> std::io::Result<()> \
+                    { std::fs::write(p, b\"\").map(|_| ()) }\n";
+        let out = check_source("data/loader.rs", leak);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "error-taxonomy");
+        let poke = "fn f(c: &CountMinSketch) -> Vec<u32> { c.counts_u32() }\n";
+        let out = check_source("sparx/plan.rs", poke);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "cms-encapsulation");
+    }
+
+    #[test]
+    fn test_mods_are_exempt() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    \
+                   fn t() { Some(1).unwrap(); }\n}\n";
+        assert!(check_source("util/codec.rs", src).is_empty());
+    }
+
+    #[test]
+    fn json_shape() {
+        let f = vec![Finding {
+            rule: "no-panic-paths",
+            file: "a.rs".into(),
+            line: 3,
+            message: "x \"y\"".into(),
+        }];
+        let j = to_json(&f);
+        assert!(j.starts_with("{\"count\":1,"));
+        assert!(j.contains("\\\"y\\\""));
+        assert!(to_json(&[]).contains("\"count\":0"));
+    }
+}

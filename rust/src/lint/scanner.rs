@@ -1,0 +1,274 @@
+//! Source masking for [`super`]: a small, zero-dependency lexer that
+//! blanks out the regions lint rules must never match inside — comments,
+//! string/char literals, and `#[cfg(test)] mod` bodies — while
+//! preserving byte offsets and line structure exactly (every masked byte
+//! becomes a space; newlines survive). Rules then pattern-match on the
+//! masked text and report line numbers that are valid for the raw file.
+
+/// Blank comments and string/char literals. The output has the same
+/// length and the same newline positions as the input.
+pub(super) fn mask(raw: &str) -> String {
+    let b = raw.as_bytes();
+    let n = b.len();
+    let mut out: Vec<u8> = Vec::with_capacity(n);
+    let mut i = 0;
+    let blank = |out: &mut Vec<u8>, byte: u8| {
+        out.push(if byte == b'\n' { b'\n' } else { b' ' });
+    };
+    while i < n {
+        let c = b[i];
+        // line comment (also covers /// and //! doc comments)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nested, per Rust)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            out.push(b' ');
+            out.push(b' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw / byte string: optional `b`, optional `r` + hashes, then `"`
+        if (c == b'b' || c == b'r') && !prev_is_ident(&out) {
+            let mut j = i;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            let mut is_raw = false;
+            let mut hashes = 0usize;
+            if j < n && b[j] == b'r' {
+                is_raw = true;
+                j += 1;
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+            }
+            if j < n && b[j] == b'"' && (is_raw || j > i) {
+                for _ in i..=j {
+                    out.push(b' ');
+                }
+                i = j + 1;
+                if is_raw {
+                    // ends at `"` followed by the same number of `#`s
+                    while i < n {
+                        let tail = b.get(i + 1..).unwrap_or(&[]);
+                        let closes = b[i] == b'"'
+                            && tail.len() >= hashes
+                            && tail.iter().take(hashes).all(|&h| h == b'#');
+                        if closes {
+                            for _ in 0..=hashes {
+                                out.push(b' ');
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                } else {
+                    mask_plain_string(b, &mut i, &mut out);
+                }
+                continue;
+            }
+        }
+        // plain string
+        if c == b'"' {
+            out.push(b' ');
+            i += 1;
+            mask_plain_string(b, &mut i, &mut out);
+            continue;
+        }
+        // char literal vs lifetime: `'x'` / `'\n'` are literals, `'a` in
+        // `&'a str` (no closing quote in reach) is a lifetime and is
+        // copied through
+        if c == b'\'' && i + 1 < n {
+            if b[i + 1] == b'\\' {
+                out.push(b' ');
+                i += 1;
+                while i < n && b[i] != b'\'' {
+                    if b[i] == b'\\' && i + 1 < n {
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    } else {
+                        blank(&mut out, b[i]);
+                        i += 1;
+                    }
+                }
+                if i < n {
+                    out.push(b' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                out.push(b' ');
+                out.push(b' ');
+                out.push(b' ');
+                i += 3;
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    // every code byte outside literals is ASCII-copied or blanked, so
+    // this cannot fail; fall back to a lossy copy defensively
+    String::from_utf8(out).unwrap_or_else(|e| String::from_utf8_lossy(e.as_bytes()).into_owned())
+}
+
+/// After the opening `"` has been consumed: blank up to and including
+/// the closing quote, honouring backslash escapes.
+fn mask_plain_string(b: &[u8], i: &mut usize, out: &mut Vec<u8>) {
+    let n = b.len();
+    while *i < n {
+        if b[*i] == b'\\' && *i + 1 < n {
+            out.push(b' ');
+            out.push(b' ');
+            *i += 2;
+        } else if b[*i] == b'"' {
+            out.push(b' ');
+            *i += 1;
+            return;
+        } else {
+            out.push(if b[*i] == b'\n' { b'\n' } else { b' ' });
+            *i += 1;
+        }
+    }
+}
+
+fn prev_is_ident(out: &[u8]) -> bool {
+    matches!(out.last(), Some(&c) if c == b'_' || c.is_ascii_alphanumeric())
+}
+
+/// Blank the bodies of `#[cfg(test)] mod …` items (on already-masked
+/// text, so brace counting cannot be fooled by literals). Test-only code
+/// is exempt from the production-path rules.
+pub(super) fn strip_test_mods(masked: &str) -> String {
+    const ATTR: &str = "#[cfg(test)]";
+    let mut out = masked.as_bytes().to_vec();
+    let mut from = 0usize;
+    while let Some(rel) = masked.get(from..).and_then(|s| s.find(ATTR)) {
+        let attr_at = from + rel;
+        from = attr_at + ATTR.len();
+        // skip whitespace and any further attributes to the next token
+        let b = masked.as_bytes();
+        let mut j = from;
+        loop {
+            while j < b.len() && b[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b'#' {
+                match masked.get(j..).and_then(|s| s.find(']')) {
+                    Some(close) => j += close + 1,
+                    None => break,
+                }
+            } else {
+                break;
+            }
+        }
+        // only `mod` items get stripped; a cfg(test) on a use/fn is rare
+        // and harmless to leave in place
+        if !masked.get(j..).is_some_and(|s| s.starts_with("mod")) {
+            continue;
+        }
+        let Some(open_rel) = masked.get(j..).and_then(|s| s.find('{')) else {
+            continue;
+        };
+        let open = j + open_rel;
+        let mut depth = 0usize;
+        let mut end = None;
+        for (p, &c) in b.iter().enumerate().skip(open) {
+            if c == b'{' {
+                depth += 1;
+            } else if c == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    end = Some(p);
+                    break;
+                }
+            }
+        }
+        let Some(end) = end else { continue };
+        for slot in out.iter_mut().take(end + 1).skip(attr_at) {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+        from = end + 1;
+    }
+    String::from_utf8(out).unwrap_or_else(|e| String::from_utf8_lossy(e.as_bytes()).into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_comments_and_strings() {
+        let src = "let x = \"unsafe\"; // unsafe\nlet y = 1;\n";
+        let m = mask(src);
+        assert_eq!(m.len(), src.len());
+        assert!(!m.contains("unsafe"));
+        assert!(m.contains("let y = 1;"));
+        assert_eq!(m.matches('\n').count(), 2);
+    }
+
+    #[test]
+    fn masks_raw_and_byte_strings() {
+        let src = r####"let r = r#"panic!( in raw"#; let b = b"unwrap()";"####;
+        let m = mask(src);
+        assert!(!m.contains("panic!("));
+        assert!(!m.contains("unwrap"));
+        assert!(m.contains("let b ="));
+    }
+
+    #[test]
+    fn keeps_lifetimes_masks_chars() {
+        let src = "fn f<'a>(x: &'a str) -> char { '[' }";
+        let m = mask(src);
+        assert!(m.contains("'a str"), "lifetime survives: {m}");
+        assert!(!m.contains('['), "char literal masked: {m}");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "/* outer /* inner */ still comment */ let z = 2;";
+        let m = mask(src);
+        assert!(!m.contains("inner"));
+        assert!(m.contains("let z = 2;"));
+    }
+
+    #[test]
+    fn strips_test_mod_bodies() {
+        let src = "fn live() { v[0]; }\n#[cfg(test)]\nmod tests {\n    \
+                   fn t() { x.unwrap(); }\n}\nfn after() {}\n";
+        let m = strip_test_mods(&mask(src));
+        assert!(m.contains("v[0]"));
+        assert!(!m.contains("unwrap"));
+        assert!(m.contains("fn after"));
+        assert_eq!(m.matches('\n').count(), src.matches('\n').count());
+    }
+}

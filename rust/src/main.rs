@@ -100,19 +100,20 @@ fn usage_err(msg: String) -> SparxError {
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        if let Some(name) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                flags.insert(name.to_string(), "true".into());
-                i += 1;
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(name.to_string(), (*v).clone());
+                    it.next();
+                }
+                _ => {
+                    flags.insert(name.to_string(), "true".into());
+                }
             }
         } else {
-            pos.push(args[i].clone());
-            i += 1;
+            pos.push(arg.clone());
         }
     }
     (pos, flags)
@@ -540,7 +541,7 @@ fn file_stamp(path: &str) -> Option<(std::time::SystemTime, u64)> {
 /// Cut a checkpoint from the live scorer and write it atomically
 /// (temp + rename), with provenance in the manifest.
 fn write_checkpoint(scorer: &mut ShardedStreamScorer, out: &str, model_path: &str) -> CliResult {
-    let ckpt = scorer.checkpoint();
+    let ckpt = scorer.checkpoint()?;
     let manifest = vec![
         ("kind".into(), "absorb-state checkpoint".into()),
         ("model".into(), model_path.into()),
@@ -755,8 +756,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
             since_ckpt += 1;
             if since_ckpt >= ckpt_every {
                 since_ckpt = 0;
-                let out = ckpt_out.as_deref().expect("checked: every implies out");
-                write_checkpoint(&mut scorer, out, &path)?;
+                // flag validation rejects --checkpoint-every without
+                // --checkpoint-out, so `out` is always present here
+                if let Some(out) = ckpt_out.as_deref() {
+                    write_checkpoint(&mut scorer, out, &path)?;
+                }
             }
         }
         if watch {
@@ -926,7 +930,8 @@ fn cmd_generate(flags: &HashMap<String, String>) -> CliResult {
         match &r.features {
             sparx::data::Features::Dense(v) => {
                 let cells: Vec<String> = v.iter().map(|x| x.to_string()).collect();
-                writeln!(f, "{},{}", cells.join(","), u8::from(ld.labels[r.id as usize]))?;
+                let label = ld.labels.get(r.id as usize).copied().unwrap_or(false);
+                writeln!(f, "{},{}", cells.join(","), u8::from(label))?;
             }
             _ => {
                 return Err(SparxError::Unsupported(
@@ -950,7 +955,7 @@ fn cmd_info(flags: &HashMap<String, String>) -> CliResult {
     }
     println!("\ncluster presets (Table 5, scaled):");
     for name in ["config-mod", "config-gen", "local"] {
-        let c = presets::by_name(name).expect("preset names are static");
+        let Some(c) = presets::by_name(name) else { continue };
         println!(
             "  {name}: partitions={} workers={} threads={} exec-mem={}MB deadline={:?}s",
             c.num_partitions,
@@ -998,7 +1003,7 @@ fn main() {
         if pos.len() > 1 {
             Err(usage_err(format!(
                 "{cmd} takes no positional arguments, got {:?}",
-                &pos[1..]
+                pos.get(1..).unwrap_or(&[])
             )))
         } else {
             Ok(())
@@ -1009,7 +1014,7 @@ fn main() {
         Some("score") => no_positionals("score").and_then(|()| cmd_score(&flags)),
         Some("serve") => no_positionals("serve").and_then(|()| cmd_serve(&flags)),
         Some("detect") => no_positionals("detect").and_then(|()| cmd_detect(&flags)),
-        Some("experiment") => cmd_experiment(&pos[1..], &flags),
+        Some("experiment") => cmd_experiment(pos.get(1..).unwrap_or(&[]), &flags),
         Some("stream") => no_positionals("stream").and_then(|()| cmd_stream(&flags)),
         Some("generate") => no_positionals("generate").and_then(|()| cmd_generate(&flags)),
         Some("info") => no_positionals("info").and_then(|()| cmd_info(&flags)),

@@ -23,6 +23,11 @@
 //!   behind `is_x86_feature_detected!`, selected by [`kernel_path`] and
 //!   disabled with `SPARX_NO_AVX2=1`.
 
+// One of the two modules whitelisted for `unsafe` (crate root denies it):
+// the AVX2 block kernel below. Every unsafe block needs a `// SAFETY:`
+// comment (enforced by `sparx_lint`).
+#![allow(unsafe_code)]
+
 use crate::cluster::Result;
 use crate::util::{Rng, SizeOf};
 
@@ -275,16 +280,27 @@ mod avx2 {
     /// `v.floor() as i32` per lane with Rust cast semantics: cvttps
     /// already saturates ≤ −2^31 to `i32::MIN` (its "indefinite" value);
     /// values ≥ 2^31 are blended to `i32::MAX` and NaNs to 0.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support at runtime.
     #[inline]
     #[target_feature(enable = "avx2")]
+    // On the MSRV (1.70) intrinsics are unsafe even inside a
+    // target_feature fn, so `unsafe_op_in_unsafe_fn` demands the block;
+    // on ≥1.87 they are safe in this context and the block is unused.
+    #[allow(unused_unsafe)]
     unsafe fn floor_as_i32(v: __m256) -> __m256i {
-        let fl = _mm256_floor_ps(v);
-        let tr = _mm256_cvttps_epi32(fl);
-        let high = _mm256_cmp_ps::<_CMP_GE_OQ>(fl, _mm256_set1_ps(2_147_483_648.0));
-        let sat =
-            _mm256_blendv_epi8(tr, _mm256_set1_epi32(i32::MAX), _mm256_castps_si256(high));
-        let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(v, v);
-        _mm256_blendv_epi8(sat, _mm256_setzero_si256(), _mm256_castps_si256(nan))
+        // SAFETY: the fn contract (caller verified AVX2) covers every
+        // intrinsic below; none touch memory.
+        unsafe {
+            let fl = _mm256_floor_ps(v);
+            let tr = _mm256_cvttps_epi32(fl);
+            let high = _mm256_cmp_ps::<_CMP_GE_OQ>(fl, _mm256_set1_ps(2_147_483_648.0));
+            let sat =
+                _mm256_blendv_epi8(tr, _mm256_set1_epi32(i32::MAX), _mm256_castps_si256(high));
+            let nan = _mm256_cmp_ps::<_CMP_UNORD_Q>(v, v);
+            _mm256_blendv_epi8(sat, _mm256_setzero_si256(), _mm256_castps_si256(nan))
+        }
     }
 
     /// Bin one 8-point block of `chain`: `s` is the block's sketches
@@ -311,33 +327,40 @@ mod avx2 {
         lanes.fill(0.0);
         ibins.fill(0);
         let mut floors = [0i32; LANES];
-        for (lvl, &f) in chain.fs.iter().enumerate() {
-            let lane = lanes.as_mut_ptr().add(f * LANES);
-            let new = if chain.first[lvl] {
-                // transpose the feature's column out of the point-major
-                // block, then (s + shift) / Δ lane-wise
-                let mut col = [0f32; LANES];
-                for (p, c) in col.iter_mut().enumerate() {
-                    *c = *s.get_unchecked(p * k + f);
+        // SAFETY: the caller passes buffers of exactly the sizes asserted
+        // above (dispatch sites slice them from tile buffers), `f < k` by
+        // `ChainParams` construction, and AVX2 is verified per the fn
+        // contract — so every `get_unchecked`, raw-pointer lane access and
+        // unaligned load/store below stays in bounds.
+        unsafe {
+            for (lvl, &f) in chain.fs.iter().enumerate() {
+                let lane = lanes.as_mut_ptr().add(f * LANES);
+                let new = if chain.first[lvl] {
+                    // transpose the feature's column out of the point-major
+                    // block, then (s + shift) / Δ lane-wise
+                    let mut col = [0f32; LANES];
+                    for (p, c) in col.iter_mut().enumerate() {
+                        *c = *s.get_unchecked(p * k + f);
+                    }
+                    let sv = _mm256_loadu_ps(col.as_ptr());
+                    let sh = _mm256_set1_ps(chain.shift[f]);
+                    let dm = _mm256_set1_ps(chain.deltamax[f]);
+                    _mm256_div_ps(_mm256_add_ps(sv, sh), dm)
+                } else {
+                    // 2·prebin − shift/Δ, the repeat-occurrence halving
+                    let old = _mm256_loadu_ps(lane);
+                    let c = _mm256_set1_ps(chain.shift[f] / chain.deltamax[f]);
+                    _mm256_sub_ps(_mm256_mul_ps(_mm256_set1_ps(2.0), old), c)
+                };
+                _mm256_storeu_ps(lane, new);
+                _mm256_storeu_si256(floors.as_mut_ptr() as *mut __m256i, floor_as_i32(new));
+                for p in 0..LANES {
+                    *ibins.get_unchecked_mut(p * k + f) = floors[p];
                 }
-                let sv = _mm256_loadu_ps(col.as_ptr());
-                let sh = _mm256_set1_ps(chain.shift[f]);
-                let dm = _mm256_set1_ps(chain.deltamax[f]);
-                _mm256_div_ps(_mm256_add_ps(sv, sh), dm)
-            } else {
-                // 2·prebin − shift/Δ, the repeat-occurrence halving
-                let old = _mm256_loadu_ps(lane);
-                let c = _mm256_set1_ps(chain.shift[f] / chain.deltamax[f]);
-                _mm256_sub_ps(_mm256_mul_ps(_mm256_set1_ps(2.0), old), c)
-            };
-            _mm256_storeu_ps(lane, new);
-            _mm256_storeu_si256(floors.as_mut_ptr() as *mut __m256i, floor_as_i32(new));
-            for p in 0..LANES {
-                *ibins.get_unchecked_mut(p * k + f) = floors[p];
-            }
-            for p in 0..LANES {
-                let dst = (p * l + lvl) * k;
-                out[dst..dst + k].copy_from_slice(&ibins[p * k..p * k + k]);
+                for p in 0..LANES {
+                    let dst = (p * l + lvl) * k;
+                    out[dst..dst + k].copy_from_slice(&ibins[p * k..p * k + k]);
+                }
             }
         }
     }

@@ -190,17 +190,17 @@ impl AbsorbCheckpoint {
             merged.evicted += snap.evicted;
             merged.absorbed += snap.absorbed;
             merged.entries.extend(snap.entries.iter().cloned());
-            for (slot, lvl) in snap.delta.iter().enumerate().take(levels) {
+            for (map, lvl) in maps.iter_mut().zip(&snap.delta) {
                 for &(bucket, count) in lvl {
-                    let slot_count = maps[slot].entry(bucket).or_insert(0);
+                    let slot_count = map.entry(bucket).or_insert(0);
                     *slot_count = slot_count.saturating_add(count);
                 }
             }
         }
-        for (slot, map) in maps.into_iter().enumerate() {
+        for (dst, map) in merged.delta.iter_mut().zip(maps) {
             let mut v: Vec<(u32, u32)> = map.into_iter().collect();
             v.sort_unstable();
-            merged.delta[slot] = v;
+            *dst = v;
         }
         merged
     }

@@ -248,7 +248,12 @@ impl ShardedStreamScorer {
             let mut scorer = StreamScorer::from_ensemble(ensemble.clone(), cache_per_shard)?;
             let mut admitted = 0;
             if let Some(ckpt) = resume {
-                let snap = &ckpt.snapshots[s];
+                let snap = ckpt.snapshots.get(s).ok_or_else(|| {
+                    SparxError::InvalidParams(format!(
+                        "checkpoint carries {} snapshots but declares {shards} shards",
+                        ckpt.snapshots.len()
+                    ))
+                })?;
                 scorer.restore(snap)?;
                 admitted = snap.admitted();
             }
@@ -288,10 +293,13 @@ impl ShardedStreamScorer {
                 ShardMsg::Swap(ens) => {
                     // the feeder validated compatibility against the same
                     // shared ensemble every shard holds, so this cannot
-                    // fail; a panic here would mean shards diverged
+                    // fail; a panic here would mean shards diverged, and
+                    // crashing the worker (re-raised at `finish`) beats
+                    // silently serving from mismatched models
                     shard
                         .scorer
                         .swap_ensemble(ens)
+                        // lint:allow(no-panic-paths)
                         .expect("feeder validates swap compatibility");
                 }
             },
@@ -344,10 +352,14 @@ impl ShardedStreamScorer {
         let s = shard_of(u.id(), self.shards);
         let seq = self.submitted;
         self.submitted += 1;
-        self.pending[s].push((seq, u));
-        if self.pending[s].len() >= BATCH {
-            let batch = std::mem::replace(&mut self.pending[s], Vec::with_capacity(BATCH));
-            self.pool.send(s, ShardMsg::Batch(batch));
+        // `shard_of` reduces modulo the shard count, so the slot always
+        // exists; `get_mut` keeps the path panic-free regardless.
+        if let Some(buf) = self.pending.get_mut(s) {
+            buf.push((seq, u));
+            if buf.len() >= BATCH {
+                let batch = std::mem::replace(buf, Vec::with_capacity(BATCH));
+                self.pool.send(s, ShardMsg::Batch(batch));
+            }
         }
     }
 
@@ -365,7 +377,11 @@ impl ShardedStreamScorer {
     /// *after* every update submitted before this call), and merge the S
     /// snapshots under one header. The stream can keep flowing
     /// afterwards — nothing is torn down.
-    pub fn checkpoint(&mut self) -> AbsorbCheckpoint {
+    ///
+    /// A shard worker that died (panicked) before answering its snapshot
+    /// surfaces as a typed error — the caller decides whether to keep
+    /// serving; [`finish`](Self::finish) re-raises the underlying panic.
+    pub fn checkpoint(&mut self) -> Result<AbsorbCheckpoint> {
         self.flush_pending();
         let mut replies = Vec::with_capacity(self.shards);
         for s in 0..self.shards {
@@ -373,18 +389,21 @@ impl ShardedStreamScorer {
             self.pool.send(s, ShardMsg::Snapshot(tx));
             replies.push(rx);
         }
-        let snapshots: Vec<AbsorbSnapshot> = replies
-            .into_iter()
-            .map(|rx| rx.recv().expect("shard worker died before answering the snapshot"))
-            .collect();
-        AbsorbCheckpoint::for_ensemble(
+        let mut snapshots = Vec::with_capacity(self.shards);
+        for (s, rx) in replies.into_iter().enumerate() {
+            let snap = rx.recv().map_err(|_| {
+                SparxError::Io(format!("shard {s} worker died before answering the snapshot"))
+            })?;
+            snapshots.push(snap);
+        }
+        Ok(AbsorbCheckpoint::for_ensemble(
             &self.ensemble,
             self.shards as u32,
             self.cache_per_shard as u64,
             self.submitted,
             self.absorb,
             snapshots,
-        )
+        ))
     }
 
     /// Hot model reload: validate the swap once at the feeder (typed

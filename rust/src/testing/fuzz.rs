@@ -1,0 +1,365 @@
+//! Deterministic structure-aware fuzzing of the untrusted-input surface.
+//!
+//! The decoders this drives are exactly the bytes a deployment node
+//! accepts from the outside world: model artifacts
+//! ([`registry::load_bytes`](crate::api::registry::load_bytes)),
+//! absorb-state checkpoints ([`AbsorbCheckpoint`]), the packed
+//! varint/RLE counter codec ([`Decoder::u32_vec_packed`]) and serve-input
+//! lines ([`parse_update_line`]). The invariant, enforced per input by
+//! [`exercise`]:
+//!
+//! > any byte string either decodes to a **typed error** or decodes to a
+//! > value whose re-encoding is a **fixpoint** (encode∘decode∘encode =
+//! > encode) — never a panic, hang, or unbounded allocation.
+//!
+//! Everything is deterministic: mutations come from the in-repo PCG
+//! ([`Rng`]), so `fuzz(seed, n)` replays bit-identically and a CI
+//! failure reproduces locally from the reported seed + iteration. Seeds
+//! are *valid* encodings built in-process (a fitted model artifact, a
+//! hand-built checkpoint, packed counter blocks, serve lines); mutators
+//! are byte-level (flips, truncations, splices) plus grammar-aware
+//! patches (length-field corruption, whole-file CRC fix-up so mutations
+//! reach the block layer instead of dying at the outer checksum).
+//!
+//! The committed regression corpus lives in `rust/tests/corpus/`; the
+//! replay test (`rust/tests/fuzz.rs`) runs every entry through
+//! [`exercise`] and additionally bounds peak allocation with a counting
+//! global allocator.
+
+use crate::api::registry;
+use crate::api::{FittedModel, ModelArtifact};
+use crate::cluster::ClusterConfig;
+use crate::data::generators::GisetteGen;
+use crate::data::stream::parse_update_line;
+use crate::sparx::checkpoint::{AbsorbCheckpoint, AbsorbSnapshot};
+use crate::sparx::{SparxModel, SparxParams};
+use crate::util::codec::{crc32, Decoder, Encoder};
+use crate::util::Rng;
+use std::sync::OnceLock;
+
+/// Inputs are capped so a mutated length field cannot make a single
+/// iteration arbitrarily slow — the decoders' own caps bound work per
+/// byte, so bounding bytes bounds time.
+pub const MAX_INPUT: usize = 1 << 16;
+
+/// Element cap handed to [`Decoder::u32_vec_packed`] by the codec
+/// target, mirroring the CMS row caps the real decode paths pass.
+pub const PACKED_CAP: usize = 1 << 16;
+
+/// Counters from a fuzz run (all inputs completed without a panic).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct FuzzReport {
+    /// Inputs exercised.
+    pub iterations: u64,
+    /// Total target acceptances (an input can decode under several
+    /// targets); the rest were typed rejections.
+    pub accepted: u64,
+}
+
+/// Run every decode target against one input, asserting the round-trip
+/// fixpoint invariant for accepted inputs. Returns how many targets
+/// accepted. Panics (caught by [`fuzz`], fatal in a test) signal a real
+/// defect: a decoder panic or a broken round trip.
+pub fn exercise(input: &[u8]) -> u32 {
+    let mut accepted = 0;
+    accepted += u32::from(target_model_artifact(input));
+    accepted += u32::from(target_checkpoint(input));
+    accepted += u32::from(target_packed_codec(input));
+    accepted += u32::from(target_update_lines(input));
+    accepted
+}
+
+/// Deterministic mutational fuzzing: `iterations` inputs derived from
+/// the seed corpus, every one run through [`exercise`] under
+/// `catch_unwind`. `Err` carries the failing seed/iteration and an input
+/// prefix for triage.
+pub fn fuzz(seed: u64, iterations: u64) -> Result<FuzzReport, String> {
+    let seeds = seed_corpus();
+    let mut rng = Rng::new(seed ^ 0x5f5f_f322_7375);
+    let mut report = FuzzReport::default();
+    for iteration in 0..iterations {
+        let base = seeds.get(rng.below(seeds.len() as u64) as usize);
+        let mut input = base.cloned().unwrap_or_default();
+        for _ in 0..=rng.below(3) {
+            mutate(&mut input, &mut rng, seeds);
+        }
+        input.truncate(MAX_INPUT);
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exercise(&input)));
+        match run {
+            Ok(accepted) => {
+                report.iterations += 1;
+                report.accepted += u64::from(accepted);
+            }
+            Err(payload) => {
+                return Err(format!(
+                    "fuzz(seed={seed}) panicked at iteration {iteration}: {} \
+                     (input: {} bytes, prefix {})",
+                    panic_text(payload.as_ref()),
+                    input.len(),
+                    hex_prefix(&input, 48),
+                ));
+            }
+        }
+    }
+    Ok(report)
+}
+
+// ------------------------------------------------------------- targets
+
+/// `registry::load_bytes` + encode∘decode fixpoint for accepted models.
+fn target_model_artifact(input: &[u8]) -> bool {
+    let Ok(model) = registry::load_bytes(input) else { return false };
+    let first = model.to_artifact().expect("loaded model must re-encode").to_bytes();
+    let again = registry::load_bytes(&first).expect("re-encoded model artifact must load");
+    let second = again.to_artifact().expect("reloaded model must re-encode").to_bytes();
+    assert_eq!(first, second, "model artifact encode∘decode must be a fixpoint");
+    true
+}
+
+/// Checkpoint container + header/snapshot decode, with the same
+/// fixpoint check. (Unknown artifact extensions are dropped on decode,
+/// so bit-identity holds from the *first* re-encode onward.)
+fn target_checkpoint(input: &[u8]) -> bool {
+    let Ok(art) = ModelArtifact::from_bytes(input) else { return false };
+    let Ok(ckpt) = AbsorbCheckpoint::from_artifact(&art) else { return false };
+    let first = ckpt.to_artifact().to_bytes();
+    let reread = ModelArtifact::from_bytes(&first).expect("re-encoded checkpoint must frame");
+    let again = AbsorbCheckpoint::from_artifact(&reread).expect("re-encoded checkpoint decodes");
+    assert_eq!(first, again.to_artifact().to_bytes(), "checkpoint must reach a fixpoint");
+    true
+}
+
+/// Packed varint/RLE counter block: decode under the cap, then the
+/// re-encode must round trip exactly and consume its whole encoding.
+fn target_packed_codec(input: &[u8]) -> bool {
+    let _ = Decoder::new(input).varint();
+    let Ok(values) = Decoder::new(input).u32_vec_packed(PACKED_CAP) else { return false };
+    let mut enc = Encoder::new();
+    enc.put_u32_slice_packed(&values);
+    let encoded = enc.into_bytes();
+    let mut dec = Decoder::new(&encoded);
+    let back = dec.u32_vec_packed(PACKED_CAP).expect("re-encoded packed block must decode");
+    assert_eq!(values, back, "packed u32 block must round trip");
+    assert_eq!(dec.remaining(), 0, "canonical packed encoding leaves no tail");
+    true
+}
+
+/// Serve-input line grammar: parsed lines must render back to a line
+/// that parses to the same triple.
+fn target_update_lines(input: &[u8]) -> bool {
+    let text = String::from_utf8_lossy(input);
+    let mut any = false;
+    for (i, line) in text.lines().take(64).enumerate() {
+        if let Ok(Some(u)) = parse_update_line(i + 1, line) {
+            let rendered = u.to_line();
+            let reparsed = parse_update_line(i + 1, &rendered)
+                .expect("rendered update line must parse")
+                .expect("rendered update line is never a comment");
+            assert_eq!(reparsed, u, "update line must round trip through to_line");
+            any = true;
+        }
+    }
+    any
+}
+
+// ----------------------------------------------------- seeds + mutators
+
+/// Valid encodings the mutators start from, built once in-process:
+/// index 0 a fitted sparx model artifact, 1 a checkpoint artifact, 2–3
+/// packed counter blocks, 4 serve lines, 5 a bare truncated header.
+pub fn seed_corpus() -> &'static [Vec<u8>] {
+    static SEEDS: OnceLock<Vec<Vec<u8>>> = OnceLock::new();
+    SEEDS.get_or_init(|| {
+        vec![
+            model_artifact_seed(),
+            sample_checkpoint().to_artifact().to_bytes(),
+            packed_block_seed(&[0, 0, 0, 7, 1, 0, 0, 0, 0, 9, u32::MAX, 0]),
+            packed_block_seed(&[]),
+            b"17 f3 0.5\n9 city ->paris\n# comment\n42 f0 -2e-3\n".to_vec(),
+            b"SPRX\x03\x00".to_vec(),
+        ]
+    })
+}
+
+/// A real (tiny) fitted model, so artifact mutations explore the sparx
+/// payload decoder, not just the container framing.
+fn model_artifact_seed() -> Vec<u8> {
+    let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+    let data = GisetteGen { n: 120, d: 8, ..Default::default() }
+        .generate(&ctx)
+        .expect("seed dataset generates");
+    let params = SparxParams { k: 4, num_chains: 2, depth: 3, ..Default::default() };
+    let model = SparxModel::fit(&ctx, &data.dataset, &params).expect("seed model fits");
+    model.to_artifact().expect("seed model encodes").to_bytes()
+}
+
+/// A hand-built multi-shard checkpoint exercising sketches, deltas and
+/// the varint-gap level encoding.
+pub fn sample_checkpoint() -> AbsorbCheckpoint {
+    let (num_chains, depth, k) = (2usize, 2usize, 3usize);
+    let snap = |base: u64| AbsorbSnapshot {
+        processed: 40 + base,
+        evicted: base / 2,
+        absorbed: 30 + base,
+        entries: vec![
+            (base, vec![0.5f32; k]),
+            (base + 2, vec![-1.25f32; k]),
+        ],
+        delta: vec![
+            vec![(0, 1), (5, 2)],
+            vec![],
+            vec![(63, base as u32 + 1)],
+            vec![(2, 2), (3, 1), (100, 7)],
+        ],
+    };
+    AbsorbCheckpoint {
+        model_fingerprint: 0xDEAD_BEEF,
+        schema_fingerprint: 0x5A5A_0001,
+        shards: 2,
+        cache_per_shard: 4,
+        submitted: 17,
+        absorb: true,
+        k,
+        depth,
+        num_chains,
+        cms_rows: 4,
+        cms_cols: 128,
+        snapshots: vec![snap(0), snap(8)],
+    }
+}
+
+fn packed_block_seed(values: &[u32]) -> Vec<u8> {
+    let mut enc = Encoder::new();
+    enc.put_u32_slice_packed(values);
+    enc.into_bytes()
+}
+
+/// One random mutation. Mostly byte-level; the last two arms are
+/// grammar-aware (length-field patches and whole-file CRC repair, so a
+/// mutated artifact passes the outer checksum and reaches the block
+/// decoders).
+fn mutate(input: &mut Vec<u8>, rng: &mut Rng, seeds: &[Vec<u8>]) {
+    match rng.below(8) {
+        0 => {
+            // bit flip
+            if let Some(pos) = random_pos(input, rng) {
+                input[pos] ^= 1 << rng.below(8);
+            }
+        }
+        1 => {
+            // byte overwrite
+            if let Some(pos) = random_pos(input, rng) {
+                input[pos] = rng.next_u32() as u8;
+            }
+        }
+        2 => {
+            // truncate
+            let keep = rng.below(input.len() as u64 + 1) as usize;
+            input.truncate(keep);
+        }
+        3 => {
+            // insert a byte
+            let pos = rng.below(input.len() as u64 + 1) as usize;
+            input.insert(pos, rng.next_u32() as u8);
+        }
+        4 => {
+            // splice a window from another seed over this input
+            let donor = &seeds[rng.below(seeds.len() as u64) as usize];
+            if let (Some(dst), Some(src)) = (random_pos(input, rng), random_pos(donor, rng)) {
+                let n = (rng.below(64) as usize + 1).min(donor.len() - src).min(input.len() - dst);
+                input[dst..dst + n].copy_from_slice(&donor[src..src + n]);
+            }
+        }
+        5 => {
+            // patch a little-endian u32 (length/count fields live here)
+            if input.len() >= 4 {
+                let pos = rng.below(input.len() as u64 - 3) as usize;
+                let v = match rng.below(4) {
+                    0 => 0u32,
+                    1 => rng.below(16) as u32,
+                    2 => u32::MAX,
+                    _ => rng.next_u32(),
+                };
+                input[pos..pos + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        6 => {
+            // zero a span
+            if let Some(pos) = random_pos(input, rng) {
+                let n = (rng.below(16) as usize + 1).min(input.len() - pos);
+                for b in &mut input[pos..pos + n] {
+                    *b = 0;
+                }
+            }
+        }
+        _ => {
+            // repair the whole-file CRC so the mutation survives the
+            // outer gate and exercises the inner block decoders
+            if input.len() > 4 {
+                let body = input.len() - 4;
+                let sum = crc32(&input[..body]).to_le_bytes();
+                input[body..].copy_from_slice(&sum);
+            }
+        }
+    }
+}
+
+fn random_pos(bytes: &[u8], rng: &mut Rng) -> Option<usize> {
+    if bytes.is_empty() {
+        None
+    } else {
+        Some(rng.below(bytes.len() as u64) as usize)
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn hex_prefix(bytes: &[u8], n: usize) -> String {
+    let mut s = String::with_capacity(2 * n.min(bytes.len()) + 1);
+    for b in bytes.iter().take(n) {
+        s.push_str(&format!("{b:02x}"));
+    }
+    if bytes.len() > n {
+        s.push('…');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_are_valid() {
+        // every seed must be accepted by at least one target (except the
+        // deliberately-truncated header, which must be rejected typed)
+        let seeds = seed_corpus();
+        assert!(exercise(&seeds[0]) >= 1, "model seed accepted");
+        assert!(exercise(&seeds[1]) >= 1, "checkpoint seed accepted");
+        assert!(exercise(&seeds[2]) >= 1, "packed seed accepted");
+        assert!(exercise(&seeds[4]) >= 1, "line seed accepted");
+        assert_eq!(exercise(&seeds[5]), 0, "truncated header rejected everywhere");
+    }
+
+    #[test]
+    fn fuzz_is_deterministic() {
+        let a = fuzz(7, 40).expect("no panics");
+        let b = fuzz(7, 40).expect("no panics");
+        assert_eq!(a, b);
+        assert_eq!(a.iterations, 40);
+    }
+
+    #[test]
+    fn fuzz_smoke() {
+        let report = fuzz(1, 150).expect("decoders must never panic");
+        assert_eq!(report.iterations, 150);
+    }
+}

@@ -1,0 +1,6 @@
+//! Test-support subsystem: deterministic, structure-aware fuzzing of the
+//! untrusted-input decoders ([`fuzz`]). Ships in the library (not under
+//! `#[cfg(test)]`) so the corpus replay test, the CI fuzz-smoke job and
+//! ad-hoc triage all drive the exact same code.
+
+pub mod fuzz;

@@ -117,19 +117,16 @@ impl Encoder {
     /// `crate::api::artifact`). Decode with [`Decoder::u32_vec_packed`].
     pub fn put_u32_slice_packed(&mut self, v: &[u32]) {
         self.put_u32(v.len() as u32);
-        let mut i = 0;
-        while i < v.len() {
-            if v[i] == 0 {
-                let mut j = i + 1;
-                while j < v.len() && v[j] == 0 {
-                    j += 1;
-                }
+        let mut rest = v;
+        while let Some((&first, tail)) = rest.split_first() {
+            if first == 0 {
+                let run = 1 + tail.iter().take_while(|&&x| x == 0).count();
                 self.put_varint(0);
-                self.put_varint((j - i) as u64);
-                i = j;
+                self.put_varint(run as u64);
+                rest = rest.get(run..).unwrap_or(&[]);
             } else {
-                self.put_varint(v[i] as u64);
-                i += 1;
+                self.put_varint(first as u64);
+                rest = tail;
             }
         }
     }
@@ -157,32 +154,42 @@ impl<'a> Decoder<'a> {
     }
 
     pub fn take(&mut self, n: usize) -> CodecResult<&'a [u8]> {
-        if self.remaining() < n {
-            return Err(format!(
+        match self.b.get(self.i..self.i.saturating_add(n)) {
+            Some(s) => {
+                self.i += n;
+                Ok(s)
+            }
+            None => Err(format!(
                 "truncated: wanted {n} bytes at offset {}, {} left",
                 self.i,
                 self.remaining()
-            ));
+            )),
         }
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
-        Ok(s)
+    }
+
+    /// Fixed-width read into an array, the panic-free `try_into` for the
+    /// scalar accessors below.
+    fn take_arr<const N: usize>(&mut self) -> CodecResult<[u8; N]> {
+        let mut out = [0u8; N];
+        out.copy_from_slice(self.take(N)?);
+        Ok(out)
     }
 
     pub fn u8(&mut self) -> CodecResult<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.take_arr::<1>()?;
+        Ok(b)
     }
 
     pub fn u16(&mut self) -> CodecResult<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.take_arr()?))
     }
 
     pub fn u32(&mut self) -> CodecResult<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_arr()?))
     }
 
     pub fn u64(&mut self) -> CodecResult<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_arr()?))
     }
 
     pub fn usize(&mut self) -> CodecResult<usize> {
@@ -190,11 +197,11 @@ impl<'a> Decoder<'a> {
     }
 
     pub fn f32(&mut self) -> CodecResult<f32> {
-        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(f32::from_le_bytes(self.take_arr()?))
     }
 
     pub fn f64(&mut self) -> CodecResult<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.take_arr()?))
     }
 
     pub fn str(&mut self) -> CodecResult<String> {

@@ -125,7 +125,7 @@ fn merging_shard_snapshots_equals_the_single_shard_absorb_state() {
         for u in replay {
             scorer.submit(u);
         }
-        let ckpt = scorer.checkpoint();
+        let ckpt = scorer.checkpoint().unwrap();
         let report = scorer.finish();
         assert_eq!(report.processed(), updates.len() as u64, "S={shards}: lost updates");
         assert_eq!(report.absorbed(), updates.len() as u64, "S={shards}: lost absorbs");
@@ -176,7 +176,7 @@ fn file_checkpoint_resume_continues_bit_identically() {
     for u in &updates[..cut] {
         first.submit(u.clone());
     }
-    let ckpt = first.checkpoint();
+    let ckpt = first.checkpoint().unwrap();
     let path = temp_path("resume");
     ckpt.save(&path, vec![("model".into(), "in-memory".into())]).unwrap();
     let part1 = first.finish().merged_scores();
@@ -219,7 +219,7 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
     for u in synth_updates(50, 400, 9) {
         scorer.submit(u);
     }
-    let ckpt = scorer.checkpoint();
+    let ckpt = scorer.checkpoint().unwrap();
     drop(scorer.finish());
     let bytes = ckpt.to_artifact().to_bytes();
 

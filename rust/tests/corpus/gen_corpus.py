@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Regenerate the committed decoder corpus.
+
+Each binary here is an *independent* reimplementation of the sparx wire
+formats (artifact v3 container, absorb-checkpoint blocks, packed-u32
+codec) so the Rust decoders are tested against bytes their own encoders
+never produced. `ok_ckpt_v3.bin` mirrors
+`sparx::testing::fuzz::sample_checkpoint()` field for field; the replay
+test decodes it and compares against that struct, cross-checking both
+implementations.
+
+Run from this directory: `python3 gen_corpus.py`
+"""
+import struct
+import zlib
+
+
+def u8(v):
+    return struct.pack("<B", v)
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def f32(v):
+    return struct.pack("<f", v)
+
+
+def varint(v):
+    out = b""
+    while v >= 0x80:
+        out += u8((v & 0x7F) | 0x80)
+        v >>= 7
+    return out + u8(v)
+
+
+def pstr(s):
+    b = s.encode()
+    return u32(len(b)) + b
+
+
+def f32_slice(vals):
+    return u32(len(vals)) + b"".join(f32(v) for v in vals)
+
+
+def crc(b):
+    # artifact CRC-32 is IEEE reflected 0xEDB88320 == zlib.crc32
+    return u32(zlib.crc32(b) & 0xFFFFFFFF)
+
+
+def block(b):
+    """v2+ artifact block: u32 length, bytes, u32 CRC-32."""
+    return u32(len(b)) + b + crc(b)
+
+
+def artifact_v3(detector, params, payload):
+    body = b"SPRX" + u16(3) + pstr(detector) + block(params) + block(payload) + u32(0)
+    return body + crc(body)
+
+
+def ckpt_params(shards=2):
+    return (
+        u32(0xDEADBEEF)  # model fingerprint
+        + u32(0x5A5A0001)  # schema fingerprint
+        + u32(shards)
+        + u64(4)  # cache_per_shard
+        + u64(17)  # submitted
+        + u8(1)  # absorb
+        + u64(3)  # k
+        + u64(2)  # depth
+        + u64(2)  # num_chains
+        + u64(4)  # cms_rows
+        + u64(128)  # cms_cols
+    )
+
+
+def delta_level(pairs):
+    """v3 level: u32 pair count + varint(gap) varint(count) per pair."""
+    out = u32(len(pairs))
+    prev = 0
+    for i, (bucket, count) in enumerate(pairs):
+        gap = bucket if i == 0 else bucket - prev
+        out += varint(gap) + varint(count)
+        prev = bucket
+    return out
+
+
+def snapshot(base):
+    return (
+        u64(40 + base)  # processed
+        + u64(base // 2)  # evicted
+        + u64(30 + base)  # absorbed
+        + u32(2)  # entries
+        + u64(base) + f32_slice([0.5] * 3)
+        + u64(base + 2) + f32_slice([-1.25] * 3)
+        + u32(4)  # delta levels = num_chains * depth
+        + delta_level([(0, 1), (5, 2)])
+        + delta_level([])
+        + delta_level([(63, base + 1)])
+        + delta_level([(2, 2), (3, 1), (100, 7)])
+    )
+
+
+def ckpt_payload():
+    return u32(2) + snapshot(0) + snapshot(8)
+
+
+def packed(vals, declared=None):
+    """Packed u32 slice: u32 count + varint token stream (0 = zero run)."""
+    out = u32(len(vals) if declared is None else declared)
+    i = 0
+    while i < len(vals):
+        if vals[i] == 0:
+            run = 1
+            while i + run < len(vals) and vals[i + run] == 0:
+                run += 1
+            out += varint(0) + varint(run)
+            i += run
+        else:
+            out += varint(vals[i])
+            i += 1
+    return out
+
+
+def main():
+    files = {
+        # valid absorb-state checkpoint, == fuzz::sample_checkpoint()
+        "ok_ckpt_v3.bin": artifact_v3("absorb-state", ckpt_params(), ckpt_payload()),
+        # header declares shards=0 (CRCs valid) -> typed InvalidParams
+        "bad_ckpt_shards0.bin": artifact_v3("absorb-state", ckpt_params(shards=0), ckpt_payload()),
+        # 11 continuation bytes -> "varint overflows u64", never a hang
+        "bad_codec_varint_overflow.bin": b"\xff" * 11,
+        # declares 8 elements, then a zero run of 100 -> overrun error
+        "bad_codec_rle_overrun.bin": u32(8) + varint(0) + varint(100),
+        # well-formed packed block (mixed zero runs and values)
+        "ok_packed_block.bin": packed([3, 0, 0, 0, 7, 0, 1, 300]),
+        # header-only prefix: magic + version, everything else missing
+        "bad_artifact_header_only.bin": b"SPRX" + u16(3),
+    }
+    for name, data in files.items():
+        with open(name, "wb") as fh:
+            fh.write(data)
+        print(f"{name}: {len(data)} bytes")
+
+    with open("ok_serve_lines.txt", "w") as fh:
+        fh.write("1 3 0.5\n# a comment line\n\n2 0 red->blue\n17 7 -2.25\n")
+    with open("bad_serve_lines.txt", "w") as fh:
+        fh.write("not numbers at all\n1 2\n1 x notanum\nnan 3 0.5\n1 3 zero->\n1 3 inf\n")
+    print("ok_serve_lines.txt / bad_serve_lines.txt written")
+
+
+if __name__ == "__main__":
+    main()

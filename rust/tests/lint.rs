@@ -1,0 +1,135 @@
+//! Self-test for `sparx-lint` (ISSUE 7 acceptance): the repo at HEAD is
+//! clean under every rule, and a seeded violation of *each* rule makes
+//! the binary exit non-zero. Seeded trees are written under the OS temp
+//! dir so the repo's own `src/` is never touched.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+/// Run the `sparx_lint` binary against `root`, returning
+/// (exit code, stdout).
+fn lint_bin(root: &Path, json: bool) -> (i32, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sparx_lint"));
+    if json {
+        cmd.arg("--json");
+    }
+    cmd.arg("--root").arg(root);
+    let out = cmd.output().expect("spawn sparx_lint");
+    (out.status.code().unwrap_or(-1), String::from_utf8_lossy(&out.stdout).into_owned())
+}
+
+fn repo_src() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+/// Write a one-file source tree under the temp dir and return its root.
+fn seeded_tree(name: &str, rel: &str, contents: &str) -> PathBuf {
+    let root = std::env::temp_dir()
+        .join("sparx-lint-selftest")
+        .join(format!("{}-{name}", std::process::id()));
+    let file = root.join(rel);
+    std::fs::create_dir_all(file.parent().expect("rel has a parent dir")).expect("mkdir tree");
+    std::fs::write(&file, contents).expect("write seeded source");
+    root
+}
+
+#[test]
+fn repo_at_head_is_clean_via_lib() {
+    let findings = sparx::lint::run_dir(&repo_src()).expect("lint the crate's own src/");
+    assert!(
+        findings.is_empty(),
+        "sparx-lint must be clean on the repo at HEAD, found:\n{findings:#?}"
+    );
+}
+
+#[test]
+fn repo_at_head_is_clean_via_binary() {
+    let (code, out) = lint_bin(&repo_src(), false);
+    assert_eq!(code, 0, "binary should exit 0 on a clean tree, said:\n{out}");
+    assert!(out.contains("clean"), "{out}");
+}
+
+/// One seeded violation per rule; the binary must exit 1 and name the
+/// rule. This is the proof that every registered rule actually fires.
+#[test]
+fn each_rule_fires_on_a_seeded_violation() {
+    let cases: &[(&str, &str, &str)] = &[
+        ("no-panic-paths", "main.rs", "fn f(v: Option<u8>) -> u8 { v.unwrap() }\n"),
+        (
+            "unsafe-whitelist",
+            "sparx/plan.rs",
+            "fn f() { unsafe { core::hint::unreachable_unchecked() } }\n",
+        ),
+        (
+            "error-taxonomy",
+            "data/loader.rs",
+            "pub fn save(p: &str) -> std::io::Result<()> { std::fs::write(p, b\"x\") }\n",
+        ),
+        (
+            "cms-encapsulation",
+            "sparx/plan.rs",
+            "fn peek(c: &CountMinSketch) -> Vec<u32> { c.counts_u32() }\n",
+        ),
+    ];
+    for (rule, rel, src) in cases {
+        let root = seeded_tree(&format!("rule-{rule}"), rel, src);
+        let (code, out) = lint_bin(&root, false);
+        assert_eq!(code, 1, "seeded `{rule}` violation must exit 1, said:\n{out}");
+        assert!(out.contains(&format!("[{rule}]")), "`{rule}` not named in:\n{out}");
+    }
+}
+
+/// The SAFETY-comment requirement is a second mode of unsafe-whitelist:
+/// whitelisted file, bare `unsafe`, no justification.
+#[test]
+fn unsafe_in_whitelisted_file_still_needs_safety_comment() {
+    let bare = "fn f() { unsafe { core::hint::unreachable_unchecked() } }\n";
+    let root = seeded_tree("unsafe-nosafety", "sparx/chain.rs", bare);
+    let (code, out) = lint_bin(&root, false);
+    assert_eq!(code, 1, "{out}");
+    assert!(out.contains("SAFETY"), "{out}");
+
+    let ok = "fn f() {\n    // SAFETY: provably unreachable\n    unsafe {\n        \
+              core::hint::unreachable_unchecked()\n    }\n}\n";
+    let root = seeded_tree("unsafe-safety", "sparx/chain.rs", ok);
+    let (code, out) = lint_bin(&root, false);
+    assert_eq!(code, 0, "{out}");
+}
+
+#[test]
+fn escape_comment_suppresses_a_finding() {
+    let src = "fn f(v: Option<u8>) -> u8 {\n    // lint:allow(no-panic-paths)\n    v.unwrap()\n}\n";
+    let root = seeded_tree("escape", "main.rs", src);
+    let (code, out) = lint_bin(&root, false);
+    assert_eq!(code, 0, "escaped finding must not fail the lint:\n{out}");
+}
+
+#[test]
+fn json_output_shape() {
+    let root = seeded_tree("json", "main.rs", "fn f(v: Option<u8>) -> u8 { v.unwrap() }\n");
+    let (code, out) = lint_bin(&root, true);
+    assert_eq!(code, 1);
+    assert!(out.starts_with("{\"count\":1,"), "{out}");
+    assert!(out.contains("\"rule\":\"no-panic-paths\""), "{out}");
+    assert!(out.contains("\"file\":\"main.rs\""), "{out}");
+    assert!(out.contains("\"line\":1"), "{out}");
+
+    let clean = seeded_tree("json-clean", "lib.rs", "fn ok() {}\n");
+    let (code, out) = lint_bin(&clean, true);
+    assert_eq!(code, 0);
+    assert_eq!(out.trim(), "{\"count\":0,\"findings\":[]}");
+}
+
+#[test]
+fn usage_errors_exit_2() {
+    let out = Command::new(env!("CARGO_BIN_EXE_sparx_lint"))
+        .arg("--no-such-flag")
+        .output()
+        .expect("spawn sparx_lint");
+    assert_eq!(out.status.code(), Some(2));
+    let out = Command::new(env!("CARGO_BIN_EXE_sparx_lint"))
+        .args(["--root", "/nonexistent/lint/selftest/path"])
+        .output()
+        .expect("spawn sparx_lint");
+    assert_eq!(out.status.code(), Some(2));
+}
