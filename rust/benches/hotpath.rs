@@ -21,6 +21,9 @@
 //!                  sizes
 //!   * `serve`    — sharded serve throughput at S = 1, 2, 4, 8 (CI
 //!                  publishes its lines as the step summary)
+//!   * `net`      — serve-over-TCP throughput through the real wire
+//!                  path: a bound `Server`, loopback clients writing
+//!                  update lines and reading replies
 //!
 //! Modes:
 //!   * `--json` additionally writes `BENCH_hotpath.json` (per-kernel
@@ -46,7 +49,7 @@ use sparx::sparx::{
 use sparx::util::{Json, Rng};
 
 const SECTIONS: &[&str] =
-    &["bins", "cms", "project", "pjrt", "dist", "artifact", "stream", "serve"];
+    &["bins", "cms", "project", "pjrt", "dist", "artifact", "stream", "serve", "net"];
 
 /// One timed result, as printed and as written to `BENCH_hotpath.json`.
 struct Entry {
@@ -119,6 +122,13 @@ struct ServeData {
     resident_ensemble_bytes: u64,
 }
 
+/// Serve-over-TCP result (the `net` section of `BENCH_serve.json`).
+struct NetData {
+    clients: usize,
+    shards: usize,
+    updates_per_s: f64,
+}
+
 fn host_label() -> String {
     std::env::var("BENCH_HOST").unwrap_or_else(|_| "unknown".into())
 }
@@ -145,11 +155,12 @@ fn main() {
 
     run_sections(&mut rec);
     let serve = serve_throughput(&rec);
+    let net = net_throughput(&rec);
 
     if json_mode {
         write_hotpath_json(&rec);
-        if let Some(s) = &serve {
-            write_serve_json(s);
+        if serve.is_some() || net.is_some() {
+            write_serve_json(serve.as_ref(), net.as_ref());
         }
     }
     println!("done");
@@ -442,23 +453,25 @@ fn serve_throughput(rec: &Recorder) -> Option<ServeData> {
         bytes as u64
     };
 
+    // the cache budget is GLOBAL since the feeder-directory refactor:
+    // every arm holds the same total, so eviction decisions — and the
+    // scores — are bit-identical at every S; only the wall clock moves
     let cache_total = 16_384usize;
     let mut base = 0.0f64;
     let mut ladder = Vec::new();
     for shards in [1usize, 2, 4, 8] {
-        let per_shard = (cache_total / shards).max(1);
         // sharded arms clone the replay *outside* the timed region:
         // submit() consumes updates, and cloning inside the clock would
         // charge them String allocations the S=1 arm never pays
         let (processed, dt) = if shards == 1 {
-            let mut scorer = StreamScorer::new(&model, per_shard).unwrap();
+            let mut scorer = StreamScorer::new(&model, cache_total).unwrap();
             let t0 = std::time::Instant::now();
             for u in &updates {
                 scorer.update(u);
             }
             (scorer.processed(), t0.elapsed().as_secs_f64())
         } else {
-            let mut scorer = ShardedStreamScorer::new(&model, shards, per_shard).unwrap();
+            let mut scorer = ShardedStreamScorer::new(&model, shards, cache_total).unwrap();
             let replay = updates.clone();
             let t0 = std::time::Instant::now();
             for u in replay {
@@ -476,6 +489,101 @@ fn serve_throughput(rec: &Recorder) -> Option<ServeData> {
         ladder.push((shards, rate, speedup));
     }
     Some(ServeData { ladder, resident_ensemble_bytes: resident })
+}
+
+/// `net` section: the serve path again, but through the real TCP
+/// ingress — a bound `Server`, loopback clients writing update lines
+/// and reading replies concurrently. The gap between this line and the
+/// in-process `serve` ladder is the wire + framing overhead; both land
+/// in `BENCH_serve.json`.
+fn net_throughput(rec: &Recorder) -> Option<NetData> {
+    if !rec.runs("net") {
+        return None;
+    }
+    use sparx::cluster::ClusterConfig;
+    use sparx::data::generators::GisetteGen;
+    use sparx::data::StreamGen;
+    use sparx::serve::{Engine, Server};
+    use sparx::sparx::{ShardedStreamScorer, SparxModel, SparxParams};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let ctx = ClusterConfig { num_partitions: 4, ..Default::default() }.build();
+    let ld = GisetteGen { n: 1000, d: 64, ..Default::default() }.generate(&ctx).unwrap();
+    let model = SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 25, num_chains: 25, depth: 10, ..Default::default() },
+    )
+    .unwrap();
+    let (clients, shards, per_client) = (4usize, 4usize, 25_000usize);
+    let scorer = ShardedStreamScorer::new(&model, shards, 16_384).unwrap();
+    let server = Server::bind("127.0.0.1:0", Engine::new(scorer, "bench.sparx", None)).unwrap();
+    let addr = server.local_addr();
+    let server = std::thread::spawn(move || server.run());
+
+    let mut gen = StreamGen::new(20_000, ld.dataset.schema.names.clone(), 0xBEEF);
+    let batches: Vec<String> = (0..clients)
+        .map(|_| {
+            let mut text = String::new();
+            for _ in 0..per_client {
+                text.push_str(&gen.next_update().to_line());
+                text.push('\n');
+            }
+            text
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let workers: Vec<_> = batches
+        .into_iter()
+        .map(|payload| {
+            std::thread::spawn(move || -> u64 {
+                let sock = TcpStream::connect(addr).expect("connect to the bench server");
+                let mut wr = sock.try_clone().expect("clone the client socket");
+                // write from a side thread while this thread reads, so a
+                // full pending window never wedges the client
+                let push = std::thread::spawn(move || {
+                    wr.write_all(payload.as_bytes()).expect("write updates");
+                    wr.write_all(b"QUIT\n").expect("write QUIT");
+                });
+                // read to EOF: the server half-closes after draining, and
+                // queued score replies may legitimately land after OK bye
+                let mut replies = 0u64;
+                for line in BufReader::new(sock).lines() {
+                    let Ok(line) = line else { break };
+                    if (line.starts_with("OK ") && line != "OK bye") || line.starts_with("BUSY ") {
+                        replies += 1;
+                    }
+                }
+                push.join().expect("client writer half");
+                replies
+            })
+        })
+        .collect();
+    let replies: u64 = workers.into_iter().map(|w| w.join().expect("client thread")).sum();
+    let dt = t0.elapsed().as_secs_f64();
+
+    {
+        let mut ctl = TcpStream::connect(addr).expect("connect for SHUTDOWN");
+        ctl.write_all(b"SHUTDOWN\n").expect("write SHUTDOWN");
+        let mut line = String::new();
+        let _ = BufReader::new(ctl).read_line(&mut line);
+    }
+    let scorer = server.join().expect("server thread").expect("server run");
+    let report = scorer.finish();
+    assert_eq!(
+        replies,
+        (clients * per_client) as u64,
+        "every request line must be answered (OK or BUSY)"
+    );
+    let rate = report.processed() as f64 / dt.max(1e-9);
+    println!(
+        "serve-over-TCP  C={clients} S={shards} {rate:>10.0} updates/s  ({} accepted of {} sent)",
+        report.processed(),
+        clients * per_client
+    );
+    Some(NetData { clients, shards, updates_per_s: rate })
 }
 
 // ------------------------------------------------------------- json I/O
@@ -524,25 +632,41 @@ fn write_hotpath_json(rec: &Recorder) {
     println!("(wrote BENCH_hotpath.json)");
 }
 
-fn write_serve_json(serve: &ServeData) {
+fn write_serve_json(serve: Option<&ServeData>, net: Option<&NetData>) {
     let ladder: Vec<Json> = serve
-        .ladder
-        .iter()
-        .map(|&(shards, rate, speedup)| {
-            Json::obj(vec![
-                ("shards", Json::Num(shards as f64)),
-                ("updates_per_s", Json::Num(rate)),
-                ("speedup_vs_s1", Json::Num(speedup)),
-            ])
+        .map(|s| {
+            s.ladder
+                .iter()
+                .map(|&(shards, rate, speedup)| {
+                    Json::obj(vec![
+                        ("shards", Json::Num(shards as f64)),
+                        ("updates_per_s", Json::Num(rate)),
+                        ("speedup_vs_s1", Json::Num(speedup)),
+                    ])
+                })
+                .collect()
         })
-        .collect();
-    let doc = Json::obj(vec![
+        .unwrap_or_default();
+    let mut fields = vec![
         ("schema", Json::Str("sparx-bench-serve/1".into())),
         ("host", Json::Str(host_label())),
         ("kernel", Json::Str(kernel_path().into())),
         ("ladder", Json::Arr(ladder)),
-        ("resident_ensemble_bytes", Json::Num(serve.resident_ensemble_bytes as f64)),
-    ]);
+    ];
+    if let Some(s) = serve {
+        fields.push(("resident_ensemble_bytes", Json::Num(s.resident_ensemble_bytes as f64)));
+    }
+    if let Some(n) = net {
+        fields.push((
+            "net",
+            Json::obj(vec![
+                ("clients", Json::Num(n.clients as f64)),
+                ("shards", Json::Num(n.shards as f64)),
+                ("updates_per_s", Json::Num(n.updates_per_s)),
+            ]),
+        ));
+    }
+    let doc = Json::obj(fields);
     std::fs::write("BENCH_serve.json", format!("{doc}\n")).expect("write BENCH_serve.json");
     println!("(wrote BENCH_serve.json)");
 }
@@ -652,6 +776,13 @@ fn table(args: &[String]) -> i32 {
             let r = e.get("updates_per_s").and_then(Json::as_f64).unwrap_or(0.0);
             let x = e.get("speedup_vs_s1").and_then(Json::as_f64).unwrap_or(0.0);
             println!("| {s} | {r:.0} | {x:.2}x |");
+        }
+        if let Some(net) = doc.get("net") {
+            let c = net.get("clients").and_then(Json::as_usize).unwrap_or(0);
+            let s = net.get("shards").and_then(Json::as_usize).unwrap_or(0);
+            let r = net.get("updates_per_s").and_then(Json::as_f64).unwrap_or(0.0);
+            println!();
+            println!("serve-over-TCP: {r:.0} updates/s ({c} clients, S={s})");
         }
         return 0;
     }

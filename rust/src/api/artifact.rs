@@ -70,8 +70,11 @@ pub const MAGIC: [u8; 4] = *b"SPRX";
 
 /// Current artifact format version. Readers accept v1 through this;
 /// any other value is rejected with a typed error rather than guessing
-/// at the layout.
-pub const FORMAT_VERSION: u16 = 3;
+/// at the layout. v4 changes only the absorb-state checkpoint payload
+/// (global recency-tagged entries instead of per-shard snapshots — see
+/// [`crate::sparx::checkpoint`]); fitted-model blocks are byte-identical
+/// to v3.
+pub const FORMAT_VERSION: u16 = 4;
 
 /// Name of the provenance extension block.
 const MANIFEST_BLOCK: &str = "manifest";

@@ -400,9 +400,9 @@ impl FittedModel for FittedSparx {
     fn stream_scorer_sharded(
         &self,
         shards: usize,
-        cache_per_shard: usize,
+        cache_total: usize,
     ) -> Result<ShardedStreamScorer> {
-        ShardedStreamScorer::new(&self.model, shards, cache_per_shard)
+        ShardedStreamScorer::new(&self.model, shards, cache_total)
     }
 
     fn served_ensemble(&self) -> Result<std::sync::Arc<ServedEnsemble>> {

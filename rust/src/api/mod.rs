@@ -109,19 +109,20 @@ pub trait FittedModel {
     }
 
     /// Open the **sharded** concurrent front-end: `shards` shared-nothing
-    /// workers (updates route by `murmur(ID) % shards`), each with its
-    /// own LRU of `cache_per_shard` IDs. Concurrency never changes a
-    /// score: every shard is bit-identical to a single-threaded
-    /// [`stream_scorer`](Self::stream_scorer) fed its sub-stream, and
-    /// while no shard evicts, per-ID score sequences are bit-identical
-    /// across shard counts too (eviction timing depends on which IDs
-    /// share an LRU). Default: unsupported.
+    /// workers (updates route by `murmur(ID) % shards`) behind one
+    /// feeder-owned LRU directory holding `cache_total` IDs **in total**.
+    /// Eviction decisions are made globally by the feeder, so the shard
+    /// count is pure parallelism: per-ID score sequences are
+    /// bit-identical to a single-threaded
+    /// [`stream_scorer`](Self::stream_scorer) with the same total cache,
+    /// at *any* `shards` — including across a live re-shard or a
+    /// checkpoint/resume that changes the count. Default: unsupported.
     fn stream_scorer_sharded(
         &self,
         shards: usize,
-        cache_per_shard: usize,
+        cache_total: usize,
     ) -> Result<ShardedStreamScorer> {
-        let _ = (shards, cache_per_shard);
+        let _ = (shards, cache_total);
         Err(SparxError::Unsupported(format!(
             "{} has no evolving-stream front-end (only sparx does)",
             self.name()

@@ -218,6 +218,25 @@ impl<T: Send + 'static, S: Send + 'static> PinnedPool<T, S> {
         let _ = self.senders[w].send(item);
     }
 
+    /// Non-blocking [`send`](Self::send): enqueue `item` on worker `w`'s
+    /// queue if there is room *right now*, otherwise hand the item back
+    /// as `Err` so the caller can surface backpressure (the TCP ingress
+    /// turns this into a `BUSY` response instead of stalling every
+    /// connection on one hot shard). Mirrors `send`'s panicked-worker
+    /// behaviour: a dead worker's item is discarded and reported `Ok`,
+    /// with the panic surfacing at [`join`](Self::join).
+    pub fn try_send(&self, w: usize, item: T) -> Result<(), T> {
+        use std::sync::mpsc::TrySendError;
+        match self.senders.get(w) {
+            Some(tx) => match tx.try_send(item) {
+                Ok(()) => Ok(()),
+                Err(TrySendError::Full(item)) => Err(item),
+                Err(TrySendError::Disconnected(_)) => Ok(()),
+            },
+            None => Ok(()),
+        }
+    }
+
     /// Close every queue (by dropping the senders), wait for the workers
     /// to drain them, and return the final states in worker order.
     /// Panics in workers propagate.
@@ -319,6 +338,36 @@ mod tests {
         }
         let joined = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.join()));
         assert!(joined.is_err(), "join must propagate the worker panic");
+    }
+
+    #[test]
+    fn pinned_pool_try_send_reports_would_block_deterministically() {
+        use std::sync::{Arc, Barrier};
+        // Worker blocks on a barrier while handling item 0, so the queue
+        // (cap 1) fills deterministically: item 1 occupies the slot,
+        // item 2 must come back as Err.
+        let gate = Arc::new(Barrier::new(2));
+        let g = gate.clone();
+        let pool: PinnedPool<u64, u64> = PinnedPool::spawn(vec![0u64], 1, move |state, item| {
+            if item == 0 {
+                g.wait();
+            }
+            *state += item;
+        });
+        pool.send(0, 0); // worker picks this up and parks on the barrier
+        // wait until the worker has dequeued item 0 (the queue frees up)
+        loop {
+            match pool.try_send(0, 1) {
+                Ok(()) => break,
+                Err(_) => std::thread::yield_now(),
+            }
+        }
+        let rejected = pool.try_send(0, 2);
+        assert_eq!(rejected, Err(2), "full queue must hand the item back");
+        gate.wait(); // release the worker
+        pool.send(0, 3);
+        let states = pool.join();
+        assert_eq!(states[0], 4, "rejected item 2 was silently enqueued (0+1+3 expected)");
     }
 
     #[test]

@@ -103,6 +103,7 @@ pub mod hash;
 pub mod lint;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod sparx;
 pub mod testing;
 pub mod util;

@@ -33,15 +33,24 @@ mod scanner;
 use std::path::Path;
 
 /// Files where panicking constructs are forbidden (the load/serve/decode
-/// paths; `main.rs` is the CLI binary root).
+/// paths; `main.rs` is the CLI binary root). An entry ending in `/`
+/// covers every file under that directory — the TCP serving plane is
+/// scoped as a whole, so new `serve/` modules are born under the rule.
 const NO_PANIC_PATHS: &[&str] = &[
     "api/artifact.rs",
     "api/registry.rs",
     "util/codec.rs",
     "sparx/checkpoint.rs",
     "sparx/sharded.rs",
+    "serve/",
     "main.rs",
 ];
+
+/// Whether `rel` falls under a path list that may mix exact file paths
+/// and `dir/` prefixes.
+fn in_scope(paths: &[&str], rel: &str) -> bool {
+    paths.iter().any(|p| if p.ends_with('/') { rel.starts_with(p) } else { rel == *p })
+}
 
 /// The only modules allowed to contain `unsafe` (the AVX2 binning kernel
 /// and the pool's direct `clock_gettime` call).
@@ -195,7 +204,7 @@ fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), Strin
 // ------------------------------------------------------------- rules
 
 fn check_no_panic_paths(sf: &SourceFile, out: &mut Vec<Finding>) {
-    if !NO_PANIC_PATHS.contains(&sf.rel.as_str()) {
+    if !in_scope(NO_PANIC_PATHS, &sf.rel) {
         return;
     }
     for token in PANIC_TOKENS {
@@ -412,6 +421,15 @@ mod tests {
         let clean = "fn g() { let v = vec![0u8; 4]; for _x in [1, 2] {} \
                      let _t: [u8; 2] = [0, 0]; }\n";
         assert!(check_source("sparx/sharded.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn serve_directory_is_in_panic_scope() {
+        let src = "fn f(v: Option<u8>) -> u8 { v.unwrap() }\n";
+        assert_eq!(check_source("serve/wire.rs", src).len(), 1);
+        assert_eq!(check_source("serve/conn.rs", src).len(), 1);
+        // a sibling named like the directory is not swept in
+        assert!(check_source("server.rs", src).is_empty());
     }
 
     #[test]

@@ -28,6 +28,7 @@
 //!                [--backend native|pjrt]
 //!                [--checkpoint-out c.sparx [--checkpoint-every N]]
 //!                [--resume c.sparx] [--watch] [--absorb]
+//!                [--listen ADDR]               # TCP ingress instead of a file
 //!                [--score-log FILE|-]          # ⟨ID, F, δ⟩ loop, §3.5
 //! sparx detect   --method … [fit flags] [--out scores.csv]   # fit+score in one
 //! sparx experiment <table2|table3|table4|fig2|fig3|fig4|fig5|fig6|all>
@@ -42,36 +43,46 @@
 //! lines skipped): `ID FEATURE δ` for numeric increments, and
 //! `ID FEATURE old->new` (empty `old` for a newly arising value) for
 //! categorical substitutions. With `--shards S > 1` (default: the
-//! machine's available parallelism — pass `--shards` explicitly for
-//! machine-independent output) updates are partitioned by
-//! `murmur(ID) % S` across S shard worker threads, each owning its own
-//! LRU of `--cache` IDs. Each shard scores bit-identically to a
-//! single-threaded scorer fed its sub-stream; while no shard evicts,
-//! per-ID scores are bit-identical to `--shards 1` too (eviction timing
-//! depends on which IDs share an LRU, so an over-subscribed cache can
-//! reset sketches at different points per shard count). `--backend
+//! machine's available parallelism) updates are partitioned by
+//! `murmur(ID) % S` across S shard worker threads. `--cache N` is the
+//! **total** resident-sketch budget: eviction decisions come from one
+//! global recency directory and absorb increments publish on a fixed
+//! epoch schedule, so per-ID score sequences are **bit-identical at any
+//! shard count** — `--shards` is purely a parallelism knob. `--backend
 //! native` on `score`/`serve` overrides the backend a sparx artifact
 //! was fitted with (scores are backend-identical, so a PJRT-fitted
 //! model can be served without the compiled AOT modules).
 //!
-//! Serving state is durable and hot-swappable: all shards score against
-//! **one** Arc-shared read-only ensemble; `--checkpoint-out PATH`
-//! (periodically with `--checkpoint-every N`, and always at the end of
-//! the stream) atomically writes the merged per-shard absorb state —
-//! LRU sketches, absorbed CMS deltas (`--absorb`), counters — as a
-//! format-v2 artifact, and `--resume PATH` restores it so a restarted
-//! server continues the stream **bit-for-bit** (same model, same
-//! `--shards`/`--cache`; mismatches fail typed). `--watch` polls the
-//! model file between batches and atomically swaps the ensemble when it
-//! changes, carrying absorb state forward when the serving schema
-//! matches and rejecting typed when it does not. `--score-log FILE|-`
-//! records every score and writes them in global submit order (`id
-//! score-bits-hex` per line; with `-` the log owns stdout and human
-//! output moves to stderr) — what the lifecycle-e2e CI job diffs
-//! across a kill/resume boundary. Recording buffers the whole run's
-//! scores in memory and writes at stream end (the submit order can
-//! only be reassembled once every shard has drained), so it is a
+//! Serving state is durable, elastic and hot-swappable: all shards
+//! score against **one** Arc-shared read-only ensemble;
+//! `--checkpoint-out PATH` (periodically with `--checkpoint-every N`,
+//! and always at the end of the stream) atomically writes the global
+//! absorb state — sketches in global recency order, the visible and
+//! pending CMS overlays (`--absorb`), counters — as a format-v4
+//! artifact, and `--resume PATH` restores it so a restarted server
+//! continues the stream **bit-for-bit**. The checkpoint is
+//! layout-independent: resume requires the same model and absorb mode
+//! but may pick a **different** `--shards`/`--cache`. `--watch` polls
+//! the model file between batches and atomically swaps the ensemble
+//! when it changes, carrying absorb state forward when the serving
+//! schema matches and rejecting typed when it does not.
+//! `--score-log FILE|-` records every score and writes them in global
+//! submit order (`id score-bits-hex` per line; with `-` the log owns
+//! stdout and human output moves to stderr) — what the lifecycle-e2e
+//! CI job diffs across a kill/resume boundary. Recording buffers the
+//! whole run's scores in memory and writes at stream end, so it is a
 //! bounded-run diagnostic, not a steady-state access log.
+//!
+//! `--listen ADDR` serves the same grammar over TCP instead of a
+//! file/stdin (see `sparx::serve`): concurrent clients submit update
+//! lines and control verbs (`SCORE`, `STATS`, `METRICS`, `CHECKPOINT`,
+//! `RESHARD N`, `QUIT`, `SHUTDOWN`), scores stream back per
+//! connection, a full shard queue answers `BUSY` instead of dropping,
+//! and `RESHARD` re-partitions the running pool live without losing a
+//! queued update. `listening on <addr>` is printed to stderr (port `0`
+//! picks a free port). Incompatible with `--updates`/`--count`/
+//! `--seed`/`--watch`/`--checkpoint-every`; `--checkpoint-out` arms
+//! the `CHECKPOINT` verb and the final cut at `SHUTDOWN`.
 
 use std::collections::HashMap;
 use std::str::FromStr;
@@ -542,15 +553,7 @@ fn file_stamp(path: &str) -> Option<(std::time::SystemTime, u64)> {
 /// (temp + rename), with provenance in the manifest.
 fn write_checkpoint(scorer: &mut ShardedStreamScorer, out: &str, model_path: &str) -> CliResult {
     let ckpt = scorer.checkpoint()?;
-    let manifest = vec![
-        ("kind".into(), "absorb-state checkpoint".into()),
-        ("model".into(), model_path.into()),
-        ("model-fingerprint".into(), format!("{:08x}", ckpt.model_fingerprint)),
-        ("submitted".into(), ckpt.submitted.to_string()),
-        ("shards".into(), ckpt.shards.to_string()),
-        ("cache-per-shard".into(), ckpt.cache_per_shard.to_string()),
-        ("absorb".into(), ckpt.absorb.to_string()),
-    ];
+    let manifest = ckpt.manifest_for(model_path);
     ckpt.save(out, manifest)?;
     Ok(())
 }
@@ -633,6 +636,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
             "resume",
             "watch",
             "absorb",
+            "listen",
             "score-log",
         ],
     )?;
@@ -641,15 +645,32 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         .cloned()
         .ok_or_else(|| usage_err("serve requires --model <file>".into()))?;
     let backend = parse_backend_flag(flags)?;
+    let listen = flags.get("listen").cloned();
+    if listen.is_some() {
+        // the TCP ingress replaces the file/synthetic stream, and its
+        // control plane replaces the between-updates polling hooks —
+        // silently ignoring any of these would break the CLI's
+        // no-ignored-flags rule
+        for inapplicable in ["updates", "count", "seed", "watch", "checkpoint-every"] {
+            if flags.contains_key(inapplicable) {
+                return Err(usage_err(format!(
+                    "--{inapplicable} does not apply with --listen (clients drive the \
+                     stream; use the CHECKPOINT verb for mid-stream cuts)"
+                )));
+            }
+        }
+    }
     let resume = match flags.get("resume") {
         Some(p) => Some(AbsorbCheckpoint::load(p)?),
         None => None,
     };
-    // an unflagged --cache/--shards adopts the resumed checkpoint's
-    // layout (explicit flags still win and are validated against it)
+    // an unflagged --cache adopts the resumed checkpoint's total budget;
+    // an explicit flag wins — the v4 checkpoint is layout-independent,
+    // so a different budget (like a different shard count) still
+    // continues bit-identically
     let cache = match flag_opt(flags, "cache")? {
         Some(c) => c,
-        None => resume.as_ref().map(|c| c.cache_per_shard as usize).unwrap_or(4096),
+        None => resume.as_ref().map(|c| c.cache_total as usize).unwrap_or(4096),
     };
     let default_shards = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let shards = match flag_opt(flags, "shards")? {
@@ -687,12 +708,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         }
     };
     status(format!(
-        "serving {} model from {path} ({}B payload, {shards} shard(s) × LRU {cache} ids)",
+        "serving {} model from {path} ({}B payload, {shards} shard(s), total LRU budget \
+         {cache} ids)",
         model.name(),
         model.model_bytes()
     ));
-    let plain =
-        !absorb && !watch && score_log.is_none() && ckpt_out.is_none() && resume.is_none();
+    let plain = !absorb
+        && !watch
+        && score_log.is_none()
+        && ckpt_out.is_none()
+        && resume.is_none()
+        && listen.is_none();
     if shards == 1 && plain {
         // single-threaded fast path: no queues, no worker threads
         let mut scorer = model.stream_scorer(cache)?;
@@ -738,40 +764,52 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         ShardedStreamScorer::from_ensemble(ensemble, shards, cache, opts, resume.as_ref())?;
     let resumed_offset = resume.as_ref().map(|c| c.submitted).unwrap_or(0);
     if let Some(ckpt) = &resume {
-        let resident: usize = ckpt.snapshots.iter().map(|s| s.entries.len()).sum();
         status(format!(
             "resumed from checkpoint: {} updates already absorbed into the stream state, \
-             {resident} sketches resident across {} shard(s)",
-            ckpt.submitted, ckpt.shards
+             {} sketches resident (captured at {} shard(s), re-partitioned to {shards})",
+            ckpt.submitted,
+            ckpt.entries.len(),
+            ckpt.shards
         ));
     }
-    let names = scorer.feature_names().map(|n| n.to_vec());
-    let mut watch_stamp = if watch { file_stamp(&path) } else { None };
-    let mut since_ckpt = 0u64;
-    let mut since_watch = 0u64;
     let t0 = std::time::Instant::now();
-    for_each_update(flags, names.as_deref(), |u| {
-        scorer.submit(u);
-        if ckpt_every > 0 {
-            since_ckpt += 1;
-            if since_ckpt >= ckpt_every {
-                since_ckpt = 0;
-                // flag validation rejects --checkpoint-every without
-                // --checkpoint-out, so `out` is always present here
-                if let Some(out) = ckpt_out.as_deref() {
-                    write_checkpoint(&mut scorer, out, &path)?;
+    if let Some(addr) = &listen {
+        // TCP ingress: hand the scorer to the serving plane; it comes
+        // back at SHUTDOWN for the shared finalization below
+        let engine = sparx::serve::Engine::new(scorer, path.clone(), ckpt_out.clone());
+        let server = sparx::serve::Server::bind(addr, engine)?;
+        // stderr, always: `--score-log -` owns stdout, and harnesses
+        // parse this line to learn a port-0 assignment
+        eprintln!("listening on {}", server.local_addr());
+        scorer = server.run()?;
+    } else {
+        let names = scorer.feature_names().map(|n| n.to_vec());
+        let mut watch_stamp = if watch { file_stamp(&path) } else { None };
+        let mut since_ckpt = 0u64;
+        let mut since_watch = 0u64;
+        for_each_update(flags, names.as_deref(), |u| {
+            scorer.submit(u);
+            if ckpt_every > 0 {
+                since_ckpt += 1;
+                if since_ckpt >= ckpt_every {
+                    since_ckpt = 0;
+                    // flag validation rejects --checkpoint-every without
+                    // --checkpoint-out, so `out` is always present here
+                    if let Some(out) = ckpt_out.as_deref() {
+                        write_checkpoint(&mut scorer, out, &path)?;
+                    }
                 }
             }
-        }
-        if watch {
-            since_watch += 1;
-            if since_watch >= WATCH_POLL_UPDATES {
-                since_watch = 0;
-                check_reload(&mut scorer, &path, backend, &mut watch_stamp)?;
+            if watch {
+                since_watch += 1;
+                if since_watch >= WATCH_POLL_UPDATES {
+                    since_watch = 0;
+                    check_reload(&mut scorer, &path, backend, &mut watch_stamp)?;
+                }
             }
-        }
-        Ok(())
-    })?;
+            Ok(())
+        })?;
+    }
     if let Some(out) = &ckpt_out {
         // the final cut: covers every update of this run, so a restart
         // with --resume continues exactly at the end of the stream
@@ -786,18 +824,18 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
     let total = report.processed();
     let this_run = total - resumed_offset;
     status(format!(
-        "processed {this_run} δ-updates in {dt:.3}s ({:.0} updates/s) across {shards} \
-         shards ({total} total over the stream's lifetime), cache {}/{} ids, {} evictions, \
-         {} absorbed",
+        "processed {this_run} δ-updates in {dt:.3}s ({:.0} updates/s) across {} \
+         shards ({total} total over the stream's lifetime), cache {}/{cache} ids, \
+         {} evictions, {} absorbed",
         this_run as f64 / dt.max(1e-9),
+        report.shards.len(),
         report.cached_ids(),
-        shards * cache,
         report.evictions(),
         report.absorbed()
     ));
     for (i, s) in report.shards.iter().enumerate() {
         status(format!(
-            "  shard {i}: {} updates, cache {}/{cache} ids, {} evictions",
+            "  shard {i}: {} updates, {} cached ids, {} evictions",
             s.processed, s.cached_ids, s.evictions
         ));
     }

@@ -1,0 +1,328 @@
+//! Per-connection plumbing: one reader thread (this function) plus one
+//! writer thread per accepted socket.
+//!
+//! The reader owns line framing (with the [`MAX_LINE_BYTES`] cap),
+//! parses each request and drives the shared engine; score replies
+//! travel from the shard workers through an **unbounded** per-connection
+//! channel to the writer thread, so a worker never blocks on a slow
+//! consumer. What bounds a slow consumer instead is the connection's
+//! **pending window**: the reader stops pulling new requests while
+//! [`PENDING_WINDOW`] replies are still unwritten, which stalls only
+//! this client's TCP stream — every other connection and every shard
+//! keeps flowing. Error responses (`ERR`, `BUSY`) are written by the
+//! reader directly; the socket is mutex-guarded so lines never
+//! interleave mid-line.
+//!
+//! Close protocol (`QUIT`, `SHUTDOWN`, or the client half-closing its
+//! send side): the reader flushes the engine, waits for the window to
+//! drain — every accepted update still gets its reply, which is what
+//! makes a half-closed socket a *graceful* way to end a batch — then
+//! closes the channel so the writer exits, and shuts the socket down.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::sparx::sharded::ShardReply;
+
+use super::server::{lock, metrics_text, stats_json, Shared};
+use super::wire::{parse_request, Request, MAX_LINE_BYTES};
+
+/// Max unwritten replies per connection before the reader stops pulling
+/// new requests (per-connection backpressure; see the module docs).
+pub const PENDING_WINDOW: usize = 1024;
+
+/// Bytes pulled from the socket per `read()`.
+const READ_CHUNK: usize = 4096;
+
+/// The reply-window accounting shared by a connection's reader and
+/// writer threads.
+struct Window {
+    state: Mutex<WindowState>,
+    cv: Condvar,
+}
+
+struct WindowState {
+    in_flight: usize,
+    /// The writer hit a dead socket: stop waiting on this window, the
+    /// replies have nowhere to go.
+    dead: bool,
+}
+
+impl Window {
+    fn new() -> Window {
+        Window { state: Mutex::new(WindowState { in_flight: 0, dead: false }), cv: Condvar::new() }
+    }
+
+    /// Block until a reply slot is free. Returns false when the writer
+    /// declared the connection dead.
+    fn acquire(&self) -> bool {
+        let mut st = lock(&self.state);
+        while st.in_flight >= PENDING_WINDOW && !st.dead {
+            st = self.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        if st.dead {
+            return false;
+        }
+        st.in_flight += 1;
+        true
+    }
+
+    /// Writer-side: one reply left the process.
+    fn complete(&self) {
+        let mut st = lock(&self.state);
+        st.in_flight = st.in_flight.saturating_sub(1);
+        self.cv.notify_all();
+    }
+
+    /// Writer-side: the socket died — unblock the reader for good.
+    fn kill(&self) {
+        lock(&self.state).dead = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until every accepted request has been answered (or the
+    /// connection died).
+    fn drain(&self) {
+        let mut st = lock(&self.state);
+        while st.in_flight > 0 && !st.dead {
+            st = self.cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+}
+
+/// Write one response line. Returns false once the socket is gone (the
+/// caller stops producing — responses are never silently dropped while
+/// the socket lives).
+fn write_line(sock: &Mutex<TcpStream>, line: &str) -> bool {
+    let mut s = lock(sock);
+    s.write_all(line.as_bytes()).and_then(|()| s.write_all(b"\n")).is_ok()
+}
+
+/// The writer thread: drain score replies to the socket in channel
+/// order (per-ID submit order is preserved end to end — same ID → same
+/// shard → FIFO queue → FIFO reply channel). On a dead socket it keeps
+/// draining the channel so the window empties and the reader unblocks.
+fn writer_loop(rx: Receiver<ShardReply>, sock: Arc<Mutex<TcpStream>>, window: Arc<Window>) {
+    let mut alive = true;
+    while let Ok(reply) = rx.recv() {
+        if alive {
+            let line = match reply {
+                ShardReply::Update(score) => {
+                    format!("OK {} {:016x}", score.id, score.outlierness.to_bits())
+                }
+                ShardReply::Query { id, score: Some(x) } => {
+                    format!("SCORE {id} {:016x}", x.to_bits())
+                }
+                ShardReply::Query { id, score: None } => format!("UNKNOWN {id}"),
+            };
+            if !write_line(&sock, &line) {
+                alive = false;
+                window.kill();
+            }
+        }
+        window.complete();
+    }
+}
+
+/// Line framer over the raw socket: maintains the partial-line buffer
+/// and the oversized-line skip state.
+struct LineBuf {
+    buf: Vec<u8>,
+    /// Inside an oversized line: discard bytes until the next newline.
+    skipping: bool,
+    lineno: usize,
+}
+
+enum Framed {
+    /// A complete line, tagged with its 1-based line number.
+    Line(usize, String),
+    /// An oversized line was rejected (the typed error to send).
+    TooLong(usize),
+}
+
+impl LineBuf {
+    fn new() -> LineBuf {
+        LineBuf { buf: Vec::new(), skipping: false, lineno: 0 }
+    }
+
+    /// Append a chunk and pop complete lines / oversize rejections.
+    fn push(&mut self, chunk: &[u8]) -> Vec<Framed> {
+        self.buf.extend_from_slice(chunk);
+        let mut out = Vec::new();
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let rest = self.buf.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.buf, rest);
+                line.pop(); // the newline
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                if self.skipping {
+                    // tail of a line already rejected as oversized
+                    self.skipping = false;
+                    continue;
+                }
+                self.lineno += 1;
+                if line.len() > MAX_LINE_BYTES {
+                    out.push(Framed::TooLong(self.lineno));
+                    continue;
+                }
+                out.push(Framed::Line(self.lineno, String::from_utf8_lossy(&line).into_owned()));
+            } else {
+                // no complete line: reject an over-long prefix *now* so
+                // the buffer never grows unboundedly
+                if !self.skipping && self.buf.len() > MAX_LINE_BYTES {
+                    self.lineno += 1;
+                    self.skipping = true;
+                    self.buf.clear();
+                    out.push(Framed::TooLong(self.lineno));
+                }
+                return out;
+            }
+        }
+    }
+}
+
+/// Serve one accepted connection (the reader thread body).
+pub(crate) fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let Ok(write_half) = stream.try_clone() else {
+        return;
+    };
+    let sock = Arc::new(Mutex::new(write_half));
+    let window = Arc::new(Window::new());
+    let (reply_tx, reply_rx) = channel::<ShardReply>();
+    let writer = {
+        let sock = sock.clone();
+        let window = window.clone();
+        std::thread::spawn(move || writer_loop(reply_rx, sock, window))
+    };
+
+    let mut read_half = stream;
+    let mut frames = LineBuf::new();
+    let mut chunk = vec![0u8; READ_CHUNK];
+    let mut alive = true;
+    let mut shutdown_requested = false;
+    'read: while alive {
+        let n = match read_half.read(&mut chunk) {
+            Ok(0) => break, // EOF (client closed or half-closed its send side)
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        };
+        let got = chunk.get(..n).unwrap_or_default();
+        let mut submitted_any = false;
+        for framed in frames.push(got) {
+            let (lineno, line) = match framed {
+                Framed::Line(lineno, line) => (lineno, line),
+                Framed::TooLong(lineno) => {
+                    alive &= write_line(
+                        &sock,
+                        &format!(
+                            "ERR request line {lineno} exceeds {MAX_LINE_BYTES} bytes \
+                             (rejected, not truncated)"
+                        ),
+                    );
+                    continue;
+                }
+            };
+            let req = match parse_request(lineno, &line) {
+                Ok(Some(req)) => req,
+                Ok(None) => continue, // blank / comment
+                Err(e) => {
+                    alive &= write_line(&sock, &format!("ERR {e}"));
+                    continue;
+                }
+            };
+            match req {
+                Request::Update(u) => {
+                    if !window.acquire() {
+                        break 'read; // writer declared the socket dead
+                    }
+                    let outcome = lock(&shared.engine).try_submit(u, reply_tx.clone());
+                    match outcome {
+                        Ok(Ok(())) => submitted_any = true,
+                        Ok(Err(would_block)) => {
+                            // not accepted → no reply will come: release
+                            // the slot and surface the backpressure
+                            window.complete();
+                            alive &=
+                                write_line(&sock, &format!("BUSY {}", would_block.0.id()));
+                        }
+                        Err(e) => {
+                            window.complete();
+                            alive &= write_line(&sock, &format!("ERR {e}"));
+                        }
+                    }
+                }
+                Request::Score(id) => {
+                    if !window.acquire() {
+                        break 'read;
+                    }
+                    if let Err(e) = lock(&shared.engine).query(id, reply_tx.clone()) {
+                        window.complete();
+                        alive &= write_line(&sock, &format!("ERR {e}"));
+                    }
+                }
+                Request::Stats => {
+                    let line = match lock(&shared.engine).stats() {
+                        Ok(stats) => format!("STATS {}", stats_json(&stats)),
+                        Err(e) => format!("ERR {e}"),
+                    };
+                    alive &= write_line(&sock, &line);
+                }
+                Request::Metrics => {
+                    let text = match lock(&shared.engine).stats() {
+                        Ok(stats) => metrics_text(&stats),
+                        Err(e) => format!("ERR {e}\n"),
+                    };
+                    let mut s = lock(&sock);
+                    alive &= s.write_all(text.as_bytes()).is_ok();
+                }
+                Request::Checkpoint => {
+                    let line = match lock(&shared.engine).checkpoint() {
+                        Ok(submitted) => format!("OK checkpoint {submitted}"),
+                        Err(e) => format!("ERR {e}"),
+                    };
+                    alive &= write_line(&sock, &line);
+                }
+                Request::Reshard(n) => {
+                    // the engine lock holds all other submitters at the
+                    // batch boundary while the barrier + respawn runs
+                    let line = match lock(&shared.engine).reshard(n) {
+                        Ok(shards) => format!("OK reshard {shards}"),
+                        Err(e) => format!("ERR {e}"),
+                    };
+                    alive &= write_line(&sock, &line);
+                }
+                Request::Quit => {
+                    alive &= write_line(&sock, "OK bye");
+                    break 'read;
+                }
+                Request::Shutdown => {
+                    shutdown_requested = true;
+                    alive &= write_line(&sock, "OK shutdown");
+                    break 'read;
+                }
+            }
+        }
+        if submitted_any {
+            // one flush per read chunk: batches reach the shards and
+            // replies materialize even when the client now goes quiet
+            let _ = lock(&shared.engine).flush();
+        }
+    }
+
+    // graceful close: everything accepted still gets its reply
+    let _ = lock(&shared.engine).flush();
+    window.drain();
+    drop(reply_tx); // writer exits once in-flight reply clones drop too
+    let _ = writer.join();
+    let _ = lock(&sock).shutdown(Shutdown::Both);
+    if shutdown_requested {
+        // trip the latch only after this connection drained, so the
+        // accept loop's force-close cannot cut our own tail off
+        shared.request_shutdown();
+    }
+}

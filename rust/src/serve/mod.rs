@@ -1,0 +1,47 @@
+//! The elastic serving plane: a zero-dependency TCP ingress in front of
+//! the sharded scorer (`sparx serve --listen ADDR`).
+//!
+//! ```text
+//!  client ──┐                       ┌── reader thread ──┐   try_submit   ┌─ shard 0 ─┐
+//!  client ──┼── accept loop ── conn ┤                   ├── Mutex<Engine>┼─ shard 1 ─┤
+//!  client ──┘   ([`Server`])        └── writer thread ──┘   (seq order)  └─ shard N ─┘
+//!                                        ▲   unbounded reply channel          │
+//!                                        └──────────────────────── ShardReply ┘
+//! ```
+//!
+//! * **Ingress** — each accepted socket gets a reader thread (line
+//!   framing with an 8 KiB cap, [`wire`] grammar: the exact
+//!   `parse_update_line` data lines plus the `SCORE` / `STATS` /
+//!   `METRICS` / `CHECKPOINT` / `RESHARD` / `QUIT` / `SHUTDOWN` control
+//!   verbs) and a writer thread draining that connection's reply
+//!   channel.
+//! * **Ordering** — submit sequence numbers are assigned under the one
+//!   [`Engine`] mutex, so the global stream order is as well-defined
+//!   under N concurrent clients as under one stdin reader; per-ID
+//!   replies arrive in submit order (same ID → same shard → FIFO).
+//! * **Backpressure, never loss** — a full shard queue answers `BUSY`
+//!   (typed, the update was not accepted) via the scorer's `try_submit`;
+//!   a slow *consumer* is bounded by the per-connection pending window
+//!   (the reader stops pulling new requests while too many replies are
+//!   unwritten), which stalls only that client: shard workers reply
+//!   through unbounded channels and never block.
+//! * **Elasticity** — `RESHARD N` runs the scorer's drain-to-barrier →
+//!   snapshot → re-partition → respawn under the engine lock, between
+//!   batches, dropping nothing; `CHECKPOINT` cuts the layout-independent
+//!   v4 absorb checkpoint, so a later `serve --resume` may pick any
+//!   `--shards`/`--cache` and continue bit-identically.
+//! * **Shutdown** — `SHUTDOWN` drains its own connection, trips the
+//!   server latch and wakes the accept loop; remaining sockets are
+//!   closed, their connections drained, and [`Server::run`] hands the
+//!   scorer back for the same finalization path stdin serving uses.
+//!
+//! See ARCHITECTURE.md ("Serving plane") for the wire grammar spec and
+//! the re-shard barrier protocol in full.
+
+mod conn;
+mod server;
+pub mod wire;
+
+pub use conn::PENDING_WINDOW;
+pub use server::{metrics_text, stats_json, Engine, Server};
+pub use wire::{parse_request, Request, MAX_LINE_BYTES};

@@ -1,0 +1,196 @@
+//! The TCP line grammar: what one `\n`-terminated request line may say.
+//!
+//! Data lines are **exactly** the `sparx serve --updates` grammar
+//! ([`parse_update_line`]): `ID FEATURE δ` or `ID FEATURE old->new`,
+//! blank lines and `#` comments skipped — a file that drives the stdin
+//! path drives a socket unchanged, and scores come out bit-identical.
+//! Control verbs are distinguishable on the first token alone: an
+//! update line starts with a numeric ID, a verb with an upper-case
+//! keyword, so neither grammar can shadow the other.
+//!
+//! ```text
+//! SCORE <id>     → SCORE <id> <score-bits-hex> | UNKNOWN <id>
+//! STATS          → STATS {…one JSON line…}
+//! METRICS        → text-format metrics dump, terminated by `# EOF`
+//! CHECKPOINT     → OK checkpoint <submitted>
+//! RESHARD <n>    → OK reshard <n>
+//! QUIT           → OK bye, server closes this connection
+//! SHUTDOWN       → OK shutdown, server stops accepting and exits
+//! <update line>  → OK <id> <score-bits-hex>   (or BUSY <id>)
+//! ```
+//!
+//! Malformed lines answer `ERR <reason>` and the connection stays open;
+//! lines longer than [`MAX_LINE_BYTES`] are rejected typed the same way
+//! (the overflow is discarded up to the next newline). Responses to one
+//! ID always arrive in submit order; responses across IDs may
+//! interleave (different shards drain independently).
+
+use crate::api::{Result, SparxError};
+use crate::data::{parse_update_line, UpdateTriple};
+
+/// Hard cap on one request line (bytes, excluding the `\n`). A line that
+/// exceeds it is rejected with a typed `ERR` — never silently truncated,
+/// never buffered unboundedly.
+pub const MAX_LINE_BYTES: usize = 8192;
+
+/// One parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// A ⟨ID, F, δ⟩ data line — scored by the owning shard.
+    Update(UpdateTriple),
+    /// Read-only score probe for a resident ID.
+    Score(u64),
+    /// One-line JSON counter dump.
+    Stats,
+    /// Text-format metrics dump (`# EOF` terminated).
+    Metrics,
+    /// Cut a checkpoint to the server's configured `--checkpoint-out`.
+    Checkpoint,
+    /// Live re-shard to `n` worker threads, between batches, lossless.
+    Reshard(usize),
+    /// Close this connection (after draining its pending replies).
+    Quit,
+    /// Stop the whole server gracefully.
+    Shutdown,
+}
+
+/// Parse one request line. Blank lines and `#` comments yield
+/// `Ok(None)`; anything malformed is a typed `SparxError::InvalidParams`
+/// naming the line number (rendered as an `ERR` response on the wire).
+pub fn parse_request(lineno: usize, line: &str) -> Result<Option<Request>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let bad = |what: String| {
+        SparxError::InvalidParams(format!("request line {lineno}: {what}"))
+    };
+    let mut tok = line.split_whitespace();
+    let Some(verb) = tok.next() else {
+        return Ok(None);
+    };
+    let arg = tok.next();
+    let extra = tok.next();
+    match verb {
+        "SCORE" => {
+            if extra.is_some() {
+                return Err(bad("SCORE takes exactly one argument (the ID)".into()));
+            }
+            let Some(id_tok) = arg else {
+                return Err(bad("SCORE needs an ID argument".into()));
+            };
+            let id: u64 = id_tok
+                .parse()
+                .map_err(|_| bad(format!("SCORE: bad ID {id_tok:?}")))?;
+            Ok(Some(Request::Score(id)))
+        }
+        "RESHARD" => {
+            if extra.is_some() {
+                return Err(bad("RESHARD takes exactly one argument (the shard count)".into()));
+            }
+            let Some(n_tok) = arg else {
+                return Err(bad("RESHARD needs a shard count argument".into()));
+            };
+            let n: usize = n_tok
+                .parse()
+                .map_err(|_| bad(format!("RESHARD: bad shard count {n_tok:?}")))?;
+            if n == 0 {
+                return Err(bad("RESHARD: shard count must be ≥ 1".into()));
+            }
+            Ok(Some(Request::Reshard(n)))
+        }
+        "STATS" | "METRICS" | "CHECKPOINT" | "QUIT" | "SHUTDOWN" => {
+            if arg.is_some() {
+                return Err(bad(format!("{verb} takes no arguments")));
+            }
+            Ok(Some(match verb {
+                "STATS" => Request::Stats,
+                "METRICS" => Request::Metrics,
+                "CHECKPOINT" => Request::Checkpoint,
+                "QUIT" => Request::Quit,
+                _ => Request::Shutdown,
+            }))
+        }
+        _ => {
+            // not a verb: the whole line must be an update triple (its
+            // first token is a numeric ID, so the grammars are disjoint;
+            // parse_update_line produces the typed error otherwise)
+            Ok(parse_update_line(lineno, line)?.map(Request::Update))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verbs_parse() {
+        assert_eq!(parse_request(1, "SCORE 42").unwrap(), Some(Request::Score(42)));
+        assert_eq!(parse_request(1, "STATS").unwrap(), Some(Request::Stats));
+        assert_eq!(parse_request(1, "METRICS").unwrap(), Some(Request::Metrics));
+        assert_eq!(parse_request(1, "CHECKPOINT").unwrap(), Some(Request::Checkpoint));
+        assert_eq!(parse_request(1, "RESHARD 4").unwrap(), Some(Request::Reshard(4)));
+        assert_eq!(parse_request(1, "QUIT").unwrap(), Some(Request::Quit));
+        assert_eq!(parse_request(1, "SHUTDOWN").unwrap(), Some(Request::Shutdown));
+        assert_eq!(parse_request(1, "  QUIT  ").unwrap(), Some(Request::Quit));
+    }
+
+    #[test]
+    fn update_lines_delegate_to_the_stream_grammar() {
+        match parse_request(3, "42 bytes_sent 1.5").unwrap() {
+            Some(Request::Update(UpdateTriple::Num { id, feature, delta })) => {
+                assert_eq!((id, feature.as_str(), delta), (42, "bytes_sent", 1.5));
+            }
+            other => panic!("expected an update, got {other:?}"),
+        }
+        match parse_request(4, "7 loc NYC->Austin").unwrap() {
+            Some(Request::Update(UpdateTriple::Cat { id, .. })) => assert_eq!(id, 7),
+            other => panic!("expected a categorical update, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_blanks_are_skipped() {
+        assert_eq!(parse_request(1, "").unwrap(), None);
+        assert_eq!(parse_request(2, "   ").unwrap(), None);
+        assert_eq!(parse_request(3, "# comment").unwrap(), None);
+    }
+
+    #[test]
+    fn malformed_lines_fail_typed_with_line_number() {
+        for (lineno, line) in [
+            (1, "SCORE"),              // missing argument
+            (2, "SCORE notanid"),      // bad ID
+            (3, "SCORE 1 2"),          // extra argument
+            (4, "RESHARD"),            // missing count
+            (5, "RESHARD zero"),       // bad count
+            (6, "RESHARD 0"),          // degenerate count
+            (7, "STATS now"),          // verb with stray argument
+            (8, "QUIT loudly"),        // likewise
+            (9, "SHUTDOWN -f"),        // likewise
+            (10, "score 42"),          // verbs are case-sensitive → bad update ID
+            (11, "42 f0"),             // short update line
+            (12, "42 f0 NaN"),         // sketch-poisoning δ
+        ] {
+            match parse_request(lineno, line) {
+                Err(SparxError::InvalidParams(msg)) => {
+                    assert!(
+                        msg.contains(&format!("line {lineno}")),
+                        "line {line:?}: message must name the line, got {msg:?}"
+                    );
+                }
+                other => panic!("line {line:?} must fail typed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn verb_and_update_grammars_are_disjoint() {
+        // a numeric first token is always an update, never a verb
+        assert!(matches!(
+            parse_request(1, "100 SCORE 1.0").unwrap(),
+            Some(Request::Update(_))
+        ));
+    }
+}

@@ -1,21 +1,42 @@
 //! Durable absorb-state checkpoints for the §3.5 serving front-end.
 //!
-//! A served model's *mutable* state — per-shard LRU sketches, absorbed
-//! CMS deltas and counters ([`crate::sparx::StreamScorer::snapshot`]) —
-//! dies with the process unless it is checkpointed. This module defines
-//! the serializable snapshot unit ([`AbsorbSnapshot`]), the merged
-//! multi-shard checkpoint ([`AbsorbCheckpoint`]) and its file form: a
-//! model artifact (per-block CRCs + provenance manifest, see
-//! [`crate::api::artifact`]) whose detector name is
+//! A served model's *mutable* state — resident sketches, absorbed CMS
+//! overlays and counters — dies with the process unless it is
+//! checkpointed. This module defines the per-scorer snapshot unit
+//! ([`AbsorbSnapshot`], what [`crate::sparx::StreamScorer::snapshot`]
+//! produces) and the durable checkpoint ([`AbsorbCheckpoint`]) plus its
+//! file form: a model artifact (per-block CRCs + provenance manifest,
+//! see [`crate::api::artifact`]) whose detector name is
 //! [`CHECKPOINT_DETECTOR`], written by `sparx serve --checkpoint-out`
-//! and read back by `serve --resume`. From format v3 the absorbed-delta
-//! levels travel compressed (first bucket + strictly-increasing gap
-//! varints, varint counts); v2 checkpoint files remain readable.
+//! and read back by `serve --resume`.
 //!
-//! Resume contract: restoring a checkpoint into scorers built from the
-//! **same model** (fingerprint equality) and the same shard/cache
-//! layout continues the stream **bit-identically** — LRU recency order
-//! is preserved entry-for-entry, so even eviction timing reproduces.
+//! ## Format v4: shard-layout-independent state
+//!
+//! Up to format v3 a checkpoint was a vector of per-shard snapshots and
+//! resume demanded the identical `--shards`/`--cache` layout. From v4
+//! the checkpoint stores *global* state instead:
+//!
+//! * every resident sketch tagged with the submit sequence of its last
+//!   touch, in global LRU → MRU order (the serving pool's eviction
+//!   directory order — S-independent by construction);
+//! * one merged **visible** CMS overlay (published absorb epochs; every
+//!   shard holds the identical copy, so one travels);
+//! * one merged **pending** overlay (absorbed since the last epoch
+//!   merge — a mid-epoch checkpoint must *not* flush visibility, or the
+//!   resumed scores would diverge from the uninterrupted run).
+//!
+//! Because nothing in the payload depends on the shard count, `serve
+//! --resume` may change `--shards` (and `--cache`) freely: the entries
+//! are re-partitioned by `shard_of(id, S_new)` and recency is rebuilt
+//! from the sequence tags. v2/v3 checkpoint files remain readable and
+//! are converted on load (their per-shard recency interleaving was
+//! never recorded, so conversion synthesizes tags in shard order — a
+//! valid recency, though not bit-continuous with the pre-v4 run).
+//!
+//! Resume contract: restoring a v4 checkpoint into a pool built from
+//! the **same model** (fingerprint equality) and absorb mode continues
+//! the stream **bit-identically at any shard count** — recency order is
+//! preserved entry-for-entry, so even eviction timing reproduces.
 //! Corrupt, truncated or schema-mismatched checkpoint files fail typed
 //! (never panic), like every other artifact read in the crate.
 
@@ -29,7 +50,8 @@ use super::stream::ServedEnsemble;
 /// checkpoint rather than a fitted model.
 pub const CHECKPOINT_DETECTOR: &str = "absorb-state";
 
-/// One scorer's (= one shard's) serialized mutable state.
+/// One scorer's serialized mutable state (the snapshot/restore unit of
+/// [`crate::sparx::StreamScorer`]; also the legacy v≤3 payload element).
 #[derive(Debug, Clone, PartialEq)]
 pub struct AbsorbSnapshot {
     /// δ-updates this scorer processed.
@@ -54,8 +76,8 @@ impl AbsorbSnapshot {
     }
 }
 
-/// The merged, durable serving state: the header that pins it to one
-/// model + shard layout, plus every shard's snapshot.
+/// The durable serving state (format v4): pinned to one model by
+/// fingerprint, independent of the shard layout by construction.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AbsorbCheckpoint {
     /// `ServedEnsemble::model_fingerprint` of the served model — resume
@@ -64,18 +86,20 @@ pub struct AbsorbCheckpoint {
     pub model_fingerprint: u32,
     /// `ServedEnsemble::schema_fingerprint` of the served model.
     pub schema_fingerprint: u32,
-    /// Shard count the state was captured under; resume must match (the
-    /// murmur ID route and per-shard LRU orders are S-specific).
+    /// Shard count the state was captured under. Informational from v4
+    /// on (`serve --resume` may pick any shard count); kept so `--resume`
+    /// can default to the capture-time parallelism.
     pub shards: u32,
-    /// Per-shard LRU capacity at capture time; resume must match
-    /// (eviction timing depends on it).
-    pub cache_per_shard: u64,
-    /// Updates submitted to the sharded scorer when the checkpoint was
-    /// cut — the resumed scorer continues its submit sequence here.
+    /// **Total** resident-sketch budget (the global eviction directory's
+    /// capacity) at capture time. Resume adopts it unless `--cache`
+    /// overrides.
+    pub cache_total: u64,
+    /// Updates submitted to the serving pool when the checkpoint was
+    /// cut — the resumed pool continues its submit sequence here.
     pub submitted: u64,
     /// Whether the capturing run absorbed every update (`--absorb`).
     /// Resume must match: an absorb-mode mismatch silently diverges the
-    /// continued stream, so it is rejected typed like shards/cache.
+    /// continued stream, so it is rejected typed.
     pub absorb: bool,
     // serving-schema summary, duplicated from the ensemble so mismatch
     // errors can name shapes without loading the model
@@ -84,26 +108,37 @@ pub struct AbsorbCheckpoint {
     pub num_chains: usize,
     pub cms_rows: usize,
     pub cms_cols: usize,
-    /// One snapshot per shard, in shard order.
-    pub snapshots: Vec<AbsorbSnapshot>,
+    /// Aggregate counters across the whole pool.
+    pub processed: u64,
+    pub evicted: u64,
+    pub absorbed: u64,
+    /// Resident sketches in **global LRU → MRU order**, each tagged with
+    /// the submit sequence of its last touch (strictly increasing along
+    /// the vector — recency order *is* last-touch order).
+    pub entries: Vec<(u64, u64, Vec<f32>)>,
+    /// The published (visible) CMS overlay, per chain-major level,
+    /// sorted by bucket.
+    pub visible: Vec<Vec<(u32, u32)>>,
+    /// Absorbed-but-unpublished increments (mid-epoch state), merged
+    /// across shards, per chain-major level, sorted by bucket.
+    pub pending: Vec<Vec<(u32, u32)>>,
 }
 
 impl AbsorbCheckpoint {
-    /// Header fields derived from the served ensemble; `snapshots` and
-    /// `submitted` are filled by the caller.
+    /// Header fields derived from the served ensemble; counters,
+    /// `entries` and the overlays are filled by the caller.
     pub fn for_ensemble(
         ens: &ServedEnsemble,
         shards: u32,
-        cache_per_shard: u64,
+        cache_total: u64,
         submitted: u64,
         absorb: bool,
-        snapshots: Vec<AbsorbSnapshot>,
     ) -> AbsorbCheckpoint {
         AbsorbCheckpoint {
             model_fingerprint: ens.model_fingerprint(),
             schema_fingerprint: ens.schema_fingerprint(),
             shards,
-            cache_per_shard,
+            cache_total,
             submitted,
             absorb,
             k: ens.k(),
@@ -111,20 +146,25 @@ impl AbsorbCheckpoint {
             num_chains: ens.num_chains(),
             cms_rows: ens.cms_rows(),
             cms_cols: ens.cms_cols(),
-            snapshots,
+            processed: 0,
+            evicted: 0,
+            absorbed: 0,
+            entries: Vec::new(),
+            visible: Vec::new(),
+            pending: Vec::new(),
         }
     }
 
+    /// Cache admissions implied by this checkpoint.
+    pub fn admitted(&self) -> u64 {
+        self.evicted + self.entries.len() as u64
+    }
+
     /// Typed pre-restore validation against a live ensemble and serve
-    /// configuration. Everything that would make the continuation not
-    /// bit-identical is rejected here, before any state moves.
-    pub fn validate_for(
-        &self,
-        ens: &ServedEnsemble,
-        shards: usize,
-        cache_per_shard: usize,
-        absorb: bool,
-    ) -> Result<()> {
+    /// configuration. From v4 on only what genuinely breaks bit-identity
+    /// is checked: the model fingerprint and the absorb mode. Shard
+    /// count and cache budget may change freely on resume.
+    pub fn validate_for(&self, ens: &ServedEnsemble, absorb: bool) -> Result<()> {
         if self.model_fingerprint != ens.model_fingerprint() {
             return Err(SparxError::InvalidParams(format!(
                 "checkpoint was taken against a different model \
@@ -132,20 +172,6 @@ impl AbsorbCheckpoint {
                  artifact the checkpoint was written under",
                 self.model_fingerprint,
                 ens.model_fingerprint()
-            )));
-        }
-        if self.shards as usize != shards {
-            return Err(SparxError::InvalidParams(format!(
-                "checkpoint holds {} shard snapshot(s) but serve is configured with \
-                 --shards {shards}; per-shard LRU state only restores onto the same layout",
-                self.shards
-            )));
-        }
-        if self.cache_per_shard as usize != cache_per_shard {
-            return Err(SparxError::InvalidParams(format!(
-                "checkpoint was taken with --cache {} but serve is configured with \
-                 --cache {cache_per_shard}; eviction timing depends on the capacity",
-                self.cache_per_shard
             )));
         }
         if self.absorb != absorb {
@@ -158,65 +184,21 @@ impl AbsorbCheckpoint {
                 if self.absorb { "pass" } else { "drop" }
             )));
         }
-        if self.snapshots.len() != shards {
-            return Err(SparxError::InvalidParams(format!(
-                "checkpoint header declares {} shards but carries {} snapshots",
-                self.shards,
-                self.snapshots.len()
-            )));
-        }
         Ok(())
-    }
-
-    /// Merge the per-shard snapshots into one aggregate state: entries
-    /// concatenated in shard order, deltas summed bucket-wise, counters
-    /// summed. Because every ID is pinned to one shard, the merged
-    /// sketch set and summed delta equal what a single-shard scorer
-    /// would hold for the same stream (in the no-eviction regime) — the
-    /// property `rust/tests/checkpoint.rs` asserts for any S.
-    pub fn merged(&self) -> AbsorbSnapshot {
-        let levels = self.num_chains * self.depth;
-        let mut merged = AbsorbSnapshot {
-            processed: 0,
-            evicted: 0,
-            absorbed: 0,
-            entries: Vec::new(),
-            delta: vec![Vec::new(); levels],
-        };
-        let mut maps: Vec<std::collections::HashMap<u32, u32>> =
-            vec![std::collections::HashMap::new(); levels];
-        for snap in &self.snapshots {
-            merged.processed += snap.processed;
-            merged.evicted += snap.evicted;
-            merged.absorbed += snap.absorbed;
-            merged.entries.extend(snap.entries.iter().cloned());
-            for (map, lvl) in maps.iter_mut().zip(&snap.delta) {
-                for &(bucket, count) in lvl {
-                    let slot_count = map.entry(bucket).or_insert(0);
-                    *slot_count = slot_count.saturating_add(count);
-                }
-            }
-        }
-        for (dst, map) in merged.delta.iter_mut().zip(maps) {
-            let mut v: Vec<(u32, u32)> = map.into_iter().collect();
-            v.sort_unstable();
-            *dst = v;
-        }
-        merged
     }
 
     // ------------------------------------------------------ file format
 
     /// Wrap the checkpoint in a current-format artifact container: the
-    /// header travels in the params block, the snapshots in the payload,
-    /// each with its own CRC. Callers add provenance manifest entries
-    /// with [`ModelArtifact::with_manifest`].
+    /// header travels in the params block, the entries + overlays in
+    /// the payload, each with its own CRC. Callers add provenance
+    /// manifest entries with [`ModelArtifact::with_manifest`].
     pub fn to_artifact(&self) -> ModelArtifact {
         let mut params = Encoder::new();
         params.put_u32(self.model_fingerprint);
         params.put_u32(self.schema_fingerprint);
         params.put_u32(self.shards);
-        params.put_u64(self.cache_per_shard);
+        params.put_u64(self.cache_total);
         params.put_u64(self.submitted);
         params.put_u8(u8::from(self.absorb));
         params.put_usize(self.k);
@@ -224,20 +206,29 @@ impl AbsorbCheckpoint {
         params.put_usize(self.num_chains);
         params.put_usize(self.cms_rows);
         params.put_usize(self.cms_cols);
+        params.put_u64(self.processed);
+        params.put_u64(self.evicted);
+        params.put_u64(self.absorbed);
         let mut payload = Encoder::new();
-        payload.put_u32(self.snapshots.len() as u32);
-        for snap in &self.snapshots {
-            encode_snapshot(&mut payload, snap, crate::api::artifact::FORMAT_VERSION);
+        payload.put_u32(self.entries.len() as u32);
+        for (id, seq, sketch) in &self.entries {
+            payload.put_u64(*id);
+            payload.put_u64(*seq);
+            payload.put_f32_slice(sketch);
         }
+        encode_levels(&mut payload, &self.visible);
+        encode_levels(&mut payload, &self.pending);
         ModelArtifact::new(CHECKPOINT_DETECTOR, params.into_bytes(), payload.into_bytes())
     }
 
     /// Parse an artifact back into a checkpoint, validating internal
-    /// consistency (shard/snapshot counts, delta level counts, sketch
-    /// widths, bucket ranges). Framing damage surfaces from the artifact
-    /// layer as `MissingArtifact`; a well-framed file that is not an
-    /// absorb-state checkpoint, or whose blocks are inconsistent, fails
-    /// `InvalidParams`.
+    /// consistency (entry counts vs the cache budget, recency-tag
+    /// monotonicity, delta level counts, sketch widths, bucket ranges).
+    /// v2/v3 files decode through the legacy per-shard layout and are
+    /// converted (see the module docs). Framing damage surfaces from
+    /// the artifact layer as `MissingArtifact`; a well-framed file that
+    /// is not an absorb-state checkpoint, or whose blocks are
+    /// inconsistent, fails `InvalidParams`.
     pub fn from_artifact(art: &ModelArtifact) -> Result<AbsorbCheckpoint> {
         if art.detector != CHECKPOINT_DETECTOR {
             return Err(SparxError::InvalidParams(format!(
@@ -247,14 +238,40 @@ impl AbsorbCheckpoint {
             )));
         }
         let blk = |e| block_err(CHECKPOINT_DETECTOR, e);
+        if art.version < 4 {
+            let mut dec = Decoder::new(&art.params);
+            let (ckpt, cache_per_shard) = decode_header_legacy(&mut dec).map_err(blk)?;
+            dec.finish().map_err(blk)?;
+            let mut dec = Decoder::new(&art.payload);
+            let snapshots =
+                decode_snapshots_legacy(&mut dec, &ckpt, cache_per_shard, art.version)
+                    .map_err(blk)?;
+            dec.finish().map_err(blk)?;
+            return Ok(convert_legacy(ckpt, snapshots));
+        }
         let mut dec = Decoder::new(&art.params);
-        let header = decode_header(&mut dec).map_err(blk)?;
+        let mut ckpt = decode_header_v4(&mut dec).map_err(blk)?;
         dec.finish().map_err(blk)?;
-        let mut ckpt = header;
         let mut dec = Decoder::new(&art.payload);
-        decode_snapshots(&mut dec, &mut ckpt, art.version).map_err(blk)?;
+        decode_payload_v4(&mut dec, &mut ckpt).map_err(blk)?;
         dec.finish().map_err(blk)?;
         Ok(ckpt)
+    }
+
+    /// The provenance manifest a checkpoint file carries (carried
+    /// verbatim, never interpreted by the loaders) — shared by the CLI
+    /// writer and the serving plane's `CHECKPOINT` verb so the two
+    /// paths stay indistinguishable on disk.
+    pub fn manifest_for(&self, model_path: &str) -> Vec<(String, String)> {
+        vec![
+            ("kind".into(), "absorb-state checkpoint".into()),
+            ("model".into(), model_path.into()),
+            ("model-fingerprint".into(), format!("{:08x}", self.model_fingerprint)),
+            ("submitted".into(), self.submitted.to_string()),
+            ("shards".into(), self.shards.to_string()),
+            ("cache-total".into(), self.cache_total.to_string()),
+            ("absorb".into(), self.absorb.to_string()),
+        ]
     }
 
     /// Write the checkpoint file — atomically, via the one shared
@@ -271,12 +288,365 @@ impl AbsorbCheckpoint {
     }
 }
 
-/// Snapshot wire form. The counters and sketch entries are identical
-/// across versions; the delta levels are raw `(u32 bucket, u32 count)`
-/// pairs in v2 and — because buckets are strictly increasing and counts
-/// are small — `varint(first bucket) + varint(gap)…` with varint counts
-/// from v3 on.
-fn encode_snapshot(enc: &mut Encoder, snap: &AbsorbSnapshot, version: u16) {
+/// Overlay-levels wire form (v3+ delta codec): `u32` level count, then
+/// per level a varint pair count followed by `varint(first bucket) +
+/// varint(gap)…` with varint counts (buckets strictly increase, counts
+/// are non-zero).
+fn encode_levels(enc: &mut Encoder, levels: &[Vec<(u32, u32)>]) {
+    enc.put_u32(levels.len() as u32);
+    for lvl in levels {
+        enc.put_u32(lvl.len() as u32);
+        let mut prev = 0u32;
+        for (i, &(bucket, count)) in lvl.iter().enumerate() {
+            let gap = if i == 0 { bucket } else { bucket - prev };
+            enc.put_varint(gap as u64);
+            enc.put_varint(count as u64);
+            prev = bucket;
+        }
+    }
+}
+
+/// Decode one overlay (level vector), validating level count, bucket
+/// range/order and non-zero counts. `version` picks the pair codec
+/// (raw `u32` pairs before v3, gap varints from v3 on).
+fn decode_levels(
+    dec: &mut Decoder,
+    want_levels: usize,
+    buckets: u32,
+    cms_rows: usize,
+    cms_cols: usize,
+    version: u16,
+) -> CodecResult<Vec<Vec<(u32, u32)>>> {
+    let n_levels = dec.u32()? as usize;
+    if n_levels != want_levels {
+        return Err(format!(
+            "overlay has {n_levels} delta levels, header declares M·L = {want_levels}"
+        ));
+    }
+    // every level costs ≥ 4 bytes on the wire; reject declared counts
+    // the remaining bytes cannot possibly back (no
+    // allocate-then-discover-truncation)
+    if dec.remaining() < n_levels.saturating_mul(4) {
+        return Err(format!("truncated checkpoint: {n_levels} delta levels declared"));
+    }
+    let mut out = Vec::with_capacity(n_levels);
+    // v2 pairs are 8 raw bytes; v3+ pairs are ≥ 2 varint bytes
+    let min_pair_bytes: usize = if version >= 3 { 2 } else { 8 };
+    for _ in 0..n_levels {
+        let n_pairs = dec.u32()? as usize;
+        if dec.remaining() < n_pairs.saturating_mul(min_pair_bytes) {
+            return Err(format!("truncated checkpoint: {n_pairs} delta pairs declared"));
+        }
+        let mut lvl = Vec::with_capacity(n_pairs);
+        let mut prev: Option<u32> = None;
+        for _ in 0..n_pairs {
+            let (bucket, count) = if version >= 3 {
+                let gap = dec.varint()?;
+                let count = dec.varint()?;
+                if count == 0 || count > u32::MAX as u64 {
+                    return Err(format!("delta count {count} out of range"));
+                }
+                if prev.is_some() && gap == 0 {
+                    return Err("delta buckets must be strictly increasing".into());
+                }
+                let bucket = prev.map_or(0, u64::from) + gap;
+                if bucket >= buckets as u64 {
+                    return Err(format!(
+                        "delta bucket {bucket} out of range for a {cms_rows}×{cms_cols} CMS"
+                    ));
+                }
+                (bucket as u32, count as u32)
+            } else {
+                let bucket = dec.u32()?;
+                let count = dec.u32()?;
+                if bucket >= buckets {
+                    return Err(format!(
+                        "delta bucket {bucket} out of range for a {cms_rows}×{cms_cols} CMS"
+                    ));
+                }
+                if count == 0 {
+                    return Err("delta entries must carry a non-zero count".into());
+                }
+                if let Some(p) = prev {
+                    if bucket <= p {
+                        return Err("delta buckets must be strictly increasing".into());
+                    }
+                }
+                (bucket, count)
+            };
+            prev = Some(bucket);
+            lvl.push((bucket, count));
+        }
+        out.push(lvl);
+    }
+    Ok(out)
+}
+
+/// Shared schema-shape validation for both header layouts.
+fn check_shape(ckpt: &AbsorbCheckpoint) -> CodecResult<()> {
+    if ckpt.shards == 0 || ckpt.shards > 4096 {
+        return Err(format!("checkpoint shard count {} out of range", ckpt.shards));
+    }
+    if ckpt.k == 0
+        || ckpt.depth == 0
+        || ckpt.num_chains == 0
+        || ckpt.cms_rows == 0
+        || ckpt.cms_cols == 0
+    {
+        return Err(format!(
+            "degenerate checkpoint schema: K={} L={} M={} r={} w={}",
+            ckpt.k, ckpt.depth, ckpt.num_chains, ckpt.cms_rows, ckpt.cms_cols
+        ));
+    }
+    // same packing bound the CMS itself enforces; keeps bucket indices
+    // in u32 and blocks thin-air allocations from hostile headers
+    if ckpt.cms_rows >= 128 || ckpt.cms_cols >= (1 << 20) || ckpt.k > (1 << 24) {
+        return Err("checkpoint schema exceeds the serving shape caps".into());
+    }
+    // ensemble-shape caps: M and L are unbounded in SparxParams, but a
+    // checkpoint header declaring absurd values exists only to demand
+    // absurd allocations — reject before anything is reserved
+    if ckpt.num_chains > (1 << 12) || ckpt.depth > (1 << 12) {
+        return Err(format!(
+            "checkpoint ensemble shape M={} L={} exceeds the serving shape caps",
+            ckpt.num_chains, ckpt.depth
+        ));
+    }
+    Ok(())
+}
+
+fn decode_header_v4(dec: &mut Decoder) -> CodecResult<AbsorbCheckpoint> {
+    let mut ckpt = AbsorbCheckpoint {
+        model_fingerprint: dec.u32()?,
+        schema_fingerprint: dec.u32()?,
+        shards: dec.u32()?,
+        cache_total: dec.u64()?,
+        submitted: dec.u64()?,
+        absorb: match dec.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(format!("unknown absorb-mode tag {other}")),
+        },
+        k: dec.usize()?,
+        depth: dec.usize()?,
+        num_chains: dec.usize()?,
+        cms_rows: dec.usize()?,
+        cms_cols: dec.usize()?,
+        processed: 0,
+        evicted: 0,
+        absorbed: 0,
+        entries: Vec::new(),
+        visible: Vec::new(),
+        pending: Vec::new(),
+    };
+    ckpt.processed = dec.u64()?;
+    ckpt.evicted = dec.u64()?;
+    ckpt.absorbed = dec.u64()?;
+    // the resume path pre-reserves the directory's declared capacity,
+    // so an unbounded value here is a thin-air allocation like the
+    // shape fields
+    if ckpt.cache_total == 0 || ckpt.cache_total > (1 << 24) {
+        return Err(format!(
+            "checkpoint cache budget {} out of range (1..=2^24)",
+            ckpt.cache_total
+        ));
+    }
+    check_shape(&ckpt)?;
+    Ok(ckpt)
+}
+
+fn decode_payload_v4(dec: &mut Decoder, ckpt: &mut AbsorbCheckpoint) -> CodecResult<()> {
+    let n_entries = dec.u32()? as usize;
+    if n_entries as u64 > ckpt.cache_total {
+        return Err(format!(
+            "checkpoint holds {n_entries} sketches, over the declared cache budget {}",
+            ckpt.cache_total
+        ));
+    }
+    // every entry costs ≥ 20 bytes on the wire (id + seq + sketch len)
+    if dec.remaining() < n_entries.saturating_mul(20) {
+        return Err(format!("truncated checkpoint: {n_entries} sketch entries declared"));
+    }
+    let mut entries = Vec::with_capacity(n_entries);
+    let mut prev_seq: Option<u64> = None;
+    for _ in 0..n_entries {
+        let id = dec.u64()?;
+        let seq = dec.u64()?;
+        let sketch = dec.f32_vec()?;
+        if sketch.len() != ckpt.k {
+            return Err(format!(
+                "sketch for id {id} is {}-wide, header declares K={}",
+                sketch.len(),
+                ckpt.k
+            ));
+        }
+        if seq >= ckpt.submitted {
+            return Err(format!(
+                "entry recency tag {seq} is not before the submit watermark {}",
+                ckpt.submitted
+            ));
+        }
+        if let Some(p) = prev_seq {
+            if seq <= p {
+                return Err(
+                    "entry recency tags must strictly increase in LRU→MRU order".into()
+                );
+            }
+        }
+        prev_seq = Some(seq);
+        entries.push((id, seq, sketch));
+    }
+    ckpt.entries = entries;
+    let levels = ckpt.num_chains * ckpt.depth;
+    let buckets = (ckpt.cms_rows * ckpt.cms_cols) as u32;
+    ckpt.visible = decode_levels(dec, levels, buckets, ckpt.cms_rows, ckpt.cms_cols, 4)?;
+    ckpt.pending = decode_levels(dec, levels, buckets, ckpt.cms_rows, ckpt.cms_cols, 4)?;
+    Ok(())
+}
+
+/// Decode the v≤3 params block. Returns the partially-filled checkpoint
+/// (with `cache_total` set to shards × per-shard capacity, clamped to
+/// the directory cap) and the raw per-shard capacity for payload
+/// validation.
+fn decode_header_legacy(dec: &mut Decoder) -> CodecResult<(AbsorbCheckpoint, u64)> {
+    // legacy field order: fingerprints, shards, cache-per-shard,
+    // submitted, absorb, then the five shape fields
+    let model_fingerprint = dec.u32()?;
+    let schema_fingerprint = dec.u32()?;
+    let shards = dec.u32()?;
+    let cache_per_shard = dec.u64()?;
+    let mut ckpt = AbsorbCheckpoint {
+        model_fingerprint,
+        schema_fingerprint,
+        shards,
+        cache_total: 0,
+        submitted: dec.u64()?,
+        absorb: match dec.u8()? {
+            0 => false,
+            1 => true,
+            other => return Err(format!("unknown absorb-mode tag {other}")),
+        },
+        k: dec.usize()?,
+        depth: dec.usize()?,
+        num_chains: dec.usize()?,
+        cms_rows: dec.usize()?,
+        cms_cols: dec.usize()?,
+        processed: 0,
+        evicted: 0,
+        absorbed: 0,
+        entries: Vec::new(),
+        visible: Vec::new(),
+        pending: Vec::new(),
+    };
+    if cache_per_shard == 0 || cache_per_shard > (1 << 24) {
+        return Err(format!(
+            "checkpoint cache capacity {cache_per_shard} out of range (1..=2^24)"
+        ));
+    }
+    check_shape(&ckpt)?;
+    // legacy budget was per shard; the global directory budget is the
+    // pool-wide product, clamped to the same cap the v4 header enforces
+    ckpt.cache_total =
+        (ckpt.shards as u64).saturating_mul(cache_per_shard).min(1 << 24).max(1);
+    Ok((ckpt, cache_per_shard))
+}
+
+fn decode_snapshots_legacy(
+    dec: &mut Decoder,
+    ckpt: &AbsorbCheckpoint,
+    cache_per_shard: u64,
+    version: u16,
+) -> CodecResult<Vec<AbsorbSnapshot>> {
+    let n = dec.u32()? as usize;
+    if n != ckpt.shards as usize {
+        return Err(format!(
+            "payload carries {n} snapshots but the header declares {} shards",
+            ckpt.shards
+        ));
+    }
+    let levels = ckpt.num_chains * ckpt.depth;
+    let buckets = (ckpt.cms_rows * ckpt.cms_cols) as u32;
+    let mut snapshots = Vec::with_capacity(n);
+    for _ in 0..n {
+        let processed = dec.u64()?;
+        let evicted = dec.u64()?;
+        let absorbed = dec.u64()?;
+        let n_entries = dec.u32()? as usize;
+        if n_entries as u64 > cache_per_shard {
+            return Err(format!(
+                "snapshot holds {n_entries} sketches, over the declared cache \
+                 capacity {cache_per_shard}"
+            ));
+        }
+        // every entry costs ≥ 12 bytes on the wire; reject declared
+        // counts the remaining bytes cannot possibly back
+        if dec.remaining() < n_entries.saturating_mul(12) {
+            return Err(format!("truncated snapshot: {n_entries} sketch entries declared"));
+        }
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let id = dec.u64()?;
+            let sketch = dec.f32_vec()?;
+            if sketch.len() != ckpt.k {
+                return Err(format!(
+                    "sketch for id {id} is {}-wide, header declares K={}",
+                    sketch.len(),
+                    ckpt.k
+                ));
+            }
+            entries.push((id, sketch));
+        }
+        let delta = decode_levels(dec, levels, buckets, ckpt.cms_rows, ckpt.cms_cols, version)?;
+        snapshots.push(AbsorbSnapshot { processed, evicted, absorbed, entries, delta });
+    }
+    Ok(snapshots)
+}
+
+/// Convert decoded legacy per-shard snapshots into the global v4 form:
+/// entries concatenated in shard order with synthesized recency tags
+/// (0, 1, 2, … — pre-v4 files never recorded the cross-shard recency
+/// interleaving), deltas summed bucket-wise into the visible overlay
+/// (legacy absorbs were immediately visible), counters summed, pending
+/// empty.
+fn convert_legacy(mut ckpt: AbsorbCheckpoint, snapshots: Vec<AbsorbSnapshot>) -> AbsorbCheckpoint {
+    let levels = ckpt.num_chains * ckpt.depth;
+    let mut maps: Vec<std::collections::HashMap<u32, u32>> =
+        vec![std::collections::HashMap::new(); levels];
+    let mut seq = 0u64;
+    for snap in snapshots {
+        ckpt.processed += snap.processed;
+        ckpt.evicted += snap.evicted;
+        ckpt.absorbed += snap.absorbed;
+        for (id, sketch) in snap.entries {
+            ckpt.entries.push((id, seq, sketch));
+            seq += 1;
+        }
+        for (map, lvl) in maps.iter_mut().zip(&snap.delta) {
+            for &(bucket, count) in lvl {
+                let slot = map.entry(bucket).or_insert(0);
+                *slot = slot.saturating_add(count);
+            }
+        }
+    }
+    ckpt.visible = maps
+        .into_iter()
+        .map(|map| {
+            let mut v: Vec<(u32, u32)> = map.into_iter().collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    ckpt.pending = vec![Vec::new(); levels];
+    // a synthesized tag may collide with the submit watermark on
+    // degenerate legacy files; keep the v4 invariant tag < submitted
+    ckpt.submitted = ckpt.submitted.max(seq);
+    ckpt
+}
+
+/// Legacy (v≤3) snapshot wire form — kept so the conversion path stays
+/// testable against bytes this build itself produced.
+#[cfg(test)]
+fn encode_snapshot_legacy(enc: &mut Encoder, snap: &AbsorbSnapshot, version: u16) {
     enc.put_u64(snap.processed);
     enc.put_u64(snap.evicted);
     enc.put_u64(snap.absorbed);
@@ -305,178 +675,6 @@ fn encode_snapshot(enc: &mut Encoder, snap: &AbsorbSnapshot, version: u16) {
     }
 }
 
-fn decode_header(dec: &mut Decoder) -> CodecResult<AbsorbCheckpoint> {
-    let ckpt = AbsorbCheckpoint {
-        model_fingerprint: dec.u32()?,
-        schema_fingerprint: dec.u32()?,
-        shards: dec.u32()?,
-        cache_per_shard: dec.u64()?,
-        submitted: dec.u64()?,
-        absorb: match dec.u8()? {
-            0 => false,
-            1 => true,
-            other => return Err(format!("unknown absorb-mode tag {other}")),
-        },
-        k: dec.usize()?,
-        depth: dec.usize()?,
-        num_chains: dec.usize()?,
-        cms_rows: dec.usize()?,
-        cms_cols: dec.usize()?,
-        snapshots: Vec::new(),
-    };
-    if ckpt.shards == 0 || ckpt.shards > 4096 {
-        return Err(format!("checkpoint shard count {} out of range", ckpt.shards));
-    }
-    // the LRU pre-reserves its declared capacity, so an unbounded value
-    // here is a thin-air allocation like the shape fields below
-    if ckpt.cache_per_shard == 0 || ckpt.cache_per_shard > (1 << 24) {
-        return Err(format!(
-            "checkpoint cache capacity {} out of range (1..=2^24)",
-            ckpt.cache_per_shard
-        ));
-    }
-    if ckpt.k == 0
-        || ckpt.depth == 0
-        || ckpt.num_chains == 0
-        || ckpt.cms_rows == 0
-        || ckpt.cms_cols == 0
-    {
-        return Err(format!(
-            "degenerate checkpoint schema: K={} L={} M={} r={} w={}",
-            ckpt.k, ckpt.depth, ckpt.num_chains, ckpt.cms_rows, ckpt.cms_cols
-        ));
-    }
-    // same packing bound the CMS itself enforces; keeps bucket indices
-    // in u32 and blocks thin-air allocations from hostile headers
-    if ckpt.cms_rows >= 128 || ckpt.cms_cols >= (1 << 20) || ckpt.k > (1 << 24) {
-        return Err("checkpoint schema exceeds the serving shape caps".into());
-    }
-    // ensemble-shape caps: M and L are unbounded in SparxParams, but a
-    // checkpoint header declaring absurd values exists only to demand
-    // absurd allocations — reject before anything is reserved
-    if ckpt.num_chains > (1 << 12) || ckpt.depth > (1 << 12) {
-        return Err(format!(
-            "checkpoint ensemble shape M={} L={} exceeds the serving shape caps",
-            ckpt.num_chains, ckpt.depth
-        ));
-    }
-    Ok(ckpt)
-}
-
-fn decode_snapshots(
-    dec: &mut Decoder,
-    ckpt: &mut AbsorbCheckpoint,
-    version: u16,
-) -> CodecResult<()> {
-    let n = dec.u32()? as usize;
-    if n != ckpt.shards as usize {
-        return Err(format!(
-            "payload carries {n} snapshots but the header declares {} shards",
-            ckpt.shards
-        ));
-    }
-    let levels = ckpt.num_chains * ckpt.depth;
-    let buckets = (ckpt.cms_rows * ckpt.cms_cols) as u32;
-    ckpt.snapshots.reserve(n);
-    for _ in 0..n {
-        let processed = dec.u64()?;
-        let evicted = dec.u64()?;
-        let absorbed = dec.u64()?;
-        let n_entries = dec.u32()? as usize;
-        if n_entries as u64 > ckpt.cache_per_shard {
-            return Err(format!(
-                "snapshot holds {n_entries} sketches, over the declared cache \
-                 capacity {}",
-                ckpt.cache_per_shard
-            ));
-        }
-        // every entry costs ≥ 12 bytes on the wire; reject declared
-        // counts the remaining bytes cannot possibly back
-        if dec.remaining() < n_entries.saturating_mul(12) {
-            return Err(format!("truncated snapshot: {n_entries} sketch entries declared"));
-        }
-        let mut entries = Vec::with_capacity(n_entries);
-        for _ in 0..n_entries {
-            let id = dec.u64()?;
-            let sketch = dec.f32_vec()?;
-            if sketch.len() != ckpt.k {
-                return Err(format!(
-                    "sketch for id {id} is {}-wide, header declares K={}",
-                    sketch.len(),
-                    ckpt.k
-                ));
-            }
-            entries.push((id, sketch));
-        }
-        let n_levels = dec.u32()? as usize;
-        if n_levels != levels {
-            return Err(format!(
-                "snapshot has {n_levels} delta levels, header declares M·L = {levels}"
-            ));
-        }
-        // every level costs ≥ 4 bytes on the wire; reject declared
-        // counts the remaining bytes cannot possibly back (no
-        // allocate-then-discover-truncation)
-        if dec.remaining() < n_levels.saturating_mul(4) {
-            return Err(format!("truncated snapshot: {n_levels} delta levels declared"));
-        }
-        let mut delta = Vec::with_capacity(n_levels);
-        // v2 pairs are 8 raw bytes; v3 pairs are ≥ 2 varint bytes
-        let min_pair_bytes: usize = if version >= 3 { 2 } else { 8 };
-        for _ in 0..n_levels {
-            let n_pairs = dec.u32()? as usize;
-            if dec.remaining() < n_pairs.saturating_mul(min_pair_bytes) {
-                return Err(format!("truncated snapshot: {n_pairs} delta pairs declared"));
-            }
-            let mut lvl = Vec::with_capacity(n_pairs);
-            let mut prev: Option<u32> = None;
-            for _ in 0..n_pairs {
-                let (bucket, count) = if version >= 3 {
-                    let gap = dec.varint()?;
-                    let count = dec.varint()?;
-                    if count == 0 || count > u32::MAX as u64 {
-                        return Err(format!("delta count {count} out of range"));
-                    }
-                    if prev.is_some() && gap == 0 {
-                        return Err("delta buckets must be strictly increasing".into());
-                    }
-                    let bucket = prev.map_or(0, u64::from) + gap;
-                    if bucket >= buckets as u64 {
-                        return Err(format!(
-                            "delta bucket {bucket} out of range for a {}×{} CMS",
-                            ckpt.cms_rows, ckpt.cms_cols
-                        ));
-                    }
-                    (bucket as u32, count as u32)
-                } else {
-                    let bucket = dec.u32()?;
-                    let count = dec.u32()?;
-                    if bucket >= buckets {
-                        return Err(format!(
-                            "delta bucket {bucket} out of range for a {}×{} CMS",
-                            ckpt.cms_rows, ckpt.cms_cols
-                        ));
-                    }
-                    if count == 0 {
-                        return Err("delta entries must carry a non-zero count".into());
-                    }
-                    if let Some(p) = prev {
-                        if bucket <= p {
-                            return Err("delta buckets must be strictly increasing".into());
-                        }
-                    }
-                    (bucket, count)
-                };
-                prev = Some(bucket);
-                lvl.push((bucket, count));
-            }
-            delta.push(lvl);
-        }
-        ckpt.snapshots.push(AbsorbSnapshot { processed, evicted, absorbed, entries, delta });
-    }
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -486,7 +684,7 @@ mod tests {
             model_fingerprint: 0xDEAD_BEEF,
             schema_fingerprint: 0x5A5A_0001,
             shards: 2,
-            cache_per_shard: 4,
+            cache_total: 8,
             submitted: 17,
             absorb: true,
             k: 3,
@@ -494,22 +692,16 @@ mod tests {
             num_chains: 2,
             cms_rows: 4,
             cms_cols: 16,
-            snapshots: vec![
-                AbsorbSnapshot {
-                    processed: 10,
-                    evicted: 1,
-                    absorbed: 3,
-                    entries: vec![(7, vec![1.0, -2.0, 0.5]), (9, vec![0.0, 0.0, 4.0])],
-                    delta: vec![vec![(0, 2), (5, 1)], vec![], vec![(63, 4)], vec![]],
-                },
-                AbsorbSnapshot {
-                    processed: 7,
-                    evicted: 0,
-                    absorbed: 0,
-                    entries: vec![(2, vec![0.25, 0.0, -0.0])],
-                    delta: vec![vec![], vec![], vec![], vec![]],
-                },
+            processed: 17,
+            evicted: 1,
+            absorbed: 3,
+            entries: vec![
+                (7, 3, vec![1.0, -2.0, 0.5]),
+                (9, 11, vec![0.0, 0.0, 4.0]),
+                (2, 16, vec![0.25, 0.0, -0.0]),
             ],
+            visible: vec![vec![(0, 2), (5, 1)], vec![], vec![(63, 4)], vec![]],
+            pending: vec![vec![(9, 1)], vec![], vec![], vec![]],
         }
     }
 
@@ -537,72 +729,145 @@ mod tests {
     #[test]
     fn inconsistent_blocks_fail_typed() {
         let ckpt = sample();
-        // header/payload snapshot-count mismatch
-        let mut short = ckpt.clone();
-        short.snapshots.pop();
-        let art = short.to_artifact();
-        // keep the header claiming 2 shards but ship 1 snapshot
-        assert!(matches!(
-            AbsorbCheckpoint::from_artifact(&art),
-            Err(SparxError::InvalidParams(_))
-        ));
         // wrong sketch width
         let mut bad = ckpt.clone();
-        bad.snapshots[0].entries[0].1.push(9.0);
+        bad.entries[0].2.push(9.0);
         assert!(matches!(
             AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
             Err(SparxError::InvalidParams(_))
         ));
         // bucket out of range
         let mut bad = ckpt.clone();
-        bad.snapshots[0].delta[0].push((4 * 16, 1));
+        bad.visible[0].push((4 * 16, 1));
         assert!(matches!(
             AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
             Err(SparxError::InvalidParams(_))
         ));
-        // over-capacity snapshot
+        // pending overlay is validated like the visible one
+        let mut bad = ckpt.clone();
+        bad.pending[1].push((0, 0));
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // more entries than the cache budget
+        let mut bad = ckpt.clone();
+        for id in 100..110u64 {
+            let seq = bad.entries.last().map_or(0, |e| e.1) + 1;
+            bad.entries.push((id, seq, vec![0.0; 3]));
+            bad.submitted = seq + 1;
+        }
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // recency tags must strictly increase…
+        let mut bad = ckpt.clone();
+        bad.entries[2].1 = 3;
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // …and stay below the submit watermark
         let mut bad = ckpt;
-        for id in 100..110 {
-            bad.snapshots[0].entries.push((id, vec![0.0; 3]));
-        }
+        bad.entries[2].1 = 17;
         assert!(matches!(
             AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
             Err(SparxError::InvalidParams(_))
         ));
     }
 
-    /// Checkpoint files written by the previous release (format v2, raw
-    /// delta pairs) still restore exactly; the v3 payload for the same
-    /// state is smaller.
     #[test]
-    fn v2_checkpoint_payloads_still_decode() {
-        let ckpt = sample();
-        let mut art = ckpt.to_artifact();
-        let v3_payload_len = art.payload.len();
-        // rebuild the payload in the v2 (raw pairs) layout, mark the file v2
+    fn admitted_counts_entries_plus_evictions() {
+        // validate_for itself needs a live ensemble — exercised in
+        // tests/checkpoint.rs; here pin the counter identity
+        assert_eq!(sample().admitted(), 1 + 3);
+    }
+
+    /// Build a legacy (pre-v4) artifact byte-for-byte — params block in
+    /// the old field order, payload as per-shard snapshots — and check
+    /// the conversion: entries concatenated with synthesized recency
+    /// tags, deltas merged into the visible overlay, counters summed.
+    fn legacy_artifact(version: u16) -> ModelArtifact {
+        let mut params = Encoder::new();
+        params.put_u32(0xDEAD_BEEF);
+        params.put_u32(0x5A5A_0001);
+        params.put_u32(2); // shards
+        params.put_u64(4); // cache per shard
+        params.put_u64(17); // submitted
+        params.put_u8(1); // absorb
+        params.put_usize(3); // k
+        params.put_usize(2); // depth
+        params.put_usize(2); // num_chains
+        params.put_usize(4); // cms_rows
+        params.put_usize(16); // cms_cols
+        let snapshots = vec![
+            AbsorbSnapshot {
+                processed: 10,
+                evicted: 1,
+                absorbed: 3,
+                entries: vec![(7, vec![1.0, -2.0, 0.5]), (9, vec![0.0, 0.0, 4.0])],
+                delta: vec![vec![(0, 2), (5, 1)], vec![], vec![(63, 4)], vec![]],
+            },
+            AbsorbSnapshot {
+                processed: 7,
+                evicted: 0,
+                absorbed: 0,
+                entries: vec![(2, vec![0.25, 0.0, -0.0])],
+                delta: vec![vec![(5, 2)], vec![], vec![], vec![]],
+            },
+        ];
         let mut payload = Encoder::new();
-        payload.put_u32(ckpt.snapshots.len() as u32);
-        for snap in &ckpt.snapshots {
-            encode_snapshot(&mut payload, snap, 2);
+        payload.put_u32(snapshots.len() as u32);
+        for snap in &snapshots {
+            encode_snapshot_legacy(&mut payload, snap, version);
         }
-        art.payload = payload.into_bytes();
-        art.version = 2;
-        assert!(v3_payload_len < art.payload.len(), "v3 must compress the delta levels");
-        let reread = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
-        let back = AbsorbCheckpoint::from_artifact(&reread).unwrap();
-        assert_eq!(ckpt, back);
+        let mut art =
+            ModelArtifact::new(CHECKPOINT_DETECTOR, params.into_bytes(), payload.into_bytes());
+        art.version = version;
+        art
     }
 
     #[test]
-    fn merged_sums_counters_and_deltas() {
-        let ckpt = sample();
-        let merged = ckpt.merged();
-        assert_eq!(merged.processed, 17);
-        assert_eq!(merged.evicted, 1);
-        assert_eq!(merged.absorbed, 3);
-        assert_eq!(merged.entries.len(), 3);
-        assert_eq!(merged.delta[0], vec![(0, 2), (5, 1)]);
-        assert_eq!(merged.delta[2], vec![(63, 4)]);
-        assert_eq!(merged.admitted(), 1 + 3);
+    fn legacy_checkpoint_payloads_decode_and_convert() {
+        for version in [2u16, 3] {
+            let art = legacy_artifact(version);
+            let reread = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
+            assert_eq!(reread.version, version);
+            let ckpt = AbsorbCheckpoint::from_artifact(&reread).unwrap();
+            assert_eq!(ckpt.model_fingerprint, 0xDEAD_BEEF);
+            assert_eq!(ckpt.shards, 2);
+            assert_eq!(ckpt.cache_total, 8, "per-shard budget × shards");
+            assert_eq!(ckpt.submitted, 17);
+            assert!(ckpt.absorb);
+            assert_eq!((ckpt.processed, ckpt.evicted, ckpt.absorbed), (17, 1, 3));
+            // entries in shard order with synthesized recency tags
+            assert_eq!(
+                ckpt.entries,
+                vec![
+                    (7, 0, vec![1.0, -2.0, 0.5]),
+                    (9, 1, vec![0.0, 0.0, 4.0]),
+                    (2, 2, vec![0.25, 0.0, -0.0]),
+                ]
+            );
+            // deltas merged bucket-wise into the visible overlay
+            assert_eq!(ckpt.visible[0], vec![(0, 2), (5, 3)]);
+            assert_eq!(ckpt.visible[2], vec![(63, 4)]);
+            assert!(ckpt.pending.iter().all(Vec::is_empty));
+            assert_eq!(ckpt.admitted(), 1 + 3);
+        }
+    }
+
+    /// The v3 gap-varint level codec compresses vs the raw v2 pairs.
+    #[test]
+    fn v3_levels_are_smaller_than_v2() {
+        let a2 = legacy_artifact(2);
+        let a3 = legacy_artifact(3);
+        assert!(a3.payload.len() < a2.payload.len(), "v3 must compress the delta levels");
+        // both decode to the same converted checkpoint
+        assert_eq!(
+            AbsorbCheckpoint::from_artifact(&a2).unwrap(),
+            AbsorbCheckpoint::from_artifact(&a3).unwrap()
+        );
     }
 }

@@ -39,5 +39,8 @@ pub use ensemble::{
 };
 pub use plan::{ChainSet, ExecMode};
 pub use projector::{compute_deltamax, project_dataset, Projector, Sketch};
-pub use sharded::{shard_of, ServeOptions, ShardCounters, ShardedReport, ShardedStreamScorer};
+pub use sharded::{
+    shard_of, ReplySink, ServeOptions, ShardCounters, ShardReply, ShardedReport, ShardedStats,
+    ShardedStreamScorer, WouldBlock, ABSORB_EPOCH,
+};
 pub use stream::{ServedEnsemble, StreamScore, StreamScorer, SwapCarry};

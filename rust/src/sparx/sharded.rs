@@ -1,62 +1,92 @@
 //! Sharded concurrent serving (§3.5 scaled out): S shards, each owning
-//! its own **mutable** absorb state (LRU + absorbed CMS delta) behind a
-//! bounded ingest queue on a long-lived pinned worker thread — while all
-//! S shards share **one** read-only [`ServedEnsemble`] behind an `Arc`,
-//! so the resident model footprint is 1× regardless of the shard count.
+//! its own **mutable** absorb state behind a bounded ingest queue on a
+//! long-lived pinned worker thread — while all S shards share **one**
+//! read-only [`ServedEnsemble`] behind an `Arc`, so the resident model
+//! footprint is 1× regardless of the shard count.
 //!
 //! Updates route by `murmur(ID) % S`, so every update for a given ID
 //! lands on the same shard, in arrival order. Shards share no *mutable*
-//! state — separate caches, separate absorbed deltas, separate scratch —
-//! and scoring only reads the shared ensemble, so each shard behaves
-//! **bit-identically** to a single-threaded [`StreamScorer`] fed that
-//! shard's sub-stream, regardless of thread interleaving. While no shard
-//! evicts (and absorb mode is off), per-ID score sequences are
-//! additionally identical across shard counts (eviction resets a
-//! sketch, and *when* an ID is evicted depends on which other IDs share
-//! its LRU — the one part of the contract that is cache-sizing, not
-//! sharding). Both statements are what the determinism harness in
-//! `tests/sharded.rs` replays.
+//! state; what makes the pool **bit-identical across shard counts** is
+//! that the two cross-ID couplings are lifted out of the shards and
+//! driven by the (single-threaded) feeder, as a pure function of the
+//! global submit sequence:
+//!
+//! * **Global eviction.** `--cache` is a *total* budget. The feeder
+//!   keeps a global recency directory (`ID → last-touch sequence`) of
+//!   exactly that capacity; when an admission overflows it, the feeder
+//!   enqueues an explicit [`ShardItem::Evict`] for the globally
+//!   least-recent ID *before* the admitting update — the same victim,
+//!   at the same stream position, a single-threaded scorer with the
+//!   same budget would pick. Per-shard caches are sized to the full
+//!   budget so they never self-evict.
+//! * **Epoch-published absorb.** In absorb mode, shard-local absorbs
+//!   land in an invisible *pending* overlay; every [`ABSORB_EPOCH`]
+//!   submits the feeder drains all pendings (a queue barrier), sums the
+//!   increments (saturating adds commute — order can't matter), and
+//!   broadcasts the merged batch back, so what any score "has seen" is
+//!   a function of the submit sequence alone, never of the shard
+//!   layout. (A plain [`StreamScorer`] publishes immediately; the
+//!   sharded reference for absorb-mode bit-identity is therefore the
+//!   pool at S = 1, which shares the epoch schedule.)
+//!
+//! Both invariants are what lets [`checkpoint`][ShardedStreamScorer::checkpoint]
+//! persist *global* state (v4 format, see [`super::checkpoint`]) and
+//! [`reshard`][ShardedStreamScorer::reshard] re-partition it live:
+//! resume and reshard may change the shard count freely and the per-ID
+//! score sequences continue bit-identically.
 //!
 //! Design notes:
-//! * the feeder coalesces routed updates into small batches so queue
+//! * the feeder coalesces routed items into small batches so queue
 //!   synchronisation amortises (one lock round trip per [`BATCH`]
-//!   updates, not per update); every update carries its global submit
-//!   **sequence number**, so recorded per-shard score logs merge back
-//!   into exact submit order ([`ShardedReport::merged_scores`]);
-//! * a full shard queue blocks the feeder ([`PinnedPool`] backpressure)
-//!   — updates are never dropped;
-//! * the same queues carry the serving control plane: state snapshots
-//!   for checkpointing ([`ShardedStreamScorer::checkpoint`]) and atomic
-//!   ensemble swaps for hot reload
-//!   ([`ShardedStreamScorer::swap_ensemble`]) are messages processed in
-//!   stream order, so a checkpoint cut or a model swap lands at a
-//!   deterministic point of every shard's sub-stream;
-//! * [`ShardedStreamScorer::finish`] flushes, closes the queues, joins
-//!   the workers and merges per-shard counters into a [`ShardedReport`].
+//!   items); every update carries its global submit **sequence
+//!   number**, so recorded per-shard score logs merge back into exact
+//!   submit order ([`ShardedReport::merged_scores`]);
+//! * a full shard queue blocks [`submit`][ShardedStreamScorer::submit]
+//!   ([`PinnedPool`] backpressure — updates are never dropped), while
+//!   [`try_submit`][ShardedStreamScorer::try_submit] surfaces the same
+//!   condition as a typed [`WouldBlock`] without consuming the update's
+//!   sequence number — the TCP ingress uses it to push backpressure to
+//!   slow clients instead of stalling the accept loop;
+//! * updates can carry a per-item [`ReplySink`]; shard workers send the
+//!   score back through it and *never block doing so* (the sink is an
+//!   unbounded sender), so one slow consumer cannot stall a shard;
+//! * the same queues carry the serving control plane — snapshots,
+//!   pending-drain barriers, visible-overlay publishes, counter probes
+//!   and atomic ensemble swaps are messages processed in stream order,
+//!   so each lands at a deterministic point of every shard's sub-stream.
 
-use std::sync::mpsc::{sync_channel, SyncSender};
+use std::collections::HashMap;
+use std::sync::mpsc::{sync_channel, Sender, SyncSender};
 use std::sync::Arc;
 
 use crate::api::{Result, SparxError};
 use crate::cluster::pool::PinnedPool;
 use crate::data::UpdateTriple;
 use crate::hash::murmur3_bytes;
+use crate::util::LruCache;
 
 use super::checkpoint::{AbsorbCheckpoint, AbsorbSnapshot};
 use super::ensemble::SparxModel;
 use super::stream::{ServedEnsemble, StreamScore, StreamScorer, SwapCarry};
 
 /// Seed of the ID → shard murmur route. Fixed: shard assignment is part
-/// of the serving contract (a restarted deployment must route every ID
-/// to the same shard it lived on before — which is also what lets a
-/// checkpoint restore per-shard state onto the same layout).
+/// of the serving contract (every update for an ID must land on the
+/// shard that owns its sketch). Since v4 checkpoints the route is *not*
+/// part of the persistence contract — resume re-partitions by the new
+/// shard count.
 const SHARD_ROUTE_SEED: u32 = 0x51AD_0C47;
 
-/// Updates per channel message (feeder-side coalescing).
+/// Items per channel message (feeder-side coalescing).
 const BATCH: usize = 64;
 
 /// Bound of each shard's ingest queue, in batches.
 const QUEUE_CAP_BATCHES: usize = 64;
+
+/// Absorb-mode publish period, in submitted updates: pendings are
+/// drained, merged and republished every time the global submit counter
+/// crosses a multiple of this. Part of the serving contract — changing
+/// it changes absorb-mode scores (but never their S-independence).
+pub const ABSORB_EPOCH: u64 = 256;
 
 /// Shard index for `id` among `shards` shards.
 #[inline]
@@ -72,22 +102,64 @@ pub struct ServeOptions {
     /// memory grows with the stream; for harnesses and `--score-log`,
     /// not steady-state production serving.
     pub record: bool,
-    /// Absorb every update's point into its shard's delta overlay after
-    /// scoring (the xStream online behaviour). The reported score stays
-    /// the pre-absorb one. Note absorb couples IDs *within* a shard, so
-    /// cross-shard-count score identity no longer holds — but per-shard
-    /// state still checkpoints/merges exactly.
+    /// Absorb every update's point into the ensemble's density counts
+    /// after scoring (the xStream online behaviour). Increments become
+    /// visible at epoch boundaries (see [`ABSORB_EPOCH`]), so scores
+    /// stay bit-identical across shard counts.
     pub absorb: bool,
 }
 
-/// What travels over a shard's ingest queue: data batches, plus the two
+/// A score flowing back to whoever submitted the update or query. The
+/// sink is deliberately an *unbounded* sender: shard workers must never
+/// block on a slow reply consumer (that would couple one consumer's
+/// backpressure to every ID on the shard). Bounding the in-flight window
+/// is the submitter's job — the TCP connection layer stops *reading*
+/// when its window fills.
+pub type ReplySink = Sender<ShardReply>;
+
+/// What a shard sends back through a [`ReplySink`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardReply {
+    /// The scored outcome of a submitted update, in per-ID submit order.
+    Update(StreamScore),
+    /// Answer to a read-only [`query_score`][ShardedStreamScorer::query_score]:
+    /// `None` when the ID is not resident.
+    Query { id: u64, score: Option<f64> },
+}
+
+/// Typed backpressure: the target shard's queue was full, the update was
+/// **not** accepted and its submit sequence was not consumed. Retry
+/// later (or block via [`ShardedStreamScorer::submit`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WouldBlock(pub UpdateTriple);
+
+/// One work item inside a shard's batch, in global submit order.
+enum ShardItem {
+    /// Apply a δ-update and (optionally) reply with the score.
+    Update { seq: u64, u: UpdateTriple, reply: Option<ReplySink> },
+    /// Drop `id`'s sketch: the feeder's global directory evicted it.
+    Evict { id: u64 },
+    /// Read-only score probe; replies `None` when not resident.
+    Query { id: u64, reply: ReplySink },
+}
+
+/// What travels over a shard's ingest queue: data batches plus the
 /// control messages of the serving lifecycle.
 enum ShardMsg {
-    /// Sequence-numbered updates, in submit order.
-    Batch(Vec<(u64, UpdateTriple)>),
-    /// Snapshot the shard's absorb state and send it back (checkpoint
-    /// cut: lands after every update submitted before it).
+    /// Sequence-ordered work items.
+    Batch(Vec<ShardItem>),
+    /// Snapshot the shard's state — entries in LRU→MRU order plus the
+    /// *pending* overlay and counters — and send it back (checkpoint or
+    /// reshard barrier; lands after everything submitted before it).
     Snapshot(SyncSender<AbsorbSnapshot>),
+    /// Drain the pending absorb overlay (epoch barrier).
+    CollectPending(SyncSender<Vec<HashMap<u32, u32>>>),
+    /// Publish merged epoch increments into the visible overlay. Every
+    /// shard receives the same `Arc`, so visible state stays identical
+    /// across shards.
+    ApplyVisible(Arc<Vec<Vec<(u32, u32)>>>),
+    /// Report live counters (cheap `STATS` probe — no sketch copying).
+    Stats(SyncSender<ShardCounters>),
     /// Atomically swap the shared ensemble (hot reload). The feeder
     /// validates compatibility *before* broadcasting, so the per-shard
     /// swap cannot fail.
@@ -104,31 +176,115 @@ struct Shard {
     absorb: bool,
 }
 
-/// Counters one shard reports after [`ShardedStreamScorer::finish`].
+impl Shard {
+    fn counters(&self) -> ShardCounters {
+        ShardCounters {
+            processed: self.scorer.processed(),
+            admitted: self.admitted,
+            evictions: self.scorer.evictions(),
+            cached_ids: self.scorer.cached_ids(),
+            absorbed: self.scorer.absorbed(),
+        }
+    }
+}
+
+/// The per-shard message handler (a named `fn` so every worker clones a
+/// zero-sized value).
+fn shard_handler(shard: &mut Shard, msg: ShardMsg) {
+    match msg {
+        ShardMsg::Batch(items) => {
+            for item in items {
+                match item {
+                    ShardItem::Update { seq, u, reply } => {
+                        let score = shard.scorer.update(&u);
+                        if score.fresh {
+                            shard.admitted += 1;
+                        }
+                        if shard.absorb {
+                            shard.scorer.absorb_pending(score.id);
+                        }
+                        if score.more_outlying_than(shard.worst.as_ref()) {
+                            shard.worst = Some(score.clone());
+                        }
+                        if let Some(log) = &mut shard.recorded {
+                            log.push((seq, score.clone()));
+                        }
+                        if let Some(tx) = reply {
+                            // a gone consumer is not the shard's problem
+                            let _ = tx.send(ShardReply::Update(score));
+                        }
+                    }
+                    ShardItem::Evict { id } => {
+                        shard.scorer.evict(id);
+                    }
+                    ShardItem::Query { id, reply } => {
+                        let _ = reply.send(ShardReply::Query {
+                            id,
+                            score: shard.scorer.score_id(id),
+                        });
+                    }
+                }
+            }
+        }
+        ShardMsg::Snapshot(reply) => {
+            // a dropped receiver (feeder gone) is not an error
+            let _ = reply.send(shard.scorer.snapshot_with_pending());
+        }
+        ShardMsg::CollectPending(reply) => {
+            let _ = reply.send(shard.scorer.take_pending());
+        }
+        ShardMsg::ApplyVisible(inc) => {
+            shard.scorer.apply_visible(&inc);
+        }
+        ShardMsg::Stats(reply) => {
+            let _ = reply.send(shard.counters());
+        }
+        ShardMsg::Swap(ens) => {
+            // the feeder validated compatibility against the same shared
+            // ensemble every shard holds, so this cannot fail; a panic
+            // here would mean shards diverged, and crashing the worker
+            // (re-raised at `finish`) beats silently serving from
+            // mismatched models
+            shard
+                .scorer
+                .swap_ensemble(ens)
+                // lint:allow(no-panic-paths)
+                .expect("feeder validates swap compatibility");
+        }
+    }
+}
+
+/// Counters one shard reports (live via `STATS`, final via
+/// [`ShardedStreamScorer::finish`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardCounters {
     /// δ-updates this shard processed.
     pub processed: u64,
     /// IDs admitted to this shard's cache (`fresh` scores).
     pub admitted: u64,
-    /// LRU evictions in this shard.
+    /// Sketches evicted on this shard (by the global directory).
     pub evictions: u64,
-    /// Sketches resident in this shard's cache at shutdown.
+    /// Sketches resident in this shard's cache.
     pub cached_ids: usize,
-    /// Points absorbed into this shard's delta overlay.
+    /// Points absorbed into this shard's overlays.
     pub absorbed: u64,
 }
 
 /// The merged post-shutdown report: per-shard counters, the most
 /// outlying update seen anywhere, and (in recording mode) every shard's
 /// full score sequence tagged with global submit sequence numbers.
+///
+/// After a live [`reshard`][ShardedStreamScorer::reshard], `shards`
+/// reflects the final generation (counter aggregates carry across the
+/// transition on shard 0) and `scores` holds the retired generations'
+/// logs alongside the final ones — [`merged_scores`][Self::merged_scores]
+/// interleaves them all back into submit order.
 #[derive(Debug, Clone)]
 pub struct ShardedReport {
     pub shards: Vec<ShardCounters>,
     pub worst: Option<StreamScore>,
-    /// Per-shard `(submit sequence, score)` logs in shard processing
-    /// order; empty unless the scorer was built with
-    /// [`ServeOptions::record`]. Use
+    /// Per-shard `(submit sequence, score)` logs; empty unless the
+    /// scorer was built with [`ServeOptions::record`]. Use
     /// [`merged_scores`](Self::merged_scores) for the global view.
     pub scores: Vec<Vec<(u64, StreamScore)>>,
 }
@@ -139,7 +295,7 @@ impl ShardedReport {
         self.shards.iter().map(|s| s.processed).sum()
     }
 
-    /// Total LRU evictions across shards.
+    /// Total evictions across shards.
     pub fn evictions(&self) -> u64 {
         self.shards.iter().map(|s| s.evictions).sum()
     }
@@ -160,9 +316,10 @@ impl ShardedReport {
     }
 
     /// The recorded score logs interleaved back into **global submit
-    /// order** by sequence number — bit-stable across shard counts and
-    /// thread interleavings, which is what lets a resumed run's log be
-    /// diffed against an uninterrupted one. Empty unless recording.
+    /// order** by sequence number — bit-stable across shard counts,
+    /// thread interleavings and live reshards, which is what lets a
+    /// resumed or resharded run's log be diffed against an uninterrupted
+    /// one. Empty unless recording.
     pub fn merged_scores(&self) -> Vec<StreamScore> {
         let mut tagged: Vec<(u64, &StreamScore)> = self
             .scores
@@ -175,6 +332,68 @@ impl ShardedReport {
     }
 }
 
+/// Live counters for the `STATS` verb: the per-shard counters a running
+/// pool reports without stopping, plus the feeder-side aggregates.
+#[derive(Debug, Clone)]
+pub struct ShardedStats {
+    pub shards: Vec<ShardCounters>,
+    /// Updates submitted so far (≥ the processed sum while in flight).
+    pub submitted: u64,
+    /// IDs resident in the global recency directory.
+    pub resident_ids: usize,
+    /// Bytes of the one Arc-shared ensemble.
+    pub resident_ensemble_bytes: usize,
+    /// Bytes of the resident sketches (`resident_ids × K × 4`).
+    pub resident_sketch_bytes: usize,
+}
+
+impl ShardedStats {
+    pub fn processed(&self) -> u64 {
+        self.shards.iter().map(|s| s.processed).sum()
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.shards.iter().map(|s| s.admitted).sum()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.shards.iter().map(|s| s.evictions).sum()
+    }
+
+    pub fn absorbed(&self) -> u64 {
+        self.shards.iter().map(|s| s.absorbed).sum()
+    }
+
+    /// Total resident bytes surfaced to `STATS`/metrics consumers.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_ensemble_bytes + self.resident_sketch_bytes
+    }
+}
+
+/// Sort each level's increment map into the canonical `(bucket, count)`
+/// pair order the checkpoint codec and [`StreamScorer::apply_visible`]
+/// expect.
+fn sorted_levels(maps: &[HashMap<u32, u32>]) -> Vec<Vec<(u32, u32)>> {
+    maps.iter()
+        .map(|map| {
+            let mut lvl: Vec<(u32, u32)> = map.iter().map(|(&b, &c)| (b, c)).collect();
+            lvl.sort_unstable();
+            lvl
+        })
+        .collect()
+}
+
+/// Sum sorted increment levels into per-level maps (saturating — the
+/// same arithmetic the scorer's visible overlay uses).
+fn add_levels(into: &mut [HashMap<u32, u32>], levels: &[Vec<(u32, u32)>]) {
+    for (map, lvl) in into.iter_mut().zip(levels) {
+        for &(bucket, count) in lvl {
+            let slot = map.entry(bucket).or_insert(0);
+            *slot = slot.saturating_add(count);
+        }
+    }
+}
+
 /// The multi-threaded §3.5 front-end. Build from a fitted model via
 /// [`ShardedStreamScorer::new`] (or `FittedModel::stream_scorer_sharded`
 /// through the api), or share an already-frozen ensemble with
@@ -182,24 +401,34 @@ impl ShardedReport {
 /// update stream, then [`finish`](Self::finish) for the merged report.
 pub struct ShardedStreamScorer {
     pool: PinnedPool<ShardMsg, Shard>,
-    pending: Vec<Vec<(u64, UpdateTriple)>>,
+    pending: Vec<Vec<ShardItem>>,
     shards: usize,
-    cache_per_shard: usize,
+    cache_total: usize,
+    /// Global recency directory: ID → last-touch submit sequence, LRU
+    /// order == submit order of last touches. Its capacity *is* the
+    /// serving cache budget; overflow here drives explicit shard evicts.
+    dir: LruCache<u64, u64>,
+    /// Feeder master copy of the visible absorb overlay (identical on
+    /// every shard) — what a checkpoint persists.
+    visible: Vec<HashMap<u32, u32>>,
     submitted: u64,
-    absorb: bool,
+    opts: ServeOptions,
     ensemble: Arc<ServedEnsemble>,
+    /// Recorded score logs of generations retired by a live reshard.
+    archive: Vec<Vec<(u64, StreamScore)>>,
+    /// Worst score across retired generations.
+    carried_worst: Option<StreamScore>,
 }
 
 impl ShardedStreamScorer {
-    /// `shards` workers sharing one read-only ensemble, each with a
-    /// private LRU of `cache_per_shard` IDs (total resident sketches:
-    /// `shards × cache_per_shard`; resident model: **1×**, Arc-shared).
-    /// Same model requirements as [`StreamScorer::new`].
-    pub fn new(model: &SparxModel, shards: usize, cache_per_shard: usize) -> Result<Self> {
+    /// `shards` workers sharing one read-only ensemble and one **total**
+    /// budget of `cache_total` resident sketches (resident model: 1×,
+    /// Arc-shared). Same model requirements as [`StreamScorer::new`].
+    pub fn new(model: &SparxModel, shards: usize, cache_total: usize) -> Result<Self> {
         Self::from_ensemble(
             Arc::new(ServedEnsemble::new(model)?),
             shards,
-            cache_per_shard,
+            cache_total,
             ServeOptions::default(),
             None,
         )
@@ -208,27 +437,31 @@ impl ShardedStreamScorer {
     /// Test-harness constructor: every shard additionally records its
     /// full score sequence for later comparison. Memory grows with the
     /// stream — not for production serving.
-    pub fn recording(model: &SparxModel, shards: usize, cache_per_shard: usize) -> Result<Self> {
+    pub fn recording(model: &SparxModel, shards: usize, cache_total: usize) -> Result<Self> {
         Self::from_ensemble(
             Arc::new(ServedEnsemble::new(model)?),
             shards,
-            cache_per_shard,
+            cache_total,
             ServeOptions { record: true, absorb: false },
             None,
         )
     }
 
     /// The full-control constructor: share `ensemble` across `shards`
-    /// workers, optionally recording and/or absorbing
-    /// ([`ServeOptions`]), optionally restoring a checkpoint so the
-    /// stream continues exactly where a previous process left off.
-    /// Resume is validated typed before any worker spawns: the
-    /// checkpoint must carry the same model fingerprint, shard count and
-    /// cache capacity it was taken under.
+    /// workers under one `cache_total` budget, optionally recording
+    /// and/or absorbing ([`ServeOptions`]), optionally restoring a
+    /// checkpoint so the stream continues exactly where a previous
+    /// process left off.
+    ///
+    /// Resume is validated typed before any worker spawns, and — from
+    /// checkpoint format v4 — is **layout-free**: `shards` and
+    /// `cache_total` may differ from the capture-time values. The
+    /// checkpoint's global LRU→MRU entry order rebuilds the recency
+    /// directory; a smaller budget evicts from the LRU side on the spot.
     pub fn from_ensemble(
         ensemble: Arc<ServedEnsemble>,
         shards: usize,
-        cache_per_shard: usize,
+        cache_total: usize,
         opts: ServeOptions,
         resume: Option<&AbsorbCheckpoint>,
     ) -> Result<Self> {
@@ -240,83 +473,76 @@ impl ShardedStreamScorer {
                 "shard count {shards} exceeds the 4096-thread cap"
             )));
         }
+        if cache_total == 0 {
+            return Err(SparxError::InvalidParams(
+                "serving cache budget must be ≥ 1 (it bounds the resident sketches)".into(),
+            ));
+        }
+        let levels = ensemble.num_chains() * ensemble.depth();
+        let mut dir = LruCache::new(cache_total);
+        let mut visible: Vec<HashMap<u32, u32>> = vec![HashMap::new(); levels];
+        let states;
+        let submitted;
         if let Some(ckpt) = resume {
-            ckpt.validate_for(&ensemble, shards, cache_per_shard, opts.absorb)?;
-        }
-        let mut states = Vec::with_capacity(shards);
-        for s in 0..shards {
-            let mut scorer = StreamScorer::from_ensemble(ensemble.clone(), cache_per_shard)?;
-            let mut admitted = 0;
-            if let Some(ckpt) = resume {
-                let snap = ckpt.snapshots.get(s).ok_or_else(|| {
-                    SparxError::InvalidParams(format!(
-                        "checkpoint carries {} snapshots but declares {shards} shards",
-                        ckpt.snapshots.len()
-                    ))
-                })?;
-                scorer.restore(snap)?;
-                admitted = snap.admitted();
+            ckpt.validate_for(&ensemble, opts.absorb)?;
+            // a smaller budget than capture time sheds the least-recent
+            // entries right here, exactly as live admissions would
+            let shed = ckpt.entries.len().saturating_sub(cache_total);
+            let kept = ckpt.entries.get(shed..).unwrap_or_default();
+            for (id, seq, _) in kept {
+                dir.put(*id, *seq);
             }
-            states.push(Shard {
-                scorer,
-                worst: None,
-                admitted,
-                recorded: opts.record.then(Vec::new),
-                absorb: opts.absorb,
-            });
+            add_levels(&mut visible, &ckpt.visible);
+            states = restored_states(
+                &ensemble,
+                shards,
+                cache_total,
+                &opts,
+                kept,
+                &ckpt.visible,
+                &ckpt.pending,
+                ckpt.processed,
+                ckpt.evicted + shed as u64,
+                ckpt.absorbed,
+            )?;
+            submitted = ckpt.submitted;
+        } else {
+            let mut fresh = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                fresh.push(Shard {
+                    scorer: StreamScorer::from_ensemble(ensemble.clone(), cache_total)?,
+                    worst: None,
+                    admitted: 0,
+                    recorded: opts.record.then(Vec::new),
+                    absorb: opts.absorb,
+                });
+            }
+            states = fresh;
+            submitted = 0;
         }
-        let pool = PinnedPool::spawn(
-            states,
-            QUEUE_CAP_BATCHES,
-            |shard: &mut Shard, msg: ShardMsg| match msg {
-                ShardMsg::Batch(batch) => {
-                    for (seq, u) in batch {
-                        let s = shard.scorer.update(&u);
-                        if s.fresh {
-                            shard.admitted += 1;
-                        }
-                        if shard.absorb {
-                            shard.scorer.absorb_only(s.id);
-                        }
-                        if s.more_outlying_than(shard.worst.as_ref()) {
-                            shard.worst = Some(s.clone());
-                        }
-                        if let Some(log) = &mut shard.recorded {
-                            log.push((seq, s));
-                        }
-                    }
-                }
-                ShardMsg::Snapshot(reply) => {
-                    // a dropped receiver (feeder gone) is not an error
-                    let _ = reply.send(shard.scorer.snapshot());
-                }
-                ShardMsg::Swap(ens) => {
-                    // the feeder validated compatibility against the same
-                    // shared ensemble every shard holds, so this cannot
-                    // fail; a panic here would mean shards diverged, and
-                    // crashing the worker (re-raised at `finish`) beats
-                    // silently serving from mismatched models
-                    shard
-                        .scorer
-                        .swap_ensemble(ens)
-                        // lint:allow(no-panic-paths)
-                        .expect("feeder validates swap compatibility");
-                }
-            },
-        );
+        let pool = PinnedPool::spawn(states, QUEUE_CAP_BATCHES, shard_handler);
         Ok(ShardedStreamScorer {
             pool,
-            pending: vec![Vec::with_capacity(BATCH); shards],
+            pending: (0..shards).map(|_| Vec::with_capacity(BATCH)).collect(),
             shards,
-            cache_per_shard,
-            submitted: resume.map_or(0, |c| c.submitted),
-            absorb: opts.absorb,
+            cache_total,
+            dir,
+            visible,
+            submitted,
+            opts,
             ensemble,
+            archive: Vec::new(),
+            carried_worst: None,
         })
     }
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// The pool-wide resident-sketch budget.
+    pub fn cache_total(&self) -> usize {
+        self.cache_total
     }
 
     /// Updates submitted so far — across process restarts when resumed
@@ -332,8 +558,7 @@ impl ShardedStreamScorer {
     }
 
     /// Bytes of the **one** resident ensemble all shards share — this
-    /// does not scale with the shard count (the pre-refactor design held
-    /// S independent copies).
+    /// does not scale with the shard count.
     pub fn resident_ensemble_bytes(&self) -> usize {
         self.ensemble.resident_bytes()
     }
@@ -349,61 +574,352 @@ impl ShardedStreamScorer {
     /// has panicked, in which case its updates are discarded and
     /// [`finish`](Self::finish) re-raises the panic).
     pub fn submit(&mut self, u: UpdateTriple) {
-        let s = shard_of(u.id(), self.shards);
+        self.submit_with_reply(u, None);
+    }
+
+    /// [`submit`](Self::submit), with the score sent back through
+    /// `reply` once the owning shard processes the update. Replies for
+    /// one ID arrive in submit order (one shard, FIFO queue); replies
+    /// across IDs on different shards may interleave.
+    pub fn submit_with_reply(&mut self, u: UpdateTriple, reply: Option<ReplySink>) {
         let seq = self.submitted;
         self.submitted += 1;
-        // `shard_of` reduces modulo the shard count, so the slot always
-        // exists; `get_mut` keeps the path panic-free regardless.
-        if let Some(buf) = self.pending.get_mut(s) {
-            buf.push((seq, u));
-            if buf.len() >= BATCH {
-                let batch = std::mem::replace(buf, Vec::with_capacity(BATCH));
-                self.pool.send(s, ShardMsg::Batch(batch));
+        self.route(seq, u, reply, true);
+        self.maybe_merge_epoch();
+    }
+
+    /// Non-blocking submit: accepts the update exactly like
+    /// [`submit_with_reply`](Self::submit_with_reply) unless the target
+    /// shard's queue is full *and* its batch buffer is at capacity, in
+    /// which case the update is handed back as [`WouldBlock`] — nothing
+    /// was enqueued and the submit sequence was not consumed, so a later
+    /// retry lands at exactly the stream position it is retried at.
+    pub fn try_submit(
+        &mut self,
+        u: UpdateTriple,
+        reply: Option<ReplySink>,
+    ) -> std::result::Result<(), WouldBlock> {
+        let s = shard_of(u.id(), self.shards);
+        // make room up front so acceptance is all-or-nothing
+        if self.pending.get(s).is_some_and(|b| b.len() >= BATCH) && !self.try_flush_shard(s) {
+            return Err(WouldBlock(u));
+        }
+        let seq = self.submitted;
+        self.submitted += 1;
+        self.route(seq, u, reply, false);
+        self.maybe_merge_epoch();
+        Ok(())
+    }
+
+    /// Read-only score probe for `id`, answered through `reply` as
+    /// [`ShardReply::Query`] after everything submitted before this
+    /// call. Does not touch the global recency directory — probing is
+    /// not an update, so it cannot perturb eviction determinism.
+    pub fn query_score(&mut self, id: u64, reply: ReplySink) {
+        let s = shard_of(id, self.shards);
+        self.push_item(s, ShardItem::Query { id, reply }, true);
+        // probes answer promptly even on an idle stream
+        self.flush_shard(s);
+    }
+
+    /// Push everything buffered feeder-side into the shard queues
+    /// (blocking on full queues). Reply-carrying updates submitted
+    /// before a `flush` are guaranteed to reach their shards.
+    pub fn flush(&mut self) {
+        for s in 0..self.shards {
+            self.flush_shard(s);
+        }
+    }
+
+    // ------------------------------------------------------- internals
+
+    /// Global eviction decision + routed enqueue for one update.
+    fn route(&mut self, seq: u64, u: UpdateTriple, reply: Option<ReplySink>, blocking: bool) {
+        let id = u.id();
+        let s = shard_of(id, self.shards);
+        if let Some((victim, _)) = self.dir.put(id, seq) {
+            let vs = shard_of(victim, self.shards);
+            // the evict must precede the admitting update on its own
+            // shard; cross-shard order is irrelevant (disjoint IDs)
+            self.push_item(vs, ShardItem::Evict { id: victim }, blocking);
+        }
+        self.push_item(s, ShardItem::Update { seq, u, reply }, blocking);
+    }
+
+    fn push_item(&mut self, s: usize, item: ShardItem, blocking: bool) {
+        let full = match self.pending.get_mut(s) {
+            Some(buf) => {
+                buf.push(item);
+                buf.len() >= BATCH
+            }
+            None => false,
+        };
+        if full {
+            if blocking {
+                self.flush_shard(s);
+            } else {
+                // opportunistic: a full queue leaves the batch buffered
+                // (accepted, flushed on the next opportunity) — only
+                // `try_submit`'s own pre-check turns fullness into a
+                // typed rejection
+                let _ = self.try_flush_shard(s);
             }
         }
     }
 
-    /// Flush everything submitted so far to the shards.
-    fn flush_pending(&mut self) {
-        for (s, buf) in self.pending.iter_mut().enumerate() {
-            if !buf.is_empty() {
-                self.pool.send(s, ShardMsg::Batch(std::mem::take(buf)));
+    fn flush_shard(&mut self, s: usize) {
+        let batch = match self.pending.get_mut(s) {
+            Some(buf) if !buf.is_empty() => std::mem::take(buf),
+            _ => return,
+        };
+        self.pool.send(s, ShardMsg::Batch(batch));
+    }
+
+    /// Returns whether the shard's buffer is now empty (true also when
+    /// there was nothing to flush).
+    fn try_flush_shard(&mut self, s: usize) -> bool {
+        let batch = match self.pending.get_mut(s) {
+            Some(buf) if !buf.is_empty() => std::mem::take(buf),
+            _ => return true,
+        };
+        match self.pool.try_send(s, ShardMsg::Batch(batch)) {
+            Ok(()) => true,
+            Err(ShardMsg::Batch(batch)) => {
+                // put it back untouched; the feeder is single-threaded,
+                // so nothing pushed in between
+                if let Some(buf) = self.pending.get_mut(s) {
+                    *buf = batch;
+                }
+                false
             }
+            Err(_) => true,
         }
     }
 
-    /// Cut a consistent checkpoint: flush the pending batches, ask every
-    /// shard to snapshot its absorb state (the snapshot message lands
-    /// *after* every update submitted before this call), and merge the S
-    /// snapshots under one header. The stream can keep flowing
-    /// afterwards — nothing is torn down.
-    ///
-    /// A shard worker that died (panicked) before answering its snapshot
-    /// surfaces as a typed error — the caller decides whether to keep
-    /// serving; [`finish`](Self::finish) re-raises the underlying panic.
-    pub fn checkpoint(&mut self) -> Result<AbsorbCheckpoint> {
-        self.flush_pending();
+    fn maybe_merge_epoch(&mut self) {
+        if self.opts.absorb && self.submitted % ABSORB_EPOCH == 0 {
+            self.merge_epoch();
+        }
+    }
+
+    /// Epoch publish: drain every shard's pending overlay (a barrier —
+    /// lands after everything submitted this epoch), sum the increments
+    /// (saturating adds commute, so the merge is order-independent →
+    /// deterministic), then broadcast the merged batch so every shard's
+    /// *visible* overlay stays bit-identical. The feeder's master copy
+    /// advances in lockstep — it is what checkpoints persist.
+    fn merge_epoch(&mut self) {
+        self.flush();
+        let mut replies = Vec::with_capacity(self.shards);
+        for s in 0..self.shards {
+            let (tx, rx) = sync_channel(1);
+            self.pool.send(s, ShardMsg::CollectPending(tx));
+            replies.push(rx);
+        }
+        let levels = self.ensemble.num_chains() * self.ensemble.depth();
+        let mut merged: Vec<HashMap<u32, u32>> = vec![HashMap::new(); levels];
+        let mut any = false;
+        for rx in replies {
+            // a dead worker's pending increments are gone; its panic
+            // resurfaces at finish/join
+            let Ok(maps) = rx.recv() else { continue };
+            for (slot, map) in maps.into_iter().enumerate() {
+                if map.is_empty() {
+                    continue;
+                }
+                any = true;
+                if let Some(m) = merged.get_mut(slot) {
+                    for (bucket, count) in map {
+                        let c = m.entry(bucket).or_insert(0);
+                        *c = c.saturating_add(count);
+                    }
+                }
+            }
+        }
+        if !any {
+            return;
+        }
+        let inc = sorted_levels(&merged);
+        add_levels(&mut self.visible, &inc);
+        let inc = Arc::new(inc);
+        for s in 0..self.shards {
+            self.pool.send(s, ShardMsg::ApplyVisible(inc.clone()));
+        }
+    }
+
+    /// Flush + snapshot barrier: every shard's entries, pending overlay
+    /// and counters, consistent at the current submit watermark.
+    fn collect_snapshots(&mut self) -> Result<Vec<AbsorbSnapshot>> {
+        self.flush();
         let mut replies = Vec::with_capacity(self.shards);
         for s in 0..self.shards {
             let (tx, rx) = sync_channel(1);
             self.pool.send(s, ShardMsg::Snapshot(tx));
             replies.push(rx);
         }
-        let mut snapshots = Vec::with_capacity(self.shards);
+        let mut snaps = Vec::with_capacity(self.shards);
         for (s, rx) in replies.into_iter().enumerate() {
             let snap = rx.recv().map_err(|_| {
                 SparxError::Io(format!("shard {s} worker died before answering the snapshot"))
             })?;
-            snapshots.push(snap);
+            snaps.push(snap);
         }
-        Ok(AbsorbCheckpoint::for_ensemble(
+        Ok(snaps)
+    }
+
+    /// Assemble the global view from per-shard snapshots: entries in the
+    /// directory's LRU→MRU order (each ID's sketch joined from its
+    /// owning shard), pendings merged, counters summed.
+    #[allow(clippy::type_complexity)]
+    fn assemble_global(
+        &self,
+        snaps: Vec<AbsorbSnapshot>,
+    ) -> Result<(Vec<(u64, u64, Vec<f32>)>, Vec<Vec<(u32, u32)>>, u64, u64, u64)> {
+        let levels = self.ensemble.num_chains() * self.ensemble.depth();
+        let mut processed = 0u64;
+        let mut evicted = 0u64;
+        let mut absorbed = 0u64;
+        let mut pending: Vec<HashMap<u32, u32>> = vec![HashMap::new(); levels];
+        let mut sketches: HashMap<u64, Vec<f32>> = HashMap::new();
+        for snap in snaps {
+            processed += snap.processed;
+            evicted += snap.evicted;
+            absorbed += snap.absorbed;
+            add_levels(&mut pending, &snap.delta);
+            for (id, sketch) in snap.entries {
+                sketches.insert(id, sketch);
+            }
+        }
+        let mut entries = Vec::with_capacity(self.dir.len());
+        for (id, seq) in self.dir.iter_lru_to_mru() {
+            let sketch = sketches.remove(id).ok_or_else(|| {
+                SparxError::Io(format!(
+                    "shard snapshots are missing the sketch for resident id {id} — \
+                     the pool's directory and shard caches diverged"
+                ))
+            })?;
+            entries.push((*id, *seq, sketch));
+        }
+        Ok((entries, sorted_levels(&pending), processed, evicted, absorbed))
+    }
+
+    /// Cut a consistent, **layout-independent** checkpoint: flush, ask
+    /// every shard to snapshot (the message lands *after* every update
+    /// submitted before this call), and assemble the global v4 state —
+    /// entries in global recency order, the visible overlay, the merged
+    /// pending overlay. The stream can keep flowing afterwards — nothing
+    /// is torn down, and a mid-epoch cut does **not** publish pending
+    /// increments early.
+    ///
+    /// A shard worker that died (panicked) before answering surfaces as
+    /// a typed error; [`finish`](Self::finish) re-raises the panic.
+    pub fn checkpoint(&mut self) -> Result<AbsorbCheckpoint> {
+        let snaps = self.collect_snapshots()?;
+        let (entries, pending, processed, evicted, absorbed) = self.assemble_global(snaps)?;
+        let mut ckpt = AbsorbCheckpoint::for_ensemble(
             &self.ensemble,
             self.shards as u32,
-            self.cache_per_shard as u64,
+            self.cache_total as u64,
             self.submitted,
-            self.absorb,
-            snapshots,
-        ))
+            self.opts.absorb,
+        );
+        ckpt.processed = processed;
+        ckpt.evicted = evicted;
+        ckpt.absorbed = absorbed;
+        ckpt.entries = entries;
+        ckpt.visible = sorted_levels(&self.visible);
+        ckpt.pending = pending;
+        Ok(ckpt)
+    }
+
+    /// **Live re-shard**: drain to a barrier, snapshot every shard,
+    /// re-partition the global state across `new_shards` workers and
+    /// respawn — without dropping a single queued update (everything
+    /// buffered is flushed into the old generation first, and the
+    /// barrier waits for it to be processed).
+    ///
+    /// The global invariants (recency directory, visible overlay, epoch
+    /// schedule) live feeder-side and are untouched, so per-ID score
+    /// sequences continue bit-identically across the transition.
+    /// Recorded score logs of the retired generation are archived and
+    /// resurface in the final [`ShardedReport`].
+    ///
+    /// On error (a dead worker, a snapshot/restore mismatch) the old
+    /// generation keeps serving — the pool is only swapped once the new
+    /// one is fully built.
+    pub fn reshard(&mut self, new_shards: usize) -> Result<()> {
+        if new_shards == 0 {
+            return Err(SparxError::InvalidParams("shard count must be ≥ 1".into()));
+        }
+        if new_shards > 4096 {
+            return Err(SparxError::InvalidParams(format!(
+                "shard count {new_shards} exceeds the 4096-thread cap"
+            )));
+        }
+        if new_shards == self.shards {
+            return Ok(());
+        }
+        let snaps = self.collect_snapshots()?;
+        let (entries, pending, processed, evicted, absorbed) = self.assemble_global(snaps)?;
+        let visible = sorted_levels(&self.visible);
+        let states = restored_states(
+            &self.ensemble,
+            new_shards,
+            self.cache_total,
+            &self.opts,
+            &entries,
+            &visible,
+            &pending,
+            processed,
+            evicted,
+            absorbed,
+        )?;
+        let new_pool = PinnedPool::spawn(states, QUEUE_CAP_BATCHES, shard_handler);
+        let old_pool = std::mem::replace(&mut self.pool, new_pool);
+        self.pending = (0..new_shards).map(|_| Vec::with_capacity(BATCH)).collect();
+        self.shards = new_shards;
+        // retire the old generation: join (queues already drained to the
+        // barrier), archive its logs, carry its worst forward
+        for sh in old_pool.join() {
+            if let Some(w) = sh.worst {
+                if w.more_outlying_than(self.carried_worst.as_ref()) {
+                    self.carried_worst = Some(w);
+                }
+            }
+            if let Some(log) = sh.recorded {
+                if !log.is_empty() {
+                    self.archive.push(log);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Live counter probe (the `STATS` verb): flush, then collect every
+    /// shard's counters through a lightweight barrier — no sketch or
+    /// overlay copying. A dead worker surfaces typed.
+    pub fn stats(&mut self) -> Result<ShardedStats> {
+        self.flush();
+        let mut replies = Vec::with_capacity(self.shards);
+        for s in 0..self.shards {
+            let (tx, rx) = sync_channel(1);
+            self.pool.send(s, ShardMsg::Stats(tx));
+            replies.push(rx);
+        }
+        let mut shards = Vec::with_capacity(self.shards);
+        for (s, rx) in replies.into_iter().enumerate() {
+            let counters = rx.recv().map_err(|_| {
+                SparxError::Io(format!("shard {s} worker died before answering the stats probe"))
+            })?;
+            shards.push(counters);
+        }
+        Ok(ShardedStats {
+            shards,
+            submitted: self.submitted,
+            resident_ids: self.dir.len(),
+            resident_ensemble_bytes: self.ensemble.resident_bytes(),
+            resident_sketch_bytes: self.dir.len() * self.ensemble.k() * std::mem::size_of::<f32>(),
+        })
     }
 
     /// Hot model reload: validate the swap once at the feeder (typed
@@ -413,7 +929,14 @@ impl ShardedStreamScorer {
     /// state forward per [`ServedEnsemble::swap_carry`].
     pub fn swap_ensemble(&mut self, new: Arc<ServedEnsemble>) -> Result<SwapCarry> {
         let carry = self.ensemble.swap_carry(&new)?;
-        self.flush_pending();
+        self.flush();
+        if carry == SwapCarry::SketchesOnly {
+            // shard scorers reset their overlays on a schema-only swap;
+            // the feeder's master copy resets in lockstep
+            for lvl in &mut self.visible {
+                lvl.clear();
+            }
+        }
         for s in 0..self.shards {
             self.pool.send(s, ShardMsg::Swap(new.clone()));
         }
@@ -422,24 +945,19 @@ impl ShardedStreamScorer {
     }
 
     /// Flush the pending batches, close the queues, join the workers
-    /// and merge the per-shard counters.
+    /// and merge the per-shard counters (plus anything archived by live
+    /// reshards).
     pub fn finish(mut self) -> ShardedReport {
-        self.flush_pending();
-        let ShardedStreamScorer { pool, .. } = self;
-        let shards = pool.join();
+        self.flush();
+        let ShardedStreamScorer { pool, archive, carried_worst, .. } = self;
+        let states = pool.join();
         let mut report = ShardedReport {
-            shards: Vec::with_capacity(shards.len()),
-            worst: None,
-            scores: Vec::with_capacity(shards.len()),
+            shards: Vec::with_capacity(states.len()),
+            worst: carried_worst,
+            scores: archive,
         };
-        for sh in shards {
-            report.shards.push(ShardCounters {
-                processed: sh.scorer.processed(),
-                admitted: sh.admitted,
-                evictions: sh.scorer.evictions(),
-                cached_ids: sh.scorer.cached_ids(),
-                absorbed: sh.scorer.absorbed(),
-            });
+        for sh in states {
+            report.shards.push(sh.counters());
             if let Some(w) = sh.worst {
                 if w.more_outlying_than(report.worst.as_ref()) {
                     report.worst = Some(w);
@@ -449,6 +967,56 @@ impl ShardedStreamScorer {
         }
         report
     }
+}
+
+/// Build `shards` worker states restored from global state: entries are
+/// partitioned by `shard_of(id, shards)` preserving global LRU→MRU
+/// order, every shard receives the identical visible overlay, shard 0
+/// carries the aggregate counters and the merged pending overlay (so
+/// pool-wide sums — and the next epoch merge — come out exact).
+#[allow(clippy::too_many_arguments)]
+fn restored_states(
+    ensemble: &Arc<ServedEnsemble>,
+    shards: usize,
+    cache_total: usize,
+    opts: &ServeOptions,
+    entries: &[(u64, u64, Vec<f32>)],
+    visible: &[Vec<(u32, u32)>],
+    pending: &[Vec<(u32, u32)>],
+    processed: u64,
+    evicted: u64,
+    absorbed: u64,
+) -> Result<Vec<Shard>> {
+    let mut states = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let mut scorer = StreamScorer::from_ensemble(ensemble.clone(), cache_total)?;
+        let first = s == 0;
+        let snap = AbsorbSnapshot {
+            processed: if first { processed } else { 0 },
+            evicted: if first { evicted } else { 0 },
+            absorbed: if first { absorbed } else { 0 },
+            entries: entries
+                .iter()
+                .filter(|(id, _, _)| shard_of(*id, shards) == s)
+                .map(|(id, _, sketch)| (*id, sketch.clone()))
+                .collect(),
+            delta: visible.to_vec(),
+        };
+        scorer.restore(&snap)?;
+        if first {
+            scorer.restore_pending(pending)?;
+        }
+        states.push(Shard {
+            scorer,
+            worst: None,
+            // aggregate bookkeeping rides on shard 0 (admitted − evicted
+            // == resident holds pool-wide, not per shard)
+            admitted: if first { evicted + entries.len() as u64 } else { 0 },
+            recorded: opts.record.then(Vec::new),
+            absorb: opts.absorb,
+        });
+    }
+    Ok(states)
 }
 
 #[cfg(test)]
@@ -469,6 +1037,18 @@ mod tests {
         .unwrap()
     }
 
+    /// Churny update stream: ids recycle (mod `ids`) so a small cache
+    /// budget evicts constantly; features and deltas vary per step.
+    fn churn(n: usize, ids: u64) -> Vec<UpdateTriple> {
+        (0..n)
+            .map(|i| UpdateTriple::Num {
+                id: (i as u64).wrapping_mul(7).wrapping_add(3) % ids,
+                feature: format!("f{}", i % 16),
+                delta: ((i % 13) as f64 - 6.0) * 0.25,
+            })
+            .collect()
+    }
+
     #[test]
     fn routing_is_deterministic_and_in_range() {
         for shards in [1usize, 2, 3, 8] {
@@ -483,7 +1063,7 @@ mod tests {
     #[test]
     fn submit_finish_counts_every_update() {
         let model = fitted();
-        let mut scorer = ShardedStreamScorer::new(&model, 3, 32).unwrap();
+        let mut scorer = ShardedStreamScorer::new(&model, 3, 256).unwrap();
         for id in 0..200u64 {
             scorer.submit(UpdateTriple::Num { id, feature: "f0".into(), delta: 1.0 });
         }
@@ -525,18 +1105,192 @@ mod tests {
         let report = scorer.finish();
         let logged: usize = report.scores.iter().map(Vec::len).sum();
         assert_eq!(logged, 10);
+        // no reshard happened → no archived generations; logs line up
+        // with final shard indices
         for (s, log) in report.scores.iter().enumerate() {
             for (seq, rec) in log {
                 assert_eq!(shard_of(rec.id, 2), s, "score recorded on the wrong shard");
                 assert!(*seq < 10, "sequence numbers come from the submit counter");
             }
         }
-        // the merged view is in exact submit order: seq 0..10, and since
-        // ids were submitted in order, ids 0..10 in order too
         let merged = report.merged_scores();
         assert_eq!(merged.len(), 10);
         let ids: Vec<u64> = merged.iter().map(|s| s.id).collect();
         assert_eq!(ids, (0..10).collect::<Vec<_>>(), "merge must restore submit order");
+    }
+
+    /// The tentpole invariant, absorb off: under a shared global cache
+    /// budget the sharded pool — at ANY shard count — produces the
+    /// bit-identical score sequence of a single-threaded [`StreamScorer`]
+    /// with the same budget, under heavy eviction churn.
+    #[test]
+    fn global_eviction_reproduces_single_threaded_scores() {
+        let model = fitted();
+        let updates = churn(600, 48);
+        let cache = 16usize;
+        // reference: plain single-threaded scorer
+        let mut reference = StreamScorer::new(&model, cache).unwrap();
+        let expected: Vec<StreamScore> = updates.iter().map(|u| reference.update(u)).collect();
+        assert!(reference.evictions() > 0, "harness must actually churn");
+        for shards in [1usize, 2, 5] {
+            let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+            let mut pool = ShardedStreamScorer::from_ensemble(
+                ens,
+                shards,
+                cache,
+                ServeOptions { record: true, absorb: false },
+                None,
+            )
+            .unwrap();
+            for u in &updates {
+                pool.submit(u.clone());
+            }
+            let report = pool.finish();
+            assert_eq!(report.evictions(), reference.evictions(), "S={shards}");
+            assert_eq!(
+                report.merged_scores(),
+                expected,
+                "S={shards} must mirror the single-threaded stream bit-for-bit"
+            );
+        }
+    }
+
+    /// Absorb mode: epoch-published increments make every shard count's
+    /// merged score log bit-identical to the S=1 pool (the absorb-mode
+    /// reference), still under eviction churn.
+    #[test]
+    fn absorb_epochs_are_shard_count_invariant() {
+        let model = fitted();
+        let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+        let updates = churn(700, 40);
+        let run = |shards: usize| {
+            let mut pool = ShardedStreamScorer::from_ensemble(
+                ens.clone(),
+                shards,
+                24,
+                ServeOptions { record: true, absorb: true },
+                None,
+            )
+            .unwrap();
+            for u in &updates {
+                pool.submit(u.clone());
+            }
+            pool.finish()
+        };
+        let reference = run(1);
+        assert_eq!(reference.absorbed(), 700);
+        assert!(reference.evictions() > 0);
+        let expected = reference.merged_scores();
+        for shards in [2usize, 4] {
+            let report = run(shards);
+            assert_eq!(report.absorbed(), 700);
+            assert_eq!(report.merged_scores(), expected, "S={shards}");
+        }
+    }
+
+    /// try_submit: rejected updates are handed back unconsumed and a
+    /// retry loop loses nothing.
+    #[test]
+    fn try_submit_never_loses_updates() {
+        let model = fitted();
+        let mut scorer = ShardedStreamScorer::new(&model, 2, 64).unwrap();
+        let mut rejected = 0u64;
+        for u in churn(2_000, 64) {
+            let mut item = u;
+            loop {
+                match scorer.try_submit(item, None) {
+                    Ok(()) => break,
+                    Err(WouldBlock(back)) => {
+                        rejected += 1;
+                        item = back;
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+        assert_eq!(scorer.submitted(), 2_000);
+        let report = scorer.finish();
+        assert_eq!(report.processed(), 2_000, "{rejected} rejections must not lose updates");
+    }
+
+    /// Replies: per-ID scores arrive through the sink in submit order
+    /// and match what a read-only query then reports.
+    #[test]
+    fn reply_sinks_and_queries_agree() {
+        let model = fitted();
+        let mut scorer = ShardedStreamScorer::new(&model, 3, 32).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        for step in 0..4 {
+            scorer.submit_with_reply(
+                UpdateTriple::Num { id: 7, feature: format!("f{step}"), delta: 1.0 },
+                Some(tx.clone()),
+            );
+        }
+        scorer.flush();
+        let mut last = None;
+        for step in 0..4 {
+            match rx.recv().unwrap() {
+                ShardReply::Update(score) => {
+                    assert_eq!(score.id, 7);
+                    assert_eq!(score.fresh, step == 0, "only the first update admits");
+                    last = Some(score.outlierness);
+                }
+                other => panic!("expected an update reply, got {other:?}"),
+            }
+        }
+        scorer.query_score(7, tx.clone());
+        match rx.recv().unwrap() {
+            ShardReply::Query { id, score } => {
+                assert_eq!(id, 7);
+                assert_eq!(score, last, "query must report the post-update score");
+            }
+            other => panic!("expected a query reply, got {other:?}"),
+        }
+        scorer.query_score(999, tx);
+        match rx.recv().unwrap() {
+            ShardReply::Query { id, score } => {
+                assert_eq!((id, score), (999, None), "unknown ids answer None");
+            }
+            other => panic!("expected a query reply, got {other:?}"),
+        }
+        drop(scorer.finish());
+    }
+
+    /// Live reshard mid-stream: zero drops (submitted == processed) and
+    /// the merged score log is bit-identical to an uninterrupted S=1 run
+    /// — under churn with absorb on, crossing epoch boundaries and two
+    /// reshards (2→4→1).
+    #[test]
+    fn live_reshard_is_lossless_and_deterministic() {
+        let model = fitted();
+        let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+        let updates = churn(900, 40);
+        let opts = ServeOptions { record: true, absorb: true };
+        let mut reference =
+            ShardedStreamScorer::from_ensemble(ens.clone(), 1, 24, opts, None).unwrap();
+        for u in &updates {
+            reference.submit(u.clone());
+        }
+        let expected = reference.finish();
+        assert!(expected.evictions() > 0);
+
+        let mut pool = ShardedStreamScorer::from_ensemble(ens, 2, 24, opts, None).unwrap();
+        for (i, u) in updates.iter().enumerate() {
+            if i == 300 {
+                pool.reshard(4).unwrap();
+                assert_eq!(pool.shards(), 4);
+            }
+            if i == 650 {
+                pool.reshard(1).unwrap();
+            }
+            pool.submit(u.clone());
+        }
+        let report = pool.finish();
+        assert_eq!(report.processed(), 900, "reshard must not drop queued updates");
+        assert_eq!(report.evictions(), expected.evictions());
+        assert_eq!(report.absorbed(), expected.absorbed());
+        assert_eq!(report.merged_scores(), expected.merged_scores());
+        assert_eq!(report.worst, expected.worst, "worst must carry across generations");
     }
 
     /// The Arc-sharing contract: S shards hold handles on one ensemble
@@ -579,10 +1333,10 @@ mod tests {
         assert_eq!(Arc::strong_count(&ens), 1, "workers must release their handles at join");
     }
 
-    /// Absorb mode: every update's point lands in its shard's delta; the
-    /// per-shard absorbed counters sum to the stream length.
+    /// Absorb mode: every update absorbs; the stats probe sees the live
+    /// counters and resident accounting mid-stream.
     #[test]
-    fn absorb_mode_counts_and_reports() {
+    fn absorb_mode_counts_and_stats_probe() {
         let model = fitted();
         let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
         let mut scorer = ShardedStreamScorer::from_ensemble(
@@ -596,6 +1350,12 @@ mod tests {
         for id in 0..50u64 {
             scorer.submit(UpdateTriple::Num { id, feature: "f0".into(), delta: 0.5 });
         }
+        let stats = scorer.stats().unwrap();
+        assert_eq!(stats.submitted, 50);
+        assert_eq!(stats.processed(), 50, "stats barrier lands after the flush");
+        assert_eq!(stats.absorbed(), 50);
+        assert_eq!(stats.resident_ids, 50);
+        assert!(stats.resident_bytes() > stats.resident_ensemble_bytes);
         let report = scorer.finish();
         assert_eq!(report.processed(), 50);
         assert_eq!(report.absorbed(), 50, "absorb mode must absorb every update");

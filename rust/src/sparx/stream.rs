@@ -280,6 +280,41 @@ impl DeltaCms {
     }
 }
 
+/// Bin a sketch against every chain level and record the CMS increments
+/// in `delta` — the shared insert loop behind the visible
+/// ([`StreamScorer::absorb_only`]) and pending
+/// ([`StreamScorer::absorb_pending`]) absorb paths.
+fn absorb_sketch_into(
+    ens: &ServedEnsemble,
+    sketch: &[f32],
+    scratch: &mut Vec<f32>,
+    bins: &mut Vec<i32>,
+    delta: &mut DeltaCms,
+) {
+    let k = ens.k;
+    let depth = delta.depth;
+    for (m, chain) in ens.chains.iter().enumerate() {
+        chain.params.bins_into(sketch, scratch, bins);
+        for (lvl, cms) in chain.cms.iter().enumerate() {
+            cms.overlay_insert(&bins[lvl * k..(lvl + 1) * k], &mut delta.levels[m * depth + lvl]);
+        }
+    }
+    delta.inserts += (ens.chains.len() * ens.depth * ens.cms_rows) as u64;
+}
+
+/// Overlay levels as sorted `(bucket, count)` vectors — the canonical
+/// serialized form (deterministic regardless of hash-map iteration).
+fn sorted_levels(levels: &[HashMap<u32, u32>]) -> Vec<Vec<(u32, u32)>> {
+    levels
+        .iter()
+        .map(|lvl| {
+            let mut v: Vec<(u32, u32)> = lvl.iter().map(|(&b, &c)| (b, c)).collect();
+            v.sort_unstable();
+            v
+        })
+        .collect()
+}
+
 /// The deployment-node scorer: one `Arc` handle on the shared
 /// [`ServedEnsemble`] plus this scorer's own mutable absorb state (LRU
 /// sketches + absorbed CMS delta + counters + scratch).
@@ -287,6 +322,14 @@ pub struct StreamScorer {
     ensemble: Arc<ServedEnsemble>,
     cache: LruCache<u64, Vec<f32>>,
     delta: DeltaCms,
+    /// Absorbed-but-not-yet-visible increments (the sharded serving
+    /// plane's epoch buffer): [`absorb_pending`](Self::absorb_pending)
+    /// writes here; scoring never reads it. An epoch merge drains every
+    /// shard's pending ([`take_pending`](Self::take_pending)), sums the
+    /// increments, and publishes the result to every shard's *visible*
+    /// delta ([`apply_visible`](Self::apply_visible)) — which is what
+    /// makes absorb-mode scores independent of the shard count.
+    pending: DeltaCms,
     // scratch buffers reused across updates (no allocation per update)
     scratch: Vec<f32>,
     bins: Vec<i32>,
@@ -318,6 +361,7 @@ impl StreamScorer {
         Ok(StreamScorer {
             cache: LruCache::new(cache_size),
             delta: DeltaCms::new(m, depth),
+            pending: DeltaCms::new(m, depth),
             scratch: vec![0.0; k],
             bins: vec![0; depth * k],
             evicted: 0,
@@ -405,25 +449,112 @@ impl StreamScorer {
     }
 
     /// The insert half of [`absorb`](Self::absorb), without the rescore —
-    /// what the sharded absorb-every-update serving mode uses (it already
-    /// has the pre-absorb score to report).
+    /// immediate visibility (the next score of any nearby point sees the
+    /// increment), which is the single-scorer streaming behaviour.
     pub(crate) fn absorb_only(&mut self, id: u64) -> bool {
         let Some(s) = self.cache.get(&id).cloned() else { return false };
-        let ens = &*self.ensemble;
-        let k = ens.k;
-        let depth = self.delta.depth;
-        for (m, chain) in ens.chains.iter().enumerate() {
-            chain.params.bins_into(&s, &mut self.scratch, &mut self.bins);
-            for (lvl, cms) in chain.cms.iter().enumerate() {
-                cms.overlay_insert(
-                    &self.bins[lvl * k..(lvl + 1) * k],
-                    &mut self.delta.levels[m * depth + lvl],
-                );
-            }
-        }
-        self.delta.inserts += (ens.chains.len() * ens.depth * ens.cms_rows) as u64;
+        absorb_sketch_into(&self.ensemble, &s, &mut self.scratch, &mut self.bins, &mut self.delta);
         self.absorbed += 1;
         true
+    }
+
+    /// Absorb into the **pending** overlay instead: the increment stays
+    /// invisible to scoring until an epoch merge republishes it through
+    /// [`apply_visible`](Self::apply_visible). The sharded serving plane
+    /// uses this so that what a score "has seen" is a function of the
+    /// submit sequence alone, never of the shard layout.
+    pub(crate) fn absorb_pending(&mut self, id: u64) -> bool {
+        let Some(s) = self.cache.get(&id).cloned() else { return false };
+        absorb_sketch_into(
+            &self.ensemble,
+            &s,
+            &mut self.scratch,
+            &mut self.bins,
+            &mut self.pending,
+        );
+        self.absorbed += 1;
+        true
+    }
+
+    /// Explicitly evict `id` from the sketch cache. The sharded serving
+    /// plane drives eviction from a *global* recency directory (the
+    /// per-shard caches are sized so they never self-evict); an explicit
+    /// evict counts toward [`evictions`](Self::evictions) exactly like
+    /// an LRU one.
+    pub(crate) fn evict(&mut self, id: u64) -> bool {
+        if self.cache.remove(&id) {
+            self.evicted += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drain the pending overlay for an epoch merge. Returns the raw
+    /// per-level increment maps; the caller sums them across shards and
+    /// publishes the total via [`apply_visible`](Self::apply_visible).
+    pub(crate) fn take_pending(&mut self) -> Vec<HashMap<u32, u32>> {
+        let drained = std::mem::replace(
+            &mut self.pending,
+            DeltaCms::new(self.ensemble.num_chains(), self.ensemble.depth()),
+        );
+        drained.levels
+    }
+
+    /// Publish merged epoch increments (sorted `(bucket, count)` pairs
+    /// per level, chain-major) into the **visible** overlay. Addition of
+    /// saturating integer counts is order-independent, so every shard
+    /// ends up with the bit-identical visible state no matter how the
+    /// per-shard pendings were interleaved.
+    pub(crate) fn apply_visible(&mut self, levels: &[Vec<(u32, u32)>]) {
+        for (slot, lvl) in levels.iter().enumerate() {
+            if slot >= self.delta.levels.len() {
+                break;
+            }
+            for &(bucket, count) in lvl {
+                let c = self.delta.levels[slot].entry(bucket).or_insert(0);
+                *c = c.saturating_add(count);
+                self.delta.inserts += count as u64;
+            }
+        }
+    }
+
+    /// Sorted snapshot of the pending overlay (without draining it) —
+    /// what a mid-epoch checkpoint persists so resume can hand the
+    /// not-yet-merged increments back to the pool.
+    pub(crate) fn pending_sorted(&self) -> Vec<Vec<(u32, u32)>> {
+        sorted_levels(&self.pending.levels)
+    }
+
+    /// Restore a pending overlay persisted by a mid-epoch checkpoint.
+    /// Validates like [`restore`](Self::restore).
+    pub(crate) fn restore_pending(&mut self, levels: &[Vec<(u32, u32)>]) -> Result<()> {
+        let ens = &*self.ensemble;
+        let buckets = (ens.cms_rows * ens.cms_cols) as u32;
+        if levels.len() != ens.chains.len() * ens.depth {
+            return Err(SparxError::InvalidParams(format!(
+                "pending delta has {} levels for an M={} L={} ensemble",
+                levels.len(),
+                ens.chains.len(),
+                ens.depth
+            )));
+        }
+        let mut pending = DeltaCms::new(ens.chains.len(), ens.depth);
+        for (slot, lvl) in levels.iter().enumerate() {
+            for &(bucket, count) in lvl {
+                if bucket >= buckets || count == 0 {
+                    return Err(SparxError::InvalidParams(format!(
+                        "pending delta entry (bucket {bucket}, count {count}) is out of \
+                         range for a {}×{} CMS",
+                        ens.cms_rows, ens.cms_cols
+                    )));
+                }
+                pending.levels[slot].insert(bucket, count);
+                pending.inserts += count as u64;
+            }
+        }
+        self.pending = pending;
+        Ok(())
     }
 
     /// Serialize this scorer's mutable state (sketches in LRU→MRU order,
@@ -436,16 +567,22 @@ impl StreamScorer {
             evicted: self.evicted,
             absorbed: self.absorbed,
             entries: self.cache.iter_lru_to_mru().map(|(id, sk)| (*id, sk.clone())).collect(),
-            delta: self
-                .delta
-                .levels
-                .iter()
-                .map(|lvl| {
-                    let mut v: Vec<(u32, u32)> = lvl.iter().map(|(&b, &c)| (b, c)).collect();
-                    v.sort_unstable();
-                    v
-                })
-                .collect(),
+            delta: sorted_levels(&self.delta.levels),
+        }
+    }
+
+    /// Snapshot variant for the sharded serving plane: the `delta` field
+    /// carries the **pending** (not-yet-merged) overlay instead of the
+    /// visible one. The visible overlay is identical on every shard, so
+    /// the pool keeps one master copy feeder-side and persists that —
+    /// per-shard snapshots only need what is genuinely per-shard.
+    pub(crate) fn snapshot_with_pending(&self) -> AbsorbSnapshot {
+        AbsorbSnapshot {
+            processed: self.processed,
+            evicted: self.evicted,
+            absorbed: self.absorbed,
+            entries: self.cache.iter_lru_to_mru().map(|(id, sk)| (*id, sk.clone())).collect(),
+            delta: sorted_levels(&self.pending.levels),
         }
     }
 
@@ -505,6 +642,7 @@ impl StreamScorer {
         }
         self.cache = cache;
         self.delta = delta;
+        self.pending = DeltaCms::new(ens.chains.len(), ens.depth);
         self.processed = snap.processed;
         self.evicted = snap.evicted;
         self.absorbed = snap.absorbed;
@@ -519,6 +657,7 @@ impl StreamScorer {
         let carry = self.ensemble.swap_carry(&new)?;
         if carry == SwapCarry::SketchesOnly {
             self.delta = DeltaCms::new(new.num_chains(), new.depth());
+            self.pending = DeltaCms::new(new.num_chains(), new.depth());
         }
         self.ensemble = new;
         Ok(carry)
@@ -694,6 +833,50 @@ mod tests {
         // absorbing an uncached id is a no-op signalled by None
         assert_eq!(s.absorb(123456), None);
         assert_eq!(s.absorbed(), 5);
+    }
+
+    /// The sharded plane's absorb path: a pending absorb must not move
+    /// scores until published, and publishing the drained increments
+    /// must land bit-identically to an immediate absorb.
+    #[test]
+    fn pending_absorb_is_invisible_until_published() {
+        let model = fitted();
+        let u = UpdateTriple::Num { id: 3, feature: "f2".into(), delta: 5.0 };
+        let mut s = StreamScorer::new(&model, 16).unwrap();
+        let before = s.update(&u);
+        assert!(s.absorb_pending(3));
+        assert_eq!(s.absorbed(), 1);
+        assert_eq!(
+            s.score_id(3).unwrap().to_bits(),
+            before.outlierness.to_bits(),
+            "pending absorb leaked into scoring before the epoch merge"
+        );
+        // reference: immediate absorb on an identical scorer
+        let mut t = StreamScorer::new(&model, 16).unwrap();
+        let _ = t.update(&u);
+        t.absorb(3).unwrap();
+        // publish the drained pending — must match the immediate path
+        let drained = sorted_levels(&s.take_pending());
+        s.apply_visible(&drained);
+        assert_eq!(s.score_id(3).unwrap().to_bits(), t.score_id(3).unwrap().to_bits());
+        assert!(s.take_pending().iter().all(|m| m.is_empty()), "take_pending must drain");
+        // restore_pending round-trips and validates
+        let mut r = StreamScorer::new(&model, 16).unwrap();
+        let _ = r.update(&u);
+        r.absorb_pending(3);
+        let saved = r.pending_sorted();
+        let mut fresh = StreamScorer::new(&model, 16).unwrap();
+        fresh.restore_pending(&saved).unwrap();
+        assert_eq!(fresh.pending_sorted(), saved);
+        assert!(matches!(
+            fresh.restore_pending(&[Vec::new()]),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // explicit evict removes the sketch and counts as an eviction
+        assert!(s.evict(3));
+        assert!(!s.evict(3), "double evict is a no-op");
+        assert_eq!(s.evictions(), 1);
+        assert!(s.score_id(3).is_none());
     }
 
     /// Two scorers sharing one `Arc<ServedEnsemble>`: absorbing on one

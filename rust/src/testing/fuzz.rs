@@ -4,9 +4,10 @@
 //! accepts from the outside world: model artifacts
 //! ([`registry::load_bytes`](crate::api::registry::load_bytes)),
 //! absorb-state checkpoints ([`AbsorbCheckpoint`]), the packed
-//! varint/RLE counter codec ([`Decoder::u32_vec_packed`]) and serve-input
-//! lines ([`parse_update_line`]). The invariant, enforced per input by
-//! [`exercise`]:
+//! varint/RLE counter codec ([`Decoder::u32_vec_packed`]), serve-input
+//! lines ([`parse_update_line`]) and the TCP wire grammar
+//! ([`parse_request`] — data lines plus control verbs). The invariant,
+//! enforced per input by [`exercise`]:
 //!
 //! > any byte string either decodes to a **typed error** or decodes to a
 //! > value whose re-encoding is a **fixpoint** (encode∘decode∘encode =
@@ -31,7 +32,8 @@ use crate::api::{FittedModel, ModelArtifact};
 use crate::cluster::ClusterConfig;
 use crate::data::generators::GisetteGen;
 use crate::data::stream::parse_update_line;
-use crate::sparx::checkpoint::{AbsorbCheckpoint, AbsorbSnapshot};
+use crate::serve::wire::{parse_request, Request};
+use crate::sparx::checkpoint::AbsorbCheckpoint;
 use crate::sparx::{SparxModel, SparxParams};
 use crate::util::codec::{crc32, Decoder, Encoder};
 use crate::util::Rng;
@@ -66,6 +68,7 @@ pub fn exercise(input: &[u8]) -> u32 {
     accepted += u32::from(target_checkpoint(input));
     accepted += u32::from(target_packed_codec(input));
     accepted += u32::from(target_update_lines(input));
+    accepted += u32::from(target_wire_requests(input));
     accepted
 }
 
@@ -162,11 +165,42 @@ fn target_update_lines(input: &[u8]) -> bool {
     any
 }
 
+/// TCP wire grammar ([`parse_request`]): every line either fails typed
+/// or parses to a request whose canonical rendering parses back to the
+/// same request (covers the control verbs `parse_update_line` never
+/// sees).
+fn target_wire_requests(input: &[u8]) -> bool {
+    let text = String::from_utf8_lossy(input);
+    let mut any = false;
+    for (i, line) in text.lines().take(64).enumerate() {
+        let lineno = i + 1;
+        if let Ok(Some(req)) = parse_request(lineno, line) {
+            let rendered = match &req {
+                Request::Update(u) => u.to_line(),
+                Request::Score(id) => format!("SCORE {id}"),
+                Request::Stats => "STATS".to_string(),
+                Request::Metrics => "METRICS".to_string(),
+                Request::Checkpoint => "CHECKPOINT".to_string(),
+                Request::Reshard(n) => format!("RESHARD {n}"),
+                Request::Quit => "QUIT".to_string(),
+                Request::Shutdown => "SHUTDOWN".to_string(),
+            };
+            let reparsed = parse_request(lineno, &rendered)
+                .expect("rendered request must parse")
+                .expect("rendered request is never a comment");
+            assert_eq!(reparsed, req, "wire request must round trip");
+            any = true;
+        }
+    }
+    any
+}
+
 // ----------------------------------------------------- seeds + mutators
 
 /// Valid encodings the mutators start from, built once in-process:
 /// index 0 a fitted sparx model artifact, 1 a checkpoint artifact, 2–3
-/// packed counter blocks, 4 serve lines, 5 a bare truncated header.
+/// packed counter blocks, 4 serve lines, 5 a bare truncated header,
+/// 6 wire control verbs.
 pub fn seed_corpus() -> &'static [Vec<u8>] {
     static SEEDS: OnceLock<Vec<Vec<u8>>> = OnceLock::new();
     SEEDS.get_or_init(|| {
@@ -177,6 +211,7 @@ pub fn seed_corpus() -> &'static [Vec<u8>] {
             packed_block_seed(&[]),
             b"17 f3 0.5\n9 city ->paris\n# comment\n42 f0 -2e-3\n".to_vec(),
             b"SPRX\x03\x00".to_vec(),
+            b"SCORE 17\nSTATS\nRESHARD 4\nCHECKPOINT\nMETRICS\nQUIT\nSHUTDOWN\n".to_vec(),
         ]
     })
 }
@@ -193,30 +228,15 @@ fn model_artifact_seed() -> Vec<u8> {
     model.to_artifact().expect("seed model encodes").to_bytes()
 }
 
-/// A hand-built multi-shard checkpoint exercising sketches, deltas and
-/// the varint-gap level encoding.
+/// A hand-built v4 checkpoint exercising seq-tagged sketches, both
+/// overlays and the varint-gap level encoding.
 pub fn sample_checkpoint() -> AbsorbCheckpoint {
     let (num_chains, depth, k) = (2usize, 2usize, 3usize);
-    let snap = |base: u64| AbsorbSnapshot {
-        processed: 40 + base,
-        evicted: base / 2,
-        absorbed: 30 + base,
-        entries: vec![
-            (base, vec![0.5f32; k]),
-            (base + 2, vec![-1.25f32; k]),
-        ],
-        delta: vec![
-            vec![(0, 1), (5, 2)],
-            vec![],
-            vec![(63, base as u32 + 1)],
-            vec![(2, 2), (3, 1), (100, 7)],
-        ],
-    };
     AbsorbCheckpoint {
         model_fingerprint: 0xDEAD_BEEF,
         schema_fingerprint: 0x5A5A_0001,
         shards: 2,
-        cache_per_shard: 4,
+        cache_total: 4,
         submitted: 17,
         absorb: true,
         k,
@@ -224,7 +244,22 @@ pub fn sample_checkpoint() -> AbsorbCheckpoint {
         num_chains,
         cms_rows: 4,
         cms_cols: 128,
-        snapshots: vec![snap(0), snap(8)],
+        processed: 48,
+        evicted: 4,
+        absorbed: 38,
+        entries: vec![
+            (0, 3, vec![0.5f32; k]),
+            (2, 7, vec![-1.25f32; k]),
+            (8, 12, vec![0.5f32; k]),
+            (10, 16, vec![f32::MIN_POSITIVE; k]),
+        ],
+        visible: vec![
+            vec![(0, 1), (5, 2)],
+            vec![],
+            vec![(63, 9)],
+            vec![(2, 2), (3, 1), (100, 7)],
+        ],
+        pending: vec![vec![(1, 1)], vec![], vec![], vec![(7, 3)]],
     }
 }
 
@@ -347,6 +382,7 @@ mod tests {
         assert!(exercise(&seeds[2]) >= 1, "packed seed accepted");
         assert!(exercise(&seeds[4]) >= 1, "line seed accepted");
         assert_eq!(exercise(&seeds[5]), 0, "truncated header rejected everywhere");
+        assert!(exercise(&seeds[6]) >= 1, "wire verb seed accepted");
     }
 
     #[test]

@@ -144,6 +144,19 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.map.contains_key(key)
     }
 
+    /// Remove an entry by key. Returns whether it was present. Used by
+    /// the sharded serving plane, where eviction decisions are made by a
+    /// global directory rather than by this per-shard cache. The slab
+    /// slot is recycled on the next insertion (which drops the value).
+    pub fn remove(&mut self, key: &K) -> bool {
+        let Some(idx) = self.map.remove(key) else {
+            return false;
+        };
+        self.detach(idx);
+        self.free.push(idx);
+        true
+    }
+
     /// Iterate entries from least-recently to most-recently used, without
     /// touching recency. Re-inserting the yielded entries into an empty
     /// cache *in this order* reproduces the recency order exactly — the
@@ -231,6 +244,38 @@ mod tests {
         assert_eq!(rebuilt.put("d", 4).map(|(k, _)| k), Some("b"));
         let empty: LruCache<u64, u64> = LruCache::new(2);
         assert_eq!(empty.iter_lru_to_mru().count(), 0);
+    }
+
+    #[test]
+    fn remove_frees_capacity_and_slot_is_reused() {
+        let mut c = LruCache::new(2);
+        c.put("a", 1);
+        c.put("b", 2);
+        assert!(c.remove(&"a"));
+        assert!(!c.remove(&"a"), "double remove is a no-op");
+        assert_eq!(c.len(), 1);
+        assert!(!c.contains(&"a"));
+        // capacity freed: inserting two more evicts only once
+        assert!(c.put("c", 3).is_none(), "freed slot absorbs the insert");
+        assert_eq!(c.put("d", 4), Some(("b", 2)));
+        let order: Vec<&str> = c.iter_lru_to_mru().map(|(k, _)| *k).collect();
+        assert_eq!(order, vec!["c", "d"]);
+    }
+
+    #[test]
+    fn remove_mid_chain_preserves_links() {
+        let mut c = LruCache::new(3);
+        c.put(1u64, 1u64);
+        c.put(2, 2);
+        c.put(3, 3);
+        assert!(c.remove(&2));
+        let order: Vec<u64> = c.iter_lru_to_mru().map(|(k, _)| *k).collect();
+        assert_eq!(order, vec![1, 3]);
+        assert!(c.remove(&1)); // tail
+        assert!(c.remove(&3)); // head == tail afterwards empty
+        assert!(c.is_empty());
+        c.put(9, 9);
+        assert_eq!(c.get(&9), Some(&9));
     }
 
     #[test]

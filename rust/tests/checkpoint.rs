@@ -1,23 +1,23 @@
-//! Durable serving-state harness: checkpoint merge correctness, file
-//! round trips, kill→resume bit-identity, typed failure of damaged or
-//! mismatched checkpoint files, and hot ensemble swaps mid-stream.
+//! Durable serving-state harness: checkpoint layout-independence, file
+//! round trips, kill→resume bit-identity at a *different* shard count,
+//! live re-sharding mid-stream, typed failure of damaged or mismatched
+//! checkpoint files, and hot ensemble swaps.
 //!
-//! The two load-bearing properties:
+//! The two load-bearing properties of the v4 format:
 //!
-//! 1. **Merge property** — merging the S per-shard `AbsorbState`
-//!    snapshots equals the S=1 absorb state for the same stream (any S,
-//!    seeded per-ID-order-preserving shuffles, absorb-every-update, in
-//!    the no-eviction regime): same sketch set bit-for-bit, same summed
-//!    CMS delta, same counters. Every ID is pinned to one shard and its
-//!    sketch evolves identically there, so each absorb inserts the same
-//!    bins regardless of S — the per-bucket delta counts must sum
-//!    exactly.
+//! 1. **Layout independence** — the checkpoint cut after the same
+//!    submit sequence is bit-identical at *any* shard count (modulo the
+//!    informational `shards` field): same global LRU→MRU entry list
+//!    with the same recency tags, same visible overlay, same merged
+//!    pending overlay, same summed counters. Eviction and absorb
+//!    decisions live feeder-side, so the shard layout can never leak
+//!    into the persisted state.
 //! 2. **Resume property** — checkpoint → new process → `--resume`
-//!    continues the stream bit-for-bit: the concatenated score logs of
-//!    an interrupted run equal the uninterrupted run's log, order
-//!    included.
+//!    continues the stream bit-for-bit **even when the shard count
+//!    changes**: the concatenated score logs of a run interrupted at
+//!    S=3 and resumed at S=5 (or S=1) equal the uninterrupted S=1
+//!    run's log, order included, under eviction churn with absorb on.
 
-use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 
 use sparx::api::{registry, SparxError};
@@ -25,10 +25,9 @@ use sparx::cluster::ClusterConfig;
 use sparx::data::generators::GisetteGen;
 use sparx::data::{StreamGen, UpdateTriple};
 use sparx::sparx::{
-    AbsorbCheckpoint, AbsorbSnapshot, ServeOptions, ServedEnsemble, ShardedStreamScorer,
-    SparxModel, SparxParams, StreamScore, StreamScorer, SwapCarry,
+    AbsorbCheckpoint, ServeOptions, ServedEnsemble, ShardedStreamScorer, SparxModel, SparxParams,
+    StreamScore, SwapCarry,
 };
-use sparx::util::Rng;
 
 fn fitted(seed: u64) -> SparxModel {
     let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
@@ -47,44 +46,6 @@ fn synth_updates(ids: u64, count: usize, seed: u64) -> Vec<UpdateTriple> {
     (0..count).map(|_| gen.next_update()).collect()
 }
 
-/// Seeded shuffle of the arrival order *across* IDs that preserves each
-/// ID's own update order (streams never reorder a single key).
-fn shuffle_interleaving(updates: &[UpdateTriple], seed: u64) -> Vec<UpdateTriple> {
-    let mut queues: Vec<VecDeque<UpdateTriple>> = Vec::new();
-    let mut slot_of: HashMap<u64, usize> = HashMap::new();
-    for u in updates {
-        let next = queues.len();
-        let slot = *slot_of.entry(u.id()).or_insert(next);
-        if slot == next {
-            queues.push(VecDeque::new());
-        }
-        queues[slot].push_back(u.clone());
-    }
-    let mut rng = Rng::new(seed);
-    let mut out = Vec::with_capacity(updates.len());
-    while !queues.is_empty() {
-        let pick = rng.below(queues.len() as u64) as usize;
-        let u = queues[pick].pop_front().expect("queues are drained eagerly");
-        out.push(u);
-        if queues[pick].is_empty() {
-            queues.swap_remove(pick);
-        }
-    }
-    out
-}
-
-/// Sketch entries as (id, f32-bit) pairs sorted by id — sharding changes
-/// only the partitioning and recency order of entries, never their bits.
-fn entries_by_id(snap: &AbsorbSnapshot) -> Vec<(u64, Vec<u32>)> {
-    let mut v: Vec<(u64, Vec<u32>)> = snap
-        .entries
-        .iter()
-        .map(|(id, sk)| (*id, sk.iter().map(|x| x.to_bits()).collect()))
-        .collect();
-    v.sort_unstable_by_key(|(id, _)| *id);
-    v
-}
-
 fn temp_path(tag: &str) -> String {
     std::env::temp_dir()
         .join(format!("sparx-ckpt-test-{}-{tag}.sparx", std::process::id()))
@@ -93,75 +54,71 @@ fn temp_path(tag: &str) -> String {
         .to_string()
 }
 
-/// Property 1: merged shard snapshots == the S=1 absorb state, for any
-/// shard count and arrival interleaving, absorbing every update.
+/// Property 1: the same submit sequence yields the same checkpoint at
+/// any shard count — entries (with recency tags), overlays and counters
+/// all bit-identical; only the informational `shards` field records the
+/// capture-time layout. Runs mid-epoch (3000 % 256 ≠ 0) with real LRU
+/// churn so the pending overlay and the eviction path are both live.
 #[test]
-fn merging_shard_snapshots_equals_the_single_shard_absorb_state() {
+fn checkpoint_is_identical_at_every_shard_count() {
     let model = fitted(0x5AB4);
     let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
-    let updates = synth_updates(300, 5000, 0xAB50);
+    let updates = synth_updates(300, 3000, 0xAB50);
+    let cache = 96usize; // < 300 distinct IDs: the eviction regime
+    let opts = ServeOptions { record: false, absorb: true };
 
-    // S=1 reference: update then absorb, exactly like the absorb serving
-    // mode does per shard
-    let mut reference = StreamScorer::from_ensemble(ens.clone(), 4096).unwrap();
-    for u in &updates {
-        let s = reference.update(u);
-        reference.absorb(s.id).expect("just updated, must be cached");
-    }
-    assert_eq!(reference.evictions(), 0, "harness requires the no-eviction regime");
-    let want = reference.snapshot();
-
-    for (shards, shuffle_seed) in [(2usize, 21u64), (3, 22), (5, 23)] {
-        let replay = shuffle_interleaving(&updates, shuffle_seed);
-        assert_ne!(replay, updates, "the shuffle must actually change the interleaving");
-        let mut scorer = ShardedStreamScorer::from_ensemble(
-            ens.clone(),
-            shards,
-            4096,
-            ServeOptions { record: false, absorb: true },
-            None,
-        )
-        .unwrap();
-        for u in replay {
-            scorer.submit(u);
+    let cut = |shards: usize| -> AbsorbCheckpoint {
+        let mut scorer =
+            ShardedStreamScorer::from_ensemble(ens.clone(), shards, cache, opts, None).unwrap();
+        for u in &updates {
+            scorer.submit(u.clone());
         }
         let ckpt = scorer.checkpoint().unwrap();
         let report = scorer.finish();
         assert_eq!(report.processed(), updates.len() as u64, "S={shards}: lost updates");
-        assert_eq!(report.absorbed(), updates.len() as u64, "S={shards}: lost absorbs");
-        assert_eq!(ckpt.snapshots.len(), shards);
-        let merged = ckpt.merged();
-        assert_eq!(merged.processed, want.processed, "S={shards}: processed");
-        assert_eq!(merged.evicted, 0, "S={shards}: evictions in the no-eviction regime");
-        assert_eq!(merged.absorbed, want.absorbed, "S={shards}: absorbed");
+        ckpt
+    };
+
+    let want = cut(1);
+    assert_eq!(want.shards, 1);
+    assert_eq!(want.submitted, updates.len() as u64);
+    assert!(want.evicted > 0, "harness requires the eviction regime");
+    assert_eq!(want.entries.len(), cache, "directory must sit at its budget");
+    assert!(want.visible.iter().any(|l| !l.is_empty()), "epochs must have published");
+    assert!(
+        want.pending.iter().any(|l| !l.is_empty()),
+        "a mid-epoch cut must carry unpublished increments"
+    );
+    let want_bytes = want.to_artifact().to_bytes();
+
+    for shards in [2usize, 3, 5] {
+        let mut got = cut(shards);
+        assert_eq!(got.shards, shards as u32, "capture-time layout is recorded");
+        got.shards = want.shards; // the one (informational) field allowed to differ
+        assert_eq!(got, want, "S={shards}: checkpoint state leaked the shard layout");
         assert_eq!(
-            entries_by_id(&merged),
-            entries_by_id(&want),
-            "S={shards}: merged sketch set must equal the single-shard cache bit-for-bit"
-        );
-        assert_eq!(
-            merged.delta, want.delta,
-            "S={shards}: summed per-shard deltas must equal the S=1 delta exactly"
+            got.to_artifact().to_bytes(),
+            want_bytes,
+            "S={shards}: serialized form must be byte-identical too"
         );
     }
 }
 
-/// Property 2: checkpoint at an arbitrary stream position, tear the
-/// scorer down (the "kill"), restore from the **file** into a fresh
-/// scorer, continue — the concatenated score logs are bit-identical to
-/// an uninterrupted run. Exercised with absorb on and real evictions.
+/// Property 2 — the acceptance bar for elastic serving: checkpoint a
+/// run at S=3 mid-stream (and mid-epoch), tear it down, restore from
+/// the **file** at S=5 and at S=1, continue — each concatenated score
+/// log is bit-identical to the uninterrupted S=1 run. Absorb on, real
+/// LRU churn across the cut.
 #[test]
-fn file_checkpoint_resume_continues_bit_identically() {
+fn file_checkpoint_resumes_bit_identically_at_a_different_shard_count() {
     let model = fitted(0x7E57);
     let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
     let updates = synth_updates(500, 4000, 0xFEED5);
-    let shards = 4usize;
     let cache = 64usize; // small: real LRU churn crosses the checkpoint
     let opts = ServeOptions { record: true, absorb: true };
 
-    // uninterrupted reference run
-    let mut full = ShardedStreamScorer::from_ensemble(ens.clone(), shards, cache, opts, None)
-        .unwrap();
+    // uninterrupted single-shard reference run
+    let mut full = ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
     for u in &updates {
         full.submit(u.clone());
     }
@@ -169,41 +126,108 @@ fn file_checkpoint_resume_continues_bit_identically() {
     assert!(full_report.evictions() > 0, "harness requires the eviction regime");
     let want: Vec<StreamScore> = full_report.merged_scores();
 
-    // interrupted run: first half, checkpoint to a file, drop everything
-    let cut = updates.len() / 2;
-    let mut first = ShardedStreamScorer::from_ensemble(ens.clone(), shards, cache, opts, None)
-        .unwrap();
+    // interrupted run at S=3: first half, checkpoint to a file, tear down
+    let cut = updates.len() / 2; // 2000 % 256 != 0: a mid-epoch cut
+    let mut first = ShardedStreamScorer::from_ensemble(ens.clone(), 3, cache, opts, None).unwrap();
     for u in &updates[..cut] {
         first.submit(u.clone());
     }
     let ckpt = first.checkpoint().unwrap();
     let path = temp_path("resume");
-    ckpt.save(&path, vec![("model".into(), "in-memory".into())]).unwrap();
+    ckpt.save(&path, ckpt.manifest_for("in-memory")).unwrap();
     let part1 = first.finish().merged_scores();
 
-    // "new process": reload the checkpoint file and continue the stream
+    // "new process": reload the file and continue at a different S
     let loaded = AbsorbCheckpoint::load(&path).unwrap();
     assert_eq!(loaded, ckpt, "file round trip must be exact");
-    let mut second =
-        ShardedStreamScorer::from_ensemble(ens, shards, cache, opts, Some(&loaded)).unwrap();
-    assert_eq!(second.submitted(), cut as u64, "resume continues the submit sequence");
-    for u in &updates[cut..] {
-        second.submit(u.clone());
-    }
-    let second_report = second.finish();
-    assert_eq!(second_report.processed(), updates.len() as u64, "lifetime total");
-    let part2 = second_report.merged_scores();
     std::fs::remove_file(&path).unwrap();
+    for resume_shards in [5usize, 1] {
+        let mut second = ShardedStreamScorer::from_ensemble(
+            ens.clone(),
+            resume_shards,
+            cache,
+            opts,
+            Some(&loaded),
+        )
+        .unwrap();
+        assert_eq!(second.submitted(), cut as u64, "resume continues the submit sequence");
+        for u in &updates[cut..] {
+            second.submit(u.clone());
+        }
+        let second_report = second.finish();
+        assert_eq!(
+            second_report.processed(),
+            updates.len() as u64,
+            "S=3→S={resume_shards}: lifetime total"
+        );
+        let part2 = second_report.merged_scores();
+        assert_eq!(part1.len() + part2.len(), want.len());
+        let resumed: Vec<StreamScore> = part1.iter().cloned().chain(part2).collect();
+        for (i, (got, wanted)) in resumed.iter().zip(&want).enumerate() {
+            assert_eq!(got, wanted, "S=3→S={resume_shards}: diverged at submit #{i}");
+        }
+    }
 
-    assert_eq!(part1.len() + part2.len(), want.len());
-    let resumed: Vec<StreamScore> = part1.into_iter().chain(part2).collect();
-    for (i, (got, wanted)) in resumed.iter().zip(&want).enumerate() {
-        assert_eq!(got, wanted, "resumed stream diverged at submit #{i}");
+    // shrinking the budget on resume sheds from the LRU side, counted as
+    // evictions — the pool comes up resident within the new budget
+    let small = 16usize;
+    let shed = loaded.entries.len() as u64 - small as u64;
+    let ok = ShardedStreamScorer::from_ensemble(ens, 2, small, opts, Some(&loaded)).unwrap();
+    let report = ok.finish();
+    assert_eq!(report.cached_ids(), small, "must shed down to the new budget");
+    assert_eq!(report.evictions(), loaded.evicted + shed, "shed entries count as evictions");
+}
+
+/// Live re-shard mid-stream (the `RESHARD` verb's engine): 2 → 4 → 1
+/// across one continuous stream drops zero updates and keeps the merged
+/// score log bit-identical to an uninterrupted single-shard run —
+/// absorb on, eviction churn on, reshard points off epoch boundaries.
+#[test]
+fn live_reshard_mid_stream_drops_nothing_and_stays_bit_identical() {
+    let model = fitted(0xE1A5);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let updates = synth_updates(400, 3500, 0xC0FFEE);
+    let cache = 64usize;
+    let opts = ServeOptions { record: true, absorb: true };
+
+    let mut reference =
+        ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+    for u in &updates {
+        reference.submit(u.clone());
+    }
+    let reference = reference.finish();
+    assert!(reference.evictions() > 0, "harness requires the eviction regime");
+    let want = reference.merged_scores();
+
+    let mut scorer = ShardedStreamScorer::from_ensemble(ens, 2, cache, opts, None).unwrap();
+    for u in &updates[..1000] {
+        scorer.submit(u.clone());
+    }
+    scorer.reshard(4).unwrap();
+    assert_eq!(scorer.shards(), 4);
+    for u in &updates[1000..1500] {
+        scorer.submit(u.clone());
+    }
+    scorer.reshard(4).unwrap(); // same count: a no-op, not a respawn
+    assert!(matches!(scorer.reshard(0), Err(SparxError::InvalidParams(_))));
+    assert!(matches!(scorer.reshard(5000), Err(SparxError::InvalidParams(_))));
+    assert_eq!(scorer.shards(), 4, "rejected reshards must leave the pool serving");
+    scorer.reshard(1).unwrap();
+    for u in &updates[1500..] {
+        scorer.submit(u.clone());
+    }
+    let report = scorer.finish();
+    assert_eq!(report.processed(), updates.len() as u64, "reshards must drop zero updates");
+    let got = report.merged_scores();
+    assert_eq!(got.len(), want.len(), "archived generations must all surface");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g, w, "resharded stream diverged at submit #{i}");
     }
 }
 
 /// Damaged or mismatched checkpoint files fail typed — never panic,
-/// never restore garbage.
+/// never restore garbage. Layout changes (shards, cache) are *not*
+/// mismatches from v4 on; model fingerprint and absorb mode are.
 #[test]
 fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
     let model = fitted(1);
@@ -275,24 +299,10 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
         other,
         2,
         32,
-        ServeOptions::default(),
+        ServeOptions { record: false, absorb: true },
         Some(&ckpt),
     );
     assert!(matches!(r.err(), Some(SparxError::InvalidParams(_))), "wrong model must fail");
-    // wrong layout: shard count and cache capacity must match the capture
-    for (shards, cache) in [(3usize, 32usize), (2, 16)] {
-        let r = ShardedStreamScorer::from_ensemble(
-            ens.clone(),
-            shards,
-            cache,
-            ServeOptions::default(),
-            Some(&ckpt),
-        );
-        assert!(
-            matches!(r.err(), Some(SparxError::InvalidParams(_))),
-            "S={shards} cache={cache} must be rejected against a S=2/cache=32 checkpoint"
-        );
-    }
     // wrong absorb mode: the continued stream would silently diverge
     let r = ShardedStreamScorer::from_ensemble(
         ens.clone(),
@@ -305,17 +315,22 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
         matches!(r.err(), Some(SparxError::InvalidParams(_))),
         "absorb-mode mismatch must be rejected against an absorb-on checkpoint"
     );
-    // ...and the matching layout + mode restores fine
-    let ok = ShardedStreamScorer::from_ensemble(
-        ens,
-        2,
-        32,
-        ServeOptions { record: false, absorb: true },
-        Some(&ckpt),
-    )
-    .unwrap();
-    assert_eq!(ok.submitted(), 400);
-    drop(ok.finish());
+    // a *different layout* is not a mismatch: v4 validation is lifted to
+    // what genuinely breaks bit-identity, so any shards/cache restores
+    for (shards, cache) in [(2usize, 32usize), (3, 32), (2, 16), (5, 64)] {
+        let ok = ShardedStreamScorer::from_ensemble(
+            ens.clone(),
+            shards,
+            cache,
+            ServeOptions { record: false, absorb: true },
+            Some(&ckpt),
+        )
+        .unwrap_or_else(|e| {
+            panic!("S={shards} cache={cache} must restore from a S=2/cache=32 checkpoint: {e:?}")
+        });
+        assert_eq!(ok.submitted(), 400);
+        drop(ok.finish());
+    }
 }
 
 /// Hot reload mid-stream: swaps land between batches, drop no updates,

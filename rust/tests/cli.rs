@@ -2,9 +2,13 @@
 //! documented exit codes — `0` success, `2` usage/validation, `1`
 //! runtime — for the serve-input grammar (malformed triples, `old->new`
 //! substitutions, `#` comments, empty files), the `--backend` override
-//! at load, and the sharded serve path.
+//! at load, the sharded serve path, and the TCP ingress
+//! (`serve --listen`): wire-grammar errors, oversized lines,
+//! half-closed sockets, interleaved clients, and kill→`--resume` with
+//! score logs bit-identical to the stdin path throughout.
 
-use std::io::Write as _;
+use std::io::{BufRead as _, BufReader, Read as _, Write as _};
+use std::net::TcpStream;
 use std::process::{Command, Stdio};
 use std::sync::OnceLock;
 
@@ -235,7 +239,7 @@ fn serve_checkpoint_kill_resume_reproduces_the_uninterrupted_score_log() {
 }
 
 #[test]
-fn serve_resume_with_mismatched_layout_or_model_is_rejected_typed() {
+fn serve_resume_accepts_layout_changes_and_rejects_model_confusion_typed() {
     let (file, _) = synth_updates_file(120, 7);
     let ckpt = temp_file("mismatch.sparx");
     let (code, _out, err) = run_sparx(
@@ -246,19 +250,28 @@ fn serve_resume_with_mismatched_layout_or_model_is_rejected_typed() {
         None,
     );
     assert_eq!(code, 0, "checkpoint run failed: {err}");
-    // wrong shard count
+    // the v4 checkpoint is layout-independent: a different shard count
+    // or cache budget resumes fine and the lifetime counter carries over
+    for extra in [["--shards", "5"], ["--cache", "99"]] {
+        let (code, out, err) = run_sparx(
+            &[
+                "serve", "--model", model_path(), "--count", "10", "--resume", &ckpt,
+                extra[0], extra[1],
+            ],
+            None,
+        );
+        assert_eq!(code, 0, "{extra:?} must resume from v4 on; stderr: {err}");
+        assert!(out.contains("resumed from checkpoint"), "{out}");
+        assert!(out.contains("130 total"), "lifetime counter must span the restart: {out}");
+    }
+    // an absorb-mode mismatch would silently diverge the continued
+    // stream — still rejected typed (the capture ran absorb-off)
     let (code, _out, err) = run_sparx(
-        &["serve", "--model", model_path(), "--count", "10", "--resume", &ckpt, "--shards", "5"],
+        &["serve", "--model", model_path(), "--count", "10", "--resume", &ckpt, "--absorb"],
         None,
     );
-    assert_eq!(code, 2, "shard mismatch must be a usage error; stderr: {err}");
-    assert!(err.contains("shard"), "{err}");
-    // wrong cache capacity
-    let (code, _out, err) = run_sparx(
-        &["serve", "--model", model_path(), "--count", "10", "--resume", &ckpt, "--cache", "99"],
-        None,
-    );
-    assert_eq!(code, 2, "cache mismatch must be a usage error; stderr: {err}");
+    assert_eq!(code, 2, "absorb mismatch must be a usage error; stderr: {err}");
+    assert!(err.contains("absorb"), "{err}");
     // a checkpoint is not a model
     let (code, _out, err) =
         run_sparx(&["serve", "--model", &ckpt, "--count", "10"], None);
@@ -382,4 +395,334 @@ fn serve_accepts_a_native_backend_override() {
     let (code, out, err) = run_sparx(&args, None);
     assert_eq!(code, 0, "stderr: {err}");
     assert!(out.contains("processed 50 δ-updates"), "{out}");
+}
+
+// ------------------------------------------ TCP ingress (serve --listen)
+
+/// Spawn `sparx serve --listen 127.0.0.1:0 …` on the shared model,
+/// parse the OS-assigned address from the `listening on` stderr line,
+/// and keep draining stderr on a side thread so the child can never
+/// block on a full pipe. The drain handle returns the remaining stderr.
+fn spawn_listen(
+    extra: &[&str],
+) -> (std::process::Child, String, std::thread::JoinHandle<String>) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_sparx"));
+    cmd.args(["serve", "--model", model_path(), "--listen", "127.0.0.1:0"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .stdin(Stdio::null());
+    let mut child = cmd.spawn().expect("spawn sparx serve --listen");
+    let stderr = child.stderr.take().expect("stderr was piped");
+    let mut reader = BufReader::new(stderr);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read server stderr");
+        assert!(n > 0, "server exited before announcing its address");
+        if let Some(rest) = line.trim().strip_prefix("listening on ") {
+            break rest.to_string();
+        }
+    };
+    let drain = std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = reader.read_to_string(&mut rest);
+        rest
+    });
+    (child, addr, drain)
+}
+
+/// One line-protocol exchange: write `payload`, half-close the send
+/// side, then read every response line until the server closes the
+/// socket. (A half-close without `QUIT` is itself the graceful way to
+/// end a batch — the server still answers everything it accepted.)
+fn tcp_exchange(addr: &str, payload: &str) -> Vec<String> {
+    let mut sock = TcpStream::connect(addr).expect("connect to sparx serve");
+    sock.write_all(payload.as_bytes()).expect("write request payload");
+    sock.shutdown(std::net::Shutdown::Write).expect("half-close the send side");
+    let mut out = String::new();
+    BufReader::new(sock).read_to_string(&mut out).expect("read responses to EOF");
+    out.lines().map(str::to_owned).collect()
+}
+
+/// The `(id, score-bits)` pairs among `lines` — update replies only
+/// (`OK <id> <hex>`); control acknowledgements like `OK bye` and
+/// `OK reshard 4` have a non-numeric second token and drop out.
+fn ok_scores(lines: &[String]) -> Vec<(u64, String)> {
+    lines
+        .iter()
+        .filter_map(|l| {
+            let mut it = l.split(' ');
+            match (it.next(), it.next(), it.next(), it.next()) {
+                (Some("OK"), Some(id), Some(bits), None) => {
+                    id.parse().ok().map(|id| (id, bits.to_string()))
+                }
+                _ => None,
+            }
+        })
+        .collect()
+}
+
+/// Parse a `--score-log` file into the same `(id, score-bits)` pairs.
+fn log_pairs(path: &str) -> Vec<(u64, String)> {
+    std::fs::read_to_string(path)
+        .expect("read score log")
+        .lines()
+        .map(|l| {
+            let mut it = l.split(' ');
+            let id = it.next().and_then(|t| t.parse().ok()).expect("score-log id");
+            let bits = it.next().expect("score-log bits").to_string();
+            (id, bits)
+        })
+        .collect()
+}
+
+/// Group reply pairs into per-ID score sequences (order preserved).
+fn by_id(pairs: &[(u64, String)]) -> std::collections::HashMap<u64, Vec<String>> {
+    let mut m: std::collections::HashMap<u64, Vec<String>> = std::collections::HashMap::new();
+    for (id, bits) in pairs {
+        m.entry(*id).or_default().push(bits.clone());
+    }
+    m
+}
+
+/// One client driving the full stream over TCP reproduces the stdin
+/// path bit for bit — same submit order, so the same scores, under
+/// eviction churn with absorb on — and the control verbs (`STATS`,
+/// `METRICS`, `SCORE`, `QUIT`) answer in their documented shapes on
+/// the same connection.
+#[test]
+fn serve_listen_single_client_is_bit_identical_to_the_stdin_path() {
+    let (file, lines) = synth_updates_file(400, 0x7C9);
+    let reference_log = temp_file("tcp-ref.log");
+    let (code, _out, err) = run_sparx(
+        &[
+            "serve", "--model", model_path(), "--updates", &file, "--shards", "3", "--cache",
+            "64", "--absorb", "--score-log", &reference_log,
+        ],
+        None,
+    );
+    assert_eq!(code, 0, "reference run failed: {err}");
+    let want = log_pairs(&reference_log);
+    assert_eq!(want.len(), 400);
+
+    let (mut child, addr, drain) =
+        spawn_listen(&["--shards", "3", "--cache", "64", "--absorb"]);
+    let last_id = want.last().expect("reference has scores").0;
+    let payload =
+        lines.join("\n") + &format!("\nSTATS\nMETRICS\nSCORE {last_id}\nQUIT\n");
+    let replies = tcp_exchange(&addr, &payload);
+    assert_eq!(
+        ok_scores(&replies),
+        want,
+        "TCP path must be bit-identical to the stdin path"
+    );
+    let stats = replies.iter().find(|l| l.starts_with("STATS {")).expect("STATS reply");
+    assert!(stats.contains("\"processed\":400"), "{stats}");
+    assert!(stats.contains("\"resident_bytes\":"), "{stats}");
+    assert!(replies.iter().any(|l| l == "sparx_processed_total 400"), "{replies:?}");
+    assert!(replies.iter().any(|l| l == "# EOF"), "metrics dump must be EOF-terminated");
+    assert!(
+        replies.iter().any(|l| l.starts_with(&format!("SCORE {last_id} "))),
+        "the just-updated ID must be resident: {replies:?}"
+    );
+    assert!(replies.iter().any(|l| l == "OK bye"), "{replies:?}");
+
+    assert_eq!(tcp_exchange(&addr, "SHUTDOWN\n"), ["OK shutdown".to_string()]);
+    assert!(child.wait().expect("server exit").success());
+    drop(drain.join());
+    let _ = std::fs::remove_file(&file);
+    let _ = std::fs::remove_file(&reference_log);
+}
+
+/// Two clients submitting disjoint ID sets concurrently: global arrival
+/// order is nondeterministic, but per-ID score sequences must equal the
+/// stdin path's bit for bit (no-eviction regime, absorb off — exactly
+/// the invariant the sharded scorer guarantees under re-interleaving).
+#[test]
+fn serve_listen_interleaved_clients_match_the_stdin_path_per_id() {
+    let (file, lines) = synth_updates_file(300, 0xAB1);
+    let reference_log = temp_file("tcp-interleave-ref.log");
+    let (code, _out, err) = run_sparx(
+        &[
+            "serve", "--model", model_path(), "--updates", &file, "--shards", "2", "--cache",
+            "4096", "--score-log", &reference_log,
+        ],
+        None,
+    );
+    assert_eq!(code, 0, "reference run failed: {err}");
+    let want = by_id(&log_pairs(&reference_log));
+
+    let (mut child, addr, drain) = spawn_listen(&["--shards", "2", "--cache", "4096"]);
+    let id_of = |line: &str| -> u64 {
+        line.split(' ').next().and_then(|t| t.parse().ok()).expect("update line id")
+    };
+    let parts: Vec<Vec<String>> = (0..2)
+        .map(|p| lines.iter().filter(|l| id_of(l) % 2 == p).cloned().collect())
+        .collect();
+    let handles: Vec<_> = parts
+        .into_iter()
+        .map(|part| {
+            let addr = addr.clone();
+            std::thread::spawn(move || tcp_exchange(&addr, &(part.join("\n") + "\nQUIT\n")))
+        })
+        .collect();
+    let mut got: std::collections::HashMap<u64, Vec<String>> = std::collections::HashMap::new();
+    let mut replies_total = 0usize;
+    for h in handles {
+        let replies = h.join().expect("client thread");
+        let pairs = ok_scores(&replies);
+        replies_total += pairs.len();
+        for (id, seq) in by_id(&pairs) {
+            got.insert(id, seq);
+        }
+    }
+    assert_eq!(replies_total, 300, "every accepted update must be answered");
+    assert_eq!(got, want, "per-ID sequences must match the stdin path bit for bit");
+
+    assert_eq!(tcp_exchange(&addr, "SHUTDOWN\n"), ["OK shutdown".to_string()]);
+    assert!(child.wait().expect("server exit").success());
+    drop(drain.join());
+    let _ = std::fs::remove_file(&file);
+    let _ = std::fs::remove_file(&reference_log);
+}
+
+/// Wire-grammar failures answer typed `ERR` lines naming the offending
+/// line — malformed verbs, degenerate reshards, oversized lines
+/// (rejected, never truncated) — and the connection stays open for
+/// well-formed requests afterwards.
+#[test]
+fn serve_listen_malformed_and_oversized_lines_fail_typed_and_keep_the_connection() {
+    let (mut child, addr, drain) = spawn_listen(&[]);
+    let long = "9".repeat(9000); // > MAX_LINE_BYTES, no inner newline
+    let payload = format!("score 42\nRESHARD 0\n{long}\n# comment\n\n1 f0 0.5\n17 f1\nQUIT\n");
+    let replies = tcp_exchange(&addr, &payload);
+
+    let errs: Vec<&String> = replies.iter().filter(|l| l.starts_with("ERR ")).collect();
+    assert_eq!(errs.len(), 4, "exactly the four bad lines answer ERR: {replies:?}");
+    // verbs are case-sensitive: `score` falls through to the update
+    // grammar and fails there, naming its line
+    assert!(errs.iter().any(|e| e.contains("line 1")), "{errs:?}");
+    assert!(
+        errs.iter().any(|e| e.contains("request line 2") && e.contains("≥ 1")),
+        "{errs:?}"
+    );
+    assert!(
+        errs.iter().any(|e| e.contains("request line 3")
+            && e.contains("exceeds 8192 bytes")
+            && e.contains("rejected, not truncated")),
+        "{errs:?}"
+    );
+    assert!(errs.iter().any(|e| e.contains("line 7")), "{errs:?}");
+    // line 6 still scored: comments/blanks skipped, errors non-fatal
+    let scored = ok_scores(&replies);
+    assert_eq!(scored.len(), 1, "{replies:?}");
+    assert_eq!(scored[0].0, 1);
+    assert!(replies.iter().any(|l| l == "OK bye"), "{replies:?}");
+
+    assert_eq!(tcp_exchange(&addr, "SHUTDOWN\n"), ["OK shutdown".to_string()]);
+    assert!(child.wait().expect("server exit").success());
+    drop(drain.join());
+}
+
+/// A half-closed socket ends a batch gracefully (every accepted update
+/// is still answered), and an idle parked connection neither blocks
+/// other clients nor dies — slow consumers stall only themselves.
+#[test]
+fn serve_listen_half_close_drains_replies_and_idle_peers_do_not_interfere() {
+    let (mut child, addr, drain) = spawn_listen(&["--shards", "2"]);
+    // park an idle connection first: it must not stall anyone
+    let mut idle = TcpStream::connect(&addr).expect("connect idle client");
+
+    let (file, lines) = synth_updates_file(50, 0x1D7E);
+    let _ = std::fs::remove_file(&file);
+    // no QUIT: the half-close inside tcp_exchange ends the batch
+    let replies = tcp_exchange(&addr, &(lines.join("\n") + "\n"));
+    assert_eq!(ok_scores(&replies).len(), 50, "every update answered after half-close");
+    assert!(!replies.iter().any(|l| l.starts_with("ERR")), "{replies:?}");
+
+    // the parked connection still speaks after the other client is gone
+    idle.write_all(b"QUIT\n").expect("write on idle connection");
+    let mut rest = String::new();
+    BufReader::new(idle).read_to_string(&mut rest).expect("read idle replies");
+    assert_eq!(rest, "OK bye\n");
+
+    assert_eq!(tcp_exchange(&addr, "SHUTDOWN\n"), ["OK shutdown".to_string()]);
+    assert!(child.wait().expect("server exit").success());
+    drop(drain.join());
+}
+
+/// The elastic-serving acceptance path end to end over TCP: serve →
+/// `CHECKPOINT` verb → SIGKILL → `--resume` (adopting the captured
+/// layout) → `RESHARD` mid-stream — and the scores a client collects
+/// across both incarnations are bit-identical to one uninterrupted
+/// stdin run, eviction churn and absorb on throughout.
+#[test]
+fn serve_listen_checkpoint_kill_resume_and_reshard_reproduce_the_stdin_run() {
+    let (file, lines) = synth_updates_file(600, 0x8E7A);
+    let reference_log = temp_file("tcp-resume-ref.log");
+    let (code, _out, err) = run_sparx(
+        &[
+            "serve", "--model", model_path(), "--updates", &file, "--shards", "3", "--cache",
+            "64", "--absorb", "--score-log", &reference_log,
+        ],
+        None,
+    );
+    assert_eq!(code, 0, "reference run failed: {err}");
+    let want = log_pairs(&reference_log);
+    assert_eq!(want.len(), 600);
+
+    // incarnation 1: first half over TCP, checkpoint via the verb, then
+    // SIGKILL — the hard-kill half of the lifecycle
+    let ckpt = temp_file("tcp-resume.sparx");
+    let (mut child, addr, drain) = spawn_listen(&[
+        "--shards", "3", "--cache", "64", "--absorb", "--checkpoint-out", &ckpt,
+    ]);
+    let replies = tcp_exchange(&addr, &(lines[..300].join("\n") + "\nCHECKPOINT\n"));
+    assert_eq!(ok_scores(&replies), want[..300], "first incarnation diverged");
+    assert!(
+        replies.iter().any(|l| l == "OK checkpoint 300"),
+        "checkpoint must cover all 300 submits: {replies:?}"
+    );
+    child.kill().expect("kill the first server");
+    let _ = child.wait();
+    drop(drain.join());
+
+    // incarnation 2: --resume adopts shards/cache/absorb from the
+    // checkpoint; a live RESHARD 3→5 lands mid-stream, dropping nothing
+    let (mut child, addr, drain) = spawn_listen(&["--resume", &ckpt]);
+    let payload =
+        lines[300..450].join("\n") + "\nRESHARD 5\n" + &lines[450..].join("\n") + "\nQUIT\n";
+    let replies = tcp_exchange(&addr, &payload);
+    assert_eq!(
+        ok_scores(&replies),
+        want[300..],
+        "resumed + resharded incarnation diverged from the uninterrupted run"
+    );
+    assert!(replies.iter().any(|l| l == "OK reshard 5"), "{replies:?}");
+
+    assert_eq!(tcp_exchange(&addr, "SHUTDOWN\n"), ["OK shutdown".to_string()]);
+    assert!(child.wait().expect("server exit").success());
+    drop(drain.join());
+    for f in [file, reference_log, ckpt] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+/// `--listen` replaces the file/synthetic stream and the between-update
+/// polling hooks; combining it with flags that drive those is a usage
+/// error, not a silent ignore.
+#[test]
+fn serve_listen_rejects_stream_driving_flags_typed() {
+    for extra in [["--count", "5"], ["--updates", "some-file.txt"]] {
+        let (code, _out, err) = run_sparx(
+            &[
+                "serve", "--model", model_path(), "--listen", "127.0.0.1:0", extra[0],
+                extra[1],
+            ],
+            None,
+        );
+        assert_eq!(code, 2, "{extra:?} must be rejected with --listen; stderr: {err}");
+        assert!(err.contains(extra[0]), "{err}");
+        assert!(err.contains("--listen"), "{err}");
+    }
 }

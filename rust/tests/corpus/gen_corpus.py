@@ -2,12 +2,14 @@
 """Regenerate the committed decoder corpus.
 
 Each binary here is an *independent* reimplementation of the sparx wire
-formats (artifact v3 container, absorb-checkpoint blocks, packed-u32
+formats (artifact container v3/v4, absorb-checkpoint blocks, packed-u32
 codec) so the Rust decoders are tested against bytes their own encoders
-never produced. `ok_ckpt_v3.bin` mirrors
+never produced. `ok_ckpt_v4.bin` mirrors
 `sparx::testing::fuzz::sample_checkpoint()` field for field; the replay
 test decodes it and compares against that struct, cross-checking both
-implementations.
+implementations. `ok_ckpt_v3.bin` is a *legacy* per-shard checkpoint:
+the replay test pins its converted (global v4) form, keeping the
+v2/v3 upgrade path honest.
 
 Run from this directory: `python3 gen_corpus.py`
 """
@@ -62,12 +64,14 @@ def block(b):
     return u32(len(b)) + b + crc(b)
 
 
-def artifact_v3(detector, params, payload):
-    body = b"SPRX" + u16(3) + pstr(detector) + block(params) + block(payload) + u32(0)
+def artifact(version, detector, params, payload):
+    """v2+ container: per-block CRCs, zero extension blocks, file CRC."""
+    body = b"SPRX" + u16(version) + pstr(detector) + block(params) + block(payload) + u32(0)
     return body + crc(body)
 
 
 def ckpt_params(shards=2):
+    """Legacy (v<=3) header: per-shard cache budget, no counters."""
     return (
         u32(0xDEADBEEF)  # model fingerprint
         + u32(0x5A5A0001)  # schema fingerprint
@@ -80,6 +84,26 @@ def ckpt_params(shards=2):
         + u64(2)  # num_chains
         + u64(4)  # cms_rows
         + u64(128)  # cms_cols
+    )
+
+
+def ckpt_params_v4():
+    """v4 header: global cache budget + pool-wide counters appended."""
+    return (
+        u32(0xDEADBEEF)  # model fingerprint
+        + u32(0x5A5A0001)  # schema fingerprint
+        + u32(2)  # shards (informational from v4 on)
+        + u64(4)  # cache_total (GLOBAL directory budget)
+        + u64(17)  # submitted
+        + u8(1)  # absorb
+        + u64(3)  # k
+        + u64(2)  # depth
+        + u64(2)  # num_chains
+        + u64(4)  # cms_rows
+        + u64(128)  # cms_cols
+        + u64(48)  # processed
+        + u64(4)  # evicted
+        + u64(38)  # absorbed
     )
 
 
@@ -114,6 +138,26 @@ def ckpt_payload():
     return u32(2) + snapshot(0) + snapshot(8)
 
 
+def levels(levels_list):
+    """v4 overlay: u32 level count, then one delta_level per level."""
+    return u32(len(levels_list)) + b"".join(delta_level(lv) for lv in levels_list)
+
+
+def ckpt_payload_v4():
+    """Mirrors fuzz::sample_checkpoint(): seq-tagged global LRU->MRU
+    entries, then the visible and pending overlays."""
+    min_positive = 2.0 ** -126  # f32::MIN_POSITIVE
+    return (
+        u32(4)  # entries
+        + u64(0) + u64(3) + f32_slice([0.5] * 3)
+        + u64(2) + u64(7) + f32_slice([-1.25] * 3)
+        + u64(8) + u64(12) + f32_slice([0.5] * 3)
+        + u64(10) + u64(16) + f32_slice([min_positive] * 3)
+        + levels([[(0, 1), (5, 2)], [], [(63, 9)], [(2, 2), (3, 1), (100, 7)]])  # visible
+        + levels([[(1, 1)], [], [], [(7, 3)]])  # pending
+    )
+
+
 def packed(vals, declared=None):
     """Packed u32 slice: u32 count + varint token stream (0 = zero run)."""
     out = u32(len(vals) if declared is None else declared)
@@ -133,10 +177,13 @@ def packed(vals, declared=None):
 
 def main():
     files = {
-        # valid absorb-state checkpoint, == fuzz::sample_checkpoint()
-        "ok_ckpt_v3.bin": artifact_v3("absorb-state", ckpt_params(), ckpt_payload()),
+        # valid v4 absorb-state checkpoint, == fuzz::sample_checkpoint()
+        "ok_ckpt_v4.bin": artifact(4, "absorb-state", ckpt_params_v4(), ckpt_payload_v4()),
+        # valid *legacy* per-shard checkpoint: decodes via the v<=3
+        # conversion path (replay test pins the converted global form)
+        "ok_ckpt_v3.bin": artifact(3, "absorb-state", ckpt_params(), ckpt_payload()),
         # header declares shards=0 (CRCs valid) -> typed InvalidParams
-        "bad_ckpt_shards0.bin": artifact_v3("absorb-state", ckpt_params(shards=0), ckpt_payload()),
+        "bad_ckpt_shards0.bin": artifact(3, "absorb-state", ckpt_params(shards=0), ckpt_payload()),
         # 11 continuation bytes -> "varint overflows u64", never a hang
         "bad_codec_varint_overflow.bin": b"\xff" * 11,
         # declares 8 elements, then a zero run of 100 -> overrun error
@@ -155,7 +202,18 @@ def main():
         fh.write("1 3 0.5\n# a comment line\n\n2 0 red->blue\n17 7 -2.25\n")
     with open("bad_serve_lines.txt", "w") as fh:
         fh.write("not numbers at all\n1 2\n1 x notanum\nnan 3 0.5\n1 3 zero->\n1 3 inf\n")
-    print("ok_serve_lines.txt / bad_serve_lines.txt written")
+    # TCP wire grammar (serve --listen): control verbs + data lines
+    with open("ok_wire_commands.txt", "w") as fh:
+        fh.write(
+            "SCORE 17\nSTATS\nMETRICS\nCHECKPOINT\nRESHARD 4\n# comment\n\n"
+            "42 f3 0.5\n7 loc NYC->Austin\nQUIT\nSHUTDOWN\n"
+        )
+    with open("bad_wire_commands.txt", "w") as fh:
+        fh.write(
+            "SCORE\nSCORE notanid\nSCORE 1 2\nRESHARD\nRESHARD zero\nRESHARD 0\n"
+            "STATS now\nQUIT loudly\nSHUTDOWN -f\nscore 42\n42 f0\n42 f0 NaN\n"
+        )
+    print("serve-line and wire-command corpora written")
 
 
 if __name__ == "__main__":

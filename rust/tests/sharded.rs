@@ -1,13 +1,15 @@
 //! Determinism + stress harness for the sharded streaming front-end.
 //!
-//! The core invariant under test: shards share nothing (each owns its
-//! LRU, CMS copies and scratch), and `murmur(ID) % S` pins every ID to
-//! one shard, so **every shard is bit-identical to a single-threaded
-//! `StreamScorer` fed its sub-stream at any thread interleaving, and —
-//! while no shard evicts — per-ID score sequences are bit-identical
-//! across shard counts too**. The harness replays one recorded update sequence
-//! through S = 1 and S ∈ {2, 4, 7} under seeded shuffles of the arrival
-//! order *across* IDs (per-ID order preserved — streams never reorder a
+//! The core invariant under test: `murmur(ID) % S` pins every ID to one
+//! shard, and the **feeder owns one global LRU directory** holding the
+//! *total* cache budget, so eviction decisions are made in submit order
+//! regardless of how many shards exist. Consequently **per-ID score
+//! sequences — and eviction counts, and the resident set — are
+//! bit-identical to a single-threaded `StreamScorer` with the same
+//! total budget at any shard count, eviction churn included**. The
+//! harness replays recorded update sequences through S = 1 and S ∈
+//! {2, 4, 7} (including under seeded shuffles of the arrival order
+//! *across* IDs — per-ID order preserved, streams never reorder a
 //! single key), and asserts score bits, eviction counts and processed
 //! totals line up exactly. A release-mode CI job reruns this file so
 //! the thread interleavings are actually exercised at speed.
@@ -116,40 +118,35 @@ fn sharded_per_id_scores_bit_identical_to_single_threaded() {
     }
 }
 
-/// The shared-nothing contract, stated per shard and under eviction
-/// churn: every shard's full score log (values, order, fresh flags) is
-/// bit-identical to a single-threaded scorer fed that shard's
-/// sub-stream, and so are its eviction/processed/cache counters.
+/// The feeder-directory contract, under heavy eviction churn: the
+/// merged score log (values, order, fresh flags), the eviction count
+/// and the resident set at S = 4 are bit-identical to a single-threaded
+/// scorer holding the same **total** cache budget — eviction decisions
+/// are made by the feeder in global submit order, so the shard count
+/// cannot perturb them.
 #[test]
-fn each_shard_matches_a_single_threaded_scorer_fed_its_substream() {
+fn eviction_churn_matches_single_threaded_with_the_same_total_budget() {
     let model = fitted(8, 6, 5);
     let updates = synth_updates(500, 6000, 0xACE);
-    let shards = 4usize;
-    let cache_per_shard = 8; // tiny: heavy LRU churn inside every shard
+    let cache_total = 32; // far fewer slots than the 500 live IDs: constant churn
 
-    let mut scorer = ShardedStreamScorer::recording(&model, shards, cache_per_shard).unwrap();
+    let mut reference = StreamScorer::new(&model, cache_total).unwrap();
+    let ref_log: Vec<_> = updates.iter().map(|u| reference.update(u)).collect();
+    assert!(reference.evictions() > 0, "harness requires the eviction regime");
+
+    let mut scorer = ShardedStreamScorer::recording(&model, 4, cache_total).unwrap();
     for u in &updates {
         scorer.submit(u.clone());
     }
     let report = scorer.finish();
-    assert!(report.evictions() > 0, "harness requires the eviction regime");
-
-    let mut total_ref_evictions = 0;
-    for s in 0..shards {
-        let mut reference = StreamScorer::new(&model, cache_per_shard).unwrap();
-        let mut ref_log = Vec::new();
-        for u in updates.iter().filter(|u| shard_of(u.id(), shards) == s) {
-            ref_log.push(reference.update(u));
-        }
-        let shard_log: Vec<_> = report.scores[s].iter().map(|(_, sc)| sc.clone()).collect();
-        assert_eq!(shard_log, ref_log, "shard {s}: score log diverged");
-        assert_eq!(report.shards[s].processed, reference.processed(), "shard {s}: processed");
-        assert_eq!(report.shards[s].evictions, reference.evictions(), "shard {s}: evictions");
-        assert_eq!(report.shards[s].cached_ids, reference.cached_ids(), "shard {s}: cache");
-        total_ref_evictions += reference.evictions();
+    assert_eq!(report.processed(), reference.processed(), "processed counts diverged");
+    assert_eq!(report.evictions(), reference.evictions(), "eviction counts diverged");
+    assert_eq!(report.cached_ids(), reference.cached_ids(), "resident sets diverged");
+    let merged = report.merged_scores();
+    assert_eq!(merged.len(), ref_log.len(), "merged log length");
+    for (i, (got, want)) in merged.iter().zip(&ref_log).enumerate() {
+        assert_eq!(got, want, "merged log diverged at submit #{i}");
     }
-    assert_eq!(report.evictions(), total_ref_evictions, "eviction counts must sum per shard");
-    assert_eq!(report.processed(), updates.len() as u64);
 }
 
 /// One shard degenerates to the single-threaded scorer exactly: the
@@ -197,11 +194,11 @@ fn merged_scores_restore_global_submit_order_at_any_shard_count() {
     }
 }
 
-/// Stress: 4 shards × 50k updates against a tiny per-shard cache,
-/// exercising bounded-queue backpressure and LRU churn under real
-/// contention (the release-mode CI job runs this at full speed).
-/// Asserts termination (no deadlock), no lost updates, and counter
-/// consistency: admitted − evicted == resident, per shard.
+/// Stress: 4 shards × 50k updates against a tiny **total** cache
+/// budget, exercising bounded-queue backpressure and feeder-driven LRU
+/// churn under real contention (the release-mode CI job runs this at
+/// full speed). Asserts termination (no deadlock), no lost updates,
+/// and counter consistency: admitted − evicted == resident, per shard.
 #[test]
 fn stress_4_shards_50k_updates_small_cache_counters_consistent() {
     let model = fitted(8, 5, 4);
