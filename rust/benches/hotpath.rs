@@ -24,6 +24,9 @@
 //!   * `net`      — serve-over-TCP throughput through the real wire
 //!                  path: a bound `Server`, loopback clients writing
 //!                  update lines and reading replies
+//!   * `decay`    — absorb-mode serve throughput with the time-decay
+//!                  mechanisms on (half-life halving, window rotation,
+//!                  both) vs plain absorb — the boundary-work overhead
 //!
 //! Modes:
 //!   * `--json` additionally writes `BENCH_hotpath.json` (per-kernel
@@ -49,7 +52,7 @@ use sparx::sparx::{
 use sparx::util::{Json, Rng};
 
 const SECTIONS: &[&str] =
-    &["bins", "cms", "project", "pjrt", "dist", "artifact", "stream", "serve", "net"];
+    &["bins", "cms", "project", "pjrt", "dist", "artifact", "stream", "serve", "net", "decay"];
 
 /// One timed result, as printed and as written to `BENCH_hotpath.json`.
 struct Entry {
@@ -129,6 +132,13 @@ struct NetData {
     updates_per_s: f64,
 }
 
+/// Decayed-serve results (the `decay` section of `BENCH_serve.json`).
+struct DecayData {
+    shards: usize,
+    /// (arm label, updates/s)
+    arms: Vec<(String, f64)>,
+}
+
 fn host_label() -> String {
     std::env::var("BENCH_HOST").unwrap_or_else(|_| "unknown".into())
 }
@@ -156,11 +166,12 @@ fn main() {
     run_sections(&mut rec);
     let serve = serve_throughput(&rec);
     let net = net_throughput(&rec);
+    let decay = decay_throughput(&rec);
 
     if json_mode {
         write_hotpath_json(&rec);
-        if serve.is_some() || net.is_some() {
-            write_serve_json(serve.as_ref(), net.as_ref());
+        if serve.is_some() || net.is_some() || decay.is_some() {
+            write_serve_json(serve.as_ref(), net.as_ref(), decay.as_ref());
         }
     }
     println!("done");
@@ -527,7 +538,9 @@ fn net_throughput(rec: &Recorder) -> Option<NetData> {
         .map(|_| {
             let mut text = String::new();
             for _ in 0..per_client {
-                text.push_str(&gen.next_update().to_line());
+                text.push_str(
+                    &gen.next_update().to_line().expect("generator updates always render"),
+                );
                 text.push('\n');
             }
             text
@@ -586,6 +599,63 @@ fn net_throughput(rec: &Recorder) -> Option<NetData> {
     Some(NetData { clients, shards, updates_per_s: rate })
 }
 
+/// `decay` section: absorb-mode serve throughput with the logical-clock
+/// decay mechanisms on — the cost of half-life floor-halving and window
+/// rotation boundaries (feeder masters + per-shard broadcasts) relative
+/// to plain absorb over the same replay. Lands in `BENCH_serve.json`.
+fn decay_throughput(rec: &Recorder) -> Option<DecayData> {
+    if !rec.runs("decay") {
+        return None;
+    }
+    use sparx::cluster::ClusterConfig;
+    use sparx::data::generators::GisetteGen;
+    use sparx::data::{StreamGen, UpdateTriple};
+    use sparx::sparx::{
+        DecaySpec, ServeOptions, ServedEnsemble, ShardedStreamScorer, SparxModel, SparxParams,
+    };
+    use std::sync::Arc;
+
+    let ctx = ClusterConfig { num_partitions: 4, ..Default::default() }.build();
+    let ld = GisetteGen { n: 1000, d: 64, ..Default::default() }.generate(&ctx).unwrap();
+    let model = SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 25, num_chains: 25, depth: 10, ..Default::default() },
+    )
+    .unwrap();
+    let mut gen = StreamGen::new(20_000, ld.dataset.schema.names.clone(), 0xBEEF);
+    let updates: Vec<UpdateTriple> = (0..100_000).map(|_| gen.next_update()).collect();
+    let (shards, cache_total) = (4usize, 16_384usize);
+    // 4096 puts dozens of boundaries inside the replay without making
+    // boundary work dominate — the realistic serving regime
+    let arms: [(&str, DecaySpec); 4] = [
+        ("absorb (no decay)", DecaySpec::default()),
+        ("half-life 4096", DecaySpec::new(4096, 0)),
+        ("window 4096", DecaySpec::new(0, 4096)),
+        ("half-life + window 4096", DecaySpec::new(4096, 4096)),
+    ];
+    let mut results = Vec::new();
+    for (label, decay) in arms {
+        let opts = ServeOptions { record: false, absorb: true, decay };
+        let ensemble = Arc::new(ServedEnsemble::new(&model).unwrap());
+        let mut scorer =
+            ShardedStreamScorer::from_ensemble(ensemble, shards, cache_total, opts, None)
+                .unwrap();
+        let replay = updates.clone();
+        let t0 = std::time::Instant::now();
+        for u in replay {
+            scorer.submit(u);
+        }
+        let processed = scorer.finish().processed();
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(processed, updates.len() as u64, "decay arm {label:?}: lost updates");
+        let rate = processed as f64 / dt.max(1e-9);
+        println!("serve decay S={shards} {label:<28} {rate:>10.0} updates/s");
+        results.push((label.to_string(), rate));
+    }
+    Some(DecayData { shards, arms: results })
+}
+
 // ------------------------------------------------------------- json I/O
 
 fn write_hotpath_json(rec: &Recorder) {
@@ -632,7 +702,7 @@ fn write_hotpath_json(rec: &Recorder) {
     println!("(wrote BENCH_hotpath.json)");
 }
 
-fn write_serve_json(serve: Option<&ServeData>, net: Option<&NetData>) {
+fn write_serve_json(serve: Option<&ServeData>, net: Option<&NetData>, decay: Option<&DecayData>) {
     let ladder: Vec<Json> = serve
         .map(|s| {
             s.ladder
@@ -664,6 +734,22 @@ fn write_serve_json(serve: Option<&ServeData>, net: Option<&NetData>) {
                 ("shards", Json::Num(n.shards as f64)),
                 ("updates_per_s", Json::Num(n.updates_per_s)),
             ]),
+        ));
+    }
+    if let Some(d) = decay {
+        let arms: Vec<Json> = d
+            .arms
+            .iter()
+            .map(|(label, rate)| {
+                Json::obj(vec![
+                    ("name", Json::Str(label.clone())),
+                    ("updates_per_s", Json::Num(*rate)),
+                ])
+            })
+            .collect();
+        fields.push((
+            "decay",
+            Json::obj(vec![("shards", Json::Num(d.shards as f64)), ("arms", Json::Arr(arms))]),
         ));
     }
     let doc = Json::obj(fields);
@@ -783,6 +869,19 @@ fn table(args: &[String]) -> i32 {
             let r = net.get("updates_per_s").and_then(Json::as_f64).unwrap_or(0.0);
             println!();
             println!("serve-over-TCP: {r:.0} updates/s ({c} clients, S={s})");
+        }
+        if let Some(decay) = doc.get("decay") {
+            let s = decay.get("shards").and_then(Json::as_usize).unwrap_or(0);
+            println!();
+            println!("**decayed serve** (S={s})");
+            println!();
+            println!("| arm | updates/s |");
+            println!("|---|---:|");
+            for e in decay.get("arms").map(Json::items).unwrap_or(&[]) {
+                let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+                let r = e.get("updates_per_s").and_then(Json::as_f64).unwrap_or(0.0);
+                println!("| {name} | {r:.0} |");
+            }
         }
         return 0;
     }

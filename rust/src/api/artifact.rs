@@ -72,9 +72,10 @@ pub const MAGIC: [u8; 4] = *b"SPRX";
 /// any other value is rejected with a typed error rather than guessing
 /// at the layout. v4 changes only the absorb-state checkpoint payload
 /// (global recency-tagged entries instead of per-shard snapshots — see
-/// [`crate::sparx::checkpoint`]); fitted-model blocks are byte-identical
-/// to v3.
-pub const FORMAT_VERSION: u16 = 4;
+/// [`crate::sparx::checkpoint`]); v5 appends the checkpoint's decay
+/// state (half-life/window schedule, prev window block, named queries).
+/// Fitted-model blocks are byte-identical to v3.
+pub const FORMAT_VERSION: u16 = 5;
 
 /// Name of the provenance extension block.
 const MANIFEST_BLOCK: &str = "manifest";

@@ -31,14 +31,51 @@ impl UpdateTriple {
     /// Render the triple in the serve-input line grammar
     /// ([`parse_update_line`] is the exact inverse — round trips are
     /// bit-identical, f64 `Display` being shortest-round-trip). What
-    /// `sparx generate --stream` writes. Feature and category names must
-    /// not contain whitespace or `->`; the synthetic generators never
-    /// produce such names.
-    pub fn to_line(&self) -> String {
+    /// `sparx generate --stream` writes.
+    ///
+    /// The line grammar cannot represent every `UpdateTriple`: a name
+    /// with whitespace would re-tokenize into extra fields, `->` inside
+    /// a categorical **old** value would move the old/new split (the
+    /// parser splits at the *first* arrow, so a `new` value containing
+    /// `->` is fine), and a non-finite δ would be rejected by the parser
+    /// outright. Rather than emit a line that parses back as something
+    /// else (or not at all), rendering such a triple fails typed
+    /// (`SparxError::InvalidParams`). The synthetic generators never
+    /// produce unrepresentable names, so their streams always render.
+    pub fn to_line(&self) -> crate::api::Result<String> {
+        let bad = |what: String| crate::api::SparxError::InvalidParams(format!(
+            "update triple for ID {} is not representable in the line grammar: {what}",
+            self.id()
+        ));
+        let check_token = |role: &str, tok: &str, reject_arrow: bool| {
+            if tok.is_empty() {
+                return Err(bad(format!("empty {role}")));
+            }
+            if tok.chars().any(char::is_whitespace) {
+                return Err(bad(format!("{role} {tok:?} contains whitespace")));
+            }
+            if reject_arrow && tok.contains("->") {
+                return Err(bad(format!("{role} {tok:?} contains `->`")));
+            }
+            Ok(())
+        };
         match self {
-            UpdateTriple::Num { id, feature, delta } => format!("{id} {feature} {delta}"),
+            UpdateTriple::Num { id, feature, delta } => {
+                check_token("feature", feature, false)?;
+                if !delta.is_finite() {
+                    return Err(bad(format!("non-finite δ {delta}")));
+                }
+                Ok(format!("{id} {feature} {delta}"))
+            }
             UpdateTriple::Cat { id, feature, old, new } => {
-                format!("{id} {feature} {}->{new}", old.as_deref().unwrap_or(""))
+                check_token("feature", feature, false)?;
+                if let Some(old) = old {
+                    check_token("old value", old, true)?;
+                }
+                // the parser splits old->new at the FIRST arrow, so an
+                // arrow inside `new` still re-parses to this triple
+                check_token("new value", new, false)?;
+                Ok(format!("{id} {feature} {}->{new}", old.as_deref().unwrap_or("")))
             }
         }
     }
@@ -241,7 +278,7 @@ mod tests {
         g.categorical_rate = 0.2;
         for i in 0..2000 {
             let u = g.next_update();
-            let line = u.to_line();
+            let line = u.to_line().unwrap();
             let back = parse_update_line(i + 1, &line).unwrap().unwrap_or_else(|| {
                 panic!("line {line:?} parsed as a comment/blank")
             });
@@ -250,13 +287,62 @@ mod tests {
         // hand-picked deltas that stress the float formatting
         for delta in [0.1, -0.0, 1e-12, 123456789.123456, f64::MIN_POSITIVE] {
             let u = UpdateTriple::Num { id: 1, feature: "f0".into(), delta };
-            let back = parse_update_line(1, &u.to_line()).unwrap().unwrap();
+            let back = parse_update_line(1, &u.to_line().unwrap()).unwrap().unwrap();
             match back {
                 UpdateTriple::Num { delta: d, .. } => {
                     assert_eq!(d.to_bits(), delta.to_bits(), "{delta} mangled");
                 }
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    /// Regression: `to_line` used to render hostile names verbatim, so a
+    /// `Cat` with `->` in `old` (or whitespace anywhere) produced a line
+    /// that parsed back as a *different* triple. Unrepresentable triples
+    /// now fail typed instead of silently corrupting the stream.
+    #[test]
+    fn to_line_rejects_unrepresentable_triples_typed() {
+        use crate::api::SparxError;
+        let cat = |old: Option<&str>, new: &str| UpdateTriple::Cat {
+            id: 9,
+            feature: "loc".into(),
+            old: old.map(String::from),
+            new: new.into(),
+        };
+        let hostile: Vec<UpdateTriple> = vec![
+            UpdateTriple::Num { id: 1, feature: "two words".into(), delta: 1.0 },
+            UpdateTriple::Num { id: 1, feature: "".into(), delta: 1.0 },
+            UpdateTriple::Num { id: 1, feature: "f0".into(), delta: f64::NAN },
+            UpdateTriple::Num { id: 1, feature: "f0".into(), delta: f64::INFINITY },
+            cat(Some("a->b"), "c"), // arrow in old moves the split
+            cat(Some("New York"), "SF"),
+            cat(Some("NYC"), "San Francisco"),
+            cat(Some(""), "SF"), // would re-parse as old = None
+            cat(None, ""),
+            UpdateTriple::Cat { id: 9, feature: "lo c".into(), old: None, new: "SF".into() },
+        ];
+        for u in hostile {
+            match u.to_line() {
+                Err(SparxError::InvalidParams(msg)) => {
+                    assert!(msg.contains("not representable"), "{u:?}: {msg:?}");
+                }
+                other => panic!("{u:?} must fail typed, got {other:?}"),
+            }
+        }
+        // every representable triple still round-trips bit-identically
+        let fine = [
+            UpdateTriple::Num { id: 1, feature: "f-0.v2".into(), delta: -3.25 },
+            cat(None, "SF"),
+            cat(Some("-"), "a-b"), // `-` is fine; only the `->` digraph splits
+            // an arrow in `new` is representable: the parser splits at
+            // the FIRST arrow, so `NYC->a->b` re-parses to exactly this
+            cat(Some("NYC"), "a->b"),
+            cat(None, "a->b"),
+        ];
+        for u in fine {
+            let back = parse_update_line(1, &u.to_line().unwrap()).unwrap().unwrap();
+            assert_eq!(u, back);
         }
     }
 

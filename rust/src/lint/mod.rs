@@ -41,6 +41,7 @@ const NO_PANIC_PATHS: &[&str] = &[
     "api/registry.rs",
     "util/codec.rs",
     "sparx/checkpoint.rs",
+    "sparx/decay.rs",
     "sparx/sharded.rs",
     "serve/",
     "main.rs",

@@ -95,7 +95,8 @@ use sparx::experiments::{self, align_scores};
 use sparx::metrics::{RankMetrics, ResourceReport};
 use sparx::runtime::{ArtifactManifest, PjrtEngine};
 use sparx::sparx::{
-    AbsorbCheckpoint, ExecMode, ServeOptions, ShardedStreamScorer, StreamScore, SwapCarry,
+    AbsorbCheckpoint, DecaySpec, ExecMode, ServeOptions, ShardedStreamScorer, StreamScore,
+    SwapCarry,
 };
 use sparx::util::closest_match;
 use sparx::ClusterContext;
@@ -636,6 +637,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
             "resume",
             "watch",
             "absorb",
+            "half-life",
+            "window",
             "listen",
             "score-log",
         ],
@@ -688,6 +691,26 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
     } else {
         resume.as_ref().map(|c| c.absorb).unwrap_or(false)
     };
+    // the decay schedule follows the same adoption rule: unflagged
+    // --half-life/--window continue the checkpoint's schedule, an
+    // explicit mismatch is rejected typed (a schedule change mid-stream
+    // would silently diverge the decayed score sequence)
+    let half_life = if flags.contains_key("half-life") {
+        flag_or(flags, "half-life", 0u64)?
+    } else {
+        resume.as_ref().map(|c| c.half_life).unwrap_or(0)
+    };
+    let window = if flags.contains_key("window") {
+        flag_or(flags, "window", 0u64)?
+    } else {
+        resume.as_ref().map(|c| c.window).unwrap_or(0)
+    };
+    let decay = DecaySpec::new(half_life, window);
+    if decay.enabled() && !absorb {
+        return Err(usage_err(
+            "--half-life/--window decay absorbed counts: add --absorb".into(),
+        ));
+    }
     let watch = flag_bool(flags, "watch")?;
     let score_log = flags.get("score-log").cloned();
     let ckpt_out = flags.get("checkpoint-out").cloned();
@@ -759,7 +782,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         ensemble.resident_bytes(),
         ensemble.model_fingerprint()
     ));
-    let opts = ServeOptions { record: score_log.is_some(), absorb };
+    let opts = ServeOptions { record: score_log.is_some(), absorb, decay };
     let mut scorer =
         ShardedStreamScorer::from_ensemble(ensemble, shards, cache, opts, resume.as_ref())?;
     let resumed_offset = resume.as_ref().map(|c| c.submitted).unwrap_or(0);
@@ -947,7 +970,9 @@ fn cmd_generate(flags: &HashMap<String, String>) -> CliResult {
         use std::io::Write;
         let mut f = std::io::BufWriter::new(std::fs::File::create(&out)?);
         for _ in 0..n {
-            writeln!(f, "{}", gen.next_update().to_line())?;
+            // generator names are `f{j}` — always representable, but the
+            // grammar check is typed now, so thread the error through
+            writeln!(f, "{}", gen.next_update().to_line()?)?;
         }
         f.flush()?;
         println!("wrote {n} update triples to {out}");

@@ -2,14 +2,29 @@
 //! outlying*. Ties are handled properly (mid-rank for AUROC, grouped
 //! thresholds for AUPRC/F1), which matters because CMS counts are integers
 //! and produce heavily tied score distributions.
+//!
+//! **NaN policy:** a NaN score has no place in a ranking — `partial_cmp`
+//! returns `None` against everything, so a comparison-sort's result (and
+//! therefore the metric) would depend on the *input order* of the
+//! unaffected points. [`auroc`] and [`auprc`] instead return `NaN`
+//! whenever any score is NaN, matching the degenerate single-class
+//! convention: the metric is undefined, deterministically, rather than
+//! silently order-dependent. (±∞ is fine — infinities order totally.)
+
+/// True if any score is NaN, in which case the ranking metrics are
+/// undefined (see the module NaN policy).
+fn any_nan(scores: &[f64]) -> bool {
+    scores.iter().any(|s| s.is_nan())
+}
 
 /// Area under the ROC curve via the Mann–Whitney U statistic with
-/// mid-ranks for ties. O(n log n).
+/// mid-ranks for ties. O(n log n). Returns NaN for single-class labels
+/// or any NaN score.
 pub fn auroc(scores: &[f64], labels: &[bool]) -> f64 {
     assert_eq!(scores.len(), labels.len());
     let n_pos = labels.iter().filter(|&&l| l).count();
     let n_neg = labels.len() - n_pos;
-    if n_pos == 0 || n_neg == 0 {
+    if n_pos == 0 || n_neg == 0 || any_nan(scores) {
         return f64::NAN;
     }
     let mut order: Vec<usize> = (0..scores.len()).collect();
@@ -35,11 +50,12 @@ pub fn auroc(scores: &[f64], labels: &[bool]) -> f64 {
 }
 
 /// Area under the precision-recall curve (step-wise interpolation, the
-/// `sklearn.metrics.average_precision_score` definition).
+/// `sklearn.metrics.average_precision_score` definition). Returns NaN
+/// when there are no positives or any score is NaN.
 pub fn auprc(scores: &[f64], labels: &[bool]) -> f64 {
     assert_eq!(scores.len(), labels.len());
     let n_pos = labels.iter().filter(|&&l| l).count();
-    if n_pos == 0 {
+    if n_pos == 0 || any_nan(scores) {
         return f64::NAN;
     }
     let mut order: Vec<usize> = (0..scores.len()).collect();
@@ -211,5 +227,28 @@ mod tests {
     fn degenerate_all_one_class() {
         assert!(auroc(&[1.0, 2.0], &[true, true]).is_nan());
         assert!(auprc(&[1.0, 2.0], &[false, false]).is_nan());
+    }
+
+    /// Regression: a NaN score used to make both metrics depend on the
+    /// input order of the *other* points (`partial_cmp(..).unwrap_or(
+    /// Equal)` leaves the comparison-sort order-dependent). The policy
+    /// is now: any NaN score → the metric itself is NaN, regardless of
+    /// where the NaN sits.
+    #[test]
+    fn nan_scores_yield_nan_not_an_order_dependent_ranking() {
+        let labels = [true, false, true, false, true];
+        // the same multiset of scores with the NaN at every position
+        for at in 0..5 {
+            let mut scores = [4.0, 3.0, 2.0, 1.0, 0.5];
+            scores[at] = f64::NAN;
+            assert!(auroc(&scores, &labels).is_nan(), "NaN at {at}");
+            assert!(auprc(&scores, &labels).is_nan(), "NaN at {at}");
+        }
+        // infinities still rank totally — no NaN involved, defined result
+        let scores = [f64::INFINITY, 1.0, 0.0, f64::NEG_INFINITY, 2.0];
+        assert!(!auroc(&scores, &labels).is_nan());
+        assert!(!auprc(&scores, &labels).is_nan());
+        // and a clean ranking is unaffected by the guard
+        assert_eq!(auroc(&[0.9, 0.1], &[true, false]), 1.0);
     }
 }

@@ -26,7 +26,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::sparx::sharded::ShardReply;
 
-use super::server::{lock, metrics_text, stats_json, Shared};
+use super::server::{lock, metrics_text, queries_json, stats_json, Shared};
 use super::wire::{parse_request, Request, MAX_LINE_BYTES};
 
 /// Max unwritten replies per connection before the reader stops pulling
@@ -116,6 +116,12 @@ fn writer_loop(rx: Receiver<ShardReply>, sock: Arc<Mutex<TcpStream>>, window: Ar
                     format!("SCORE {id} {:016x}", x.to_bits())
                 }
                 ShardReply::Query { id, score: None } => format!("UNKNOWN {id}"),
+                ShardReply::QueryNamed { id, name, score: Some(x) } => {
+                    format!("SCORE {id} {name} {:016x}", x.to_bits())
+                }
+                ShardReply::QueryNamed { id, name, score: None } => {
+                    format!("UNKNOWN {id} {name}")
+                }
             };
             if !write_line(&sock, &line) {
                 alive = false;
@@ -264,6 +270,42 @@ pub(crate) fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
                         window.complete();
                         alive &= write_line(&sock, &format!("ERR {e}"));
                     }
+                }
+                Request::ScoreNamed(id, name) => {
+                    if !window.acquire() {
+                        break 'read;
+                    }
+                    if let Err(e) = lock(&shared.engine).query_named(id, &name, reply_tx.clone())
+                    {
+                        window.complete();
+                        alive &= write_line(&sock, &format!("ERR {e}"));
+                    }
+                }
+                Request::QueryAdd { name, half_life, window: win } => {
+                    // registration is feeder-side bookkeeping under the
+                    // engine lock; it never forces an epoch publish, so
+                    // the primary score sequence is unaffected
+                    let line = match lock(&shared.engine).query_add(&name, half_life, win) {
+                        Ok(()) => format!("OK query {name}"),
+                        Err(e) => format!("ERR {e}"),
+                    };
+                    alive &= write_line(&sock, &line);
+                }
+                Request::QueryDrop(name) => {
+                    let line = match lock(&shared.engine).query_drop(&name) {
+                        Ok(()) => format!("OK query {name}"),
+                        Err(e) => format!("ERR {e}"),
+                    };
+                    alive &= write_line(&sock, &line);
+                }
+                Request::QueryList => {
+                    let line = match lock(&shared.engine).query_list() {
+                        Ok(queries) => {
+                            format!("QUERIES {{\"queries\":{}}}", queries_json(&queries))
+                        }
+                        Err(e) => format!("ERR {e}"),
+                    };
+                    alive &= write_line(&sock, &line);
                 }
                 Request::Stats => {
                     let line = match lock(&shared.engine).stats() {

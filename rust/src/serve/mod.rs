@@ -11,10 +11,10 @@
 //!
 //! * **Ingress** — each accepted socket gets a reader thread (line
 //!   framing with an 8 KiB cap, [`wire`] grammar: the exact
-//!   `parse_update_line` data lines plus the `SCORE` / `STATS` /
-//!   `METRICS` / `CHECKPOINT` / `RESHARD` / `QUIT` / `SHUTDOWN` control
-//!   verbs) and a writer thread draining that connection's reply
-//!   channel.
+//!   `parse_update_line` data lines plus the `SCORE` / `QUERY
+//!   ADD|DROP|LIST` / `STATS` / `METRICS` / `CHECKPOINT` / `RESHARD` /
+//!   `QUIT` / `SHUTDOWN` control verbs) and a writer thread draining
+//!   that connection's reply channel.
 //! * **Ordering** — submit sequence numbers are assigned under the one
 //!   [`Engine`] mutex, so the global stream order is as well-defined
 //!   under N concurrent clients as under one stdin reader; per-ID
@@ -28,8 +28,14 @@
 //! * **Elasticity** — `RESHARD N` runs the scorer's drain-to-barrier →
 //!   snapshot → re-partition → respawn under the engine lock, between
 //!   batches, dropping nothing; `CHECKPOINT` cuts the layout-independent
-//!   v4 absorb checkpoint, so a later `serve --resume` may pick any
-//!   `--shards`/`--cache` and continue bit-identically.
+//!   v5 absorb checkpoint (decay blocks and named queries included),
+//!   so a later `serve --resume` may pick any `--shards`/`--cache` and
+//!   continue bit-identically.
+//! * **Multi-query** — `QUERY ADD <name> <half-life> <window>` registers
+//!   a named decayed/windowed view over the same ingest stream; `SCORE
+//!   <id> <name>` probes it and `QUERY LIST` dumps per-query counters.
+//!   Registration is feeder-side only and never moves the primary score
+//!   sequence (see [`crate::sparx::decay`]).
 //! * **Shutdown** — `SHUTDOWN` drains its own connection, trips the
 //!   server latch and wakes the accept loop; remaining sockets are
 //!   closed, their connections drained, and [`Server::run`] hands the
@@ -43,5 +49,5 @@ mod server;
 pub mod wire;
 
 pub use conn::PENDING_WINDOW;
-pub use server::{metrics_text, stats_json, Engine, Server};
+pub use server::{metrics_text, queries_json, stats_json, Engine, Server};
 pub use wire::{parse_request, Request, MAX_LINE_BYTES};

@@ -24,7 +24,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::api::{Result, SparxError};
 use crate::data::UpdateTriple;
-use crate::sparx::sharded::{ReplySink, ShardedStats, ShardedStreamScorer, WouldBlock};
+use crate::sparx::sharded::{QueryInfo, ReplySink, ShardedStats, ShardedStreamScorer, WouldBlock};
 
 use super::conn::handle_conn;
 
@@ -88,6 +88,26 @@ impl Engine {
         Ok(())
     }
 
+    /// Score probe against a named query (`SCORE <id> <name>`).
+    pub fn query_named(&mut self, id: u64, name: &str, reply: ReplySink) -> Result<()> {
+        self.scorer_mut()?.score_named(id, name, reply)
+    }
+
+    /// Register a named `(half-life, window)` query (`QUERY ADD`).
+    pub fn query_add(&mut self, name: &str, half_life: u64, window: u64) -> Result<()> {
+        self.scorer_mut()?.query_add(name, half_life, window)
+    }
+
+    /// Drop a named query and its blocks (`QUERY DROP`).
+    pub fn query_drop(&mut self, name: &str) -> Result<()> {
+        self.scorer_mut()?.query_drop(name)
+    }
+
+    /// Snapshot of the registered queries (`QUERY LIST`).
+    pub fn query_list(&mut self) -> Result<Vec<QueryInfo>> {
+        Ok(self.scorer_mut()?.query_list())
+    }
+
     /// Live counters (the `STATS`/`METRICS` verbs).
     pub fn stats(&mut self) -> Result<ShardedStats> {
         self.scorer_mut()?.stats()
@@ -123,14 +143,32 @@ impl Engine {
     }
 }
 
+/// Render the registered queries as one JSON array (shared by the
+/// `STATS` and `QUERY LIST` renderings). Query names are
+/// `[A-Za-z0-9._-]` by construction, so no JSON escaping is needed.
+pub fn queries_json(queries: &[QueryInfo]) -> String {
+    let items: Vec<String> = queries
+        .iter()
+        .map(|q| {
+            format!(
+                "{{\"name\":\"{}\",\"half_life\":{},\"window\":{},\"scored\":{}}}",
+                q.name, q.half_life, q.window, q.scored
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
 /// Render live stats as the single-line JSON the `STATS` verb returns:
 /// the merged [`ShardedStats`] counters plus the resident-byte
-/// accounting. Key order is fixed — the line is meant to be parsed.
+/// accounting and the registered queries. Key order is fixed — the line
+/// is meant to be parsed.
 pub fn stats_json(stats: &ShardedStats) -> String {
     format!(
         "{{\"shards\":{},\"submitted\":{},\"processed\":{},\"admitted\":{},\
          \"evictions\":{},\"absorbed\":{},\"resident_ids\":{},\
-         \"resident_ensemble_bytes\":{},\"resident_sketch_bytes\":{},\"resident_bytes\":{}}}",
+         \"resident_ensemble_bytes\":{},\"resident_sketch_bytes\":{},\"resident_bytes\":{},\
+         \"queries\":{}}}",
         stats.shards.len(),
         stats.submitted,
         stats.processed(),
@@ -141,6 +179,7 @@ pub fn stats_json(stats: &ShardedStats) -> String {
         stats.resident_ensemble_bytes,
         stats.resident_sketch_bytes,
         stats.resident_bytes(),
+        queries_json(&stats.queries),
     )
 }
 
@@ -171,6 +210,19 @@ pub fn metrics_text(stats: &ShardedStats) -> String {
         "resident bytes (shared ensemble + sketches)",
         stats.resident_bytes() as u64,
     );
+    gauge("sparx_queries", "registered named queries", stats.queries.len() as u64);
+    if !stats.queries.is_empty() {
+        out.push_str(
+            "# HELP sparx_query_scored_total named-query score probes served\n\
+             # TYPE sparx_query_scored_total counter\n",
+        );
+        for q in &stats.queries {
+            out.push_str(&format!(
+                "sparx_query_scored_total{{query=\"{}\"}} {}\n",
+                q.name, q.scored
+            ));
+        }
+    }
     out.push_str("# EOF\n");
     out
 }
@@ -303,6 +355,10 @@ mod tests {
             resident_ids: 28,
             resident_ensemble_bytes: 1000,
             resident_sketch_bytes: 28 * 8 * 4,
+            queries: vec![
+                QueryInfo { name: "decayed.1k".into(), half_life: 1024, window: 0, scored: 7 },
+                QueryInfo { name: "w-256".into(), half_life: 0, window: 256, scored: 0 },
+            ],
         }
     }
 
@@ -318,6 +374,21 @@ mod tests {
         assert_eq!(
             v.get("resident_bytes").and_then(|j| j.as_f64()),
             Some((1000 + 28 * 8 * 4) as f64)
+        );
+        // the queries array rides along, in registration order
+        assert!(line.contains(
+            "\"queries\":[{\"name\":\"decayed.1k\",\"half_life\":1024,\"window\":0,\"scored\":7}"
+        ));
+        assert!(line.contains("{\"name\":\"w-256\",\"half_life\":0,\"window\":256,\"scored\":0}"));
+    }
+
+    #[test]
+    fn queries_json_renders_empty_and_populated() {
+        assert_eq!(queries_json(&[]), "[]");
+        let one = [QueryInfo { name: "q".into(), half_life: 4, window: 8, scored: 2 }];
+        assert_eq!(
+            queries_json(&one),
+            "[{\"name\":\"q\",\"half_life\":4,\"window\":8,\"scored\":2}]"
         );
     }
 
@@ -336,6 +407,10 @@ mod tests {
         }
         assert!(text.contains("sparx_submitted_total 50\n"));
         assert!(text.contains("sparx_shards 2\n"));
+        // per-query labeled counters
+        assert!(text.contains("sparx_queries 2\n"));
+        assert!(text.contains("sparx_query_scored_total{query=\"decayed.1k\"} 7\n"));
+        assert!(text.contains("sparx_query_scored_total{query=\"w-256\"} 0\n"));
     }
 
     #[test]

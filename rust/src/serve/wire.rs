@@ -9,15 +9,25 @@
 //! keyword, so neither grammar can shadow the other.
 //!
 //! ```text
-//! SCORE <id>     → SCORE <id> <score-bits-hex> | UNKNOWN <id>
-//! STATS          → STATS {…one JSON line…}
-//! METRICS        → text-format metrics dump, terminated by `# EOF`
-//! CHECKPOINT     → OK checkpoint <submitted>
-//! RESHARD <n>    → OK reshard <n>
-//! QUIT           → OK bye, server closes this connection
-//! SHUTDOWN       → OK shutdown, server stops accepting and exits
-//! <update line>  → OK <id> <score-bits-hex>   (or BUSY <id>)
+//! SCORE <id>                → SCORE <id> <score-bits-hex> | UNKNOWN <id>
+//! SCORE <id> <name>         → SCORE <id> <name> <score-bits-hex> | UNKNOWN <id> <name>
+//! QUERY ADD <name> <hl> <w> → OK query <name>
+//! QUERY DROP <name>         → OK query <name>
+//! QUERY LIST                → QUERIES {…one JSON line…}
+//! STATS                     → STATS {…one JSON line…}
+//! METRICS                   → text-format metrics dump, terminated by `# EOF`
+//! CHECKPOINT                → OK checkpoint <submitted>
+//! RESHARD <n>               → OK reshard <n>
+//! QUIT                      → OK bye, server closes this connection
+//! SHUTDOWN                  → OK shutdown, server stops accepting and exits
+//! <update line>             → OK <id> <score-bits-hex>   (or BUSY <id>)
 //! ```
+//!
+//! `QUERY ADD` registers a named `(half-life, window)` view evaluated
+//! over the same ingest stream (see [`crate::sparx::decay`]); `SCORE
+//! <id> <name>` probes it. Query names are validated by
+//! [`validate_query_name`] — one `[A-Za-z0-9._-]` token, so every name
+//! round-trips the whitespace-tokenized grammar without escaping.
 //!
 //! Malformed lines answer `ERR <reason>` and the connection stays open;
 //! lines longer than [`MAX_LINE_BYTES`] are rejected typed the same way
@@ -27,6 +37,7 @@
 
 use crate::api::{Result, SparxError};
 use crate::data::{parse_update_line, UpdateTriple};
+use crate::sparx::decay::validate_query_name;
 
 /// Hard cap on one request line (bytes, excluding the `\n`). A line that
 /// exceeds it is rejected with a typed `ERR` — never silently truncated,
@@ -40,6 +51,14 @@ pub enum Request {
     Update(UpdateTriple),
     /// Read-only score probe for a resident ID.
     Score(u64),
+    /// Score probe against a named query's decayed/windowed overlay.
+    ScoreNamed(u64, String),
+    /// Register a named `(half-life, window)` query over the stream.
+    QueryAdd { name: String, half_life: u64, window: u64 },
+    /// Drop a named query and its accumulated blocks.
+    QueryDrop(String),
+    /// One-line JSON dump of the registered queries.
+    QueryList,
     /// One-line JSON counter dump.
     Stats,
     /// Text-format metrics dump (`# EOF` terminated).
@@ -65,32 +84,43 @@ pub fn parse_request(lineno: usize, line: &str) -> Result<Option<Request>> {
     let bad = |what: String| {
         SparxError::InvalidParams(format!("request line {lineno}: {what}"))
     };
-    let mut tok = line.split_whitespace();
-    let Some(verb) = tok.next() else {
-        return Ok(None);
-    };
-    let arg = tok.next();
-    let extra = tok.next();
-    match verb {
-        "SCORE" => {
-            if extra.is_some() {
-                return Err(bad("SCORE takes exactly one argument (the ID)".into()));
-            }
-            let Some(id_tok) = arg else {
-                return Err(bad("SCORE needs an ID argument".into()));
-            };
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    match toks.as_slice() {
+        ["SCORE", id_tok] => {
             let id: u64 = id_tok
                 .parse()
                 .map_err(|_| bad(format!("SCORE: bad ID {id_tok:?}")))?;
             Ok(Some(Request::Score(id)))
         }
-        "RESHARD" => {
-            if extra.is_some() {
-                return Err(bad("RESHARD takes exactly one argument (the shard count)".into()));
-            }
-            let Some(n_tok) = arg else {
-                return Err(bad("RESHARD needs a shard count argument".into()));
-            };
+        ["SCORE", id_tok, name] => {
+            let id: u64 = id_tok
+                .parse()
+                .map_err(|_| bad(format!("SCORE: bad ID {id_tok:?}")))?;
+            validate_query_name(name).map_err(|e| bad(format!("SCORE: {e}")))?;
+            Ok(Some(Request::ScoreNamed(id, name.to_string())))
+        }
+        ["SCORE", ..] => {
+            Err(bad("SCORE takes an ID and optionally one query name".into()))
+        }
+        ["QUERY", "ADD", name, hl_tok, w_tok] => {
+            validate_query_name(name).map_err(|e| bad(format!("QUERY ADD: {e}")))?;
+            let half_life: u64 = hl_tok
+                .parse()
+                .map_err(|_| bad(format!("QUERY ADD: bad half-life {hl_tok:?}")))?;
+            let window: u64 = w_tok
+                .parse()
+                .map_err(|_| bad(format!("QUERY ADD: bad window {w_tok:?}")))?;
+            Ok(Some(Request::QueryAdd { name: name.to_string(), half_life, window }))
+        }
+        ["QUERY", "DROP", name] => {
+            validate_query_name(name).map_err(|e| bad(format!("QUERY DROP: {e}")))?;
+            Ok(Some(Request::QueryDrop(name.to_string())))
+        }
+        ["QUERY", "LIST"] => Ok(Some(Request::QueryList)),
+        ["QUERY", ..] => Err(bad(
+            "QUERY subverbs: ADD <name> <half-life> <window> | DROP <name> | LIST".into(),
+        )),
+        ["RESHARD", n_tok] => {
             let n: usize = n_tok
                 .parse()
                 .map_err(|_| bad(format!("RESHARD: bad shard count {n_tok:?}")))?;
@@ -99,11 +129,14 @@ pub fn parse_request(lineno: usize, line: &str) -> Result<Option<Request>> {
             }
             Ok(Some(Request::Reshard(n)))
         }
-        "STATS" | "METRICS" | "CHECKPOINT" | "QUIT" | "SHUTDOWN" => {
-            if arg.is_some() {
+        ["RESHARD", ..] => {
+            Err(bad("RESHARD takes exactly one argument (the shard count)".into()))
+        }
+        [verb @ ("STATS" | "METRICS" | "CHECKPOINT" | "QUIT" | "SHUTDOWN"), rest @ ..] => {
+            if !rest.is_empty() {
                 return Err(bad(format!("{verb} takes no arguments")));
             }
-            Ok(Some(match verb {
+            Ok(Some(match *verb {
                 "STATS" => Request::Stats,
                 "METRICS" => Request::Metrics,
                 "CHECKPOINT" => Request::Checkpoint,
@@ -137,6 +170,23 @@ mod tests {
     }
 
     #[test]
+    fn query_verbs_parse() {
+        assert_eq!(
+            parse_request(1, "SCORE 42 decayed.1k").unwrap(),
+            Some(Request::ScoreNamed(42, "decayed.1k".into()))
+        );
+        assert_eq!(
+            parse_request(1, "QUERY ADD w-256 0 256").unwrap(),
+            Some(Request::QueryAdd { name: "w-256".into(), half_life: 0, window: 256 })
+        );
+        assert_eq!(
+            parse_request(1, "QUERY DROP w-256").unwrap(),
+            Some(Request::QueryDrop("w-256".into()))
+        );
+        assert_eq!(parse_request(1, "QUERY LIST").unwrap(), Some(Request::QueryList));
+    }
+
+    #[test]
     fn update_lines_delegate_to_the_stream_grammar() {
         match parse_request(3, "42 bytes_sent 1.5").unwrap() {
             Some(Request::Update(UpdateTriple::Num { id, feature, delta })) => {
@@ -160,18 +210,30 @@ mod tests {
     #[test]
     fn malformed_lines_fail_typed_with_line_number() {
         for (lineno, line) in [
-            (1, "SCORE"),              // missing argument
-            (2, "SCORE notanid"),      // bad ID
-            (3, "SCORE 1 2"),          // extra argument
-            (4, "RESHARD"),            // missing count
-            (5, "RESHARD zero"),       // bad count
-            (6, "RESHARD 0"),          // degenerate count
-            (7, "STATS now"),          // verb with stray argument
-            (8, "QUIT loudly"),        // likewise
-            (9, "SHUTDOWN -f"),        // likewise
-            (10, "score 42"),          // verbs are case-sensitive → bad update ID
-            (11, "42 f0"),             // short update line
-            (12, "42 f0 NaN"),         // sketch-poisoning δ
+            (1, "SCORE"),               // missing argument
+            (2, "SCORE notanid"),       // bad ID
+            (3, "SCORE 1 2 3"),         // too many arguments
+            (4, "RESHARD"),             // missing count
+            (5, "RESHARD zero"),        // bad count
+            (6, "RESHARD 0"),           // degenerate count
+            (7, "STATS now"),           // verb with stray argument
+            (8, "QUIT loudly"),         // likewise
+            (9, "SHUTDOWN -f"),         // likewise
+            (10, "score 42"),           // verbs are case-sensitive → bad update ID
+            (11, "42 f0"),              // short update line
+            (12, "42 f0 NaN"),          // sketch-poisoning δ
+            (13, "SCORE 1 bad name"),   // ScoreNamed arity (name can't have spaces)
+            (14, "SCORE 1 emoji✓"),     // hostile query name
+            (15, "QUERY"),              // bare QUERY
+            (16, "QUERY ADD"),          // missing everything
+            (17, "QUERY ADD q 4"),      // missing window
+            (18, "QUERY ADD q x 4"),    // bad half-life
+            (19, "QUERY ADD q 4 y"),    // bad window
+            (20, "QUERY ADD a->b 4 4"), // hostile name
+            (21, "QUERY DROP"),         // missing name
+            (22, "QUERY DROP a b"),     // extra token
+            (23, "QUERY LIST all"),     // extra token
+            (24, "QUERY FROB q"),       // unknown subverb
         ] {
             match parse_request(lineno, line) {
                 Err(SparxError::InvalidParams(msg)) => {
@@ -192,5 +254,11 @@ mod tests {
             parse_request(1, "100 SCORE 1.0").unwrap(),
             Some(Request::Update(_))
         ));
+        // and a query name that happens to be numeric still parses as
+        // ScoreNamed — the verb position disambiguates
+        assert_eq!(
+            parse_request(2, "SCORE 1 7").unwrap(),
+            Some(Request::ScoreNamed(1, "7".into()))
+        );
     }
 }

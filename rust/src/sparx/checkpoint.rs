@@ -39,11 +39,27 @@
 //! preserved entry-for-entry, so even eviction timing reproduces.
 //! Corrupt, truncated or schema-mismatched checkpoint files fail typed
 //! (never panic), like every other artifact read in the crate.
+//!
+//! ## Format v5: decay schedules, the `prev` window block, named queries
+//!
+//! v5 appends the time-decay serving state (see [`super::decay`]):
+//!
+//! * the capture-time `half_life` / `window` schedule (params block) —
+//!   resume must run the same schedule or the continued scores diverge,
+//!   so a mismatch is rejected typed like an absorb-mode mismatch;
+//! * the rotated **previous window** overlay (all-empty until the first
+//!   rotation);
+//! * every registered named query: its schedule, `scored` counter and
+//!   both overlay blocks.
+//!
+//! v4 files (and converted v≤3 ones) load with the decay state
+//! defaulted — no schedule, empty `prev`, no queries.
 
 use crate::api::artifact::{block_err, ModelArtifact};
 use crate::api::{Result, SparxError};
 use crate::util::codec::{CodecResult, Decoder, Encoder};
 
+use super::decay::{DecaySpec, MAX_QUERIES, MAX_QUERY_NAME};
 use super::stream::ServedEnsemble;
 
 /// Detector-name tag that marks an artifact file as an absorb-state
@@ -76,8 +92,24 @@ impl AbsorbSnapshot {
     }
 }
 
-/// The durable serving state (format v4): pinned to one model by
-/// fingerprint, independent of the shard layout by construction.
+/// One named query's persisted state (v5 payload element) — the durable
+/// form of [`super::decay::QueryState`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryRecord {
+    pub name: String,
+    pub half_life: u64,
+    pub window: u64,
+    /// Named-score probes served so far.
+    pub scored: u64,
+    /// Live block, per chain-major level, sorted by bucket.
+    pub cur: Vec<Vec<(u32, u32)>>,
+    /// Previous window block, same layout.
+    pub prev: Vec<Vec<(u32, u32)>>,
+}
+
+/// The durable serving state (format v5; v4 loads with decay state
+/// defaulted): pinned to one model by fingerprint, independent of the
+/// shard layout by construction.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AbsorbCheckpoint {
     /// `ServedEnsemble::model_fingerprint` of the served model — resume
@@ -101,6 +133,12 @@ pub struct AbsorbCheckpoint {
     /// Resume must match: an absorb-mode mismatch silently diverges the
     /// continued stream, so it is rejected typed.
     pub absorb: bool,
+    /// The capture-time `--half-life` period (0 = off). Resume adopts it
+    /// when unflagged; an explicit mismatch is rejected typed, like an
+    /// absorb-mode mismatch.
+    pub half_life: u64,
+    /// The capture-time `--window` period (0 = off); same resume rules.
+    pub window: u64,
     // serving-schema summary, duplicated from the ensemble so mismatch
     // errors can name shapes without loading the model
     pub k: usize,
@@ -122,6 +160,12 @@ pub struct AbsorbCheckpoint {
     /// Absorbed-but-unpublished increments (mid-epoch state), merged
     /// across shards, per chain-major level, sorted by bucket.
     pub pending: Vec<Vec<(u32, u32)>>,
+    /// The rotated previous-window overlay (empty for v≤4 files and
+    /// until the first rotation), per chain-major level.
+    pub prev_visible: Vec<Vec<(u32, u32)>>,
+    /// Registered named queries, in registration order (empty for v≤4
+    /// files).
+    pub queries: Vec<QueryRecord>,
 }
 
 impl AbsorbCheckpoint {
@@ -133,6 +177,7 @@ impl AbsorbCheckpoint {
         cache_total: u64,
         submitted: u64,
         absorb: bool,
+        decay: DecaySpec,
     ) -> AbsorbCheckpoint {
         AbsorbCheckpoint {
             model_fingerprint: ens.model_fingerprint(),
@@ -141,6 +186,8 @@ impl AbsorbCheckpoint {
             cache_total,
             submitted,
             absorb,
+            half_life: decay.half_life,
+            window: decay.window,
             k: ens.k(),
             depth: ens.depth(),
             num_chains: ens.num_chains(),
@@ -152,6 +199,8 @@ impl AbsorbCheckpoint {
             entries: Vec::new(),
             visible: Vec::new(),
             pending: Vec::new(),
+            prev_visible: Vec::new(),
+            queries: Vec::new(),
         }
     }
 
@@ -160,11 +209,17 @@ impl AbsorbCheckpoint {
         self.evicted + self.entries.len() as u64
     }
 
+    /// The capture-time decay schedule (what unflagged resume adopts).
+    pub fn decay(&self) -> DecaySpec {
+        DecaySpec::new(self.half_life, self.window)
+    }
+
     /// Typed pre-restore validation against a live ensemble and serve
     /// configuration. From v4 on only what genuinely breaks bit-identity
-    /// is checked: the model fingerprint and the absorb mode. Shard
-    /// count and cache budget may change freely on resume.
-    pub fn validate_for(&self, ens: &ServedEnsemble, absorb: bool) -> Result<()> {
+    /// is checked: the model fingerprint, the absorb mode and (v5) the
+    /// decay schedule. Shard count and cache budget may change freely on
+    /// resume.
+    pub fn validate_for(&self, ens: &ServedEnsemble, absorb: bool, decay: DecaySpec) -> Result<()> {
         if self.model_fingerprint != ens.model_fingerprint() {
             return Err(SparxError::InvalidParams(format!(
                 "checkpoint was taken against a different model \
@@ -182,6 +237,14 @@ impl AbsorbCheckpoint {
                 if self.absorb { "on" } else { "off" },
                 if absorb { "on" } else { "off" },
                 if self.absorb { "pass" } else { "drop" }
+            )));
+        }
+        if self.decay() != decay {
+            return Err(SparxError::InvalidParams(format!(
+                "checkpoint was taken with half-life {} / window {} but serve is configured \
+                 with half-life {} / window {}; a schedule mismatch silently diverges the \
+                 continued stream — omit the flags to adopt the checkpoint's schedule",
+                self.half_life, self.window, decay.half_life, decay.window
             )));
         }
         Ok(())
@@ -209,6 +272,9 @@ impl AbsorbCheckpoint {
         params.put_u64(self.processed);
         params.put_u64(self.evicted);
         params.put_u64(self.absorbed);
+        // v5 params tail: the decay schedule
+        params.put_u64(self.half_life);
+        params.put_u64(self.window);
         let mut payload = Encoder::new();
         payload.put_u32(self.entries.len() as u32);
         for (id, seq, sketch) in &self.entries {
@@ -218,6 +284,17 @@ impl AbsorbCheckpoint {
         }
         encode_levels(&mut payload, &self.visible);
         encode_levels(&mut payload, &self.pending);
+        // v5 payload tail: the prev window block + the named queries
+        encode_levels(&mut payload, &self.prev_visible);
+        payload.put_u32(self.queries.len() as u32);
+        for q in &self.queries {
+            payload.put_str(&q.name);
+            payload.put_u64(q.half_life);
+            payload.put_u64(q.window);
+            payload.put_u64(q.scored);
+            encode_levels(&mut payload, &q.cur);
+            encode_levels(&mut payload, &q.prev);
+        }
         ModelArtifact::new(CHECKPOINT_DETECTOR, params.into_bytes(), payload.into_bytes())
     }
 
@@ -250,10 +327,10 @@ impl AbsorbCheckpoint {
             return Ok(convert_legacy(ckpt, snapshots));
         }
         let mut dec = Decoder::new(&art.params);
-        let mut ckpt = decode_header_v4(&mut dec).map_err(blk)?;
+        let mut ckpt = decode_header_v4(&mut dec, art.version).map_err(blk)?;
         dec.finish().map_err(blk)?;
         let mut dec = Decoder::new(&art.payload);
-        decode_payload_v4(&mut dec, &mut ckpt).map_err(blk)?;
+        decode_payload_v4(&mut dec, &mut ckpt, art.version).map_err(blk)?;
         dec.finish().map_err(blk)?;
         Ok(ckpt)
     }
@@ -415,7 +492,7 @@ fn check_shape(ckpt: &AbsorbCheckpoint) -> CodecResult<()> {
     Ok(())
 }
 
-fn decode_header_v4(dec: &mut Decoder) -> CodecResult<AbsorbCheckpoint> {
+fn decode_header_v4(dec: &mut Decoder, version: u16) -> CodecResult<AbsorbCheckpoint> {
     let mut ckpt = AbsorbCheckpoint {
         model_fingerprint: dec.u32()?,
         schema_fingerprint: dec.u32()?,
@@ -427,6 +504,8 @@ fn decode_header_v4(dec: &mut Decoder) -> CodecResult<AbsorbCheckpoint> {
             1 => true,
             other => return Err(format!("unknown absorb-mode tag {other}")),
         },
+        half_life: 0,
+        window: 0,
         k: dec.usize()?,
         depth: dec.usize()?,
         num_chains: dec.usize()?,
@@ -438,10 +517,22 @@ fn decode_header_v4(dec: &mut Decoder) -> CodecResult<AbsorbCheckpoint> {
         entries: Vec::new(),
         visible: Vec::new(),
         pending: Vec::new(),
+        prev_visible: Vec::new(),
+        queries: Vec::new(),
     };
     ckpt.processed = dec.u64()?;
     ckpt.evicted = dec.u64()?;
     ckpt.absorbed = dec.u64()?;
+    if version >= 5 {
+        ckpt.half_life = dec.u64()?;
+        ckpt.window = dec.u64()?;
+        if ckpt.half_life > 0 && !ckpt.absorb {
+            return Err("checkpoint declares a half-life without absorb mode".into());
+        }
+        if ckpt.window > 0 && !ckpt.absorb {
+            return Err("checkpoint declares a window without absorb mode".into());
+        }
+    }
     // the resume path pre-reserves the directory's declared capacity,
     // so an unbounded value here is a thin-air allocation like the
     // shape fields
@@ -455,7 +546,11 @@ fn decode_header_v4(dec: &mut Decoder) -> CodecResult<AbsorbCheckpoint> {
     Ok(ckpt)
 }
 
-fn decode_payload_v4(dec: &mut Decoder, ckpt: &mut AbsorbCheckpoint) -> CodecResult<()> {
+fn decode_payload_v4(
+    dec: &mut Decoder,
+    ckpt: &mut AbsorbCheckpoint,
+    version: u16,
+) -> CodecResult<()> {
     let n_entries = dec.u32()? as usize;
     if n_entries as u64 > ckpt.cache_total {
         return Err(format!(
@@ -501,6 +596,39 @@ fn decode_payload_v4(dec: &mut Decoder, ckpt: &mut AbsorbCheckpoint) -> CodecRes
     let buckets = (ckpt.cms_rows * ckpt.cms_cols) as u32;
     ckpt.visible = decode_levels(dec, levels, buckets, ckpt.cms_rows, ckpt.cms_cols, 4)?;
     ckpt.pending = decode_levels(dec, levels, buckets, ckpt.cms_rows, ckpt.cms_cols, 4)?;
+    if version < 5 {
+        // pre-decay files: no prev block ever rotated, no queries —
+        // normalize to the canonical all-empty M·L shape
+        ckpt.prev_visible = vec![Vec::new(); levels];
+        return Ok(());
+    }
+    ckpt.prev_visible = decode_levels(dec, levels, buckets, ckpt.cms_rows, ckpt.cms_cols, 5)?;
+    let n_queries = dec.u32()? as usize;
+    if n_queries > MAX_QUERIES {
+        return Err(format!(
+            "checkpoint declares {n_queries} named queries, over the {MAX_QUERIES} cap"
+        ));
+    }
+    let mut queries = Vec::with_capacity(n_queries);
+    for _ in 0..n_queries {
+        let name = dec.str()?;
+        if name.is_empty() || name.len() > MAX_QUERY_NAME {
+            return Err(format!(
+                "query name must be 1–{MAX_QUERY_NAME} bytes, got {} bytes",
+                name.len()
+            ));
+        }
+        if queries.iter().any(|q: &QueryRecord| q.name == name) {
+            return Err(format!("duplicate query name {name:?}"));
+        }
+        let half_life = dec.u64()?;
+        let window = dec.u64()?;
+        let scored = dec.u64()?;
+        let cur = decode_levels(dec, levels, buckets, ckpt.cms_rows, ckpt.cms_cols, 5)?;
+        let prev = decode_levels(dec, levels, buckets, ckpt.cms_rows, ckpt.cms_cols, 5)?;
+        queries.push(QueryRecord { name, half_life, window, scored, cur, prev });
+    }
+    ckpt.queries = queries;
     Ok(())
 }
 
@@ -526,6 +654,8 @@ fn decode_header_legacy(dec: &mut Decoder) -> CodecResult<(AbsorbCheckpoint, u64
             1 => true,
             other => return Err(format!("unknown absorb-mode tag {other}")),
         },
+        half_life: 0,
+        window: 0,
         k: dec.usize()?,
         depth: dec.usize()?,
         num_chains: dec.usize()?,
@@ -537,6 +667,8 @@ fn decode_header_legacy(dec: &mut Decoder) -> CodecResult<(AbsorbCheckpoint, u64
         entries: Vec::new(),
         visible: Vec::new(),
         pending: Vec::new(),
+        prev_visible: Vec::new(),
+        queries: Vec::new(),
     };
     if cache_per_shard == 0 || cache_per_shard > (1 << 24) {
         return Err(format!(
@@ -637,6 +769,7 @@ fn convert_legacy(mut ckpt: AbsorbCheckpoint, snapshots: Vec<AbsorbSnapshot>) ->
         })
         .collect();
     ckpt.pending = vec![Vec::new(); levels];
+    ckpt.prev_visible = vec![Vec::new(); levels];
     // a synthesized tag may collide with the submit watermark on
     // degenerate legacy files; keep the v4 invariant tag < submitted
     ckpt.submitted = ckpt.submitted.max(seq);
@@ -687,6 +820,8 @@ mod tests {
             cache_total: 8,
             submitted: 17,
             absorb: true,
+            half_life: 12,
+            window: 8,
             k: 3,
             depth: 2,
             num_chains: 2,
@@ -702,6 +837,25 @@ mod tests {
             ],
             visible: vec![vec![(0, 2), (5, 1)], vec![], vec![(63, 4)], vec![]],
             pending: vec![vec![(9, 1)], vec![], vec![], vec![]],
+            prev_visible: vec![vec![(2, 7)], vec![(40, 1)], vec![], vec![]],
+            queries: vec![
+                QueryRecord {
+                    name: "decayed.1k".into(),
+                    half_life: 4,
+                    window: 0,
+                    scored: 5,
+                    cur: vec![vec![(0, 1)], vec![], vec![], vec![]],
+                    prev: vec![vec![], vec![], vec![], vec![]],
+                },
+                QueryRecord {
+                    name: "raw".into(),
+                    half_life: 0,
+                    window: 0,
+                    scored: 0,
+                    cur: vec![vec![], vec![], vec![], vec![]],
+                    prev: vec![vec![], vec![], vec![], vec![]],
+                },
+            ],
         }
     }
 
@@ -771,6 +925,95 @@ mod tests {
         // …and stay below the submit watermark
         let mut bad = ckpt;
         bad.entries[2].1 = 17;
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+    }
+
+    /// Hand-encode a v4 artifact (params without the decay tail,
+    /// payload without the prev block / query records) and check it
+    /// still loads — with the decay state defaulted.
+    #[test]
+    fn v4_files_load_with_decay_state_defaulted() {
+        let ckpt = sample();
+        let mut params = Encoder::new();
+        params.put_u32(ckpt.model_fingerprint);
+        params.put_u32(ckpt.schema_fingerprint);
+        params.put_u32(ckpt.shards);
+        params.put_u64(ckpt.cache_total);
+        params.put_u64(ckpt.submitted);
+        params.put_u8(u8::from(ckpt.absorb));
+        params.put_usize(ckpt.k);
+        params.put_usize(ckpt.depth);
+        params.put_usize(ckpt.num_chains);
+        params.put_usize(ckpt.cms_rows);
+        params.put_usize(ckpt.cms_cols);
+        params.put_u64(ckpt.processed);
+        params.put_u64(ckpt.evicted);
+        params.put_u64(ckpt.absorbed);
+        let mut payload = Encoder::new();
+        payload.put_u32(ckpt.entries.len() as u32);
+        for (id, seq, sketch) in &ckpt.entries {
+            payload.put_u64(*id);
+            payload.put_u64(*seq);
+            payload.put_f32_slice(sketch);
+        }
+        encode_levels(&mut payload, &ckpt.visible);
+        encode_levels(&mut payload, &ckpt.pending);
+        let mut art =
+            ModelArtifact::new(CHECKPOINT_DETECTOR, params.into_bytes(), payload.into_bytes());
+        art.version = 4;
+        let reread = ModelArtifact::from_bytes(&art.to_bytes()).unwrap();
+        assert_eq!(reread.version, 4);
+        let back = AbsorbCheckpoint::from_artifact(&reread).unwrap();
+        assert_eq!((back.half_life, back.window), (0, 0), "v4 carries no schedule");
+        assert_eq!(back.decay(), DecaySpec::default());
+        assert_eq!(
+            back.prev_visible,
+            vec![Vec::new(); 4],
+            "prev normalizes to the canonical all-empty M·L shape"
+        );
+        assert!(back.queries.is_empty());
+        assert_eq!(back.entries, ckpt.entries);
+        assert_eq!(back.visible, ckpt.visible);
+        assert_eq!(back.pending, ckpt.pending);
+    }
+
+    #[test]
+    fn hostile_v5_decay_blocks_fail_typed() {
+        // a schedule without absorb mode is unconstructable live — a
+        // file declaring one is corrupt or hostile
+        let mut bad = sample();
+        bad.absorb = false;
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // duplicate query names
+        let mut bad = sample();
+        bad.queries[1].name = bad.queries[0].name.clone();
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // query-name length cap
+        let mut bad = sample();
+        bad.queries[0].name = "x".repeat(MAX_QUERY_NAME + 1);
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // prev block validated like the other overlays
+        let mut bad = sample();
+        bad.prev_visible[0].push((4 * 16, 1));
+        assert!(matches!(
+            AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
+            Err(SparxError::InvalidParams(_))
+        ));
+        // query overlays too
+        let mut bad = sample();
+        bad.queries[0].cur[0].push((0, 0));
         assert!(matches!(
             AbsorbCheckpoint::from_artifact(&bad.to_artifact()),
             Err(SparxError::InvalidParams(_))

@@ -266,6 +266,37 @@ impl CountMinSketch {
         m
     }
 
+    /// [`query_overlaid`](Self::query_overlaid) with **two** stacked
+    /// overlays: min over rows of `base + cur + prev`. This is the
+    /// windowed-decay read path — `cur` is the live absorb block and
+    /// `prev` the rotated-out previous window — and with `prev` empty it
+    /// is bit-identical to the single-overlay query (which with an empty
+    /// `cur` is bit-identical to [`query`](Self::query)). Sums saturate.
+    #[inline]
+    pub fn query_overlaid2(
+        &self,
+        bin: &[i32],
+        cur: &HashMap<u32, u32>,
+        prev: &HashMap<u32, u32>,
+    ) -> u32 {
+        let mut walk = BucketWalk::new(bin_hash(bin), self.w);
+        let mut m = u32::MAX;
+        let mut base = 0usize;
+        for _ in 0..self.r {
+            let idx = base + walk.next_bucket();
+            let v = self
+                .counts
+                .get(idx)
+                .saturating_add(cur.get(&(idx as u32)).copied().unwrap_or(0))
+                .saturating_add(prev.get(&(idx as u32)).copied().unwrap_or(0));
+            if v < m {
+                m = v;
+            }
+            base += self.w;
+        }
+        m
+    }
+
     /// Record one insertion into a sparse overlay *instead of* the base
     /// counts — the serving absorb path, where the trained counts are
     /// shared read-only across shards and each shard owns only its delta.
@@ -303,6 +334,21 @@ impl SizeOf for CountMinSketch {
     fn size_of(&self) -> usize {
         std::mem::size_of::<Self>() + self.counts.len() * (self.counts.bits() as usize / 8)
     }
+}
+
+/// One exponential-decay step on a sparse overlay: floor-halve every
+/// count and drop the entries that reach zero. Integer halving keyed off
+/// a *logical* clock (the global submit sequence, never wall time) is
+/// what keeps the decayed score sequence bit-replayable: applying this
+/// at the same submit boundaries always yields the same overlay,
+/// regardless of shard count, thread timing, or a kill→resume in
+/// between. Dropping zeroed entries keeps the overlay's footprint
+/// proportional to what the half-life actually retains.
+pub fn decay_halve_overlay(overlay: &mut HashMap<u32, u32>) {
+    overlay.retain(|_, c| {
+        *c >>= 1;
+        *c > 0
+    });
 }
 
 #[cfg(test)]
@@ -395,6 +441,48 @@ mod tests {
         for bin in bins.iter().take(20) {
             assert_eq!(shared.query(bin), shared.query_overlaid(bin, &empty));
         }
+    }
+
+    /// The windowed read path: two stacked overlays sum like one merged
+    /// overlay, and an empty `prev` collapses to the single-overlay query
+    /// bit-for-bit.
+    #[test]
+    fn query_overlaid2_stacks_and_degenerates() {
+        let cms = CountMinSketch::new(5, 64);
+        let mut cur: HashMap<u32, u32> = HashMap::new();
+        let mut prev: HashMap<u32, u32> = HashMap::new();
+        let mut merged: HashMap<u32, u32> = HashMap::new();
+        let mut rng = Rng::new(23);
+        let mut bins = Vec::new();
+        for i in 0..300 {
+            let bin = vec![rng.below(40) as i32, rng.below(5) as i32];
+            let target = if i % 3 == 0 { &mut prev } else { &mut cur };
+            cms.overlay_insert(&bin, target);
+            cms.overlay_insert(&bin, &mut merged);
+            bins.push(bin);
+        }
+        let empty: HashMap<u32, u32> = HashMap::new();
+        for bin in &bins {
+            assert_eq!(cms.query_overlaid2(bin, &cur, &prev), cms.query_overlaid(bin, &merged));
+            assert_eq!(cms.query_overlaid2(bin, &cur, &empty), cms.query_overlaid(bin, &cur));
+        }
+    }
+
+    /// Floor-halving decay: counts halve exactly, zeroed entries vanish,
+    /// and repeated halving drains any overlay to empty.
+    #[test]
+    fn decay_halve_overlay_floors_and_drops_zeros() {
+        let mut overlay: HashMap<u32, u32> =
+            [(0u32, 1u32), (3, 2), (9, 7), (40, u32::MAX)].into_iter().collect();
+        decay_halve_overlay(&mut overlay);
+        assert_eq!(overlay.get(&0), None, "count 1 halves to zero and is dropped");
+        assert_eq!(overlay.get(&3), Some(&1));
+        assert_eq!(overlay.get(&9), Some(&3));
+        assert_eq!(overlay.get(&40), Some(&(u32::MAX >> 1)));
+        for _ in 0..32 {
+            decay_halve_overlay(&mut overlay);
+        }
+        assert!(overlay.is_empty(), "repeated half-lives drain the overlay");
     }
 
     #[test]

@@ -1,0 +1,222 @@
+//! Logical-clock decay schedules and named-query state for the
+//! streaming plane (the ROADMAP's "windowed and multi-query streaming
+//! semantics" item).
+//!
+//! Everything here is keyed off the **global submit sequence** — the
+//! logical clock the feeder already assigns to every update — never
+//! wall time. A decay boundary is therefore a pure function of how many
+//! updates were submitted, which is what keeps the decayed/windowed
+//! score sequence bit-identical to `--shards 1` at any shard count and
+//! across a kill → `--resume` cut (the persisted `submitted` counter
+//! resumes the schedule mid-period with no drift).
+//!
+//! Two mechanisms compose (either or both may be active):
+//!
+//! * **exponential count decay** — every `half_life` submits the
+//!   absorbed overlays are floor-halved ([`decay_halve_overlay`]),
+//!   dropping zeroed entries;
+//! * **sliding window via paired rotating blocks** — every `window`
+//!   submits the live absorb block rotates into a `prev` block and the
+//!   old `prev` is dropped, so scoring (base + cur + prev) covers at
+//!   most the last two window periods of absorbed mass.
+//!
+//! [`QueryState`] reuses the same two mechanisms for the multi-query
+//! serving layer: each named `(half_life, window)` configuration
+//! accumulates the *published* epoch increments under its own schedule,
+//! evaluated over the single shared ingest stream.
+
+use std::collections::HashMap;
+
+use crate::api::{Result, SparxError};
+
+use super::cms::decay_halve_overlay;
+
+/// Longest accepted query name (also bounds checkpoint decode).
+pub const MAX_QUERY_NAME: usize = 64;
+
+/// Most named queries a scorer will hold at once.
+pub const MAX_QUERIES: usize = 64;
+
+/// A decay/window schedule on the logical clock. `0` disables the
+/// respective mechanism; the default is fully disabled (the undecayed,
+/// accumulate-forever behaviour of earlier revisions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DecaySpec {
+    /// Floor-halve the absorbed overlays every `half_life` submits.
+    pub half_life: u64,
+    /// Rotate the live absorb block to `prev` every `window` submits.
+    pub window: u64,
+}
+
+impl DecaySpec {
+    pub fn new(half_life: u64, window: u64) -> DecaySpec {
+        DecaySpec { half_life, window }
+    }
+
+    /// Whether any decay mechanism is active.
+    pub fn enabled(&self) -> bool {
+        self.half_life > 0 || self.window > 0
+    }
+
+    /// Whether a window rotation falls due at this submit count.
+    pub fn rotate_due(&self, submitted: u64) -> bool {
+        self.window > 0 && submitted > 0 && submitted % self.window == 0
+    }
+
+    /// Whether a half-life floor-halving falls due at this submit count.
+    pub fn halve_due(&self, submitted: u64) -> bool {
+        self.half_life > 0 && submitted > 0 && submitted % self.half_life == 0
+    }
+}
+
+/// Validate a wire/CLI query name: one token, 1–64 bytes of
+/// `[A-Za-z0-9._-]`. The charset guarantees the name round-trips
+/// through the whitespace-tokenized wire grammar and the checkpoint
+/// codec without escaping.
+pub fn validate_query_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > MAX_QUERY_NAME {
+        return Err(SparxError::InvalidParams(format!(
+            "query name must be 1–{MAX_QUERY_NAME} bytes, got {} bytes",
+            name.len()
+        )));
+    }
+    if let Some(c) =
+        name.chars().find(|c| !(c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')))
+    {
+        return Err(SparxError::InvalidParams(format!(
+            "query name {name:?} contains {c:?}; allowed characters are [A-Za-z0-9._-]"
+        )));
+    }
+    Ok(())
+}
+
+/// One named `(half_life, window)` view over the shared ingest stream.
+///
+/// Lives feeder-side in the sharded scorer: every published epoch
+/// increment is added to `cur` ([`on_publish`](Self::on_publish)), and
+/// the query's own boundaries rotate/halve its blocks
+/// ([`at_boundary`](Self::at_boundary)) — query boundaries never force
+/// an epoch publish, so registering or dropping queries cannot move the
+/// primary score sequence by a bit. Levels are chain-major (`m · L +
+/// l`), keyed by row-major CMS bucket, exactly like the scorer's own
+/// overlay.
+#[derive(Debug, Clone)]
+pub struct QueryState {
+    pub name: String,
+    pub spec: DecaySpec,
+    /// Live block: published increments since the last rotation.
+    pub cur: Vec<HashMap<u32, u32>>,
+    /// Previous window block (empty while `spec.window == 0`).
+    pub prev: Vec<HashMap<u32, u32>>,
+    /// `SCORE <id> <name>` requests served against this query.
+    pub scored: u64,
+}
+
+impl QueryState {
+    pub fn new(name: String, spec: DecaySpec, num_levels: usize) -> QueryState {
+        QueryState {
+            name,
+            spec,
+            cur: vec![HashMap::new(); num_levels],
+            prev: vec![HashMap::new(); num_levels],
+            scored: 0,
+        }
+    }
+
+    /// Add a published epoch increment (sorted `(bucket, count)` pairs
+    /// per level) into the live block. Saturating adds commute, so the
+    /// result is independent of how the increment was assembled.
+    pub fn on_publish(&mut self, inc: &[Vec<(u32, u32)>]) {
+        for (level, pairs) in self.cur.iter_mut().zip(inc) {
+            for &(bucket, count) in pairs {
+                let c = level.entry(bucket).or_insert(0);
+                *c = c.saturating_add(count);
+            }
+        }
+    }
+
+    /// Apply this query's own due boundaries at the given submit count:
+    /// rotation first, then halving (the same order the primary scorer
+    /// uses when both coincide).
+    pub fn at_boundary(&mut self, submitted: u64) {
+        if self.spec.rotate_due(submitted) {
+            self.prev = std::mem::replace(&mut self.cur, vec![HashMap::new(); self.prev.len()]);
+        }
+        if self.spec.halve_due(submitted) {
+            for level in self.cur.iter_mut().chain(self.prev.iter_mut()) {
+                decay_halve_overlay(level);
+            }
+        }
+    }
+
+    /// The query's full overlay for scoring: `cur + prev` merged with
+    /// saturating adds (what `base + cur + prev` scoring reads).
+    pub fn combined_levels(&self) -> Vec<HashMap<u32, u32>> {
+        let mut combined = self.cur.clone();
+        for (level, prev) in combined.iter_mut().zip(&self.prev) {
+            for (&bucket, &count) in prev {
+                let c = level.entry(bucket).or_insert(0);
+                *c = c.saturating_add(count);
+            }
+        }
+        combined
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_boundaries_are_pure_functions_of_the_clock() {
+        let spec = DecaySpec::new(6, 4);
+        assert!(spec.enabled());
+        assert!(!spec.rotate_due(0), "submit 0 is never a boundary");
+        assert!(!spec.halve_due(0));
+        assert!(spec.rotate_due(4) && spec.rotate_due(8) && !spec.rotate_due(5));
+        assert!(spec.halve_due(6) && spec.halve_due(12) && !spec.halve_due(4));
+        let off = DecaySpec::default();
+        assert!(!off.enabled());
+        for t in 0..100 {
+            assert!(!off.rotate_due(t) && !off.halve_due(t));
+        }
+    }
+
+    #[test]
+    fn query_names_validate_typed() {
+        validate_query_name("decayed-1h").unwrap();
+        validate_query_name("a.b_c-9").unwrap();
+        for bad in ["", "with space", "tab\tname", "arrow->x", "emoji✓"] {
+            assert!(
+                matches!(validate_query_name(bad), Err(SparxError::InvalidParams(_))),
+                "{bad:?} must be rejected"
+            );
+        }
+        assert!(validate_query_name(&"x".repeat(MAX_QUERY_NAME)).is_ok());
+        assert!(validate_query_name(&"x".repeat(MAX_QUERY_NAME + 1)).is_err());
+    }
+
+    #[test]
+    fn query_state_rotates_halves_and_combines() {
+        let mut q = QueryState::new("w".into(), DecaySpec::new(0, 2), 2);
+        q.on_publish(&[vec![(1, 4)], vec![(7, 2)]]);
+        assert_eq!(q.combined_levels()[0].get(&1), Some(&4));
+        q.at_boundary(2); // rotate: cur → prev
+        assert!(q.cur.iter().all(HashMap::is_empty));
+        assert_eq!(q.prev[0].get(&1), Some(&4));
+        q.on_publish(&[vec![(1, 1)], vec![]]);
+        // combined = cur + prev
+        assert_eq!(q.combined_levels()[0].get(&1), Some(&5));
+        assert_eq!(q.combined_levels()[1].get(&7), Some(&2));
+        q.at_boundary(4); // rotate again: the first window's mass is gone
+        assert_eq!(q.combined_levels()[0].get(&1), Some(&1));
+        assert_eq!(q.combined_levels()[1].get(&7), None);
+
+        let mut h = QueryState::new("h".into(), DecaySpec::new(3, 0), 1);
+        h.on_publish(&[vec![(0, 9)]]);
+        h.at_boundary(3);
+        assert_eq!(h.cur[0].get(&0), Some(&4), "floor halving");
+        h.at_boundary(5); // not a boundary
+        assert_eq!(h.cur[0].get(&0), Some(&4));
+    }
+}

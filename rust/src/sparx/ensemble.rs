@@ -182,6 +182,45 @@ pub fn score_bins_overlaid(
     best
 }
 
+/// [`score_bins_overlaid`] with the windowed-decay read path: per level
+/// the base counts are summed with **two** stacked overlays — the live
+/// absorb block (`cur`) and the rotated-out previous window (`prev`) —
+/// via [`CountMinSketch::query_overlaid2`]. With every `prev` level
+/// empty this is bit-identical to [`score_bins_overlaid`], which keeps
+/// the undecayed serve path's scores untouched by the decay feature.
+#[inline]
+pub fn score_bins_overlaid2(
+    chain: &TrainedChain,
+    mode: ScoreMode,
+    bins: &[i32],
+    cur: &[std::collections::HashMap<u32, u32>],
+    prev: &[std::collections::HashMap<u32, u32>],
+) -> f64 {
+    let k = chain.params.k();
+    debug_assert_eq!(bins.len(), chain.params.depth() * k);
+    debug_assert_eq!(cur.len(), chain.cms.len());
+    debug_assert_eq!(prev.len(), chain.cms.len());
+    let mut best = f64::INFINITY;
+    for (lvl, cms) in chain.cms.iter().enumerate() {
+        let row = &bins[lvl * k..(lvl + 1) * k];
+        let counted = match (cur[lvl].is_empty(), prev[lvl].is_empty()) {
+            (true, true) => cms.query(row),
+            (false, true) => cms.query_overlaid(row, &cur[lvl]),
+            (true, false) => cms.query_overlaid(row, &prev[lvl]),
+            (false, false) => cms.query_overlaid2(row, &cur[lvl], &prev[lvl]),
+        };
+        let c = counted as f64;
+        let v = match mode {
+            ScoreMode::Extrapolated => (1u64 << (lvl + 1)) as f64 * c,
+            ScoreMode::Log2 => (1.0 + c).log2() + (lvl + 1) as f64,
+        };
+        if v < best {
+            best = v;
+        }
+    }
+    best
+}
+
 /// Tile form of [`score_bins`]: adds each point's min-over-levels
 /// contribution for `chain` into `totals[i]`. Level-major — per level the
 /// whole tile's bin rows are hashed once and resolved through

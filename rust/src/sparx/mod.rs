@@ -10,6 +10,8 @@
 //!   Arc-shared read-only [`ServedEnsemble`] + per-scorer absorb state
 //! * [`sharded`] — the concurrent front-end: ID-hash sharding of
 //!   [`stream`] across pinned worker threads, one shared ensemble
+//! * [`decay`] — logical-clock half-life/window schedules and the named
+//!   multi-query state evaluated over one shared ingest stream
 //! * [`checkpoint`] — durable absorb-state snapshots (`serve
 //!   --checkpoint-out` / `--resume`)
 //!
@@ -22,6 +24,7 @@
 pub mod chain;
 pub mod checkpoint;
 pub mod cms;
+pub mod decay;
 pub mod ensemble;
 pub mod plan;
 pub mod projector;
@@ -31,16 +34,17 @@ pub mod stream;
 pub use chain::{
     kernel_path, tile_bins_reference, tile_bins_scalar, Binner, ChainParams, NativeBinner,
 };
-pub use checkpoint::{AbsorbCheckpoint, AbsorbSnapshot};
+pub use checkpoint::{AbsorbCheckpoint, AbsorbSnapshot, QueryRecord};
 pub use cms::CountMinSketch;
+pub use decay::{DecaySpec, QueryState};
 pub use ensemble::{
-    score_bins, score_bins_overlaid, score_bins_tile, ScoreMode, SparxModel, SparxParams,
-    TrainedChain,
+    score_bins, score_bins_overlaid, score_bins_overlaid2, score_bins_tile, ScoreMode, SparxModel,
+    SparxParams, TrainedChain,
 };
 pub use plan::{ChainSet, ExecMode};
 pub use projector::{compute_deltamax, project_dataset, Projector, Sketch};
 pub use sharded::{
-    shard_of, ReplySink, ServeOptions, ShardCounters, ShardReply, ShardedReport, ShardedStats,
-    ShardedStreamScorer, WouldBlock, ABSORB_EPOCH,
+    shard_of, QueryInfo, ReplySink, ServeOptions, ShardCounters, ShardReply, ShardedReport,
+    ShardedStats, ShardedStreamScorer, WouldBlock, ABSORB_EPOCH,
 };
 pub use stream::{ServedEnsemble, StreamScore, StreamScorer, SwapCarry};

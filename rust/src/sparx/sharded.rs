@@ -65,7 +65,8 @@ use crate::data::UpdateTriple;
 use crate::hash::murmur3_bytes;
 use crate::util::LruCache;
 
-use super::checkpoint::{AbsorbCheckpoint, AbsorbSnapshot};
+use super::checkpoint::{AbsorbCheckpoint, AbsorbSnapshot, QueryRecord};
+use super::decay::{validate_query_name, DecaySpec, QueryState, MAX_QUERIES};
 use super::ensemble::SparxModel;
 use super::stream::{ServedEnsemble, StreamScore, StreamScorer, SwapCarry};
 
@@ -107,6 +108,11 @@ pub struct ServeOptions {
     /// visible at epoch boundaries (see [`ABSORB_EPOCH`]), so scores
     /// stay bit-identical across shard counts.
     pub absorb: bool,
+    /// Logical-clock decay of the absorbed overlays (`--half-life` /
+    /// `--window`). Requires `absorb`; boundaries are driven feeder-side
+    /// as pure functions of the submit sequence, so decayed scores stay
+    /// bit-identical across shard counts and resume cuts.
+    pub decay: DecaySpec,
 }
 
 /// A score flowing back to whoever submitted the update or query. The
@@ -125,6 +131,10 @@ pub enum ShardReply {
     /// Answer to a read-only [`query_score`][ShardedStreamScorer::query_score]:
     /// `None` when the ID is not resident.
     Query { id: u64, score: Option<f64> },
+    /// Answer to a named-query probe
+    /// ([`score_named`][ShardedStreamScorer::score_named]): the ID scored
+    /// against that query's decayed overlay instead of the primary one.
+    QueryNamed { id: u64, name: String, score: Option<f64> },
 }
 
 /// Typed backpressure: the target shard's queue was full, the update was
@@ -141,6 +151,10 @@ enum ShardItem {
     Evict { id: u64 },
     /// Read-only score probe; replies `None` when not resident.
     Query { id: u64, reply: ReplySink },
+    /// Read-only score probe against a caller-supplied overlay (the
+    /// feeder ships the named query's combined levels); replies `None`
+    /// when not resident.
+    QueryWith { id: u64, name: String, levels: Arc<Vec<HashMap<u32, u32>>>, reply: ReplySink },
 }
 
 /// What travels over a shard's ingest queue: data batches plus the
@@ -158,6 +172,11 @@ enum ShardMsg {
     /// shard receives the same `Arc`, so visible state stays identical
     /// across shards.
     ApplyVisible(Arc<Vec<Vec<(u32, u32)>>>),
+    /// Window boundary: rotate the visible overlay into the `prev` block
+    /// (broadcast to every shard at the same submit watermark).
+    Rotate,
+    /// Half-life boundary: floor-halve both overlay blocks (broadcast).
+    Halve,
     /// Report live counters (cheap `STATS` probe — no sketch copying).
     Stats(SyncSender<ShardCounters>),
     /// Atomically swap the shared ensemble (hot reload). The feeder
@@ -223,6 +242,13 @@ fn shard_handler(shard: &mut Shard, msg: ShardMsg) {
                             score: shard.scorer.score_id(id),
                         });
                     }
+                    ShardItem::QueryWith { id, name, levels, reply } => {
+                        let _ = reply.send(ShardReply::QueryNamed {
+                            id,
+                            name,
+                            score: shard.scorer.score_id_with(id, &levels),
+                        });
+                    }
                 }
             }
         }
@@ -235,6 +261,12 @@ fn shard_handler(shard: &mut Shard, msg: ShardMsg) {
         }
         ShardMsg::ApplyVisible(inc) => {
             shard.scorer.apply_visible(&inc);
+        }
+        ShardMsg::Rotate => {
+            shard.scorer.rotate_window();
+        }
+        ShardMsg::Halve => {
+            shard.scorer.decay_halve();
         }
         ShardMsg::Stats(reply) => {
             let _ = reply.send(shard.counters());
@@ -332,6 +364,16 @@ impl ShardedReport {
     }
 }
 
+/// One row of `QUERY LIST` / the per-query `STATS` and metrics output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueryInfo {
+    pub name: String,
+    pub half_life: u64,
+    pub window: u64,
+    /// Named-score probes served against this query.
+    pub scored: u64,
+}
+
 /// Live counters for the `STATS` verb: the per-shard counters a running
 /// pool reports without stopping, plus the feeder-side aggregates.
 #[derive(Debug, Clone)]
@@ -345,6 +387,8 @@ pub struct ShardedStats {
     pub resident_ensemble_bytes: usize,
     /// Bytes of the resident sketches (`resident_ids × K × 4`).
     pub resident_sketch_bytes: usize,
+    /// Registered named queries, in registration order.
+    pub queries: Vec<QueryInfo>,
 }
 
 impl ShardedStats {
@@ -411,6 +455,12 @@ pub struct ShardedStreamScorer {
     /// Feeder master copy of the visible absorb overlay (identical on
     /// every shard) — what a checkpoint persists.
     visible: Vec<HashMap<u32, u32>>,
+    /// Feeder master copy of the previous window block (identical on
+    /// every shard; all-empty while `decay.window == 0`).
+    visible_prev: Vec<HashMap<u32, u32>>,
+    /// Named `(half_life, window)` queries, feeder-side only: they read
+    /// published increments and never touch the shards' own overlays.
+    queries: Vec<QueryState>,
     submitted: u64,
     opts: ServeOptions,
     ensemble: Arc<ServedEnsemble>,
@@ -442,7 +492,7 @@ impl ShardedStreamScorer {
             Arc::new(ServedEnsemble::new(model)?),
             shards,
             cache_total,
-            ServeOptions { record: true, absorb: false },
+            ServeOptions { record: true, ..ServeOptions::default() },
             None,
         )
     }
@@ -478,13 +528,21 @@ impl ShardedStreamScorer {
                 "serving cache budget must be ≥ 1 (it bounds the resident sketches)".into(),
             ));
         }
+        if opts.decay.enabled() && !opts.absorb {
+            return Err(SparxError::InvalidParams(
+                "half-life/window decay applies to absorbed counts — it requires absorb mode"
+                    .into(),
+            ));
+        }
         let levels = ensemble.num_chains() * ensemble.depth();
         let mut dir = LruCache::new(cache_total);
         let mut visible: Vec<HashMap<u32, u32>> = vec![HashMap::new(); levels];
+        let mut visible_prev: Vec<HashMap<u32, u32>> = vec![HashMap::new(); levels];
+        let mut queries: Vec<QueryState> = Vec::new();
         let states;
         let submitted;
         if let Some(ckpt) = resume {
-            ckpt.validate_for(&ensemble, opts.absorb)?;
+            ckpt.validate_for(&ensemble, opts.absorb, opts.decay)?;
             // a smaller budget than capture time sheds the least-recent
             // entries right here, exactly as live admissions would
             let shed = ckpt.entries.len().saturating_sub(cache_total);
@@ -493,6 +551,18 @@ impl ShardedStreamScorer {
                 dir.put(*id, *seq);
             }
             add_levels(&mut visible, &ckpt.visible);
+            add_levels(&mut visible_prev, &ckpt.prev_visible);
+            for record in &ckpt.queries {
+                let mut q = QueryState::new(
+                    record.name.clone(),
+                    DecaySpec::new(record.half_life, record.window),
+                    levels,
+                );
+                add_levels(&mut q.cur, &record.cur);
+                add_levels(&mut q.prev, &record.prev);
+                q.scored = record.scored;
+                queries.push(q);
+            }
             states = restored_states(
                 &ensemble,
                 shards,
@@ -500,6 +570,7 @@ impl ShardedStreamScorer {
                 &opts,
                 kept,
                 &ckpt.visible,
+                &ckpt.prev_visible,
                 &ckpt.pending,
                 ckpt.processed,
                 ckpt.evicted + shed as u64,
@@ -528,6 +599,8 @@ impl ShardedStreamScorer {
             cache_total,
             dir,
             visible,
+            visible_prev,
+            queries,
             submitted,
             opts,
             ensemble,
@@ -622,6 +695,79 @@ impl ShardedStreamScorer {
         self.flush_shard(s);
     }
 
+    /// Register a named `(half_life, window)` view over the shared
+    /// ingest stream (`QUERY ADD`). The query starts empty and
+    /// accumulates epoch increments published *after* registration,
+    /// rotating/halving on its own schedule — without perturbing the
+    /// primary score sequence. `(0, 0)` is valid: an undecayed
+    /// cumulative view for A/B comparison against decayed ones.
+    pub fn query_add(&mut self, name: &str, half_life: u64, window: u64) -> Result<()> {
+        if !self.opts.absorb {
+            return Err(SparxError::InvalidParams(
+                "named queries read absorbed increments — they require absorb mode".into(),
+            ));
+        }
+        validate_query_name(name)?;
+        if self.queries.iter().any(|q| q.name == name) {
+            return Err(SparxError::InvalidParams(format!(
+                "query {name:?} is already registered (DROP it first to change its schedule)"
+            )));
+        }
+        if self.queries.len() >= MAX_QUERIES {
+            return Err(SparxError::InvalidParams(format!(
+                "query cap reached ({MAX_QUERIES} registered)"
+            )));
+        }
+        let levels = self.ensemble.num_chains() * self.ensemble.depth();
+        self.queries.push(QueryState::new(
+            name.to_string(),
+            DecaySpec::new(half_life, window),
+            levels,
+        ));
+        Ok(())
+    }
+
+    /// Drop a named query (`QUERY DROP`); typed error when unknown.
+    pub fn query_drop(&mut self, name: &str) -> Result<()> {
+        let Some(at) = self.queries.iter().position(|q| q.name == name) else {
+            return Err(SparxError::InvalidParams(format!("no query named {name:?}")));
+        };
+        self.queries.remove(at);
+        Ok(())
+    }
+
+    /// Registered queries in registration order (`QUERY LIST`).
+    pub fn query_list(&self) -> Vec<QueryInfo> {
+        self.queries
+            .iter()
+            .map(|q| QueryInfo {
+                name: q.name.clone(),
+                half_life: q.spec.half_life,
+                window: q.spec.window,
+                scored: q.scored,
+            })
+            .collect()
+    }
+
+    /// Score `id` against the named query's decayed overlay instead of
+    /// the primary one (`SCORE <id> <name>`), answered through `reply`
+    /// as [`ShardReply::QueryNamed`]. The feeder ships the query's
+    /// combined `cur + prev` levels to the owning shard; like
+    /// [`query_score`](Self::query_score) this is read-only and cannot
+    /// perturb eviction or absorb determinism. Typed error when no such
+    /// query is registered.
+    pub fn score_named(&mut self, id: u64, name: &str, reply: ReplySink) -> Result<()> {
+        let Some(q) = self.queries.iter_mut().find(|q| q.name == name) else {
+            return Err(SparxError::InvalidParams(format!("no query named {name:?}")));
+        };
+        q.scored += 1;
+        let levels = Arc::new(q.combined_levels());
+        let s = shard_of(id, self.shards);
+        self.push_item(s, ShardItem::QueryWith { id, name: name.to_string(), levels, reply }, true);
+        self.flush_shard(s);
+        Ok(())
+    }
+
     /// Push everything buffered feeder-side into the shard queues
     /// (blocking on full queues). Reply-carrying updates submitted
     /// before a `flush` are guaranteed to reach their shards.
@@ -696,9 +842,45 @@ impl ShardedStreamScorer {
         }
     }
 
+    /// Epoch and decay boundaries, driven off the global submit counter
+    /// right after it advances. A decay boundary forces an epoch publish
+    /// *first* — absorbed-but-unpublished increments belong to the
+    /// period that just closed, so they must land in `visible` before it
+    /// rotates or halves. The order at a combined boundary is therefore
+    /// fixed: publish → rotate → halve, feeder masters and shard
+    /// broadcasts in lockstep. Named-query boundaries run last and never
+    /// force a publish of their own (they only re-slice increments
+    /// already published), so registering or dropping a query cannot
+    /// move the primary score sequence by a bit.
     fn maybe_merge_epoch(&mut self) {
-        if self.opts.absorb && self.submitted % ABSORB_EPOCH == 0 {
+        if !self.opts.absorb {
+            return;
+        }
+        let submitted = self.submitted;
+        let rotate = self.opts.decay.rotate_due(submitted);
+        let halve = self.opts.decay.halve_due(submitted);
+        if submitted % ABSORB_EPOCH == 0 || rotate || halve {
             self.merge_epoch();
+        }
+        if rotate {
+            self.visible_prev = std::mem::replace(
+                &mut self.visible,
+                vec![HashMap::new(); self.visible_prev.len()],
+            );
+            for s in 0..self.shards {
+                self.pool.send(s, ShardMsg::Rotate);
+            }
+        }
+        if halve {
+            for lvl in self.visible.iter_mut().chain(self.visible_prev.iter_mut()) {
+                super::cms::decay_halve_overlay(lvl);
+            }
+            for s in 0..self.shards {
+                self.pool.send(s, ShardMsg::Halve);
+            }
+        }
+        for q in &mut self.queries {
+            q.at_boundary(submitted);
         }
     }
 
@@ -741,6 +923,9 @@ impl ShardedStreamScorer {
         }
         let inc = sorted_levels(&merged);
         add_levels(&mut self.visible, &inc);
+        for q in &mut self.queries {
+            q.on_publish(&inc);
+        }
         let inc = Arc::new(inc);
         for s in 0..self.shards {
             self.pool.send(s, ShardMsg::ApplyVisible(inc.clone()));
@@ -822,13 +1007,27 @@ impl ShardedStreamScorer {
             self.cache_total as u64,
             self.submitted,
             self.opts.absorb,
+            self.opts.decay,
         );
         ckpt.processed = processed;
         ckpt.evicted = evicted;
         ckpt.absorbed = absorbed;
         ckpt.entries = entries;
         ckpt.visible = sorted_levels(&self.visible);
+        ckpt.prev_visible = sorted_levels(&self.visible_prev);
         ckpt.pending = pending;
+        ckpt.queries = self
+            .queries
+            .iter()
+            .map(|q| QueryRecord {
+                name: q.name.clone(),
+                half_life: q.spec.half_life,
+                window: q.spec.window,
+                scored: q.scored,
+                cur: sorted_levels(&q.cur),
+                prev: sorted_levels(&q.prev),
+            })
+            .collect();
         Ok(ckpt)
     }
 
@@ -862,6 +1061,7 @@ impl ShardedStreamScorer {
         let snaps = self.collect_snapshots()?;
         let (entries, pending, processed, evicted, absorbed) = self.assemble_global(snaps)?;
         let visible = sorted_levels(&self.visible);
+        let prev = sorted_levels(&self.visible_prev);
         let states = restored_states(
             &self.ensemble,
             new_shards,
@@ -869,6 +1069,7 @@ impl ShardedStreamScorer {
             &self.opts,
             &entries,
             &visible,
+            &prev,
             &pending,
             processed,
             evicted,
@@ -919,6 +1120,7 @@ impl ShardedStreamScorer {
             resident_ids: self.dir.len(),
             resident_ensemble_bytes: self.ensemble.resident_bytes(),
             resident_sketch_bytes: self.dir.len() * self.ensemble.k() * std::mem::size_of::<f32>(),
+            queries: self.query_list(),
         })
     }
 
@@ -932,9 +1134,15 @@ impl ShardedStreamScorer {
         self.flush();
         if carry == SwapCarry::SketchesOnly {
             // shard scorers reset their overlays on a schema-only swap;
-            // the feeder's master copy resets in lockstep
-            for lvl in &mut self.visible {
+            // the feeder's master copies (and the named queries, which
+            // accumulate in the same bucket space) reset in lockstep
+            for lvl in self.visible.iter_mut().chain(self.visible_prev.iter_mut()) {
                 lvl.clear();
+            }
+            for q in &mut self.queries {
+                for lvl in q.cur.iter_mut().chain(q.prev.iter_mut()) {
+                    lvl.clear();
+                }
             }
         }
         for s in 0..self.shards {
@@ -971,7 +1179,8 @@ impl ShardedStreamScorer {
 
 /// Build `shards` worker states restored from global state: entries are
 /// partitioned by `shard_of(id, shards)` preserving global LRU→MRU
-/// order, every shard receives the identical visible overlay, shard 0
+/// order, every shard receives the identical visible overlay (and the
+/// identical previous window block when decay has rotated one), shard 0
 /// carries the aggregate counters and the merged pending overlay (so
 /// pool-wide sums — and the next epoch merge — come out exact).
 #[allow(clippy::too_many_arguments)]
@@ -982,6 +1191,7 @@ fn restored_states(
     opts: &ServeOptions,
     entries: &[(u64, u64, Vec<f32>)],
     visible: &[Vec<(u32, u32)>],
+    prev: &[Vec<(u32, u32)>],
     pending: &[Vec<(u32, u32)>],
     processed: u64,
     evicted: u64,
@@ -1003,6 +1213,11 @@ fn restored_states(
             delta: visible.to_vec(),
         };
         scorer.restore(&snap)?;
+        // v4 checkpoints carry no prev block (empty vec) — leave the
+        // scorer's freshly-reset one alone
+        if !prev.is_empty() {
+            scorer.restore_prev(prev)?;
+        }
         if first {
             scorer.restore_pending(pending)?;
         }
@@ -1138,7 +1353,7 @@ mod tests {
                 ens,
                 shards,
                 cache,
-                ServeOptions { record: true, absorb: false },
+                ServeOptions { record: true, ..Default::default() },
                 None,
             )
             .unwrap();
@@ -1168,7 +1383,7 @@ mod tests {
                 ens.clone(),
                 shards,
                 24,
-                ServeOptions { record: true, absorb: true },
+                ServeOptions { record: true, absorb: true, ..Default::default() },
                 None,
             )
             .unwrap();
@@ -1265,7 +1480,7 @@ mod tests {
         let model = fitted();
         let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
         let updates = churn(900, 40);
-        let opts = ServeOptions { record: true, absorb: true };
+        let opts = ServeOptions { record: true, absorb: true, ..Default::default() };
         let mut reference =
             ShardedStreamScorer::from_ensemble(ens.clone(), 1, 24, opts, None).unwrap();
         for u in &updates {
@@ -1343,7 +1558,7 @@ mod tests {
             ens,
             3,
             64,
-            ServeOptions { record: false, absorb: true },
+            ServeOptions { record: false, absorb: true, ..Default::default() },
             None,
         )
         .unwrap();

@@ -35,7 +35,10 @@ use crate::util::codec::{crc32, Encoder};
 use crate::util::LruCache;
 
 use super::checkpoint::AbsorbSnapshot;
-use super::ensemble::{score_bins, score_bins_overlaid, ScoreMode, SparxModel, TrainedChain};
+use super::cms::decay_halve_overlay;
+use super::ensemble::{
+    score_bins, score_bins_overlaid, score_bins_overlaid2, ScoreMode, SparxModel, TrainedChain,
+};
 use crate::data::UpdateTriple;
 
 /// Outcome of one streamed update.
@@ -278,6 +281,17 @@ impl DeltaCms {
     fn is_empty(&self) -> bool {
         self.inserts == 0
     }
+
+    /// One half-life step: floor-halve every level, dropping zeroed
+    /// entries, and recompute the emptiness indicator (a fully drained
+    /// overlay re-enables the exact no-overlay query fast path).
+    fn halve(&mut self) {
+        for lvl in &mut self.levels {
+            decay_halve_overlay(lvl);
+        }
+        self.inserts =
+            self.levels.iter().map(|l| l.values().map(|&c| c as u64).sum::<u64>()).sum();
+    }
 }
 
 /// Bin a sketch against every chain level and record the CMS increments
@@ -330,6 +344,11 @@ pub struct StreamScorer {
     /// delta ([`apply_visible`](Self::apply_visible)) — which is what
     /// makes absorb-mode scores independent of the shard count.
     pending: DeltaCms,
+    /// The rotated-out previous window block (sliding-window scoring):
+    /// empty unless a window rotation ([`rotate_window`](Self::rotate_window))
+    /// has run. Scoring reads `base + delta + prev`, so absorbed mass
+    /// survives exactly one rotation before dropping out.
+    prev: DeltaCms,
     // scratch buffers reused across updates (no allocation per update)
     scratch: Vec<f32>,
     bins: Vec<i32>,
@@ -362,6 +381,7 @@ impl StreamScorer {
             cache: LruCache::new(cache_size),
             delta: DeltaCms::new(m, depth),
             pending: DeltaCms::new(m, depth),
+            prev: DeltaCms::new(m, depth),
             scratch: vec![0.0; k],
             bins: vec![0; depth * k],
             evicted: 0,
@@ -423,14 +443,49 @@ impl StreamScorer {
         let s = self.cache.get(&id)?; // disjoint field borrows below
         let ens = &*self.ensemble;
         let overlay = !self.delta.is_empty();
+        let windowed = !self.prev.is_empty();
         let mut total = 0.0;
         for (m, chain) in ens.chains.iter().enumerate() {
             chain.params.bins_into(s, &mut self.scratch, &mut self.bins);
-            total += if overlay {
+            total += if windowed {
+                score_bins_overlaid2(
+                    chain,
+                    ens.mode,
+                    &self.bins,
+                    self.delta.chain_levels(m),
+                    self.prev.chain_levels(m),
+                )
+            } else if overlay {
                 score_bins_overlaid(chain, ens.mode, &self.bins, self.delta.chain_levels(m))
             } else {
                 score_bins(chain, ens.mode, &self.bins)
             };
+        }
+        Some(-(total / ens.chains.len() as f64))
+    }
+
+    /// Score a cached ID against the ensemble with a **caller-supplied**
+    /// overlay instead of this scorer's own delta — the named-query read
+    /// path, where each `(half_life, window)` query owns its view of the
+    /// published increments. `levels` is chain-major (`m · L + l`) and
+    /// must span exactly M·L levels; `None` if the ID is uncached or the
+    /// shape disagrees.
+    pub(crate) fn score_id_with(
+        &mut self,
+        id: u64,
+        levels: &[HashMap<u32, u32>],
+    ) -> Option<f64> {
+        let s = self.cache.get(&id)?;
+        let ens = &*self.ensemble;
+        let depth = ens.depth;
+        if levels.len() != ens.chains.len() * depth {
+            return None;
+        }
+        let mut total = 0.0;
+        for (m, chain) in ens.chains.iter().enumerate() {
+            chain.params.bins_into(s, &mut self.scratch, &mut self.bins);
+            let chain_levels = levels.get(m * depth..(m + 1) * depth)?;
+            total += score_bins_overlaid(chain, ens.mode, &self.bins, chain_levels);
         }
         Some(-(total / ens.chains.len() as f64))
     }
@@ -482,12 +537,34 @@ impl StreamScorer {
     /// evict counts toward [`evictions`](Self::evictions) exactly like
     /// an LRU one.
     pub(crate) fn evict(&mut self, id: u64) -> bool {
-        if self.cache.remove(&id) {
+        // remove() hands the sketch back (and we drop it here): the value
+        // leaves memory at eviction time, not at some later slot reuse
+        if self.cache.remove(&id).is_some() {
             self.evicted += 1;
             true
         } else {
             false
         }
+    }
+
+    /// One window rotation on the logical clock: the live absorbed delta
+    /// becomes the previous block, the old previous block is dropped.
+    /// Scoring covers `base + delta + prev`, so after a rotation the
+    /// absorbed mass from two windows ago stops counting — the paired
+    /// rotating blocks form of a sliding window.
+    pub(crate) fn rotate_window(&mut self) {
+        let m = self.ensemble.num_chains();
+        let depth = self.ensemble.depth();
+        self.prev = std::mem::replace(&mut self.delta, DeltaCms::new(m, depth));
+    }
+
+    /// One half-life step on the logical clock: floor-halve the visible
+    /// delta **and** the previous window block (both carry absorbed mass
+    /// that must decay). The pending epoch buffer is never halved — it
+    /// holds increments submitted *after* the boundary forced its drain.
+    pub(crate) fn decay_halve(&mut self) {
+        self.delta.halve();
+        self.prev.halve();
     }
 
     /// Drain the pending overlay for an epoch merge. Returns the raw
@@ -529,32 +606,51 @@ impl StreamScorer {
     /// Restore a pending overlay persisted by a mid-epoch checkpoint.
     /// Validates like [`restore`](Self::restore).
     pub(crate) fn restore_pending(&mut self, levels: &[Vec<(u32, u32)>]) -> Result<()> {
+        self.pending = self.decode_overlay("pending", levels)?;
+        Ok(())
+    }
+
+    /// Restore the previous window block persisted by a checkpoint taken
+    /// with `--window` active. Validates like [`restore`](Self::restore).
+    pub(crate) fn restore_prev(&mut self, levels: &[Vec<(u32, u32)>]) -> Result<()> {
+        self.prev = self.decode_overlay("prev-window", levels)?;
+        Ok(())
+    }
+
+    /// Sorted snapshot of the previous window block (what the feeder
+    /// persists for its master copy; see [`pending_sorted`](Self::pending_sorted)).
+    pub(crate) fn prev_sorted(&self) -> Vec<Vec<(u32, u32)>> {
+        sorted_levels(&self.prev.levels)
+    }
+
+    /// Shared validation + decode for a serialized overlay (`(bucket,
+    /// count)` pairs per level, chain-major).
+    fn decode_overlay(&self, what: &str, levels: &[Vec<(u32, u32)>]) -> Result<DeltaCms> {
         let ens = &*self.ensemble;
         let buckets = (ens.cms_rows * ens.cms_cols) as u32;
         if levels.len() != ens.chains.len() * ens.depth {
             return Err(SparxError::InvalidParams(format!(
-                "pending delta has {} levels for an M={} L={} ensemble",
+                "{what} delta has {} levels for an M={} L={} ensemble",
                 levels.len(),
                 ens.chains.len(),
                 ens.depth
             )));
         }
-        let mut pending = DeltaCms::new(ens.chains.len(), ens.depth);
+        let mut delta = DeltaCms::new(ens.chains.len(), ens.depth);
         for (slot, lvl) in levels.iter().enumerate() {
             for &(bucket, count) in lvl {
                 if bucket >= buckets || count == 0 {
                     return Err(SparxError::InvalidParams(format!(
-                        "pending delta entry (bucket {bucket}, count {count}) is out of \
+                        "{what} delta entry (bucket {bucket}, count {count}) is out of \
                          range for a {}×{} CMS",
                         ens.cms_rows, ens.cms_cols
                     )));
                 }
-                pending.levels[slot].insert(bucket, count);
-                pending.inserts += count as u64;
+                delta.levels[slot].insert(bucket, count);
+                delta.inserts += count as u64;
             }
         }
-        self.pending = pending;
-        Ok(())
+        Ok(delta)
     }
 
     /// Serialize this scorer's mutable state (sketches in LRU→MRU order,
@@ -643,6 +739,7 @@ impl StreamScorer {
         self.cache = cache;
         self.delta = delta;
         self.pending = DeltaCms::new(ens.chains.len(), ens.depth);
+        self.prev = DeltaCms::new(ens.chains.len(), ens.depth);
         self.processed = snap.processed;
         self.evicted = snap.evicted;
         self.absorbed = snap.absorbed;
@@ -658,6 +755,7 @@ impl StreamScorer {
         if carry == SwapCarry::SketchesOnly {
             self.delta = DeltaCms::new(new.num_chains(), new.depth());
             self.pending = DeltaCms::new(new.num_chains(), new.depth());
+            self.prev = DeltaCms::new(new.num_chains(), new.depth());
         }
         self.ensemble = new;
         Ok(carry)
@@ -877,6 +975,83 @@ mod tests {
         assert!(!s.evict(3), "double evict is a no-op");
         assert_eq!(s.evictions(), 1);
         assert!(s.score_id(3).is_none());
+    }
+
+    /// Paired rotating blocks: one rotation keeps absorbed mass visible
+    /// (it moves to `prev`), a second drops it; floor-halving 2n absorbs
+    /// equals n absorbs bit-for-bit.
+    #[test]
+    fn rotation_and_halving_follow_the_paired_block_semantics() {
+        let model = fitted();
+        let u = UpdateTriple::Num { id: 3, feature: "f2".into(), delta: 5.0 };
+        let mut s = StreamScorer::new(&model, 16).unwrap();
+        let base = s.update(&u);
+        for _ in 0..4 {
+            s.absorb(3).unwrap();
+        }
+        let absorbed = s.score_id(3).unwrap();
+        assert!(absorbed < base.outlierness);
+        s.rotate_window();
+        assert_eq!(
+            s.score_id(3).unwrap().to_bits(),
+            absorbed.to_bits(),
+            "after one rotation the mass lives in prev and still counts"
+        );
+        s.rotate_window();
+        assert_eq!(
+            s.score_id(3).unwrap().to_bits(),
+            base.outlierness.to_bits(),
+            "after two rotations the window has slid past the absorbed mass"
+        );
+        // halving 4 absorbs equals 2 absorbs exactly (integer floor)
+        let mut a = StreamScorer::new(&model, 16).unwrap();
+        a.update(&u);
+        for _ in 0..4 {
+            a.absorb(3).unwrap();
+        }
+        a.decay_halve();
+        let mut b = StreamScorer::new(&model, 16).unwrap();
+        b.update(&u);
+        for _ in 0..2 {
+            b.absorb(3).unwrap();
+        }
+        assert_eq!(a.score_id(3).unwrap().to_bits(), b.score_id(3).unwrap().to_bits());
+        // halving also decays the rotated-out prev block
+        a.rotate_window();
+        a.decay_halve();
+        let mut c = StreamScorer::new(&model, 16).unwrap();
+        c.update(&u);
+        c.absorb(3).unwrap();
+        assert_eq!(a.score_id(3).unwrap().to_bits(), c.score_id(3).unwrap().to_bits());
+        // prev round-trips through its serialized form
+        let saved = a.prev_sorted();
+        let mut r = StreamScorer::new(&model, 16).unwrap();
+        r.update(&u);
+        r.restore_prev(&saved).unwrap();
+        assert_eq!(r.score_id(3).unwrap().to_bits(), a.score_id(3).unwrap().to_bits());
+        assert!(matches!(r.restore_prev(&[Vec::new()]), Err(SparxError::InvalidParams(_))));
+    }
+
+    /// The named-query read path: a caller-supplied overlay scores
+    /// exactly like the scorer's own published delta, and shape or cache
+    /// misses answer `None`.
+    #[test]
+    fn score_id_with_reads_a_caller_supplied_overlay() {
+        let model = fitted();
+        let u = UpdateTriple::Num { id: 3, feature: "f2".into(), delta: 5.0 };
+        let mut t = StreamScorer::new(&model, 16).unwrap();
+        t.update(&u);
+        for _ in 0..3 {
+            t.absorb_pending(3);
+        }
+        let overlay = t.take_pending();
+        t.apply_visible(&sorted_levels(&overlay));
+        let want = t.score_id(3).unwrap();
+        let mut s = StreamScorer::new(&model, 16).unwrap();
+        s.update(&u);
+        assert_eq!(s.score_id_with(3, &overlay).unwrap().to_bits(), want.to_bits());
+        assert!(s.score_id_with(3, &overlay[..1]).is_none(), "wrong level count");
+        assert!(s.score_id_with(999, &overlay).is_none(), "uncached id");
     }
 
     /// Two scorers sharing one `Arc<ServedEnsemble>`: absorbing on one

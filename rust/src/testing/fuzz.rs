@@ -33,7 +33,7 @@ use crate::cluster::ClusterConfig;
 use crate::data::generators::GisetteGen;
 use crate::data::stream::parse_update_line;
 use crate::serve::wire::{parse_request, Request};
-use crate::sparx::checkpoint::AbsorbCheckpoint;
+use crate::sparx::checkpoint::{AbsorbCheckpoint, QueryRecord};
 use crate::sparx::{SparxModel, SparxParams};
 use crate::util::codec::{crc32, Decoder, Encoder};
 use crate::util::Rng;
@@ -154,7 +154,12 @@ fn target_update_lines(input: &[u8]) -> bool {
     let mut any = false;
     for (i, line) in text.lines().take(64).enumerate() {
         if let Ok(Some(u)) = parse_update_line(i + 1, line) {
-            let rendered = u.to_line();
+            // anything the parser accepted is representable by
+            // construction (tokens are whitespace-free, δ finite, the
+            // old value never contains an arrow) — a typed rejection
+            // here is a real grammar asymmetry
+            let rendered =
+                u.to_line().expect("a parsed update line is always representable");
             let reparsed = parse_update_line(i + 1, &rendered)
                 .expect("rendered update line must parse")
                 .expect("rendered update line is never a comment");
@@ -176,8 +181,16 @@ fn target_wire_requests(input: &[u8]) -> bool {
         let lineno = i + 1;
         if let Ok(Some(req)) = parse_request(lineno, line) {
             let rendered = match &req {
-                Request::Update(u) => u.to_line(),
+                Request::Update(u) => {
+                    u.to_line().expect("a parsed update line is always representable")
+                }
                 Request::Score(id) => format!("SCORE {id}"),
+                Request::ScoreNamed(id, name) => format!("SCORE {id} {name}"),
+                Request::QueryAdd { name, half_life, window } => {
+                    format!("QUERY ADD {name} {half_life} {window}")
+                }
+                Request::QueryDrop(name) => format!("QUERY DROP {name}"),
+                Request::QueryList => "QUERY LIST".to_string(),
                 Request::Stats => "STATS".to_string(),
                 Request::Metrics => "METRICS".to_string(),
                 Request::Checkpoint => "CHECKPOINT".to_string(),
@@ -211,7 +224,9 @@ pub fn seed_corpus() -> &'static [Vec<u8>] {
             packed_block_seed(&[]),
             b"17 f3 0.5\n9 city ->paris\n# comment\n42 f0 -2e-3\n".to_vec(),
             b"SPRX\x03\x00".to_vec(),
-            b"SCORE 17\nSTATS\nRESHARD 4\nCHECKPOINT\nMETRICS\nQUIT\nSHUTDOWN\n".to_vec(),
+            b"SCORE 17\nSCORE 17 decayed.1k\nQUERY ADD decayed.1k 1024 256\nQUERY LIST\n\
+              QUERY DROP decayed.1k\nSTATS\nRESHARD 4\nCHECKPOINT\nMETRICS\nQUIT\nSHUTDOWN\n"
+                .to_vec(),
         ]
     })
 }
@@ -228,8 +243,9 @@ fn model_artifact_seed() -> Vec<u8> {
     model.to_artifact().expect("seed model encodes").to_bytes()
 }
 
-/// A hand-built v4 checkpoint exercising seq-tagged sketches, both
-/// overlays and the varint-gap level encoding.
+/// A hand-built v5 checkpoint exercising seq-tagged sketches, both
+/// overlays, the decay/window blocks, a named query and the varint-gap
+/// level encoding.
 pub fn sample_checkpoint() -> AbsorbCheckpoint {
     let (num_chains, depth, k) = (2usize, 2usize, 3usize);
     AbsorbCheckpoint {
@@ -239,6 +255,8 @@ pub fn sample_checkpoint() -> AbsorbCheckpoint {
         cache_total: 4,
         submitted: 17,
         absorb: true,
+        half_life: 8,
+        window: 6,
         k,
         depth,
         num_chains,
@@ -260,6 +278,15 @@ pub fn sample_checkpoint() -> AbsorbCheckpoint {
             vec![(2, 2), (3, 1), (100, 7)],
         ],
         pending: vec![vec![(1, 1)], vec![], vec![], vec![(7, 3)]],
+        prev_visible: vec![vec![(4, 2)], vec![], vec![(0, 1), (64, 5)], vec![]],
+        queries: vec![QueryRecord {
+            name: "decayed.1k".into(),
+            half_life: 4,
+            window: 2,
+            scored: 5,
+            cur: vec![vec![(1, 2)], vec![], vec![], vec![(9, 1)]],
+            prev: vec![vec![], vec![(3, 4)], vec![], vec![]],
+        }],
     }
 }
 
@@ -269,12 +296,12 @@ fn packed_block_seed(values: &[u32]) -> Vec<u8> {
     enc.into_bytes()
 }
 
-/// One random mutation. Mostly byte-level; the last two arms are
-/// grammar-aware (length-field patches and whole-file CRC repair, so a
-/// mutated artifact passes the outer checksum and reaches the block
-/// decoders).
+/// One random mutation. Mostly byte-level; the last three arms are
+/// grammar-aware (length-field patches, hostile-token injection for the
+/// line grammars, and whole-file CRC repair so a mutated artifact
+/// passes the outer checksum and reaches the block decoders).
 fn mutate(input: &mut Vec<u8>, rng: &mut Rng, seeds: &[Vec<u8>]) {
-    match rng.below(8) {
+    match rng.below(9) {
         0 => {
             // bit flip
             if let Some(pos) = random_pos(input, rng) {
@@ -326,6 +353,29 @@ fn mutate(input: &mut Vec<u8>, rng: &mut Rng, seeds: &[Vec<u8>]) {
                     *b = 0;
                 }
             }
+        }
+        7 => {
+            // hostile-name injection aimed at the line grammars: arrows
+            // that move the categorical split, whitespace that
+            // re-tokenizes, non-finite δ tokens, over-long and
+            // non-ASCII query names — the to_line/parse asymmetry class
+            const HOSTILE: &[&[u8]] = &[
+                b"->",
+                b"a->b->c",
+                b" ",
+                b"\t",
+                b"NaN",
+                b"inf",
+                b"9 loc ->\n",
+                b"9 loc a->b->c\n",
+                b"QUERY ADD a->b 1 1\n",
+                b"QUERY ADD \xe2\x9c\x93 1 1\n",
+                b"SCORE 1 xxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx\
+                  xxxxxxxxxxxxxxxxxxxxxxxxx\n",
+            ];
+            let frag = HOSTILE[rng.below(HOSTILE.len() as u64) as usize];
+            let pos = rng.below(input.len() as u64 + 1) as usize;
+            input.splice(pos..pos, frag.iter().copied());
         }
         _ => {
             // repair the whole-file CRC so the mutation survives the

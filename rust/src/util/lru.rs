@@ -16,10 +16,15 @@ pub struct LruCache<K: Eq + Hash + Clone, V> {
     free: Vec<usize>,
 }
 
+/// `value` is `None` only for slots parked on the free list: [`remove`]
+/// takes the value out eagerly so a detached entry never keeps it alive
+/// until slot reuse. Linked (mapped) entries always hold `Some`.
+///
+/// [`remove`]: LruCache::remove
 #[derive(Debug)]
 struct Entry<K, V> {
     key: K,
-    value: V,
+    value: Option<V>,
     prev: usize,
     next: usize,
 }
@@ -83,7 +88,7 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         let idx = *self.map.get(key)?;
         self.detach(idx);
         self.push_front(idx);
-        Some(&self.slab[idx].value)
+        self.slab[idx].value.as_ref()
     }
 
     /// Mutable access, marks as most-recently used.
@@ -91,19 +96,19 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         let idx = *self.map.get(key)?;
         self.detach(idx);
         self.push_front(idx);
-        Some(&mut self.slab[idx].value)
+        self.slab[idx].value.as_mut()
     }
 
     /// Peek without touching recency.
     pub fn peek(&self, key: &K) -> Option<&V> {
-        self.map.get(key).map(|&i| &self.slab[i].value)
+        self.map.get(key).and_then(|&i| self.slab[i].value.as_ref())
     }
 
     /// Insert, evicting the least-recently-used entry if at capacity.
     /// Returns the evicted (key, value) if any.
     pub fn put(&mut self, key: K, value: V) -> Option<(K, V)> {
         if let Some(&idx) = self.map.get(&key) {
-            self.slab[idx].value = value;
+            self.slab[idx].value = Some(value);
             self.detach(idx);
             self.push_front(idx);
             return None;
@@ -122,17 +127,17 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         let idx = if let Some(i) = self.free.pop() {
             let old = std::mem::replace(
                 &mut self.slab[i],
-                Entry { key: key.clone(), value, prev: NIL, next: NIL },
+                Entry { key: key.clone(), value: Some(value), prev: NIL, next: NIL },
             );
             if let Some((k, j)) = evicted.take() {
                 debug_assert_eq!(i, j);
                 self.map.insert(key, i);
                 self.push_front(i);
-                return Some((k, old.value));
+                return old.value.map(|v| (k, v));
             }
             i
         } else {
-            self.slab.push(Entry { key: key.clone(), value, prev: NIL, next: NIL });
+            self.slab.push(Entry { key: key.clone(), value: Some(value), prev: NIL, next: NIL });
             self.slab.len() - 1
         };
         self.map.insert(key, idx);
@@ -144,17 +149,17 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
         self.map.contains_key(key)
     }
 
-    /// Remove an entry by key. Returns whether it was present. Used by
-    /// the sharded serving plane, where eviction decisions are made by a
-    /// global directory rather than by this per-shard cache. The slab
-    /// slot is recycled on the next insertion (which drops the value).
-    pub fn remove(&mut self, key: &K) -> bool {
-        let Some(idx) = self.map.remove(key) else {
-            return false;
-        };
+    /// Remove an entry by key, returning its value if it was present.
+    /// Used by the sharded serving plane, where eviction decisions are
+    /// made by a global directory rather than by this per-shard cache.
+    /// The value is taken out of the slab *now* — dropping the returned
+    /// `Option` releases its memory immediately, rather than keeping the
+    /// evicted sketch resident until the slot happens to be reused.
+    pub fn remove(&mut self, key: &K) -> Option<V> {
+        let idx = self.map.remove(key)?;
         self.detach(idx);
         self.free.push(idx);
-        true
+        self.slab[idx].value.take()
     }
 
     /// Iterate entries from least-recently to most-recently used, without
@@ -169,7 +174,7 @@ impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
             }
             let e = &self.slab[idx];
             idx = e.prev;
-            Some((&e.key, &e.value))
+            Some((&e.key, e.value.as_ref().expect("linked entries hold values")))
         })
     }
 }
@@ -251,8 +256,8 @@ mod tests {
         let mut c = LruCache::new(2);
         c.put("a", 1);
         c.put("b", 2);
-        assert!(c.remove(&"a"));
-        assert!(!c.remove(&"a"), "double remove is a no-op");
+        assert_eq!(c.remove(&"a"), Some(1), "remove hands the value back");
+        assert!(c.remove(&"a").is_none(), "double remove is a no-op");
         assert_eq!(c.len(), 1);
         assert!(!c.contains(&"a"));
         // capacity freed: inserting two more evicts only once
@@ -268,14 +273,34 @@ mod tests {
         c.put(1u64, 1u64);
         c.put(2, 2);
         c.put(3, 3);
-        assert!(c.remove(&2));
+        assert_eq!(c.remove(&2), Some(2));
         let order: Vec<u64> = c.iter_lru_to_mru().map(|(k, _)| *k).collect();
         assert_eq!(order, vec![1, 3]);
-        assert!(c.remove(&1)); // tail
-        assert!(c.remove(&3)); // head == tail afterwards empty
+        assert_eq!(c.remove(&1), Some(1)); // tail
+        assert_eq!(c.remove(&3), Some(3)); // head == tail afterwards empty
         assert!(c.is_empty());
         c.put(9, 9);
         assert_eq!(c.get(&9), Some(&9));
+    }
+
+    /// Regression: `remove` used to leave the value alive in the slab
+    /// until the slot was reused, so an evicted sketch could stay
+    /// resident indefinitely in a quiet shard. The value must drop at
+    /// remove time, not at the next insertion.
+    #[test]
+    fn remove_drops_the_value_eagerly() {
+        use std::rc::Rc;
+        let payload = Rc::new(vec![0u8; 64]);
+        let mut c: LruCache<u64, Rc<Vec<u8>>> = LruCache::new(4);
+        c.put(1, Rc::clone(&payload));
+        assert_eq!(Rc::strong_count(&payload), 2);
+        drop(c.remove(&1));
+        // no insertion has reused the slot, yet the clone is gone
+        assert_eq!(
+            Rc::strong_count(&payload),
+            1,
+            "removed value must be dropped immediately, not parked in the slab"
+        );
     }
 
     #[test]

@@ -65,7 +65,7 @@ fn checkpoint_is_identical_at_every_shard_count() {
     let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
     let updates = synth_updates(300, 3000, 0xAB50);
     let cache = 96usize; // < 300 distinct IDs: the eviction regime
-    let opts = ServeOptions { record: false, absorb: true };
+    let opts = ServeOptions { record: false, absorb: true, ..Default::default() };
 
     let cut = |shards: usize| -> AbsorbCheckpoint {
         let mut scorer =
@@ -115,7 +115,7 @@ fn file_checkpoint_resumes_bit_identically_at_a_different_shard_count() {
     let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
     let updates = synth_updates(500, 4000, 0xFEED5);
     let cache = 64usize; // small: real LRU churn crosses the checkpoint
-    let opts = ServeOptions { record: true, absorb: true };
+    let opts = ServeOptions { record: true, absorb: true, ..Default::default() };
 
     // uninterrupted single-shard reference run
     let mut full = ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
@@ -188,7 +188,7 @@ fn live_reshard_mid_stream_drops_nothing_and_stays_bit_identical() {
     let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
     let updates = synth_updates(400, 3500, 0xC0FFEE);
     let cache = 64usize;
-    let opts = ServeOptions { record: true, absorb: true };
+    let opts = ServeOptions { record: true, absorb: true, ..Default::default() };
 
     let mut reference =
         ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
@@ -236,7 +236,7 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
         ens.clone(),
         2,
         32,
-        ServeOptions { record: false, absorb: true },
+        ServeOptions { record: false, absorb: true, ..Default::default() },
         None,
     )
     .unwrap();
@@ -299,7 +299,7 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
         other,
         2,
         32,
-        ServeOptions { record: false, absorb: true },
+        ServeOptions { record: false, absorb: true, ..Default::default() },
         Some(&ckpt),
     );
     assert!(matches!(r.err(), Some(SparxError::InvalidParams(_))), "wrong model must fail");
@@ -308,7 +308,7 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
         ens.clone(),
         2,
         32,
-        ServeOptions { record: false, absorb: false },
+        ServeOptions { record: false, absorb: false, ..Default::default() },
         Some(&ckpt),
     );
     assert!(
@@ -322,7 +322,7 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
             ens.clone(),
             shards,
             cache,
-            ServeOptions { record: false, absorb: true },
+            ServeOptions { record: false, absorb: true, ..Default::default() },
             Some(&ckpt),
         )
         .unwrap_or_else(|e| {
@@ -353,7 +353,7 @@ fn hot_swap_mid_stream_drops_no_updates_and_follows_carry_rules() {
         ens.clone(),
         3,
         256,
-        ServeOptions { record: true, absorb: true },
+        ServeOptions { record: true, absorb: true, ..Default::default() },
         None,
     )
     .unwrap();
@@ -387,7 +387,7 @@ fn hot_swap_mid_stream_drops_no_updates_and_follows_carry_rules() {
         Arc::new(ServedEnsemble::new(&model).unwrap()),
         3,
         256,
-        ServeOptions { record: true, absorb: true },
+        ServeOptions { record: true, absorb: true, ..Default::default() },
         None,
     )
     .unwrap();

@@ -172,7 +172,8 @@ fn synth_updates_file(count: usize, seed: u64) -> (String, Vec<String>) {
     use sparx::data::StreamGen;
     let names: Vec<String> = (0..32).map(|j| format!("f{j}")).collect();
     let mut gen = StreamGen::new(200, names, seed);
-    let lines: Vec<String> = (0..count).map(|_| gen.next_update().to_line()).collect();
+    let lines: Vec<String> =
+        (0..count).map(|_| gen.next_update().to_line().expect("synthetic update renders")).collect();
     let path = write_updates(&(lines.join("\n") + "\n"));
     (path, lines)
 }

@@ -1,0 +1,499 @@
+//! Time-decayed / sliding-window streaming harness: the decayed score
+//! sequence must be a pure function of the **logical clock** (the
+//! global submit sequence), so it is bit-identical to `--shards 1` at
+//! any shard count, across a mid-epoch kill → `--resume` cut at a
+//! *different* shard count, and it must agree with a brute-force
+//! sliding-window oracle assembled from checkpoints of an undecayed
+//! reference run. Named queries (`QUERY ADD`) ride the same clock and
+//! must survive the checkpoint round trip with their blocks intact.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+
+use sparx::api::SparxError;
+use sparx::cluster::ClusterConfig;
+use sparx::data::generators::GisetteGen;
+use sparx::data::UpdateTriple;
+use sparx::sparx::{
+    AbsorbCheckpoint, DecaySpec, ServeOptions, ServedEnsemble, ShardReply, ShardedStreamScorer,
+    SparxModel, SparxParams, StreamScore,
+};
+
+fn fitted(seed: u64) -> SparxModel {
+    let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
+    let ld = GisetteGen { n: 300, d: 16, ..Default::default() }.generate(&ctx).unwrap();
+    SparxModel::fit(
+        &ctx,
+        &ld.dataset,
+        &SparxParams { k: 8, num_chains: 6, depth: 5, seed, ..Default::default() },
+    )
+    .unwrap()
+}
+
+/// Churny deterministic stream: ids recycle (mod `ids`) so a small
+/// cache budget evicts — and therefore absorbs — constantly.
+fn churn(n: usize, ids: u64) -> Vec<UpdateTriple> {
+    (0..n)
+        .map(|i| UpdateTriple::Num {
+            id: (i as u64).wrapping_mul(7).wrapping_add(3) % ids,
+            feature: format!("f{}", i % 16),
+            delta: ((i % 13) as f64 - 6.0) * 0.25,
+        })
+        .collect()
+}
+
+fn temp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sparx-decay-test-{}-{tag}.sparx", std::process::id()))
+        .to_str()
+        .expect("utf-8 temp path")
+        .to_string()
+}
+
+// ------------------------------------------------- overlay arithmetic
+// Brute-force helpers over the checkpoint's sorted-levels encoding
+// (`Vec<Vec<(bucket, count)>>`, one inner vec per chain·depth level).
+
+type Levels = Vec<Vec<(u32, u32)>>;
+
+fn to_maps(levels: &Levels) -> Vec<HashMap<u32, u32>> {
+    levels.iter().map(|lvl| lvl.iter().copied().collect()).collect()
+}
+
+fn to_sorted(maps: &[HashMap<u32, u32>]) -> Levels {
+    maps.iter()
+        .map(|m| {
+            let mut v: Vec<(u32, u32)> = m.iter().map(|(&b, &c)| (b, c)).collect();
+            v.sort_unstable_by_key(|&(b, _)| b);
+            v
+        })
+        .collect()
+}
+
+/// Published increments between two cuts of an **undecayed** run, whose
+/// visible overlay only ever grows: `later − earlier`, per level. An
+/// `earlier` with no levels at all stands for the t=0 empty overlay.
+fn block_between(later: &Levels, earlier: &Levels) -> Vec<HashMap<u32, u32>> {
+    let earlier = to_maps(earlier);
+    later
+        .iter()
+        .enumerate()
+        .map(|(i, lvl)| {
+            lvl.iter()
+                .map(|&(bucket, count)| {
+                    let before =
+                        earlier.get(i).and_then(|m| m.get(&bucket)).copied().unwrap_or(0);
+                    assert!(count >= before, "an undecayed overlay must be monotone");
+                    (bucket, count - before)
+                })
+                .filter(|&(_, c)| c > 0)
+                .collect()
+        })
+        .collect()
+}
+
+fn add_into(acc: &mut [HashMap<u32, u32>], inc: &[HashMap<u32, u32>]) {
+    for (a, i) in acc.iter_mut().zip(inc) {
+        for (&bucket, &count) in i {
+            let c = a.entry(bucket).or_insert(0);
+            *c = c.saturating_add(count);
+        }
+    }
+}
+
+/// The exact floor-halving the scorer applies: `c >>= 1`, drop zeros.
+fn halve(acc: &mut [HashMap<u32, u32>]) {
+    for a in acc.iter_mut() {
+        a.retain(|_, c| {
+            *c >>= 1;
+            *c > 0
+        });
+    }
+}
+
+fn any_nonempty(levels: &Levels) -> bool {
+    levels.iter().any(|l| !l.is_empty())
+}
+
+// ---------------------------------------------------------- the tests
+
+/// The tentpole invariant with decay on: half-life halving and window
+/// rotation are driven off the global submit sequence, so the recorded
+/// decayed score log — under eviction churn — is bit-identical at any
+/// shard count, and so is the checkpoint (modulo the informational
+/// `shards` field).
+#[test]
+fn decayed_window_scores_are_identical_at_every_shard_count() {
+    let model = fitted(0xDECA);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let updates = churn(3500, 300);
+    let cache = 96usize; // < 300 distinct ids: the eviction regime
+    let decay = DecaySpec::new(512, 512); // halve and rotate, coinciding
+
+    let run = |shards: usize, decay: DecaySpec| -> (Vec<StreamScore>, AbsorbCheckpoint) {
+        let opts = ServeOptions { record: true, absorb: true, decay };
+        let mut scorer =
+            ShardedStreamScorer::from_ensemble(ens.clone(), shards, cache, opts, None).unwrap();
+        for u in &updates {
+            scorer.submit(u.clone());
+        }
+        let ckpt = scorer.checkpoint().unwrap();
+        let report = scorer.finish();
+        assert_eq!(report.processed(), updates.len() as u64, "S={shards}: lost updates");
+        assert!(report.evictions() > 0, "S={shards}: harness requires the eviction regime");
+        (report.merged_scores(), ckpt)
+    };
+
+    let (want_scores, want_ckpt) = run(1, decay);
+    assert_eq!(want_ckpt.half_life, 512);
+    assert_eq!(want_ckpt.window, 512);
+    // the schedule must be *live*: halving/rotating the absorbed overlay
+    // has to move scores relative to the accumulate-forever behaviour
+    let (undecayed, _) = run(1, DecaySpec::default());
+    assert_ne!(want_scores, undecayed, "a 512/512 schedule must change decayed scores");
+    for shards in [2usize, 4] {
+        let (scores, mut ckpt) = run(shards, decay);
+        assert_eq!(scores.len(), want_scores.len());
+        for (i, (got, wanted)) in scores.iter().zip(&want_scores).enumerate() {
+            assert_eq!(got, wanted, "S={shards}: decayed stream diverged at submit #{i}");
+        }
+        ckpt.shards = want_ckpt.shards; // the one informational field
+        assert_eq!(ckpt, want_ckpt, "S={shards}: decay state leaked the shard layout");
+    }
+}
+
+/// Satellite: the checkpoint cut lands mid-absorb-epoch (2000 % 256 ≠ 0
+/// — unpublished pending increments in flight) *and* mid-window (2000 %
+/// 512 ≠ 0), with a rotated `prev` block live. Kill, resume from the
+/// file at a different shard count, and the concatenated score log is
+/// still bit-identical to the uninterrupted single-shard run.
+#[test]
+fn mid_epoch_decay_checkpoint_resumes_bit_identically_across_shard_counts() {
+    let model = fitted(0x11D0);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let updates = churn(4000, 500);
+    let cache = 64usize;
+    let opts =
+        ServeOptions { record: true, absorb: true, decay: DecaySpec::new(0, 512) };
+
+    let mut full = ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+    for u in &updates {
+        full.submit(u.clone());
+    }
+    let full_report = full.finish();
+    assert!(full_report.evictions() > 0, "harness requires the eviction regime");
+    let want = full_report.merged_scores();
+
+    let cut = 2000usize; // 2000 % 256 = 208 and 2000 % 512 = 464: doubly mid-period
+    let mut first = ShardedStreamScorer::from_ensemble(ens.clone(), 3, cache, opts, None).unwrap();
+    for u in &updates[..cut] {
+        first.submit(u.clone());
+    }
+    let ckpt = first.checkpoint().unwrap();
+    let path = temp_path("mid-epoch-resume");
+    ckpt.save(&path, ckpt.manifest_for("in-memory")).unwrap();
+    let part1 = first.finish().merged_scores();
+
+    let loaded = AbsorbCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(loaded, ckpt, "file round trip must be exact");
+    assert_eq!((loaded.half_life, loaded.window), (0, 512), "the schedule must persist");
+    assert!(
+        loaded.pending.iter().any(|l| !l.is_empty()),
+        "a mid-epoch cut must carry unpublished increments"
+    );
+    assert!(
+        any_nonempty(&loaded.prev_visible),
+        "a mid-window cut after three rotations must carry a prev block"
+    );
+
+    for resume_shards in [5usize, 1] {
+        let mut second = ShardedStreamScorer::from_ensemble(
+            ens.clone(),
+            resume_shards,
+            cache,
+            opts,
+            Some(&loaded),
+        )
+        .unwrap();
+        assert_eq!(second.submitted(), cut as u64, "the logical clock resumes mid-period");
+        for u in &updates[cut..] {
+            second.submit(u.clone());
+        }
+        let part2 = second.finish().merged_scores();
+        assert_eq!(part1.len() + part2.len(), want.len());
+        let resumed: Vec<StreamScore> = part1.iter().cloned().chain(part2).collect();
+        for (i, (got, wanted)) in resumed.iter().zip(&want).enumerate() {
+            assert_eq!(got, wanted, "S=3→S={resume_shards}: diverged at submit #{i}");
+        }
+    }
+}
+
+/// Brute-force oracle. An undecayed reference run's visible overlay is
+/// cumulative, so checkpoints cut at the decay boundaries recover each
+/// period's published increment by subtraction; folding those blocks
+/// through rotate/halve by hand must reproduce the decayed runs'
+/// overlays exactly. Boundaries are multiples of the 256-submit absorb
+/// epoch, so the publish schedule of all three runs is identical.
+#[test]
+fn sliding_window_and_half_life_overlays_match_a_brute_force_oracle() {
+    let model = fitted(0x04AC);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let updates = churn(2900, 200);
+    let cache = 64usize;
+    let period = 512usize;
+    let boundaries = [512usize, 1024, 1536, 2048, 2560];
+    let t_final = updates.len(); // 2900: mid-period, publishes at 2816 live
+
+    // one undecayed pass, checkpointing at every boundary and at the end
+    let plain = ServeOptions { record: false, absorb: true, ..Default::default() };
+    let mut cumulative: HashMap<usize, Levels> = HashMap::new();
+    cumulative.insert(0, Vec::new()); // the t=0 empty overlay
+    {
+        let mut scorer =
+            ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, plain, None).unwrap();
+        let mut cut_points: Vec<usize> = boundaries.to_vec();
+        cut_points.push(t_final);
+        let mut at = 0usize;
+        for &stop in &cut_points {
+            for u in &updates[at..stop] {
+                scorer.submit(u.clone());
+            }
+            at = stop;
+            cumulative.insert(stop, scorer.checkpoint().unwrap().visible);
+        }
+        drop(scorer.finish());
+    }
+
+    let decayed_cut = |spec: DecaySpec| -> AbsorbCheckpoint {
+        let opts = ServeOptions { record: false, absorb: true, decay: spec };
+        let mut scorer =
+            ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+        for u in &updates {
+            scorer.submit(u.clone());
+        }
+        let ckpt = scorer.checkpoint().unwrap();
+        drop(scorer.finish());
+        ckpt
+    };
+
+    // --- window only: cur = published in (2560, 2900], prev = (2048, 2560]
+    let windowed = decayed_cut(DecaySpec::new(0, period as u64));
+    let want_cur = to_sorted(&block_between(&cumulative[&t_final], &cumulative[&2560]));
+    let want_prev = to_sorted(&block_between(&cumulative[&2560], &cumulative[&2048]));
+    assert!(any_nonempty(&want_cur), "oracle harness: the live block must be non-trivial");
+    assert!(any_nonempty(&want_prev), "oracle harness: the prev block must be non-trivial");
+    assert_eq!(windowed.visible, want_cur, "windowed live block diverged from the oracle");
+    assert_eq!(windowed.prev_visible, want_prev, "windowed prev block diverged from the oracle");
+
+    // --- half-life only: fold acc = halve(acc + period increment) at
+    // every boundary (publish lands *before* the halve), then add the
+    // trailing partial period; no window → the prev block stays empty
+    let halved = decayed_cut(DecaySpec::new(period as u64, 0));
+    let levels = halved.visible.len();
+    let mut acc: Vec<HashMap<u32, u32>> = vec![HashMap::new(); levels];
+    let mut prev_t = 0usize;
+    for &b in &boundaries {
+        add_into(&mut acc, &block_between(&cumulative[&b], &cumulative[&prev_t]));
+        halve(&mut acc);
+        prev_t = b;
+    }
+    add_into(&mut acc, &block_between(&cumulative[&t_final], &cumulative[&prev_t]));
+    let want_halved = to_sorted(&acc);
+    assert!(any_nonempty(&want_halved), "oracle harness: halved mass must survive");
+    assert_eq!(halved.visible, want_halved, "half-life overlay diverged from the oracle");
+    assert!(!any_nonempty(&halved.prev_visible), "no window → no rotated block");
+}
+
+/// Named queries: registration/drop are typed and feeder-side, probes
+/// answer deterministically (bit-equal to an uninterrupted reference at
+/// the same clock position), and the full query state — spec, blocks,
+/// served counter — survives checkpoint → kill → resume at a different
+/// shard count.
+#[test]
+fn named_queries_survive_checkpoint_resume_and_score_identically() {
+    let model = fitted(0x9E44);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let updates = churn(3000, 300);
+    let cache = 96usize;
+    let opts = ServeOptions { record: false, absorb: true, ..Default::default() };
+
+    // probing a query must not perturb the stream, so the reference and
+    // the interrupted run may probe at the same clock positions freely
+    let probe = |scorer: &mut ShardedStreamScorer, id: u64, name: &str| -> f64 {
+        let (tx, rx) = mpsc::channel();
+        scorer.score_named(id, name, tx).unwrap();
+        match rx.recv().unwrap() {
+            ShardReply::QueryNamed { id: got, name: n, score } => {
+                assert_eq!((got, n.as_str()), (id, name));
+                score.unwrap_or_else(|| panic!("{id} was just updated and must be resident"))
+            }
+            other => panic!("expected QueryNamed, got {other:?}"),
+        }
+    };
+    let add_all = |scorer: &mut ShardedStreamScorer| {
+        scorer.query_add("w-512", 0, 512).unwrap();
+        scorer.query_add("hl-512", 512, 0).unwrap();
+        scorer.query_add("cum", 0, 0).unwrap();
+    };
+    let names = ["w-512", "hl-512", "cum"];
+    let mid_id = updates[2599].id(); // MRU at the first probe point
+    let end_id = updates[2999].id(); // MRU at the second probe point
+
+    // uninterrupted single-shard reference
+    let mut reference =
+        ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+    let mut want_mid = Vec::new();
+    let mut want_end = Vec::new();
+    for (i, u) in updates.iter().enumerate() {
+        if i == 1000 {
+            add_all(&mut reference);
+        }
+        if i == 2600 {
+            want_mid = names.map(|n| probe(&mut reference, mid_id, n)).to_vec();
+        }
+        reference.submit(u.clone());
+    }
+    for n in names {
+        want_end.push(probe(&mut reference, end_id, n));
+    }
+    drop(reference.finish());
+
+    // interrupted run at S=2: register at the same clock position, probe
+    // at 2600, checkpoint mid-epoch (2600 % 256 = 40), tear down
+    let mut first = ShardedStreamScorer::from_ensemble(ens.clone(), 2, cache, opts, None).unwrap();
+    for (i, u) in updates[..2600].iter().enumerate() {
+        if i == 1000 {
+            add_all(&mut first);
+
+            // the typed error paths, while the queries are live
+            assert!(matches!(
+                first.query_add("cum", 1, 1),
+                Err(SparxError::InvalidParams(_))
+            ));
+            assert!(matches!(first.query_drop("ghost"), Err(SparxError::InvalidParams(_))));
+            assert!(matches!(
+                first.query_add("bad name", 0, 0),
+                Err(SparxError::InvalidParams(_))
+            ));
+            first.query_add("doomed", 7, 0).unwrap();
+            first.query_drop("doomed").unwrap();
+        }
+        first.submit(u.clone());
+    }
+    let got_mid: Vec<f64> = names.map(|n| probe(&mut first, mid_id, n)).to_vec();
+    for (n, (got, want)) in names.iter().zip(got_mid.iter().zip(&want_mid)) {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "query {n}: probe at submit 2600 diverged from the reference"
+        );
+    }
+    assert!(matches!(first.score_named(1, "ghost", mpsc::channel().0), Err(_)));
+    let ckpt = first.checkpoint().unwrap();
+    drop(first.finish());
+    assert_eq!(ckpt.queries.len(), 3, "all registered queries persist");
+    let q = &ckpt.queries[0];
+    assert_eq!((q.name.as_str(), q.half_life, q.window, q.scored), ("w-512", 0, 512, 1));
+    assert!(q.cur.iter().any(|l| !l.is_empty()) || q.prev.iter().any(|l| !l.is_empty()));
+
+    // "new process" at S=3: the query layer resumes with blocks intact
+    let bytes = ckpt.to_artifact().to_bytes();
+    let loaded =
+        AbsorbCheckpoint::from_artifact(&sparx::api::ModelArtifact::from_bytes(&bytes).unwrap())
+            .unwrap();
+    let mut second =
+        ShardedStreamScorer::from_ensemble(ens.clone(), 3, cache, opts, Some(&loaded)).unwrap();
+    let listed = second.query_list();
+    assert_eq!(listed.len(), 3);
+    for (info, rec) in listed.iter().zip(&loaded.queries) {
+        assert_eq!(
+            (info.name.as_str(), info.half_life, info.window, info.scored),
+            (rec.name.as_str(), rec.half_life, rec.window, rec.scored)
+        );
+    }
+    for u in &updates[2600..] {
+        second.submit(u.clone());
+    }
+    for (n, want) in names.iter().zip(&want_end) {
+        let got = probe(&mut second, end_id, n);
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "query {n}: probe after kill→resume diverged from the uninterrupted run"
+        );
+    }
+    drop(second.finish());
+
+    // registering a query without absorb mode is a typed error
+    let mut plain = ShardedStreamScorer::from_ensemble(
+        ens,
+        1,
+        cache,
+        ServeOptions { record: false, absorb: false, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    assert!(matches!(plain.query_add("w", 0, 8), Err(SparxError::InvalidParams(_))));
+    drop(plain.finish());
+}
+
+/// A resume whose decay schedule differs from the checkpoint's would
+/// silently fork the score sequence — every mismatch must fail typed,
+/// and the matching schedule must restore.
+#[test]
+fn decay_schedule_mismatch_on_resume_fails_typed() {
+    let model = fitted(0x5CED);
+    let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
+    let spec = DecaySpec::new(512, 512);
+    let mut scorer = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        2,
+        32,
+        ServeOptions { record: false, absorb: true, decay: spec },
+        None,
+    )
+    .unwrap();
+    for u in churn(1500, 100) {
+        scorer.submit(u);
+    }
+    let ckpt = scorer.checkpoint().unwrap();
+    drop(scorer.finish());
+
+    for wrong in
+        [DecaySpec::default(), DecaySpec::new(512, 1024), DecaySpec::new(256, 512)]
+    {
+        let r = ShardedStreamScorer::from_ensemble(
+            ens.clone(),
+            2,
+            32,
+            ServeOptions { record: false, absorb: true, decay: wrong },
+            Some(&ckpt),
+        );
+        assert!(
+            matches!(r.err(), Some(SparxError::InvalidParams(_))),
+            "schedule {wrong:?} against a (512, 512) checkpoint must be rejected"
+        );
+    }
+    // decay without absorb is incoherent regardless of the checkpoint
+    let r = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        2,
+        32,
+        ServeOptions { record: false, absorb: false, decay: spec },
+        Some(&ckpt),
+    );
+    assert!(matches!(r.err(), Some(SparxError::InvalidParams(_))));
+
+    // the matching schedule restores and continues the clock mid-period
+    let ok = ShardedStreamScorer::from_ensemble(
+        ens,
+        3,
+        32,
+        ServeOptions { record: false, absorb: true, decay: spec },
+        Some(&ckpt),
+    )
+    .unwrap();
+    assert_eq!(ok.submitted(), 1500);
+    drop(ok.finish());
+}
