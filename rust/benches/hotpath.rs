@@ -19,6 +19,10 @@
 //!   * `artifact` — model artifact serialize / load + framed sizes
 //!   * `stream`   — streaming δ-update + rescore, quantized-CMS resident
 //!                  sizes
+//!   * `ensemble` — heterogeneous-member ensembles: the LPT scheduling
+//!                  kernel vs round-robin (assignment cost + predicted
+//!                  makespan over a skewed measured-cost profile) and
+//!                  the end-to-end six-member fit under both schedules
 //!   * `serve`    — sharded serve throughput at S = 1, 2, 4, 8 (CI
 //!                  publishes its lines as the step summary)
 //!   * `net`      — serve-over-TCP throughput through the real wire
@@ -51,8 +55,10 @@ use sparx::sparx::{
 };
 use sparx::util::{Json, Rng};
 
-const SECTIONS: &[&str] =
-    &["bins", "cms", "project", "pjrt", "dist", "artifact", "stream", "serve", "net", "decay"];
+const SECTIONS: &[&str] = &[
+    "bins", "cms", "project", "pjrt", "dist", "artifact", "stream", "ensemble", "serve", "net",
+    "decay",
+];
 
 /// One timed result, as printed and as written to `BENCH_hotpath.json`.
 struct Entry {
@@ -416,6 +422,65 @@ fn run_sections(rec: &mut Recorder) {
             acc
         });
     }
+
+    // --- ensemble: heterogeneous members behind one spec string. Two
+    //     timed kernels (the LPT packer vs the naive baseline over a
+    //     skewed cost profile), the makespan each schedule predicts
+    //     (printed + asserted: LPT never loses), then the end-to-end
+    //     six-member fit under both schedules — same members, same
+    //     seeds, only worker placement moves, so the wall-clock gap is
+    //     the scheduling win (scores are bit-identical under either
+    //     schedule; tests/ensemble.rs holds that contract)
+    if rec.runs("ensemble") {
+        use sparx::api::{registry, Detector as _, FittedModel as _};
+        use sparx::cluster::ClusterConfig;
+        use sparx::data::generators::GisetteGen;
+        use sparx::ensemble::cost::{assign_balanced, assign_round_robin, makespan};
+
+        // skewed measured-cost profile (µs): a few dominant members over
+        // a cheap tail — the shape real four-kind ensembles produce
+        let costs: Vec<u64> = (0..64)
+            .map(|i| if i % 16 == 0 { 9_000 } else { 80 + (i as u64 % 7) * 20 })
+            .collect();
+        let workers = 4usize;
+        rec.bench("ensemble", "schedule assign_balanced n=64 W=4 (per member)", 64, || {
+            assign_balanced(&costs, workers).iter().map(|&w| w as u64).sum()
+        });
+        rec.bench("ensemble", "schedule assign_round_robin n=64 W=4 (per member)", 64, || {
+            assign_round_robin(costs.len(), workers).iter().map(|&w| w as u64).sum()
+        });
+        let balanced = makespan(&costs, &assign_balanced(&costs, workers), workers);
+        let naive = makespan(&costs, &assign_round_robin(costs.len(), workers), workers);
+        assert!(balanced <= naive, "LPT must never lose to round-robin");
+        println!(
+            "ensemble makespan W={workers}  balanced {balanced} µs  \
+             round-robin {naive} µs  ({:.2}x better)",
+            naive as f64 / balanced.max(1) as f64
+        );
+
+        // six members over two pool workers, so the schedules genuinely
+        // diverge (with members ≤ workers both place one per worker and
+        // the gap would be zero by construction): round-robin stacks the
+        // dominant sparx with two mid-cost members on worker 0, LPT
+        // gives it a worker to itself
+        let ctx =
+            ClusterConfig { num_partitions: 4, num_workers: 2, ..Default::default() }.build();
+        let fit_n = 600;
+        let ld = GisetteGen { n: fit_n, d: 64, ..Default::default() }.generate(&ctx).unwrap();
+        for sched in ["balanced", "round-robin"] {
+            let spec = format!(
+                "ensemble?members=sparx:k=25:chains=25:depth=10,xstream:k=10:depth=8,\
+                 spif:trees=12:depth=8,dbscout:min-pts=4,xstream:k=8:depth=6,\
+                 spif:trees=8:depth=6&seed=7&schedule={sched}"
+            );
+            let det = registry::create(&spec).unwrap();
+            let name = format!("ensemble fit 6 members W=2 [{sched}] (per point)");
+            rec.bench("ensemble", &name, fit_n as u64, || {
+                let model = det.fit(&ctx, &ld.dataset).unwrap();
+                model.score(&ctx, &ld.dataset).unwrap().len() as u64
+            });
+        }
+    }
 }
 
 /// Serve-throughput ladder: one fixed synthetic update sequence replayed
@@ -636,10 +701,14 @@ fn decay_throughput(rec: &Recorder) -> Option<DecayData> {
     ];
     let mut results = Vec::new();
     for (label, decay) in arms {
-        let opts = ServeOptions { record: false, absorb: true, decay };
+        let opts = ServeOptions { record: false, absorb: true, decay, ..Default::default() };
         let ensemble = Arc::new(ServedEnsemble::new(&model).unwrap());
         let mut scorer =
-            ShardedStreamScorer::from_ensemble(ensemble, shards, cache_total, opts, None)
+            ShardedStreamScorer::from_ensemble(
+        ensemble,
+        opts.shards(shards).cache(cache_total),
+        None,
+    )
                 .unwrap();
         let replay = updates.clone();
         let t0 = std::time::Instant::now();
@@ -689,6 +758,12 @@ fn write_hotpath_json(rec: &Recorder) {
         rec.ns_of("tile_bins_multi dispatched M=10 (per point·chain)"),
     ) {
         derived.push(("tile_bins_multi_speedup_vs_reference", Json::Num(s)));
+    }
+    if let Some(s) = speedup(
+        rec.ns_of("ensemble fit 6 members W=2 [round-robin] (per point)"),
+        rec.ns_of("ensemble fit 6 members W=2 [balanced] (per point)"),
+    ) {
+        derived.push(("ensemble_balanced_fit_speedup_vs_round_robin", Json::Num(s)));
     }
     let doc = Json::obj(vec![
         ("schema", Json::Str("sparx-bench-hotpath/1".into())),

@@ -115,9 +115,7 @@ fn main() {
     );
     let mut sharded = ShardedStreamScorer::from_ensemble(
         ensemble.clone(),
-        shards,
-        4096 / shards,
-        ServeOptions::default(),
+        ServeOptions::default().shards(shards).cache(4096 / shards),
         None,
     )
     .unwrap();
@@ -148,9 +146,7 @@ fn main() {
     // stream exactly where the first process left off
     let mut resumed = ShardedStreamScorer::from_ensemble(
         ensemble,
-        shards,
-        4096 / shards,
-        ServeOptions::default(),
+        ServeOptions::default().shards(shards).cache(4096 / shards),
         Some(&checkpoint),
     )
     .unwrap();

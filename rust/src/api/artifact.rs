@@ -73,9 +73,12 @@ pub const MAGIC: [u8; 4] = *b"SPRX";
 /// at the layout. v4 changes only the absorb-state checkpoint payload
 /// (global recency-tagged entries instead of per-shard snapshots — see
 /// [`crate::sparx::checkpoint`]); v5 appends the checkpoint's decay
-/// state (half-life/window schedule, prev window block, named queries).
-/// Fitted-model blocks are byte-identical to v3.
-pub const FORMAT_VERSION: u16 = 5;
+/// state (half-life/window schedule, prev window block, named queries);
+/// v6 introduces the `"ensemble"` artifact kind, whose payload nests one
+/// complete child artifact per member (see [`crate::ensemble`]).
+/// Fitted-model blocks for the single-method detectors are
+/// byte-identical to v3.
+pub const FORMAT_VERSION: u16 = 6;
 
 /// Name of the provenance extension block.
 const MANIFEST_BLOCK: &str = "manifest";

@@ -10,8 +10,8 @@ use crate::data::Dataset;
 use crate::runtime::{PjrtBinner, PjrtEngine};
 use crate::sparx::chain::{Binner, NativeBinner};
 use crate::sparx::{
-    project_dataset, ExecMode, ScoreMode, ServedEnsemble, ShardedStreamScorer, SparxModel,
-    SparxParams, StreamScorer,
+    project_dataset, ExecMode, ScoreMode, ServeOptions, ServedEnsemble, ShardedStreamScorer,
+    SparxModel, SparxParams, StreamScorer,
 };
 use crate::util::codec::{CodecResult, Decoder, Encoder};
 
@@ -274,6 +274,13 @@ impl FittedSparx {
         &self.model
     }
 
+    /// Wrap an already-fitted model with the native backend — how the
+    /// ensemble layer adopts sparx members (and distilled students) fit
+    /// through the raw `SparxModel` API.
+    pub(crate) fn from_model(model: SparxModel) -> FittedSparx {
+        FittedSparx { model, backend: BackendRuntime::Native }
+    }
+
     /// The fitted state the artifact payload carries: projector seeds +
     /// Δmax + every chain's sampled parameters and CMS blocks. The
     /// O(D·K) dense sign matrix is *not* shipped — it rematerialises
@@ -397,12 +404,12 @@ impl FittedModel for FittedSparx {
         StreamScorer::new(&self.model, cache_size)
     }
 
-    fn stream_scorer_sharded(
-        &self,
-        shards: usize,
-        cache_total: usize,
-    ) -> Result<ShardedStreamScorer> {
-        ShardedStreamScorer::new(&self.model, shards, cache_total)
+    fn stream_scorer_sharded(&self, opts: ServeOptions) -> Result<ShardedStreamScorer> {
+        ShardedStreamScorer::from_ensemble(
+            std::sync::Arc::new(ServedEnsemble::new(&self.model)?),
+            opts,
+            None,
+        )
     }
 
     fn served_ensemble(&self) -> Result<std::sync::Arc<ServedEnsemble>> {

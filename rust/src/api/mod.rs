@@ -51,17 +51,22 @@ pub mod artifact;
 pub mod builder;
 pub mod error;
 pub mod registry;
+pub mod spec;
+pub mod validate;
 
 pub use artifact::ModelArtifact;
 pub use builder::{Backend, FittedSparx, SparxBuilder, SparxDetector};
 pub use error::{Result, SparxError};
 pub use registry::DetectorSpec;
+pub use spec::MethodSpec;
 
 use std::sync::Arc;
 
 use crate::cluster::ClusterContext;
 use crate::data::Dataset;
-use crate::sparx::{Projector, ServedEnsemble, ShardedStreamScorer, StreamScorer};
+use crate::sparx::{
+    MemberInfo, Projector, ServeOptions, ServedEnsemble, ShardedStreamScorer, StreamScorer,
+};
 
 /// A configured-but-unfitted outlier detector. The one contract every
 /// method implements; the CLI, the experiment harnesses and the examples
@@ -108,21 +113,19 @@ pub trait FittedModel {
         )))
     }
 
-    /// Open the **sharded** concurrent front-end: `shards` shared-nothing
-    /// workers (updates route by `murmur(ID) % shards`) behind one
-    /// feeder-owned LRU directory holding `cache_total` IDs **in total**.
-    /// Eviction decisions are made globally by the feeder, so the shard
-    /// count is pure parallelism: per-ID score sequences are
-    /// bit-identical to a single-threaded
-    /// [`stream_scorer`](Self::stream_scorer) with the same total cache,
-    /// at *any* `shards` — including across a live re-shard or a
-    /// checkpoint/resume that changes the count. Default: unsupported.
-    fn stream_scorer_sharded(
-        &self,
-        shards: usize,
-        cache_total: usize,
-    ) -> Result<ShardedStreamScorer> {
-        let _ = (shards, cache_total);
+    /// Open the **sharded** concurrent front-end: `opts.shards`
+    /// shared-nothing workers (updates route by `murmur(ID) % shards`)
+    /// behind one feeder-owned LRU directory holding `opts.cache_total`
+    /// IDs **in total**, with recording / absorb / decay behaviour
+    /// selected by the remaining [`ServeOptions`] fields. Eviction
+    /// decisions are made globally by the feeder, so the shard count is
+    /// pure parallelism: per-ID score sequences are bit-identical to a
+    /// single-threaded [`stream_scorer`](Self::stream_scorer) with the
+    /// same total cache, at *any* shard count — including across a live
+    /// re-shard or a checkpoint/resume that changes it.
+    /// Default: unsupported.
+    fn stream_scorer_sharded(&self, opts: ServeOptions) -> Result<ShardedStreamScorer> {
+        let _ = opts;
         Err(SparxError::Unsupported(format!(
             "{} has no evolving-stream front-end (only sparx does)",
             self.name()
@@ -140,6 +143,15 @@ pub trait FittedModel {
             "{} has no evolving-stream front-end (only sparx does)",
             self.name()
         )))
+    }
+
+    /// Per-member provenance for composite models: one [`MemberInfo`]
+    /// row per ensemble member (spec, kind, measured fit/score cost,
+    /// pool worker, distillation lineage, which member serves streams).
+    /// Surfaces in `STATS` / `METRICS` on the serving plane.
+    /// Default: empty (single-method models have no members).
+    fn member_info(&self) -> Vec<MemberInfo> {
+        Vec::new()
     }
 }
 

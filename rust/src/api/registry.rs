@@ -13,11 +13,13 @@ use crate::baselines::dbscout::{DbscoutDetector, FittedDbscout};
 use crate::baselines::spif::SpifDetector;
 use crate::baselines::xstream::XStreamDetector;
 use crate::baselines::{DbscoutParams, Spif, SpifParams, XStream, XStreamParams};
+use crate::ensemble::Schedule;
 use crate::sparx::ExecMode;
 
 use super::artifact::ModelArtifact;
 use super::builder::{Backend, FittedSparx, SparxBuilder};
 use super::error::{Result, SparxError};
+use super::spec::MethodSpec;
 use super::{Detector, FittedModel};
 
 /// Flag-level description of a detector run. `None` fields fall back to
@@ -48,6 +50,16 @@ pub struct DetectorSpec {
     pub eps: Option<f64>,
     /// DBSCOUT minPts.
     pub min_pts: Option<usize>,
+    /// Ensemble member list, e.g. `"sparx:depth=6,xstream"` (None ⇒
+    /// [`crate::ensemble::DEFAULT_MEMBERS`]).
+    pub members: Option<String>,
+    /// Ensemble: distill a cheap sparx student for the serve path.
+    pub distill: bool,
+    /// Ensemble: share one projector among `(k, density)`-compatible
+    /// members (default on).
+    pub share: bool,
+    /// Ensemble member-to-worker packing.
+    pub schedule: Schedule,
 }
 
 impl Default for DetectorSpec {
@@ -63,6 +75,10 @@ impl Default for DetectorSpec {
             pjrt_variant: None,
             eps: None,
             min_pts: None,
+            members: None,
+            distill: false,
+            share: true,
+            schedule: Schedule::Balanced,
         }
     }
 }
@@ -75,6 +91,7 @@ const REGISTRY: &[(&str, Factory)] = &[
     ("xstream", make_xstream),
     ("spif", make_spif),
     ("dbscout", make_dbscout),
+    ("ensemble", make_ensemble),
 ];
 
 /// Names of every registered detector.
@@ -95,6 +112,130 @@ pub fn build(name: &str, spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
                 .unwrap_or_default();
             Err(SparxError::UnknownDetector(format!("{name:?} (expected {names}){hint}")))
         }
+    }
+}
+
+/// Build a detector from a full spec string — `name` alone or
+/// `name?key=val&key=val` (e.g. `"sparx?depth=12&rate=0.05"`,
+/// `"ensemble?members=sparx,xstream&distill=true"`). The parameterized
+/// front of the registry: one grammar ([`MethodSpec`]) shared by the
+/// CLI's `--method`, member specs inside `members=`, and this call.
+pub fn create(spec_text: &str) -> Result<Box<dyn Detector>> {
+    let ms = MethodSpec::parse(spec_text)?;
+    let mut spec = DetectorSpec::default();
+    apply_spec_string(&ms, &mut spec)?;
+    build(&ms.name, &spec)
+}
+
+/// Overlay a parsed spec string's `key=val` pairs onto a
+/// [`DetectorSpec`] (spec-string values win — the CLI calls this
+/// *after* applying flags). Unknown method names are left for
+/// [`build`]'s typed error; unknown keys fail here with a
+/// suggestion.
+pub fn apply_spec_string(ms: &MethodSpec, spec: &mut DetectorSpec) -> Result<()> {
+    if REGISTRY.iter().all(|(n, _)| *n != ms.name) {
+        return Ok(());
+    }
+    for (key, value) in &ms.params {
+        apply_key(&ms.name, key, value, spec)?;
+    }
+    Ok(())
+}
+
+/// The spec-string keys each method understands.
+pub(crate) fn known_keys(method: &str) -> &'static [&'static str] {
+    match method {
+        "sparx" => &["k", "chains", "depth", "rate", "seed", "exec"],
+        "xstream" => &["k", "chains", "depth", "seed"],
+        "spif" => &["trees", "depth", "rate", "seed"],
+        "dbscout" => &["eps", "min-pts"],
+        "ensemble" => &["members", "distill", "share", "schedule", "seed"],
+        _ => &[],
+    }
+}
+
+/// Apply one `key=val` pair to a [`DetectorSpec`]. Unknown keys and
+/// unparsable values fail typed (`InvalidParams`), with an
+/// edit-distance suggestion for near-misses.
+pub(crate) fn apply_key(
+    method: &str,
+    key: &str,
+    value: &str,
+    spec: &mut DetectorSpec,
+) -> Result<()> {
+    let keys = known_keys(method);
+    if !keys.contains(&key) {
+        let hint = crate::util::closest_match(key, keys)
+            .map(|s| format!(" — did you mean {s:?}?"))
+            .unwrap_or_default();
+        return Err(SparxError::InvalidParams(format!(
+            "unknown {method} option {key:?} (expected {}){hint}",
+            keys.join("|")
+        )));
+    }
+    match key {
+        "k" => spec.k = Some(parse_usize(key, value)?),
+        "chains" | "trees" => spec.components = Some(parse_usize(key, value)?),
+        "depth" => spec.depth = Some(parse_usize(key, value)?),
+        "rate" => spec.sample_rate = Some(parse_f64(key, value)?),
+        "seed" => spec.seed = Some(parse_u64(key, value)?),
+        "exec" => {
+            spec.exec_mode = match value {
+                "fused" => ExecMode::Fused,
+                "per-chain" => ExecMode::PerChain,
+                other => {
+                    return Err(SparxError::InvalidParams(format!(
+                        "exec expects fused|per-chain: got {other:?}"
+                    )))
+                }
+            }
+        }
+        "eps" => spec.eps = Some(parse_f64(key, value)?),
+        "min-pts" => spec.min_pts = Some(parse_usize(key, value)?),
+        "members" => spec.members = Some(value.to_string()),
+        "distill" => spec.distill = parse_bool(key, value)?,
+        "share" => spec.share = parse_bool(key, value)?,
+        "schedule" => {
+            spec.schedule = Schedule::parse(value).ok_or_else(|| {
+                SparxError::InvalidParams(format!(
+                    "schedule expects balanced|round-robin: got {value:?}"
+                ))
+            })?
+        }
+        other => {
+            return Err(SparxError::InvalidParams(format!(
+                "unhandled {method} option {other:?}"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn parse_usize(key: &str, value: &str) -> Result<usize> {
+    value.parse().map_err(|_| {
+        SparxError::InvalidParams(format!("{key} expects a non-negative integer: got {value:?}"))
+    })
+}
+
+fn parse_u64(key: &str, value: &str) -> Result<u64> {
+    value.parse().map_err(|_| {
+        SparxError::InvalidParams(format!("{key} expects a non-negative integer: got {value:?}"))
+    })
+}
+
+fn parse_f64(key: &str, value: &str) -> Result<f64> {
+    value.parse().map_err(|_| {
+        SparxError::InvalidParams(format!("{key} expects a number: got {value:?}"))
+    })
+}
+
+fn parse_bool(key: &str, value: &str) -> Result<bool> {
+    match value {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => Err(SparxError::InvalidParams(format!(
+            "{key} expects true|false: got {other:?}"
+        ))),
     }
 }
 
@@ -152,6 +293,7 @@ pub fn from_artifact_with_backend(
         "xstream" => Ok(Box::new(XStream::from_artifact(art)?)),
         "spif" => Ok(Box::new(Spif::from_artifact(art)?)),
         "dbscout" => Ok(Box::new(FittedDbscout::from_artifact(art)?)),
+        "ensemble" => Ok(Box::new(crate::ensemble::FittedEnsemble::from_artifact(art)?)),
         // a well-framed artifact that is a serving checkpoint, not a
         // model: point the caller at the right flag instead of the
         // generic unknown-detector message
@@ -238,6 +380,10 @@ fn make_dbscout(spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
     Ok(Box::new(DbscoutDetector::new(p, spec.eps.is_none())?))
 }
 
+fn make_ensemble(spec: &DetectorSpec) -> Result<Box<dyn Detector>> {
+    Ok(Box::new(crate::ensemble::EnsembleDetector::from_spec(spec)?))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,6 +405,36 @@ mod tests {
             }
             other => panic!("expected UnknownDetector, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn spec_strings_create_detectors() {
+        // bare names keep working
+        assert_eq!(create("sparx").unwrap().name(), "sparx");
+        // parameterized form
+        assert_eq!(create("sparx?depth=12&rate=0.05").unwrap().name(), "sparx");
+        assert_eq!(
+            create("ensemble?members=sparx:depth=6,xstream&distill=true").unwrap().name(),
+            "ensemble"
+        );
+    }
+
+    #[test]
+    fn unknown_spec_keys_fail_with_suggestion() {
+        let e = create("sparx?depht=12").unwrap_err();
+        match e {
+            SparxError::InvalidParams(msg) => {
+                assert!(msg.contains("depth"), "no suggestion in {msg:?}");
+            }
+            other => panic!("expected InvalidParams, got {other:?}"),
+        }
+        // keys valid for one method are rejected on another
+        assert!(matches!(create("xstream?rate=0.5"), Err(SparxError::InvalidParams(_))));
+        // bad values name the key
+        let e = create("sparx?depth=banana").unwrap_err();
+        assert!(e.to_string().contains("depth"), "bad-value error must name the key: {e}");
+        // unknown method names still get the UnknownDetector taxonomy
+        assert!(matches!(create("sparks?depth=3"), Err(SparxError::UnknownDetector(_))));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use std::collections::HashMap;
 
 use crate::api::artifact::{self, ModelArtifact};
-use crate::api::{self, Detector, FittedModel, SparxError};
+use crate::api::{self, validate, Detector, FittedModel, SparxError};
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{ClusterContext, Result};
 use crate::data::Dataset;
@@ -30,12 +30,8 @@ impl Default for DbscoutParams {
 impl DbscoutParams {
     /// Hyperparameter sanity rules, mirrored on the other detectors.
     pub fn validate(&self) -> std::result::Result<(), String> {
-        if !(self.eps > 0.0 && self.eps.is_finite()) {
-            return Err(format!("eps must be a positive finite number: got {}", self.eps));
-        }
-        if self.min_pts == 0 {
-            return Err("min_pts must be ≥ 1".into());
-        }
+        validate::positive_finite(self.eps, "eps")?;
+        validate::at_least_one(self.min_pts, "min_pts")?;
         Ok(())
     }
 }
@@ -306,6 +302,14 @@ pub struct FittedDbscout {
 }
 
 impl FittedDbscout {
+    /// Adopt an already-resolved configuration (eps fixed) — how the
+    /// ensemble layer builds dbscout members after running the same
+    /// elbow heuristic [`DbscoutDetector::fit`] uses.
+    pub(crate) fn from_params(params: DbscoutParams) -> api::Result<FittedDbscout> {
+        params.validate().map_err(SparxError::InvalidParams)?;
+        Ok(FittedDbscout { params })
+    }
+
     /// The eps the grid runs with (chosen at fit time under `auto_eps`).
     pub fn eps(&self) -> f64 {
         self.params.eps

@@ -2,7 +2,7 @@
 //! data-parallel scoring with a broadcast forest.
 
 use crate::api::artifact::{self, ModelArtifact};
-use crate::api::{self, Detector, FittedModel, SparxError};
+use crate::api::{self, validate, Detector, FittedModel, SparxError};
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{pool, ClusterContext, DistVec, Result};
 use crate::data::{Dataset, Row};
@@ -31,15 +31,9 @@ impl Default for SpifParams {
 impl SpifParams {
     /// Hyperparameter sanity rules, mirrored on the other detectors.
     pub fn validate(&self) -> std::result::Result<(), String> {
-        if self.num_trees == 0 {
-            return Err("num_trees (#components) must be ≥ 1".into());
-        }
-        if self.max_depth == 0 {
-            return Err("max_depth must be ≥ 1".into());
-        }
-        if !(self.sample_rate > 0.0 && self.sample_rate <= 1.0) {
-            return Err(format!("sample_rate must be in (0, 1]: got {}", self.sample_rate));
-        }
+        validate::at_least_one(self.num_trees, "num_trees (#components)")?;
+        validate::at_least_one(self.max_depth, "max_depth")?;
+        validate::unit_interval(self.sample_rate, "sample_rate")?;
         Ok(())
     }
 }

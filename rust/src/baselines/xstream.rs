@@ -7,7 +7,7 @@
 //! chain fitting with point-wise CMS inserts, scoring (Eq. 5).
 
 use crate::api::artifact::{self, ModelArtifact};
-use crate::api::{self, Detector, FittedModel, SparxError};
+use crate::api::{self, validate, Detector, FittedModel, SparxError};
 use crate::cluster::ClusterContext;
 use crate::data::{Dataset, Row};
 use crate::sparx::plan::chain_rng;
@@ -46,21 +46,10 @@ impl XStreamParams {
     /// — the two implementations must accept identical settings for the
     /// cross-check tests to be meaningful.
     pub fn validate(&self) -> std::result::Result<(), String> {
-        if self.num_chains == 0 {
-            return Err("num_chains (M) must be ≥ 1".into());
-        }
-        if self.depth == 0 {
-            return Err("depth (L) must be ≥ 1".into());
-        }
-        if self.cms_rows == 0 || self.cms_cols == 0 {
-            return Err(format!(
-                "CMS shape must be non-degenerate: got r={} w={}",
-                self.cms_rows, self.cms_cols
-            ));
-        }
-        if !(self.density > 0.0 && self.density <= 1.0) {
-            return Err(format!("density must be in (0, 1]: got {}", self.density));
-        }
+        validate::at_least_one(self.num_chains, "num_chains (M)")?;
+        validate::at_least_one(self.depth, "depth (L)")?;
+        validate::cms_shape(self.cms_rows, self.cms_cols)?;
+        validate::unit_interval(self.density, "density")?;
         Ok(())
     }
 }
@@ -81,6 +70,20 @@ impl XStream {
         } else {
             Projector::new(params.k, params.density).with_dense_schema(feature_names)
         };
+        Self::fit_with_projector(rows, feature_names, params, projector)
+    }
+
+    /// [`fit`](Self::fit) against a caller-supplied projector — the SUOD
+    /// shared-projection path: the ensemble layer hands members with
+    /// compatible `(k, density)` schemas clones of one projector (cheap
+    /// `Arc` shares of its R matrix). The projector must match
+    /// `params.k`; callers own that agreement.
+    pub fn fit_with_projector(
+        rows: &[Row],
+        feature_names: &[String],
+        params: &XStreamParams,
+        projector: Projector,
+    ) -> XStream {
         let sketches: Vec<Vec<f32>> = rows.iter().map(|r| projector.project(r, None).s).collect();
         let kdim = if params.k == 0 { feature_names.len() } else { params.k };
         // deltamax = half range per projected dim

@@ -160,6 +160,61 @@ where
         .collect())
 }
 
+/// Run `assignment.len()` jobs under a **caller-chosen** schedule:
+/// `assignment[i] = w` pins job `i` to worker `w ∈ 0..workers`, and each
+/// worker executes its jobs in index order. Unlike
+/// [`try_run_indexed`]'s work-stealing counter, the placement here is
+/// deterministic input — this is what the ensemble layer's cost model
+/// feeds (longest-processing-time bins vs naive round-robin), so the
+/// schedule itself can be asserted and benchmarked. Results come back in
+/// job-index order; the first error wins and the remaining jobs on that
+/// worker are skipped (other workers complete their queues).
+pub fn run_assigned<R, E, F>(workers: usize, assignment: &[usize], f: F) -> Result<Vec<R>, E>
+where
+    R: Send,
+    E: Send,
+    F: Fn(usize) -> Result<R, E> + Sync,
+{
+    let n = assignment.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let workers = workers.max(1);
+    debug_assert!(assignment.iter().all(|&w| w < workers), "assignment names a missing worker");
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let error: Mutex<Option<E>> = Mutex::new(None);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let results = &results;
+            let error = &error;
+            let f = &f;
+            s.spawn(move || {
+                for i in
+                    assignment.iter().enumerate().filter(|(_, &a)| a == w).map(|(i, _)| i)
+                {
+                    match f(i) {
+                        Ok(r) => *results[i].lock().unwrap() = Some(r),
+                        Err(e) => {
+                            let mut slot = error.lock().unwrap();
+                            if slot.is_none() {
+                                *slot = Some(e);
+                            }
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+    });
+    if let Some(e) = error.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job did not run"))
+        .collect())
+}
+
 // ------------------------------------------------- pinned worker pool
 
 /// Long-lived stateful workers, one OS thread + one bounded ingest

@@ -1,0 +1,142 @@
+//! Rank-averaged score combination.
+//!
+//! Heterogeneous members score on incomparable scales (sparx's
+//! log₂-count, SPIF's path length, DBSCOUT's 0/1 verdict), so the
+//! ensemble combines **ranks**, not raw scores: each member ranks its
+//! points ascending (rank n−1 = most outlying), ties get the average
+//! rank of their run, and the ensemble score is the mean rank normalised
+//! to [0, 1].
+//!
+//! Determinism is load-bearing here — the acceptance contract says
+//! ensemble scores are bit-identical under member *permutation* and at
+//! any shard count — so the accumulator works in integers: each point
+//! accumulates `2·rank` (tie runs contribute `start + end`, an exact
+//! integer) as a `u64` per member. Integer addition is commutative and
+//! associative, so summation order (and hence member order) cannot
+//! perturb the result; the single final division by `2·m·(n−1)` is the
+//! only float operation.
+
+use std::collections::HashMap;
+
+use crate::api::{Result, SparxError};
+
+/// Combine per-member score sets by tie-averaged rank. Every member must
+/// score the same id set; the output is `(id, mean rank / (n-1))` sorted
+/// by id, in [0, 1] with higher = more outlying.
+pub fn rank_average(per_member: &[Vec<(u64, f64)>]) -> Result<Vec<(u64, f64)>> {
+    let m = per_member.len();
+    let n = per_member.first().map_or(0, |v| v.len());
+    if m == 0 || n == 0 {
+        return Ok(Vec::new());
+    }
+    let mut acc: HashMap<u64, u64> = HashMap::with_capacity(n);
+    for scores in per_member {
+        if scores.len() != n {
+            return Err(SparxError::InvalidParams(format!(
+                "rank combination needs aligned member outputs: {} vs {} points",
+                scores.len(),
+                n
+            )));
+        }
+        for (id, rank2) in ranks2(scores) {
+            *acc.entry(id).or_insert(0) += rank2;
+        }
+    }
+    if acc.len() != n {
+        return Err(SparxError::InvalidParams(
+            "ensemble members scored different id sets".into(),
+        ));
+    }
+    let denom = (2 * m * (n - 1)).max(1) as f64;
+    let mut out: Vec<(u64, f64)> = acc
+        .into_iter()
+        .map(|(id, sum)| (id, sum as f64 / denom))
+        .collect();
+    out.sort_by_key(|(id, _)| *id);
+    Ok(out)
+}
+
+/// Doubled tie-averaged ranks: points sorted by `(score, id)` via
+/// `total_cmp`; a tie run spanning positions `[start, end]` (0-based)
+/// contributes the exact integer `start + end` — twice the conventional
+/// average rank — so callers can accumulate without float rounding.
+pub(crate) fn ranks2(scores: &[(u64, f64)]) -> Vec<(u64, u64)> {
+    let mut sorted: Vec<(u64, f64)> = scores.to_vec();
+    sorted.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    let mut out = Vec::with_capacity(sorted.len());
+    let mut start = 0usize;
+    while start < sorted.len() {
+        let mut end = start;
+        while let (Some(a), Some(b)) = (sorted.get(start), sorted.get(end + 1)) {
+            if a.1.total_cmp(&b.1) == std::cmp::Ordering::Equal {
+                end += 1;
+            } else {
+                break;
+            }
+        }
+        let rank2 = (start + end) as u64;
+        for entry in sorted.get(start..=end).into_iter().flatten() {
+            out.push((entry.0, rank2));
+        }
+        start = end + 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invariant_under_member_permutation() {
+        let a = vec![(0, 0.1), (1, 5.0), (2, -3.0), (3, 2.2)];
+        let b = vec![(0, 100.0), (1, 4.0), (2, 4.0), (3, -9.0)];
+        let c = vec![(0, 0.0), (1, 0.0), (2, 1.0), (3, 0.5)];
+        let fwd = rank_average(&[a.clone(), b.clone(), c.clone()]).unwrap();
+        let rev = rank_average(&[c, b, a]).unwrap();
+        for ((i1, s1), (i2, s2)) in fwd.iter().zip(&rev) {
+            assert_eq!(i1, i2);
+            assert_eq!(s1.to_bits(), s2.to_bits(), "id {i1}: {s1} vs {s2}");
+        }
+    }
+
+    #[test]
+    fn ties_share_the_average_rank() {
+        // three-way tie at the bottom: ranks {0,1,2} average to 1
+        let scores = vec![(7, 1.0), (8, 1.0), (9, 1.0), (10, 2.0)];
+        let r = ranks2(&scores);
+        let lookup: std::collections::HashMap<u64, u64> = r.into_iter().collect();
+        assert_eq!(lookup[&7], 2); // 2·1
+        assert_eq!(lookup[&8], 2);
+        assert_eq!(lookup[&9], 2);
+        assert_eq!(lookup[&10], 6); // 2·3
+    }
+
+    #[test]
+    fn single_member_normalises_to_unit_interval() {
+        let scores = vec![(0, -1.0), (1, 0.0), (2, 99.0)];
+        let out = rank_average(&[scores]).unwrap();
+        assert_eq!(out, vec![(0, 0.0), (1, 0.5), (2, 1.0)]);
+    }
+
+    #[test]
+    fn mismatched_id_sets_fail_typed() {
+        let a = vec![(0, 1.0), (1, 2.0)];
+        let b = vec![(0, 1.0), (2, 2.0)];
+        assert!(matches!(
+            rank_average(&[a.clone(), b]),
+            Err(SparxError::InvalidParams(_))
+        ));
+        let short = vec![(0, 1.0)];
+        assert!(matches!(
+            rank_average(&[a, short]),
+            Err(SparxError::InvalidParams(_))
+        ));
+    }
+
+    #[test]
+    fn empty_input_is_empty_output() {
+        assert!(rank_average(&[]).unwrap().is_empty());
+        assert!(rank_average(&[vec![]]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,155 @@
+//! SUOD module 2 — cost-aware member scheduling.
+//!
+//! Ensemble members have wildly different fit costs (a depth-12 sparx vs
+//! a 10-tree SPIF differ by orders of magnitude), so round-robin
+//! assignment leaves pool workers idle behind the one slow member. The
+//! ensemble layer instead *measures* each member on a small calibration
+//! slice and packs the full fits with the classic LPT (longest
+//! processing time first) greedy: sort members by measured cost
+//! descending, always hand the next one to the least-loaded worker. LPT
+//! is a 4/3-approximation of the optimal makespan — ample for a handful
+//! of members — and, crucially, deterministic: ties break on member
+//! index, so the same costs always produce the same assignment.
+//!
+//! Assignment only decides *where* a member fits, never *what* it
+//! computes — scores are bit-identical under either schedule.
+
+/// How ensemble members are packed onto pool workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Measured-cost LPT packing (default).
+    Balanced,
+    /// Naive `member i → worker i % W` (the A/B baseline).
+    RoundRobin,
+}
+
+impl Schedule {
+    /// Spec-string form (`schedule=balanced` / `schedule=round-robin`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Schedule::Balanced => "balanced",
+            Schedule::RoundRobin => "round-robin",
+        }
+    }
+
+    /// Parse the spec-string form; `None` for unknown values (the caller
+    /// owns the typed error and its suggestion).
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "balanced" => Some(Schedule::Balanced),
+            "round-robin" => Some(Schedule::RoundRobin),
+            _ => None,
+        }
+    }
+
+    /// Artifact wire tag.
+    pub(crate) fn tag(&self) -> u8 {
+        match self {
+            Schedule::Balanced => 0,
+            Schedule::RoundRobin => 1,
+        }
+    }
+
+    /// Inverse of [`tag`](Self::tag); `None` for unknown tags.
+    pub(crate) fn from_tag(tag: u8) -> Option<Schedule> {
+        match tag {
+            0 => Some(Schedule::Balanced),
+            1 => Some(Schedule::RoundRobin),
+            _ => None,
+        }
+    }
+}
+
+/// LPT greedy: members in cost-descending order (ties → lower index
+/// first), each to the currently least-loaded worker (ties → lowest
+/// worker index). Returns `assignment[i] = worker of member i`.
+pub fn assign_balanced(costs: &[u64], workers: usize) -> Vec<usize> {
+    let workers = workers.max(1);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ca = costs.get(a).copied().unwrap_or(0);
+        let cb = costs.get(b).copied().unwrap_or(0);
+        cb.cmp(&ca).then(a.cmp(&b))
+    });
+    let mut load = vec![0u64; workers];
+    let mut assignment = vec![0usize; costs.len()];
+    for i in order {
+        let w = least_loaded(&load);
+        if let (Some(slot), Some(l)) = (assignment.get_mut(i), load.get_mut(w)) {
+            *slot = w;
+            *l = l.saturating_add(costs.get(i).copied().unwrap_or(0));
+        }
+    }
+    assignment
+}
+
+/// The naive baseline: `member i → worker i % workers`.
+pub fn assign_round_robin(n: usize, workers: usize) -> Vec<usize> {
+    let workers = workers.max(1);
+    (0..n).map(|i| i % workers).collect()
+}
+
+/// Predicted wall-clock of an assignment: the heaviest worker's total
+/// cost. What the `ensemble` bench arm compares across schedules.
+pub fn makespan(costs: &[u64], assignment: &[usize], workers: usize) -> u64 {
+    let mut load = vec![0u64; workers.max(1)];
+    for (c, &w) in costs.iter().zip(assignment) {
+        if let Some(l) = load.get_mut(w) {
+            *l = l.saturating_add(*c);
+        }
+    }
+    load.iter().copied().max().unwrap_or(0)
+}
+
+fn least_loaded(load: &[u64]) -> usize {
+    let mut best = 0usize;
+    let mut best_load = u64::MAX;
+    for (w, &l) in load.iter().enumerate() {
+        if l < best_load {
+            best = w;
+            best_load = l;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lpt_beats_round_robin_on_mixed_costs() {
+        // one expensive member followed by cheap ones: round-robin piles
+        // the expensive one plus every W-th cheap one on worker 0
+        let costs = [1000, 10, 10, 10, 10, 10, 10, 10];
+        let balanced = assign_balanced(&costs, 2);
+        let naive = assign_round_robin(costs.len(), 2);
+        let mb = makespan(&costs, &balanced, 2);
+        let mn = makespan(&costs, &naive, 2);
+        assert!(mb < mn, "LPT {mb} should beat round-robin {mn}");
+        assert_eq!(mb, 1000, "heaviest member alone bounds the makespan");
+    }
+
+    #[test]
+    fn assignment_is_deterministic_with_ties() {
+        let costs = [5, 5, 5, 5];
+        assert_eq!(assign_balanced(&costs, 2), assign_balanced(&costs, 2));
+        // ties break on index: member 0 → worker 0, member 1 → worker 1, …
+        assert_eq!(assign_balanced(&costs, 2), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn degenerate_shapes_stay_in_bounds() {
+        assert!(assign_balanced(&[], 4).is_empty());
+        assert_eq!(assign_balanced(&[7, 7], 0), vec![0, 0], "0 workers clamps to 1");
+        assert_eq!(assign_round_robin(3, 1), vec![0, 0, 0]);
+        assert_eq!(makespan(&[], &[], 3), 0);
+    }
+
+    #[test]
+    fn makespan_sums_per_worker() {
+        let costs = [3, 4, 5];
+        let assignment = [0, 0, 1];
+        assert_eq!(makespan(&costs, &assignment, 2), 7);
+    }
+}

@@ -1,0 +1,150 @@
+//! SUOD module 3 — pseudo-supervised distillation.
+//!
+//! An ensemble whose most expensive member dominates serving cost can
+//! substitute a cheap **student** on the serve path: a small sparx model
+//! fit on the same data, selected by how faithfully it reproduces the
+//! expensive **teacher**'s ranking on the calibration slice (Spearman
+//! rank agreement — scales are incomparable, ranks are not). The batch
+//! `score` path still rank-averages the real members; only the
+//! evolving-stream front-end swaps in the student, with full provenance
+//! (teacher spec + measured agreement) carried through artifacts,
+//! checkpoints and `STATS`.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::api::{FittedSparx, Result};
+use crate::cluster::ClusterContext;
+use crate::data::Dataset;
+use crate::sparx::{ScoreMode, SparxModel, SparxParams};
+
+use super::combine;
+
+/// A distilled serve-path substitute with its lineage.
+#[derive(Debug)]
+pub(crate) struct Distilled {
+    /// Canonical spec text of the member the student was trained to mimic.
+    pub(crate) teacher: String,
+    /// Spearman rank agreement with the teacher on the calibration slice.
+    pub(crate) agreement: f64,
+    pub(crate) student: FittedSparx,
+    pub(crate) fit_micros: u64,
+    pub(crate) score_micros: u64,
+}
+
+/// Candidate student depths, cheapest first. All candidates use a small
+/// fixed budget (K=16, M=16) — the point is a scorer that is cheap at
+/// serve time, not another heavyweight member.
+const STUDENT_DEPTHS: [usize; 3] = [4, 6, 8];
+
+/// Fit candidate students on the full dataset and keep the one whose
+/// calibration-slice ranking agrees best with the teacher's (ties →
+/// shallower). `teacher_calib` is the teacher's scores on `calib`.
+pub(crate) fn distill(
+    ctx: &ClusterContext,
+    data: &Dataset,
+    calib: &Dataset,
+    teacher: &str,
+    teacher_calib: &[(u64, f64)],
+    seed: u64,
+) -> Result<Distilled> {
+    let mut best: Option<Distilled> = None;
+    for depth in STUDENT_DEPTHS {
+        let params = SparxParams {
+            k: 16,
+            num_chains: 16,
+            depth,
+            sample_rate: 1.0,
+            score_mode: ScoreMode::Log2,
+            seed,
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let model = SparxModel::fit(ctx, data, &params)?;
+        let fit_micros = elapsed_micros(t0);
+        let t0 = Instant::now();
+        let student_calib = model.score_dataset(ctx, calib)?;
+        let score_micros = elapsed_micros(t0);
+        let agreement = rank_agreement(teacher_calib, &student_calib);
+        if best.as_ref().map_or(true, |b| agreement > b.agreement) {
+            best = Some(Distilled {
+                teacher: teacher.to_string(),
+                agreement,
+                student: FittedSparx::from_model(model),
+                fit_micros,
+                score_micros,
+            });
+        }
+    }
+    best.ok_or_else(|| {
+        crate::api::SparxError::InvalidParams("distillation produced no candidate".into())
+    })
+}
+
+/// Wall-clock µs since `t0`, clamped to ≥ 1 so a fast member never
+/// reports zero cost (the LPT packer treats 0 as "free"). Wall time, not
+/// thread CPU time: member fits are internally multi-threaded, so the
+/// calling thread's CPU clock would under-measure exactly the expensive
+/// members the cost model exists to catch.
+pub(crate) fn elapsed_micros(t0: Instant) -> u64 {
+    (t0.elapsed().as_micros() as u64).max(1)
+}
+
+/// Spearman's ρ: Pearson correlation of tie-averaged ranks, paired by
+/// id. Ids missing on either side are skipped; degenerate variance
+/// (constant ranking) yields 0.0 rather than NaN.
+pub(crate) fn rank_agreement(a: &[(u64, f64)], b: &[(u64, f64)]) -> f64 {
+    let ra: HashMap<u64, u64> = combine::ranks2(a).into_iter().collect();
+    let rb: HashMap<u64, u64> = combine::ranks2(b).into_iter().collect();
+    let mut pairs: Vec<(f64, f64)> = Vec::with_capacity(ra.len().min(rb.len()));
+    for (id, &x) in &ra {
+        if let Some(&y) = rb.get(id) {
+            pairs.push((x as f64, y as f64));
+        }
+    }
+    if pairs.len() < 2 {
+        return 0.0;
+    }
+    let n = pairs.len() as f64;
+    let mx = pairs.iter().map(|(x, _)| x).sum::<f64>() / n;
+    let my = pairs.iter().map(|(_, y)| y).sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in &pairs {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx <= 0.0 || dy <= 0.0 {
+        return 0.0;
+    }
+    num / (dx.sqrt() * dy.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_rankings_agree_perfectly() {
+        let a = vec![(0, 1.0), (1, 2.0), (2, 3.0), (3, 4.0)];
+        let b = vec![(0, 10.0), (1, 20.0), (2, 30.0), (3, 40.0)];
+        assert!((rank_agreement(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reversed_rankings_anti_agree() {
+        let a = vec![(0, 1.0), (1, 2.0), (2, 3.0)];
+        let b = vec![(0, 3.0), (1, 2.0), (2, 1.0)];
+        assert!((rank_agreement(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_rankings_are_zero_not_nan() {
+        let a = vec![(0, 1.0), (1, 1.0), (2, 1.0)];
+        let b = vec![(0, 5.0), (1, 2.0), (2, 9.0)];
+        assert_eq!(rank_agreement(&a, &b), 0.0);
+        assert_eq!(rank_agreement(&a, &[]), 0.0);
+    }
+}

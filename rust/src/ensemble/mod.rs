@@ -1,0 +1,955 @@
+//! Heterogeneous detector ensembles — the SUOD recipe on the Sparx
+//! substrate.
+//!
+//! A single detector family has a single blind spot; SUOD's answer
+//! (Zhao et al., MLSys 2021) is to run many *heterogeneous* detectors
+//! and make the ensemble cheap with three systems modules, all
+//! reproduced here on the distributed Sparx runtime:
+//!
+//! 1. **Shared projection substrate** (`share=true`, default): members
+//!    whose schemas agree on `(k, density)` receive clones of **one**
+//!    [`Projector`] — the O(D·K) dense sign matrix lives behind an
+//!    `Arc`, so N members hold one allocation instead of N. Sharing
+//!    never changes scores: the sign-hash family is seeded by index, so
+//!    a shared projector is bit-identical to the one each member would
+//!    have built alone.
+//! 2. **Cost-aware scheduling** ([`cost`]): every member is fit+scored
+//!    on a small calibration slice first; the measured costs drive LPT
+//!    packing of the full fits onto pool workers
+//!    ([`crate::cluster::pool::run_assigned`]). `schedule=round-robin`
+//!    keeps the naive packing for A/B comparison — assignment moves
+//!    work, never changes results.
+//! 3. **Distillation** ([`Ensemble distillation`](self) — `distill=true`):
+//!    a cheap sparx student is fit against the *most expensive* member
+//!    and substituted on the evolving-stream serve path, with provenance
+//!    (teacher spec, rank agreement) carried through artifacts and
+//!    `STATS`.
+//!
+//! Scores combine by tie-averaged **rank** ([`combine`]) — deterministic
+//! under member permutation and shard count by construction.
+//!
+//! ```no_run
+//! use sparx::api::{registry, Detector};
+//! # fn main() -> sparx::api::Result<()> {
+//! let det = registry::create("ensemble?members=sparx:depth=6,xstream,spif&distill=true")?;
+//! # Ok(()) }
+//! ```
+
+pub mod combine;
+pub mod cost;
+mod distill;
+
+pub use cost::Schedule;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::api::artifact::{self, ModelArtifact};
+use crate::api::registry::{self, DetectorSpec};
+use crate::api::{
+    self, Detector, FittedModel, FittedSparx, MethodSpec, Result, SparxError,
+};
+use crate::baselines::dbscout::FittedDbscout;
+use crate::baselines::{Dbscout, DbscoutParams, Spif, SpifParams, XStream, XStreamParams};
+use crate::cluster::{pool, ClusterContext, DistVec};
+use crate::data::Dataset;
+use crate::sparx::{
+    MemberInfo, Projector, ServeOptions, ServedEnsemble, ShardedStreamScorer, SparxModel,
+    SparxParams, StreamScorer,
+};
+
+/// Decode-side cap on the member count (a corrupt artifact must not
+/// allocate unbounded nested models).
+pub const MAX_MEMBERS: usize = 64;
+
+/// Members when `members=` is not given: the two hash-projection
+/// families, which accept dense *and* sparse data.
+pub const DEFAULT_MEMBERS: &str = "sparx,xstream";
+
+/// Calibration slice size (rows) for the cost model and distillation
+/// agreement.
+const CALIB_ROWS: usize = 256;
+
+/// Seed when neither the ensemble nor a member sets one — matches the
+/// library-wide default.
+const DEFAULT_SEED: u64 = 0x5AB4;
+
+/// The member kinds an ensemble can host (no nesting).
+const MEMBER_KINDS: [&str; 4] = ["sparx", "xstream", "spif", "dbscout"];
+
+/// Resolved per-member hyperparameters.
+#[derive(Debug, Clone)]
+pub enum MemberConfig {
+    Sparx(SparxParams),
+    XStream(XStreamParams),
+    Spif(SpifParams),
+    Dbscout {
+        params: DbscoutParams,
+        /// eps unset → resolved at fit time via the elbow heuristic,
+        /// exactly like the standalone [`crate::baselines::DbscoutDetector`].
+        auto_eps: bool,
+    },
+}
+
+impl MemberConfig {
+    /// Registry name of the member's method.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MemberConfig::Sparx(_) => "sparx",
+            MemberConfig::XStream(_) => "xstream",
+            MemberConfig::Spif(_) => "spif",
+            MemberConfig::Dbscout { .. } => "dbscout",
+        }
+    }
+
+    /// The projection substrate this member would build, if it hashes:
+    /// `(k, density)` for sparx/xstream with `k > 0`. Members with equal
+    /// keys can share one [`Projector`].
+    fn projection_key(&self) -> Option<(usize, u64)> {
+        match self {
+            MemberConfig::Sparx(p) if p.k > 0 => Some((p.k, p.density.to_bits())),
+            MemberConfig::XStream(p) if p.k > 0 => Some((p.k, p.density.to_bits())),
+            _ => None,
+        }
+    }
+}
+
+/// One parsed ensemble member: its canonical spec text (what artifacts
+/// and `STATS` echo back) plus resolved hyperparameters.
+#[derive(Debug, Clone)]
+pub struct MemberSpec {
+    text: String,
+    config: MemberConfig,
+}
+
+impl MemberSpec {
+    /// Parse one member from its `name(:key=val)*` form.
+    pub fn parse(text: &str) -> Result<MemberSpec> {
+        Self::from_method_spec(&MethodSpec::parse_member(text)?, None)
+    }
+
+    /// Resolve a parsed member spec. `default_seed`, when given, fills
+    /// the member's seed if the spec didn't set one — how the ensemble
+    /// de-correlates otherwise-identical members.
+    pub fn from_method_spec(ms: &MethodSpec, default_seed: Option<u64>) -> Result<MemberSpec> {
+        if !MEMBER_KINDS.contains(&ms.name.as_str()) {
+            let hint = crate::util::closest_match(&ms.name, &MEMBER_KINDS)
+                .map(|s| format!(" — did you mean {s:?}?"))
+                .unwrap_or_default();
+            return Err(SparxError::InvalidParams(format!(
+                "ensemble members must be one of {} (got {:?}){hint}",
+                MEMBER_KINDS.join("|"),
+                ms.name
+            )));
+        }
+        let mut spec = DetectorSpec::default();
+        for (key, value) in &ms.params {
+            registry::apply_key(&ms.name, key, value, &mut spec)?;
+        }
+        if spec.seed.is_none() {
+            spec.seed = default_seed;
+        }
+        let config = resolve_config(&ms.name, &spec)?;
+        Ok(MemberSpec { text: ms.print_member(), config })
+    }
+
+    /// Canonical `name(:key=val)*` text.
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+
+    pub fn config(&self) -> &MemberConfig {
+        &self.config
+    }
+}
+
+fn resolve_config(kind: &str, spec: &DetectorSpec) -> Result<MemberConfig> {
+    match kind {
+        "sparx" => {
+            let mut p = SparxParams::default();
+            if let Some(k) = spec.k {
+                p.k = k;
+            }
+            if let Some(m) = spec.components {
+                p.num_chains = m;
+            }
+            if let Some(l) = spec.depth {
+                p.depth = l;
+            }
+            if let Some(rate) = spec.sample_rate {
+                p.sample_rate = rate;
+            }
+            if let Some(seed) = spec.seed {
+                p.seed = seed;
+            }
+            p.exec_mode = spec.exec_mode;
+            p.validate().map_err(SparxError::InvalidParams)?;
+            Ok(MemberConfig::Sparx(p))
+        }
+        "xstream" => {
+            let mut p = XStreamParams::default();
+            if let Some(k) = spec.k {
+                p.k = k;
+            }
+            if let Some(m) = spec.components {
+                p.num_chains = m;
+            }
+            if let Some(l) = spec.depth {
+                p.depth = l;
+            }
+            if let Some(seed) = spec.seed {
+                p.seed = seed;
+            }
+            p.validate().map_err(SparxError::InvalidParams)?;
+            Ok(MemberConfig::XStream(p))
+        }
+        "spif" => {
+            let mut p = SpifParams::default();
+            if let Some(t) = spec.components {
+                p.num_trees = t;
+            }
+            if let Some(l) = spec.depth {
+                p.max_depth = l;
+            }
+            if let Some(rate) = spec.sample_rate {
+                p.sample_rate = rate;
+            }
+            if let Some(seed) = spec.seed {
+                p.seed = seed;
+            }
+            p.validate().map_err(SparxError::InvalidParams)?;
+            Ok(MemberConfig::Spif(p))
+        }
+        "dbscout" => {
+            let mut p = DbscoutParams::default();
+            let auto_eps = spec.eps.is_none();
+            if let Some(eps) = spec.eps {
+                p.eps = eps;
+            }
+            if let Some(min_pts) = spec.min_pts {
+                p.min_pts = min_pts;
+            }
+            p.validate().map_err(SparxError::InvalidParams)?;
+            Ok(MemberConfig::Dbscout { params: p, auto_eps })
+        }
+        other => Err(SparxError::InvalidParams(format!(
+            "ensemble members must be one of {} (got {other:?})",
+            MEMBER_KINDS.join("|")
+        ))),
+    }
+}
+
+/// Ensemble hyperparameters (see the module docs for the three SUOD
+/// modules each field toggles).
+#[derive(Debug, Clone)]
+pub struct EnsembleParams {
+    pub members: Vec<MemberSpec>,
+    /// Fit a cheap sparx student against the most expensive member and
+    /// serve streams through it.
+    pub distill: bool,
+    /// Share one projector among members with equal `(k, density)`.
+    pub share_projection: bool,
+    pub schedule: Schedule,
+    /// Base seed: member i defaults to `seed + i` unless its spec pins
+    /// one; the distilled student reuses it verbatim.
+    pub seed: u64,
+}
+
+impl Default for EnsembleParams {
+    fn default() -> Self {
+        EnsembleParams {
+            members: Vec::new(),
+            distill: false,
+            share_projection: true,
+            schedule: Schedule::Balanced,
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+impl EnsembleParams {
+    /// Hyperparameter sanity rules, mirrored on the other detectors.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if self.members.is_empty() {
+            return Err("ensemble needs at least one member (members=...)".into());
+        }
+        if self.members.len() > MAX_MEMBERS {
+            return Err(format!(
+                "ensemble supports at most {MAX_MEMBERS} members: got {}",
+                self.members.len()
+            ));
+        }
+        Ok(())
+    }
+
+    /// Resolve a [`DetectorSpec`] (the flag/spec-string description) into
+    /// ensemble params: parses `members=` (default
+    /// [`DEFAULT_MEMBERS`]), seeds unseeded members `base + i`.
+    pub fn from_spec(spec: &DetectorSpec) -> Result<EnsembleParams> {
+        let seed = spec.seed.unwrap_or(DEFAULT_SEED);
+        let text = spec.members.as_deref().unwrap_or(DEFAULT_MEMBERS);
+        let mut members = Vec::new();
+        for (i, ms) in api::spec::parse_members(text)?.iter().enumerate() {
+            members.push(MemberSpec::from_method_spec(
+                ms,
+                Some(seed.wrapping_add(i as u64)),
+            )?);
+        }
+        let params = EnsembleParams {
+            members,
+            distill: spec.distill,
+            share_projection: spec.share,
+            schedule: spec.schedule,
+            seed,
+        };
+        params.validate().map_err(SparxError::InvalidParams)?;
+        Ok(params)
+    }
+}
+
+/// [`Detector`] front for the ensemble — what
+/// `registry::create("ensemble?members=...")` builds.
+pub struct EnsembleDetector {
+    params: EnsembleParams,
+}
+
+impl EnsembleDetector {
+    pub fn new(params: EnsembleParams) -> Result<EnsembleDetector> {
+        params.validate().map_err(SparxError::InvalidParams)?;
+        Ok(EnsembleDetector { params })
+    }
+
+    pub fn from_spec(spec: &DetectorSpec) -> Result<EnsembleDetector> {
+        Ok(EnsembleDetector { params: EnsembleParams::from_spec(spec)? })
+    }
+
+    pub fn params(&self) -> &EnsembleParams {
+        &self.params
+    }
+}
+
+impl Detector for EnsembleDetector {
+    fn name(&self) -> &'static str {
+        "ensemble"
+    }
+
+    fn fit(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Box<dyn FittedModel>> {
+        Ok(Box::new(FittedEnsemble::fit(ctx, data, &self.params)?))
+    }
+}
+
+/// What a pool worker hands back: plain fitted state, no backend
+/// runtime attached (that wrapping happens on the calling thread).
+enum FitOutput {
+    Sparx(SparxModel),
+    XStream(XStream),
+    Spif(Spif),
+    Dbscout(FittedDbscout),
+}
+
+/// A fitted member behind the [`FittedModel`] contract.
+enum MemberModel {
+    Sparx(FittedSparx),
+    XStream(XStream),
+    Spif(Spif),
+    Dbscout(FittedDbscout),
+}
+
+impl MemberModel {
+    fn as_fitted(&self) -> &dyn FittedModel {
+        match self {
+            MemberModel::Sparx(m) => m,
+            MemberModel::XStream(m) => m,
+            MemberModel::Spif(m) => m,
+            MemberModel::Dbscout(m) => m,
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            MemberModel::Sparx(_) => "sparx",
+            MemberModel::XStream(_) => "xstream",
+            MemberModel::Spif(_) => "spif",
+            MemberModel::Dbscout(_) => "dbscout",
+        }
+    }
+
+    fn projector(&self) -> Option<&Projector> {
+        match self {
+            MemberModel::Sparx(m) => Some(&m.model().projector),
+            MemberModel::XStream(m) => Some(&m.projector),
+            _ => None,
+        }
+    }
+}
+
+fn wrap_output(out: FitOutput) -> MemberModel {
+    match out {
+        FitOutput::Sparx(m) => MemberModel::Sparx(FittedSparx::from_model(m)),
+        FitOutput::XStream(m) => MemberModel::XStream(m),
+        FitOutput::Spif(m) => MemberModel::Spif(m),
+        FitOutput::Dbscout(m) => MemberModel::Dbscout(m),
+    }
+}
+
+struct FittedMember {
+    text: String,
+    model: MemberModel,
+    fit_micros: u64,
+    score_micros: u64,
+    worker: usize,
+}
+
+/// A fitted heterogeneous ensemble: N members, their measured costs and
+/// worker assignment, and (optionally) a distilled serve-path student.
+pub struct FittedEnsemble {
+    members: Vec<FittedMember>,
+    distilled: Option<distill::Distilled>,
+    distill_requested: bool,
+    share_projection: bool,
+    schedule: Schedule,
+    seed: u64,
+}
+
+impl FittedEnsemble {
+    /// Fit every member: shared-projection grouping → calibration-slice
+    /// cost measurement → scheduled full fits on the pool → optional
+    /// distillation. Assignment moves work across workers but never
+    /// changes any member's scores.
+    pub fn fit(ctx: &ClusterContext, data: &Dataset, params: &EnsembleParams) -> Result<FittedEnsemble> {
+        params.validate().map_err(SparxError::InvalidParams)?;
+        let shared = shared_projectors(data, params);
+        let calib = calibration_slice(ctx, data)?;
+
+        // SUOD module 2, step 1: measure each member on the slice.
+        let mut fit_micros = Vec::with_capacity(params.members.len());
+        let mut score_micros = Vec::with_capacity(params.members.len());
+        for (i, member) in params.members.iter().enumerate() {
+            let proj = shared.get(i).and_then(|p| p.clone());
+            let t0 = Instant::now();
+            let out = fit_member(ctx, &calib, member.config(), proj)?;
+            fit_micros.push(distill::elapsed_micros(t0));
+            let probe = wrap_output(out);
+            let t0 = Instant::now();
+            probe.as_fitted().score(ctx, &calib)?;
+            score_micros.push(distill::elapsed_micros(t0));
+        }
+
+        // step 2: pack the full fits.
+        let workers = ctx.cfg.num_threads.max(1);
+        let assignment = match params.schedule {
+            Schedule::Balanced => cost::assign_balanced(&fit_micros, workers),
+            Schedule::RoundRobin => cost::assign_round_robin(params.members.len(), workers),
+        };
+        let members_ref = &params.members;
+        let shared_ref = &shared;
+        let outputs = pool::run_assigned(workers, &assignment, |i| {
+            let member = members_ref.get(i).ok_or_else(|| {
+                SparxError::InvalidParams(format!("member index {i} out of range"))
+            })?;
+            let proj = shared_ref.get(i).and_then(|p| p.clone());
+            fit_member(ctx, data, member.config(), proj)
+        })?;
+
+        let mut members = Vec::with_capacity(outputs.len());
+        for (i, out) in outputs.into_iter().enumerate() {
+            members.push(FittedMember {
+                text: params.members.get(i).map(|m| m.text.clone()).unwrap_or_default(),
+                model: wrap_output(out),
+                fit_micros: fit_micros.get(i).copied().unwrap_or(1),
+                score_micros: score_micros.get(i).copied().unwrap_or(1),
+                worker: assignment.get(i).copied().unwrap_or(0),
+            });
+        }
+
+        // SUOD module 3: distill the most expensive member, if asked.
+        let distilled = if params.distill {
+            let teacher = members
+                .iter()
+                .enumerate()
+                .max_by_key(|(i, m)| (m.fit_micros.saturating_add(m.score_micros), usize::MAX - i))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let (teacher_text, teacher_calib) = match members.get(teacher) {
+                Some(m) => (m.text.clone(), m.model.as_fitted().score(ctx, &calib)?),
+                None => {
+                    return Err(SparxError::InvalidParams(
+                        "distillation needs at least one member".into(),
+                    ))
+                }
+            };
+            Some(distill::distill(ctx, data, &calib, &teacher_text, &teacher_calib, params.seed)?)
+        } else {
+            None
+        };
+
+        Ok(FittedEnsemble {
+            members,
+            distilled,
+            distill_requested: params.distill,
+            share_projection: params.share_projection,
+            schedule: params.schedule,
+            seed: params.seed,
+        })
+    }
+
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    /// Member i's projector, if its method hashes (sparx / xstream).
+    /// Under shared projection, members of one `(k, density)` group
+    /// return projectors whose dense R matrices are the *same
+    /// allocation* (`dense_r().as_ptr()` compares equal).
+    pub fn member_projector(&self, i: usize) -> Option<&Projector> {
+        self.members.get(i).and_then(|m| m.model.projector())
+    }
+
+    /// Pool worker member i's full fit ran on.
+    pub fn member_worker(&self, i: usize) -> Option<usize> {
+        self.members.get(i).map(|m| m.worker)
+    }
+
+    /// Distillation provenance: `(teacher spec, rank agreement)`.
+    pub fn distilled_info(&self) -> Option<(&str, f64)> {
+        self.distilled.as_ref().map(|d| (d.teacher.as_str(), d.agreement))
+    }
+
+    /// The sparx model that serves evolving streams: the distilled
+    /// student if present, else the first sparx member.
+    fn serve_model(&self) -> Result<&SparxModel> {
+        if let Some(d) = &self.distilled {
+            return Ok(d.student.model());
+        }
+        for m in &self.members {
+            if let MemberModel::Sparx(f) = &m.model {
+                return Ok(f.model());
+            }
+        }
+        Err(SparxError::Unsupported(
+            "this ensemble has no sparx member and no distilled student, so it cannot \
+             serve evolving streams — include a sparx member or fit with distill=true"
+                .into(),
+        ))
+    }
+
+    fn serve_member_index(&self) -> Option<usize> {
+        self.members
+            .iter()
+            .position(|m| matches!(m.model, MemberModel::Sparx(_)))
+    }
+
+    fn encode_params(&self) -> Vec<u8> {
+        let mut enc = crate::util::codec::Encoder::new();
+        let mut flags = 0u8;
+        if self.distill_requested {
+            flags |= 1;
+        }
+        if self.share_projection {
+            flags |= 2;
+        }
+        enc.put_u8(flags);
+        enc.put_u8(self.schedule.tag());
+        enc.put_u64(self.seed);
+        enc.put_u32(self.members.len() as u32);
+        for m in &self.members {
+            enc.put_str(&m.text);
+            enc.put_str(m.model.kind());
+            enc.put_u64(m.fit_micros);
+            enc.put_u64(m.score_micros);
+            enc.put_u64(m.worker as u64);
+        }
+        match &self.distilled {
+            Some(d) => {
+                enc.put_u8(1);
+                enc.put_str(&d.teacher);
+                enc.put_f64(d.agreement);
+                enc.put_u64(d.fit_micros);
+                enc.put_u64(d.score_micros);
+            }
+            None => enc.put_u8(0),
+        }
+        enc.into_bytes()
+    }
+
+    fn encode_payload(&self) -> Result<Vec<u8>> {
+        let mut enc = crate::util::codec::Encoder::new();
+        enc.put_u32(self.members.len() as u32);
+        for m in &self.members {
+            let bytes = m.model.as_fitted().to_artifact()?.to_bytes();
+            enc.put_u32(bytes.len() as u32);
+            enc.put_bytes(&bytes);
+        }
+        match &self.distilled {
+            Some(d) => {
+                enc.put_u8(1);
+                let bytes = d.student.to_artifact()?.to_bytes();
+                enc.put_u32(bytes.len() as u32);
+                enc.put_bytes(&bytes);
+            }
+            None => enc.put_u8(0),
+        }
+        Ok(enc.into_bytes())
+    }
+
+    /// Rehydrate from an artifact: each member is a complete nested
+    /// artifact, decoded by its own detector's deserializer. Nested
+    /// ensembles are rejected.
+    pub fn from_artifact(art: &ModelArtifact) -> Result<FittedEnsemble> {
+        let blk = |e| artifact::block_err("ensemble", e);
+        let mut dec = crate::util::codec::Decoder::new(&art.params);
+        let flags = dec.u8().map_err(blk)?;
+        let schedule_tag = dec.u8().map_err(blk)?;
+        let schedule = Schedule::from_tag(schedule_tag).ok_or_else(|| {
+            SparxError::InvalidParams(format!("unknown ensemble schedule tag {schedule_tag}"))
+        })?;
+        let seed = dec.u64().map_err(blk)?;
+        let count = dec.u32().map_err(blk)? as usize;
+        if count == 0 || count > MAX_MEMBERS {
+            return Err(SparxError::InvalidParams(format!(
+                "ensemble artifact names {count} members (1..={MAX_MEMBERS} supported)"
+            )));
+        }
+        let mut metas = Vec::with_capacity(count);
+        for _ in 0..count {
+            let text = dec.str().map_err(blk)?;
+            let kind = dec.str().map_err(blk)?;
+            let fit_micros = dec.u64().map_err(blk)?;
+            let score_micros = dec.u64().map_err(blk)?;
+            let worker = dec.u64().map_err(blk)? as usize;
+            metas.push((text, kind, fit_micros, score_micros, worker));
+        }
+        let distilled_meta = match dec.u8().map_err(blk)? {
+            0 => None,
+            _ => {
+                let teacher = dec.str().map_err(blk)?;
+                let agreement = dec.f64().map_err(blk)?;
+                let fit_micros = dec.u64().map_err(blk)?;
+                let score_micros = dec.u64().map_err(blk)?;
+                Some((teacher, agreement, fit_micros, score_micros))
+            }
+        };
+        dec.finish().map_err(blk)?;
+
+        let mut dec = crate::util::codec::Decoder::new(&art.payload);
+        let pcount = dec.u32().map_err(blk)? as usize;
+        if pcount != count {
+            return Err(SparxError::InvalidParams(format!(
+                "ensemble artifact blocks disagree: {count} members in params, {pcount} in payload"
+            )));
+        }
+        let mut members = Vec::with_capacity(count);
+        for (text, kind, fit_micros, score_micros, worker) in metas {
+            let len = dec.u32().map_err(blk)? as usize;
+            let bytes = dec.take(len).map_err(blk)?;
+            let nested = ModelArtifact::from_bytes(bytes)?;
+            if nested.detector != kind {
+                return Err(SparxError::InvalidParams(format!(
+                    "ensemble member {text:?} declares kind {kind:?} but its nested \
+                     artifact was written by {:?}",
+                    nested.detector
+                )));
+            }
+            members.push(FittedMember {
+                text,
+                model: decode_member(&nested)?,
+                fit_micros,
+                score_micros,
+                worker,
+            });
+        }
+        let distilled = match (dec.u8().map_err(blk)?, distilled_meta) {
+            (0, None) => None,
+            (0, Some(_)) => {
+                return Err(SparxError::InvalidParams(
+                    "ensemble artifact blocks disagree: distilled student in params \
+                     but not in payload"
+                        .into(),
+                ))
+            }
+            (_, None) => {
+                return Err(SparxError::InvalidParams(
+                    "ensemble artifact blocks disagree: distilled student in payload \
+                     but not in params"
+                        .into(),
+                ))
+            }
+            (_, Some((teacher, agreement, fit_micros, score_micros))) => {
+                let len = dec.u32().map_err(blk)? as usize;
+                let bytes = dec.take(len).map_err(blk)?;
+                let nested = ModelArtifact::from_bytes(bytes)?;
+                let student = FittedSparx::from_artifact(&nested)?;
+                Some(distill::Distilled { teacher, agreement, student, fit_micros, score_micros })
+            }
+        };
+        dec.finish().map_err(blk)?;
+        Ok(FittedEnsemble {
+            members,
+            distilled,
+            distill_requested: flags & 1 != 0,
+            share_projection: flags & 2 != 0,
+            schedule,
+            seed,
+        })
+    }
+}
+
+fn decode_member(art: &ModelArtifact) -> Result<MemberModel> {
+    match art.detector.as_str() {
+        "sparx" => Ok(MemberModel::Sparx(FittedSparx::from_artifact(art)?)),
+        "xstream" => Ok(MemberModel::XStream(XStream::from_artifact(art)?)),
+        "spif" => Ok(MemberModel::Spif(Spif::from_artifact(art)?)),
+        "dbscout" => Ok(MemberModel::Dbscout(FittedDbscout::from_artifact(art)?)),
+        other => Err(SparxError::InvalidParams(format!(
+            "ensemble members must be one of {} — nested {other:?} artifacts are not \
+             supported",
+            MEMBER_KINDS.join("|")
+        ))),
+    }
+}
+
+impl FittedModel for FittedEnsemble {
+    fn name(&self) -> &'static str {
+        "ensemble"
+    }
+
+    fn score(&self, ctx: &ClusterContext, data: &Dataset) -> Result<Vec<(u64, f64)>> {
+        let mut per_member = Vec::with_capacity(self.members.len());
+        for m in &self.members {
+            per_member.push(m.model.as_fitted().score(ctx, data)?);
+        }
+        combine::rank_average(&per_member)
+    }
+
+    fn to_artifact(&self) -> Result<ModelArtifact> {
+        Ok(ModelArtifact::new("ensemble", self.encode_params(), self.encode_payload()?))
+    }
+
+    fn model_bytes(&self) -> usize {
+        self.encode_payload().map(|p| p.len()).unwrap_or(0)
+    }
+
+    fn stream_scorer(&self, cache_size: usize) -> Result<StreamScorer> {
+        StreamScorer::new(self.serve_model()?, cache_size)
+    }
+
+    fn stream_scorer_sharded(&self, opts: ServeOptions) -> Result<ShardedStreamScorer> {
+        let mut scorer = ShardedStreamScorer::from_ensemble(
+            Arc::new(ServedEnsemble::new(self.serve_model()?)?),
+            opts,
+            None,
+        )?;
+        scorer.set_member_info(self.member_info());
+        Ok(scorer)
+    }
+
+    fn served_ensemble(&self) -> Result<Arc<ServedEnsemble>> {
+        Ok(Arc::new(ServedEnsemble::new(self.serve_model()?)?))
+    }
+
+    fn member_info(&self) -> Vec<MemberInfo> {
+        let serving = if self.distilled.is_some() { None } else { self.serve_member_index() };
+        let mut out: Vec<MemberInfo> = self
+            .members
+            .iter()
+            .enumerate()
+            .map(|(i, m)| MemberInfo {
+                spec: m.text.clone(),
+                kind: m.model.kind().to_string(),
+                fit_micros: m.fit_micros,
+                score_micros: m.score_micros,
+                worker: m.worker,
+                distilled_from: None,
+                serving: serving == Some(i),
+            })
+            .collect();
+        if let Some(d) = &self.distilled {
+            out.push(MemberInfo {
+                spec: "sparx:distilled".into(),
+                kind: "sparx".into(),
+                fit_micros: d.fit_micros,
+                score_micros: d.score_micros,
+                worker: 0,
+                distilled_from: Some(d.teacher.clone()),
+                serving: true,
+            });
+        }
+        out
+    }
+}
+
+/// Fit one member. `projector`, when given, is the shared-substrate
+/// clone (its `Arc`'d R matrix is the same allocation every group
+/// member holds); `None` means the member builds its own, which is
+/// bit-identical — the sign-hash family is seeded by index.
+fn fit_member(
+    ctx: &ClusterContext,
+    data: &Dataset,
+    config: &MemberConfig,
+    projector: Option<Projector>,
+) -> std::result::Result<FitOutput, SparxError> {
+    match config {
+        MemberConfig::Sparx(p) => {
+            let model = match projector {
+                Some(proj) => SparxModel::fit_with_projector(
+                    ctx,
+                    data,
+                    p,
+                    &crate::sparx::NativeBinner,
+                    proj,
+                )?,
+                None => SparxModel::fit(ctx, data, p)?,
+            };
+            Ok(FitOutput::Sparx(model))
+        }
+        MemberConfig::XStream(p) => {
+            let rows = data.rows.collect(ctx)?;
+            let model = match projector {
+                Some(proj) => XStream::fit_with_projector(&rows, &data.schema.names, p, proj),
+                None => XStream::fit(&rows, &data.schema.names, p),
+            };
+            Ok(FitOutput::XStream(model))
+        }
+        MemberConfig::Spif(p) => Ok(FitOutput::Spif(Spif::fit(ctx, data, p)?)),
+        MemberConfig::Dbscout { params, auto_eps } => {
+            api::ensure_dense(data, "DBSCOUT (ensemble member)")?;
+            let mut p = params.clone();
+            if *auto_eps {
+                p.eps = Dbscout::choose_eps(ctx, data, p.min_pts, 400)?;
+            }
+            Ok(FitOutput::Dbscout(FittedDbscout::from_params(p)?))
+        }
+    }
+}
+
+/// SUOD module 1: one projector per `(k, density)` group of ≥ 2 hashing
+/// members; singleton groups build their own (identical) projector on
+/// the normal path. Returns `shared[i] = Some(clone)` for grouped
+/// members.
+fn shared_projectors(data: &Dataset, params: &EnsembleParams) -> Vec<Option<Projector>> {
+    let n = params.members.len();
+    let mut out: Vec<Option<Projector>> = vec![None; n];
+    if !params.share_projection {
+        return out;
+    }
+    let mut groups: HashMap<(usize, u64), Vec<usize>> = HashMap::new();
+    for (i, m) in params.members.iter().enumerate() {
+        if let Some(key) = m.config().projection_key() {
+            groups.entry(key).or_default().push(i);
+        }
+    }
+    for ((k, density_bits), idxs) in groups {
+        if idxs.len() < 2 {
+            continue;
+        }
+        let density = f64::from_bits(density_bits);
+        let mut proj = Projector::new(k, density);
+        if !data.schema.names.is_empty() {
+            proj = proj.with_dense_schema(&data.schema.names);
+        }
+        for i in idxs {
+            if let Some(slot) = out.get_mut(i) {
+                *slot = Some(proj.clone());
+            }
+        }
+    }
+    out
+}
+
+/// The first `min(256, n)` rows, re-partitioned as a driver-local
+/// dataset: the common yardstick for the cost model and distillation
+/// agreement.
+fn calibration_slice(ctx: &ClusterContext, data: &Dataset) -> Result<Dataset> {
+    let want = data.len().min(CALIB_ROWS);
+    let mut rows = Vec::with_capacity(want);
+    'parts: for p in 0..data.rows.num_parts() {
+        for row in data.rows.part(p) {
+            if rows.len() >= want {
+                break 'parts;
+            }
+            rows.push(row.clone());
+        }
+    }
+    Ok(Dataset::new(data.schema.clone(), DistVec::from_vec(ctx, rows)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+    use crate::data::generators::GisetteGen;
+
+    fn ctx() -> ClusterContext {
+        ClusterConfig { num_partitions: 2, ..Default::default() }.build()
+    }
+
+    fn small_data(ctx: &ClusterContext) -> Dataset {
+        GisetteGen { n: 160, d: 8, ..Default::default() }.generate(ctx).unwrap().dataset
+    }
+
+    #[test]
+    fn default_members_fit_and_score_everything() {
+        let c = ctx();
+        let data = small_data(&c);
+        let det = EnsembleDetector::from_spec(&DetectorSpec::default()).unwrap();
+        let model = det.fit(&c, &data).unwrap();
+        let scores = model.score(&c, &data).unwrap();
+        assert_eq!(scores.len(), data.len());
+        for (_, s) in &scores {
+            assert!((0.0..=1.0).contains(s), "rank-averaged score out of range: {s}");
+        }
+    }
+
+    #[test]
+    fn member_specs_resolve_params() {
+        let m = MemberSpec::parse("sparx:depth=6:chains=4").unwrap();
+        match m.config() {
+            MemberConfig::Sparx(p) => {
+                assert_eq!(p.depth, 6);
+                assert_eq!(p.num_chains, 4);
+            }
+            other => panic!("wrong config: {other:?}"),
+        }
+        assert_eq!(m.text(), "sparx:depth=6:chains=4");
+        // unknown member kinds get a suggestion
+        let e = MemberSpec::parse("sparks").unwrap_err();
+        assert!(e.to_string().contains("sparx"), "no hint in {e}");
+        // unknown keys too
+        let e = MemberSpec::parse("sparx:depht=6").unwrap_err();
+        assert!(e.to_string().contains("depth"), "no hint in {e}");
+    }
+
+    #[test]
+    fn unseeded_members_decorrelate() {
+        let spec = DetectorSpec {
+            members: Some("sparx,sparx".into()),
+            ..Default::default()
+        };
+        let params = EnsembleParams::from_spec(&spec).unwrap();
+        let seeds: Vec<u64> = params
+            .members
+            .iter()
+            .map(|m| match m.config() {
+                MemberConfig::Sparx(p) => p.seed,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_ne!(seeds[0], seeds[1], "identical members must draw different seeds");
+    }
+
+    #[test]
+    fn no_sparx_member_cannot_serve() {
+        let c = ctx();
+        let data = small_data(&c);
+        let spec = DetectorSpec { members: Some("xstream".into()), ..Default::default() };
+        let det = EnsembleDetector::from_spec(&spec).unwrap();
+        let model = det.fit(&c, &data).unwrap();
+        let e = model.stream_scorer(64).unwrap_err();
+        assert!(matches!(e, SparxError::Unsupported(_)), "got {e:?}");
+    }
+}

@@ -98,6 +98,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod config;
 pub mod data;
+pub mod ensemble;
 pub mod experiments;
 pub mod hash;
 pub mod lint;

@@ -39,11 +39,13 @@ use std::path::Path;
 const NO_PANIC_PATHS: &[&str] = &[
     "api/artifact.rs",
     "api/registry.rs",
+    "api/spec.rs",
     "util/codec.rs",
     "sparx/checkpoint.rs",
     "sparx/decay.rs",
     "sparx/sharded.rs",
     "serve/",
+    "ensemble/",
     "main.rs",
 ];
 

@@ -15,10 +15,10 @@
 //! Subcommands (hand-rolled parser — the offline build has no clap):
 //!
 //! ```text
-//! sparx fit      --method sparx|xstream|spif|dbscout --model-out m.sparx
+//! sparx fit      --method sparx|xstream|spif|dbscout|ensemble --model-out m.sparx
 //!                [--dataset gisette|osm|spamurl] [--config gen|mod|local]
 //!                [--components M] [--chains M] [--depth L] [--rate R] [--k K]
-//!                [--eps E] [--min-pts P] [--scale S] [--seed N]
+//!                [--eps E] [--min-pts P] [--scale S] [--seed N] [--distill]
 //!                [--backend native|pjrt] [--exec fused|per-chain]
 //! sparx score    --model m.sparx [--dataset gisette|osm|spamurl]
 //!                [--config gen|mod|local] [--scale S] [--seed N]
@@ -38,6 +38,15 @@
 //! sparx generate --stream N --out updates.txt [--seed N]  # ⟨ID, F, δ⟩ lines
 //! sparx info                                    # artifacts + presets
 //! ```
+//!
+//! `--method` takes a full **detector spec string**, not just a name:
+//! `name?key=val&key=val` parameterizes the method inline (one shared
+//! grammar with `registry::create` — e.g. `--method
+//! "sparx?depth=12&rate=0.05"`, or `--method
+//! "ensemble?members=sparx:depth=6,xstream&distill=true"` for a
+//! heterogeneous ensemble whose members are `name(:key=val)*` specs).
+//! Spec-string values win over the equivalent flags; unknown keys are
+//! typed errors with an edit-distance suggestion.
 //!
 //! `serve` reads one update triple per line (`#` comments and blank
 //! lines skipped): `ID FEATURE δ` for numeric increments, and
@@ -87,7 +96,9 @@
 use std::collections::HashMap;
 use std::str::FromStr;
 
-use sparx::api::{registry, Backend, Detector as _, DetectorSpec, FittedModel, SparxError};
+use sparx::api::{
+    registry, Backend, Detector as _, DetectorSpec, FittedModel, MethodSpec, SparxError,
+};
 use sparx::config::presets;
 use sparx::data::generators::{GisetteGen, OsmGen, SpamUrlGen};
 use sparx::data::{parse_update_line, LabeledDataset, StreamGen, UpdateTriple};
@@ -239,9 +250,9 @@ fn make_dataset(
 /// The hyperparameter + data flags shared by `detect` and `fit`; each
 /// command appends its one extra flag (`--out` / `--model-out`) at its
 /// `check_flags` call instead of repeating this list.
-const HYPER_FLAGS: [&str; 14] = [
+const HYPER_FLAGS: [&str; 15] = [
     "method", "dataset", "config", "components", "chains", "depth", "rate", "k", "eps",
-    "min-pts", "scale", "seed", "backend", "exec",
+    "min-pts", "scale", "seed", "backend", "exec", "distill",
 ];
 
 /// Explicitly-passed flags the chosen method would ignore are errors,
@@ -257,6 +268,10 @@ fn check_method_flags(
         "xstream" => &["chains", "components", "depth", "k"],
         "spif" => &["chains", "components", "depth", "rate"],
         "dbscout" => &["eps", "min-pts"],
+        // member hyperparameters live inside the `members=` spec string
+        // (`sparx:depth=6,…`), not in top-level flags — only the
+        // ensemble-level toggles are flags
+        "ensemble" => &["distill"],
         // unknown method: skip so the registry's UnknownDetector error
         // (with its typo suggestion) surfaces instead
         _ => &HYPER_FLAGS,
@@ -324,6 +339,11 @@ fn build_spec(
         pjrt_variant: Some(dataset.to_string()),
         eps: flag_opt(flags, "eps")?,
         min_pts: flag_opt(flags, "min-pts")?,
+        distill: flag_bool(flags, "distill")?,
+        // members / share / schedule have no dedicated flags: they are
+        // spec-string-only (`--method "ensemble?members=…&schedule=…"`),
+        // overlaid by `registry::apply_spec_string` after this
+        ..Default::default()
     })
 }
 
@@ -361,13 +381,18 @@ fn cmd_detect(flags: &HashMap<String, String>) -> CliResult {
     allowed.push("out");
     check_flags("detect", flags, &allowed)?;
     let method = flags.get("method").cloned().unwrap_or_else(|| "sparx".into());
-    check_method_flags(&method, flags, &["out"])?;
+    // `--method` is a full spec string (`name?key=val&…`): flag-level
+    // checks run against the parsed name, the spec-string pairs overlay
+    // the flag-built spec afterwards (spec-string values win)
+    let ms = MethodSpec::parse(&method)?;
+    check_method_flags(&ms.name, flags, &["out"])?;
     let seed: Option<u64> = flag_opt(flags, "seed")?;
     let mut ctx = make_ctx(flags)?;
     let (dataset, ld) = make_flagged_dataset(flags, &ctx)?;
     ctx.reset();
-    let spec = build_spec(&method, &dataset, seed, flags)?;
-    let det = registry::build(&method, &spec)?;
+    let mut spec = build_spec(&ms.name, &dataset, seed, flags)?;
+    registry::apply_spec_string(&ms, &mut spec)?;
+    let det = registry::build(&ms.name, &spec)?;
     let model = det.fit(&ctx, &ld.dataset)?;
     let scores = model.score(&ctx, &ld.dataset)?;
     let res = ResourceReport::from_ctx(&ctx);
@@ -402,13 +427,15 @@ fn cmd_fit(flags: &HashMap<String, String>) -> CliResult {
         .cloned()
         .ok_or_else(|| usage_err("fit requires --model-out <file>".into()))?;
     let method = flags.get("method").cloned().unwrap_or_else(|| "sparx".into());
-    check_method_flags(&method, flags, &["model-out"])?;
+    let ms = MethodSpec::parse(&method)?;
+    check_method_flags(&ms.name, flags, &["model-out"])?;
     let seed: Option<u64> = flag_opt(flags, "seed")?;
     let mut ctx = make_ctx(flags)?;
     let (dataset, ld) = make_flagged_dataset(flags, &ctx)?;
     ctx.reset();
-    let spec = build_spec(&method, &dataset, seed, flags)?;
-    let det = registry::build(&method, &spec)?;
+    let mut spec = build_spec(&ms.name, &dataset, seed, flags)?;
+    registry::apply_spec_string(&ms, &mut spec)?;
+    let det = registry::build(&ms.name, &spec)?;
     let t0 = std::time::Instant::now();
     let model = det.fit(&ctx, &ld.dataset)?;
     let fit_secs = t0.elapsed().as_secs_f64();
@@ -782,9 +809,30 @@ fn cmd_serve(flags: &HashMap<String, String>) -> CliResult {
         ensemble.resident_bytes(),
         ensemble.model_fingerprint()
     ));
-    let opts = ServeOptions { record: score_log.is_some(), absorb, decay };
-    let mut scorer =
-        ShardedStreamScorer::from_ensemble(ensemble, shards, cache, opts, resume.as_ref())?;
+    let opts = ServeOptions::new()
+        .shards(shards)
+        .cache(cache)
+        .record(score_log.is_some())
+        .absorb(absorb)
+        .decay(decay);
+    let mut scorer = ShardedStreamScorer::from_ensemble(ensemble, opts, resume.as_ref())?;
+    // ensemble models expose per-member provenance (spec, measured fit /
+    // score cost, worker, distillation lineage) — carried into the
+    // scorer so STATS / METRICS report it live
+    let members = model.member_info();
+    for m in &members {
+        let lineage = m
+            .distilled_from
+            .as_deref()
+            .map(|t| format!(", distilled from {t}"))
+            .unwrap_or_default();
+        let serving = if m.serving { " [serving]" } else { "" };
+        status(format!(
+            "  member {} ({}): fit {}µs, score {}µs, worker {}{lineage}{serving}",
+            m.spec, m.kind, m.fit_micros, m.score_micros, m.worker
+        ));
+    }
+    scorer.set_member_info(members);
     let resumed_offset = resume.as_ref().map(|c| c.submitted).unwrap_or(0);
     if let Some(ckpt) = &resume {
         status(format!(

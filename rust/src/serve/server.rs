@@ -25,6 +25,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use crate::api::{Result, SparxError};
 use crate::data::UpdateTriple;
 use crate::sparx::sharded::{QueryInfo, ReplySink, ShardedStats, ShardedStreamScorer, WouldBlock};
+use crate::sparx::MemberInfo;
 
 use super::conn::handle_conn;
 
@@ -159,16 +160,57 @@ pub fn queries_json(queries: &[QueryInfo]) -> String {
     format!("[{}]", items.join(","))
 }
 
+/// Quote `s` as a JSON string. Member spec text comes from the detector
+/// spec grammar, whose values are user-written — escape defensively
+/// rather than trusting the character set.
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render the served model's per-member provenance (ensemble models
+/// only; empty for single-detector models) as one JSON array.
+fn members_json(members: &[MemberInfo]) -> String {
+    let items: Vec<String> = members
+        .iter()
+        .map(|m| {
+            format!(
+                "{{\"spec\":{},\"kind\":{},\"fit_micros\":{},\"score_micros\":{},\
+                 \"worker\":{},\"distilled_from\":{},\"serving\":{}}}",
+                json_str(&m.spec),
+                json_str(&m.kind),
+                m.fit_micros,
+                m.score_micros,
+                m.worker,
+                m.distilled_from.as_deref().map_or_else(|| "null".into(), json_str),
+                m.serving,
+            )
+        })
+        .collect();
+    format!("[{}]", items.join(","))
+}
+
 /// Render live stats as the single-line JSON the `STATS` verb returns:
 /// the merged [`ShardedStats`] counters plus the resident-byte
-/// accounting and the registered queries. Key order is fixed — the line
-/// is meant to be parsed.
+/// accounting, the registered queries and the ensemble member
+/// provenance. Key order is fixed — the line is meant to be parsed; new
+/// keys are only ever appended.
 pub fn stats_json(stats: &ShardedStats) -> String {
     format!(
         "{{\"shards\":{},\"submitted\":{},\"processed\":{},\"admitted\":{},\
          \"evictions\":{},\"absorbed\":{},\"resident_ids\":{},\
          \"resident_ensemble_bytes\":{},\"resident_sketch_bytes\":{},\"resident_bytes\":{},\
-         \"queries\":{}}}",
+         \"queries\":{},\"members\":{}}}",
         stats.shards.len(),
         stats.submitted,
         stats.processed(),
@@ -180,6 +222,7 @@ pub fn stats_json(stats: &ShardedStats) -> String {
         stats.resident_sketch_bytes,
         stats.resident_bytes(),
         queries_json(&stats.queries),
+        members_json(&stats.members),
     )
 }
 
@@ -211,6 +254,11 @@ pub fn metrics_text(stats: &ShardedStats) -> String {
         stats.resident_bytes() as u64,
     );
     gauge("sparx_queries", "registered named queries", stats.queries.len() as u64);
+    gauge(
+        "sparx_ensemble_members",
+        "members behind the served model (0 for single-detector models)",
+        stats.members.len() as u64,
+    );
     if !stats.queries.is_empty() {
         out.push_str(
             "# HELP sparx_query_scored_total named-query score probes served\n\
@@ -220,6 +268,39 @@ pub fn metrics_text(stats: &ShardedStats) -> String {
             out.push_str(&format!(
                 "sparx_query_scored_total{{query=\"{}\"}} {}\n",
                 q.name, q.scored
+            ));
+        }
+    }
+    if !stats.members.is_empty() {
+        out.push_str(
+            "# HELP sparx_member_fit_micros measured member fit cost on the training run\n\
+             # TYPE sparx_member_fit_micros gauge\n",
+        );
+        for m in &stats.members {
+            out.push_str(&format!(
+                "sparx_member_fit_micros{{member=\"{}\",kind=\"{}\"}} {}\n",
+                m.spec, m.kind, m.fit_micros
+            ));
+        }
+        out.push_str(
+            "# HELP sparx_member_score_micros measured member calibration-score cost\n\
+             # TYPE sparx_member_score_micros gauge\n",
+        );
+        for m in &stats.members {
+            out.push_str(&format!(
+                "sparx_member_score_micros{{member=\"{}\",kind=\"{}\"}} {}\n",
+                m.spec, m.kind, m.score_micros
+            ));
+        }
+        out.push_str(
+            "# HELP sparx_member_serving 1 on the member backing the serve path\n\
+             # TYPE sparx_member_serving gauge\n",
+        );
+        for m in &stats.members {
+            out.push_str(&format!(
+                "sparx_member_serving{{member=\"{}\"}} {}\n",
+                m.spec,
+                u8::from(m.serving)
             ));
         }
     }
@@ -359,6 +440,26 @@ mod tests {
                 QueryInfo { name: "decayed.1k".into(), half_life: 1024, window: 0, scored: 7 },
                 QueryInfo { name: "w-256".into(), half_life: 0, window: 256, scored: 0 },
             ],
+            members: vec![
+                MemberInfo {
+                    spec: "xstream:depth=12".into(),
+                    kind: "xstream".into(),
+                    fit_micros: 900,
+                    score_micros: 40,
+                    worker: 1,
+                    distilled_from: None,
+                    serving: false,
+                },
+                MemberInfo {
+                    spec: "sparx:distilled".into(),
+                    kind: "sparx".into(),
+                    fit_micros: 120,
+                    score_micros: 9,
+                    worker: 0,
+                    distilled_from: Some("xstream:depth=12".into()),
+                    serving: true,
+                },
+            ],
         }
     }
 
@@ -380,6 +481,23 @@ mod tests {
             "\"queries\":[{\"name\":\"decayed.1k\",\"half_life\":1024,\"window\":0,\"scored\":7}"
         ));
         assert!(line.contains("{\"name\":\"w-256\",\"half_life\":0,\"window\":256,\"scored\":0}"));
+        // member provenance is appended last, with distillation lineage
+        assert!(line.contains(
+            "\"members\":[{\"spec\":\"xstream:depth=12\",\"kind\":\"xstream\",\
+             \"fit_micros\":900,\"score_micros\":40,\"worker\":1,\
+             \"distilled_from\":null,\"serving\":false}"
+        ));
+        assert!(line.contains(
+            "{\"spec\":\"sparx:distilled\",\"kind\":\"sparx\",\"fit_micros\":120,\
+             \"score_micros\":9,\"worker\":0,\"distilled_from\":\"xstream:depth=12\",\
+             \"serving\":true}"
+        ));
+    }
+
+    #[test]
+    fn member_json_escapes_hostile_spec_text() {
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("tab\there"), "\"tab\\u0009here\"");
     }
 
     #[test]
@@ -411,6 +529,16 @@ mod tests {
         assert!(text.contains("sparx_queries 2\n"));
         assert!(text.contains("sparx_query_scored_total{query=\"decayed.1k\"} 7\n"));
         assert!(text.contains("sparx_query_scored_total{query=\"w-256\"} 0\n"));
+        // per-member labeled gauges, with the serving marker
+        assert!(text.contains("sparx_ensemble_members 2\n"));
+        assert!(text.contains(
+            "sparx_member_fit_micros{member=\"xstream:depth=12\",kind=\"xstream\"} 900\n"
+        ));
+        assert!(text.contains(
+            "sparx_member_score_micros{member=\"sparx:distilled\",kind=\"sparx\"} 9\n"
+        ));
+        assert!(text.contains("sparx_member_serving{member=\"sparx:distilled\"} 1\n"));
+        assert!(text.contains("sparx_member_serving{member=\"xstream:depth=12\"} 0\n"));
     }
 
     #[test]

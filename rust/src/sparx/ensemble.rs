@@ -25,6 +25,7 @@
 //! score vectors `zip_map`-summed) is kept for A/B comparison; both
 //! paths produce bit-identical models and scores.
 
+use crate::api::validate;
 use crate::cluster::dist::Broadcast;
 use crate::cluster::{pool, ClusterContext, ClusterError, DistVec, Result};
 use crate::data::Dataset;
@@ -95,30 +96,12 @@ impl SparxParams {
     /// `SparxError::InvalidParams`), so degenerate settings fail fast with
     /// a typed error instead of panicking deep in the pipeline.
     pub fn validate(&self) -> std::result::Result<(), String> {
-        if self.num_chains == 0 {
-            return Err("num_chains (M) must be ≥ 1".into());
-        }
-        if self.depth == 0 {
-            return Err("depth (L) must be ≥ 1".into());
-        }
-        if self.cms_rows == 0 || self.cms_cols == 0 {
-            return Err(format!(
-                "CMS shape must be non-degenerate: got r={} w={}",
-                self.cms_rows, self.cms_cols
-            ));
-        }
-        if self.cms_rows >= 128 || self.cms_cols >= (1 << 20) {
-            return Err(format!(
-                "CMS too large for shuffle key packing (r < 128, w < 2^20): got r={} w={}",
-                self.cms_rows, self.cms_cols
-            ));
-        }
-        if !(self.sample_rate > 0.0 && self.sample_rate <= 1.0) {
-            return Err(format!("sample_rate must be in (0, 1]: got {}", self.sample_rate));
-        }
-        if !(self.density > 0.0 && self.density <= 1.0) {
-            return Err(format!("density must be in (0, 1]: got {}", self.density));
-        }
+        validate::at_least_one(self.num_chains, "num_chains (M)")?;
+        validate::at_least_one(self.depth, "depth (L)")?;
+        validate::cms_shape(self.cms_rows, self.cms_cols)?;
+        validate::cms_packable(self.cms_rows, self.cms_cols)?;
+        validate::unit_interval(self.sample_rate, "sample_rate")?;
+        validate::unit_interval(self.density, "density")?;
         Ok(())
     }
 }
@@ -301,6 +284,23 @@ impl SparxModel {
     ) -> Result<SparxModel> {
         params.validate().map_err(ClusterError::Invalid)?;
         let projector = Self::make_projector(data, params);
+        Self::fit_with_projector(ctx, data, params, binner, projector)
+    }
+
+    /// [`fit_with`](Self::fit_with) against a caller-supplied projector
+    /// — the SUOD shared-projection substrate: ensemble members with
+    /// compatible `(k, density)` schemas hand in clones of **one**
+    /// projector (cheap `Arc` shares of its R matrix) instead of each
+    /// materialising its own. The projector must match `params.k` (or be
+    /// the identity when `k == 0`); callers own that agreement.
+    pub fn fit_with_projector(
+        ctx: &ClusterContext,
+        data: &Dataset,
+        params: &SparxParams,
+        binner: &dyn Binner,
+        projector: Projector,
+    ) -> Result<SparxModel> {
+        params.validate().map_err(ClusterError::Invalid)?;
         let proj = project_dataset(ctx, data, &projector)?;
         let deltamax = compute_deltamax(ctx, &proj)?;
         let chains = match params.exec_mode {

@@ -44,7 +44,7 @@ pub use ensemble::{
 pub use plan::{ChainSet, ExecMode};
 pub use projector::{compute_deltamax, project_dataset, Projector, Sketch};
 pub use sharded::{
-    shard_of, QueryInfo, ReplySink, ServeOptions, ShardCounters, ShardReply, ShardedReport,
-    ShardedStats, ShardedStreamScorer, WouldBlock, ABSORB_EPOCH,
+    shard_of, MemberInfo, QueryInfo, ReplySink, ServeOptions, ShardCounters, ShardReply,
+    ShardedReport, ShardedStats, ShardedStreamScorer, WouldBlock, ABSORB_EPOCH,
 };
 pub use stream::{ServedEnsemble, StreamScore, StreamScorer, SwapCarry};

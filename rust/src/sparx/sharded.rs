@@ -96,9 +96,26 @@ pub fn shard_of(id: u64, shards: usize) -> usize {
     murmur3_bytes(&id.to_le_bytes(), SHARD_ROUTE_SEED) as usize % shards
 }
 
-/// Serving-mode switches for the sharded front-end.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// Serving options for the sharded front-end: **one** builder-style
+/// struct shared by CLI parsing (`--shards/--cache/--absorb/
+/// --half-life/--window`), [`FittedModel::stream_scorer_sharded`] and
+/// checkpoint resume, so new serving knobs widen this struct instead of
+/// every positional signature on the path.
+///
+/// ```no_run
+/// # use sparx::sparx::ServeOptions;
+/// let opts = ServeOptions::new().shards(4).cache(1 << 16).absorb(true);
+/// ```
+///
+/// [`FittedModel::stream_scorer_sharded`]: crate::api::FittedModel::stream_scorer_sharded
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ServeOptions {
+    /// Shard worker count — pure parallelism, never affects scores
+    /// (≥ 1, ≤ 4096).
+    pub shards: usize,
+    /// **Total** resident-sketch budget across all shards (the global
+    /// LRU directory's capacity).
+    pub cache_total: usize,
     /// Record every (sequence, score) pair per shard for later merging —
     /// memory grows with the stream; for harnesses and `--score-log`,
     /// not steady-state production serving.
@@ -113,6 +130,56 @@ pub struct ServeOptions {
     /// as pure functions of the submit sequence, so decayed scores stay
     /// bit-identical across shard counts and resume cuts.
     pub decay: DecaySpec,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            shards: 1,
+            cache_total: 4096,
+            record: false,
+            absorb: false,
+            decay: DecaySpec::default(),
+        }
+    }
+}
+
+impl ServeOptions {
+    /// Start from the defaults (1 shard, 4096-sketch cache, no
+    /// recording, no absorb, no decay).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the shard worker count.
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+
+    /// Set the total resident-sketch budget.
+    pub fn cache(mut self, cache_total: usize) -> Self {
+        self.cache_total = cache_total;
+        self
+    }
+
+    /// Toggle per-shard score recording.
+    pub fn record(mut self, on: bool) -> Self {
+        self.record = on;
+        self
+    }
+
+    /// Toggle absorb mode.
+    pub fn absorb(mut self, on: bool) -> Self {
+        self.absorb = on;
+        self
+    }
+
+    /// Set the decay schedule (requires absorb mode when enabled).
+    pub fn decay(mut self, decay: DecaySpec) -> Self {
+        self.decay = decay;
+        self
+    }
 }
 
 /// A score flowing back to whoever submitted the update or query. The
@@ -374,6 +441,30 @@ pub struct QueryInfo {
     pub scored: u64,
 }
 
+/// Per-member provenance row for ensemble models on the serving plane
+/// (`STATS` / `METRICS`): the member's canonical spec, its measured
+/// calibration-slice cost, the pool worker its full fit was assigned
+/// to, distillation lineage, and whether it answers the serve path.
+/// Single-method models report an empty member list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemberInfo {
+    /// Canonical member spec (e.g. `sparx:depth=6`).
+    pub spec: String,
+    /// Member method kind (`sparx`, `xstream`, `spif`, `dbscout`).
+    pub kind: String,
+    /// Calibration-slice fit cost, in µs of worker CPU time.
+    pub fit_micros: u64,
+    /// Calibration-slice score cost, in µs of worker CPU time.
+    pub score_micros: u64,
+    /// Pool worker the full fit ran on (cost-balanced assignment).
+    pub worker: usize,
+    /// For a distilled student: the spec of the expensive teacher member
+    /// whose scores it was fit to approximate.
+    pub distilled_from: Option<String>,
+    /// Whether this member is the one answering the streaming serve path.
+    pub serving: bool,
+}
+
 /// Live counters for the `STATS` verb: the per-shard counters a running
 /// pool reports without stopping, plus the feeder-side aggregates.
 #[derive(Debug, Clone)]
@@ -389,6 +480,8 @@ pub struct ShardedStats {
     pub resident_sketch_bytes: usize,
     /// Registered named queries, in registration order.
     pub queries: Vec<QueryInfo>,
+    /// Ensemble member provenance (empty for single-method models).
+    pub members: Vec<MemberInfo>,
 }
 
 impl ShardedStats {
@@ -464,6 +557,9 @@ pub struct ShardedStreamScorer {
     submitted: u64,
     opts: ServeOptions,
     ensemble: Arc<ServedEnsemble>,
+    /// Per-member provenance of the model being served (empty unless the
+    /// artifact was an ensemble; see [`MemberInfo`]).
+    member_info: Vec<MemberInfo>,
     /// Recorded score logs of generations retired by a live reshard.
     archive: Vec<Vec<(u64, StreamScore)>>,
     /// Worst score across retired generations.
@@ -477,44 +573,28 @@ impl ShardedStreamScorer {
     pub fn new(model: &SparxModel, shards: usize, cache_total: usize) -> Result<Self> {
         Self::from_ensemble(
             Arc::new(ServedEnsemble::new(model)?),
-            shards,
-            cache_total,
-            ServeOptions::default(),
+            ServeOptions::new().shards(shards).cache(cache_total),
             None,
         )
     }
 
-    /// Test-harness constructor: every shard additionally records its
-    /// full score sequence for later comparison. Memory grows with the
-    /// stream — not for production serving.
-    pub fn recording(model: &SparxModel, shards: usize, cache_total: usize) -> Result<Self> {
-        Self::from_ensemble(
-            Arc::new(ServedEnsemble::new(model)?),
-            shards,
-            cache_total,
-            ServeOptions { record: true, ..ServeOptions::default() },
-            None,
-        )
-    }
-
-    /// The full-control constructor: share `ensemble` across `shards`
-    /// workers under one `cache_total` budget, optionally recording
-    /// and/or absorbing ([`ServeOptions`]), optionally restoring a
-    /// checkpoint so the stream continues exactly where a previous
-    /// process left off.
+    /// The full-control constructor: share `ensemble` across
+    /// `opts.shards` workers under one `opts.cache_total` budget,
+    /// optionally recording and/or absorbing ([`ServeOptions`]),
+    /// optionally restoring a checkpoint so the stream continues exactly
+    /// where a previous process left off.
     ///
     /// Resume is validated typed before any worker spawns, and — from
-    /// checkpoint format v4 — is **layout-free**: `shards` and
-    /// `cache_total` may differ from the capture-time values. The
+    /// checkpoint format v4 — is **layout-free**: `opts.shards` and
+    /// `opts.cache_total` may differ from the capture-time values. The
     /// checkpoint's global LRU→MRU entry order rebuilds the recency
     /// directory; a smaller budget evicts from the LRU side on the spot.
     pub fn from_ensemble(
         ensemble: Arc<ServedEnsemble>,
-        shards: usize,
-        cache_total: usize,
         opts: ServeOptions,
         resume: Option<&AbsorbCheckpoint>,
     ) -> Result<Self> {
+        let ServeOptions { shards, cache_total, .. } = opts;
         if shards == 0 {
             return Err(SparxError::InvalidParams("shard count must be ≥ 1".into()));
         }
@@ -604,6 +684,7 @@ impl ShardedStreamScorer {
             submitted,
             opts,
             ensemble,
+            member_info: Vec::new(),
             archive: Vec::new(),
             carried_worst: None,
         })
@@ -611,6 +692,18 @@ impl ShardedStreamScorer {
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// Attach per-member provenance (set by `serve` when the loaded
+    /// artifact is an ensemble) so `STATS` / `METRICS` can report it.
+    pub fn set_member_info(&mut self, members: Vec<MemberInfo>) {
+        self.member_info = members;
+    }
+
+    /// Per-member provenance of the served model (empty for
+    /// single-method models).
+    pub fn member_info(&self) -> &[MemberInfo] {
+        &self.member_info
     }
 
     /// The pool-wide resident-sketch budget.
@@ -1121,6 +1214,7 @@ impl ShardedStreamScorer {
             resident_ensemble_bytes: self.ensemble.resident_bytes(),
             resident_sketch_bytes: self.dir.len() * self.ensemble.k() * std::mem::size_of::<f32>(),
             queries: self.query_list(),
+            members: self.member_info.clone(),
         })
     }
 
@@ -1313,7 +1407,12 @@ mod tests {
     #[test]
     fn recording_mode_captures_per_shard_logs_with_submit_seqs() {
         let model = fitted();
-        let mut scorer = ShardedStreamScorer::recording(&model, 2, 32).unwrap();
+        let mut scorer = ShardedStreamScorer::from_ensemble(
+            Arc::new(ServedEnsemble::new(&model).unwrap()),
+            ServeOptions::new().shards(2).cache(32).record(true),
+            None,
+        )
+        .unwrap();
         for id in 0..10u64 {
             scorer.submit(UpdateTriple::Num { id, feature: "f0".into(), delta: 0.5 });
         }
@@ -1351,9 +1450,7 @@ mod tests {
             let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
             let mut pool = ShardedStreamScorer::from_ensemble(
                 ens,
-                shards,
-                cache,
-                ServeOptions { record: true, ..Default::default() },
+                ServeOptions::new().shards(shards).cache(cache).record(true),
                 None,
             )
             .unwrap();
@@ -1381,9 +1478,7 @@ mod tests {
         let run = |shards: usize| {
             let mut pool = ShardedStreamScorer::from_ensemble(
                 ens.clone(),
-                shards,
-                24,
-                ServeOptions { record: true, absorb: true, ..Default::default() },
+                ServeOptions::new().shards(shards).cache(24).record(true).absorb(true),
                 None,
             )
             .unwrap();
@@ -1480,16 +1575,16 @@ mod tests {
         let model = fitted();
         let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
         let updates = churn(900, 40);
-        let opts = ServeOptions { record: true, absorb: true, ..Default::default() };
+        let opts = ServeOptions::new().cache(24).record(true).absorb(true);
         let mut reference =
-            ShardedStreamScorer::from_ensemble(ens.clone(), 1, 24, opts, None).unwrap();
+            ShardedStreamScorer::from_ensemble(ens.clone(), opts.shards(1), None).unwrap();
         for u in &updates {
             reference.submit(u.clone());
         }
         let expected = reference.finish();
         assert!(expected.evictions() > 0);
 
-        let mut pool = ShardedStreamScorer::from_ensemble(ens, 2, 24, opts, None).unwrap();
+        let mut pool = ShardedStreamScorer::from_ensemble(ens, opts.shards(2), None).unwrap();
         for (i, u) in updates.iter().enumerate() {
             if i == 300 {
                 pool.reshard(4).unwrap();
@@ -1517,9 +1612,7 @@ mod tests {
         let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
         let one = ShardedStreamScorer::from_ensemble(
             ens.clone(),
-            1,
-            16,
-            ServeOptions::default(),
+            ServeOptions::new().shards(1).cache(16),
             None,
         )
         .unwrap();
@@ -1527,9 +1620,7 @@ mod tests {
         drop(one.finish());
         let eight = ShardedStreamScorer::from_ensemble(
             ens.clone(),
-            8,
-            16,
-            ServeOptions::default(),
+            ServeOptions::new().shards(8).cache(16),
             None,
         )
         .unwrap();
@@ -1556,9 +1647,7 @@ mod tests {
         let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
         let mut scorer = ShardedStreamScorer::from_ensemble(
             ens,
-            3,
-            64,
-            ServeOptions { record: false, absorb: true, ..Default::default() },
+            ServeOptions::new().shards(3).cache(64).absorb(true),
             None,
         )
         .unwrap();

@@ -5,8 +5,10 @@
 //! ([`registry::load_bytes`](crate::api::registry::load_bytes)),
 //! absorb-state checkpoints ([`AbsorbCheckpoint`]), the packed
 //! varint/RLE counter codec ([`Decoder::u32_vec_packed`]), serve-input
-//! lines ([`parse_update_line`]) and the TCP wire grammar
-//! ([`parse_request`] — data lines plus control verbs). The invariant,
+//! lines ([`parse_update_line`]), the TCP wire grammar
+//! ([`parse_request`] — data lines plus control verbs) and the detector
+//! spec-string grammar ([`MethodSpec`] — `--method` arguments and
+//! `members=` lists). The invariant,
 //! enforced per input by [`exercise`]:
 //!
 //! > any byte string either decodes to a **typed error** or decodes to a
@@ -27,8 +29,8 @@
 //! [`exercise`] and additionally bounds peak allocation with a counting
 //! global allocator.
 
-use crate::api::registry;
-use crate::api::{FittedModel, ModelArtifact};
+use crate::api::{registry, spec};
+use crate::api::{FittedModel, MethodSpec, ModelArtifact};
 use crate::cluster::ClusterConfig;
 use crate::data::generators::GisetteGen;
 use crate::data::stream::parse_update_line;
@@ -69,6 +71,7 @@ pub fn exercise(input: &[u8]) -> u32 {
     accepted += u32::from(target_packed_codec(input));
     accepted += u32::from(target_update_lines(input));
     accepted += u32::from(target_wire_requests(input));
+    accepted += u32::from(target_spec_strings(input));
     accepted
 }
 
@@ -208,12 +211,44 @@ fn target_wire_requests(input: &[u8]) -> bool {
     any
 }
 
+/// Detector spec-string grammar ([`MethodSpec`]): every line either
+/// fails typed or parses to a spec whose canonical [`MethodSpec::print`]
+/// re-parses to the same value — likewise for the `name(:key=val)*`
+/// member form and comma-separated member lists — and
+/// [`registry::create`] must stay panic-free on anything the grammar
+/// admits (unknown names / keys / values are typed errors).
+fn target_spec_strings(input: &[u8]) -> bool {
+    let text = String::from_utf8_lossy(input);
+    let mut any = false;
+    for line in text.lines().take(64) {
+        if let Ok(ms) = MethodSpec::parse(line) {
+            let reparsed =
+                MethodSpec::parse(&ms.print()).expect("canonical spec string must re-parse");
+            assert_eq!(reparsed, ms, "spec string must round trip through print");
+            // building from an accepted grammar line must fail typed or
+            // succeed — never panic (fit never runs here)
+            let _ = registry::create(line);
+            any = true;
+        }
+        if let Ok(ms) = MethodSpec::parse_member(line) {
+            let reparsed = MethodSpec::parse_member(&ms.print_member())
+                .expect("canonical member spec must re-parse");
+            assert_eq!(reparsed, ms, "member spec must round trip through print_member");
+            any = true;
+        }
+        // comma-separated member lists share the grammar; rejections are
+        // typed by construction
+        let _ = spec::parse_members(line);
+    }
+    any
+}
+
 // ----------------------------------------------------- seeds + mutators
 
 /// Valid encodings the mutators start from, built once in-process:
 /// index 0 a fitted sparx model artifact, 1 a checkpoint artifact, 2–3
 /// packed counter blocks, 4 serve lines, 5 a bare truncated header,
-/// 6 wire control verbs.
+/// 6 wire control verbs, 7 detector spec strings.
 pub fn seed_corpus() -> &'static [Vec<u8>] {
     static SEEDS: OnceLock<Vec<Vec<u8>>> = OnceLock::new();
     SEEDS.get_or_init(|| {
@@ -226,6 +261,10 @@ pub fn seed_corpus() -> &'static [Vec<u8>] {
             b"SPRX\x03\x00".to_vec(),
             b"SCORE 17\nSCORE 17 decayed.1k\nQUERY ADD decayed.1k 1024 256\nQUERY LIST\n\
               QUERY DROP decayed.1k\nSTATS\nRESHARD 4\nCHECKPOINT\nMETRICS\nQUIT\nSHUTDOWN\n"
+                .to_vec(),
+            b"ensemble?members=sparx:depth=6:seed=3,xstream&distill=true&schedule=round-robin\n\
+              sparx?k=12&chains=8&depth=10&rate=0.5&seed=7\ndbscout?eps=0.25&min-pts=4\n\
+              xstream\nspif?trees=20&depth=8\nensemble?members=sparx,xstream&share=false\n"
                 .to_vec(),
         ]
     })
@@ -358,7 +397,9 @@ fn mutate(input: &mut Vec<u8>, rng: &mut Rng, seeds: &[Vec<u8>]) {
             // hostile-name injection aimed at the line grammars: arrows
             // that move the categorical split, whitespace that
             // re-tokenizes, non-finite δ tokens, over-long and
-            // non-ASCII query names — the to_line/parse asymmetry class
+            // non-ASCII query names, spec-string punctuation that moves
+            // the name/params and key/value splits — the
+            // render/parse asymmetry class
             const HOSTILE: &[&[u8]] = &[
                 b"->",
                 b"a->b->c",
@@ -372,6 +413,10 @@ fn mutate(input: &mut Vec<u8>, rng: &mut Rng, seeds: &[Vec<u8>]) {
                 b"QUERY ADD \xe2\x9c\x93 1 1\n",
                 b"SCORE 1 xxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx\
                   xxxxxxxxxxxxxxxxxxxxxxxxx\n",
+                b"?",
+                b"&",
+                b"=",
+                b"members=",
             ];
             let frag = HOSTILE[rng.below(HOSTILE.len() as u64) as usize];
             let pos = rng.below(input.len() as u64 + 1) as usize;
@@ -433,6 +478,7 @@ mod tests {
         assert!(exercise(&seeds[4]) >= 1, "line seed accepted");
         assert_eq!(exercise(&seeds[5]), 0, "truncated header rejected everywhere");
         assert!(exercise(&seeds[6]) >= 1, "wire verb seed accepted");
+        assert!(exercise(&seeds[7]) >= 1, "spec string seed accepted");
     }
 
     #[test]

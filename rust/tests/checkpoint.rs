@@ -69,7 +69,11 @@ fn checkpoint_is_identical_at_every_shard_count() {
 
     let cut = |shards: usize| -> AbsorbCheckpoint {
         let mut scorer =
-            ShardedStreamScorer::from_ensemble(ens.clone(), shards, cache, opts, None).unwrap();
+            ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(shards).cache(cache),
+        None,
+    ).unwrap();
         for u in &updates {
             scorer.submit(u.clone());
         }
@@ -118,7 +122,11 @@ fn file_checkpoint_resumes_bit_identically_at_a_different_shard_count() {
     let opts = ServeOptions { record: true, absorb: true, ..Default::default() };
 
     // uninterrupted single-shard reference run
-    let mut full = ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+    let mut full = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(1).cache(cache),
+        None,
+    ).unwrap();
     for u in &updates {
         full.submit(u.clone());
     }
@@ -128,7 +136,11 @@ fn file_checkpoint_resumes_bit_identically_at_a_different_shard_count() {
 
     // interrupted run at S=3: first half, checkpoint to a file, tear down
     let cut = updates.len() / 2; // 2000 % 256 != 0: a mid-epoch cut
-    let mut first = ShardedStreamScorer::from_ensemble(ens.clone(), 3, cache, opts, None).unwrap();
+    let mut first = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(3).cache(cache),
+        None,
+    ).unwrap();
     for u in &updates[..cut] {
         first.submit(u.clone());
     }
@@ -143,12 +155,10 @@ fn file_checkpoint_resumes_bit_identically_at_a_different_shard_count() {
     std::fs::remove_file(&path).unwrap();
     for resume_shards in [5usize, 1] {
         let mut second = ShardedStreamScorer::from_ensemble(
-            ens.clone(),
-            resume_shards,
-            cache,
-            opts,
-            Some(&loaded),
-        )
+        ens.clone(),
+        opts.shards(resume_shards).cache(cache),
+        Some(&loaded),
+    )
         .unwrap();
         assert_eq!(second.submitted(), cut as u64, "resume continues the submit sequence");
         for u in &updates[cut..] {
@@ -172,7 +182,11 @@ fn file_checkpoint_resumes_bit_identically_at_a_different_shard_count() {
     // evictions — the pool comes up resident within the new budget
     let small = 16usize;
     let shed = loaded.entries.len() as u64 - small as u64;
-    let ok = ShardedStreamScorer::from_ensemble(ens, 2, small, opts, Some(&loaded)).unwrap();
+    let ok = ShardedStreamScorer::from_ensemble(
+        ens,
+        opts.shards(2).cache(small),
+        Some(&loaded),
+    ).unwrap();
     let report = ok.finish();
     assert_eq!(report.cached_ids(), small, "must shed down to the new budget");
     assert_eq!(report.evictions(), loaded.evicted + shed, "shed entries count as evictions");
@@ -191,7 +205,11 @@ fn live_reshard_mid_stream_drops_nothing_and_stays_bit_identical() {
     let opts = ServeOptions { record: true, absorb: true, ..Default::default() };
 
     let mut reference =
-        ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+        ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(1).cache(cache),
+        None,
+    ).unwrap();
     for u in &updates {
         reference.submit(u.clone());
     }
@@ -199,7 +217,11 @@ fn live_reshard_mid_stream_drops_nothing_and_stays_bit_identical() {
     assert!(reference.evictions() > 0, "harness requires the eviction regime");
     let want = reference.merged_scores();
 
-    let mut scorer = ShardedStreamScorer::from_ensemble(ens, 2, cache, opts, None).unwrap();
+    let mut scorer = ShardedStreamScorer::from_ensemble(
+        ens,
+        opts.shards(2).cache(cache),
+        None,
+    ).unwrap();
     for u in &updates[..1000] {
         scorer.submit(u.clone());
     }
@@ -234,9 +256,7 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
     let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
     let mut scorer = ShardedStreamScorer::from_ensemble(
         ens.clone(),
-        2,
-        32,
-        ServeOptions { record: false, absorb: true, ..Default::default() },
+        ServeOptions { record: false, absorb: true, ..Default::default() }.shards(2).cache(32),
         None,
     )
     .unwrap();
@@ -297,18 +317,14 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
     let other = Arc::new(ServedEnsemble::new(&fitted(2)).unwrap());
     let r = ShardedStreamScorer::from_ensemble(
         other,
-        2,
-        32,
-        ServeOptions { record: false, absorb: true, ..Default::default() },
+        ServeOptions { record: false, absorb: true, ..Default::default() }.shards(2).cache(32),
         Some(&ckpt),
     );
     assert!(matches!(r.err(), Some(SparxError::InvalidParams(_))), "wrong model must fail");
     // wrong absorb mode: the continued stream would silently diverge
     let r = ShardedStreamScorer::from_ensemble(
         ens.clone(),
-        2,
-        32,
-        ServeOptions { record: false, absorb: false, ..Default::default() },
+        ServeOptions { record: false, absorb: false, ..Default::default() }.shards(2).cache(32),
         Some(&ckpt),
     );
     assert!(
@@ -319,12 +335,10 @@ fn corrupt_truncated_and_mismatched_checkpoints_fail_typed() {
     // what genuinely breaks bit-identity, so any shards/cache restores
     for (shards, cache) in [(2usize, 32usize), (3, 32), (2, 16), (5, 64)] {
         let ok = ShardedStreamScorer::from_ensemble(
-            ens.clone(),
-            shards,
-            cache,
-            ServeOptions { record: false, absorb: true, ..Default::default() },
-            Some(&ckpt),
-        )
+        ens.clone(),
+        ServeOptions { record: false, absorb: true, ..Default::default() }.shards(shards).cache(cache),
+        Some(&ckpt),
+    )
         .unwrap_or_else(|e| {
             panic!("S={shards} cache={cache} must restore from a S=2/cache=32 checkpoint: {e:?}")
         });
@@ -351,9 +365,7 @@ fn hot_swap_mid_stream_drops_no_updates_and_follows_carry_rules() {
     let ens = Arc::new(ServedEnsemble::new(&model).unwrap());
     let mut scorer = ShardedStreamScorer::from_ensemble(
         ens.clone(),
-        3,
-        256,
-        ServeOptions { record: true, absorb: true, ..Default::default() },
+        ServeOptions { record: true, absorb: true, ..Default::default() }.shards(3).cache(256),
         None,
     )
     .unwrap();
@@ -385,9 +397,7 @@ fn hot_swap_mid_stream_drops_no_updates_and_follows_carry_rules() {
     // yields the bit-identical merged log
     let mut replay = ShardedStreamScorer::from_ensemble(
         Arc::new(ServedEnsemble::new(&model).unwrap()),
-        3,
-        256,
-        ServeOptions { record: true, absorb: true, ..Default::default() },
+        ServeOptions { record: true, absorb: true, ..Default::default() }.shards(3).cache(256),
         None,
     )
     .unwrap();

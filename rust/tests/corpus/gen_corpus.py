@@ -2,14 +2,16 @@
 """Regenerate the committed decoder corpus.
 
 Each binary here is an *independent* reimplementation of the sparx wire
-formats (artifact container v3/v4, absorb-checkpoint blocks, packed-u32
-codec) so the Rust decoders are tested against bytes their own encoders
-never produced. `ok_ckpt_v4.bin` mirrors
-`sparx::testing::fuzz::sample_checkpoint()` field for field; the replay
-test decodes it and compares against that struct, cross-checking both
-implementations. `ok_ckpt_v3.bin` is a *legacy* per-shard checkpoint:
-the replay test pins its converted (global v4) form, keeping the
-v2/v3 upgrade path honest.
+formats (artifact container v3/v6, absorb-checkpoint blocks including
+the v5 decay/window/query tail, packed-u32 codec) so the Rust decoders
+are tested against bytes their own encoders never produced.
+`ok_ckpt_v4.bin` (named for the global-directory checkpoint layout it
+carries) mirrors `sparx::testing::fuzz::sample_checkpoint()` field for
+field in a current (v6) container; the replay test decodes it and
+compares against that struct, cross-checking both implementations, and
+asserts bit-identity with the Rust encoder's output. `ok_ckpt_v3.bin`
+is a *legacy* per-shard checkpoint: the replay test pins its converted
+(global) form, keeping the v2/v3 upgrade path honest.
 
 Run from this directory: `python3 gen_corpus.py`
 """
@@ -88,7 +90,8 @@ def ckpt_params(shards=2):
 
 
 def ckpt_params_v4():
-    """v4 header: global cache budget + pool-wide counters appended."""
+    """v4 header (global cache budget + pool-wide counters) with the v5
+    params tail (the capture-time decay schedule)."""
     return (
         u32(0xDEADBEEF)  # model fingerprint
         + u32(0x5A5A0001)  # schema fingerprint
@@ -104,6 +107,8 @@ def ckpt_params_v4():
         + u64(48)  # processed
         + u64(4)  # evicted
         + u64(38)  # absorbed
+        + u64(8)  # half_life (v5 tail)
+        + u64(6)  # window (v5 tail)
     )
 
 
@@ -145,7 +150,8 @@ def levels(levels_list):
 
 def ckpt_payload_v4():
     """Mirrors fuzz::sample_checkpoint(): seq-tagged global LRU->MRU
-    entries, then the visible and pending overlays."""
+    entries, the visible and pending overlays, then the v5 payload tail
+    (rotated prev-window overlay + named queries)."""
     min_positive = 2.0 ** -126  # f32::MIN_POSITIVE
     return (
         u32(4)  # entries
@@ -155,6 +161,14 @@ def ckpt_payload_v4():
         + u64(10) + u64(16) + f32_slice([min_positive] * 3)
         + levels([[(0, 1), (5, 2)], [], [(63, 9)], [(2, 2), (3, 1), (100, 7)]])  # visible
         + levels([[(1, 1)], [], [], [(7, 3)]])  # pending
+        + levels([[(4, 2)], [], [(0, 1), (64, 5)], []])  # prev_visible (v5 tail)
+        + u32(1)  # named queries (v5 tail)
+        + pstr("decayed.1k")
+        + u64(4)  # query half_life
+        + u64(2)  # query window
+        + u64(5)  # query scored
+        + levels([[(1, 2)], [], [], [(9, 1)]])  # query cur
+        + levels([[], [(3, 4)], [], []])  # query prev
     )
 
 
@@ -177,8 +191,10 @@ def packed(vals, declared=None):
 
 def main():
     files = {
-        # valid v4 absorb-state checkpoint, == fuzz::sample_checkpoint()
-        "ok_ckpt_v4.bin": artifact(4, "absorb-state", ckpt_params_v4(), ckpt_payload_v4()),
+        # valid current-container absorb-state checkpoint,
+        # == fuzz::sample_checkpoint() (and bit-identical to the Rust
+        # encoder's output for it)
+        "ok_ckpt_v4.bin": artifact(6, "absorb-state", ckpt_params_v4(), ckpt_payload_v4()),
         # valid *legacy* per-shard checkpoint: decodes via the v<=3
         # conversion path (replay test pins the converted global form)
         "ok_ckpt_v3.bin": artifact(3, "absorb-state", ckpt_params(), ckpt_payload()),
@@ -210,10 +226,35 @@ def main():
         )
     with open("bad_wire_commands.txt", "w") as fh:
         fh.write(
-            "SCORE\nSCORE notanid\nSCORE 1 2\nRESHARD\nRESHARD zero\nRESHARD 0\n"
+            "SCORE\nSCORE notanid\nSCORE 1 a b\nRESHARD\nRESHARD zero\nRESHARD 0\n"
             "STATS now\nQUIT loudly\nSHUTDOWN -f\nscore 42\n42 f0\n42 f0 NaN\n"
+            "QUERY ADD na->me 1 1\n"
         )
-    print("serve-line and wire-command corpora written")
+    # detector spec-string grammar (--method / registry::create /
+    # ensemble members= lists): good lines parse and round-trip through
+    # the canonical printer; bad ones are typed InvalidParams
+    with open("ok_spec_strings.txt", "w") as fh:
+        fh.write(
+            "sparx\n"
+            "sparx?k=12&chains=8&depth=10&rate=0.5&seed=7\n"
+            "xstream?depth=15\n"
+            "spif?trees=20&depth=8\n"
+            "dbscout?eps=0.25&min-pts=4\n"
+            "ensemble?members=sparx:depth=6:seed=3,xstream&distill=true\n"
+            "ensemble?members=sparx,xstream,spif,dbscout&schedule=round-robin&share=false\n"
+        )
+    with open("bad_spec_strings.txt", "w") as fh:
+        fh.write(
+            "?k=4\n"
+            "sparx?\n"
+            "sparx?k\n"
+            "sparx?=4\n"
+            "sparx?k=\n"
+            "sparx?k=4&k=5\n"
+            "spa rx?k=4\n"
+            "sparx?dep th=4\n"
+        )
+    print("serve-line, wire-command and spec-string corpora written")
 
 
 if __name__ == "__main__":

@@ -131,9 +131,13 @@ fn decayed_window_scores_are_identical_at_every_shard_count() {
     let decay = DecaySpec::new(512, 512); // halve and rotate, coinciding
 
     let run = |shards: usize, decay: DecaySpec| -> (Vec<StreamScore>, AbsorbCheckpoint) {
-        let opts = ServeOptions { record: true, absorb: true, decay };
+        let opts = ServeOptions { record: true, absorb: true, decay, ..Default::default() };
         let mut scorer =
-            ShardedStreamScorer::from_ensemble(ens.clone(), shards, cache, opts, None).unwrap();
+            ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(shards).cache(cache),
+        None,
+    ).unwrap();
         for u in &updates {
             scorer.submit(u.clone());
         }
@@ -174,9 +178,13 @@ fn mid_epoch_decay_checkpoint_resumes_bit_identically_across_shard_counts() {
     let updates = churn(4000, 500);
     let cache = 64usize;
     let opts =
-        ServeOptions { record: true, absorb: true, decay: DecaySpec::new(0, 512) };
+        ServeOptions { record: true, absorb: true, decay: DecaySpec::new(0, 512), ..Default::default() };
 
-    let mut full = ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+    let mut full = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(1).cache(cache),
+        None,
+    ).unwrap();
     for u in &updates {
         full.submit(u.clone());
     }
@@ -185,7 +193,11 @@ fn mid_epoch_decay_checkpoint_resumes_bit_identically_across_shard_counts() {
     let want = full_report.merged_scores();
 
     let cut = 2000usize; // 2000 % 256 = 208 and 2000 % 512 = 464: doubly mid-period
-    let mut first = ShardedStreamScorer::from_ensemble(ens.clone(), 3, cache, opts, None).unwrap();
+    let mut first = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(3).cache(cache),
+        None,
+    ).unwrap();
     for u in &updates[..cut] {
         first.submit(u.clone());
     }
@@ -209,12 +221,10 @@ fn mid_epoch_decay_checkpoint_resumes_bit_identically_across_shard_counts() {
 
     for resume_shards in [5usize, 1] {
         let mut second = ShardedStreamScorer::from_ensemble(
-            ens.clone(),
-            resume_shards,
-            cache,
-            opts,
-            Some(&loaded),
-        )
+        ens.clone(),
+        opts.shards(resume_shards).cache(cache),
+        Some(&loaded),
+    )
         .unwrap();
         assert_eq!(second.submitted(), cut as u64, "the logical clock resumes mid-period");
         for u in &updates[cut..] {
@@ -251,7 +261,11 @@ fn sliding_window_and_half_life_overlays_match_a_brute_force_oracle() {
     cumulative.insert(0, Vec::new()); // the t=0 empty overlay
     {
         let mut scorer =
-            ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, plain, None).unwrap();
+            ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        plain.shards(1).cache(cache),
+        None,
+    ).unwrap();
         let mut cut_points: Vec<usize> = boundaries.to_vec();
         cut_points.push(t_final);
         let mut at = 0usize;
@@ -266,9 +280,13 @@ fn sliding_window_and_half_life_overlays_match_a_brute_force_oracle() {
     }
 
     let decayed_cut = |spec: DecaySpec| -> AbsorbCheckpoint {
-        let opts = ServeOptions { record: false, absorb: true, decay: spec };
+        let opts = ServeOptions { record: false, absorb: true, decay: spec, ..Default::default() };
         let mut scorer =
-            ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+            ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(1).cache(cache),
+        None,
+    ).unwrap();
         for u in &updates {
             scorer.submit(u.clone());
         }
@@ -342,7 +360,11 @@ fn named_queries_survive_checkpoint_resume_and_score_identically() {
 
     // uninterrupted single-shard reference
     let mut reference =
-        ShardedStreamScorer::from_ensemble(ens.clone(), 1, cache, opts, None).unwrap();
+        ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(1).cache(cache),
+        None,
+    ).unwrap();
     let mut want_mid = Vec::new();
     let mut want_end = Vec::new();
     for (i, u) in updates.iter().enumerate() {
@@ -361,7 +383,11 @@ fn named_queries_survive_checkpoint_resume_and_score_identically() {
 
     // interrupted run at S=2: register at the same clock position, probe
     // at 2600, checkpoint mid-epoch (2600 % 256 = 40), tear down
-    let mut first = ShardedStreamScorer::from_ensemble(ens.clone(), 2, cache, opts, None).unwrap();
+    let mut first = ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(2).cache(cache),
+        None,
+    ).unwrap();
     for (i, u) in updates[..2600].iter().enumerate() {
         if i == 1000 {
             add_all(&mut first);
@@ -403,7 +429,11 @@ fn named_queries_survive_checkpoint_resume_and_score_identically() {
         AbsorbCheckpoint::from_artifact(&sparx::api::ModelArtifact::from_bytes(&bytes).unwrap())
             .unwrap();
     let mut second =
-        ShardedStreamScorer::from_ensemble(ens.clone(), 3, cache, opts, Some(&loaded)).unwrap();
+        ShardedStreamScorer::from_ensemble(
+        ens.clone(),
+        opts.shards(3).cache(cache),
+        Some(&loaded),
+    ).unwrap();
     let listed = second.query_list();
     assert_eq!(listed.len(), 3);
     for (info, rec) in listed.iter().zip(&loaded.queries) {
@@ -428,9 +458,7 @@ fn named_queries_survive_checkpoint_resume_and_score_identically() {
     // registering a query without absorb mode is a typed error
     let mut plain = ShardedStreamScorer::from_ensemble(
         ens,
-        1,
-        cache,
-        ServeOptions { record: false, absorb: false, ..Default::default() },
+        ServeOptions { record: false, absorb: false, ..Default::default() }.shards(1).cache(cache),
         None,
     )
     .unwrap();
@@ -448,9 +476,7 @@ fn decay_schedule_mismatch_on_resume_fails_typed() {
     let spec = DecaySpec::new(512, 512);
     let mut scorer = ShardedStreamScorer::from_ensemble(
         ens.clone(),
-        2,
-        32,
-        ServeOptions { record: false, absorb: true, decay: spec },
+        ServeOptions { record: false, absorb: true, decay: spec, ..Default::default() }.shards(2).cache(32),
         None,
     )
     .unwrap();
@@ -464,12 +490,10 @@ fn decay_schedule_mismatch_on_resume_fails_typed() {
         [DecaySpec::default(), DecaySpec::new(512, 1024), DecaySpec::new(256, 512)]
     {
         let r = ShardedStreamScorer::from_ensemble(
-            ens.clone(),
-            2,
-            32,
-            ServeOptions { record: false, absorb: true, decay: wrong },
-            Some(&ckpt),
-        );
+        ens.clone(),
+        ServeOptions { record: false, absorb: true, decay: wrong, ..Default::default() }.shards(2).cache(32),
+        Some(&ckpt),
+    );
         assert!(
             matches!(r.err(), Some(SparxError::InvalidParams(_))),
             "schedule {wrong:?} against a (512, 512) checkpoint must be rejected"
@@ -478,9 +502,7 @@ fn decay_schedule_mismatch_on_resume_fails_typed() {
     // decay without absorb is incoherent regardless of the checkpoint
     let r = ShardedStreamScorer::from_ensemble(
         ens.clone(),
-        2,
-        32,
-        ServeOptions { record: false, absorb: false, decay: spec },
+        ServeOptions { record: false, absorb: false, decay: spec, ..Default::default() }.shards(2).cache(32),
         Some(&ckpt),
     );
     assert!(matches!(r.err(), Some(SparxError::InvalidParams(_))));
@@ -488,9 +510,7 @@ fn decay_schedule_mismatch_on_resume_fails_typed() {
     // the matching schedule restores and continues the clock mid-period
     let ok = ShardedStreamScorer::from_ensemble(
         ens,
-        3,
-        32,
-        ServeOptions { record: false, absorb: true, decay: spec },
+        ServeOptions { record: false, absorb: true, decay: spec, ..Default::default() }.shards(3).cache(32),
         Some(&ckpt),
     )
     .unwrap();

@@ -1,0 +1,343 @@
+//! Acceptance harness for heterogeneous ensembles — the SUOD recipe on
+//! the Sparx substrate, driven end-to-end through the public spec-string
+//! API:
+//!
+//! 1. **Grammar** — `ensemble?members=...` round-trips through
+//!    `registry::create`, with typed `InvalidParams` + edit-distance
+//!    suggestions for near-miss keys and member kinds.
+//! 2. **Combination** — rank-averaged scores are bit-identical under
+//!    member permutation (integer rank accumulator) and across serving
+//!    shard counts.
+//! 3. **Artifacts** — the `ensemble` kind (format v6) save → load →
+//!    re-save is byte-identical, scores included.
+//! 4. **Distillation** — provenance (teacher spec, serving marker)
+//!    survives save/load, and the distilled serve path resumes
+//!    bit-identically from a file checkpoint at a different shard count.
+//! 5. **Substrate sharing** — members with equal `(k, density)` hold the
+//!    *same* dense-R allocation, and sharing never changes a score bit.
+//! 6. **Scheduling** — LPT packing beats round-robin on mixed costs and
+//!    never changes scores.
+
+use sparx::api::{registry, Detector as _, DetectorSpec, FittedModel as _, SparxError};
+use sparx::cluster::{ClusterConfig, ClusterContext};
+use sparx::data::generators::GisetteGen;
+use sparx::data::{Dataset, StreamGen, UpdateTriple};
+use sparx::ensemble::cost::{assign_balanced, assign_round_robin, makespan};
+use sparx::ensemble::{EnsembleParams, FittedEnsemble, Schedule};
+use sparx::sparx::{AbsorbCheckpoint, ServeOptions, ShardedStreamScorer, StreamScore};
+
+fn ctx(parts: usize) -> ClusterContext {
+    ClusterConfig { num_partitions: parts, ..Default::default() }.build()
+}
+
+fn dense_data(ctx: &ClusterContext, n: usize, d: usize) -> Dataset {
+    GisetteGen { n, d, ..Default::default() }.generate(ctx).unwrap().dataset
+}
+
+fn synth_updates(ids: u64, count: usize, d: usize, seed: u64) -> Vec<UpdateTriple> {
+    let names: Vec<String> = (0..d).map(|j| format!("f{j}")).collect();
+    let mut gen = StreamGen::new(ids, names, seed);
+    (0..count).map(|_| gen.next_update()).collect()
+}
+
+fn temp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sparx-ensemble-test-{}-{tag}.sparx", std::process::id()))
+        .to_str()
+        .expect("utf-8 temp path")
+        .to_string()
+}
+
+/// All four member kinds fit under one ensemble; the combined scores
+/// are normalised mean ranks, and `member_info` reports every member
+/// with its measured costs.
+#[test]
+fn all_four_member_kinds_fit_under_one_ensemble() {
+    let c = ctx(2);
+    let data = dense_data(&c, 240, 12);
+    let det = registry::create(
+        "ensemble?members=sparx:k=8:chains=6:depth=5,xstream:k=8:depth=6,\
+         spif:trees=8:depth=6,dbscout:min-pts=4",
+    )
+    .unwrap();
+    let model = det.fit(&c, &data).unwrap();
+    let scores = model.score(&c, &data).unwrap();
+    assert_eq!(scores.len(), data.len());
+    for (id, s) in &scores {
+        assert!((0.0..=1.0).contains(s), "id {id}: rank-averaged score out of range: {s}");
+    }
+
+    let info = model.member_info();
+    let kinds: Vec<&str> = info.iter().map(|m| m.kind.as_str()).collect();
+    assert_eq!(kinds, ["sparx", "xstream", "spif", "dbscout"]);
+    for m in &info {
+        assert!(m.fit_micros > 0, "{}: calibration fit cost must be measured", m.spec);
+        assert!(m.score_micros > 0, "{}: calibration score cost must be measured", m.spec);
+        assert!(m.distilled_from.is_none(), "no distillation was requested");
+    }
+    assert!(
+        info.iter().filter(|m| m.serving).count() <= 1,
+        "at most one member serves evolving streams"
+    );
+}
+
+/// The spec grammar fails typed, with edit-distance suggestions, at
+/// every level: method name, ensemble key, member kind, member key.
+#[test]
+fn spec_grammar_suggests_fixes_for_near_misses() {
+    let e = registry::create("ensembel?members=sparx").unwrap_err();
+    assert!(matches!(e, SparxError::UnknownDetector(_)), "got {e:?}");
+    assert!(e.to_string().contains("ensemble"), "no suggestion in {e}");
+
+    let e = registry::create("ensemble?member=sparx").unwrap_err();
+    assert!(matches!(e, SparxError::InvalidParams(_)), "got {e:?}");
+    assert!(e.to_string().contains("members"), "no suggestion in {e}");
+
+    let e = registry::create("ensemble?members=sparks").unwrap_err();
+    assert!(e.to_string().contains("sparx"), "no member-kind suggestion in {e}");
+
+    let e = registry::create("ensemble?members=sparx:dept=4").unwrap_err();
+    assert!(e.to_string().contains("depth"), "no member-key suggestion in {e}");
+
+    let e = registry::create("ensemble?schedule=fastest").unwrap_err();
+    assert!(e.to_string().contains("round-robin"), "no schedule domain in {e}");
+}
+
+/// Rank-averaged combination is bit-identical under member permutation:
+/// every member's seed is pinned, so the two ensembles hold the same
+/// fitted members in a different order — the integer rank accumulator
+/// must erase that order entirely.
+#[test]
+fn scores_are_bit_identical_under_member_permutation() {
+    let c = ctx(2);
+    let data = dense_data(&c, 200, 10);
+    let fwd = "ensemble?members=sparx:seed=7:k=8:chains=6:depth=5,\
+               xstream:seed=11:k=6:depth=6,spif:seed=13:trees=8:depth=6";
+    let rev = "ensemble?members=spif:seed=13:trees=8:depth=6,\
+               xstream:seed=11:k=6:depth=6,sparx:seed=7:k=8:chains=6:depth=5";
+    let score = |spec: &str| {
+        registry::create(spec).unwrap().fit(&c, &data).unwrap().score(&c, &data).unwrap()
+    };
+    let a = score(fwd);
+    let b = score(rev);
+    assert_eq!(a.len(), b.len());
+    for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+        assert_eq!(ia, ib, "id order must match");
+        assert_eq!(sa.to_bits(), sb.to_bits(), "id {ia}: member order leaked into the score");
+    }
+}
+
+/// The ensemble artifact (format v6) round-trips exactly: loaded scores
+/// are bit-identical, and re-saving the loaded model reproduces the
+/// original bytes — nested member artifacts, measured costs, worker
+/// assignment and all.
+#[test]
+fn ensemble_artifact_round_trips_bit_identically() {
+    let c = ctx(2);
+    let data = dense_data(&c, 200, 10);
+    let det = registry::create(
+        "ensemble?members=sparx:seed=3:k=8:chains=6:depth=5,xstream:seed=5:k=6:depth=6&distill=true",
+    )
+    .unwrap();
+    let model = det.fit(&c, &data).unwrap();
+    let before = model.score(&c, &data).unwrap();
+
+    let art = model.to_artifact().unwrap();
+    assert_eq!(art.payload.len(), model.model_bytes(), "model_bytes contract");
+    let bytes = art.to_bytes();
+    let loaded = registry::load_bytes(&bytes).unwrap();
+    assert_eq!(loaded.name(), "ensemble");
+
+    let after = loaded.score(&c, &data).unwrap();
+    assert_eq!(before.len(), after.len());
+    for ((ib, sb), (ia, sa)) in before.iter().zip(&after) {
+        assert_eq!(ib, ia, "row ids must line up");
+        assert_eq!(sb.to_bits(), sa.to_bits(), "score bits changed for id {ib}");
+    }
+
+    let resaved = loaded.to_artifact().unwrap().to_bytes();
+    assert_eq!(resaved, bytes, "save → load → re-save must be byte-identical");
+}
+
+/// Distillation provenance — teacher spec, agreement-bearing student,
+/// serving marker — survives save/load, and the distilled serve path
+/// checkpoints and resumes bit-identically at a different shard count.
+#[test]
+fn distilled_provenance_survives_save_load_and_file_resume() {
+    let c = ctx(2);
+    let data = dense_data(&c, 240, 12);
+    let det = registry::create(
+        "ensemble?members=xstream:seed=5:k=8:depth=8,sparx:seed=3:k=8:chains=6:depth=5&distill=true",
+    )
+    .unwrap();
+    let model = det.fit(&c, &data).unwrap();
+
+    let info = model.member_info();
+    assert_eq!(info.len(), 3, "two members plus the distilled student");
+    let student = info.last().unwrap();
+    assert_eq!(student.spec, "sparx:distilled");
+    assert_eq!(student.kind, "sparx");
+    assert!(student.serving, "the student must own the serve path");
+    let teacher = student.distilled_from.clone().expect("student must name its teacher");
+    assert!(
+        info.iter().any(|m| m.spec == teacher),
+        "teacher {teacher:?} must be one of the members"
+    );
+    for m in &info[..info.len() - 1] {
+        assert!(!m.serving, "{}: only the student serves", m.spec);
+    }
+
+    // provenance is part of the artifact, not the process
+    let bytes = model.to_artifact().unwrap().to_bytes();
+    let loaded = registry::load_bytes(&bytes).unwrap();
+    assert_eq!(loaded.member_info(), info, "member provenance must survive save/load");
+
+    // kill → resume over the distilled serve path: S=3 interrupted,
+    // file checkpoint, resumed at S=4 — bit-identical to uninterrupted
+    let updates = synth_updates(300, 3000, 12, 0xD157);
+    let cache = 64usize; // < 300 distinct IDs: real LRU churn crosses the cut
+    let opts = ServeOptions::new().cache(cache).record(true).absorb(true);
+
+    let mut full = loaded.stream_scorer_sharded(opts.shards(1)).unwrap();
+    for u in &updates {
+        full.submit(u.clone());
+    }
+    let want: Vec<StreamScore> = full.finish().merged_scores();
+
+    let ens = loaded.served_ensemble().unwrap();
+    let cut = updates.len() / 2;
+    let mut first =
+        ShardedStreamScorer::from_ensemble(ens.clone(), opts.shards(3), None).unwrap();
+    for u in &updates[..cut] {
+        first.submit(u.clone());
+    }
+    let ckpt = first.checkpoint().unwrap();
+    let path = temp_path("distilled-resume");
+    ckpt.save(&path, ckpt.manifest_for("in-memory")).unwrap();
+    let part1 = first.finish().merged_scores();
+
+    let restored = AbsorbCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let mut second =
+        ShardedStreamScorer::from_ensemble(ens, opts.shards(4), Some(&restored)).unwrap();
+    for u in &updates[cut..] {
+        second.submit(u.clone());
+    }
+    let part2 = second.finish().merged_scores();
+    assert_eq!(part1.len() + part2.len(), want.len());
+    let resumed: Vec<StreamScore> = part1.into_iter().chain(part2).collect();
+    for (i, (got, wanted)) in resumed.iter().zip(&want).enumerate() {
+        assert_eq!(got, wanted, "distilled serve path diverged at submit #{i}");
+    }
+}
+
+/// Sharded serving over an ensemble model is deterministic in the shard
+/// count: merged score logs at S=1 and S=4 are bit-identical.
+#[test]
+fn serving_is_bit_identical_across_shard_counts() {
+    let c = ctx(2);
+    let data = dense_data(&c, 200, 10);
+    let det =
+        registry::create("ensemble?members=sparx:seed=3:k=8:chains=6:depth=5,xstream:seed=5:k=6:depth=6")
+            .unwrap();
+    let model = det.fit(&c, &data).unwrap();
+    let updates = synth_updates(150, 2000, 10, 0xACE5);
+    let opts = ServeOptions::new().cache(4096).record(true);
+
+    let run = |shards: usize| -> Vec<StreamScore> {
+        let mut scorer = model.stream_scorer_sharded(opts.shards(shards)).unwrap();
+        for u in &updates {
+            scorer.submit(u.clone());
+        }
+        scorer.finish().merged_scores()
+    };
+    let want = run(1);
+    let got = run(4);
+    assert_eq!(got, want, "shard count leaked into the served scores");
+}
+
+/// SUOD module 1: members with equal `(k, density)` hold clones of one
+/// projector — the dense R matrices are the *same allocation* — and
+/// turning sharing off changes allocations but not one score bit.
+#[test]
+fn shared_projection_reuses_one_allocation_without_changing_scores() {
+    let c = ctx(2);
+    let data = dense_data(&c, 200, 10);
+    let members = "sparx:seed=3:k=10:chains=6:depth=5,xstream:seed=5:k=10:depth=6";
+
+    let fit = |share: bool| -> FittedEnsemble {
+        let spec = DetectorSpec {
+            members: Some(members.into()),
+            share,
+            ..Default::default()
+        };
+        FittedEnsemble::fit(&c, &data, &EnsembleParams::from_spec(&spec).unwrap()).unwrap()
+    };
+
+    let shared = fit(true);
+    let r0 = shared.member_projector(0).and_then(|p| p.dense_r()).expect("sparx hashes");
+    let r1 = shared.member_projector(1).and_then(|p| p.dense_r()).expect("xstream hashes");
+    assert_eq!(r0.as_ptr(), r1.as_ptr(), "equal (k, density) members must share one R");
+
+    let solo = fit(false);
+    let s0 = solo.member_projector(0).and_then(|p| p.dense_r()).expect("sparx hashes");
+    let s1 = solo.member_projector(1).and_then(|p| p.dense_r()).expect("xstream hashes");
+    assert_ne!(s0.as_ptr(), s1.as_ptr(), "share=false must build independent matrices");
+    assert_eq!(s0, r0, "the sign family is seeded by index: same bits either way");
+    assert_eq!(s1, r1, "the sign family is seeded by index: same bits either way");
+
+    let a = shared.score(&c, &data).unwrap();
+    let b = solo.score(&c, &data).unwrap();
+    for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+        assert_eq!(ia, ib);
+        assert_eq!(sa.to_bits(), sb.to_bits(), "id {ia}: sharing changed a score bit");
+    }
+}
+
+/// SUOD module 2: LPT packing beats round-robin on a mixed-cost member
+/// set, both schedules are recorded in the fitted assignment, and the
+/// schedule never changes a score bit.
+#[test]
+fn cost_balanced_schedule_beats_round_robin_and_never_changes_scores() {
+    // the pure scheduling claim, on a cost profile shaped like a real
+    // mixed ensemble (one expensive deep member, several cheap ones)
+    let costs = [9000u64, 200, 150, 120, 100, 80];
+    for workers in [2usize, 3, 4] {
+        let lpt = makespan(&costs, &assign_balanced(&costs, workers), workers);
+        let rr = makespan(&costs, &assign_round_robin(costs.len(), workers), workers);
+        assert!(
+            lpt <= rr,
+            "W={workers}: LPT makespan {lpt} must not lose to round-robin {rr}"
+        );
+    }
+    let lpt = makespan(&costs, &assign_balanced(&costs, 2), 2);
+    let rr = makespan(&costs, &assign_round_robin(costs.len(), 2), 2);
+    assert!(lpt < rr, "mixed costs at W=2 must show a strict win ({lpt} vs {rr})");
+
+    // end to end: the schedule moves work, never results
+    let c = ctx(2);
+    let data = dense_data(&c, 200, 10);
+    let members = "sparx:seed=3:k=8:chains=6:depth=5,xstream:seed=5:k=6:depth=6,\
+                   spif:seed=7:trees=8:depth=6";
+    let fit = |schedule: Schedule| -> FittedEnsemble {
+        let spec = DetectorSpec {
+            members: Some(members.into()),
+            schedule,
+            ..Default::default()
+        };
+        FittedEnsemble::fit(&c, &data, &EnsembleParams::from_spec(&spec).unwrap()).unwrap()
+    };
+    let balanced = fit(Schedule::Balanced);
+    let naive = fit(Schedule::RoundRobin);
+    assert_eq!(balanced.schedule(), Schedule::Balanced);
+    assert_eq!(naive.schedule(), Schedule::RoundRobin);
+    for i in 0..balanced.member_count() {
+        assert!(balanced.member_worker(i).is_some(), "member {i} must record its worker");
+    }
+    let a = balanced.score(&c, &data).unwrap();
+    let b = naive.score(&c, &data).unwrap();
+    for ((ia, sa), (ib, sb)) in a.iter().zip(&b) {
+        assert_eq!(ia, ib);
+        assert_eq!(sa.to_bits(), sb.to_bits(), "id {ia}: the schedule changed a score bit");
+    }
+}

@@ -17,7 +17,8 @@ use sparx::hash::bin_hash;
 use sparx::sparx::chain::Binner;
 use sparx::sparx::{
     kernel_path, tile_bins_reference, tile_bins_scalar, ChainParams, CountMinSketch, ExecMode,
-    NativeBinner, ShardedStreamScorer, SparxModel, SparxParams, StreamScorer,
+    NativeBinner, ServeOptions, ServedEnsemble, ShardedStreamScorer, SparxModel, SparxParams,
+    StreamScorer,
 };
 use sparx::util::codec::{Decoder, Encoder};
 use sparx::util::Rng;
@@ -225,7 +226,12 @@ fn sharded_per_id_scores_still_bit_identical_over_new_kernels() {
     }
     assert_eq!(reference.evictions(), 0, "harness requires the no-eviction regime");
 
-    let mut scorer = ShardedStreamScorer::recording(&model, 4, 4096).unwrap();
+    let mut scorer = ShardedStreamScorer::from_ensemble(
+        std::sync::Arc::new(ServedEnsemble::new(&model).unwrap()),
+        ServeOptions::new().shards(4).cache(4096).record(true),
+        None,
+    )
+    .unwrap();
     for u in updates.clone() {
         scorer.submit(u);
     }

@@ -15,13 +15,28 @@
 //! the thread interleavings are actually exercised at speed.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use sparx::api::{registry, Detector as _, DetectorSpec, FittedModel as _, SparxError};
 use sparx::cluster::ClusterConfig;
 use sparx::data::generators::GisetteGen;
 use sparx::data::{StreamGen, UpdateTriple};
-use sparx::sparx::{shard_of, ShardedStreamScorer, SparxModel, SparxParams, StreamScorer};
+use sparx::sparx::{
+    shard_of, ServeOptions, ServedEnsemble, ShardedStreamScorer, SparxModel, SparxParams,
+    StreamScorer,
+};
 use sparx::util::Rng;
+
+/// A sharded scorer with score recording on — what the old `recording`
+/// constructor did, spelled through [`ServeOptions`].
+fn recording(model: &SparxModel, shards: usize, cache: usize) -> ShardedStreamScorer {
+    ShardedStreamScorer::from_ensemble(
+        Arc::new(ServedEnsemble::new(model).unwrap()),
+        ServeOptions::new().shards(shards).cache(cache).record(true),
+        None,
+    )
+    .unwrap()
+}
 
 fn fitted(k: usize, chains: usize, depth: usize) -> SparxModel {
     let ctx = ClusterConfig { num_partitions: 2, ..Default::default() }.build();
@@ -99,7 +114,7 @@ fn sharded_per_id_scores_bit_identical_to_single_threaded() {
     for (shards, shuffle_seed) in [(2usize, 11u64), (4, 22), (7, 33)] {
         let replay = shuffle_interleaving(&updates, shuffle_seed);
         assert_ne!(replay, updates, "the shuffle must actually change the interleaving");
-        let mut scorer = ShardedStreamScorer::recording(&model, shards, 4096).unwrap();
+        let mut scorer = recording(&model, shards, 4096);
         for u in replay {
             scorer.submit(u);
         }
@@ -134,7 +149,7 @@ fn eviction_churn_matches_single_threaded_with_the_same_total_budget() {
     let ref_log: Vec<_> = updates.iter().map(|u| reference.update(u)).collect();
     assert!(reference.evictions() > 0, "harness requires the eviction regime");
 
-    let mut scorer = ShardedStreamScorer::recording(&model, 4, cache_total).unwrap();
+    let mut scorer = recording(&model, 4, cache_total);
     for u in &updates {
         scorer.submit(u.clone());
     }
@@ -157,7 +172,7 @@ fn one_shard_matches_the_unsharded_scorer_exactly() {
     let updates = synth_updates(200, 2000, 7);
     let mut reference = StreamScorer::new(&model, 32).unwrap();
     let ref_log: Vec<_> = updates.iter().map(|u| reference.update(u)).collect();
-    let mut sharded = ShardedStreamScorer::recording(&model, 1, 32).unwrap();
+    let mut sharded = recording(&model, 1, 32);
     for u in updates {
         sharded.submit(u);
     }
@@ -182,7 +197,7 @@ fn merged_scores_restore_global_submit_order_at_any_shard_count() {
     let ref_log: Vec<_> = updates.iter().map(|u| reference.update(u)).collect();
     assert_eq!(reference.evictions(), 0, "harness requires the no-eviction regime");
     for shards in [1usize, 3, 5] {
-        let mut scorer = ShardedStreamScorer::recording(&model, shards, 4096).unwrap();
+        let mut scorer = recording(&model, shards, 4096);
         for u in &updates {
             scorer.submit(u.clone());
         }
@@ -257,23 +272,24 @@ fn api_surface_and_typed_errors() {
         ..Default::default()
     };
     let model = registry::build("sparx", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
-    let mut scorer = model.stream_scorer_sharded(3, 64).unwrap();
+    let serve = |shards: usize, cache: usize| ServeOptions::new().shards(shards).cache(cache);
+    let mut scorer = model.stream_scorer_sharded(serve(3, 64)).unwrap();
     scorer.submit(UpdateTriple::Num { id: 1, feature: "f0".into(), delta: 1.0 });
     assert_eq!(scorer.finish().processed(), 1);
     assert!(matches!(
-        model.stream_scorer_sharded(0, 64),
+        model.stream_scorer_sharded(serve(0, 64)),
         Err(SparxError::InvalidParams(_))
     ));
     assert!(matches!(
-        model.stream_scorer_sharded(2, 0),
+        model.stream_scorer_sharded(serve(2, 0)),
         Err(SparxError::InvalidParams(_))
     ));
     // a reloaded artifact opens the sharded front-end too
     let loaded = registry::load_bytes(&model.to_artifact().unwrap().to_bytes()).unwrap();
-    assert!(loaded.stream_scorer_sharded(2, 64).is_ok());
+    assert!(loaded.stream_scorer_sharded(serve(2, 64)).is_ok());
     let spif = registry::build("spif", &spec).unwrap().fit(&ctx, &ld.dataset).unwrap();
     assert!(matches!(
-        spif.stream_scorer_sharded(2, 64),
+        spif.stream_scorer_sharded(serve(2, 64)),
         Err(SparxError::Unsupported(_))
     ));
 }
